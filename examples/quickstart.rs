@@ -1,0 +1,79 @@
+//! Quickstart: the smallest complete celerity-idag program.
+//!
+//! One node, two (simulated) devices: create a buffer, run two dependent
+//! data-parallel kernels through the full TDAG → CDAG → IDAG → executor
+//! pipeline, read the result back with a fence.
+//!
+//!     cargo run --release --example quickstart
+
+use celerity::driver::{run_cluster, ClusterConfig};
+use celerity::executor::{KernelCtx, Registry};
+use celerity::grid::{Point, Range};
+use celerity::task::{RangeMapper, TaskDecl};
+use std::sync::{Arc, Mutex};
+
+fn main() {
+    let registry = Registry::new();
+    // Kernels are plain Rust closures here; the e2e_driver example runs
+    // AOT-compiled JAX/Pallas artifacts instead.
+    registry.register_kernel(
+        "iota",
+        Arc::new(|ctx: &KernelCtx| {
+            let out = ctx.view(0);
+            for i in ctx.chunk.min[0]..ctx.chunk.max[0] {
+                out.write_f32(Point::d1(i), i as f32);
+            }
+        }),
+    );
+    registry.register_kernel(
+        "prefix_mean",
+        Arc::new(|ctx: &KernelCtx| {
+            // out[i] = mean(in[0..=i]) — needs the whole input (all-read).
+            let inp = ctx.view(0);
+            let out = ctx.view(1);
+            for i in ctx.chunk.min[0]..ctx.chunk.max[0] {
+                let mut acc = 0f32;
+                for j in 0..=i {
+                    acc += inp.read_f32(Point::d1(j));
+                }
+                out.write_f32(Point::d1(i), acc / (i + 1) as f32);
+            }
+        }),
+    );
+
+    let cfg = ClusterConfig { num_nodes: 1, num_devices: 2, registry, ..Default::default() };
+    let result = Arc::new(Mutex::new(Vec::new()));
+    let rc = result.clone();
+
+    let reports = run_cluster(cfg, move |q| {
+        let n = Range::d1(1024);
+        let a = q.create_buffer("A", n, 4, false);
+        let b = q.create_buffer("B", n, 4, false);
+        q.submit(
+            TaskDecl::device("iota", n)
+                .discard_write(a, RangeMapper::OneToOne)
+                .kernel("iota"),
+        );
+        q.submit(
+            TaskDecl::device("prefix_mean", n)
+                .read(a, RangeMapper::All) // all-gather pattern
+                .discard_write(b, RangeMapper::OneToOne)
+                .kernel("prefix_mean"),
+        );
+        *rc.lock().unwrap() = q.fence_f32(b);
+    });
+
+    let got = result.lock().unwrap();
+    assert!((got[0] - 0.0).abs() < 1e-6);
+    assert!((got[1023] - 511.5).abs() < 1e-3, "{}", got[1023]);
+    let r = &reports[0];
+    println!("quickstart OK: mean[1023] = {}", got[1023]);
+    println!(
+        "  {} commands → {} instructions; executor issued {} direct / {} eager",
+        r.commands_generated,
+        r.instructions_generated,
+        r.executor.issued_direct,
+        r.executor.issued_eager
+    );
+    assert!(r.errors.is_empty(), "{:?}", r.errors);
+}

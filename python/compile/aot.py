@@ -1,0 +1,102 @@
+"""AOT lowering: JAX/Pallas → HLO text artifacts for the Rust runtime.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(behind the published ``xla`` crate) rejects; the text parser reassigns ids
+and round-trips cleanly. See /opt/xla-example/README.md.
+
+Artifacts land in ``artifacts/`` together with a plain-text manifest the
+Rust side parses:
+
+    <kernel-name>\t<file>\tin=f32:256x3,f32:64x3,i32:1\tout=f32:64x3
+
+Shard shapes default to the end-to-end example's configuration (1 node x 4
+devices) and can be overridden on the command line.
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(fn, *example_args) -> str:
+    lowered = jax.jit(fn).lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _fmt(spec) -> str:
+    kind = {"float32": "f32", "int32": "i32"}[str(spec.dtype)]
+    dims = "x".join(str(d) for d in spec.shape)
+    return f"{kind}:{dims or '1'}"
+
+
+def kernel_table(n, chunk, rows, cols, t_max, width):
+    """The artifact set: name -> (fn, example arg specs)."""
+    f32, i32 = jnp.float32, jnp.int32
+    return {
+        # N-body: per-device shard of C bodies out of N.
+        "nbody_timestep": (
+            model.nbody_timestep,
+            [_spec((n, 3), f32), _spec((chunk, 3), f32), _spec((1,), i32)],
+        ),
+        "nbody_update": (
+            model.nbody_update,
+            [_spec((chunk, 3), f32), _spec((chunk, 3), f32)],
+        ),
+        # WaveSim: haloed row window per device.
+        "wavesim_step": (
+            model.wavesim_step_model,
+            [_spec((rows + 2, cols), f32), _spec((rows + 2, cols), f32)],
+        ),
+        # RSim: fixed-size padded history + visibility matrix.
+        "rsim_row": (
+            model.rsim_row_model,
+            [_spec((t_max, width), f32), _spec((width, width), f32), _spec((1,), i32)],
+        ),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--n", type=int, default=256, help="N-body total bodies")
+    ap.add_argument("--chunk", type=int, default=64, help="N-body shard size")
+    ap.add_argument("--rows", type=int, default=16, help="WaveSim shard rows")
+    ap.add_argument("--cols", type=int, default=64, help="WaveSim columns")
+    ap.add_argument("--t-max", type=int, default=32, help="RSim max time steps")
+    ap.add_argument("--width", type=int, default=64, help="RSim row width")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest_lines = []
+    table = kernel_table(args.n, args.chunk, args.rows, args.cols, args.t_max, args.width)
+    for name, (fn, specs) in table.items():
+        text = to_hlo_text(fn, *specs)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out_dir, fname), "w") as f:
+            f.write(text)
+        outs = jax.eval_shape(fn, *specs)
+        ins = ",".join(_fmt(s) for s in specs)
+        outs_s = ",".join(_fmt(s) for s in outs)
+        manifest_lines.append(f"{name}\t{fname}\tin={ins}\tout={outs_s}")
+        print(f"lowered {name}: {len(text)} chars")
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest_lines) + "\n")
+    print(f"wrote {len(manifest_lines)} artifacts to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+"""L1 Pallas kernels (build-time only) and their pure-jnp oracles."""
+
+from . import ref  # noqa: F401
+from .gravity import gravity_forces  # noqa: F401
+from .radmv import rsim_row  # noqa: F401
+from .stencil5 import wavesim_step  # noqa: F401

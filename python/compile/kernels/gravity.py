@@ -1,0 +1,51 @@
+"""L1 Pallas kernel: softened pairwise gravity (the N-body hot spot).
+
+TPU adaptation of the paper's CUDA-style kernel (DESIGN.md
+§Hardware-Adaptation): instead of staging j-tiles of the position array in
+CUDA shared memory per threadblock, the i-axis is tiled via the grid and
+each program instance receives the full position array as a VMEM-resident
+block (the all-gather operand the runtime materializes per device) plus its
+i-tile. Force accumulation stays in registers/VMEM.
+
+``interpret=True`` everywhere: the CPU PJRT client cannot execute Mosaic
+custom-calls (real-TPU lowering); interpret mode lowers to plain HLO.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import EPS2
+
+DEFAULT_TILE_I = 32
+
+
+def _gravity_kernel(p_all_ref, p_chunk_ref, f_ref):
+    p_all = p_all_ref[...]  # (N, 3) — full positions in VMEM
+    p_i = p_chunk_ref[...]  # (TI, 3) — this program's i-tile
+    diff = p_all[None, :, :] - p_i[:, None, :]  # (TI, N, 3)
+    dist2 = jnp.sum(diff * diff, axis=-1) + EPS2
+    inv_d3 = dist2 ** (-1.5)
+    f_ref[...] = jnp.sum(diff * inv_d3[..., None], axis=1)
+
+
+def gravity_forces(p_all, p_chunk, tile_i=DEFAULT_TILE_I):
+    """Net force on each body of ``p_chunk`` from all bodies in ``p_all``.
+
+    Tiled over the chunk axis; the tile size falls back to the whole chunk
+    when it does not divide evenly.
+    """
+    c = p_chunk.shape[0]
+    n = p_all.shape[0]
+    ti = tile_i if c % tile_i == 0 else c
+    return pl.pallas_call(
+        _gravity_kernel,
+        grid=(c // ti,),
+        in_specs=[
+            pl.BlockSpec((n, 3), lambda i: (0, 0)),
+            pl.BlockSpec((ti, 3), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((ti, 3), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((c, 3), jnp.float32),
+        interpret=True,
+    )(p_all, p_chunk)

@@ -1,0 +1,45 @@
+"""L1 Pallas kernel: RSim radiosity row (masked reduce + matvec).
+
+The growing access pattern (read rows [0, t), append row t) is padded to a
+fixed maximal shape so a single AOT artifact serves every time step: rows
+>= t are masked out inside the kernel. The matvec against the visibility
+matrix is tiled over output columns — on a real TPU each (W × TJ) tile of
+``vis`` is an MXU-shaped operand staged in VMEM.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import RSIM_NORM
+
+DEFAULT_TILE_J = 32
+
+
+def _radmv_kernel(prev_ref, vis_ref, t_ref, out_ref):
+    prev = prev_ref[...]  # (T, W) — padded history
+    vis = vis_ref[...]  # (W, TJ) — column tile of the visibility matrix
+    t = t_ref[0]
+    mask = (jnp.arange(prev.shape[0]) < t)[:, None]
+    s = jnp.sum(prev * mask, axis=0)  # (W,) illumination so far
+    scale = RSIM_NORM / jnp.maximum(t.astype(jnp.float32), 1.0)
+    out_ref[...] = (s @ vis) * scale
+
+
+def rsim_row(prev_rows, vis, t, tile_j=DEFAULT_TILE_J):
+    """Compute radiosity row ``t`` from the (padded) history and the
+    visibility matrix. ``t`` is a (1,)-shaped int32 array."""
+    big_t, w = prev_rows.shape
+    tj = tile_j if w % tile_j == 0 else w
+    return pl.pallas_call(
+        _radmv_kernel,
+        grid=(w // tj,),
+        in_specs=[
+            pl.BlockSpec((big_t, w), lambda j: (0, 0)),
+            pl.BlockSpec((w, tj), lambda j: (0, j)),
+            pl.BlockSpec((1,), lambda j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tj,), lambda j: (j,)),
+        out_shape=jax.ShapeDtypeStruct((w,), jnp.float32),
+        interpret=True,
+    )(prev_rows, vis, t)

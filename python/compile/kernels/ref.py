@@ -1,0 +1,77 @@
+"""Pure-jnp oracles for the three application kernels.
+
+These are the correctness references the Pallas kernels (L1) are validated
+against in ``python/tests/``, and double as the numerics the Rust-side
+reference implementations in ``rust/src/apps`` must agree with.
+"""
+
+import jax.numpy as jnp
+
+# Physics constants baked into the AOT artifacts (must match rust/src/apps).
+DT = 1e-3  # integration time step
+M = 1.0  # body mass
+EPS2 = 1e-4  # gravitational softening
+WAVE_C = 0.25  # wave propagation coefficient (c*dt/dx)^2
+RSIM_NORM = 0.5  # radiosity reflectance normalization
+
+
+def nbody_forces_ref(p_all, p_chunk):
+    """Softened pairwise gravity acting on each body of ``p_chunk``.
+
+    p_all: (N, 3) positions of all bodies.
+    p_chunk: (C, 3) positions of the bodies owned by this shard.
+    returns: (C, 3) net force on each chunk body.
+    """
+    diff = p_all[None, :, :] - p_chunk[:, None, :]  # (C, N, 3)
+    dist2 = jnp.sum(diff * diff, axis=-1) + EPS2  # (C, N)
+    inv_d3 = dist2 ** (-1.5)
+    return jnp.sum(diff * inv_d3[..., None], axis=1)  # (C, 3)
+
+
+def nbody_timestep_ref(p_all, v_chunk, offset):
+    """Velocity update for the chunk starting at ``offset``: Listing 1's
+    "timestep" kernel."""
+    c = v_chunk.shape[0]
+    p_chunk = jnp.take(p_all, offset + jnp.arange(c), axis=0)
+    f = nbody_forces_ref(p_all, p_chunk)
+    return v_chunk + M * f * DT
+
+
+def nbody_update_ref(v_chunk, p_chunk):
+    """Position update: Listing 1's "update" kernel."""
+    return p_chunk + v_chunk * DT
+
+
+def wavesim_step_ref(u_prev_win, u_curr_win):
+    """Five-point wave-propagation stencil.
+
+    Windows carry one halo row above and below the written chunk (edge
+    chunks are zero-padded by the caller — zero Dirichlet boundary):
+
+    u_next = 2*u - u_prev + WAVE_C * laplacian(u), evaluated on the
+    interior rows of the window.
+    """
+    u = u_curr_win
+    lap = (
+        u[:-2, :]  # up
+        + u[2:, :]  # down
+        + jnp.pad(u[1:-1, :-1], ((0, 0), (1, 0)))  # left (zero boundary)
+        + jnp.pad(u[1:-1, 1:], ((0, 0), (0, 1)))  # right
+        - 4.0 * u[1:-1, :]
+    )
+    return 2.0 * u[1:-1, :] - u_prev_win[1:-1, :] + WAVE_C * lap
+
+
+def rsim_row_ref(prev_rows, vis, t):
+    """RSim radiosity row: the new row t is the reflectance-weighted
+    illumination from all rows produced so far.
+
+    prev_rows: (T, W) buffer contents; only rows [0, t) are valid.
+    vis: (W, W) visibility/reflectance matrix.
+    t: scalar int32 — the current time step (>= 1).
+    returns: (W,) the new row.
+    """
+    T = prev_rows.shape[0]
+    mask = (jnp.arange(T) < t)[:, None]  # (T, 1)
+    s = jnp.sum(prev_rows * mask, axis=0)  # (W,)
+    return (s @ vis) * (RSIM_NORM / jnp.maximum(t.astype(jnp.float32), 1.0))

@@ -1,0 +1,49 @@
+"""L1 Pallas kernel: five-point wave-propagation stencil (WaveSim).
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): the halo-exchange idiom of
+CUDA threadblocks (stage tile+halo into shared memory) becomes
+halo-in-block — each device receives its row window *including* the halo
+rows from the runtime's coherence machinery, so the kernel itself is a
+single VMEM-resident block program. Column tiling (for wide grids) would
+add a second grid axis with overlapping column windows; at the shard sizes
+used here one block fits comfortably in a 16 MiB VMEM budget
+(18×64 f32 windows = 4.5 KiB).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import WAVE_C
+
+
+def _stencil_kernel(u_prev_ref, u_curr_ref, out_ref):
+    u = u_curr_ref[...]  # (R+2, C) window with halo rows
+    up = u[:-2, :]
+    down = u[2:, :]
+    mid = u[1:-1, :]
+    left = jnp.pad(mid[:, :-1], ((0, 0), (1, 0)))  # zero Dirichlet boundary
+    right = jnp.pad(mid[:, 1:], ((0, 0), (0, 1)))
+    lap = up + down + left + right - 4.0 * mid
+    out_ref[...] = 2.0 * mid - u_prev_ref[1:-1, :] + WAVE_C * lap
+
+
+def wavesim_step(u_prev_win, u_curr_win):
+    """One stencil step over a haloed row window: returns the interior rows.
+
+    Both windows have shape (rows+2, cols); edge chunks are zero-padded by
+    the caller (zero boundary condition).
+    """
+    rp2, c = u_curr_win.shape
+    rows = rp2 - 2
+    return pl.pallas_call(
+        _stencil_kernel,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((rp2, c), lambda i: (0, 0)),
+            pl.BlockSpec((rp2, c), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((rows, c), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, c), jnp.float32),
+        interpret=True,
+    )(u_prev_win, u_curr_win)

@@ -1,0 +1,45 @@
+"""L2: the application compute graphs, written in JAX, calling the L1
+Pallas kernels. These are the functions ``aot.py`` lowers to HLO text; one
+artifact per (function, shard shape).
+
+Conventions shared with the Rust runtime (rust/src/runtime):
+
+- inputs are the task's consumer accessors in declaration order, followed
+  by any scalar parameters (chunk offsets, time step indices);
+- outputs are the producer accessors in declaration order;
+- all array dtypes are f32; scalars are i32 of shape (1,).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import gravity_forces, rsim_row, wavesim_step
+from .kernels.ref import DT, M
+
+
+def nbody_timestep(p_all, v_chunk, offset):
+    """Listing 1 "timestep": integrate pairwise gravity into velocities.
+
+    p_all: (N, 3) all body positions (the `all` range mapper operand).
+    v_chunk: (C, 3) velocities of this shard (`one_to_one`).
+    offset: (1,) i32 — first body index of the shard.
+    """
+    c = v_chunk.shape[0]
+    p_chunk = jax.lax.dynamic_slice(p_all, (offset[0], 0), (c, 3))
+    f = gravity_forces(p_all, p_chunk)
+    return (v_chunk + M * f * DT,)
+
+
+def nbody_update(v_chunk, p_chunk):
+    """Listing 1 "update": integrate velocities into positions."""
+    return (p_chunk + v_chunk * DT,)
+
+
+def wavesim_step_model(u_prev_win, u_curr_win):
+    """WaveSim: one five-point stencil step over a haloed row window."""
+    return (wavesim_step(u_prev_win, u_curr_win),)
+
+
+def rsim_row_model(prev_rows, vis, t):
+    """RSim: compute radiosity row ``t`` from the padded history."""
+    return (rsim_row(prev_rows, vis, t),)

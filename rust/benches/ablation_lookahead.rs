@@ -1,0 +1,69 @@
+//! Ablation of the §4.3 scheduler lookahead on the RSim growing pattern:
+//! resize count, allocated bytes and virtual makespan across four
+//! configurations (per-experiment index entry A1 in DESIGN.md).
+//!
+//!     cargo bench --bench ablation_lookahead
+
+use celerity::grid::{GridBox, Range, Region};
+use celerity::sim::{simulate, ExecModel, SimConfig};
+use celerity::task::{RangeMapper, TaskDecl, TaskManager};
+
+fn rsim(steps: u64, width: u64, workaround: bool) -> impl Fn(&mut TaskManager) {
+    move |tm| {
+        let r = tm.create_buffer("R", Range::d2(steps, width), 4, true);
+        let vis = tm.create_buffer("VIS", Range::d2(width, 64), 4, true);
+        if workaround {
+            tm.submit(
+                TaskDecl::device("touch", Range::d1(width))
+                    .read_write(r, RangeMapper::Fixed(Region::full(Range::d2(steps, width))))
+                    .work_per_item(1.0),
+            );
+        }
+        for t in 1..steps {
+            let prev = Region::from(GridBox::d2((0, 0), (t, width)));
+            tm.submit(
+                TaskDecl::device("radiosity", Range::d1(width))
+                    .read(r, RangeMapper::Fixed(prev))
+                    .read(vis, RangeMapper::All)
+                    .write(r, RangeMapper::RowSlice(t))
+                    .work_per_item(t as f64 * 100.0),
+            );
+        }
+    }
+}
+
+fn main() {
+    let (steps, width) = (96u64, 8192u64);
+    println!("RSim lookahead ablation: {steps} steps, width {width}, 1 node x 4 GPUs\n");
+    println!(
+        "{:<34} {:>10} {:>8} {:>14} {:>12}",
+        "configuration", "t_sim (ms)", "resizes", "alloc bytes", "instrs"
+    );
+    let build = rsim(steps, width, false);
+    let build_wa = rsim(steps, width, true);
+    let cases: [(&str, ExecModel, bool, &dyn Fn(&mut TaskManager)); 4] = [
+        ("idag + lookahead (proposed)", ExecModel::Idag, true, &build),
+        ("idag, lookahead off", ExecModel::Idag, false, &build),
+        ("baseline (ad-hoc, §2.5)", ExecModel::Baseline, false, &build),
+        ("baseline + workaround (§5.2)", ExecModel::Baseline, false, &build_wa),
+    ];
+    for (name, exec, lookahead, b) in cases {
+        let cfg = SimConfig {
+            num_nodes: 1,
+            num_devices: 4,
+            exec,
+            lookahead,
+            ..Default::default()
+        };
+        let r = simulate(&cfg, b);
+        println!(
+            "{name:<34} {:>10.3} {:>8} {:>14} {:>12}",
+            r.makespan * 1e3,
+            r.resizes,
+            r.allocated_bytes,
+            r.instructions
+        );
+    }
+    println!("\nExpected shape: proposed = 0 resizes + least memory + fastest;");
+    println!("workaround trades peak memory for resize elimination on the baseline.");
+}

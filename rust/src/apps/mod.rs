@@ -1,0 +1,45 @@
+//! The three benchmark applications of §5: N-body, RSim, WaveSim.
+//!
+//! Each app provides, in its submodule:
+//!
+//! - `submit_*`: the Celerity-style SPMD program (task submissions against
+//!   a [`NodeQueue`](crate::driver::NodeQueue)),
+//! - `register_reference_kernels`: pure-Rust kernel implementations with
+//!   the exact numerics of `python/compile/kernels/ref.py`,
+//! - `register_pjrt_kernels`: closures that execute the AOT-compiled
+//!   JAX/Pallas artifacts via [`crate::runtime`],
+//! - `reference`: a sequential golden model used by the tests and the
+//!   end-to-end driver to validate results.
+
+pub mod nbody;
+pub mod rsim;
+pub mod wavesim;
+
+/// Physics constants; must match `python/compile/kernels/ref.py`.
+pub mod consts {
+    /// Integration time step.
+    pub const DT: f32 = 1e-3;
+    /// Body mass.
+    pub const M: f32 = 1.0;
+    /// Gravitational softening.
+    pub const EPS2: f32 = 1e-4;
+    /// Wave propagation coefficient (c·dt/dx)².
+    pub const WAVE_C: f32 = 0.25;
+    /// Radiosity reflectance normalization.
+    pub const RSIM_NORM: f32 = 0.5;
+}
+
+#[cfg(test)]
+mod tests {
+    /// Constants must stay in sync with ref.py; this test pins the values
+    /// the artifacts were compiled with.
+    #[test]
+    fn constants_pinned() {
+        use super::consts::*;
+        assert_eq!(DT, 1e-3);
+        assert_eq!(M, 1.0);
+        assert_eq!(EPS2, 1e-4);
+        assert_eq!(WAVE_C, 0.25);
+        assert_eq!(RSIM_NORM, 0.5);
+    }
+}

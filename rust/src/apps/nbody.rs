@@ -1,0 +1,225 @@
+//! Direct N-body simulation (Listing 1): the all-gather access pattern.
+
+use super::consts::{DT, EPS2, M};
+use crate::driver::NodeQueue;
+use crate::executor::{KernelCtx, Registry};
+use crate::grid::{Point, Range};
+use crate::runtime::{ArgBytes, RuntimeClient};
+use crate::task::{RangeMapper, TaskDecl};
+use crate::util::BufferId;
+use std::sync::Arc;
+
+/// Deterministic initial state: positions on a perturbed lattice,
+/// velocities zero. Returns (P, V) interleaved xyz, f32.
+pub fn initial_state(n: usize) -> (Vec<f32>, Vec<f32>) {
+    let mut rng = crate::util::XorShift64::new(0x5EED + n as u64);
+    let mut p = Vec::with_capacity(n * 3);
+    for i in 0..n {
+        for d in 0..3 {
+            p.push((i as f32 * 0.37 + d as f32) * 0.01 + rng.next_f64() as f32 * 0.1);
+        }
+    }
+    (p, vec![0f32; n * 3])
+}
+
+/// Submit the Listing-1 program: `steps` iterations of timestep + update.
+/// Buffers `p` and `v` hold one `double3`-style element (3×f32 = 12 B) per
+/// body. Returns (P, V) buffer ids.
+pub fn submit(q: &mut NodeQueue, n: u64, steps: usize) -> (BufferId, BufferId) {
+    let range = Range::d1(n);
+    let p = q.create_buffer("P", range, 12, true);
+    let v = q.create_buffer("V", range, 12, true);
+    let (p0, v0) = initial_state(n as usize);
+    q.init_buffer_f32(p, &p0);
+    q.init_buffer_f32(v, &v0);
+    // Cost hint: the inner j-loop makes each work item O(N).
+    let work = n as f64 * 20.0;
+    for _ in 0..steps {
+        q.submit(
+            TaskDecl::device("timestep", range)
+                .read(p, RangeMapper::All)
+                .read_write(v, RangeMapper::OneToOne)
+                .kernel("nbody_timestep")
+                .work_per_item(work),
+        );
+        q.submit(
+            TaskDecl::device("update", range)
+                .read(v, RangeMapper::OneToOne)
+                .read_write(p, RangeMapper::OneToOne)
+                .kernel("nbody_update")
+                .work_per_item(2.0),
+        );
+    }
+    (p, v)
+}
+
+/// Force on body at `pi` from all bodies in `p_all` (softened gravity,
+/// numerics of ref.py).
+fn force(p_all: &[f32], pi: [f32; 3]) -> [f32; 3] {
+    let mut f = [0f32; 3];
+    for j in 0..p_all.len() / 3 {
+        let d = [
+            p_all[j * 3] - pi[0],
+            p_all[j * 3 + 1] - pi[1],
+            p_all[j * 3 + 2] - pi[2],
+        ];
+        let dist2 = d[0] * d[0] + d[1] * d[1] + d[2] * d[2] + EPS2;
+        let inv_d3 = dist2.powf(-1.5);
+        f[0] += d[0] * inv_d3;
+        f[1] += d[1] * inv_d3;
+        f[2] += d[2] * inv_d3;
+    }
+    f
+}
+
+/// Pure-Rust kernels with ref.py numerics.
+pub fn register_reference_kernels(registry: &Registry) {
+    registry.register_kernel(
+        "nbody_timestep",
+        Arc::new(|ctx: &KernelCtx| {
+            let p = ctx.view(0); // read all
+            let v = ctx.view(1); // read_write one-to-one
+            let n = p.binding.region.bounding_box().max[0] as usize;
+            let mut p_all = vec![0f32; n * 3];
+            for j in 0..n {
+                // Buffers store one 12-byte element per body; elementwise
+                // access goes through a 3-wide f32 view.
+                let e = p.read_elem3(Point::d1(j as u64));
+                p_all[j * 3..j * 3 + 3].copy_from_slice(&e);
+            }
+            for i in ctx.chunk.min[0]..ctx.chunk.max[0] {
+                let pi = [
+                    p_all[i as usize * 3],
+                    p_all[i as usize * 3 + 1],
+                    p_all[i as usize * 3 + 2],
+                ];
+                let f = force(&p_all, pi);
+                let mut vi = v.read_elem3(Point::d1(i));
+                for d in 0..3 {
+                    vi[d] += M * f[d] * DT;
+                }
+                v.write_elem3(Point::d1(i), vi);
+            }
+        }),
+    );
+    registry.register_kernel(
+        "nbody_update",
+        Arc::new(|ctx: &KernelCtx| {
+            let v = ctx.view(0);
+            let p = ctx.view(1);
+            for i in ctx.chunk.min[0]..ctx.chunk.max[0] {
+                let vi = v.read_elem3(Point::d1(i));
+                let mut pi = p.read_elem3(Point::d1(i));
+                for d in 0..3 {
+                    pi[d] += vi[d] * DT;
+                }
+                p.write_elem3(Point::d1(i), pi);
+            }
+        }),
+    );
+}
+
+/// Kernels that execute the AOT-compiled JAX/Pallas artifacts. The artifact
+/// shapes (N, chunk) must match the cluster split — see `aot.py` defaults.
+pub fn register_pjrt_kernels(registry: &Registry, rt: &Arc<RuntimeClient>) {
+    let timestep = rt.kernel("nbody_timestep").expect("artifact nbody_timestep");
+    registry.register_kernel(
+        "nbody_timestep",
+        Arc::new(move |ctx: &KernelCtx| {
+            let p = ctx.view(0);
+            let v = ctx.view(1);
+            let offset = ctx.chunk.min[0] as i32;
+            let p_bytes = p.read_region_bytes();
+            let v_bytes = v.read_region_bytes();
+            let out = timestep
+                .call(&[
+                    ArgBytes::Bytes(&p_bytes),
+                    ArgBytes::Bytes(&v_bytes),
+                    ArgBytes::ScalarI32(offset),
+                ])
+                .expect("nbody_timestep execute");
+            v.write_region_bytes(&out[0]);
+        }),
+    );
+    let update = rt.kernel("nbody_update").expect("artifact nbody_update");
+    registry.register_kernel(
+        "nbody_update",
+        Arc::new(move |ctx: &KernelCtx| {
+            let v = ctx.view(0);
+            let p = ctx.view(1);
+            let v_bytes = v.read_region_bytes();
+            let p_bytes = p.read_region_bytes();
+            let out = update
+                .call(&[ArgBytes::Bytes(&v_bytes), ArgBytes::Bytes(&p_bytes)])
+                .expect("nbody_update execute");
+            p.write_region_bytes(&out[0]);
+        }),
+    );
+}
+
+/// Sequential golden model: returns final P after `steps` iterations.
+pub fn reference(n: usize, steps: usize) -> Vec<f32> {
+    let (mut p, mut v) = initial_state(n);
+    for _ in 0..steps {
+        let snapshot = p.clone();
+        for i in 0..n {
+            let pi = [snapshot[i * 3], snapshot[i * 3 + 1], snapshot[i * 3 + 2]];
+            let f = force(&snapshot, pi);
+            for d in 0..3 {
+                v[i * 3 + d] += M * f[d] * DT;
+            }
+        }
+        for i in 0..n * 3 {
+            p[i] += v[i] * DT;
+        }
+    }
+    p
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::driver::{run_cluster, ClusterConfig};
+    use std::sync::Mutex;
+
+    #[test]
+    fn cluster_matches_reference_2x2() {
+        let registry = Registry::new();
+        register_reference_kernels(&registry);
+        let cfg = ClusterConfig {
+            num_nodes: 2,
+            num_devices: 2,
+            registry,
+            ..Default::default()
+        };
+        let results = Arc::new(Mutex::new(Vec::new()));
+        let rc = results.clone();
+        let reports = run_cluster(cfg, move |q| {
+            let (p, _v) = submit(q, 64, 3);
+            let got = q.fence_f32(p);
+            rc.lock().unwrap().push(got);
+        });
+        for r in &reports {
+            assert!(r.errors.is_empty(), "{:?}", r.errors);
+        }
+        let want = reference(64, 3);
+        for got in results.lock().unwrap().iter() {
+            assert_eq!(got.len(), want.len());
+            for i in 0..want.len() {
+                assert!(
+                    (got[i] - want[i]).abs() < 1e-4,
+                    "i={i}: {} vs {}",
+                    got[i],
+                    want[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn initial_state_deterministic() {
+        let (a, _) = initial_state(32);
+        let (b, _) = initial_state(32);
+        assert_eq!(a, b);
+    }
+}

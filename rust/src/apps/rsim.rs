@@ -1,0 +1,243 @@
+//! RSim: the iterative radiosity kernel with a *growing* access pattern
+//! (§5): each time step appends one row to the result buffer after reading
+//! all previous rows. "This pattern causes frequent allocation resizes
+//! unless scheduler lookahead (§4.3) is active."
+
+use super::consts::RSIM_NORM;
+use crate::driver::NodeQueue;
+use crate::executor::{KernelCtx, Registry};
+use crate::grid::{GridBox, Point, Range, Region};
+use crate::runtime::{ArgBytes, RuntimeClient};
+use crate::task::{RangeMapper, TaskDecl};
+use crate::util::BufferId;
+use std::sync::Arc;
+
+/// Deterministic visibility/reflectance matrix (row-major W × W) and the
+/// initial emission row.
+pub fn initial_scene(width: usize) -> (Vec<f32>, Vec<f32>) {
+    let mut rng = crate::util::XorShift64::new(0xCAFE + width as u64);
+    let mut vis = Vec::with_capacity(width * width);
+    for _ in 0..width * width {
+        vis.push((rng.next_f64() as f32) * 0.2);
+    }
+    let mut row0 = vec![0f32; width];
+    for (i, v) in row0.iter_mut().enumerate() {
+        *v = 1.0 + (i % 5) as f32 * 0.1;
+    }
+    (vis, row0)
+}
+
+/// Submit the radiosity iteration: `steps` rows appended to an
+/// (steps × width) result buffer. `workaround`: submit the §5.2 zero-init
+/// kernel first, pre-allocating the whole buffer (the baseline-runtime
+/// workaround; with IDAG lookahead it is unnecessary).
+pub fn submit(
+    q: &mut NodeQueue,
+    steps: u64,
+    width: u64,
+    workaround: bool,
+) -> (BufferId, BufferId) {
+    let (vis0, row0) = initial_scene(width as usize);
+    let r = q.create_buffer("R", Range::d2(steps, width), 4, true);
+    let vis = q.create_buffer("VIS", Range::d2(width, width), 4, true);
+    q.init_buffer_f32(vis, &vis0);
+    // Row 0 = emission; rest zero.
+    let mut r0 = vec![0f32; (steps * width) as usize];
+    r0[..width as usize].copy_from_slice(&row0);
+    q.init_buffer_f32(r, &r0);
+
+    if workaround {
+        // "a no-op kernel which zero-initializes (and thus allocates) the
+        // entire buffer at the start of the program" — §5.2. Read-write
+        // keeps row 0 intact.
+        q.submit(
+            TaskDecl::device("rsim_touch", Range::d1(width))
+                .read_write(r, RangeMapper::Fixed(Region::full(Range::d2(steps, width))))
+                .kernel("rsim_touch")
+                .work_per_item(1.0),
+        );
+    }
+
+    for t in 1..steps {
+        let prev = Region::from(GridBox::d2((0, 0), (t, width)));
+        q.submit(
+            TaskDecl::device("radiosity", Range::d1(width))
+                .read(r, RangeMapper::Fixed(prev))
+                .read(vis, RangeMapper::All)
+                .write(r, RangeMapper::RowSlice(t))
+                .kernel("rsim_row")
+                .work_per_item(t as f64 * width as f64),
+        );
+    }
+    (r, vis)
+}
+
+/// Pure-Rust kernels with ref.py numerics.
+pub fn register_reference_kernels(registry: &Registry) {
+    registry.register_kernel(
+        "rsim_row",
+        Arc::new(|ctx: &KernelCtx| {
+            let prev = ctx.view(0); // rows [0, t)
+            let vis = ctx.view(1); // (W, W), sliced columns
+            let out = ctx.view(2); // row t
+            let t = out.binding.region.bounding_box().min[0];
+            let width = vis.binding.region.bounding_box().max[0];
+            // s[w] = sum over valid history rows.
+            let mut s = vec![0f32; width as usize];
+            for k in 0..t {
+                for w in 0..width {
+                    s[w as usize] += prev.read_f32(Point::d2(k, w));
+                }
+            }
+            let scale = RSIM_NORM / (t as f32).max(1.0);
+            // The kernel index space covers the row columns; honour the
+            // chunk so multi-device splits write disjoint column ranges.
+            for j in ctx.chunk.min[0]..ctx.chunk.max[0] {
+                let mut acc = 0f32;
+                for w in 0..width {
+                    acc += s[w as usize] * vis.read_f32(Point::d2(w, j));
+                }
+                out.write_f32(Point::d2(t, j), acc * scale);
+            }
+        }),
+    );
+    registry.register_kernel(
+        "rsim_touch",
+        Arc::new(|_ctx: &KernelCtx| {
+            // No-op: only the implied allocation matters (§5.2 workaround).
+        }),
+    );
+}
+
+/// PJRT kernels executing the padded-history `rsim_row` artifact.
+pub fn register_pjrt_kernels(registry: &Registry, rt: &Arc<RuntimeClient>) {
+    let row = rt.kernel("rsim_row").expect("artifact rsim_row");
+    registry.register_kernel(
+        "rsim_row",
+        Arc::new(move |ctx: &KernelCtx| {
+            let prev = ctx.view(0);
+            let vis = ctx.view(1);
+            let out = ctx.view(2);
+            let t = out.binding.region.bounding_box().min[0] as i32;
+            // History bytes, zero-padded to the artifact's (T_max, W).
+            let prev_bytes = prev.read_region_bytes();
+            let vis_bytes = vis.read_region_bytes();
+            let result = row
+                .call(&[
+                    ArgBytes::Bytes(&prev_bytes),
+                    ArgBytes::Bytes(&vis_bytes),
+                    ArgBytes::ScalarI32(t),
+                ])
+                .expect("rsim_row execute");
+            // The artifact returns the full row; scatter only this chunk's
+            // columns (multi-device splits write disjoint column ranges).
+            let cols = ctx.chunk.min[0]..ctx.chunk.max[0];
+            for j in cols {
+                let v = f32::from_ne_bytes(
+                    result[0][j as usize * 4..j as usize * 4 + 4].try_into().unwrap(),
+                );
+                out.write_f32(Point::d2(t as u64, j), v);
+            }
+        }),
+    );
+    registry.register_kernel("rsim_touch", Arc::new(|_ctx: &KernelCtx| {}));
+}
+
+/// Sequential golden model: the full (steps × width) radiosity history.
+pub fn reference(steps: usize, width: usize) -> Vec<f32> {
+    let (vis, row0) = initial_scene(width);
+    let mut r = vec![0f32; steps * width];
+    r[..width].copy_from_slice(&row0);
+    for t in 1..steps {
+        let mut s = vec![0f32; width];
+        for k in 0..t {
+            for w in 0..width {
+                s[w] += r[k * width + w];
+            }
+        }
+        let scale = RSIM_NORM / t as f32;
+        for j in 0..width {
+            let mut acc = 0f32;
+            for w in 0..width {
+                acc += s[w] * vis[w * width + j];
+            }
+            r[t * width + j] = acc * scale;
+        }
+    }
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::driver::{run_cluster, ClusterConfig};
+    use std::sync::Mutex;
+
+    fn run(cfg: ClusterConfig, steps: u64, width: u64, workaround: bool) -> (Vec<Vec<f32>>, Vec<crate::driver::NodeReport>) {
+        let results = Arc::new(Mutex::new(Vec::new()));
+        let rc = results.clone();
+        let reports = run_cluster(cfg, move |q| {
+            let (r, _) = submit(q, steps, width, workaround);
+            let got = q.fence_f32(r);
+            rc.lock().unwrap().push(got);
+        });
+        let r = std::mem::take(&mut *results.lock().unwrap());
+        (r, reports)
+    }
+
+    #[test]
+    fn cluster_matches_reference_single_node() {
+        let registry = Registry::new();
+        register_reference_kernels(&registry);
+        let cfg = ClusterConfig { num_devices: 2, registry, ..Default::default() };
+        let (results, reports) = run(cfg, 12, 16, false);
+        assert!(reports[0].errors.is_empty(), "{:?}", reports[0].errors);
+        let want = reference(12, 16);
+        for got in &results {
+            for i in 0..want.len() {
+                assert!(
+                    (got[i] - want[i]).abs() < 1e-3 * want[i].abs().max(1.0),
+                    "i={i}: {} vs {}",
+                    got[i],
+                    want[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn lookahead_eliminates_rsim_resizes_in_live_runtime() {
+        // The paper's central RSim claim, on the real executor: with
+        // lookahead no resizes; without it, one per step.
+        let mk = |lookahead: bool| {
+            let registry = Registry::new();
+            register_reference_kernels(&registry);
+            ClusterConfig { num_devices: 1, lookahead, registry, ..Default::default() }
+        };
+        let (_, with) = run(mk(true), 12, 16, false);
+        let (_, without) = run(mk(false), 12, 16, false);
+        assert_eq!(with[0].resizes_emitted, 0);
+        assert!(without[0].resizes_emitted >= 9, "{}", without[0].resizes_emitted);
+        assert!(with[0].bytes_allocated < without[0].bytes_allocated);
+    }
+
+    #[test]
+    fn workaround_also_avoids_resizes_but_allocates_everything() {
+        let registry = Registry::new();
+        register_reference_kernels(&registry);
+        let cfg = ClusterConfig {
+            num_devices: 1,
+            lookahead: false,
+            registry,
+            ..Default::default()
+        };
+        let (results, reports) = run(cfg, 12, 16, true);
+        assert_eq!(reports[0].resizes_emitted, 0, "workaround pre-allocates");
+        let want = reference(12, 16);
+        for got in &results {
+            for i in 0..want.len() {
+                assert!((got[i] - want[i]).abs() < 1e-3 * want[i].abs().max(1.0));
+            }
+        }
+    }
+}

@@ -1,0 +1,211 @@
+//! WaveSim: five-point wave-propagation stencil (§5).
+//!
+//! "Computationally inexpensive and only requires a neighborhood data
+//! exchange, which makes it a good indicator for executor latency issues."
+//! Three buffers rotate through the (prev, curr, next) roles each step.
+
+use super::consts::WAVE_C;
+use crate::driver::NodeQueue;
+use crate::executor::{KernelCtx, Registry};
+use crate::grid::{Point, Range};
+use crate::runtime::{ArgBytes, RuntimeClient};
+use crate::task::{RangeMapper, TaskDecl};
+use crate::util::BufferId;
+use std::sync::Arc;
+
+/// Deterministic initial field: a centered Gaussian-ish impulse.
+pub fn initial_field(rows: usize, cols: usize) -> Vec<f32> {
+    let mut u = vec![0f32; rows * cols];
+    let (cr, cc) = (rows as f32 / 2.0, cols as f32 / 2.0);
+    for r in 0..rows {
+        for c in 0..cols {
+            let d2 = (r as f32 - cr).powi(2) + (c as f32 - cc).powi(2);
+            u[r * cols + c] = (-d2 / 16.0).exp();
+        }
+    }
+    u
+}
+
+/// Submit `steps` stencil iterations over an (rows × cols) field.
+/// Returns the buffer holding the final field (depends on step parity).
+pub fn submit(q: &mut NodeQueue, rows: u64, cols: u64, steps: usize) -> BufferId {
+    let range = Range::d2(rows, cols);
+    let u0 = initial_field(rows as usize, cols as usize);
+    let bufs = [
+        q.create_buffer("U0", range, 4, true),
+        q.create_buffer("U1", range, 4, true),
+        q.create_buffer("U2", range, 4, true),
+    ];
+    q.init_buffer_f32(bufs[0], &u0);
+    q.init_buffer_f32(bufs[1], &u0);
+    for s in 0..steps {
+        let prev = bufs[s % 3];
+        let curr = bufs[(s + 1) % 3];
+        let next = bufs[(s + 2) % 3];
+        q.submit(
+            TaskDecl::device("wavesim", range)
+                // The artifact consumes haloed windows of both fields.
+                .read(prev, RangeMapper::Neighborhood(Range::d2(1, 0)))
+                .read(curr, RangeMapper::Neighborhood(Range::d2(1, 0)))
+                .write(next, RangeMapper::OneToOne)
+                .kernel("wavesim_step")
+                .work_per_item(10.0),
+        );
+    }
+    bufs[(steps + 1) % 3]
+}
+
+/// Pure-Rust stencil with ref.py numerics (zero Dirichlet boundary).
+pub fn register_reference_kernels(registry: &Registry) {
+    registry.register_kernel(
+        "wavesim_step",
+        Arc::new(|ctx: &KernelCtx| {
+            let prev = ctx.view(0);
+            let curr = ctx.view(1);
+            let next = ctx.view(2);
+            let rows = curr.binding.region.bounding_box().max[0]; // clamp source
+            let _ = rows;
+            let full_rows = prev.binding.region.bounding_box();
+            let cols = full_rows.max[1];
+            let at = |v: &crate::executor::BindingView, r: i64, c: i64| -> f32 {
+                if r < 0 || c < 0 || c >= cols as i64 {
+                    return 0.0;
+                }
+                let p = Point::d2(r as u64, c as u64);
+                // Outside the declared (clamped) region = domain boundary → 0.
+                if !v.binding.region.boxes().iter().any(|b| b.contains_point(p)) {
+                    return 0.0;
+                }
+                v.read_f32(p)
+            };
+            for r in ctx.chunk.min[0]..ctx.chunk.max[0] {
+                for c in ctx.chunk.min[1]..ctx.chunk.max[1] {
+                    let (ri, ci) = (r as i64, c as i64);
+                    let u = at(curr, ri, ci);
+                    let lap = at(curr, ri - 1, ci)
+                        + at(curr, ri + 1, ci)
+                        + at(curr, ri, ci - 1)
+                        + at(curr, ri, ci + 1)
+                        - 4.0 * u;
+                    let out = 2.0 * u - at(prev, ri, ci) + WAVE_C * lap;
+                    next.write_f32(Point::d2(r, c), out);
+                }
+            }
+        }),
+    );
+}
+
+/// PJRT kernels executing the `wavesim_step` artifact. The artifact expects
+/// fixed (rows+2, cols) windows; edge chunks (clamped neighborhoods) are
+/// zero-padded to match — the zero Dirichlet boundary.
+pub fn register_pjrt_kernels(registry: &Registry, rt: &Arc<RuntimeClient>) {
+    let step = rt.kernel("wavesim_step").expect("artifact wavesim_step");
+    registry.register_kernel(
+        "wavesim_step",
+        Arc::new(move |ctx: &KernelCtx| {
+            let prev = ctx.view(0);
+            let curr = ctx.view(1);
+            let next = ctx.view(2);
+            let win_rows = step.inputs[0].dims[0]; // rows + 2
+            let cols = step.inputs[0].dims[1];
+            let chunk_rows = (ctx.chunk.max[0] - ctx.chunk.min[0]) as usize;
+            assert_eq!(chunk_rows + 2, win_rows, "artifact shard shape mismatch");
+            let pad = |v: &crate::executor::BindingView| -> Vec<u8> {
+                let bbox = v.binding.region.bounding_box();
+                let bytes = v.read_region_bytes();
+                let row_bytes = cols * 4;
+                let mut out = vec![0u8; win_rows * row_bytes];
+                // The window's first row corresponds to chunk.min[0]-1.
+                let lead_missing = if ctx.chunk.min[0] == 0 { 1 } else { 0 };
+                let start = lead_missing * row_bytes;
+                out[start..start + bytes.len()].copy_from_slice(&bytes);
+                let _ = bbox;
+                out
+            };
+            let p_bytes = pad(prev);
+            let c_bytes = pad(curr);
+            let out = step
+                .call(&[ArgBytes::Bytes(&p_bytes), ArgBytes::Bytes(&c_bytes)])
+                .expect("wavesim_step execute");
+            next.write_region_bytes(&out[0]);
+        }),
+    );
+}
+
+/// Sequential golden model.
+pub fn reference(rows: usize, cols: usize, steps: usize) -> Vec<f32> {
+    let u0 = initial_field(rows, cols);
+    let mut prev = u0.clone();
+    let mut curr = u0;
+    let at = |u: &[f32], r: i64, c: i64| -> f32 {
+        if r < 0 || c < 0 || r >= rows as i64 || c >= cols as i64 {
+            0.0
+        } else {
+            u[r as usize * cols + c as usize]
+        }
+    };
+    for _ in 0..steps {
+        let mut next = vec![0f32; rows * cols];
+        for r in 0..rows as i64 {
+            for c in 0..cols as i64 {
+                let u = at(&curr, r, c);
+                let lap = at(&curr, r - 1, c) + at(&curr, r + 1, c) + at(&curr, r, c - 1)
+                    + at(&curr, r, c + 1)
+                    - 4.0 * u;
+                next[r as usize * cols + c as usize] = 2.0 * u - at(&prev, r, c) + WAVE_C * lap;
+            }
+        }
+        prev = curr;
+        curr = next;
+    }
+    curr
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::driver::{run_cluster, ClusterConfig};
+    use std::sync::Mutex;
+
+    #[test]
+    fn cluster_matches_reference_2x2() {
+        let registry = Registry::new();
+        register_reference_kernels(&registry);
+        let cfg = ClusterConfig {
+            num_nodes: 2,
+            num_devices: 2,
+            registry,
+            ..Default::default()
+        };
+        let results = Arc::new(Mutex::new(Vec::new()));
+        let rc = results.clone();
+        let reports = run_cluster(cfg, move |q| {
+            let out = submit(q, 32, 16, 4);
+            let got = q.fence_f32(out);
+            rc.lock().unwrap().push(got);
+        });
+        for r in &reports {
+            assert!(r.errors.is_empty(), "{:?}", r.errors);
+        }
+        let want = reference(32, 16, 4);
+        for got in results.lock().unwrap().iter() {
+            for i in 0..want.len() {
+                assert!(
+                    (got[i] - want[i]).abs() < 1e-4,
+                    "i={i}: {} vs {}",
+                    got[i],
+                    want[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn reference_impulse_spreads() {
+        let out = reference(16, 16, 3);
+        assert!(out.iter().all(|v| v.is_finite()));
+        // Energy must have left the center cell.
+        let center = out[8 * 16 + 8];
+        assert!(center < 1.0);
+    }
+}

@@ -1,0 +1,128 @@
+//! Virtualized buffers.
+//!
+//! A Celerity buffer is a *virtual* n-dimensional array: the user sees a
+//! single global index space, while the runtime materializes only the
+//! subregions each memory actually accesses (§2.2). This module holds the
+//! buffer *metadata* registry; backing allocations live in the instruction
+//! layer, and concrete bytes live with the executor.
+
+use crate::grid::{Range, Region};
+use crate::util::BufferId;
+use std::collections::HashMap;
+
+/// Static description of one virtualized buffer.
+#[derive(Debug, Clone)]
+pub struct BufferInfo {
+    pub id: BufferId,
+    /// Extent of the (virtual) global index space.
+    pub range: Range,
+    /// Size of one element in bytes.
+    pub elem_size: usize,
+    /// Debug name, e.g. `"P"` / `"V"` in the N-body listing.
+    pub name: String,
+    /// Region whose contents were supplied by the user at creation (a
+    /// host-initialized buffer starts fully initialized; others start fully
+    /// uninitialized and reading them is a correctness error, §4.4).
+    pub host_initialized: Region,
+}
+
+impl BufferInfo {
+    /// Bytes needed to back the full virtual range (contiguously).
+    pub fn full_size_bytes(&self) -> u64 {
+        self.range.size() * self.elem_size as u64
+    }
+}
+
+/// Registry of all live buffers. Shared (by clone) between graph layers;
+/// buffers are append-only within a run, destruction is modelled by the
+/// `free` instructions emitted when the last access completes.
+#[derive(Debug, Clone, Default)]
+pub struct BufferPool {
+    infos: HashMap<BufferId, BufferInfo>,
+    next: u64,
+}
+
+impl BufferPool {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register a new buffer and return its id.
+    pub fn create(
+        &mut self,
+        name: impl Into<String>,
+        range: Range,
+        elem_size: usize,
+        host_initialized: bool,
+    ) -> BufferId {
+        let id = BufferId(self.next);
+        self.next += 1;
+        self.infos.insert(
+            id,
+            BufferInfo {
+                id,
+                range,
+                elem_size,
+                name: name.into(),
+                host_initialized: if host_initialized {
+                    Region::full(range)
+                } else {
+                    Region::empty()
+                },
+            },
+        );
+        id
+    }
+
+    pub fn get(&self, id: BufferId) -> &BufferInfo {
+        &self.infos[&id]
+    }
+
+    pub fn try_get(&self, id: BufferId) -> Option<&BufferInfo> {
+        self.infos.get(&id)
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &BufferInfo> {
+        self.infos.values()
+    }
+
+    pub fn len(&self) -> usize {
+        self.infos.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.infos.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn create_assigns_sequential_ids() {
+        let mut pool = BufferPool::new();
+        let a = pool.create("P", Range::d1(128), 24, true);
+        let b = pool.create("V", Range::d1(128), 24, false);
+        assert_eq!(a, BufferId(0));
+        assert_eq!(b, BufferId(1));
+        assert_eq!(pool.len(), 2);
+        assert_eq!(pool.get(a).name, "P");
+    }
+
+    #[test]
+    fn host_init_region_matches_flag() {
+        let mut pool = BufferPool::new();
+        let a = pool.create("init", Range::d2(4, 4), 8, true);
+        let b = pool.create("raw", Range::d2(4, 4), 8, false);
+        assert_eq!(pool.get(a).host_initialized.area(), 16);
+        assert!(pool.get(b).host_initialized.is_empty());
+    }
+
+    #[test]
+    fn full_size_bytes() {
+        let mut pool = BufferPool::new();
+        let a = pool.create("x", Range::d2(100, 10), 8, false);
+        assert_eq!(pool.get(a).full_size_bytes(), 8000);
+    }
+}

@@ -1,0 +1,174 @@
+//! Static work assignment: splitting kernel index spaces.
+//!
+//! CDAG generation "distributes work between cluster nodes by statically
+//! splitting the task kernel index space along one or more axes" (§3.1);
+//! instruction-graph generation "applies the above scheme a second time" to
+//! distribute the node's command chunk between its local devices.
+
+use crate::grid::{GridBox, Range};
+
+/// Along which axes a kernel index space is split. User-controllable via
+/// the hint API (the paper's `hint`/`constraint` mechanism, §3.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SplitHint {
+    /// Split along axis 0 into contiguous slabs (default).
+    #[default]
+    D1,
+    /// Split along axes 0 and 1 into a near-square grid of tiles.
+    D2,
+}
+
+/// Split `range` into (up to) `parts` non-empty contiguous chunks along
+/// axis `axis`. Remainder elements are distributed to the leading chunks, so
+/// chunk sizes differ by at most one slab. Returns fewer than `parts` chunks
+/// when the axis extent is smaller than `parts`.
+pub fn split_axis(range: &GridBox, parts: u64, axis: usize) -> Vec<GridBox> {
+    assert!(parts > 0);
+    let extent = range.max[axis] - range.min[axis];
+    let parts = parts.min(extent.max(1));
+    let base = extent / parts;
+    let rem = extent % parts;
+    let mut out = Vec::with_capacity(parts as usize);
+    let mut lo = range.min[axis];
+    for i in 0..parts {
+        let len = base + u64::from(i < rem);
+        if len == 0 {
+            continue;
+        }
+        let mut chunk = *range;
+        chunk.min[axis] = lo;
+        chunk.max[axis] = lo + len;
+        lo += len;
+        out.push(chunk);
+    }
+    out
+}
+
+/// Split `range` into (up to) `parts` chunks according to `hint`.
+///
+/// The 2D split factors `parts` into a near-square `rows × cols` grid
+/// (falling back to 1D when the space is 1-dimensional).
+pub fn split_range(range: Range, parts: u64, hint: SplitHint) -> Vec<GridBox> {
+    let full = GridBox::full(range);
+    if full.is_empty() {
+        return Vec::new();
+    }
+    match hint {
+        SplitHint::D1 => split_axis(&full, parts, 0),
+        SplitHint::D2 => {
+            if range.dims() < 2 {
+                return split_axis(&full, parts, 0);
+            }
+            // Near-square factorization: rows = largest divisor <= sqrt.
+            let mut rows = (parts as f64).sqrt() as u64;
+            while rows > 1 && parts % rows != 0 {
+                rows -= 1;
+            }
+            let cols = parts / rows.max(1);
+            let mut out = Vec::new();
+            for row in split_axis(&full, rows.max(1), 0) {
+                out.extend(split_axis(&row, cols, 1));
+            }
+            out
+        }
+    }
+}
+
+/// Split an arbitrary box (not necessarily origin-anchored) into (up to)
+/// `parts` chunks according to `hint`. This is the second, device-level
+/// split of hierarchical work assignment (§3.1): the node's command chunk is
+/// subdivided between its local devices.
+pub fn split_box(b: &GridBox, parts: u64, hint: SplitHint) -> Vec<GridBox> {
+    if b.is_empty() {
+        return Vec::new();
+    }
+    match hint {
+        SplitHint::D1 => split_axis(b, parts, 0),
+        SplitHint::D2 => {
+            if b.range().dims() < 2 {
+                return split_axis(b, parts, 0);
+            }
+            let mut rows = (parts as f64).sqrt() as u64;
+            while rows > 1 && parts % rows != 0 {
+                rows -= 1;
+            }
+            let cols = parts / rows.max(1);
+            let mut out = Vec::new();
+            for row in split_axis(b, rows.max(1), 0) {
+                out.extend(split_axis(&row, cols, 1));
+            }
+            out
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::grid::Region;
+
+    #[test]
+    fn split_1d_even() {
+        let chunks = split_range(Range::d1(100), 4, SplitHint::D1);
+        assert_eq!(chunks.len(), 4);
+        assert!(chunks.iter().all(|c| c.area() == 25));
+        assert_eq!(Region::from_boxes(chunks), Region::full(Range::d1(100)));
+    }
+
+    #[test]
+    fn split_1d_remainder_leading_chunks_bigger() {
+        let chunks = split_range(Range::d1(10), 3, SplitHint::D1);
+        let sizes: Vec<u64> = chunks.iter().map(|c| c.area()).collect();
+        assert_eq!(sizes, vec![4, 3, 3]);
+    }
+
+    #[test]
+    fn split_more_parts_than_elements() {
+        let chunks = split_range(Range::d1(3), 8, SplitHint::D1);
+        assert_eq!(chunks.len(), 3);
+        assert!(chunks.iter().all(|c| c.area() == 1));
+    }
+
+    #[test]
+    fn split_2d_tiles_cover_exactly() {
+        let r = Range::d2(64, 64);
+        let chunks = split_range(r, 4, SplitHint::D2);
+        assert_eq!(chunks.len(), 4);
+        assert_eq!(Region::from_boxes(chunks.clone()), Region::full(r));
+        // Near-square: each tile is 32x32.
+        assert!(chunks.iter().all(|c| c.range() == Range::d2(32, 32)));
+    }
+
+    #[test]
+    fn split_2d_on_1d_space_falls_back() {
+        let chunks = split_range(Range::d1(64), 4, SplitHint::D2);
+        assert_eq!(chunks.len(), 4);
+        assert!(chunks.iter().all(|c| c.range() == Range::d1(16)));
+    }
+
+    #[test]
+    fn split_2d_nonsquare_count() {
+        let chunks = split_range(Range::d2(60, 60), 6, SplitHint::D2);
+        assert_eq!(chunks.len(), 6); // 2 x 3 grid
+        assert_eq!(Region::from_boxes(chunks), Region::full(Range::d2(60, 60)));
+    }
+
+    #[test]
+    fn chunks_are_disjoint_property() {
+        use crate::util::XorShift64;
+        let mut rng = XorShift64::new(5);
+        for _ in 0..100 {
+            let r = Range::d2(rng.next_range(1, 100), rng.next_range(1, 100));
+            let parts = rng.next_range(1, 16);
+            let hint = if rng.chance(0.5) { SplitHint::D1 } else { SplitHint::D2 };
+            let chunks = split_range(r, parts, hint);
+            assert!(!chunks.is_empty());
+            for (i, a) in chunks.iter().enumerate() {
+                for b in &chunks[i + 1..] {
+                    assert!(!a.intersects(b), "{a} vs {b}");
+                }
+            }
+            assert_eq!(Region::from_boxes(chunks), Region::full(r));
+        }
+    }
+}

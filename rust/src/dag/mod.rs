@@ -1,0 +1,275 @@
+//! Generic DAG storage shared by the three intermediate representations.
+//!
+//! The TDAG, CDAG and IDAG all need the same mechanics: append-only nodes
+//! with typed dependency edges, an *execution front* (nodes without
+//! successors, Fig 4 caption), and epoch-based pruning so that tracking
+//! structures stay bounded (the horizon mechanism, §3.5). `Dag<N>` provides
+//! exactly that, with the payload type supplied per layer.
+
+use std::collections::HashMap;
+use std::fmt;
+
+/// Why a dependency edge exists. Mirrors the edge coloring of Fig 2:
+/// dataflow (black), anti- and output dependencies (green), and
+/// graph-synchronization dependencies via horizons/epochs (violet/orange).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DepKind {
+    /// True dataflow: consumer reads what producer wrote.
+    Dataflow,
+    /// Anti-dependency: writer must wait for earlier reader.
+    Anti,
+    /// Output dependency: writer-after-writer ordering.
+    Output,
+    /// Synchronization through horizon/epoch nodes.
+    Sync,
+}
+
+impl fmt::Display for DepKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            DepKind::Dataflow => "dataflow",
+            DepKind::Anti => "anti",
+            DepKind::Output => "output",
+            DepKind::Sync => "sync",
+        };
+        f.write_str(s)
+    }
+}
+
+/// A dependency edge: `from` must complete before `to` may start.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Dep {
+    pub from: u64,
+    pub kind: DepKind,
+}
+
+/// One node of a DAG: a payload plus its predecessor list.
+#[derive(Debug, Clone)]
+pub struct DagNode<N> {
+    pub id: u64,
+    pub payload: N,
+    pub deps: Vec<Dep>,
+    /// Number of recorded successors (maintained for front tracking).
+    succ_count: usize,
+}
+
+impl<N> DagNode<N> {
+    /// Predecessor ids, deduplicated, in insertion order.
+    pub fn dep_ids(&self) -> impl Iterator<Item = u64> + '_ {
+        self.deps.iter().map(|d| d.from)
+    }
+}
+
+/// Append-only DAG with pruning. Node ids are assigned monotonically and are
+/// never reused; pruned nodes simply disappear from the map (the horizon
+/// mechanism guarantees nothing references them anymore).
+#[derive(Debug)]
+pub struct Dag<N> {
+    nodes: HashMap<u64, DagNode<N>>,
+    order: Vec<u64>, // topological (insertion) order of live nodes
+    next_id: u64,
+}
+
+impl<N> Default for Dag<N> {
+    fn default() -> Self {
+        Dag { nodes: HashMap::new(), order: Vec::new(), next_id: 0 }
+    }
+}
+
+impl<N> Dag<N> {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Append a node with the given dependencies. Dependencies on unknown
+    /// (already pruned or never existing) nodes are silently dropped — by
+    /// the horizon invariant a pruned node has already completed, so the
+    /// edge is vacuously satisfied. Duplicate edges keep the strongest
+    /// ordering requirement (first-kind wins; kinds are equivalent for
+    /// execution).
+    pub fn push(&mut self, payload: N, deps: impl IntoIterator<Item = Dep>) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        let mut uniq: Vec<Dep> = Vec::new();
+        for d in deps {
+            if d.from == id || !self.nodes.contains_key(&d.from) {
+                continue;
+            }
+            if uniq.iter().any(|u| u.from == d.from) {
+                continue;
+            }
+            uniq.push(d);
+        }
+        for d in &uniq {
+            if let Some(n) = self.nodes.get_mut(&d.from) {
+                n.succ_count += 1;
+            }
+        }
+        self.nodes
+            .insert(id, DagNode { id, payload, deps: uniq, succ_count: 0 });
+        self.order.push(id);
+        id
+    }
+
+    /// Number of live (unpruned) nodes.
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// Total number of nodes ever created.
+    pub fn total_created(&self) -> u64 {
+        self.next_id
+    }
+
+    pub fn get(&self, id: u64) -> Option<&DagNode<N>> {
+        self.nodes.get(&id)
+    }
+
+    pub fn get_mut(&mut self, id: u64) -> Option<&mut DagNode<N>> {
+        self.nodes.get_mut(&id)
+    }
+
+    pub fn contains(&self, id: u64) -> bool {
+        self.nodes.contains_key(&id)
+    }
+
+    /// Live nodes in topological (insertion) order.
+    pub fn iter(&self) -> impl Iterator<Item = &DagNode<N>> {
+        self.order.iter().filter_map(|id| self.nodes.get(id))
+    }
+
+    /// The *execution front*: live nodes that no other live node depends on.
+    /// A horizon node "by definition depends on all instructions on the
+    /// current execution front" (§3.6).
+    pub fn front(&self) -> Vec<u64> {
+        self.iter()
+            .filter(|n| n.succ_count == 0)
+            .map(|n| n.id)
+            .collect()
+    }
+
+    /// Drop all nodes with `id < before`. Used when a horizon is applied:
+    /// everything older has completed and can no longer be referenced.
+    pub fn prune_before(&mut self, before: u64) -> usize {
+        let dead: Vec<u64> = self.order.iter().copied().filter(|&id| id < before).collect();
+        for id in &dead {
+            if let Some(n) = self.nodes.remove(id) {
+                // Decrement successor counts of surviving predecessors.
+                for d in n.deps {
+                    if let Some(p) = self.nodes.get_mut(&d.from) {
+                        p.succ_count -= 1;
+                    }
+                }
+            }
+        }
+        self.order.retain(|id| !dead.contains(id));
+        // Surviving nodes may still point at pruned predecessors; those
+        // edges are vacuously satisfied. Clean them up so successor counts
+        // and dep walks stay consistent.
+        let live: std::collections::HashSet<u64> = self.nodes.keys().copied().collect();
+        for n in self.nodes.values_mut() {
+            n.deps.retain(|d| live.contains(&d.from));
+        }
+        dead.len()
+    }
+
+    /// Verify the topological-order invariant: every edge points backwards.
+    pub fn check_acyclic(&self) -> bool {
+        self.iter().all(|n| n.deps.iter().all(|d| d.from < n.id))
+    }
+
+    /// Render the graph in Graphviz dot format, labelling nodes with `f`.
+    pub fn to_dot(&self, name: &str, f: impl Fn(&N) -> String) -> String {
+        use std::fmt::Write;
+        let mut s = String::new();
+        let _ = writeln!(s, "digraph \"{name}\" {{");
+        let _ = writeln!(s, "  rankdir=TB; node [shape=box, fontname=\"monospace\"];");
+        for n in self.iter() {
+            let _ = writeln!(s, "  n{} [label=\"{}\"];", n.id, f(&n.payload).replace('"', "'"));
+            for d in &n.deps {
+                let color = match d.kind {
+                    DepKind::Dataflow => "black",
+                    DepKind::Anti | DepKind::Output => "darkgreen",
+                    DepKind::Sync => "purple",
+                };
+                let _ = writeln!(s, "  n{} -> n{} [color={color}];", d.from, n.id);
+            }
+        }
+        s.push_str("}\n");
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dep(from: u64) -> Dep {
+        Dep { from, kind: DepKind::Dataflow }
+    }
+
+    #[test]
+    fn push_assigns_monotonic_ids() {
+        let mut g: Dag<&str> = Dag::new();
+        let a = g.push("a", []);
+        let b = g.push("b", [dep(a)]);
+        assert_eq!((a, b), (0, 1));
+        assert_eq!(g.len(), 2);
+        assert!(g.check_acyclic());
+    }
+
+    #[test]
+    fn duplicate_and_self_deps_dropped() {
+        let mut g: Dag<&str> = Dag::new();
+        let a = g.push("a", []);
+        let b = g.push("b", [dep(a), dep(a), Dep { from: 1, kind: DepKind::Anti }]);
+        assert_eq!(g.get(b).unwrap().deps.len(), 1);
+    }
+
+    #[test]
+    fn unknown_deps_are_vacuous() {
+        let mut g: Dag<&str> = Dag::new();
+        let a = g.push("a", [dep(999)]);
+        assert!(g.get(a).unwrap().deps.is_empty());
+    }
+
+    #[test]
+    fn front_tracks_successors() {
+        let mut g: Dag<&str> = Dag::new();
+        let a = g.push("a", []);
+        let b = g.push("b", [dep(a)]);
+        let c = g.push("c", [dep(a)]);
+        assert_eq!(g.front(), vec![b, c]);
+        let h = g.push("horizon", [dep(b), dep(c)]);
+        assert_eq!(g.front(), vec![h]);
+    }
+
+    #[test]
+    fn prune_removes_old_and_fixes_counts() {
+        let mut g: Dag<&str> = Dag::new();
+        let a = g.push("a", []);
+        let b = g.push("b", [dep(a)]);
+        let c = g.push("c", [dep(b)]);
+        assert_eq!(g.prune_before(c), 2);
+        assert_eq!(g.len(), 1);
+        assert!(g.get(c).unwrap().deps.is_empty());
+        assert_eq!(g.front(), vec![c]);
+        // Ids keep counting up after pruning.
+        let d = g.push("d", [dep(c)]);
+        assert_eq!(d, 3);
+    }
+
+    #[test]
+    fn dot_output_mentions_all_nodes() {
+        let mut g: Dag<&str> = Dag::new();
+        let a = g.push("alpha", []);
+        g.push("beta", [dep(a)]);
+        let dot = g.to_dot("t", |s| s.to_string());
+        assert!(dot.contains("alpha") && dot.contains("beta"));
+        assert!(dot.contains("n0 -> n1"));
+    }
+}

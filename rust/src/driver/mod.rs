@@ -1,0 +1,538 @@
+//! The cluster driver: wires the full Fig-5 architecture together.
+//!
+//! [`run_cluster`] executes a user program SPMD-style — once per (simulated)
+//! cluster node, each node running in its own thread with the full
+//! three-thread architecture underneath:
+//!
+//! ```text
+//! node thread (main)  ──spsc──▶  scheduler thread  ──spsc──▶  executor thread
+//!   TaskManager                    CDAG+IDAG gen,                OoO engine,
+//!   (TDAG gen)                     lookahead queue               recv arbitration
+//!                                                                │ lanes (threads)
+//!                                                                ▼
+//!                                                       device/host/comm workers
+//! ```
+//!
+//! Peer-to-peer communication flows through a [`ChannelWorld`], the
+//! in-process MPI substitute.
+
+use crate::command::SplitHint;
+use crate::comm::{ChannelWorld, CommRef, NullCommunicator};
+use crate::executor::{ExecEvent, ExecutorConfig, ExecutorHandle, ExecutorStats, Registry};
+use crate::grid::Range;
+use crate::scheduler::{SchedulerConfig, SchedulerHandle, SchedulerMsg, SchedulerOut, UserInit};
+use crate::task::{EpochAction, RangeMapper, TaskDecl, TaskManager};
+use crate::util::{spsc, BufferId, NodeId, TaskId};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Configuration of an in-process cluster run.
+#[derive(Clone)]
+pub struct ClusterConfig {
+    pub num_nodes: u64,
+    pub num_devices: u64,
+    pub host_lanes: usize,
+    pub lookahead: bool,
+    pub d2d: bool,
+    pub node_hint: SplitHint,
+    pub device_hint: SplitHint,
+    pub registry: Registry,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            num_nodes: 1,
+            num_devices: 1,
+            host_lanes: 4,
+            lookahead: true,
+            d2d: true,
+            node_hint: SplitHint::D1,
+            device_hint: SplitHint::D1,
+            registry: Registry::new(),
+        }
+    }
+}
+
+/// Per-node result of a cluster run.
+#[derive(Debug)]
+pub struct NodeReport {
+    pub node: NodeId,
+    pub executor: ExecutorStats,
+    pub instructions_generated: u64,
+    pub commands_generated: u64,
+    pub resizes_emitted: u64,
+    pub bytes_allocated: u64,
+    pub max_queue_len: usize,
+    /// Runtime errors (§4.4) observed on this node.
+    pub errors: Vec<String>,
+}
+
+/// The per-node user-facing queue: buffer creation + command-group
+/// submission + synchronization, mirroring Listing 1's API surface.
+pub struct NodeQueue {
+    pub node: NodeId,
+    pub cfg: ClusterConfig,
+    tm: TaskManager,
+    sched: SchedulerHandle,
+    exec: ExecutorHandle,
+    errors: Vec<String>,
+    fence_counter: Arc<AtomicU64>,
+}
+
+impl NodeQueue {
+    /// Create a virtualized buffer visible to subsequent tasks.
+    pub fn create_buffer(
+        &mut self,
+        name: impl Into<String>,
+        range: Range,
+        elem_size: usize,
+        host_initialized: bool,
+    ) -> BufferId {
+        let id = self.tm.create_buffer(name, range, elem_size, host_initialized);
+        self.sched
+            .send(SchedulerMsg::Buffers(self.tm.buffers().clone()));
+        if host_initialized {
+            // Materialize the user-memory (M0) allocation, zero-filled;
+            // `init_buffer_*` overwrites it with concrete data.
+            self.sched.send(SchedulerMsg::UserData(UserInit {
+                alloc: crate::instruction::user_alloc_id(id),
+                covers: crate::grid::GridBox::full(range),
+                elem_size,
+                bytes: Vec::new(),
+            }));
+        }
+        id
+    }
+
+    /// Supply the contents of a host-initialized buffer as raw bytes.
+    pub fn init_buffer_bytes(&mut self, buffer: BufferId, bytes: Vec<u8>) {
+        let info = self.tm.buffers().get(buffer).clone();
+        assert_eq!(
+            bytes.len() as u64,
+            info.range.size() * info.elem_size as u64,
+            "init size mismatch for {buffer}"
+        );
+        self.sched.send(SchedulerMsg::UserData(UserInit {
+            alloc: crate::instruction::user_alloc_id(buffer),
+            covers: crate::grid::GridBox::full(info.range),
+            elem_size: info.elem_size,
+            bytes,
+        }));
+    }
+
+    /// Supply the contents of a host-initialized buffer as f32 values.
+    pub fn init_buffer_f32(&mut self, buffer: BufferId, values: &[f32]) {
+        let mut bytes = Vec::with_capacity(values.len() * 4);
+        for v in values {
+            bytes.extend_from_slice(&v.to_ne_bytes());
+        }
+        self.init_buffer_bytes(buffer, bytes);
+    }
+
+    /// Submit a command group (Listing 1's `q.submit`).
+    pub fn submit(&mut self, decl: TaskDecl) -> TaskId {
+        let id = self.tm.submit(decl);
+        self.forward_tasks();
+        id
+    }
+
+    /// Barrier: wait until everything submitted so far has executed.
+    pub fn wait(&mut self) {
+        self.tm.barrier();
+        self.forward_tasks();
+        let side = self.exec.wait_epoch(EpochAction::Barrier);
+        self.collect_errors(side);
+    }
+
+    /// Read back the full contents of a buffer as raw bytes (convenience
+    /// fence: internally a host task reading the buffer with an `all`
+    /// range mapper, followed by a barrier).
+    pub fn fence_bytes(&mut self, buffer: BufferId) -> Vec<u8> {
+        let info = self.tm.buffers().get(buffer).clone();
+        // The registry is shared across all node threads: namespace the
+        // fence task by node so each node's sink closure stays distinct.
+        let name = format!(
+            "__fence_{}_{}_{}",
+            self.node,
+            buffer,
+            self.fence_counter.fetch_add(1, Ordering::Relaxed)
+        );
+        let sink: Arc<Mutex<Vec<u8>>> = Arc::new(Mutex::new(Vec::new()));
+        let sink_c = sink.clone();
+        self.cfg.registry.register_host_task(
+            name.clone(),
+            Arc::new(move |ctx| {
+                *sink_c.lock().unwrap() = ctx.view(0).read_region_bytes();
+            }),
+        );
+        self.submit(
+            TaskDecl::host(name, info.range).read(buffer, RangeMapper::All),
+        );
+        self.wait();
+        let bytes = std::mem::take(&mut *sink.lock().unwrap());
+        assert_eq!(bytes.len() as u64, info.range.size() * info.elem_size as u64);
+        bytes
+    }
+
+    /// Read back a buffer as `f32`s.
+    pub fn fence_f32(&mut self, buffer: BufferId) -> Vec<f32> {
+        let bytes = self.fence_bytes(buffer);
+        bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_ne_bytes(c.try_into().unwrap()))
+            .collect()
+    }
+
+    /// Read back a buffer as `f64`s.
+    pub fn fence_f64(&mut self, buffer: BufferId) -> Vec<f64> {
+        let bytes = self.fence_bytes(buffer);
+        bytes
+            .chunks_exact(8)
+            .map(|c| f64::from_ne_bytes(c.try_into().unwrap()))
+            .collect()
+    }
+
+    /// TDAG debug diagnostics observed so far (§4.4 uninitialized reads).
+    pub fn take_debug_events(&mut self) -> Vec<crate::task::DebugEvent> {
+        self.tm.take_debug_events()
+    }
+
+    fn forward_tasks(&mut self) {
+        for t in self.tm.take_new_tasks() {
+            self.sched.send(SchedulerMsg::Task(t));
+        }
+        // Drain pending error events without blocking.
+        while let Ok(ev) = self.exec.events.try_recv() {
+            match ev {
+                ExecEvent::Error(e) => self.errors.push(e),
+                ExecEvent::Epoch(..) => {}
+            }
+        }
+    }
+
+    fn collect_errors(&mut self, side: Vec<ExecEvent>) {
+        for ev in side {
+            if let ExecEvent::Error(e) = ev {
+                self.errors.push(e);
+            }
+        }
+    }
+
+    fn shutdown(mut self) -> NodeReport {
+        self.tm.shutdown();
+        self.forward_tasks();
+        let side = self.exec.wait_epoch(EpochAction::Shutdown);
+        self.collect_errors(side);
+        let sched = self.sched.join();
+        let executor = self.exec.join();
+        NodeReport {
+            node: self.node,
+            executor,
+            instructions_generated: sched.instructions_generated,
+            commands_generated: sched.commands_generated,
+            resizes_emitted: sched.idag().resizes_emitted,
+            bytes_allocated: sched.idag().bytes_allocated,
+            max_queue_len: sched.max_queue_len,
+            errors: self.errors,
+        }
+    }
+}
+
+fn make_node(cfg: &ClusterConfig, node: NodeId, comm: CommRef) -> NodeQueue {
+    let tm = TaskManager::new();
+    let (out_tx, out_rx) = spsc::channel::<SchedulerOut>(4096);
+    let sched = SchedulerHandle::spawn(
+        SchedulerConfig {
+            node,
+            num_nodes: cfg.num_nodes,
+            num_devices: cfg.num_devices,
+            node_hint: cfg.node_hint,
+            device_hint: cfg.device_hint,
+            d2d: cfg.d2d,
+            lookahead: cfg.lookahead,
+            horizon_flush: 2,
+        },
+        tm.buffers().clone(),
+        out_tx,
+    );
+    let exec = ExecutorHandle::spawn(
+        ExecutorConfig {
+            node,
+            host_lanes: cfg.host_lanes,
+            registry: cfg.registry.clone(),
+        },
+        comm,
+        out_rx,
+    );
+    NodeQueue {
+        node,
+        cfg: cfg.clone(),
+        tm,
+        sched,
+        exec,
+        errors: Vec::new(),
+        fence_counter: Arc::new(AtomicU64::new(0)),
+    }
+}
+
+/// Run `program` SPMD on an in-process cluster: one OS thread per node,
+/// each with its own scheduler/executor stack, connected by a
+/// [`ChannelWorld`]. Returns per-node reports.
+pub fn run_cluster<F>(cfg: ClusterConfig, program: F) -> Vec<NodeReport>
+where
+    F: Fn(&mut NodeQueue) + Send + Sync + 'static,
+{
+    assert!(cfg.num_nodes >= 1);
+    if cfg.num_nodes == 1 {
+        let comm: CommRef = Arc::new(NullCommunicator(NodeId(0)));
+        let mut q = make_node(&cfg, NodeId(0), comm);
+        program(&mut q);
+        return vec![q.shutdown()];
+    }
+    let world = ChannelWorld::new(cfg.num_nodes);
+    let comms = world.communicators();
+    let program = Arc::new(program);
+    let mut joins = Vec::new();
+    for (i, comm) in comms.into_iter().enumerate() {
+        let cfg = cfg.clone();
+        let program = program.clone();
+        joins.push(
+            std::thread::Builder::new()
+                .name(format!("celerity-node-{i}"))
+                .spawn(move || {
+                    let comm: CommRef = Arc::new(comm);
+                    let mut q = make_node(&cfg, NodeId(i as u64), comm);
+                    program(&mut q);
+                    q.shutdown()
+                })
+                .expect("spawn node thread"),
+        );
+    }
+    joins
+        .into_iter()
+        .map(|j| j.join().expect("node thread panicked"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::executor::KernelCtx;
+    use crate::grid::Point;
+
+    fn registry_iota_double() -> Registry {
+        let registry = Registry::new();
+        registry.register_kernel(
+            "iota",
+            Arc::new(|ctx: &KernelCtx| {
+                let v = ctx.view(0);
+                for i in ctx.chunk.min[0]..ctx.chunk.max[0] {
+                    v.write_f32(Point::d1(i), i as f32);
+                }
+            }),
+        );
+        registry.register_kernel(
+            "sum_all",
+            Arc::new(|ctx: &KernelCtx| {
+                // out[i] = sum(in[j] for all j) + in[i]; requires the full
+                // buffer (all-gather pattern, like N-body).
+                let inp = ctx.view(0);
+                let out = ctx.view(1);
+                let n = inp.binding.region.bounding_box().max[0];
+                let mut total = 0f32;
+                for j in 0..n {
+                    total += inp.read_f32(Point::d1(j));
+                }
+                for i in ctx.chunk.min[0]..ctx.chunk.max[0] {
+                    out.write_f32(Point::d1(i), total + inp.read_f32(Point::d1(i)));
+                }
+            }),
+        );
+        registry
+    }
+
+    #[test]
+    fn single_node_two_devices_numerics() {
+        let cfg = ClusterConfig {
+            num_devices: 2,
+            registry: registry_iota_double(),
+            ..Default::default()
+        };
+        let result: Arc<Mutex<Vec<f32>>> = Arc::new(Mutex::new(vec![]));
+        let result_c = result.clone();
+        let reports = run_cluster(cfg, move |q| {
+            let n = Range::d1(128);
+            let a = q.create_buffer("A", n, 4, false);
+            let b = q.create_buffer("B", n, 4, false);
+            q.submit(
+                TaskDecl::device("iota", n)
+                    .discard_write(a, RangeMapper::OneToOne)
+                    .kernel("iota"),
+            );
+            q.submit(
+                TaskDecl::device("sum_all", n)
+                    .read(a, RangeMapper::All)
+                    .discard_write(b, RangeMapper::OneToOne)
+                    .kernel("sum_all"),
+            );
+            *result_c.lock().unwrap() = q.fence_f32(b);
+        });
+        assert_eq!(reports.len(), 1);
+        assert!(reports[0].errors.is_empty(), "{:?}", reports[0].errors);
+        let got = result.lock().unwrap();
+        let total: f32 = (0..128).map(|i| i as f32).sum();
+        for i in 0..128 {
+            assert_eq!(got[i], total + i as f32, "element {i}");
+        }
+    }
+
+    /// The flagship integration test: a 4-node × 2-device cluster running
+    /// an all-gather pattern where every node needs every other node's
+    /// data — exercising push/await-push, pilots, receive arbitration and
+    /// multi-device coherence, with numerics checked on every node.
+    #[test]
+    fn four_nodes_all_gather_numerics() {
+        let cfg = ClusterConfig {
+            num_nodes: 4,
+            num_devices: 2,
+            registry: registry_iota_double(),
+            ..Default::default()
+        };
+        let results: Arc<Mutex<Vec<(u64, Vec<f32>)>>> = Arc::new(Mutex::new(vec![]));
+        let results_c = results.clone();
+        let reports = run_cluster(cfg, move |q| {
+            let n = Range::d1(256);
+            let a = q.create_buffer("A", n, 4, false);
+            let b = q.create_buffer("B", n, 4, false);
+            q.submit(
+                TaskDecl::device("iota", n)
+                    .discard_write(a, RangeMapper::OneToOne)
+                    .kernel("iota"),
+            );
+            q.submit(
+                TaskDecl::device("sum_all", n)
+                    .read(a, RangeMapper::All)
+                    .discard_write(b, RangeMapper::OneToOne)
+                    .kernel("sum_all"),
+            );
+            let got = q.fence_f32(b);
+            results_c.lock().unwrap().push((q.node.0, got));
+        });
+        for r in &reports {
+            assert!(r.errors.is_empty(), "node {}: {:?}", r.node, r.errors);
+        }
+        let results = results.lock().unwrap();
+        assert_eq!(results.len(), 4);
+        let total: f32 = (0..256).map(|i| i as f32).sum();
+        for (node, got) in results.iter() {
+            assert_eq!(got.len(), 256);
+            for i in 0..256 {
+                assert_eq!(got[i], total + i as f32, "node {node} element {i}");
+            }
+        }
+    }
+
+    /// Iterated exchange: two nodes ping-pong through multiple timesteps,
+    /// verifying steady-state communication (replicas invalidated by every
+    /// write) and horizon pruning under a real executor.
+    #[test]
+    fn two_nodes_iterated_allgather() {
+        let registry = registry_iota_double();
+        registry.register_kernel(
+            "relax",
+            Arc::new(|ctx: &KernelCtx| {
+                // a'[i] = (sum of all a) / n  + small identity part
+                let inp = ctx.view(0);
+                let out = ctx.view(1);
+                let n = inp.binding.region.bounding_box().max[0];
+                let mut total = 0f32;
+                for j in 0..n {
+                    total += inp.read_f32(Point::d1(j));
+                }
+                let mean = total / n as f32;
+                for i in ctx.chunk.min[0]..ctx.chunk.max[0] {
+                    out.write_f32(Point::d1(i), 0.5 * inp.read_f32(Point::d1(i)) + 0.5 * mean);
+                }
+            }),
+        );
+        let cfg = ClusterConfig {
+            num_nodes: 2,
+            num_devices: 2,
+            registry,
+            ..Default::default()
+        };
+        let results: Arc<Mutex<Vec<Vec<f32>>>> = Arc::new(Mutex::new(vec![]));
+        let results_c = results.clone();
+        let reports = run_cluster(cfg, move |q| {
+            let n = Range::d1(64);
+            let a = q.create_buffer("A", n, 4, false);
+            let b = q.create_buffer("B", n, 4, false);
+            q.submit(
+                TaskDecl::device("iota", n)
+                    .discard_write(a, RangeMapper::OneToOne)
+                    .kernel("iota"),
+            );
+            for _ in 0..5 {
+                q.submit(
+                    TaskDecl::device("relax", n)
+                        .read(a, RangeMapper::All)
+                        .discard_write(b, RangeMapper::OneToOne)
+                        .kernel("relax"),
+                );
+                q.submit(
+                    TaskDecl::device("relax", n)
+                        .read(b, RangeMapper::All)
+                        .discard_write(a, RangeMapper::OneToOne)
+                        .kernel("relax"),
+                );
+            }
+            // NB: fence first, then lock — taking the shared mutex before
+            // the fence would serialize nodes that must communicate.
+            let got = q.fence_f32(a);
+            results_c.lock().unwrap().push(got);
+        });
+        for r in &reports {
+            assert!(r.errors.is_empty(), "{:?}", r.errors);
+        }
+        // Reference computation.
+        let mut reference: Vec<f32> = (0..64).map(|i| i as f32).collect();
+        for _ in 0..10 {
+            let mean = reference.iter().sum::<f32>() / 64.0;
+            reference = reference.iter().map(|v| 0.5 * v + 0.5 * mean).collect();
+        }
+        let results = results.lock().unwrap();
+        assert_eq!(results.len(), 2);
+        for got in results.iter() {
+            for i in 0..64 {
+                assert!(
+                    (got[i] - reference[i]).abs() < 1e-3,
+                    "element {i}: {} vs {}",
+                    got[i],
+                    reference[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn reports_carry_scheduler_stats() {
+        let cfg = ClusterConfig {
+            registry: registry_iota_double(),
+            ..Default::default()
+        };
+        let reports = run_cluster(cfg, |q| {
+            let n = Range::d1(32);
+            let a = q.create_buffer("A", n, 4, false);
+            q.submit(
+                TaskDecl::device("iota", n)
+                    .discard_write(a, RangeMapper::OneToOne)
+                    .kernel("iota"),
+            );
+        });
+        let r = &reports[0];
+        assert!(r.instructions_generated > 0);
+        assert!(r.commands_generated > 0);
+        assert!(r.executor.retired as u64 >= r.instructions_generated);
+    }
+}

@@ -1,0 +1,355 @@
+//! Receive arbitration (§4.2).
+//!
+//! `receive` and `split receive` instructions only know the *union* of
+//! buffer regions that will arrive; which peer contributes which subregion
+//! becomes known at execution time through *pilot messages*. This state
+//! machine matches receive instructions against pilots, ingests payloads
+//! into the destination allocation, and recognizes an `await receive` "as
+//! completed as soon as its subregion or a superset thereof has been
+//! received, regardless of the geometry of inbound transfers that satisfied
+//! the request" (§3.4).
+
+use super::arena::AllocBuf;
+use crate::grid::Region;
+use crate::instruction::Pilot;
+use crate::util::{BufferId, InstructionId, MessageId, NodeId};
+use std::collections::HashMap;
+use std::sync::Arc;
+
+struct ActiveReceive {
+    buffer: BufferId,
+    /// Transfer id (consuming task): pilots match on (buffer, transfer).
+    transfer: crate::util::TaskId,
+    /// What is still outstanding.
+    remaining: Region,
+    /// What has arrived so far (for await-receive checks).
+    received: Region,
+    dst: Arc<AllocBuf>,
+    /// Split receives complete at registration; their await-receives carry
+    /// the data dependency. Plain receives complete when `remaining` drains.
+    is_split: bool,
+    done: bool,
+}
+
+struct PendingAwait {
+    split: InstructionId,
+    region: Region,
+}
+
+/// The receive-arbitration state machine.
+#[derive(Default)]
+pub struct ReceiveArbiter {
+    /// Pilots not yet matched to a receive instruction.
+    unmatched_pilots: Vec<Pilot>,
+    /// Payloads that arrived before their pilot/receive was known. Message
+    /// ids are only unique per *sender*, so all keys are (sender, msg).
+    early_data: HashMap<(NodeId, MessageId), Vec<u8>>,
+    /// (sender, msg) → receive instruction expecting it (with the pilot box).
+    expected: HashMap<(NodeId, MessageId), (InstructionId, crate::grid::GridBox)>,
+    active: HashMap<InstructionId, ActiveReceive>,
+    awaits: HashMap<InstructionId, PendingAwait>,
+    completions: Vec<InstructionId>,
+    /// Statistics: how many MPI_Irecv-equivalents were posted before the
+    /// data arrived (the §4.2 double-buffering-elimination effect).
+    pub irecvs_posted_early: u64,
+    pub irecvs_posted_late: u64,
+}
+
+impl ReceiveArbiter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register a `receive` (is_split = false) or `split receive`
+    /// (is_split = true) instruction. Split receives complete immediately.
+    pub fn register_receive(
+        &mut self,
+        id: InstructionId,
+        buffer: BufferId,
+        transfer: crate::util::TaskId,
+        region: Region,
+        dst: Arc<AllocBuf>,
+        is_split: bool,
+    ) {
+        let mut ar = ActiveReceive {
+            buffer,
+            transfer,
+            remaining: region,
+            received: Region::empty(),
+            dst,
+            is_split,
+            done: false,
+        };
+        if is_split {
+            self.completions.push(id);
+            ar.done = true; // instruction-level completion; data still tracked
+        }
+        self.active.insert(id, ar);
+        // Match any pilots that arrived before the instruction (receives
+        // are issued "long before the sender side begins transmitting" in
+        // the ideal case, but the opposite order must also work).
+        let pilots = std::mem::take(&mut self.unmatched_pilots);
+        for p in pilots {
+            self.on_pilot(p);
+        }
+    }
+
+    /// Register an `await receive` for a subregion of `split`.
+    pub fn register_await(&mut self, id: InstructionId, split: InstructionId, region: Region) {
+        // Maybe already satisfied.
+        if let Some(ar) = self.active.get(&split) {
+            if ar.received.contains(&region) {
+                self.completions.push(id);
+                return;
+            }
+        }
+        self.awaits.insert(id, PendingAwait { split, region });
+    }
+
+    /// Ingest a pilot message.
+    pub fn on_pilot(&mut self, pilot: Pilot) {
+        // Find the active receive this pilot belongs to.
+        let target = self.active.iter().find_map(|(id, ar)| {
+            (ar.buffer == pilot.buffer
+                && ar.transfer == pilot.transfer
+                && ar.remaining.intersects(&Region::from(pilot.send_box)))
+            .then_some(*id)
+        });
+        match target {
+            Some(id) => {
+                // "Calls to MPI_Irecv can typically be issued long before
+                // the sender side begins transmitting" — posting the Irecv
+                // corresponds to recording the expectation here.
+                if let Some(bytes) = self.early_data.remove(&(pilot.from, pilot.msg)) {
+                    self.irecvs_posted_late += 1;
+                    self.ingest(id, &pilot.send_box, &bytes);
+                } else {
+                    self.irecvs_posted_early += 1;
+                    self.expected
+                        .insert((pilot.from, pilot.msg), (id, pilot.send_box));
+                }
+            }
+            None => self.unmatched_pilots.push(pilot),
+        }
+    }
+
+    /// Ingest a data payload.
+    pub fn on_data(&mut self, from: NodeId, msg: MessageId, bytes: Vec<u8>) {
+        match self.expected.remove(&(from, msg)) {
+            Some((id, send_box)) => self.ingest(id, &send_box, &bytes),
+            None => {
+                // Data raced ahead of its pilot (or of the receive
+                // instruction): park it.
+                self.early_data.insert((from, msg), bytes);
+            }
+        }
+    }
+
+    fn ingest(&mut self, id: InstructionId, send_box: &crate::grid::GridBox, bytes: &[u8]) {
+        let ar = self.active.get_mut(&id).expect("active receive");
+        ar.dst.write_box(send_box, bytes);
+        let got = Region::from(*send_box);
+        ar.remaining = ar.remaining.difference(&got);
+        ar.received = ar.received.union(&got);
+        if !ar.is_split && !ar.done && ar.remaining.is_empty() {
+            ar.done = true;
+            self.completions.push(id);
+        }
+        // Await-receives: complete every await whose subregion is covered.
+        let received = ar.received.clone();
+        let finished: Vec<InstructionId> = self
+            .awaits
+            .iter()
+            .filter(|(_, aw)| aw.split == id && received.contains(&aw.region))
+            .map(|(k, _)| *k)
+            .collect();
+        for k in finished {
+            self.awaits.remove(&k);
+            self.completions.push(k);
+        }
+        // Fully drained plain receive or split receive with no outstanding
+        // awaits can be garbage collected.
+        let ar = self.active.get(&id).unwrap();
+        if ar.remaining.is_empty()
+            && ar.done
+            && !self.awaits.values().any(|aw| aw.split == id)
+        {
+            self.active.remove(&id);
+        }
+    }
+
+    /// Drain instruction completions produced by recent events.
+    pub fn take_completions(&mut self) -> Vec<InstructionId> {
+        std::mem::take(&mut self.completions)
+    }
+
+    /// Anything still outstanding? (Shutdown sanity check.)
+    pub fn is_idle(&self) -> bool {
+        self.active.iter().all(|(_, a)| a.remaining.is_empty()) && self.awaits.is_empty()
+    }
+
+    /// Human-readable state dump (stall diagnostics).
+    pub fn debug_state(&self) -> String {
+        use std::fmt::Write;
+        let mut s = String::new();
+        for (id, ar) in &self.active {
+            let _ = writeln!(
+                s,
+                "  active recv I{} buffer {} transfer T{} remaining {}",
+                id.0, ar.buffer, ar.transfer.0, ar.remaining
+            );
+        }
+        for p in &self.unmatched_pilots {
+            let _ = writeln!(
+                s,
+                "  unmatched pilot {}→{} {} {} transfer T{}",
+                p.from, p.to, p.msg, p.send_box, p.transfer.0
+            );
+        }
+        for ((from, msg), _) in &self.early_data {
+            let _ = writeln!(s, "  early data from {} {}", from, msg);
+        }
+        for ((from, msg), (id, _)) in &self.expected {
+            let _ = writeln!(s, "  expecting {} {} for I{}", from, msg, id.0);
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::grid::GridBox;
+
+    fn pilot(msg: u64, b: GridBox) -> Pilot {
+        Pilot {
+            from: NodeId(1),
+            to: NodeId(0),
+            msg: MessageId(msg),
+            buffer: BufferId(0),
+            send_box: b,
+            transfer: crate::util::TaskId(1),
+        }
+    }
+
+    fn payload(b: &GridBox, val: f32) -> Vec<u8> {
+        let n = b.area() as usize;
+        let mut out = Vec::with_capacity(n * 4);
+        for _ in 0..n {
+            out.extend_from_slice(&val.to_ne_bytes());
+        }
+        out
+    }
+
+    fn dst() -> Arc<AllocBuf> {
+        Arc::new(AllocBuf::new(GridBox::d1(0, 100), 4))
+    }
+
+    #[test]
+    fn single_receive_single_sender() {
+        // §3.4 case b: one sender satisfies the entire region.
+        let mut a = ReceiveArbiter::new();
+        let buf = dst();
+        a.register_receive(InstructionId(5), BufferId(0), crate::util::TaskId(1), Region::from(GridBox::d1(0, 100)), buf.clone(), false);
+        a.on_pilot(pilot(1, GridBox::d1(0, 100)));
+        assert!(a.take_completions().is_empty());
+        a.on_data(NodeId(1), MessageId(1), payload(&GridBox::d1(0, 100), 2.5));
+        assert_eq!(a.take_completions(), vec![InstructionId(5)]);
+        unsafe {
+            assert_eq!(buf.read::<f32>(crate::grid::Point::d1(50)), 2.5);
+        }
+        assert!(a.is_idle());
+        assert_eq!(a.irecvs_posted_early, 1);
+    }
+
+    #[test]
+    fn receive_completes_from_multiple_senders() {
+        // §3.4 case a: multiple senders in exact consumer geometry.
+        let mut a = ReceiveArbiter::new();
+        a.register_receive(InstructionId(7), BufferId(0), crate::util::TaskId(1), Region::from(GridBox::d1(0, 100)), dst(), false);
+        a.on_pilot(pilot(1, GridBox::d1(0, 50)));
+        a.on_pilot(pilot(2, GridBox::d1(50, 100)));
+        a.on_data(NodeId(1), MessageId(1), payload(&GridBox::d1(0, 50), 1.0));
+        assert!(a.take_completions().is_empty(), "half received ≠ done");
+        a.on_data(NodeId(1), MessageId(2), payload(&GridBox::d1(50, 100), 2.0));
+        assert_eq!(a.take_completions(), vec![InstructionId(7)]);
+    }
+
+    #[test]
+    fn data_before_pilot_before_receive() {
+        // Worst-case ordering: payload first, then pilot, then instruction.
+        let mut a = ReceiveArbiter::new();
+        a.on_data(NodeId(1), MessageId(9), payload(&GridBox::d1(10, 20), 3.0));
+        a.on_pilot(pilot(9, GridBox::d1(10, 20)));
+        assert!(a.take_completions().is_empty());
+        let buf = dst();
+        a.register_receive(InstructionId(3), BufferId(0), crate::util::TaskId(1), Region::from(GridBox::d1(10, 20)), buf.clone(), false);
+        assert_eq!(a.take_completions(), vec![InstructionId(3)]);
+        unsafe { assert_eq!(buf.read::<f32>(crate::grid::Point::d1(15)), 3.0) };
+        assert_eq!(a.irecvs_posted_late, 1);
+    }
+
+    #[test]
+    fn split_receive_await_subregions() {
+        // §3.4 case a with consumer split: two awaits complete
+        // independently as their halves arrive.
+        let mut a = ReceiveArbiter::new();
+        a.register_receive(InstructionId(10), BufferId(0), crate::util::TaskId(1), Region::from(GridBox::d1(0, 100)), dst(), true);
+        // Split receive completes immediately.
+        assert_eq!(a.take_completions(), vec![InstructionId(10)]);
+        a.register_await(InstructionId(11), InstructionId(10), Region::from(GridBox::d1(0, 50)));
+        a.register_await(InstructionId(12), InstructionId(10), Region::from(GridBox::d1(50, 100)));
+        a.on_pilot(pilot(1, GridBox::d1(0, 50)));
+        a.on_data(NodeId(1), MessageId(1), payload(&GridBox::d1(0, 50), 1.0));
+        assert_eq!(a.take_completions(), vec![InstructionId(11)]);
+        a.on_pilot(pilot(2, GridBox::d1(50, 100)));
+        a.on_data(NodeId(1), MessageId(2), payload(&GridBox::d1(50, 100), 2.0));
+        assert_eq!(a.take_completions(), vec![InstructionId(12)]);
+        assert!(a.is_idle());
+    }
+
+    #[test]
+    fn split_receive_degrades_to_single_sender() {
+        // §3.4 case b under consumer split: one sender covers everything →
+        // both awaits complete at once.
+        let mut a = ReceiveArbiter::new();
+        a.register_receive(InstructionId(10), BufferId(0), crate::util::TaskId(1), Region::from(GridBox::d1(0, 100)), dst(), true);
+        a.take_completions();
+        a.register_await(InstructionId(11), InstructionId(10), Region::from(GridBox::d1(0, 50)));
+        a.register_await(InstructionId(12), InstructionId(10), Region::from(GridBox::d1(50, 100)));
+        a.on_pilot(pilot(1, GridBox::d1(0, 100)));
+        a.on_data(NodeId(1), MessageId(1), payload(&GridBox::d1(0, 100), 4.0));
+        let mut done = a.take_completions();
+        done.sort();
+        assert_eq!(done, vec![InstructionId(11), InstructionId(12)]);
+    }
+
+    #[test]
+    fn orthogonal_geometry_partial_await() {
+        // §3.4 case c: sender split orthogonal to consumer split — an await
+        // completes only once a superset of its subregion arrived.
+        let mut a = ReceiveArbiter::new();
+        a.register_receive(InstructionId(10), BufferId(0), crate::util::TaskId(1), Region::from(GridBox::d1(0, 90)), dst(), true);
+        a.take_completions();
+        a.register_await(InstructionId(11), InstructionId(10), Region::from(GridBox::d1(0, 30)));
+        a.register_await(InstructionId(12), InstructionId(10), Region::from(GridBox::d1(30, 90)));
+        // Senders split at 45.
+        a.on_pilot(pilot(1, GridBox::d1(0, 45)));
+        a.on_pilot(pilot(2, GridBox::d1(45, 90)));
+        a.on_data(NodeId(1), MessageId(1), payload(&GridBox::d1(0, 45), 1.0));
+        // [0,45) ⊇ [0,30): first await done, second not.
+        assert_eq!(a.take_completions(), vec![InstructionId(11)]);
+        a.on_data(NodeId(1), MessageId(2), payload(&GridBox::d1(45, 90), 1.0));
+        assert_eq!(a.take_completions(), vec![InstructionId(12)]);
+    }
+
+    #[test]
+    fn pilots_for_later_receives_are_parked() {
+        let mut a = ReceiveArbiter::new();
+        a.on_pilot(pilot(1, GridBox::d1(0, 10)));
+        let buf = dst();
+        a.register_receive(InstructionId(1), BufferId(0), crate::util::TaskId(1), Region::from(GridBox::d1(0, 10)), buf, false);
+        a.on_data(NodeId(1), MessageId(1), payload(&GridBox::d1(0, 10), 1.0));
+        assert_eq!(a.take_completions(), vec![InstructionId(1)]);
+    }
+}

@@ -1,0 +1,340 @@
+//! The allocation arena: concrete bytes behind allocation ids.
+//!
+//! Every `alloc` instruction materializes an [`AllocBuf`] — a contiguous
+//! byte buffer covering a buffer-space box (simulated device memory lives
+//! in host RAM; the memory id only matters for scheduling). Copy-, kernel-,
+//! send- and receive instructions operate on these buffers concurrently
+//! from different lane threads.
+//!
+//! # Safety
+//!
+//! `AllocBuf` hands out raw interior mutability. Synchronization is the
+//! IDAG's job: two instructions touching the same bytes always have a
+//! dependency path between them (that is precisely what the instruction
+//! graph guarantees, §3.3), so at runtime no two lanes ever race on a byte.
+//! This mirrors how the real runtime relies on SYCL/MPI dependency ordering
+//! rather than locks.
+
+use crate::grid::{GridBox, Point};
+use crate::util::AllocationId;
+use std::cell::UnsafeCell;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// One materialized allocation.
+pub struct AllocBuf {
+    /// Buffer-space box this allocation backs.
+    pub covers: GridBox,
+    pub elem_size: usize,
+    data: UnsafeCell<Box<[u8]>>,
+}
+
+unsafe impl Send for AllocBuf {}
+unsafe impl Sync for AllocBuf {}
+
+impl AllocBuf {
+    pub fn new(covers: GridBox, elem_size: usize) -> AllocBuf {
+        let bytes = covers.area() as usize * elem_size;
+        AllocBuf {
+            covers,
+            elem_size,
+            data: UnsafeCell::new(vec![0u8; bytes].into_boxed_slice()),
+        }
+    }
+
+    pub fn len_bytes(&self) -> usize {
+        unsafe { (&*self.data.get()).len() }
+    }
+
+    /// Linear element index of buffer-space point `p` (row-major within the
+    /// covered box).
+    #[inline]
+    pub fn index_of(&self, p: Point) -> usize {
+        let r = self.covers.range();
+        let rel = p - self.covers.min;
+        ((rel[0] * r[1] + rel[1]) * r[2] + rel[2]) as usize
+    }
+
+    /// Read a typed element at buffer-space point `p`.
+    ///
+    /// # Safety
+    /// Caller must guarantee no concurrent writer of this element (IDAG
+    /// dependency ordering).
+    #[inline]
+    pub unsafe fn read<T: Copy>(&self, p: Point) -> T {
+        debug_assert!(self.covers.contains_point(p), "{p} outside {}", self.covers);
+        debug_assert_eq!(self.elem_size, std::mem::size_of::<T>());
+        let idx = self.index_of(p);
+        let ptr = (*self.data.get()).as_ptr() as *const T;
+        *ptr.add(idx)
+    }
+
+    /// Write a typed element at buffer-space point `p`.
+    ///
+    /// # Safety
+    /// Caller must guarantee exclusive access to this element.
+    #[inline]
+    pub unsafe fn write<T: Copy>(&self, p: Point, v: T) {
+        debug_assert!(self.covers.contains_point(p), "{p} outside {}", self.covers);
+        debug_assert_eq!(self.elem_size, std::mem::size_of::<T>());
+        let idx = self.index_of(p);
+        let ptr = (*self.data.get()).as_mut_ptr() as *mut T;
+        *ptr.add(idx) = v;
+    }
+
+    /// Read one f32 lane of a multi-lane element (e.g. the y component of
+    /// a 12-byte double3-style element).
+    ///
+    /// # Safety
+    /// Caller must guarantee no concurrent writer (IDAG ordering) and
+    /// `lane * 4 < elem_size`.
+    #[inline]
+    pub unsafe fn read_lane_f32(&self, p: Point, lane: usize) -> f32 {
+        debug_assert!(self.covers.contains_point(p));
+        debug_assert!(lane * 4 < self.elem_size);
+        let off = self.index_of(p) * self.elem_size + lane * 4;
+        let data = &*self.data.get();
+        f32::from_ne_bytes(data[off..off + 4].try_into().unwrap())
+    }
+
+    /// Write one f32 lane of a multi-lane element.
+    ///
+    /// # Safety
+    /// Caller must guarantee exclusive access and `lane * 4 < elem_size`.
+    #[inline]
+    pub unsafe fn write_lane_f32(&self, p: Point, lane: usize, v: f32) {
+        debug_assert!(self.covers.contains_point(p));
+        debug_assert!(lane * 4 < self.elem_size);
+        let off = self.index_of(p) * self.elem_size + lane * 4;
+        let data = &mut *self.data.get();
+        data[off..off + 4].copy_from_slice(&v.to_ne_bytes());
+    }
+
+    /// Gather the bytes of `b` (must be inside `covers`) into a dense
+    /// row-major payload — the wire format of `send` instructions.
+    pub fn read_box(&self, b: &GridBox) -> Vec<u8> {
+        assert!(self.covers.contains(b), "{b} outside {}", self.covers);
+        let mut out = Vec::with_capacity(b.area() as usize * self.elem_size);
+        self.for_each_run(b, |offset, len| {
+            let data = unsafe { &*self.data.get() };
+            out.extend_from_slice(&data[offset..offset + len]);
+        });
+        out
+    }
+
+    /// Scatter a dense row-major payload into box `b`.
+    pub fn write_box(&self, b: &GridBox, bytes: &[u8]) {
+        assert!(self.covers.contains(b), "{b} outside {}", self.covers);
+        assert_eq!(bytes.len(), b.area() as usize * self.elem_size);
+        let mut src = 0;
+        self.for_each_run(b, |offset, len| {
+            let data = unsafe { &mut *self.data.get() };
+            data[offset..offset + len].copy_from_slice(&bytes[src..src + len]);
+            src += len;
+        });
+    }
+
+    /// Iterate the contiguous byte runs of box `b` within this allocation:
+    /// one run per (x, y) row, spanning the z extent (fully contiguous
+    /// boxes collapse into fewer, longer runs for 1D/2D buffers).
+    fn for_each_run(&self, b: &GridBox, mut f: impl FnMut(usize, usize)) {
+        let cr = self.covers.range();
+        // Fast path: b spans the full y/z extent of the allocation → one run.
+        if b.min[1] == self.covers.min[1]
+            && b.max[1] == self.covers.max[1]
+            && b.min[2] == self.covers.min[2]
+            && b.max[2] == self.covers.max[2]
+        {
+            let start = self.index_of(b.min) * self.elem_size;
+            let len = (b.area() * self.elem_size as u64) as usize;
+            f(start, len);
+            return;
+        }
+        let zrun = ((b.max[2] - b.min[2]) * self.elem_size as u64) as usize;
+        // z spans full extent → merge y rows when b covers full z.
+        let full_z = b.min[2] == self.covers.min[2] && b.max[2] == self.covers.max[2];
+        for x in b.min[0]..b.max[0] {
+            if full_z {
+                let start = self.index_of(Point::d3(x, b.min[1], b.min[2])) * self.elem_size;
+                let len = ((b.max[1] - b.min[1]) * cr[2]) as usize * self.elem_size;
+                f(start, len);
+            } else {
+                for y in b.min[1]..b.max[1] {
+                    let start = self.index_of(Point::d3(x, y, b.min[2])) * self.elem_size;
+                    f(start, zrun);
+                }
+            }
+        }
+    }
+}
+
+/// Copy `copy_box` from `src` to `dst` (both must cover it).
+pub fn copy_between(src: &AllocBuf, dst: &AllocBuf, copy_box: &GridBox) {
+    debug_assert_eq!(src.elem_size, dst.elem_size);
+    // Gather + scatter; for same-layout fast paths this is two memcpys.
+    let bytes = src.read_box(copy_box);
+    dst.write_box(copy_box, &bytes);
+}
+
+/// The arena: allocation id → live buffer. Owned by the executor thread;
+/// lanes hold `Arc<AllocBuf>` clones of the allocations they operate on.
+#[derive(Default)]
+pub struct Arena {
+    bufs: HashMap<AllocationId, Arc<AllocBuf>>,
+    /// Peak concurrently-live bytes (the §4.3 out-of-memory concern).
+    pub live_bytes: u64,
+    pub peak_bytes: u64,
+}
+
+impl Arena {
+    pub fn new() -> Arena {
+        Arena::default()
+    }
+
+    pub fn alloc(&mut self, id: AllocationId, covers: GridBox, elem_size: usize) -> Arc<AllocBuf> {
+        let buf = Arc::new(AllocBuf::new(covers, elem_size));
+        self.live_bytes += buf.len_bytes() as u64;
+        self.peak_bytes = self.peak_bytes.max(self.live_bytes);
+        let prev = self.bufs.insert(id, buf.clone());
+        debug_assert!(prev.is_none(), "allocation id {id} reused");
+        buf
+    }
+
+    /// Materialize (or overwrite) a user-memory (M0) allocation holding
+    /// host-initialized buffer contents.
+    pub fn init_user(&mut self, id: AllocationId, covers: GridBox, elem_size: usize, bytes: &[u8]) {
+        let buf = self.bufs.entry(id).or_insert_with(|| {
+            Arc::new(AllocBuf::new(covers, elem_size))
+        }).clone();
+        if !bytes.is_empty() {
+            assert_eq!(bytes.len(), buf.len_bytes(), "user init size mismatch");
+            buf.write_box(&covers, bytes);
+        }
+    }
+
+    pub fn free(&mut self, id: AllocationId) {
+        if let Some(buf) = self.bufs.remove(&id) {
+            self.live_bytes -= buf.len_bytes() as u64;
+        }
+    }
+
+    pub fn get(&self, id: AllocationId) -> Arc<AllocBuf> {
+        self.bufs
+            .get(&id)
+            .unwrap_or_else(|| panic!("allocation {id} not live"))
+            .clone()
+    }
+
+    pub fn try_get(&self, id: AllocationId) -> Option<Arc<AllocBuf>> {
+        self.bufs.get(&id).cloned()
+    }
+
+    pub fn len(&self) -> usize {
+        self.bufs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.bufs.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::grid::Range;
+
+    #[test]
+    fn typed_read_write_roundtrip() {
+        let buf = AllocBuf::new(GridBox::d1(10, 20), 4);
+        unsafe {
+            buf.write::<f32>(Point::d1(15), 3.5);
+            assert_eq!(buf.read::<f32>(Point::d1(15)), 3.5);
+            assert_eq!(buf.read::<f32>(Point::d1(10)), 0.0);
+        }
+    }
+
+    #[test]
+    fn box_gather_scatter_1d() {
+        let buf = AllocBuf::new(GridBox::d1(0, 8), 4);
+        for i in 0..8 {
+            unsafe { buf.write::<f32>(Point::d1(i), i as f32) };
+        }
+        let bytes = buf.read_box(&GridBox::d1(2, 5));
+        assert_eq!(bytes.len(), 12);
+        let other = AllocBuf::new(GridBox::d1(0, 8), 4);
+        other.write_box(&GridBox::d1(2, 5), &bytes);
+        unsafe {
+            assert_eq!(other.read::<f32>(Point::d1(2)), 2.0);
+            assert_eq!(other.read::<f32>(Point::d1(4)), 4.0);
+            assert_eq!(other.read::<f32>(Point::d1(5)), 0.0);
+        }
+    }
+
+    #[test]
+    fn box_gather_scatter_2d_subbox() {
+        // 2D allocation; copy an interior tile between differently-anchored
+        // allocations.
+        let a = AllocBuf::new(GridBox::d2((0, 0), (8, 8)), 8);
+        for x in 0..8 {
+            for y in 0..8 {
+                unsafe { a.write::<f64>(Point::d2(x, y), (x * 8 + y) as f64) };
+            }
+        }
+        let tile = GridBox::d2((2, 3), (5, 6));
+        let b = AllocBuf::new(GridBox::d2((2, 2), (6, 7)), 8);
+        copy_between(&a, &b, &tile);
+        unsafe {
+            assert_eq!(b.read::<f64>(Point::d2(2, 3)), (2 * 8 + 3) as f64);
+            assert_eq!(b.read::<f64>(Point::d2(4, 5)), (4 * 8 + 5) as f64);
+            // Outside the tile: untouched.
+            assert_eq!(b.read::<f64>(Point::d2(2, 2)), 0.0);
+        }
+    }
+
+    #[test]
+    fn full_extent_fast_path_matches() {
+        let a = AllocBuf::new(GridBox::full(Range::d2(4, 4)), 4);
+        for x in 0..4 {
+            for y in 0..4 {
+                unsafe { a.write::<f32>(Point::d2(x, y), (x * 4 + y) as f32) };
+            }
+        }
+        let all = a.read_box(&GridBox::full(Range::d2(4, 4)));
+        assert_eq!(all.len(), 64);
+        let b = AllocBuf::new(GridBox::full(Range::d2(4, 4)), 4);
+        b.write_box(&GridBox::full(Range::d2(4, 4)), &all);
+        unsafe { assert_eq!(b.read::<f32>(Point::d2(3, 3)), 15.0) };
+    }
+
+    #[test]
+    fn arena_tracks_peak_bytes() {
+        let mut arena = Arena::new();
+        arena.alloc(AllocationId(1), GridBox::d1(0, 100), 8); // 800 B
+        arena.alloc(AllocationId(2), GridBox::d1(0, 50), 8); // 400 B
+        assert_eq!(arena.live_bytes, 1200);
+        arena.free(AllocationId(1));
+        assert_eq!(arena.live_bytes, 400);
+        assert_eq!(arena.peak_bytes, 1200);
+        arena.alloc(AllocationId(3), GridBox::d1(0, 10), 8);
+        assert_eq!(arena.len(), 2);
+    }
+
+    #[test]
+    fn three_d_runs() {
+        let a = AllocBuf::new(GridBox::d3((0, 0, 0), (4, 4, 4)), 4);
+        for x in 0..4 {
+            for y in 0..4 {
+                for z in 0..4 {
+                    unsafe { a.write::<f32>(Point::d3(x, y, z), (x * 16 + y * 4 + z) as f32) };
+                }
+            }
+        }
+        let sub = GridBox::d3((1, 1, 1), (3, 3, 3));
+        let b = AllocBuf::new(GridBox::d3((0, 0, 0), (4, 4, 4)), 4);
+        copy_between(&a, &b, &sub);
+        unsafe {
+            assert_eq!(b.read::<f32>(Point::d3(2, 2, 2)), (2 * 16 + 2 * 4 + 2) as f32);
+            assert_eq!(b.read::<f32>(Point::d3(0, 0, 0)), 0.0);
+        }
+    }
+}

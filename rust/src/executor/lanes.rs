@@ -1,0 +1,142 @@
+//! Backend lanes: in-order worker threads (§4.1).
+//!
+//! Each [`Lane`](super::ooo::Lane) maps to one OS thread executing jobs in
+//! FIFO order — the stand-in for SYCL in-order queues (device kernels,
+//! device copies) and host threads. Completion events flow back to the
+//! executor loop over a shared channel, which the executor polls — the
+//! polling-based completion model the paper adopts from [18]/[4].
+
+use super::ooo::Lane;
+use crate::util::InstructionId;
+use std::collections::HashMap;
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+
+/// A unit of work for a lane: the instruction id and its action.
+pub struct Job {
+    pub id: InstructionId,
+    pub run: Box<dyn FnOnce() + Send>,
+}
+
+struct Worker {
+    tx: mpsc::Sender<Job>,
+    join: JoinHandle<()>,
+}
+
+/// Lazily-spawned pool of lane workers.
+pub struct LanePool {
+    workers: HashMap<Lane, Worker>,
+    completion_tx: mpsc::Sender<InstructionId>,
+    node_tag: u64,
+}
+
+impl LanePool {
+    /// `completion_tx` receives the id of every finished job.
+    pub fn new(completion_tx: mpsc::Sender<InstructionId>, node_tag: u64) -> LanePool {
+        LanePool { workers: HashMap::new(), completion_tx, node_tag }
+    }
+
+    /// Enqueue a job on `lane`, spawning its worker on first use.
+    pub fn submit(&mut self, lane: Lane, job: Job) {
+        debug_assert!(!matches!(lane, Lane::Inline | Lane::Arbiter));
+        let completion_tx = self.completion_tx.clone();
+        let node_tag = self.node_tag;
+        let worker = self.workers.entry(lane).or_insert_with(|| {
+            let (tx, rx) = mpsc::channel::<Job>();
+            let done = completion_tx.clone();
+            let join = std::thread::Builder::new()
+                .name(format!("celerity-n{node_tag}-{lane:?}"))
+                .spawn(move || {
+                    for job in rx {
+                        (job.run)();
+                        if done.send(job.id).is_err() {
+                            break; // executor gone; drain and exit
+                        }
+                    }
+                })
+                .expect("spawn lane worker");
+            Worker { tx, join }
+        });
+        worker
+            .tx
+            .send(job)
+            .expect("lane worker alive while pool exists");
+    }
+
+    /// Number of spawned lanes.
+    pub fn len(&self) -> usize {
+        self.workers.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.workers.is_empty()
+    }
+
+    /// Close all lanes and wait for their queues to drain.
+    pub fn shutdown(self) {
+        for (_, w) in self.workers {
+            drop(w.tx);
+            let _ = w.join.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::DeviceId;
+    use std::sync::atomic::{AtomicU64, Ordering};
+    use std::sync::Arc;
+
+    #[test]
+    fn jobs_execute_in_fifo_order_per_lane() {
+        let (tx, rx) = mpsc::channel();
+        let mut pool = LanePool::new(tx, 0);
+        let order = Arc::new(std::sync::Mutex::new(Vec::new()));
+        for i in 0..50u64 {
+            let order = order.clone();
+            pool.submit(
+                Lane::DeviceKernel(DeviceId(0)),
+                Job {
+                    id: InstructionId(i),
+                    run: Box::new(move || order.lock().unwrap().push(i)),
+                },
+            );
+        }
+        let mut completions = Vec::new();
+        for _ in 0..50 {
+            completions.push(rx.recv().unwrap().0);
+        }
+        pool.shutdown();
+        assert_eq!(*order.lock().unwrap(), (0..50).collect::<Vec<_>>());
+        assert_eq!(completions, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn lanes_run_concurrently() {
+        let (tx, rx) = mpsc::channel();
+        let mut pool = LanePool::new(tx, 0);
+        let counter = Arc::new(AtomicU64::new(0));
+        // Two lanes, each job waits until both lanes have started — only
+        // possible if they truly run in parallel.
+        for d in 0..2 {
+            let counter = counter.clone();
+            pool.submit(
+                Lane::DeviceKernel(DeviceId(d)),
+                Job {
+                    id: InstructionId(d),
+                    run: Box::new(move || {
+                        counter.fetch_add(1, Ordering::SeqCst);
+                        while counter.load(Ordering::SeqCst) < 2 {
+                            std::thread::yield_now();
+                        }
+                    }),
+                },
+            );
+        }
+        let a = rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap();
+        let b = rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap();
+        assert_ne!(a, b);
+        pool.shutdown();
+    }
+}

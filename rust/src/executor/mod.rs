@@ -1,0 +1,731 @@
+//! The executor: out-of-order instruction dispatch (§4.1–4.2).
+//!
+//! A dedicated executor thread consumes the instruction stream from the
+//! scheduler, keeps multiple instructions in flight across per-device
+//! in-order queues / host threads / the communicator, and polls for
+//! completions. Instruction selection and retirement run through the
+//! [`OooEngine`]; inbound transfers through the [`ReceiveArbiter`].
+
+pub mod arbitration;
+pub mod arena;
+pub mod lanes;
+pub mod ooo;
+
+pub use arbitration::ReceiveArbiter;
+pub use arena::{copy_between, AllocBuf, Arena};
+pub use ooo::{Lane, OooEngine};
+
+use crate::comm::{CommRef, Inbound};
+use crate::grid::{GridBox, Point, Region};
+use crate::instruction::{AccessBinding, InstructionKind, InstructionRef};
+use crate::scheduler::SchedulerOut;
+use crate::task::EpochAction;
+use crate::util::{spsc, InstructionId, NodeId};
+use lanes::{Job, LanePool};
+use std::collections::{HashMap, VecDeque};
+use std::sync::mpsc;
+use std::sync::Arc;
+
+// ──────────────────────────────────────────────────────────────────────────
+// Kernel interface
+// ──────────────────────────────────────────────────────────────────────────
+
+/// Accessor view handed to kernel/host-task functors: typed element access
+/// with §4.4 bounds checking against the range-mapper-declared region.
+pub struct BindingView {
+    pub binding: AccessBinding,
+    buf: Arc<AllocBuf>,
+    /// Bounding box of out-of-bounds accesses, if any (§4.4: "will report
+    /// their bounding box in a runtime error message after the kernel").
+    oob: std::cell::Cell<Option<(Point, Point)>>,
+}
+
+macro_rules! typed_access {
+    ($read:ident, $write:ident, $t:ty) => {
+        /// Read one element; out-of-region reads are recorded and return 0.
+        #[inline]
+        pub fn $read(&self, p: Point) -> $t {
+            if !self.in_region(p) {
+                self.record_oob(p);
+                return <$t>::default();
+            }
+            unsafe { self.buf.read::<$t>(p) }
+        }
+
+        /// Write one element; out-of-region writes are recorded and dropped.
+        #[inline]
+        pub fn $write(&self, p: Point, v: $t) {
+            if !self.in_region(p) {
+                self.record_oob(p);
+                return;
+            }
+            unsafe { self.buf.write::<$t>(p, v) }
+        }
+    };
+}
+
+impl BindingView {
+    #[inline]
+    fn in_region(&self, p: Point) -> bool {
+        self.binding.region.boxes().iter().any(|b| b.contains_point(p))
+    }
+
+    fn record_oob(&self, p: Point) {
+        let next = match self.oob.get() {
+            None => (p, p),
+            Some((lo, hi)) => (lo.min(p), hi.max(p)),
+        };
+        self.oob.set(Some(next));
+    }
+
+    typed_access!(read_f32, write_f32, f32);
+    typed_access!(read_f64, write_f64, f64);
+    typed_access!(read_u32, write_u32, u32);
+
+    /// Read a 12-byte "double3"-style element as three f32 lanes.
+    #[inline]
+    pub fn read_elem3(&self, p: Point) -> [f32; 3] {
+        if !self.in_region(p) {
+            self.record_oob(p);
+            return [0.0; 3];
+        }
+        unsafe {
+            [
+                self.buf.read_lane_f32(p, 0),
+                self.buf.read_lane_f32(p, 1),
+                self.buf.read_lane_f32(p, 2),
+            ]
+        }
+    }
+
+    /// Write a 12-byte "double3"-style element as three f32 lanes.
+    #[inline]
+    pub fn write_elem3(&self, p: Point, v: [f32; 3]) {
+        if !self.in_region(p) {
+            self.record_oob(p);
+            return;
+        }
+        unsafe {
+            self.buf.write_lane_f32(p, 0, v[0]);
+            self.buf.write_lane_f32(p, 1, v[1]);
+            self.buf.write_lane_f32(p, 2, v[2]);
+        }
+    }
+
+    /// Raw dense bytes of the accessed region's bounding box (PJRT input
+    /// marshalling).
+    pub fn read_region_bytes(&self) -> Vec<u8> {
+        self.buf.read_box(&self.binding.region.bounding_box())
+    }
+
+    /// Scatter dense bytes back over the region's bounding box (PJRT output
+    /// marshalling).
+    pub fn write_region_bytes(&self, bytes: &[u8]) {
+        self.buf.write_box(&self.binding.region.bounding_box(), bytes);
+    }
+}
+
+/// Execution context for one kernel chunk or host-task chunk.
+pub struct KernelCtx {
+    /// The index-space chunk this launch covers.
+    pub chunk: GridBox,
+    /// Accessor views, in declaration order.
+    pub views: Vec<BindingView>,
+}
+
+impl KernelCtx {
+    pub fn view(&self, i: usize) -> &BindingView {
+        &self.views[i]
+    }
+}
+
+/// A registered kernel/host-task implementation.
+pub type KernelFn = Arc<dyn Fn(&KernelCtx) + Send + Sync>;
+
+#[derive(Default)]
+struct RegistryTables {
+    kernels: HashMap<String, KernelFn>,
+    host_tasks: HashMap<String, KernelFn>,
+}
+
+/// Name → implementation registry. Device kernels resolve by their AOT
+/// artifact name (or task name as fallback); host tasks by task name.
+/// Cloning shares the underlying tables, so registrations made after the
+/// executor thread spawned (e.g. fence host-tasks) are visible to it.
+#[derive(Clone, Default)]
+pub struct Registry {
+    inner: Arc<std::sync::RwLock<RegistryTables>>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    pub fn register_kernel(&self, name: impl Into<String>, f: KernelFn) -> &Self {
+        self.inner.write().unwrap().kernels.insert(name.into(), f);
+        self
+    }
+
+    pub fn register_host_task(&self, name: impl Into<String>, f: KernelFn) -> &Self {
+        self.inner.write().unwrap().host_tasks.insert(name.into(), f);
+        self
+    }
+
+    fn lookup(&self, name: &str, host: bool) -> Option<KernelFn> {
+        let t = self.inner.read().unwrap();
+        if host { t.host_tasks.get(name).cloned() } else { t.kernels.get(name).cloned() }
+    }
+}
+
+// ──────────────────────────────────────────────────────────────────────────
+// Executor
+// ──────────────────────────────────────────────────────────────────────────
+
+/// Executor configuration.
+#[derive(Clone)]
+pub struct ExecutorConfig {
+    pub node: NodeId,
+    /// Host worker threads for host tasks and host-side copies.
+    pub host_lanes: usize,
+    pub registry: Registry,
+}
+
+impl Default for ExecutorConfig {
+    fn default() -> Self {
+        ExecutorConfig { node: NodeId(0), host_lanes: 4, registry: Registry::new() }
+    }
+}
+
+/// Events surfaced to the main thread.
+#[derive(Debug)]
+pub enum ExecEvent {
+    /// An epoch instruction retired (barrier/shutdown reached).
+    Epoch(EpochAction, InstructionId),
+    /// A runtime correctness error (§4.4), e.g. accessor out-of-bounds.
+    Error(String),
+}
+
+/// Final statistics returned by [`ExecutorHandle::join`].
+#[derive(Debug, Clone)]
+pub struct ExecutorStats {
+    pub issued_direct: u64,
+    pub issued_eager: u64,
+    pub retired: u64,
+    pub peak_arena_bytes: u64,
+    pub peak_waiting: usize,
+    pub lanes_spawned: usize,
+}
+
+/// The executor state machine. Normally driven by its own thread via
+/// [`ExecutorHandle::spawn`]; `run_to_shutdown` exposes the loop for tests.
+pub struct Executor {
+    cfg: ExecutorConfig,
+    comm: CommRef,
+    ooo: OooEngine,
+    arbiter: ReceiveArbiter,
+    arena: Arena,
+    lanes: LanePool,
+    lane_completions: mpsc::Receiver<InstructionId>,
+    events: mpsc::Sender<ExecEvent>,
+    ready: VecDeque<(InstructionRef, Lane)>,
+    shutting_down: bool,
+}
+
+impl Executor {
+    pub fn new(cfg: ExecutorConfig, comm: CommRef, events: mpsc::Sender<ExecEvent>) -> Executor {
+        let (ctx, crx) = mpsc::channel();
+        let node = cfg.node.0;
+        Executor {
+            ooo: OooEngine::new(cfg.host_lanes),
+            arbiter: ReceiveArbiter::new(),
+            arena: Arena::new(),
+            lanes: LanePool::new(ctx, node),
+            lane_completions: crx,
+            cfg,
+            comm,
+            events,
+            ready: VecDeque::new(),
+            shutting_down: false,
+        }
+    }
+
+    /// Main loop: poll inputs, retire completions, dispatch ready
+    /// instructions; returns when the shutdown epoch has retired and all
+    /// work is drained.
+    pub fn run_to_shutdown(mut self, inbox: spsc::Receiver<SchedulerOut>) -> ExecutorStats {
+        let mut idle_spins = 0u32;
+        let mut inbox_open = true;
+        let mut last_progress = std::time::Instant::now();
+        let mut stall_reported = false;
+        loop {
+            let mut progressed = false;
+
+            // 1. New instructions + outbound pilots from the scheduler.
+            if inbox_open {
+                loop {
+                    match inbox.try_recv() {
+                        Ok(batch) => {
+                            progressed = true;
+                            for init in batch.user_inits {
+                                self.arena.init_user(
+                                    init.alloc,
+                                    init.covers,
+                                    init.elem_size,
+                                    &init.bytes,
+                                );
+                            }
+                            for p in batch.pilots {
+                                self.comm.send_pilot(p);
+                            }
+                            for i in batch.instructions {
+                                if let Some(r) = self.ooo.admit(i) {
+                                    self.ready.push_back(r);
+                                }
+                            }
+                        }
+                        Err(None) => break,
+                        Err(Some(_)) => {
+                            inbox_open = false;
+                            break;
+                        }
+                    }
+                }
+            }
+
+            // 2. Inbound communication → receive arbitration.
+            while let Some(m) = self.comm.poll() {
+                progressed = true;
+                match m {
+                    Inbound::Pilot(p) => self.arbiter.on_pilot(p),
+                    Inbound::Data { from, msg, bytes } => self.arbiter.on_data(from, msg, bytes),
+                }
+            }
+            for id in self.arbiter.take_completions() {
+                progressed = true;
+                let newly = self.ooo.retire(id);
+                self.ready.extend(newly);
+            }
+
+            // 3. Lane completions.
+            while let Ok(id) = self.lane_completions.try_recv() {
+                progressed = true;
+                let newly = self.ooo.retire(id);
+                self.ready.extend(newly);
+            }
+
+            // 4. Dispatch everything issuable.
+            while let Some((instr, lane)) = self.ready.pop_front() {
+                progressed = true;
+                self.dispatch(instr, lane);
+            }
+
+            if self.shutting_down && self.ooo.is_drained() {
+                break;
+            }
+            if !inbox_open && self.ooo.is_drained() && self.ready.is_empty() {
+                // Scheduler gone and nothing pending: done (programs without
+                // an explicit shutdown epoch).
+                break;
+            }
+
+            if progressed {
+                idle_spins = 0;
+                last_progress = std::time::Instant::now();
+                stall_reported = false;
+            } else {
+                // Stall detector: a runtime with pending work but no
+                // progress for seconds indicates a dependency or
+                // arbitration bug — report once, loudly.
+                if !stall_reported
+                    && !self.ooo.is_drained()
+                    && last_progress.elapsed() > std::time::Duration::from_secs(5)
+                {
+                    stall_reported = true;
+                    let msg = format!(
+                        "executor stalled on node {}: {} waiting, {} in flight, arbiter idle={}",
+                        self.cfg.node,
+                        self.ooo.waiting_len(),
+                        self.ooo.in_flight_len(),
+                        self.arbiter.is_idle(),
+                    );
+                    eprintln!("{msg}\n{}{}", self.ooo.debug_pending(), self.arbiter.debug_state());
+                    let _ = self.events.send(ExecEvent::Error(msg));
+                }
+                // Polling loop etiquette: spin briefly, then yield, then
+                // sleep — idle executors must not starve worker lanes on
+                // small machines.
+                idle_spins += 1;
+                if idle_spins < 64 {
+                    std::hint::spin_loop();
+                } else if idle_spins < 192 {
+                    std::thread::yield_now();
+                } else {
+                    std::thread::sleep(std::time::Duration::from_micros(100));
+                }
+            }
+        }
+        let stats = ExecutorStats {
+            issued_direct: self.ooo.issued_direct,
+            issued_eager: self.ooo.issued_eager,
+            retired: self.ooo.retired,
+            peak_arena_bytes: self.arena.peak_bytes,
+            peak_waiting: self.ooo.peak_waiting,
+            lanes_spawned: self.lanes.len(),
+        };
+        self.lanes.shutdown();
+        stats
+    }
+
+    /// Retire an instruction executed inline and queue newly-ready work.
+    fn retire_inline(&mut self, id: InstructionId) {
+        let newly = self.ooo.retire(id);
+        self.ready.extend(newly);
+    }
+
+    fn make_views(&self, bindings: &[AccessBinding]) -> Vec<BindingView> {
+        bindings
+            .iter()
+            .map(|b| BindingView {
+                buf: self.arena.get(b.alloc),
+                binding: b.clone(),
+                oob: std::cell::Cell::new(None),
+            })
+            .collect()
+    }
+
+    fn dispatch(&mut self, instr: InstructionRef, lane: Lane) {
+        let id = instr.id;
+        match &instr.kind {
+            // ── inline instructions ─────────────────────────────────────
+            InstructionKind::Alloc { alloc, covers, size_bytes, .. } => {
+                let elem = if covers.area() > 0 {
+                    (*size_bytes / covers.area()) as usize
+                } else {
+                    1
+                };
+                self.arena.alloc(*alloc, *covers, elem.max(1));
+                self.retire_inline(id);
+            }
+            InstructionKind::Free { alloc, .. } => {
+                self.arena.free(*alloc);
+                self.retire_inline(id);
+            }
+            InstructionKind::Horizon => {
+                self.retire_inline(id);
+                self.ooo.compact_below(id);
+            }
+            InstructionKind::Epoch(action) => {
+                if *action == EpochAction::Shutdown {
+                    self.shutting_down = true;
+                }
+                let _ = self.events.send(ExecEvent::Epoch(*action, id));
+                self.retire_inline(id);
+            }
+
+            // ── arbitration-completed instructions ──────────────────────
+            InstructionKind::Receive { buffer, region, dst_alloc, transfer, .. } => {
+                let dst = self.arena.get(*dst_alloc);
+                self.arbiter
+                    .register_receive(id, *buffer, *transfer, region.clone(), dst, false);
+                self.drain_arbiter();
+            }
+            InstructionKind::SplitReceive { buffer, region, dst_alloc, transfer, .. } => {
+                let dst = self.arena.get(*dst_alloc);
+                self.arbiter
+                    .register_receive(id, *buffer, *transfer, region.clone(), dst, true);
+                self.drain_arbiter();
+            }
+            InstructionKind::AwaitReceive { region, split, .. } => {
+                self.arbiter.register_await(id, *split, region.clone());
+                self.drain_arbiter();
+            }
+
+            // ── lane-executed instructions ──────────────────────────────
+            InstructionKind::Copy { copy_box, src_alloc, dst_alloc, .. } => {
+                let src = self.arena.get(*src_alloc);
+                let dst = self.arena.get(*dst_alloc);
+                let copy_box = *copy_box;
+                self.lanes.submit(
+                    lane,
+                    Job {
+                        id,
+                        run: Box::new(move || copy_between(&src, &dst, &copy_box)),
+                    },
+                );
+            }
+            InstructionKind::Send { send_box, target, msg, src_alloc, .. } => {
+                let src = self.arena.get(*src_alloc);
+                let comm = self.comm.clone();
+                let (send_box, target, msg) = (*send_box, *target, *msg);
+                self.lanes.submit(
+                    lane,
+                    Job {
+                        id,
+                        run: Box::new(move || {
+                            let bytes = src.read_box(&send_box);
+                            comm.send_data(target, msg, bytes);
+                        }),
+                    },
+                );
+            }
+            InstructionKind::DeviceKernel { chunk, bindings, kernel, .. } => {
+                let name = kernel
+                    .clone()
+                    .or_else(|| instr.task.as_ref().map(|t| t.name.clone()))
+                    .unwrap_or_default();
+                self.submit_functor(lane, id, *chunk, bindings, &name, false);
+            }
+            InstructionKind::HostTask { chunk, bindings, .. } => {
+                let name = instr
+                    .task
+                    .as_ref()
+                    .map(|t| t.name.clone())
+                    .unwrap_or_default();
+                self.submit_functor(lane, id, *chunk, bindings, &name, true);
+            }
+        }
+    }
+
+    fn submit_functor(
+        &mut self,
+        lane: Lane,
+        id: InstructionId,
+        chunk: GridBox,
+        bindings: &[AccessBinding],
+        name: &str,
+        host: bool,
+    ) {
+        let Some(f) = self.cfg.registry.lookup(name, host) else {
+            let _ = self.events.send(ExecEvent::Error(format!(
+                "no {} registered under '{name}'; treating as no-op",
+                if host { "host task" } else { "kernel" }
+            )));
+            // Still execute as a no-op through the lane to preserve ordering.
+            self.lanes.submit(lane, Job { id, run: Box::new(|| {}) });
+            return;
+        };
+        let views = self.make_views(bindings);
+        let events = self.events.clone();
+        let label = name.to_string();
+        self.lanes.submit(
+            lane,
+            Job {
+                id,
+                run: Box::new(move || {
+                    let ctx = KernelCtx { chunk, views };
+                    f(&ctx);
+                    // §4.4 accessor bounds checking: report after the kernel
+                    // exits.
+                    for v in &ctx.views {
+                        if let Some((lo, hi)) = v.oob.get() {
+                            let _ = events.send(ExecEvent::Error(format!(
+                                "kernel '{label}': out-of-bounds access on buffer {} within [{lo} - {hi}], permitted region {}",
+                                v.binding.buffer, v.binding.region
+                            )));
+                        }
+                    }
+                }),
+            },
+        );
+    }
+
+    fn drain_arbiter(&mut self) {
+        for cid in self.arbiter.take_completions() {
+            let newly = self.ooo.retire(cid);
+            self.ready.extend(newly);
+        }
+    }
+}
+
+/// Handle to a running executor thread.
+pub struct ExecutorHandle {
+    join: std::thread::JoinHandle<ExecutorStats>,
+    /// Event stream (epochs, errors).
+    pub events: mpsc::Receiver<ExecEvent>,
+}
+
+impl ExecutorHandle {
+    pub fn spawn(
+        cfg: ExecutorConfig,
+        comm: CommRef,
+        inbox: spsc::Receiver<SchedulerOut>,
+    ) -> ExecutorHandle {
+        let (etx, erx) = mpsc::channel();
+        let node = cfg.node.0;
+        let join = std::thread::Builder::new()
+            .name(format!("celerity-exec-{node}"))
+            .spawn(move || Executor::new(cfg, comm, etx).run_to_shutdown(inbox))
+            .expect("spawn executor thread");
+        ExecutorHandle { join, events: erx }
+    }
+
+    /// Block until an epoch of `action` is reported.
+    pub fn wait_epoch(&self, action: EpochAction) -> Vec<ExecEvent> {
+        let mut side = Vec::new();
+        loop {
+            match self.events.recv() {
+                Ok(ExecEvent::Epoch(a, _)) if a == action => return side,
+                Ok(ev) => side.push(ev),
+                Err(_) => return side,
+            }
+        }
+    }
+
+    pub fn join(self) -> ExecutorStats {
+        self.join.join().expect("executor thread panicked")
+    }
+}
+
+/// Utility: extract the bytes of `region` of a buffer from a `BindingView`
+/// (used by fence host tasks).
+pub fn region_to_vec(view: &BindingView, region: &Region) -> Vec<u8> {
+    let mut out = Vec::new();
+    for b in region.boxes() {
+        out.extend(view.buf.read_box(b));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::NullCommunicator;
+    use crate::grid::Range;
+    use crate::scheduler::{Scheduler, SchedulerConfig};
+    use crate::task::{RangeMapper, TaskDecl, TaskManager};
+
+    /// End-to-end single-node correctness: TDAG → CDAG → IDAG → executor
+    /// with real bytes, 2 devices, fence via host task.
+    #[test]
+    fn executes_pipeline_with_correct_numerics() {
+        let mut tm = TaskManager::new();
+        let n = Range::d1(256);
+        let a = tm.create_buffer("A", n, 4, false);
+        // iota kernel writes A[i] = i; double kernel A[i] *= 2; host task
+        // sums into a shared sink.
+        tm.submit(
+            TaskDecl::device("iota", n)
+                .discard_write(a, RangeMapper::OneToOne)
+                .kernel("iota"),
+        );
+        tm.submit(
+            TaskDecl::device("double", n)
+                .read_write(a, RangeMapper::OneToOne)
+                .kernel("double"),
+        );
+        tm.submit(TaskDecl::host("sum", n).read(a, RangeMapper::All));
+        tm.shutdown();
+        let tasks = tm.take_new_tasks();
+
+        let mut sched = Scheduler::new(
+            SchedulerConfig { num_devices: 2, ..Default::default() },
+            tm.buffers().clone(),
+        );
+
+        let sum = Arc::new(std::sync::Mutex::new(0f64));
+        let sum_c = sum.clone();
+        let mut registry = Registry::new();
+        registry.register_kernel(
+            "iota",
+            Arc::new(|ctx: &KernelCtx| {
+                let v = ctx.view(0);
+                for i in ctx.chunk.min[0]..ctx.chunk.max[0] {
+                    v.write_f32(Point::d1(i), i as f32);
+                }
+            }),
+        );
+        registry.register_kernel(
+            "double",
+            Arc::new(|ctx: &KernelCtx| {
+                let v = ctx.view(0);
+                for i in ctx.chunk.min[0]..ctx.chunk.max[0] {
+                    v.write_f32(Point::d1(i), v.read_f32(Point::d1(i)) * 2.0);
+                }
+            }),
+        );
+        registry.register_host_task(
+            "sum",
+            Arc::new(move |ctx: &KernelCtx| {
+                let v = ctx.view(0);
+                let mut s = 0f64;
+                for i in 0..256 {
+                    s += v.read_f32(Point::d1(i)) as f64;
+                }
+                *sum_c.lock().unwrap() = s;
+            }),
+        );
+
+        let (tx, rx) = spsc::channel(4096);
+        let exec = ExecutorHandle::spawn(
+            ExecutorConfig { registry, ..Default::default() },
+            Arc::new(NullCommunicator(NodeId(0))),
+            rx,
+        );
+        for t in &tasks {
+            let (instructions, pilots) = sched.process(t);
+            tx.send(SchedulerOut::batch(instructions, pilots)).unwrap();
+        }
+        let (instructions, pilots) = sched.flush_now();
+        tx.send(SchedulerOut::batch(instructions, pilots)).unwrap();
+        drop(tx);
+
+        let side = exec.wait_epoch(EpochAction::Shutdown);
+        let errors: Vec<_> = side
+            .iter()
+            .filter(|e| matches!(e, ExecEvent::Error(_)))
+            .collect();
+        assert!(errors.is_empty(), "{errors:?}");
+        let stats = exec.join();
+        // sum(2*i for i in 0..256) = 2 * 255*256/2 = 65280
+        assert_eq!(*sum.lock().unwrap(), 65280.0);
+        assert!(stats.retired > 5);
+        assert_eq!(stats.peak_arena_bytes > 0, true);
+    }
+
+    /// §4.4: an out-of-bounds access is reported with its bounding box.
+    #[test]
+    fn oob_access_reported() {
+        let mut tm = TaskManager::new();
+        let n = Range::d1(64);
+        let a = tm.create_buffer("A", n, 4, false);
+        tm.submit(
+            TaskDecl::device("bad", n)
+                .discard_write(a, RangeMapper::OneToOne)
+                .kernel("bad"),
+        );
+        tm.shutdown();
+        let tasks = tm.take_new_tasks();
+        let mut sched = Scheduler::new(SchedulerConfig::default(), tm.buffers().clone());
+
+        let mut registry = Registry::new();
+        registry.register_kernel(
+            "bad",
+            Arc::new(|ctx: &KernelCtx| {
+                let v = ctx.view(0);
+                // Write one element past the permitted region.
+                v.write_f32(Point::d1(ctx.chunk.max[0] + 5), 1.0);
+            }),
+        );
+
+        let (tx, rx) = spsc::channel(1024);
+        let exec = ExecutorHandle::spawn(
+            ExecutorConfig { registry, ..Default::default() },
+            Arc::new(NullCommunicator(NodeId(0))),
+            rx,
+        );
+        for t in &tasks {
+            let (instructions, pilots) = sched.process(t);
+            tx.send(SchedulerOut::batch(instructions, pilots)).unwrap();
+        }
+        let (instructions, pilots) = sched.flush_now();
+        tx.send(SchedulerOut::batch(instructions, pilots)).unwrap();
+        drop(tx);
+        let side = exec.wait_epoch(EpochAction::Shutdown);
+        exec.join();
+        assert!(
+            side.iter().any(|e| matches!(e, ExecEvent::Error(msg) if msg.contains("out-of-bounds"))),
+            "{side:?}"
+        );
+    }
+}

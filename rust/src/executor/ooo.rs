@@ -1,0 +1,423 @@
+//! The out-of-order engine (§4.1).
+//!
+//! "We propose the *out-of-order engine* state machine to handle both
+//! instruction selection and retirement. It is fed the stream of incoming
+//! instructions as well as completion events, and will select the next
+//! instruction to be issued to a backend queue. An instruction can either
+//! be assigned *directly* when all its dependencies are satisfied; or
+//! *eagerly* when all its incomplete dependencies are currently pending on
+//! the same single in-order queue or host thread."
+
+use crate::instruction::{InstructionKind, InstructionRef};
+use crate::util::{DeviceId, InstructionId, MemoryId};
+use std::collections::{HashMap, HashSet};
+
+/// The backend queue an instruction is issued to. Device queues and host
+/// threads are *in-order* (FIFO), which the eager-assignment path exploits.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Lane {
+    /// Per-device kernel queue.
+    DeviceKernel(DeviceId),
+    /// Per-device copy queue (one per direction to allow duplex overlap).
+    DeviceCopy(DeviceId, Direction),
+    /// One of the host worker threads.
+    Host(usize),
+    /// The communicator lane (sends; FIFO).
+    Comm,
+    /// Receive-arbitration: completion is event-driven, *not* FIFO — never
+    /// eligible for eager assignment.
+    Arbiter,
+    /// Executed inline on the executor thread (alloc/free/horizon/epoch);
+    /// retires immediately.
+    Inline,
+}
+
+/// Copy direction relative to the device (duplex DMA engines).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Direction {
+    In,
+    Out,
+}
+
+impl Lane {
+    /// Whether completion order equals issue order on this lane.
+    fn is_fifo(self) -> bool {
+        !matches!(self, Lane::Arbiter | Lane::Inline)
+    }
+}
+
+/// Classify an instruction to its backend lane. `host_lanes` is the number
+/// of host worker threads (round-robin by instruction id).
+pub fn target_lane(kind: &InstructionKind, host_lanes: usize, id: InstructionId) -> Lane {
+    match kind {
+        InstructionKind::Alloc { .. }
+        | InstructionKind::Free { .. }
+        | InstructionKind::Horizon
+        | InstructionKind::Epoch(_) => Lane::Inline,
+        InstructionKind::Copy { src_memory, dst_memory, .. } => {
+            match (dst_memory.to_device(), src_memory.to_device()) {
+                // Into a device: that device's inbound DMA engine.
+                (Some(d), _) => Lane::DeviceCopy(d, Direction::In),
+                // Out of a device to host: outbound engine.
+                (None, Some(d)) => Lane::DeviceCopy(d, Direction::Out),
+                // Host-to-host (resize of a host backing): host thread.
+                (None, None) => Lane::Host(id.0 as usize % host_lanes.max(1)),
+            }
+        }
+        InstructionKind::DeviceKernel { device, .. } => Lane::DeviceKernel(*device),
+        InstructionKind::HostTask { .. } => Lane::Host(id.0 as usize % host_lanes.max(1)),
+        InstructionKind::Send { .. } => Lane::Comm,
+        InstructionKind::Receive { .. }
+        | InstructionKind::SplitReceive { .. }
+        | InstructionKind::AwaitReceive { .. } => Lane::Arbiter,
+    }
+}
+
+struct Waiting {
+    instr: InstructionRef,
+    lane: Lane,
+    missing: HashSet<u64>,
+}
+
+/// The state machine: feed instructions with [`OooEngine::admit`] and
+/// completion events with [`OooEngine::retire`]; both return instructions
+/// that became issuable (with their lane).
+pub struct OooEngine {
+    host_lanes: usize,
+    waiting: HashMap<u64, Waiting>,
+    /// dep id → ids of waiting instructions blocked on it.
+    waiters: HashMap<u64, Vec<u64>>,
+    /// Completed instruction ids ≥ watermark; everything below the
+    /// watermark is complete (horizon compaction).
+    completed: HashSet<u64>,
+    watermark: u64,
+    /// Lane an instruction is currently issued-but-not-retired on (the
+    /// eager-assignment lookup).
+    in_flight: HashMap<u64, Lane>,
+    /// Statistics.
+    pub issued_direct: u64,
+    pub issued_eager: u64,
+    pub retired: u64,
+    pub peak_waiting: usize,
+}
+
+impl OooEngine {
+    pub fn new(host_lanes: usize) -> OooEngine {
+        OooEngine {
+            host_lanes,
+            waiting: HashMap::new(),
+            waiters: HashMap::new(),
+            completed: HashSet::new(),
+            watermark: 0,
+            in_flight: HashMap::new(),
+            issued_direct: 0,
+            issued_eager: 0,
+            retired: 0,
+            peak_waiting: 0,
+        }
+    }
+
+    fn is_complete(&self, id: u64) -> bool {
+        id < self.watermark || self.completed.contains(&id)
+    }
+
+    /// Feed a new instruction; returns it (with lane) if issuable now.
+    pub fn admit(&mut self, instr: InstructionRef) -> Option<(InstructionRef, Lane)> {
+        let lane = target_lane(&instr.kind, self.host_lanes, instr.id);
+        let missing: HashSet<u64> = instr
+            .deps
+            .iter()
+            .map(|(d, _)| d.0)
+            .filter(|d| !self.is_complete(*d))
+            .collect();
+        if missing.is_empty() {
+            // Direct assignment.
+            self.issued_direct += 1;
+            self.in_flight.insert(instr.id.0, lane);
+            return Some((instr, lane));
+        }
+        // Eager assignment: all incomplete deps pending on the same FIFO
+        // lane we target → the backend's in-order semantics guarantee
+        // correct ordering (§4.1).
+        if lane.is_fifo()
+            && missing
+                .iter()
+                .all(|d| self.in_flight.get(d) == Some(&lane))
+        {
+            self.issued_eager += 1;
+            self.in_flight.insert(instr.id.0, lane);
+            return Some((instr, lane));
+        }
+        let id = instr.id.0;
+        for d in &missing {
+            self.waiters.entry(*d).or_default().push(id);
+        }
+        self.waiting.insert(id, Waiting { instr, lane, missing });
+        self.peak_waiting = self.peak_waiting.max(self.waiting.len());
+        None
+    }
+
+    /// Record a completion; returns instructions that became issuable.
+    pub fn retire(&mut self, id: InstructionId) -> Vec<(InstructionRef, Lane)> {
+        let id = id.0;
+        debug_assert!(!self.is_complete(id), "double retire of I{id}");
+        self.completed.insert(id);
+        self.in_flight.remove(&id);
+        self.retired += 1;
+        let mut out = Vec::new();
+        if let Some(blocked) = self.waiters.remove(&id) {
+            for bid in blocked {
+                let ready = {
+                    let Some(w) = self.waiting.get_mut(&bid) else { continue };
+                    w.missing.remove(&id);
+                    w.missing.is_empty()
+                        || (w.lane.is_fifo()
+                            && w.missing
+                                .iter()
+                                .all(|d| self.in_flight.get(d) == Some(&w.lane)))
+                };
+                if ready {
+                    let w = self.waiting.remove(&bid).unwrap();
+                    if w.missing.is_empty() {
+                        self.issued_direct += 1;
+                    } else {
+                        self.issued_eager += 1;
+                    }
+                    self.in_flight.insert(bid, w.lane);
+                    out.push((w.instr, w.lane));
+                }
+            }
+        }
+        out
+    }
+
+    /// Horizon-based compaction: when a horizon instruction retires, every
+    /// id below it is transitively complete (a horizon depends on the whole
+    /// execution front).
+    pub fn compact_below(&mut self, horizon: InstructionId) {
+        self.watermark = self.watermark.max(horizon.0);
+        self.completed.retain(|id| *id >= self.watermark);
+    }
+
+    /// Number of instructions admitted but not yet issuable.
+    pub fn waiting_len(&self) -> usize {
+        self.waiting.len()
+    }
+
+    /// Number of instructions issued but not yet retired.
+    pub fn in_flight_len(&self) -> usize {
+        self.in_flight.len()
+    }
+
+    /// True when nothing is pending anywhere.
+    pub fn is_drained(&self) -> bool {
+        self.waiting.is_empty() && self.in_flight.is_empty()
+    }
+
+    /// Human-readable dump of pending state (stall diagnostics).
+    pub fn debug_pending(&self) -> String {
+        use std::fmt::Write;
+        let mut s = String::new();
+        let mut waiting: Vec<_> = self.waiting.values().collect();
+        waiting.sort_by_key(|w| w.instr.id);
+        for w in waiting.iter().take(20) {
+            let _ = writeln!(
+                s,
+                "  waiting {} on {:?} (lane {:?})",
+                w.instr.label(),
+                w.missing.iter().collect::<Vec<_>>(),
+                w.lane
+            );
+        }
+        let mut inflight: Vec<_> = self.in_flight.iter().collect();
+        inflight.sort_by_key(|(id, _)| **id);
+        for (id, lane) in inflight.iter().take(20) {
+            let _ = writeln!(s, "  in-flight I{id} on {lane:?}");
+        }
+        s
+    }
+}
+
+/// Memory id of the lane's device, if any (diagnostics).
+pub fn lane_memory(lane: Lane) -> Option<MemoryId> {
+    match lane {
+        Lane::DeviceKernel(d) | Lane::DeviceCopy(d, _) => Some(MemoryId::device_native(d)),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dag::DepKind;
+    use crate::instruction::Instruction;
+    use std::sync::Arc;
+
+    fn kernel(id: u64, dev: u64, deps: &[u64]) -> InstructionRef {
+        Arc::new(Instruction {
+            id: InstructionId(id),
+            kind: InstructionKind::DeviceKernel {
+                device: DeviceId(dev),
+                chunk: crate::grid::GridBox::d1(0, 1),
+                bindings: vec![],
+                work_per_item: 1.0,
+                kernel: None,
+            },
+            deps: deps.iter().map(|d| (InstructionId(*d), DepKind::Dataflow)).collect(),
+            task: None,
+        })
+    }
+
+    fn horizon(id: u64, deps: &[u64]) -> InstructionRef {
+        Arc::new(Instruction {
+            id: InstructionId(id),
+            kind: InstructionKind::Horizon,
+            deps: deps.iter().map(|d| (InstructionId(*d), DepKind::Sync)).collect(),
+            task: None,
+        })
+    }
+
+    #[test]
+    fn direct_assignment_when_deps_met() {
+        let mut e = OooEngine::new(2);
+        let a = e.admit(kernel(0, 0, &[]));
+        assert!(a.is_some());
+        assert_eq!(a.unwrap().1, Lane::DeviceKernel(DeviceId(0)));
+        assert_eq!(e.issued_direct, 1);
+    }
+
+    #[test]
+    fn blocked_until_retire() {
+        let mut e = OooEngine::new(2);
+        e.admit(kernel(0, 0, &[])).unwrap();
+        // Different device → not eager-eligible.
+        assert!(e.admit(kernel(1, 1, &[0])).is_none());
+        assert_eq!(e.waiting_len(), 1);
+        let ready = e.retire(InstructionId(0));
+        assert_eq!(ready.len(), 1);
+        assert_eq!(ready[0].0.id, InstructionId(1));
+    }
+
+    #[test]
+    fn eager_assignment_same_lane() {
+        // Dep pending on device 0's kernel queue; successor targets the
+        // same queue → issued immediately (FIFO guarantees order).
+        let mut e = OooEngine::new(2);
+        e.admit(kernel(0, 0, &[])).unwrap();
+        let eager = e.admit(kernel(1, 0, &[0]));
+        assert!(eager.is_some(), "same-lane successor must issue eagerly");
+        assert_eq!(e.issued_eager, 1);
+        // Retiring in FIFO order works fine.
+        assert!(e.retire(InstructionId(0)).is_empty());
+        assert!(e.retire(InstructionId(1)).is_empty());
+        assert!(e.is_drained());
+    }
+
+    #[test]
+    fn eager_chains_extend() {
+        let mut e = OooEngine::new(2);
+        e.admit(kernel(0, 0, &[])).unwrap();
+        assert!(e.admit(kernel(1, 0, &[0])).is_some());
+        assert!(e.admit(kernel(2, 0, &[1])).is_some());
+        assert!(e.admit(kernel(3, 0, &[0, 1, 2])).is_some());
+        assert_eq!(e.issued_eager, 3);
+    }
+
+    #[test]
+    fn no_eager_across_lanes() {
+        let mut e = OooEngine::new(2);
+        e.admit(kernel(0, 0, &[])).unwrap();
+        e.admit(kernel(1, 1, &[])).unwrap();
+        // Deps on two different lanes → must wait.
+        assert!(e.admit(kernel(2, 0, &[0, 1])).is_none());
+        assert!(e.retire(InstructionId(0)).is_empty());
+        // Now the only incomplete dep (1) is on lane D1 but target is D0 →
+        // still waiting.
+        assert_eq!(e.waiting_len(), 1);
+        let ready = e.retire(InstructionId(1));
+        assert_eq!(ready.len(), 1);
+    }
+
+    #[test]
+    fn eager_becomes_possible_after_partial_retire() {
+        let mut e = OooEngine::new(2);
+        e.admit(kernel(0, 1, &[])).unwrap(); // lane D1
+        e.admit(kernel(1, 0, &[])).unwrap(); // lane D0
+        assert!(e.admit(kernel(2, 0, &[0, 1])).is_none());
+        // Retire the D1 dep: remaining incomplete dep (1) is on D0 = target
+        // lane → eager issue.
+        let ready = e.retire(InstructionId(0));
+        assert_eq!(ready.len(), 1);
+        assert_eq!(e.issued_eager, 1);
+    }
+
+    #[test]
+    fn arbiter_lane_never_eager() {
+        let mut e = OooEngine::new(2);
+        let recv = Arc::new(Instruction {
+            id: InstructionId(0),
+            kind: InstructionKind::Receive {
+                buffer: crate::util::BufferId(0),
+                region: crate::grid::Region::empty(),
+                dst_alloc: crate::util::AllocationId(1),
+                dst_box: crate::grid::GridBox::d1(0, 1),
+                transfer: crate::util::TaskId(0),
+            },
+            deps: vec![],
+            task: None,
+        });
+        e.admit(recv).unwrap();
+        let recv2 = Arc::new(Instruction {
+            id: InstructionId(1),
+            kind: InstructionKind::Receive {
+                buffer: crate::util::BufferId(0),
+                region: crate::grid::Region::empty(),
+                dst_alloc: crate::util::AllocationId(1),
+                dst_box: crate::grid::GridBox::d1(0, 1),
+                transfer: crate::util::TaskId(0),
+            },
+            deps: vec![(InstructionId(0), DepKind::Anti)],
+            task: None,
+        });
+        assert!(e.admit(recv2).is_none(), "arbiter completions are not FIFO");
+    }
+
+    #[test]
+    fn compaction_below_horizon() {
+        let mut e = OooEngine::new(2);
+        for i in 0..10 {
+            e.admit(kernel(i, 0, &[])).unwrap();
+            e.retire(InstructionId(i));
+        }
+        e.admit(horizon(10, &[9])).unwrap();
+        e.retire(InstructionId(10));
+        e.compact_below(InstructionId(10));
+        // Later instructions with deps below the watermark admit directly.
+        assert!(e.admit(kernel(11, 0, &[3, 7])).is_some());
+        assert!(e.completed.len() <= 2);
+    }
+
+    #[test]
+    fn lane_classification() {
+        use crate::instruction::InstructionKind as K;
+        let host_lanes = 4;
+        assert_eq!(
+            target_lane(&K::Horizon, host_lanes, InstructionId(0)),
+            Lane::Inline
+        );
+        let copy_in = K::Copy {
+            buffer: crate::util::BufferId(0),
+            copy_box: crate::grid::GridBox::d1(0, 1),
+            src_memory: MemoryId(1),
+            dst_memory: MemoryId(3),
+            src_alloc: crate::util::AllocationId(1),
+            src_box: crate::grid::GridBox::d1(0, 1),
+            dst_alloc: crate::util::AllocationId(2),
+            dst_box: crate::grid::GridBox::d1(0, 1),
+        };
+        assert_eq!(
+            target_lane(&copy_in, host_lanes, InstructionId(0)),
+            Lane::DeviceCopy(DeviceId(1), Direction::In)
+        );
+    }
+}

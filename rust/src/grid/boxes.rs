@@ -1,0 +1,302 @@
+//! Axis-aligned half-open boxes in index space.
+
+use super::{Point, Range};
+use std::fmt;
+
+/// A half-open axis-aligned box `[min, max)` in 3-dimensional index space.
+///
+/// Boxes are the unit of storage inside [`super::Region`]s and the geometry
+/// carried by copy-, send- and receive instructions (MPI subarray transfers
+/// and SYCL rectangular copies both operate on boxes).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct GridBox {
+    /// Inclusive lower corner.
+    pub min: Point,
+    /// Exclusive upper corner.
+    pub max: Point,
+}
+
+impl GridBox {
+    /// Construct from corners. Any degenerate axis (min >= max) yields the
+    /// canonical empty box.
+    pub fn new(min: Point, max: Point) -> GridBox {
+        if min.all_lt(max) {
+            GridBox { min, max }
+        } else {
+            GridBox::EMPTY
+        }
+    }
+
+    /// The canonical empty box.
+    pub const EMPTY: GridBox = GridBox { min: Point([0, 0, 0]), max: Point([0, 0, 0]) };
+
+    /// The box `[0, range)` anchored at the origin.
+    pub fn full(range: Range) -> GridBox {
+        GridBox::new(Point::ZERO, Point(range.0))
+    }
+
+    /// 1-dimensional box `[lo, hi) × [0,1) × [0,1)`.
+    pub fn d1(lo: u64, hi: u64) -> GridBox {
+        GridBox::new(Point::d3(lo, 0, 0), Point::d3(hi, 1, 1))
+    }
+
+    /// 2-dimensional box.
+    pub fn d2(lo: (u64, u64), hi: (u64, u64)) -> GridBox {
+        GridBox::new(Point::d3(lo.0, lo.1, 0), Point::d3(hi.0, hi.1, 1))
+    }
+
+    /// 3-dimensional box.
+    pub fn d3(lo: (u64, u64, u64), hi: (u64, u64, u64)) -> GridBox {
+        GridBox::new(Point::d3(lo.0, lo.1, lo.2), Point::d3(hi.0, hi.1, hi.2))
+    }
+
+    /// Extent along each axis.
+    pub fn range(&self) -> Range {
+        Range((self.max.saturating_sub(self.min)).0)
+    }
+
+    /// Number of elements contained.
+    pub fn area(&self) -> u64 {
+        self.range().size()
+    }
+
+    /// True if the box contains no elements.
+    pub fn is_empty(&self) -> bool {
+        !self.min.all_lt(self.max)
+    }
+
+    /// True if `p` lies inside the box.
+    pub fn contains_point(&self, p: Point) -> bool {
+        self.min.all_le(p) && p.all_lt(self.max)
+    }
+
+    /// True if `other` is fully contained in `self`. The empty box is
+    /// contained in everything.
+    pub fn contains(&self, other: &GridBox) -> bool {
+        other.is_empty() || (self.min.all_le(other.min) && other.max.all_le(self.max))
+    }
+
+    /// Intersection of two boxes (possibly empty).
+    pub fn intersection(&self, other: &GridBox) -> GridBox {
+        GridBox::new(self.min.max(other.min), self.max.min(other.max))
+    }
+
+    /// True if the boxes share at least one element.
+    pub fn intersects(&self, other: &GridBox) -> bool {
+        !self.intersection(other).is_empty()
+    }
+
+    /// Smallest box containing both inputs. Empty inputs are ignored.
+    pub fn bounding_union(&self, other: &GridBox) -> GridBox {
+        if self.is_empty() {
+            *other
+        } else if other.is_empty() {
+            *self
+        } else {
+            GridBox::new(self.min.min(other.min), self.max.max(other.max))
+        }
+    }
+
+    /// Subtract `other` from `self`, producing up to 6 disjoint boxes that
+    /// cover `self \ other`. The decomposition slabs axis-by-axis: for each
+    /// axis the parts of `self` strictly below/above `other` are emitted and
+    /// the remainder is clamped to `other`'s extent on that axis.
+    pub fn difference(&self, other: &GridBox) -> Vec<GridBox> {
+        let cut = self.intersection(other);
+        if cut.is_empty() {
+            return if self.is_empty() { vec![] } else { vec![*self] };
+        }
+        if other.contains(self) {
+            return vec![];
+        }
+        let mut out = Vec::new();
+        let mut rest = *self;
+        for d in 0..3 {
+            if rest.min[d] < cut.min[d] {
+                let mut below = rest;
+                below.max[d] = cut.min[d];
+                out.push(below);
+                rest.min[d] = cut.min[d];
+            }
+            if cut.max[d] < rest.max[d] {
+                let mut above = rest;
+                above.min[d] = cut.max[d];
+                out.push(above);
+                rest.max[d] = cut.max[d];
+            }
+        }
+        out
+    }
+
+    /// True if the two boxes can be fused into one box: they must span the
+    /// same extent on every axis except one, along which they are adjacent
+    /// or overlapping.
+    pub fn mergeable(&self, other: &GridBox) -> bool {
+        if self.is_empty() || other.is_empty() {
+            return true;
+        }
+        let mut off_axis = None;
+        for d in 0..3 {
+            if self.min[d] != other.min[d] || self.max[d] != other.max[d] {
+                if off_axis.is_some() {
+                    return false;
+                }
+                off_axis = Some(d);
+            }
+        }
+        match off_axis {
+            None => true, // identical
+            Some(d) => self.max[d] >= other.min[d] && other.max[d] >= self.min[d],
+        }
+    }
+
+    /// Fuse two [`mergeable`](GridBox::mergeable) boxes.
+    pub fn merged(&self, other: &GridBox) -> GridBox {
+        debug_assert!(self.mergeable(other));
+        self.bounding_union(other)
+    }
+
+    /// Translate the box by `offset` (component-wise add).
+    pub fn translated(&self, offset: Point) -> GridBox {
+        if self.is_empty() {
+            GridBox::EMPTY
+        } else {
+            GridBox { min: self.min + offset, max: self.max + offset }
+        }
+    }
+
+    /// Grow the box by `margin` on every side, clamped to `[0, clamp)`.
+    /// This is the geometry of a neighborhood range mapper.
+    pub fn dilated(&self, margin: Range, clamp: Range) -> GridBox {
+        if self.is_empty() {
+            return GridBox::EMPTY;
+        }
+        let mut b = *self;
+        for d in 0..3 {
+            // margin uses Range semantics: extent 1 on unused axes means 0
+            // dilation there only if the axis is degenerate in clamp space.
+            let m = margin[d];
+            b.min[d] = b.min[d].saturating_sub(m);
+            b.max[d] = (b.max[d] + m).min(clamp[d]);
+        }
+        b
+    }
+}
+
+impl fmt::Display for GridBox {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "[{} - {}]", self.min, self.max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn degenerate_constructor_is_empty() {
+        assert!(GridBox::d1(5, 5).is_empty());
+        assert!(GridBox::d1(7, 3).is_empty());
+        assert_eq!(GridBox::d1(7, 3), GridBox::EMPTY);
+    }
+
+    #[test]
+    fn area_and_range() {
+        let b = GridBox::d2((1, 2), (4, 6));
+        assert_eq!(b.range(), Range::d2(3, 4));
+        assert_eq!(b.area(), 12);
+        assert_eq!(GridBox::full(Range::d1(10)).area(), 10);
+    }
+
+    #[test]
+    fn containment() {
+        let outer = GridBox::d2((0, 0), (10, 10));
+        let inner = GridBox::d2((2, 3), (5, 7));
+        assert!(outer.contains(&inner));
+        assert!(!inner.contains(&outer));
+        assert!(outer.contains(&GridBox::EMPTY));
+        assert!(inner.contains_point(Point::d2(2, 3)));
+        assert!(!inner.contains_point(Point::d2(5, 7)));
+    }
+
+    #[test]
+    fn intersection_cases() {
+        let a = GridBox::d1(0, 10);
+        let b = GridBox::d1(5, 15);
+        assert_eq!(a.intersection(&b), GridBox::d1(5, 10));
+        assert!(a.intersects(&b));
+        // adjacent boxes do not intersect (half-open)
+        assert!(!GridBox::d1(0, 5).intersects(&GridBox::d1(5, 10)));
+    }
+
+    #[test]
+    fn difference_disjoint_and_contained() {
+        let a = GridBox::d1(0, 10);
+        assert_eq!(a.difference(&GridBox::d1(20, 30)), vec![a]);
+        assert!(a.difference(&GridBox::d1(0, 10)).is_empty());
+        assert!(a.difference(&GridBox::d1(0, 100)).is_empty());
+    }
+
+    #[test]
+    fn difference_partitions_exactly() {
+        // 2D case: remove center from a 10x10 box → 4 slabs.
+        let a = GridBox::d2((0, 0), (10, 10));
+        let hole = GridBox::d2((3, 3), (7, 7));
+        let parts = a.difference(&hole);
+        let total: u64 = parts.iter().map(|b| b.area()).sum();
+        assert_eq!(total, 100 - 16);
+        // Parts are disjoint from each other and from the hole.
+        for (i, p) in parts.iter().enumerate() {
+            assert!(!p.intersects(&hole));
+            for q in &parts[i + 1..] {
+                assert!(!p.intersects(q), "{p} intersects {q}");
+            }
+        }
+    }
+
+    #[test]
+    fn difference_3d_corner() {
+        let a = GridBox::d3((0, 0, 0), (4, 4, 4));
+        let corner = GridBox::d3((0, 0, 0), (2, 2, 2));
+        let parts = a.difference(&corner);
+        let total: u64 = parts.iter().map(|b| b.area()).sum();
+        assert_eq!(total, 64 - 8);
+    }
+
+    #[test]
+    fn mergeable_rules() {
+        // adjacent along x, same y extent
+        assert!(GridBox::d2((0, 0), (5, 4)).mergeable(&GridBox::d2((5, 0), (9, 4))));
+        // gap along x
+        assert!(!GridBox::d2((0, 0), (4, 4)).mergeable(&GridBox::d2((5, 0), (9, 4))));
+        // different y extents
+        assert!(!GridBox::d2((0, 0), (5, 4)).mergeable(&GridBox::d2((5, 0), (9, 5))));
+        // identical boxes merge
+        let b = GridBox::d1(2, 4);
+        assert!(b.mergeable(&b));
+        assert_eq!(b.merged(&b), b);
+        // merged result
+        assert_eq!(
+            GridBox::d1(0, 5).merged(&GridBox::d1(5, 9)),
+            GridBox::d1(0, 9)
+        );
+    }
+
+    #[test]
+    fn dilation_clamps() {
+        let b = GridBox::d1(0, 3);
+        let d = b.dilated(Range::d1(2), Range::d1(8));
+        assert_eq!(d, GridBox::d1(0, 5));
+        let b2 = GridBox::d1(6, 8);
+        assert_eq!(b2.dilated(Range::d1(3), Range::d1(8)), GridBox::d1(3, 8));
+    }
+
+    #[test]
+    fn translation() {
+        assert_eq!(
+            GridBox::d2((1, 1), (2, 2)).translated(Point::d2(3, 4)),
+            GridBox::d2((4, 5), (5, 6))
+        );
+        assert_eq!(GridBox::EMPTY.translated(Point::d1(5)), GridBox::EMPTY);
+    }
+}

@@ -1,0 +1,23 @@
+//! n-dimensional index-space algebra.
+//!
+//! All dependency tracking in the three graph layers happens at the
+//! granularity of *regions* of buffer index space (the paper tracks
+//! "individual buffer elements ... with the help of range mappers", §2.3).
+//! This module provides the value types for that:
+//!
+//! - [`Point`] / [`Range`] — positions and extents, canonically 3-dimensional
+//!   (lower-dimensional spaces pad trailing extents with 1, like SYCL).
+//! - [`GridBox`] — a half-open axis-aligned box `[min, max)`.
+//! - [`Region`] — a finite union of disjoint boxes, kept normalized.
+//! - [`RegionMap`] — a map from buffer space to values, used for
+//!   original-producer and coherence tracking.
+
+mod boxes;
+mod point;
+mod region;
+mod region_map;
+
+pub use boxes::GridBox;
+pub use point::{Point, Range};
+pub use region::Region;
+pub use region_map::RegionMap;

@@ -1,0 +1,210 @@
+//! Points and ranges in the canonical 3-dimensional index space.
+
+use std::fmt;
+use std::ops::{Add, Index, IndexMut, Sub};
+
+/// A position in 3-dimensional index space. Lower-dimensional spaces use
+/// trailing zero coordinates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub struct Point(pub [u64; 3]);
+
+/// An extent in 3-dimensional index space. Lower-dimensional spaces use
+/// trailing extents of 1, mirroring SYCL's `range` semantics.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Range(pub [u64; 3]);
+
+impl Point {
+    /// The origin `[0, 0, 0]`.
+    pub const ZERO: Point = Point([0, 0, 0]);
+
+    /// 1-dimensional point (trailing coordinates zero).
+    pub fn d1(x: u64) -> Point {
+        Point([x, 0, 0])
+    }
+
+    /// 2-dimensional point.
+    pub fn d2(x: u64, y: u64) -> Point {
+        Point([x, y, 0])
+    }
+
+    /// 3-dimensional point.
+    pub fn d3(x: u64, y: u64, z: u64) -> Point {
+        Point([x, y, z])
+    }
+
+    /// Component-wise minimum.
+    pub fn min(self, o: Point) -> Point {
+        Point([self.0[0].min(o.0[0]), self.0[1].min(o.0[1]), self.0[2].min(o.0[2])])
+    }
+
+    /// Component-wise maximum.
+    pub fn max(self, o: Point) -> Point {
+        Point([self.0[0].max(o.0[0]), self.0[1].max(o.0[1]), self.0[2].max(o.0[2])])
+    }
+
+    /// Component-wise saturating subtraction.
+    pub fn saturating_sub(self, o: Point) -> Point {
+        Point([
+            self.0[0].saturating_sub(o.0[0]),
+            self.0[1].saturating_sub(o.0[1]),
+            self.0[2].saturating_sub(o.0[2]),
+        ])
+    }
+
+    /// True if every coordinate of `self` is `<=` the matching coordinate.
+    pub fn all_le(self, o: Point) -> bool {
+        (0..3).all(|d| self.0[d] <= o.0[d])
+    }
+
+    /// True if every coordinate of `self` is `<` the matching coordinate.
+    pub fn all_lt(self, o: Point) -> bool {
+        (0..3).all(|d| self.0[d] < o.0[d])
+    }
+}
+
+impl Range {
+    /// The unit range `[1, 1, 1]` (a single element).
+    pub const UNIT: Range = Range([1, 1, 1]);
+
+    /// 1-dimensional range (trailing extents 1).
+    pub fn d1(x: u64) -> Range {
+        Range([x, 1, 1])
+    }
+
+    /// 2-dimensional range.
+    pub fn d2(x: u64, y: u64) -> Range {
+        Range([x, y, 1])
+    }
+
+    /// 3-dimensional range.
+    pub fn d3(x: u64, y: u64, z: u64) -> Range {
+        Range([x, y, z])
+    }
+
+    /// Total number of elements (product of extents).
+    pub fn size(self) -> u64 {
+        self.0[0] * self.0[1] * self.0[2]
+    }
+
+    /// True if any extent is zero.
+    pub fn is_empty(self) -> bool {
+        self.size() == 0
+    }
+
+    /// The effective dimensionality: index of the last extent `> 1`, plus 1.
+    /// A unit range reports 1.
+    pub fn dims(self) -> usize {
+        if self.0[2] > 1 {
+            3
+        } else if self.0[1] > 1 {
+            2
+        } else {
+            1
+        }
+    }
+}
+
+impl From<Range> for Point {
+    fn from(r: Range) -> Point {
+        Point(r.0)
+    }
+}
+
+impl From<Point> for Range {
+    fn from(p: Point) -> Range {
+        Range(p.0)
+    }
+}
+
+impl Index<usize> for Point {
+    type Output = u64;
+    fn index(&self, d: usize) -> &u64 {
+        &self.0[d]
+    }
+}
+
+impl IndexMut<usize> for Point {
+    fn index_mut(&mut self, d: usize) -> &mut u64 {
+        &mut self.0[d]
+    }
+}
+
+impl Index<usize> for Range {
+    type Output = u64;
+    fn index(&self, d: usize) -> &u64 {
+        &self.0[d]
+    }
+}
+
+impl IndexMut<usize> for Range {
+    fn index_mut(&mut self, d: usize) -> &mut u64 {
+        &mut self.0[d]
+    }
+}
+
+impl Add for Point {
+    type Output = Point;
+    fn add(self, o: Point) -> Point {
+        Point([self.0[0] + o.0[0], self.0[1] + o.0[1], self.0[2] + o.0[2]])
+    }
+}
+
+impl Sub for Point {
+    type Output = Point;
+    fn sub(self, o: Point) -> Point {
+        Point([self.0[0] - o.0[0], self.0[1] - o.0[1], self.0[2] - o.0[2]])
+    }
+}
+
+impl fmt::Display for Point {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "[{}, {}, {}]", self.0[0], self.0[1], self.0[2])
+    }
+}
+
+impl fmt::Display for Range {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{{{}, {}, {}}}", self.0[0], self.0[1], self.0[2])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constructors_pad_canonically() {
+        assert_eq!(Point::d1(5), Point([5, 0, 0]));
+        assert_eq!(Point::d2(5, 6), Point([5, 6, 0]));
+        assert_eq!(Range::d1(5), Range([5, 1, 1]));
+        assert_eq!(Range::d2(5, 6), Range([5, 6, 1]));
+    }
+
+    #[test]
+    fn range_size_and_dims() {
+        assert_eq!(Range::d1(10).size(), 10);
+        assert_eq!(Range::d3(2, 3, 4).size(), 24);
+        assert_eq!(Range::d1(10).dims(), 1);
+        assert_eq!(Range::d2(10, 2).dims(), 2);
+        assert_eq!(Range::d3(1, 1, 2).dims(), 3);
+        assert_eq!(Range::UNIT.dims(), 1);
+        assert!(Range::d2(0, 5).is_empty());
+    }
+
+    #[test]
+    fn point_lattice_ops() {
+        let a = Point::d3(1, 5, 2);
+        let b = Point::d3(3, 2, 2);
+        assert_eq!(a.min(b), Point::d3(1, 2, 2));
+        assert_eq!(a.max(b), Point::d3(3, 5, 2));
+        assert!(Point::d3(1, 2, 2).all_le(a.max(b)));
+        assert!(!a.all_lt(b));
+    }
+
+    #[test]
+    fn point_arithmetic() {
+        assert_eq!(Point::d2(1, 2) + Point::d2(3, 4), Point::d2(4, 6));
+        assert_eq!(Point::d2(3, 4) - Point::d2(1, 2), Point::d2(2, 2));
+        assert_eq!(Point::d1(1).saturating_sub(Point::d1(5)), Point::ZERO);
+    }
+}

@@ -1,0 +1,335 @@
+//! Regions: finite unions of disjoint boxes.
+
+use super::{GridBox, Range};
+use std::fmt;
+
+/// A region of index space, stored as a normalized set of pairwise-disjoint
+/// boxes. This is the geometry type behind every access, dependency and
+/// transfer in the runtime (Celerity's `GridRegion` equivalent).
+///
+/// Normalization keeps boxes disjoint and greedily fuses mergeable
+/// neighbours, so that e.g. the union of the two halves of a buffer is
+/// represented as a single box again.
+#[derive(Debug, Clone, Default)]
+pub struct Region {
+    boxes: Vec<GridBox>,
+}
+
+/// Equality is *semantic* (same set of elements), not structural: greedy
+/// coalescing does not yield a canonical box decomposition, so two equal
+/// regions may be stored as different box sets.
+impl PartialEq for Region {
+    fn eq(&self, other: &Region) -> bool {
+        self.area() == other.area() && self.contains(other)
+    }
+}
+
+impl Eq for Region {}
+
+impl Region {
+    /// The empty region.
+    pub fn empty() -> Region {
+        Region { boxes: Vec::new() }
+    }
+
+    /// Region covering `[0, range)`.
+    pub fn full(range: Range) -> Region {
+        Region::from(GridBox::full(range))
+    }
+
+    /// Construct from an arbitrary collection of (possibly overlapping)
+    /// boxes; the result is normalized.
+    pub fn from_boxes(boxes: impl IntoIterator<Item = GridBox>) -> Region {
+        let mut r = Region::empty();
+        for b in boxes {
+            r.union_box_in_place(&b);
+        }
+        r.coalesce();
+        r
+    }
+
+    /// The disjoint boxes making up this region.
+    pub fn boxes(&self) -> &[GridBox] {
+        &self.boxes
+    }
+
+    /// True if the region contains no elements.
+    pub fn is_empty(&self) -> bool {
+        self.boxes.is_empty()
+    }
+
+    /// Number of elements covered.
+    pub fn area(&self) -> u64 {
+        self.boxes.iter().map(|b| b.area()).sum()
+    }
+
+    /// Smallest single box covering the whole region.
+    pub fn bounding_box(&self) -> GridBox {
+        self.boxes
+            .iter()
+            .fold(GridBox::EMPTY, |acc, b| acc.bounding_union(b))
+    }
+
+    /// True if `b` is fully covered by this region.
+    pub fn contains_box(&self, b: &GridBox) -> bool {
+        if b.is_empty() {
+            return true;
+        }
+        // Subtract all our boxes from b; covered iff nothing remains.
+        let mut rest = vec![*b];
+        for mine in &self.boxes {
+            let mut next = Vec::new();
+            for r in rest {
+                next.extend(r.difference(mine));
+            }
+            rest = next;
+            if rest.is_empty() {
+                return true;
+            }
+        }
+        rest.is_empty()
+    }
+
+    /// True if `other` is fully covered by this region.
+    pub fn contains(&self, other: &Region) -> bool {
+        other.boxes.iter().all(|b| self.contains_box(b))
+    }
+
+    /// True if the regions share at least one element.
+    pub fn intersects(&self, other: &Region) -> bool {
+        self.boxes
+            .iter()
+            .any(|a| other.boxes.iter().any(|b| a.intersects(b)))
+    }
+
+    /// Set union.
+    pub fn union(&self, other: &Region) -> Region {
+        let mut out = self.clone();
+        for b in &other.boxes {
+            out.union_box_in_place(b);
+        }
+        out.coalesce();
+        out
+    }
+
+    /// Set intersection.
+    pub fn intersection(&self, other: &Region) -> Region {
+        let mut boxes = Vec::new();
+        for a in &self.boxes {
+            for b in &other.boxes {
+                let c = a.intersection(b);
+                if !c.is_empty() {
+                    boxes.push(c);
+                }
+            }
+        }
+        // Our boxes are disjoint and other's boxes are disjoint, so the
+        // pairwise intersections are disjoint already.
+        let mut r = Region { boxes };
+        r.coalesce();
+        r
+    }
+
+    /// Intersection with a single box.
+    pub fn intersection_box(&self, b: &GridBox) -> Region {
+        let mut boxes = Vec::new();
+        for a in &self.boxes {
+            let c = a.intersection(b);
+            if !c.is_empty() {
+                boxes.push(c);
+            }
+        }
+        let mut r = Region { boxes };
+        r.coalesce();
+        r
+    }
+
+    /// Set difference `self \ other`.
+    pub fn difference(&self, other: &Region) -> Region {
+        let mut rest = self.boxes.clone();
+        for b in &other.boxes {
+            let mut next = Vec::new();
+            for r in rest {
+                next.extend(r.difference(b));
+            }
+            rest = next;
+            if rest.is_empty() {
+                break;
+            }
+        }
+        let mut r = Region { boxes: rest };
+        r.coalesce();
+        r
+    }
+
+    fn union_box_in_place(&mut self, b: &GridBox) {
+        if b.is_empty() {
+            return;
+        }
+        // Keep boxes disjoint: insert only the parts of b not yet covered.
+        let mut parts = vec![*b];
+        for mine in &self.boxes {
+            let mut next = Vec::new();
+            for p in parts {
+                next.extend(p.difference(mine));
+            }
+            parts = next;
+            if parts.is_empty() {
+                return;
+            }
+        }
+        self.boxes.extend(parts);
+    }
+
+    /// Greedily fuse mergeable boxes until a fixed point, then sort for a
+    /// canonical representation (makes `==` meaningful across build orders).
+    fn coalesce(&mut self) {
+        let mut changed = true;
+        while changed {
+            changed = false;
+            'outer: for i in 0..self.boxes.len() {
+                for j in (i + 1)..self.boxes.len() {
+                    if self.boxes[i].mergeable(&self.boxes[j]) {
+                        let m = self.boxes[i].merged(&self.boxes[j]);
+                        self.boxes.swap_remove(j);
+                        self.boxes[i] = m;
+                        changed = true;
+                        break 'outer;
+                    }
+                }
+            }
+        }
+        self.boxes.sort_by_key(|b| (b.min.0, b.max.0));
+    }
+}
+
+impl From<GridBox> for Region {
+    fn from(b: GridBox) -> Region {
+        if b.is_empty() {
+            Region::empty()
+        } else {
+            Region { boxes: vec![b] }
+        }
+    }
+}
+
+impl fmt::Display for Region {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{{")?;
+        for (i, b) in self.boxes.iter().enumerate() {
+            if i > 0 {
+                write!(f, ", ")?;
+            }
+            write!(f, "{b}")?;
+        }
+        write!(f, "}}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::XorShift64;
+
+    #[test]
+    fn union_of_halves_is_full() {
+        let a = Region::from(GridBox::d1(0, 512));
+        let b = Region::from(GridBox::d1(512, 1024));
+        let u = a.union(&b);
+        assert_eq!(u, Region::full(Range::d1(1024)));
+        assert_eq!(u.boxes().len(), 1, "halves should coalesce into one box");
+    }
+
+    #[test]
+    fn union_is_idempotent_and_commutative() {
+        let a = Region::from_boxes([GridBox::d2((0, 0), (4, 4)), GridBox::d2((6, 0), (8, 4))]);
+        let b = Region::from(GridBox::d2((2, 2), (7, 6)));
+        assert_eq!(a.union(&b), b.union(&a));
+        assert_eq!(a.union(&a), a);
+        assert_eq!(a.union(&b).area(), 4 * 4 + 2 * 4 + 5 * 4 - (2 * 2 + 1 * 2));
+    }
+
+    #[test]
+    fn intersection_and_difference_partition() {
+        let a = Region::from(GridBox::d2((0, 0), (10, 10)));
+        let b = Region::from(GridBox::d2((5, 5), (15, 15)));
+        let i = a.intersection(&b);
+        let d = a.difference(&b);
+        assert_eq!(i.area() + d.area(), a.area());
+        assert!(!i.intersects(&d));
+        assert_eq!(i, Region::from(GridBox::d2((5, 5), (10, 10))));
+    }
+
+    #[test]
+    fn contains_spanning_multiple_boxes() {
+        // Region of two adjacent-but-unmergeable boxes still covers a box
+        // spanning both.
+        let r = Region::from_boxes([GridBox::d2((0, 0), (5, 10)), GridBox::d2((5, 2), (9, 8))]);
+        assert!(r.contains_box(&GridBox::d2((3, 3), (7, 7))));
+        assert!(!r.contains_box(&GridBox::d2((3, 0), (7, 7))));
+    }
+
+    #[test]
+    fn empty_behaviour() {
+        let e = Region::empty();
+        let r = Region::full(Range::d1(4));
+        assert!(e.is_empty());
+        assert_eq!(e.union(&r), r);
+        assert_eq!(r.intersection(&e), e);
+        assert_eq!(r.difference(&e), r);
+        assert_eq!(e.difference(&r), e);
+        assert!(r.contains(&e));
+        assert!(!e.contains(&r));
+        assert!(!e.intersects(&r));
+    }
+
+    #[test]
+    fn bounding_box_covers() {
+        let r = Region::from_boxes([GridBox::d1(0, 2), GridBox::d1(8, 10)]);
+        assert_eq!(r.bounding_box(), GridBox::d1(0, 10));
+        assert_eq!(r.area(), 4);
+    }
+
+    /// Property test: region algebra obeys set-algebra laws on random inputs.
+    #[test]
+    fn property_set_algebra_laws() {
+        let mut rng = XorShift64::new(0xC0FFEE);
+        for _ in 0..200 {
+            let rand_region = |rng: &mut XorShift64| {
+                let n = rng.next_range(1, 4);
+                Region::from_boxes((0..n).map(|_| {
+                    let x0 = rng.next_below(16);
+                    let y0 = rng.next_below(16);
+                    let x1 = x0 + rng.next_range(1, 8);
+                    let y1 = y0 + rng.next_range(1, 8);
+                    GridBox::d2((x0, y0), (x1, y1))
+                }))
+            };
+            let a = rand_region(&mut rng);
+            let b = rand_region(&mut rng);
+
+            // Inclusion–exclusion on areas.
+            assert_eq!(
+                a.union(&b).area() + a.intersection(&b).area(),
+                a.area() + b.area()
+            );
+            // A \ B and A ∩ B partition A.
+            assert_eq!(a.difference(&b).area() + a.intersection(&b).area(), a.area());
+            // (A ∪ B) ⊇ A, B; (A ∩ B) ⊆ A, B.
+            assert!(a.union(&b).contains(&a));
+            assert!(a.union(&b).contains(&b));
+            assert!(a.contains(&a.intersection(&b)));
+            // Difference is disjoint from subtrahend.
+            assert!(!a.difference(&b).intersects(&b));
+            // Normalized representation: boxes pairwise disjoint.
+            let u = a.union(&b);
+            for (i, x) in u.boxes().iter().enumerate() {
+                for y in &u.boxes()[i + 1..] {
+                    assert!(!x.intersects(y));
+                }
+            }
+            // Canonical equality: same region built in both orders.
+            assert_eq!(a.union(&b), b.union(&a));
+        }
+    }
+}

@@ -1,0 +1,255 @@
+//! Map from index-space regions to values.
+//!
+//! `RegionMap<T>` assigns a value of `T` to every element of a fixed extent.
+//! It is the workhorse behind all runtime bookkeeping: last-writer tracking
+//! in the TDAG, original-producer/ownership tracking in the CDAG, and
+//! up-to-date-memories coherence tracking in the IDAG. Updates overwrite a
+//! region with a new value; queries return the covering `(box, value)`
+//! fragments of a region.
+
+use super::{GridBox, Range, Region};
+
+/// A total map from `[0, extent)` to `T`, stored as disjoint `(box, value)`
+/// entries. Adjacent entries holding equal values are coalesced.
+#[derive(Debug, Clone)]
+pub struct RegionMap<T> {
+    extent: GridBox,
+    entries: Vec<(GridBox, T)>,
+}
+
+impl<T: Clone + PartialEq> RegionMap<T> {
+    /// Create a map over `[0, extent)`, initially mapping everything to
+    /// `default`.
+    pub fn new(extent: Range, default: T) -> Self {
+        let full = GridBox::full(extent);
+        RegionMap {
+            extent: full,
+            entries: if full.is_empty() { vec![] } else { vec![(full, default)] },
+        }
+    }
+
+    /// The extent this map covers.
+    pub fn extent(&self) -> GridBox {
+        self.extent
+    }
+
+    /// Number of internal `(box, value)` fragments (diagnostics; the horizon
+    /// mechanism exists to keep this bounded).
+    pub fn fragments(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Overwrite `region ∩ extent` with `value`.
+    pub fn update_region(&mut self, region: &Region, value: T) {
+        for b in region.boxes() {
+            self.update_box(b, value.clone());
+        }
+    }
+
+    /// Overwrite `b ∩ extent` with `value`.
+    pub fn update_box(&mut self, b: &GridBox, value: T) {
+        let b = b.intersection(&self.extent);
+        if b.is_empty() {
+            return;
+        }
+        let mut next = Vec::with_capacity(self.entries.len() + 1);
+        for (eb, ev) in self.entries.drain(..) {
+            if eb.intersects(&b) {
+                for rest in eb.difference(&b) {
+                    next.push((rest, ev.clone()));
+                }
+            } else {
+                next.push((eb, ev));
+            }
+        }
+        next.push((b, value));
+        self.entries = next;
+        self.coalesce();
+    }
+
+    /// Apply `f` to the value over `region ∩ extent`, splitting fragments as
+    /// needed. Used e.g. to add a memory id to coherence sets.
+    pub fn apply_to_region(&mut self, region: &Region, f: impl Fn(&T) -> T) {
+        let mut next: Vec<(GridBox, T)> = Vec::with_capacity(self.entries.len());
+        for (eb, ev) in self.entries.drain(..) {
+            let inside = region.intersection_box(&eb);
+            if inside.is_empty() {
+                next.push((eb, ev));
+                continue;
+            }
+            // Fragments inside the region get the new value...
+            for ib in inside.boxes() {
+                next.push((*ib, f(&ev)));
+            }
+            // ...fragments outside keep the old one.
+            let outside = Region::from(eb).difference(&inside);
+            for ob in outside.boxes() {
+                next.push((*ob, ev.clone()));
+            }
+        }
+        self.entries = next;
+        self.coalesce();
+    }
+
+    /// All `(box, value)` fragments covering `region ∩ extent`.
+    pub fn query_region(&self, region: &Region) -> Vec<(GridBox, T)> {
+        let mut out = Vec::new();
+        for (eb, ev) in &self.entries {
+            let inside = region.intersection_box(eb);
+            for ib in inside.boxes() {
+                out.push((*ib, ev.clone()));
+            }
+        }
+        out
+    }
+
+    /// All `(box, value)` fragments covering `b ∩ extent`.
+    pub fn query_box(&self, b: &GridBox) -> Vec<(GridBox, T)> {
+        let mut out = Vec::new();
+        for (eb, ev) in &self.entries {
+            let c = eb.intersection(b);
+            if !c.is_empty() {
+                out.push((c, ev.clone()));
+            }
+        }
+        out
+    }
+
+    /// The value at a single point, if inside the extent.
+    pub fn at(&self, p: super::Point) -> Option<&T> {
+        self.entries
+            .iter()
+            .find(|(b, _)| b.contains_point(p))
+            .map(|(_, v)| v)
+    }
+
+    /// The region over which `pred` holds.
+    pub fn region_where(&self, pred: impl Fn(&T) -> bool) -> Region {
+        Region::from_boxes(
+            self.entries
+                .iter()
+                .filter(|(_, v)| pred(v))
+                .map(|(b, _)| *b),
+        )
+    }
+
+    /// Iterate over all fragments.
+    pub fn iter(&self) -> impl Iterator<Item = &(GridBox, T)> {
+        self.entries.iter()
+    }
+
+    /// Fuse mergeable fragments holding equal values.
+    fn coalesce(&mut self) {
+        let mut changed = true;
+        while changed {
+            changed = false;
+            'outer: for i in 0..self.entries.len() {
+                for j in (i + 1)..self.entries.len() {
+                    if self.entries[i].1 == self.entries[j].1
+                        && self.entries[i].0.mergeable(&self.entries[j].0)
+                    {
+                        let m = self.entries[i].0.merged(&self.entries[j].0);
+                        self.entries.swap_remove(j);
+                        self.entries[i].0 = m;
+                        changed = true;
+                        break 'outer;
+                    }
+                }
+            }
+        }
+        self.entries.sort_by_key(|(b, _)| (b.min.0, b.max.0));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::grid::Point;
+
+    #[test]
+    fn fresh_map_is_single_fragment() {
+        let m = RegionMap::new(Range::d1(100), 0u32);
+        assert_eq!(m.fragments(), 1);
+        assert_eq!(m.at(Point::d1(50)), Some(&0));
+        assert_eq!(m.at(Point::d1(100)), None);
+    }
+
+    #[test]
+    fn update_splits_and_queries_fragments() {
+        let mut m = RegionMap::new(Range::d1(100), 0u32);
+        m.update_box(&GridBox::d1(20, 40), 1);
+        assert_eq!(m.fragments(), 3);
+        assert_eq!(m.at(Point::d1(10)), Some(&0));
+        assert_eq!(m.at(Point::d1(30)), Some(&1));
+        assert_eq!(m.at(Point::d1(50)), Some(&0));
+
+        let q = m.query_box(&GridBox::d1(30, 60));
+        let total: u64 = q.iter().map(|(b, _)| b.area()).sum();
+        assert_eq!(total, 30);
+        assert!(q.contains(&(GridBox::d1(30, 40), 1)));
+        assert!(q.contains(&(GridBox::d1(40, 60), 0)));
+    }
+
+    #[test]
+    fn equal_values_coalesce_back() {
+        let mut m = RegionMap::new(Range::d1(100), 0u32);
+        m.update_box(&GridBox::d1(20, 40), 1);
+        m.update_box(&GridBox::d1(20, 40), 0);
+        assert_eq!(m.fragments(), 1);
+    }
+
+    #[test]
+    fn update_clamps_to_extent() {
+        let mut m = RegionMap::new(Range::d1(10), 0u32);
+        m.update_box(&GridBox::d1(5, 100), 7);
+        assert_eq!(m.at(Point::d1(9)), Some(&7));
+        let covered: u64 = m.iter().map(|(b, _)| b.area()).sum();
+        assert_eq!(covered, 10, "map must stay total over its extent");
+    }
+
+    #[test]
+    fn apply_to_region_modifies_only_inside() {
+        let mut m = RegionMap::new(Range::d1(10), vec![0u64]);
+        m.apply_to_region(&Region::from(GridBox::d1(3, 7)), |v| {
+            let mut v = v.clone();
+            v.push(1);
+            v
+        });
+        assert_eq!(m.at(Point::d1(2)), Some(&vec![0]));
+        assert_eq!(m.at(Point::d1(5)), Some(&vec![0, 1]));
+        assert_eq!(m.at(Point::d1(8)), Some(&vec![0]));
+    }
+
+    #[test]
+    fn region_where_inverts_updates() {
+        let mut m = RegionMap::new(Range::d2(8, 8), false);
+        let r = Region::from_boxes([GridBox::d2((0, 0), (4, 4)), GridBox::d2((4, 4), (8, 8))]);
+        m.update_region(&r, true);
+        assert_eq!(m.region_where(|v| *v), r);
+        assert_eq!(m.region_where(|v| !*v).area(), 64 - 32);
+    }
+
+    #[test]
+    fn map_remains_total_partition_under_random_updates() {
+        use crate::util::XorShift64;
+        let mut rng = XorShift64::new(77);
+        let mut m = RegionMap::new(Range::d2(32, 32), 0u64);
+        for step in 0..200 {
+            let x0 = rng.next_below(32);
+            let y0 = rng.next_below(32);
+            let x1 = x0 + rng.next_range(1, 16);
+            let y1 = y0 + rng.next_range(1, 16);
+            m.update_box(&GridBox::d2((x0, y0), (x1, y1)), step);
+            // Total area invariant.
+            let covered: u64 = m.iter().map(|(b, _)| b.area()).sum();
+            assert_eq!(covered, 32 * 32);
+            // Disjointness invariant.
+            let frags: Vec<_> = m.iter().map(|(b, _)| *b).collect();
+            for (i, a) in frags.iter().enumerate() {
+                for b in &frags[i + 1..] {
+                    assert!(!a.intersects(b));
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,1453 @@
+//! IDAG generation from the command stream (§3).
+//!
+//! The generator maintains, per buffer:
+//!
+//! - the set of **backing allocations** per memory (§3.2) — multiple
+//!   non-overlapping allocations may coexist; accessors require a single
+//!   contiguous backing, which may force *resize* chains of
+//!   `alloc`/`copy`/`free` instructions (Fig 3);
+//! - **coherence** tracking (§3.3): which memories hold the newest version
+//!   of every buffer element, and per memory the *local original producer*
+//!   instruction of those bytes — the source of producer-split copies;
+//! - reader sets per memory for anti-dependencies.
+//!
+//! Memory ids follow §3.2: `M0` user host memory (host-initialized buffer
+//! contents live here), `M1` DMA-capable pinned host memory (staging,
+//! send/receive targets, host tasks), `M2..` device-native memories.
+
+use super::memory::{Backing, BackingSet, MemMask};
+use super::{AccessBinding, Instruction, InstructionKind, InstructionRef};
+use crate::buffer::BufferPool;
+use crate::command::{split_box, Command, CommandKind, SplitHint};
+use crate::dag::{Dag, Dep, DepKind};
+use crate::grid::{GridBox, Region, RegionMap};
+use crate::task::{EpochAction, TaskKind, TaskRef};
+use crate::util::{
+    AllocationId, BufferId, DeviceId, InstructionId, MemoryId, MessageId, NodeId, TaskId,
+};
+use std::collections::HashMap;
+
+/// Static configuration of one node's IDAG generator.
+#[derive(Debug, Clone)]
+pub struct IdagConfig {
+    pub node: NodeId,
+    pub num_nodes: u64,
+    pub num_devices: u64,
+    /// Node-level split of task index spaces (must match CDAG generation).
+    pub node_hint: SplitHint,
+    /// Device-level split of command chunks (§3.1, second application).
+    pub device_hint: SplitHint,
+    /// Whether the devices support direct device-to-device copies; when
+    /// false, inter-device coherence stages through pinned host memory
+    /// (§3.3, consumer-GPU case).
+    pub d2d: bool,
+}
+
+impl Default for IdagConfig {
+    fn default() -> Self {
+        IdagConfig {
+            node: NodeId(0),
+            num_nodes: 1,
+            num_devices: 1,
+            node_hint: SplitHint::D1,
+            device_hint: SplitHint::D1,
+            d2d: true,
+        }
+    }
+}
+
+/// Deterministic allocation id of the user-memory (M0) backing of a
+/// host-initialized buffer. Reserved id space disjoint from sequentially
+/// assigned runtime allocations.
+pub fn user_alloc_id(buffer: BufferId) -> AllocationId {
+    AllocationId((1u64 << 62) | buffer.0)
+}
+
+/// A pilot message (§3.4): announces to the receiver which buffer box an
+/// upcoming `send` with `msg` id will carry. Transmitted eagerly, ingested
+/// by the peer's receive-arbitration state machine (§4.2).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Pilot {
+    pub from: NodeId,
+    pub to: NodeId,
+    pub msg: MessageId,
+    pub buffer: BufferId,
+    pub send_box: GridBox,
+    /// The task whose data dependency this transfer satisfies. Disambiguates
+    /// transfers of the same buffer region across iterations during receive
+    /// arbitration (Celerity's transfer id).
+    pub transfer: TaskId,
+}
+
+/// Per-(buffer, memory) tracking state.
+struct MemState {
+    /// Local original producer of each element's bytes *in this memory*.
+    last_writer: RegionMap<Option<InstructionId>>,
+    /// Instructions reading each element since its last local write.
+    readers_since: RegionMap<Vec<InstructionId>>,
+    /// Backing allocations.
+    backings: BackingSet,
+}
+
+/// Per-buffer tracking state.
+struct BufState {
+    range: crate::grid::Range,
+    elem_size: usize,
+    name: String,
+    /// Which memories hold the newest version of each element.
+    coherent: RegionMap<MemMask>,
+    per_mem: Vec<MemState>,
+}
+
+/// Generates the instruction graph from this node's command stream.
+pub struct IdagGenerator {
+    cfg: IdagConfig,
+    buffers: BufferPool,
+    states: HashMap<BufferId, BufState>,
+    dag: Dag<InstructionRef>,
+    outbox: Vec<InstructionRef>,
+    pilots: Vec<Pilot>,
+    /// Every instruction that has touched an allocation (dependencies of the
+    /// eventual `free`); bounded by horizon substitution.
+    alloc_users: HashMap<AllocationId, Vec<InstructionId>>,
+    /// Lookahead-announced future requirements per (buffer, memory):
+    /// bounding box of everything observed in the scheduler queue (§4.3).
+    announced: HashMap<(BufferId, MemoryId), GridBox>,
+    next_alloc: u64,
+    next_msg: u64,
+    current_horizon: Option<InstructionId>,
+    last_epoch: Option<InstructionId>,
+    /// Statistics: total alloc instructions emitted (resize metric, §4.3).
+    pub allocs_emitted: u64,
+    /// Statistics: total bytes requested by alloc instructions.
+    pub bytes_allocated: u64,
+    /// Statistics: resize chains emitted (alloc that replaced live backings).
+    pub resizes_emitted: u64,
+}
+
+impl IdagGenerator {
+    pub fn new(cfg: IdagConfig, buffers: BufferPool) -> Self {
+        assert!(cfg.num_devices >= 1 && cfg.num_devices <= 30);
+        IdagGenerator {
+            cfg,
+            buffers,
+            states: HashMap::new(),
+            dag: Dag::new(),
+            outbox: Vec::new(),
+            pilots: Vec::new(),
+            alloc_users: HashMap::new(),
+            announced: HashMap::new(),
+            next_alloc: 1,
+            next_msg: 1,
+            current_horizon: None,
+            last_epoch: None,
+            allocs_emitted: 0,
+            bytes_allocated: 0,
+            resizes_emitted: 0,
+        }
+    }
+
+    pub fn config(&self) -> &IdagConfig {
+        &self.cfg
+    }
+
+    /// Update the buffer-pool snapshot (streaming buffer creation).
+    pub fn notify_buffers(&mut self, pool: BufferPool) {
+        self.buffers = pool;
+    }
+
+    /// Drain instructions generated since the last call.
+    pub fn take_new_instructions(&mut self) -> Vec<InstructionRef> {
+        std::mem::take(&mut self.outbox)
+    }
+
+    /// Drain pilot messages generated since the last call.
+    pub fn take_pilots(&mut self) -> Vec<Pilot> {
+        std::mem::take(&mut self.pilots)
+    }
+
+    pub fn dag(&self) -> &Dag<InstructionRef> {
+        &self.dag
+    }
+
+    /// Render the IDAG as Graphviz dot.
+    pub fn to_dot(&self) -> String {
+        self.dag.to_dot(&format!("idag_{}", self.cfg.node), |i| i.label())
+    }
+
+    // ──────────────────────────────────────────────────────────────────────
+    // Lookahead support (§4.3)
+    // ──────────────────────────────────────────────────────────────────────
+
+    /// The (buffer, memory, contiguous box) requirements compiling `cmd`
+    /// would impose. Used by the scheduler to detect allocating commands
+    /// and to announce merged requirements; "recognizing this condition is
+    /// inexpensive compared to generation of the actual instruction graph".
+    pub fn requirements(&self, cmd: &Command) -> Vec<(BufferId, MemoryId, GridBox)> {
+        let mut out = Vec::new();
+        match &cmd.kind {
+            CommandKind::Execute { chunk } => {
+                let Some(range) = cmd.task.kind.execution_range() else {
+                    return out;
+                };
+                let on_host = matches!(cmd.task.kind, TaskKind::HostTask { .. });
+                let chunks = if on_host {
+                    vec![(MemoryId::HOST, *chunk)]
+                } else {
+                    split_box(chunk, self.cfg.num_devices, self.cfg.device_hint)
+                        .into_iter()
+                        .enumerate()
+                        .map(|(d, c)| (MemoryId::device_native(DeviceId(d as u64)), c))
+                        .collect()
+                };
+                for a in cmd.task.kind.accesses() {
+                    let Some(info) = self.buffers.try_get(a.buffer) else { continue };
+                    for (mem, c) in &chunks {
+                        let bbox = a.mapper.apply(c, range, info.range).bounding_box();
+                        if !bbox.is_empty() {
+                            out.push((a.buffer, *mem, bbox));
+                        }
+                    }
+                }
+            }
+            CommandKind::Push { buffer, region, .. } => {
+                for b in region.boxes() {
+                    out.push((*buffer, MemoryId::HOST, *b));
+                }
+            }
+            CommandKind::AwaitPush { buffer, region } => {
+                out.push((*buffer, MemoryId::HOST, region.bounding_box()));
+            }
+            _ => {}
+        }
+        out
+    }
+
+    /// Whether compiling `cmd` right now would emit any `alloc` instruction
+    /// (the *allocating command* predicate driving lookahead, §4.3).
+    pub fn would_allocate(&self, cmd: &Command) -> bool {
+        self.requirements(cmd).into_iter().any(|(buffer, mem, bbox)| {
+            match self.states.get(&buffer) {
+                Some(st) => st.per_mem[mem.0 as usize].backings.needs_alloc(&bbox),
+                None => true,
+            }
+        })
+    }
+
+    /// Merge future requirements observed in the scheduler queue; the next
+    /// `alloc` for each (buffer, memory) is extended to cover them (§4.3).
+    pub fn announce(&mut self, reqs: &[(BufferId, MemoryId, GridBox)]) {
+        for (buffer, mem, bbox) in reqs {
+            let e = self
+                .announced
+                .entry((*buffer, *mem))
+                .or_insert(GridBox::EMPTY);
+            *e = e.bounding_union(bbox);
+        }
+    }
+
+    // ──────────────────────────────────────────────────────────────────────
+    // Command compilation
+    // ──────────────────────────────────────────────────────────────────────
+
+    /// Compile one command into instructions (appended to the outbox).
+    pub fn compile(&mut self, cmd: &Command) {
+        match cmd.kind.clone() {
+            CommandKind::Execute { chunk } => self.compile_execute(cmd, chunk),
+            CommandKind::Push { buffer, region, target } => {
+                self.compile_push(cmd, buffer, region, target)
+            }
+            CommandKind::AwaitPush { buffer, region } => {
+                self.compile_await_push(cmd, buffer, region)
+            }
+            CommandKind::Horizon => {
+                let id = self.push_front_instruction(InstructionKind::Horizon, Some(&cmd.task));
+                if let Some(prev) = self.current_horizon.take() {
+                    self.apply_boundary(prev);
+                }
+                self.current_horizon = Some(id);
+            }
+            CommandKind::Epoch(action) => {
+                if action == EpochAction::Shutdown {
+                    self.free_all_backings();
+                }
+                let id =
+                    self.push_front_instruction(InstructionKind::Epoch(action), Some(&cmd.task));
+                self.apply_boundary(id);
+                self.current_horizon = None;
+                self.last_epoch = Some(id);
+            }
+        }
+    }
+
+    fn compile_execute(&mut self, cmd: &Command, chunk: GridBox) {
+        let task = cmd.task.clone();
+        let Some(range) = task.kind.execution_range() else { return };
+        let (on_host, accesses, work_per_item, kernel) = match &task.kind {
+            TaskKind::DeviceCompute { accesses, work_per_item, kernel, .. } => {
+                (false, accesses.clone(), *work_per_item, kernel.clone())
+            }
+            TaskKind::HostTask { accesses, work_per_item, .. } => {
+                (true, accesses.clone(), *work_per_item, None)
+            }
+            _ => return,
+        };
+
+        // Hierarchical work assignment (§3.1): second split across devices.
+        let dchunks: Vec<(MemoryId, GridBox)> = if on_host {
+            vec![(MemoryId::HOST, chunk)]
+        } else {
+            split_box(&chunk, self.cfg.num_devices, self.cfg.device_hint)
+                .into_iter()
+                .enumerate()
+                .map(|(d, c)| (MemoryId::device_native(DeviceId(d as u64)), c))
+                .collect()
+        };
+
+        for (mem, dchunk) in dchunks {
+            if dchunk.is_empty() {
+                continue;
+            }
+            // 1. Materialize backing allocations + coherence copies (Fig 3).
+            let mut bindings = Vec::new();
+            for a in &accesses {
+                let info = self.buffers.get(a.buffer).clone();
+                self.ensure_state(a.buffer);
+                let region = a.mapper.apply(&dchunk, range, info.range);
+                if region.is_empty() {
+                    continue;
+                }
+                let bbox = region.bounding_box();
+                let backing = self.ensure_backing(a.buffer, mem, bbox, Some(&task));
+                if a.mode.is_consumer() {
+                    self.make_coherent(a.buffer, mem, &region, Some(&task));
+                }
+                bindings.push(AccessBinding {
+                    buffer: a.buffer,
+                    mode: a.mode,
+                    region,
+                    alloc: backing.alloc,
+                    alloc_box: backing.covers,
+                });
+            }
+
+            // 2. Dependencies.
+            let mut deps: Vec<(InstructionId, DepKind)> = Vec::new();
+            for b in &bindings {
+                let st = &self.states[&b.buffer];
+                let ms = &st.per_mem[mem.0 as usize];
+                if b.mode.is_consumer() {
+                    for (_, w) in ms.last_writer.query_region(&b.region) {
+                        if let Some(w) = w {
+                            push_dep(&mut deps, w, DepKind::Dataflow);
+                        }
+                    }
+                }
+                if b.mode.is_producer() {
+                    for (_, readers) in ms.readers_since.query_region(&b.region) {
+                        for r in readers {
+                            push_dep(&mut deps, r, DepKind::Anti);
+                        }
+                    }
+                    for (_, w) in ms.last_writer.query_region(&b.region) {
+                        if let Some(w) = w {
+                            push_dep(&mut deps, w, DepKind::Output);
+                        }
+                    }
+                }
+                // First use of a fresh allocation must wait for the alloc.
+                if let Some(bk) = st.per_mem[mem.0 as usize].backings.containing(&b.region.bounding_box()) {
+                    push_dep(&mut deps, bk.alloc_instr, DepKind::Dataflow);
+                }
+            }
+            if deps.is_empty() {
+                if let Some(e) = self.last_epoch {
+                    push_dep(&mut deps, e, DepKind::Sync);
+                }
+            }
+
+            // 3. Emit.
+            let kind = if on_host {
+                InstructionKind::HostTask { chunk: dchunk, bindings: bindings.clone(), work_per_item }
+            } else {
+                InstructionKind::DeviceKernel {
+                    device: mem.to_device().unwrap(),
+                    chunk: dchunk,
+                    bindings: bindings.clone(),
+                    work_per_item,
+                    kernel: kernel.clone(),
+                }
+            };
+            let id = self.push_instruction(kind, deps, Some(&task));
+
+            // 4. Tracking updates.
+            for b in &bindings {
+                self.alloc_users.entry(b.alloc).or_default().push(id);
+                let st = self.states.get_mut(&b.buffer).unwrap();
+                if b.mode.is_producer() {
+                    // Written region: this memory holds the only coherent
+                    // copy; this kernel is the local original producer.
+                    st.coherent.update_region(&b.region, MemMask::single(mem));
+                    let ms = &mut st.per_mem[mem.0 as usize];
+                    ms.last_writer.update_region(&b.region, Some(id));
+                    ms.readers_since.update_region(&b.region, Vec::new());
+                } else {
+                    let ms = &mut st.per_mem[mem.0 as usize];
+                    ms.readers_since.apply_to_region(&b.region, |rs| {
+                        let mut rs = rs.clone();
+                        rs.push(id);
+                        rs
+                    });
+                }
+            }
+        }
+    }
+
+    /// Outbound transfer (§3.4): coherence-copy to pinned host memory, then
+    /// one `send` per (rectangle × original producer) — producer split.
+    fn compile_push(&mut self, cmd: &Command, buffer: BufferId, region: Region, target: NodeId) {
+        self.ensure_state(buffer);
+        // Host backing + coherence for the whole pushed region.
+        for b in region.boxes() {
+            self.ensure_backing(buffer, MemoryId::HOST, *b, Some(&cmd.task));
+        }
+        self.make_coherent(buffer, MemoryId::HOST, &region, Some(&cmd.task));
+
+        // Producer split: one send per original-producer fragment.
+        let st = &self.states[&buffer];
+        let hs = &st.per_mem[MemoryId::HOST.0 as usize];
+        let mut sends: Vec<(GridBox, Option<InstructionId>, Backing)> = Vec::new();
+        for (pbox, producer) in hs.last_writer.query_region(&region) {
+            for bk in hs.backings.intersecting(&pbox) {
+                let frag = pbox.intersection(&bk.covers);
+                if !frag.is_empty() {
+                    sends.push((frag, producer, bk.clone()));
+                }
+            }
+        }
+        for (send_box, producer, backing) in sends {
+            let msg = MessageId(self.next_msg);
+            self.next_msg += 1;
+            let mut deps: Vec<(InstructionId, DepKind)> = Vec::new();
+            if let Some(p) = producer {
+                push_dep(&mut deps, p, DepKind::Dataflow);
+            }
+            push_dep(&mut deps, backing.alloc_instr, DepKind::Dataflow);
+            let id = self.push_instruction(
+                InstructionKind::Send {
+                    buffer,
+                    send_box,
+                    target,
+                    msg,
+                    src_alloc: backing.alloc,
+                    src_box: backing.covers,
+                },
+                deps,
+                Some(&cmd.task),
+            );
+            self.alloc_users.entry(backing.alloc).or_default().push(id);
+            let st = self.states.get_mut(&buffer).unwrap();
+            st.per_mem[MemoryId::HOST.0 as usize]
+                .readers_since
+                .apply_to_region(&Region::from(send_box), |rs| {
+                    let mut rs = rs.clone();
+                    rs.push(id);
+                    rs
+                });
+            // Pilot message announced to the peer immediately (§3.4).
+            self.pilots.push(Pilot {
+                from: self.cfg.node,
+                to: target,
+                msg,
+                buffer,
+                send_box,
+                transfer: cmd.task.id,
+            });
+        }
+    }
+
+    /// Inbound transfer (§3.4): contiguous host backing for the whole
+    /// awaited region (case b), then either a single `receive` or a
+    /// `split receive` + consumer-split `await receive`s (cases a/c).
+    fn compile_await_push(&mut self, cmd: &Command, buffer: BufferId, region: Region) {
+        self.ensure_state(buffer);
+        let bbox = region.bounding_box();
+        let backing = self.ensure_backing(buffer, MemoryId::HOST, bbox, Some(&cmd.task));
+
+        // Consumer split: which local device chunks of the owning task
+        // consume which subregions of the awaited region?
+        let consumers = self.consumer_subregions(&cmd.task, buffer, &region);
+
+        // Anti-dependencies: incoming data overwrites local bytes.
+        let mut deps: Vec<(InstructionId, DepKind)> = Vec::new();
+        {
+            let st = &self.states[&buffer];
+            let hs = &st.per_mem[MemoryId::HOST.0 as usize];
+            for (_, readers) in hs.readers_since.query_region(&region) {
+                for r in readers {
+                    push_dep(&mut deps, r, DepKind::Anti);
+                }
+            }
+            for (_, w) in hs.last_writer.query_region(&region) {
+                if let Some(w) = w {
+                    push_dep(&mut deps, w, DepKind::Anti);
+                }
+            }
+        }
+        push_dep(&mut deps, backing.alloc_instr, DepKind::Dataflow);
+
+        let single = consumers.len() <= 1 || consumers.iter().any(|c| *c == region);
+        if single {
+            let id = self.push_instruction(
+                InstructionKind::Receive {
+                    buffer,
+                    region: region.clone(),
+                    dst_alloc: backing.alloc,
+                    dst_box: backing.covers,
+                    transfer: cmd.task.id,
+                },
+                deps,
+                Some(&cmd.task),
+            );
+            self.alloc_users.entry(backing.alloc).or_default().push(id);
+            let st = self.states.get_mut(&buffer).unwrap();
+            st.coherent.update_region(&region, MemMask::single(MemoryId::HOST));
+            let hs = &mut st.per_mem[MemoryId::HOST.0 as usize];
+            hs.last_writer.update_region(&region, Some(id));
+            hs.readers_since.update_region(&region, Vec::new());
+        } else {
+            let split_id = self.push_instruction(
+                InstructionKind::SplitReceive {
+                    buffer,
+                    region: region.clone(),
+                    dst_alloc: backing.alloc,
+                    dst_box: backing.covers,
+                    transfer: cmd.task.id,
+                },
+                deps,
+                Some(&cmd.task),
+            );
+            self.alloc_users.entry(backing.alloc).or_default().push(split_id);
+            // Cover any remainder not claimed by a consumer so the whole
+            // awaited region ends up tracked.
+            let mut claimed = Region::empty();
+            for c in &consumers {
+                claimed = claimed.union(c);
+            }
+            let mut parts = consumers;
+            let rest = region.difference(&claimed);
+            if !rest.is_empty() {
+                parts.push(rest);
+            }
+            for sub in parts {
+                let id = self.push_instruction(
+                    InstructionKind::AwaitReceive {
+                        buffer,
+                        region: sub.clone(),
+                        split: split_id,
+                    },
+                    vec![(split_id, DepKind::Dataflow)],
+                    Some(&cmd.task),
+                );
+                let st = self.states.get_mut(&buffer).unwrap();
+                st.coherent.update_region(&sub, MemMask::single(MemoryId::HOST));
+                let hs = &mut st.per_mem[MemoryId::HOST.0 as usize];
+                hs.last_writer.update_region(&sub, Some(id));
+                hs.readers_since.update_region(&sub, Vec::new());
+            }
+        }
+    }
+
+    /// The distinct per-device consumed subregions of an awaited region
+    /// (consumer split, §3.4). Recomputes the hierarchical split of the
+    /// task deterministically.
+    fn consumer_subregions(&self, task: &TaskRef, buffer: BufferId, region: &Region) -> Vec<Region> {
+        let Some(range) = task.kind.execution_range() else {
+            return vec![];
+        };
+        let mut node_chunks =
+            crate::command::split_range(range, self.cfg.num_nodes, self.cfg.node_hint);
+        node_chunks.resize(self.cfg.num_nodes as usize, GridBox::EMPTY);
+        let my_chunk = node_chunks[self.cfg.node.0 as usize];
+        if my_chunk.is_empty() {
+            return vec![];
+        }
+        let on_host = matches!(task.kind, TaskKind::HostTask { .. });
+        let dchunks = if on_host {
+            vec![my_chunk]
+        } else {
+            split_box(&my_chunk, self.cfg.num_devices, self.cfg.device_hint)
+        };
+        let info = self.buffers.get(buffer);
+        let mut out: Vec<Region> = Vec::new();
+        for c in dchunks {
+            let mut consumed = Region::empty();
+            for a in task.kind.accesses() {
+                if a.buffer == buffer && a.mode.is_consumer() {
+                    consumed = consumed.union(&a.mapper.apply(&c, range, info.range));
+                }
+            }
+            let consumed = consumed.intersection(region);
+            if !consumed.is_empty() && !out.iter().any(|r| *r == consumed) {
+                out.push(consumed);
+            }
+        }
+        out
+    }
+
+    // ──────────────────────────────────────────────────────────────────────
+    // Allocation management (§3.2, Fig 3)
+    // ──────────────────────────────────────────────────────────────────────
+
+    fn ensure_state(&mut self, buffer: BufferId) {
+        if self.states.contains_key(&buffer) {
+            return;
+        }
+        let info = self.buffers.get(buffer).clone();
+        let n_mem = 2 + self.cfg.num_devices as usize;
+        let mut per_mem: Vec<MemState> = (0..n_mem)
+            .map(|_| MemState {
+                last_writer: RegionMap::new(info.range, None),
+                readers_since: RegionMap::new(info.range, Vec::new()),
+                backings: BackingSet::default(),
+            })
+            .collect();
+        let mut coherent = RegionMap::new(info.range, MemMask::EMPTY);
+        if !info.host_initialized.is_empty() {
+            // User data lives in M0: a pre-existing, user-owned "backing"
+            // covering the full range; the init epoch is its producer. The
+            // allocation id is deterministic so the executor can
+            // materialize the user bytes before instructions reference it.
+            let alloc = user_alloc_id(buffer);
+            per_mem[MemoryId::USER.0 as usize].backings.insert(Backing {
+                alloc,
+                covers: GridBox::full(info.range),
+                alloc_instr: self.last_epoch.unwrap_or(InstructionId(0)),
+            });
+            per_mem[MemoryId::USER.0 as usize]
+                .last_writer
+                .update_region(&info.host_initialized, self.last_epoch.or(Some(InstructionId(0))));
+            coherent.update_region(&info.host_initialized, MemMask::single(MemoryId::USER));
+        }
+        self.states.insert(
+            buffer,
+            BufState {
+                range: info.range,
+                elem_size: info.elem_size,
+                name: info.name.clone(),
+                coherent,
+                per_mem,
+            },
+        );
+    }
+
+    /// Guarantee a single contiguous backing allocation covering `need` on
+    /// `(buffer, mem)`, emitting the `alloc`/`copy`/`free` resize chain of
+    /// Fig 3 if necessary. Never downsizes (§3.2).
+    fn ensure_backing(
+        &mut self,
+        buffer: BufferId,
+        mem: MemoryId,
+        need: GridBox,
+        task: Option<&TaskRef>,
+    ) -> Backing {
+        self.ensure_state(buffer);
+        let elem_size = self.states[&buffer].elem_size as u64;
+        if let Some(bk) = self.states[&buffer].per_mem[mem.0 as usize]
+            .backings
+            .containing(&need)
+        {
+            return bk.clone();
+        }
+
+        // Extend the goal box over announced future requirements (§4.3
+        // resize elision) and over every existing backing it touches.
+        let mut goal = need;
+        if let Some(a) = self.announced.get(&(buffer, mem)) {
+            goal = goal.bounding_union(a);
+        }
+        // Clamp to the virtual buffer range.
+        goal = goal.intersection(&GridBox::full(self.states[&buffer].range));
+        let mut old: Vec<Backing>;
+        loop {
+            old = self.states[&buffer].per_mem[mem.0 as usize]
+                .backings
+                .intersecting(&goal);
+            let grown = old
+                .iter()
+                .fold(goal, |g, bk| g.bounding_union(&bk.covers));
+            if grown == goal {
+                break;
+            }
+            goal = grown;
+        }
+
+        // 1. The new allocation.
+        let alloc = AllocationId(self.next_alloc);
+        self.next_alloc += 1;
+        let size_bytes = goal.area() * elem_size;
+        let alloc_deps: Vec<(InstructionId, DepKind)> = self
+            .last_epoch
+            .iter()
+            .map(|e| (*e, DepKind::Sync))
+            .collect();
+        let alloc_instr = self.push_instruction(
+            InstructionKind::Alloc { alloc, memory: mem, buffer: Some(buffer), covers: goal, size_bytes },
+            alloc_deps,
+            task,
+        );
+        self.allocs_emitted += 1;
+        self.bytes_allocated += size_bytes;
+        if !old.is_empty() {
+            self.resizes_emitted += 1;
+        }
+        self.alloc_users.insert(alloc, vec![alloc_instr]);
+
+        // 2. Resize copies old → new, preserving current bytes.
+        for bk in &old {
+            let copy_box = bk.covers; // goal ⊇ covers after extension
+            let mut deps: Vec<(InstructionId, DepKind)> = vec![(alloc_instr, DepKind::Dataflow)];
+            {
+                let ms = &self.states[&buffer].per_mem[mem.0 as usize];
+                for (_, w) in ms.last_writer.query_box(&copy_box) {
+                    if let Some(w) = w {
+                        push_dep(&mut deps, w, DepKind::Dataflow);
+                    }
+                }
+                for (_, readers) in ms.readers_since.query_box(&copy_box) {
+                    for r in readers {
+                        push_dep(&mut deps, r, DepKind::Dataflow);
+                    }
+                }
+            }
+            push_dep(&mut deps, bk.alloc_instr, DepKind::Dataflow);
+            let copy_id = self.push_instruction(
+                InstructionKind::Copy {
+                    buffer,
+                    copy_box,
+                    src_memory: mem,
+                    dst_memory: mem,
+                    src_alloc: bk.alloc,
+                    src_box: bk.covers,
+                    dst_alloc: alloc,
+                    dst_box: goal,
+                },
+                deps,
+                task,
+            );
+            self.alloc_users.entry(bk.alloc).or_default().push(copy_id);
+            self.alloc_users.entry(alloc).or_default().push(copy_id);
+            // The resize copy is now the producer of those bytes in this
+            // memory (they moved allocations).
+            let st = self.states.get_mut(&buffer).unwrap();
+            let ms = &mut st.per_mem[mem.0 as usize];
+            ms.last_writer
+                .update_region(&Region::from(copy_box), Some(copy_id));
+            ms.readers_since.update_region(&Region::from(copy_box), Vec::new());
+        }
+
+        // 3. Free the replaced allocations.
+        for bk in &old {
+            let users = self.alloc_users.remove(&bk.alloc).unwrap_or_default();
+            let deps: Vec<(InstructionId, DepKind)> =
+                users.into_iter().map(|u| (u, DepKind::Anti)).collect();
+            let covered = bk.covers.area() * elem_size;
+            self.push_instruction(
+                InstructionKind::Free { alloc: bk.alloc, memory: mem, size_bytes: covered },
+                deps,
+                task,
+            );
+            self.states
+                .get_mut(&buffer)
+                .unwrap()
+                .per_mem[mem.0 as usize]
+                .backings
+                .remove(bk.alloc);
+        }
+
+        let backing = Backing { alloc, covers: goal, alloc_instr };
+        self.states
+            .get_mut(&buffer)
+            .unwrap()
+            .per_mem[mem.0 as usize]
+            .backings
+            .insert(backing.clone());
+        backing
+    }
+
+    // ──────────────────────────────────────────────────────────────────────
+    // Coherence (§3.3)
+    // ──────────────────────────────────────────────────────────────────────
+
+    /// Make `region` of `buffer` coherent in `dst` memory, emitting copy
+    /// instructions subject to producer- and consumer split. Assumes a
+    /// backing covering `region` already exists on `dst`.
+    fn make_coherent(
+        &mut self,
+        buffer: BufferId,
+        dst: MemoryId,
+        region: &Region,
+        task: Option<&TaskRef>,
+    ) {
+        // Fragments not yet coherent in dst, keyed by source-memory set.
+        let missing: Vec<(GridBox, MemMask)> = self.states[&buffer]
+            .coherent
+            .query_region(region)
+            .into_iter()
+            .filter(|(_, mask)| !mask.contains(dst) && !mask.is_empty())
+            .collect();
+        for (mbox, mask) in missing {
+            let src = self.pick_source(dst, mask);
+            match src {
+                CopyPath::Direct(src_mem) => {
+                    self.emit_copies(buffer, src_mem, dst, &mbox, task);
+                }
+                CopyPath::Staged(src_mem) => {
+                    // Device→host, then host→device (§3.3 consumer-GPU path).
+                    self.ensure_backing(buffer, MemoryId::HOST, mbox, task);
+                    self.emit_copies(buffer, src_mem, MemoryId::HOST, &mbox, task);
+                    self.emit_copies(buffer, MemoryId::HOST, dst, &mbox, task);
+                }
+            }
+        }
+    }
+
+    /// One copy instruction per (original-producer fragment × backing
+    /// overlap) — the producer split of §3.3: "one copy for each pairing of
+    /// original-producer and consumer instruction" so that "subregions
+    /// available early can be copied to the target memory right away".
+    fn emit_copies(
+        &mut self,
+        buffer: BufferId,
+        src: MemoryId,
+        dst: MemoryId,
+        mbox: &GridBox,
+        task: Option<&TaskRef>,
+    ) {
+        let frags: Vec<(GridBox, Option<InstructionId>, Backing, Backing)> = {
+            let st = &self.states[&buffer];
+            let sm = &st.per_mem[src.0 as usize];
+            let dm = &st.per_mem[dst.0 as usize];
+            let mut v = Vec::new();
+            for (pbox, producer) in sm.last_writer.query_box(mbox) {
+                for sbk in sm.backings.intersecting(&pbox) {
+                    let frag = pbox.intersection(&sbk.covers);
+                    if frag.is_empty() {
+                        continue;
+                    }
+                    let dbk = dm
+                        .backings
+                        .containing(&frag)
+                        .cloned()
+                        .unwrap_or_else(|| panic!(
+                            "no dst backing for {} of buffer {} on {dst}",
+                            frag, st.name
+                        ));
+                    v.push((frag, producer, sbk.clone(), dbk));
+                }
+            }
+            v
+        };
+        for (frag, producer, sbk, dbk) in frags {
+            let mut deps: Vec<(InstructionId, DepKind)> = Vec::new();
+            if let Some(p) = producer {
+                push_dep(&mut deps, p, DepKind::Dataflow);
+            }
+            push_dep(&mut deps, sbk.alloc_instr, DepKind::Dataflow);
+            push_dep(&mut deps, dbk.alloc_instr, DepKind::Dataflow);
+            {
+                let st = &self.states[&buffer];
+                let dm = &st.per_mem[dst.0 as usize];
+                for (_, readers) in dm.readers_since.query_box(&frag) {
+                    for r in readers {
+                        push_dep(&mut deps, r, DepKind::Anti);
+                    }
+                }
+                for (_, w) in dm.last_writer.query_box(&frag) {
+                    if let Some(w) = w {
+                        push_dep(&mut deps, w, DepKind::Output);
+                    }
+                }
+            }
+            let id = self.push_instruction(
+                InstructionKind::Copy {
+                    buffer,
+                    copy_box: frag,
+                    src_memory: src,
+                    dst_memory: dst,
+                    src_alloc: sbk.alloc,
+                    src_box: sbk.covers,
+                    dst_alloc: dbk.alloc,
+                    dst_box: dbk.covers,
+                },
+                deps,
+                task,
+            );
+            self.alloc_users.entry(sbk.alloc).or_default().push(id);
+            self.alloc_users.entry(dbk.alloc).or_default().push(id);
+            let st = self.states.get_mut(&buffer).unwrap();
+            st.coherent.apply_to_region(&Region::from(frag), |m| m.insert(dst));
+            let dm = &mut st.per_mem[dst.0 as usize];
+            dm.last_writer.update_region(&Region::from(frag), Some(id));
+            dm.readers_since.update_region(&Region::from(frag), Vec::new());
+            let sm = &mut st.per_mem[src.0 as usize];
+            sm.readers_since.apply_to_region(&Region::from(frag), |rs| {
+                let mut rs = rs.clone();
+                rs.push(id);
+                rs
+            });
+        }
+    }
+
+    /// Choose the copy source for data currently coherent in `mask`.
+    fn pick_source(&self, dst: MemoryId, mask: MemMask) -> CopyPath {
+        // Host sources (pinned first, then user memory) are always direct.
+        if mask.contains(MemoryId::HOST) {
+            return CopyPath::Direct(MemoryId::HOST);
+        }
+        if mask.contains(MemoryId::USER) {
+            return CopyPath::Direct(MemoryId::USER);
+        }
+        // Device source.
+        let src_dev = mask.iter().find(|m| m.is_device()).expect("nonempty mask");
+        if !dst.is_device() || self.cfg.d2d {
+            CopyPath::Direct(src_dev)
+        } else {
+            CopyPath::Staged(src_dev)
+        }
+    }
+
+    // ──────────────────────────────────────────────────────────────────────
+    // Synchronization & pruning
+    // ──────────────────────────────────────────────────────────────────────
+
+    /// Free every live runtime allocation (shutdown; user M0 memory is not
+    /// ours to free).
+    fn free_all_backings(&mut self) {
+        let targets: Vec<(BufferId, MemoryId, Backing, u64)> = self
+            .states
+            .iter()
+            .flat_map(|(buf, st)| {
+                st.per_mem
+                    .iter()
+                    .enumerate()
+                    .filter(|(m, _)| *m != MemoryId::USER.0 as usize)
+                    .flat_map(move |(m, ms)| {
+                        ms.backings.backings.iter().map(move |bk| {
+                            (*buf, MemoryId(m as u64), bk.clone(), st.elem_size as u64)
+                        })
+                    })
+            })
+            .collect();
+        for (buffer, mem, bk, elem_size) in targets {
+            let users = self.alloc_users.remove(&bk.alloc).unwrap_or_default();
+            let deps: Vec<(InstructionId, DepKind)> =
+                users.into_iter().map(|u| (u, DepKind::Anti)).collect();
+            self.push_instruction(
+                InstructionKind::Free {
+                    alloc: bk.alloc,
+                    memory: mem,
+                    size_bytes: bk.covers.area() * elem_size,
+                },
+                deps,
+                None,
+            );
+            self.states
+                .get_mut(&buffer)
+                .unwrap()
+                .per_mem[mem.0 as usize]
+                .backings
+                .remove(bk.alloc);
+        }
+    }
+
+    fn push_front_instruction(
+        &mut self,
+        kind: InstructionKind,
+        task: Option<&TaskRef>,
+    ) -> InstructionId {
+        let deps: Vec<(InstructionId, DepKind)> = self
+            .dag
+            .front()
+            .into_iter()
+            .map(|id| (InstructionId(id), DepKind::Sync))
+            .collect();
+        self.push_instruction(kind, deps, task)
+    }
+
+    /// Substitute `boundary` for all older producers/readers/users, then
+    /// prune the DAG (§3.5).
+    fn apply_boundary(&mut self, boundary: InstructionId) {
+        for st in self.states.values_mut() {
+            for ms in &mut st.per_mem {
+                let full = Region::full(ms.last_writer.extent().range());
+                ms.last_writer.apply_to_region(&full, |w| match w {
+                    Some(w) if w.0 < boundary.0 => Some(boundary),
+                    other => *other,
+                });
+                ms.readers_since.apply_to_region(&full, |rs| {
+                    let newer: Vec<InstructionId> =
+                        rs.iter().copied().filter(|r| r.0 >= boundary.0).collect();
+                    if rs.is_empty() {
+                        Vec::new()
+                    } else if newer.len() == rs.len() {
+                        rs.clone()
+                    } else {
+                        let mut v = vec![boundary];
+                        v.extend(newer);
+                        v
+                    }
+                });
+            }
+        }
+        for users in self.alloc_users.values_mut() {
+            let had_old = users.iter().any(|u| u.0 < boundary.0);
+            users.retain(|u| u.0 >= boundary.0);
+            if had_old {
+                users.insert(0, boundary);
+            }
+        }
+        self.dag.prune_before(boundary.0);
+    }
+
+    fn push_instruction(
+        &mut self,
+        kind: InstructionKind,
+        deps: Vec<(InstructionId, DepKind)>,
+        task: Option<&TaskRef>,
+    ) -> InstructionId {
+        let id = InstructionId(self.dag.total_created());
+        let instr = std::sync::Arc::new(Instruction {
+            id,
+            kind,
+            deps: deps.clone(),
+            task: task.cloned(),
+        });
+        self.dag.push(
+            instr.clone(),
+            deps.iter().map(|(d, k)| Dep { from: d.0, kind: *k }),
+        );
+        self.outbox.push(instr);
+        id
+    }
+}
+
+enum CopyPath {
+    Direct(MemoryId),
+    Staged(MemoryId),
+}
+
+fn push_dep(deps: &mut Vec<(InstructionId, DepKind)>, id: InstructionId, kind: DepKind) {
+    if !deps.iter().any(|(d, _)| *d == id) {
+        deps.push((id, kind));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::command::CdagGenerator;
+    use crate::grid::Range;
+    use crate::task::{RangeMapper, TaskDecl, TaskManager};
+
+    /// Full pipeline helper: submit tasks, compile CDAG on node 0 of
+    /// `nodes`, compile IDAG with `devices`, return all instructions.
+    fn build(
+        nodes: u64,
+        devices: u64,
+        d2d: bool,
+        f: impl FnOnce(&mut TaskManager),
+    ) -> (Vec<InstructionRef>, Vec<Pilot>, IdagGenerator) {
+        let mut tm = TaskManager::with_horizon_step(u64::MAX);
+        f(&mut tm);
+        let tasks = tm.take_new_tasks();
+        let mut cg = CdagGenerator::new(NodeId(0), nodes, SplitHint::D1, tm.buffers().clone());
+        for t in &tasks {
+            cg.compile(t);
+        }
+        let cmds = cg.take_new_commands();
+        let cfg = IdagConfig {
+            node: NodeId(0),
+            num_nodes: nodes,
+            num_devices: devices,
+            node_hint: SplitHint::D1,
+            device_hint: SplitHint::D1,
+            d2d,
+        };
+        let mut ig = IdagGenerator::new(cfg, tm.buffers().clone());
+        for c in &cmds {
+            ig.compile(c);
+        }
+        assert!(ig.dag().check_acyclic());
+        let instrs = ig.take_new_instructions();
+        let pilots = ig.take_pilots();
+        (instrs, pilots, ig)
+    }
+
+    fn count(instrs: &[InstructionRef], mnemonic: &str) -> usize {
+        instrs.iter().filter(|i| i.kind.mnemonic() == mnemonic).count()
+    }
+
+    fn nbody(tm: &mut TaskManager, steps: usize, n: u64) {
+        let r = Range::d1(n);
+        let p = tm.create_buffer("P", r, 24, true);
+        let v = tm.create_buffer("V", r, 24, true);
+        for _ in 0..steps {
+            tm.submit(
+                TaskDecl::device("timestep", r)
+                    .read(p, RangeMapper::All)
+                    .read_write(v, RangeMapper::OneToOne)
+                    .kernel("nbody_timestep"),
+            );
+            tm.submit(
+                TaskDecl::device("update", r)
+                    .read(v, RangeMapper::OneToOne)
+                    .read_write(p, RangeMapper::OneToOne)
+                    .kernel("nbody_update"),
+            );
+        }
+    }
+
+    #[test]
+    fn fig4_nbody_two_devices_single_node() {
+        // §3.6 / Fig 4 on one node: allocs for P (full range, both devices)
+        // and V (quarter each... here: half each since 1 node), kernels per
+        // device, d2d copies on the second timestep.
+        let (instrs, pilots, _) = build(1, 2, true, |tm| nbody(tm, 2, 4096));
+        assert!(pilots.is_empty());
+
+        // P full-range on M2 and M3; V half on each; plus M0 user backings
+        // don't emit allocs. First timestep: 2 P allocs + 2 V allocs.
+        let allocs: Vec<_> = instrs
+            .iter()
+            .filter_map(|i| match &i.kind {
+                InstructionKind::Alloc { memory, covers, .. } => Some((*memory, *covers)),
+                _ => None,
+            })
+            .collect();
+        assert!(allocs.contains(&(MemoryId(2), GridBox::d1(0, 4096))), "{allocs:?}");
+        assert!(allocs.contains(&(MemoryId(3), GridBox::d1(0, 4096))));
+        assert!(allocs.contains(&(MemoryId(2), GridBox::d1(0, 2048))));
+        assert!(allocs.contains(&(MemoryId(3), GridBox::d1(2048, 4096))));
+
+        // 2 kernels per task × 4 tasks.
+        assert_eq!(count(&instrs, "device kernel"), 8);
+
+        // Second timestep needs P coherent everywhere: the halves produced
+        // by "update" on each device cross over → at least 2 d2d copies.
+        let d2d: Vec<_> = instrs
+            .iter()
+            .filter_map(|i| match &i.kind {
+                InstructionKind::Copy { src_memory, dst_memory, copy_box, .. }
+                    if src_memory.is_device() && dst_memory.is_device() =>
+                {
+                    Some((*src_memory, *dst_memory, *copy_box))
+                }
+                _ => None,
+            })
+            .collect();
+        assert!(d2d.contains(&(MemoryId(3), MemoryId(2), GridBox::d1(2048, 4096))), "{d2d:?}");
+        assert!(d2d.contains(&(MemoryId(2), MemoryId(3), GridBox::d1(0, 2048))));
+        assert_eq!(count(&instrs, "receive") + count(&instrs, "send"), 0);
+    }
+
+    #[test]
+    fn staging_when_d2d_unsupported() {
+        // Same workload with d2d disabled: inter-device coherence goes
+        // through pinned host memory (§3.3).
+        let (instrs, _, _) = build(1, 2, false, |tm| nbody(tm, 2, 4096));
+        let direct_d2d = instrs
+            .iter()
+            .filter(|i| match &i.kind {
+                InstructionKind::Copy { src_memory, dst_memory, .. } => {
+                    src_memory.is_device() && dst_memory.is_device()
+                }
+                _ => false,
+            })
+            .count();
+        assert_eq!(direct_d2d, 0);
+        // Both d2h and h2d staging hops must exist.
+        let d2h = instrs
+            .iter()
+            .filter(|i| matches!(&i.kind,
+                InstructionKind::Copy { src_memory, dst_memory, .. }
+                    if src_memory.is_device() && *dst_memory == MemoryId::HOST))
+            .count();
+        let h2d = instrs
+            .iter()
+            .filter(|i| matches!(&i.kind,
+                InstructionKind::Copy { src_memory, dst_memory, .. }
+                    if *src_memory == MemoryId::HOST && dst_memory.is_device()))
+            .count();
+        assert!(d2h >= 2 && h2d >= 2, "d2h={d2h} h2d={h2d}");
+    }
+
+    #[test]
+    fn fig4_two_nodes_emits_sends_and_receive() {
+        // Node 0 of 2, 2 devices (Fig 4 exactly): the push command becomes
+        // producer-split sends (one per device producing half of our half),
+        // with pilots; the await-push becomes a receive.
+        let (instrs, pilots, _) = build(2, 2, true, |tm| nbody(tm, 2, 4096));
+        let sends = count(&instrs, "send");
+        // Our half of P (0..2048) is produced by update-kernels on D0
+        // (0..1024) and D1 (1024..2048) → 2 producer-split sends (I10/I11).
+        assert_eq!(sends, 2);
+        assert_eq!(pilots.len(), 2);
+        assert!(pilots.iter().all(|p| p.to == NodeId(1)));
+        let boxes: Vec<GridBox> = pilots.iter().map(|p| p.send_box).collect();
+        assert!(boxes.contains(&GridBox::d1(0, 1024)), "{boxes:?}");
+        assert!(boxes.contains(&GridBox::d1(1024, 2048)));
+
+        // Await-push of the peer half: both local devices consume the
+        // *same* region (All mapper) → single receive (§3.6: "the
+        // consumer-split logic does not apply").
+        assert_eq!(count(&instrs, "receive"), 1);
+        assert_eq!(count(&instrs, "split receive"), 0);
+
+        // Sends are preceded by d2h coherence copies.
+        let d2h = instrs
+            .iter()
+            .filter(|i| matches!(&i.kind,
+                InstructionKind::Copy { src_memory, dst_memory, .. }
+                    if src_memory.is_device() && *dst_memory == MemoryId::HOST))
+            .count();
+        assert!(d2h >= 2);
+    }
+
+    #[test]
+    fn consumer_split_receive_for_disjoint_consumers() {
+        // Stencil-like: each device consumes a *disjoint* part of the
+        // awaited region → split receive + await receives (§3.4 case a/c).
+        let (instrs, _, _) = build(2, 2, true, |tm| {
+            let r = Range::d1(4096);
+            let a = tm.create_buffer("A", r, 8, true);
+            let b = tm.create_buffer("B", r, 8, false);
+            // Step 1: everyone writes their part of A.
+            tm.submit(TaskDecl::device("w", r).read_write(a, RangeMapper::OneToOne));
+            // Step 2: shifted read: each element i reads a[i + 2048] where
+            // available — node 0 needs exactly node 1's half, split across
+            // its devices.
+            tm.submit(
+                TaskDecl::device("shift", r)
+                    .read(a, RangeMapper::Shift(crate::grid::Point::d1(2048)))
+                    .write(b, RangeMapper::OneToOne),
+            );
+        });
+        assert_eq!(count(&instrs, "split receive"), 1, "{:#?}",
+            instrs.iter().map(|i| i.label()).collect::<Vec<_>>());
+        assert_eq!(count(&instrs, "await receive"), 2);
+        assert_eq!(count(&instrs, "receive"), 0);
+    }
+
+    #[test]
+    fn listing2_growing_access_triggers_resize_chain() {
+        // Listing 2: one-to-one write, then neighborhood read → the second
+        // task's backing must grow → alloc/copy/free resize chain (Fig 3).
+        let (instrs, _, ig) = build(1, 1, true, |tm| {
+            let r = Range::d1(1024);
+            let a = tm.create_buffer("A", r, 8, false);
+            let b = tm.create_buffer("B", r, 8, false);
+            // Task writes only the middle of A.
+            tm.submit(TaskDecl::device("w", Range::d1(512)).write(
+                a,
+                RangeMapper::Shift(crate::grid::Point::d1(256)),
+            ));
+            // Then a full-range read of A (grown requirement) + write B.
+            tm.submit(
+                TaskDecl::device("r", r)
+                    .read(a, RangeMapper::Neighborhood(Range::d1(1)))
+                    .write(b, RangeMapper::OneToOne),
+            );
+        });
+        assert!(ig.resizes_emitted >= 1, "expected a resize");
+        // The resize chain: second alloc for A, one same-memory copy
+        // preserving the middle, one free of the small backing.
+        let same_mem_copies = instrs
+            .iter()
+            .filter(|i| matches!(&i.kind,
+                InstructionKind::Copy { src_memory, dst_memory, copy_box, .. }
+                    if src_memory == dst_memory && *copy_box == GridBox::d1(256, 768)))
+            .count();
+        assert_eq!(same_mem_copies, 1);
+        assert!(count(&instrs, "free") >= 1);
+    }
+
+    #[test]
+    fn announce_elides_resize() {
+        // Same workload, but with the second task's requirement announced
+        // ahead of time (what the scheduler lookahead does): the first
+        // alloc covers everything, no resize.
+        let mut tm = TaskManager::with_horizon_step(u64::MAX);
+        let r = Range::d1(1024);
+        let a = tm.create_buffer("A", r, 8, false);
+        let b = tm.create_buffer("B", r, 8, false);
+        tm.submit(TaskDecl::device("w", Range::d1(512)).write(
+            a,
+            RangeMapper::Shift(crate::grid::Point::d1(256)),
+        ));
+        tm.submit(
+            TaskDecl::device("r", r)
+                .read(a, RangeMapper::Neighborhood(Range::d1(1)))
+                .write(b, RangeMapper::OneToOne),
+        );
+        let tasks = tm.take_new_tasks();
+        let mut cg = CdagGenerator::new(NodeId(0), 1, SplitHint::D1, tm.buffers().clone());
+        for t in &tasks {
+            cg.compile(t);
+        }
+        let cmds = cg.take_new_commands();
+        let mut ig = IdagGenerator::new(
+            IdagConfig { num_devices: 1, ..Default::default() },
+            tm.buffers().clone(),
+        );
+        // Announce all requirements up-front (the flush step of §4.3).
+        let all_reqs: Vec<_> = cmds.iter().flat_map(|c| ig.requirements(c)).collect();
+        ig.announce(&all_reqs);
+        for c in &cmds {
+            ig.compile(c);
+        }
+        assert_eq!(ig.resizes_emitted, 0);
+        // A gets exactly one alloc on the device, covering the full range.
+        let instrs = ig.take_new_instructions();
+        let a_allocs: Vec<_> = instrs
+            .iter()
+            .filter_map(|i| match &i.kind {
+                InstructionKind::Alloc { buffer, covers, memory, .. }
+                    if *buffer == Some(a) && memory.is_device() =>
+                {
+                    Some(*covers)
+                }
+                _ => None,
+            })
+            .collect();
+        assert_eq!(a_allocs, vec![GridBox::d1(0, 1024)]);
+    }
+
+    #[test]
+    fn would_allocate_predicate() {
+        let mut tm = TaskManager::with_horizon_step(u64::MAX);
+        let r = Range::d1(256);
+        let a = tm.create_buffer("A", r, 8, true);
+        tm.submit(TaskDecl::device("w1", r).read_write(a, RangeMapper::OneToOne));
+        tm.submit(TaskDecl::device("w2", r).read_write(a, RangeMapper::OneToOne));
+        let tasks = tm.take_new_tasks();
+        let mut cg = CdagGenerator::new(NodeId(0), 1, SplitHint::D1, tm.buffers().clone());
+        for t in &tasks {
+            cg.compile(t);
+        }
+        let cmds = cg.take_new_commands();
+        let mut ig = IdagGenerator::new(
+            IdagConfig { num_devices: 1, ..Default::default() },
+            tm.buffers().clone(),
+        );
+        let execs: Vec<_> = cmds.iter().filter(|c| c.is_execution()).collect();
+        // Before compiling anything: first exec would allocate.
+        assert!(ig.would_allocate(execs[0]));
+        for c in &cmds[..2] {
+            ig.compile(c); // epoch + first exec
+        }
+        // Identical access pattern: second exec no longer allocates.
+        assert!(!ig.would_allocate(execs[1]));
+    }
+
+    #[test]
+    fn host_init_data_copied_from_user_memory() {
+        // First consumer of a host-initialized buffer pulls from M0.
+        let (instrs, _, _) = build(1, 1, true, |tm| {
+            let r = Range::d1(64);
+            let a = tm.create_buffer("A", r, 8, true);
+            let b = tm.create_buffer("B", r, 8, false);
+            tm.submit(
+                TaskDecl::device("r", r)
+                    .read(a, RangeMapper::OneToOne)
+                    .write(b, RangeMapper::OneToOne),
+            );
+        });
+        let from_user = instrs
+            .iter()
+            .filter(|i| matches!(&i.kind,
+                InstructionKind::Copy { src_memory, .. } if *src_memory == MemoryId::USER))
+            .count();
+        assert_eq!(from_user, 1);
+    }
+
+    #[test]
+    fn shutdown_frees_every_runtime_allocation() {
+        let (instrs, _, _) = build(1, 2, true, |tm| {
+            nbody(tm, 3, 1024);
+            tm.shutdown();
+        });
+        let allocs = count(&instrs, "alloc");
+        let frees = count(&instrs, "free");
+        assert_eq!(allocs, frees, "every alloc must eventually be freed");
+        assert!(allocs > 0);
+        // The shutdown epoch is last and depends on the frees.
+        let last = instrs.last().unwrap();
+        assert_eq!(last.kind.mnemonic(), "epoch");
+    }
+
+    #[test]
+    fn horizons_bound_idag_size() {
+        let mut tm = TaskManager::with_horizon_step(2);
+        let r = Range::d1(512);
+        let a = tm.create_buffer("A", r, 8, true);
+        for _ in 0..30 {
+            tm.submit(TaskDecl::device("w", r).read_write(a, RangeMapper::OneToOne));
+        }
+        let tasks = tm.take_new_tasks();
+        let mut cg = CdagGenerator::new(NodeId(0), 1, SplitHint::D1, tm.buffers().clone());
+        for t in &tasks {
+            cg.compile(t);
+        }
+        let cmds = cg.take_new_commands();
+        let mut ig = IdagGenerator::new(
+            IdagConfig { num_devices: 2, ..Default::default() },
+            tm.buffers().clone(),
+        );
+        for c in &cmds {
+            ig.compile(c);
+        }
+        assert!(ig.dag().check_acyclic());
+        assert!(
+            (ig.dag().len() as u64) < ig.dag().total_created() / 2,
+            "pruning must keep the live IDAG small: live={} total={}",
+            ig.dag().len(),
+            ig.dag().total_created()
+        );
+    }
+
+    #[test]
+    fn kernel_bindings_cover_access_regions() {
+        let (instrs, _, _) = build(1, 2, true, |tm| nbody(tm, 1, 2048));
+        for i in &instrs {
+            if let InstructionKind::DeviceKernel { bindings, chunk, .. } = &i.kind {
+                assert!(!bindings.is_empty());
+                for b in bindings {
+                    assert!(
+                        b.alloc_box.contains(&b.region.bounding_box()),
+                        "binding backing must cover the accessed region"
+                    );
+                }
+                assert!(!chunk.is_empty());
+            }
+        }
+    }
+
+    #[test]
+    fn sends_depend_on_their_producers_only() {
+        // Producer split (§3.3): each send depends on the specific kernel
+        // that produced its fragment, not on both.
+        let (instrs, _, _) = build(2, 2, true, |tm| nbody(tm, 2, 4096));
+        let sends: Vec<_> = instrs
+            .iter()
+            .filter(|i| matches!(i.kind, InstructionKind::Send { .. }))
+            .collect();
+        assert_eq!(sends.len(), 2);
+        // Each send's transitive d2h copy traces back to a distinct update
+        // kernel; the two sends must not share all dependencies.
+        assert_ne!(
+            sends[0].deps.iter().map(|(d, _)| *d).collect::<Vec<_>>(),
+            sends[1].deps.iter().map(|(d, _)| *d).collect::<Vec<_>>()
+        );
+    }
+}

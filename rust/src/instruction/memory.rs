@@ -1,0 +1,125 @@
+//! Memory-id sets and allocation bookkeeping for the IDAG generator.
+
+use crate::grid::GridBox;
+use crate::util::{AllocationId, InstructionId, MemoryId};
+
+/// A set of memory ids as a bitmask (bit *i* = memory M*i*). Used by the
+/// coherence tracker: which memories hold the newest version of a buffer
+/// fragment (§3.3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub struct MemMask(pub u32);
+
+impl MemMask {
+    pub const EMPTY: MemMask = MemMask(0);
+
+    pub fn single(m: MemoryId) -> MemMask {
+        MemMask(1 << m.0)
+    }
+
+    pub fn contains(self, m: MemoryId) -> bool {
+        self.0 & (1 << m.0) != 0
+    }
+
+    pub fn insert(self, m: MemoryId) -> MemMask {
+        MemMask(self.0 | (1 << m.0))
+    }
+
+    pub fn iter(self) -> impl Iterator<Item = MemoryId> {
+        (0..32).filter(move |i| self.0 & (1 << i) != 0).map(|i| MemoryId(i as u64))
+    }
+
+    pub fn is_empty(self) -> bool {
+        self.0 == 0
+    }
+}
+
+/// One buffer-backing allocation on a specific memory (§3.2): covers a
+/// contiguous buffer-space box. Multiple non-overlapping backings may
+/// coexist per (buffer, memory).
+#[derive(Debug, Clone)]
+pub struct Backing {
+    pub alloc: AllocationId,
+    /// Buffer-space box this allocation holds.
+    pub covers: GridBox,
+    /// The `alloc` instruction that created it (dependency for first use).
+    pub alloc_instr: InstructionId,
+}
+
+/// The set of backing allocations of one (buffer, memory) pair.
+#[derive(Debug, Clone, Default)]
+pub struct BackingSet {
+    pub backings: Vec<Backing>,
+}
+
+impl BackingSet {
+    /// The backing that fully contains `b`, if any.
+    pub fn containing(&self, b: &GridBox) -> Option<&Backing> {
+        self.backings.iter().find(|bk| bk.covers.contains(b))
+    }
+
+    /// All backings intersecting `b`.
+    pub fn intersecting(&self, b: &GridBox) -> Vec<Backing> {
+        self.backings
+            .iter()
+            .filter(|bk| bk.covers.intersects(b))
+            .cloned()
+            .collect()
+    }
+
+    /// Whether satisfying `b` requires a new allocation (used by the
+    /// scheduler-lookahead "allocating command" check, §4.3 — this must be
+    /// cheap compared to full IDAG generation).
+    pub fn needs_alloc(&self, b: &GridBox) -> bool {
+        !b.is_empty() && self.containing(b).is_none()
+    }
+
+    pub fn remove(&mut self, alloc: AllocationId) {
+        self.backings.retain(|bk| bk.alloc != alloc);
+    }
+
+    pub fn insert(&mut self, backing: Backing) {
+        debug_assert!(
+            self.backings.iter().all(|bk| !bk.covers.intersects(&backing.covers)),
+            "buffer backing allocations must remain non-overlapping (§3.2)"
+        );
+        self.backings.push(backing);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn memmask_ops() {
+        let m = MemMask::single(MemoryId(2)).insert(MemoryId(3));
+        assert!(m.contains(MemoryId(2)) && m.contains(MemoryId(3)));
+        assert!(!m.contains(MemoryId(1)));
+        assert_eq!(m.iter().collect::<Vec<_>>(), vec![MemoryId(2), MemoryId(3)]);
+        assert!(MemMask::EMPTY.is_empty());
+    }
+
+    #[test]
+    fn backing_set_lookup() {
+        let mut set = BackingSet::default();
+        set.insert(Backing {
+            alloc: AllocationId(1),
+            covers: GridBox::d1(0, 50),
+            alloc_instr: InstructionId(0),
+        });
+        set.insert(Backing {
+            alloc: AllocationId(2),
+            covers: GridBox::d1(50, 100),
+            alloc_instr: InstructionId(1),
+        });
+        assert_eq!(set.containing(&GridBox::d1(10, 20)).unwrap().alloc, AllocationId(1));
+        // Spanning box: no single backing contains it → resize needed.
+        assert!(set.containing(&GridBox::d1(40, 60)).is_none());
+        assert!(set.needs_alloc(&GridBox::d1(40, 60)));
+        assert!(!set.needs_alloc(&GridBox::d1(50, 99)));
+        assert!(!set.needs_alloc(&GridBox::EMPTY));
+        assert_eq!(set.intersecting(&GridBox::d1(40, 60)).len(), 2);
+        set.remove(AllocationId(1));
+        assert_eq!(set.backings.len(), 1);
+    }
+}

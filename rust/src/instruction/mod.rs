@@ -1,0 +1,272 @@
+//! The instruction layer: the paper's core contribution (§3).
+//!
+//! Instructions are the "local micro-operations" a node performs: memory
+//! management, coherence copies, MPI peer-to-peer transfers, kernel
+//! launches and synchronization primitives. Table 1 of the paper enumerates
+//! the instruction types; [`InstructionKind`] mirrors it exactly.
+//!
+//! The IDAG "preserves full concurrency between memory management, data
+//! transfers, MPI peer-to-peer communication and kernel invocation" — its
+//! generation ([`IdagGenerator`]) happens on the scheduler thread,
+//! concurrently with the execution of earlier instructions.
+
+mod generator;
+mod memory;
+
+pub use generator::{user_alloc_id, IdagConfig, IdagGenerator, Pilot};
+pub use memory::MemMask;
+
+use crate::grid::{GridBox, Region};
+use crate::task::{EpochAction, TaskRef};
+use crate::util::{AllocationId, BufferId, DeviceId, InstructionId, MemoryId, MessageId, NodeId};
+use std::sync::Arc;
+
+/// Binding of one declared accessor to a concrete backing allocation,
+/// interpolated into the kernel before launch (§3.2: "allocation pointers
+/// are interpolated into accessors").
+#[derive(Debug, Clone)]
+pub struct AccessBinding {
+    pub buffer: BufferId,
+    pub mode: crate::task::AccessMode,
+    /// The exact buffer region this chunk may touch.
+    pub region: Region,
+    /// Backing allocation (contiguous, covers `region`'s bounding box).
+    pub alloc: AllocationId,
+    /// The buffer-space box the allocation covers (for pointer math).
+    pub alloc_box: GridBox,
+}
+
+/// All instruction types of Table 1, grouped as in the paper: memory
+/// management, peer-to-peer communication, compute, synchronization.
+#[derive(Debug, Clone)]
+pub enum InstructionKind {
+    // ── memory management ────────────────────────────────────────────────
+    /// Allocate host or device memory. Buffer-backing allocations carry the
+    /// covered buffer box; scratch allocations (e.g. staging) do not.
+    Alloc {
+        alloc: AllocationId,
+        memory: MemoryId,
+        buffer: Option<BufferId>,
+        /// Buffer-space box this allocation backs.
+        covers: GridBox,
+        size_bytes: u64,
+    },
+    /// 1/2/3D copy between allocations (device-to-device, device-to-host,
+    /// host-to-device or host-to-host).
+    Copy {
+        buffer: BufferId,
+        /// The copied buffer-space box.
+        copy_box: GridBox,
+        src_memory: MemoryId,
+        dst_memory: MemoryId,
+        src_alloc: AllocationId,
+        src_box: GridBox,
+        dst_alloc: AllocationId,
+        dst_box: GridBox,
+    },
+    /// Free host or device memory.
+    Free { alloc: AllocationId, memory: MemoryId, size_bytes: u64 },
+
+    // ── peer-to-peer communication ───────────────────────────────────────
+    /// Perform an `MPI_Isend` of one rectangular box to `target`. The
+    /// matching pilot message travels eagerly (§3.4).
+    Send {
+        buffer: BufferId,
+        send_box: GridBox,
+        target: NodeId,
+        msg: MessageId,
+        src_alloc: AllocationId,
+        src_box: GridBox,
+    },
+    /// Perform one or more `MPI_Irecv`s covering `region` into a contiguous
+    /// host allocation; sender geometry resolved by receive arbitration.
+    Receive {
+        buffer: BufferId,
+        region: Region,
+        dst_alloc: AllocationId,
+        dst_box: GridBox,
+        /// Transfer id: the consuming task (matches the pilots' `transfer`).
+        transfer: crate::util::TaskId,
+    },
+    /// Initiate a receive whose completion is consumed piecewise by
+    /// `AwaitReceive` instructions (consumer split, §3.4 case a/c).
+    SplitReceive {
+        buffer: BufferId,
+        region: Region,
+        dst_alloc: AllocationId,
+        dst_box: GridBox,
+        /// Transfer id: the consuming task (matches the pilots' `transfer`).
+        transfer: crate::util::TaskId,
+    },
+    /// Await a subregion of a `SplitReceive` being fully received.
+    AwaitReceive {
+        buffer: BufferId,
+        region: Region,
+        split: InstructionId,
+    },
+
+    // ── compute ──────────────────────────────────────────────────────────
+    /// Launch a SYCL kernel chunk on one device.
+    DeviceKernel {
+        device: DeviceId,
+        chunk: GridBox,
+        bindings: Vec<AccessBinding>,
+        /// Abstract work units per item (cost model input).
+        work_per_item: f64,
+        /// AOT artifact name, if executing for real.
+        kernel: Option<String>,
+    },
+    /// Launch a host-task functor in a host thread.
+    HostTask {
+        chunk: GridBox,
+        bindings: Vec<AccessBinding>,
+        work_per_item: f64,
+    },
+
+    // ── synchronization ──────────────────────────────────────────────────
+    /// Prune graphs in the scheduler; forward-progress marker (§3.5).
+    Horizon,
+    /// Synchronize with the main thread.
+    Epoch(EpochAction),
+}
+
+impl InstructionKind {
+    /// Table-1 group of this instruction (used by trace output and tests).
+    pub fn group(&self) -> &'static str {
+        match self {
+            InstructionKind::Alloc { .. }
+            | InstructionKind::Copy { .. }
+            | InstructionKind::Free { .. } => "memory",
+            InstructionKind::Send { .. }
+            | InstructionKind::Receive { .. }
+            | InstructionKind::SplitReceive { .. }
+            | InstructionKind::AwaitReceive { .. } => "p2p",
+            InstructionKind::DeviceKernel { .. } | InstructionKind::HostTask { .. } => "compute",
+            InstructionKind::Horizon | InstructionKind::Epoch(_) => "sync",
+        }
+    }
+
+    /// Short mnemonic matching Table 1's rows.
+    pub fn mnemonic(&self) -> &'static str {
+        match self {
+            InstructionKind::Alloc { .. } => "alloc",
+            InstructionKind::Copy { .. } => "copy",
+            InstructionKind::Free { .. } => "free",
+            InstructionKind::Send { .. } => "send",
+            InstructionKind::Receive { .. } => "receive",
+            InstructionKind::SplitReceive { .. } => "split receive",
+            InstructionKind::AwaitReceive { .. } => "await receive",
+            InstructionKind::DeviceKernel { .. } => "device kernel",
+            InstructionKind::HostTask { .. } => "host task",
+            InstructionKind::Horizon => "horizon",
+            InstructionKind::Epoch(_) => "epoch",
+        }
+    }
+}
+
+/// One node of the instruction graph.
+#[derive(Debug, Clone)]
+pub struct Instruction {
+    pub id: InstructionId,
+    pub kind: InstructionKind,
+    pub deps: Vec<(InstructionId, crate::dag::DepKind)>,
+    /// The originating task (for traces/debug); synchronization and free
+    /// instructions may not have one.
+    pub task: Option<TaskRef>,
+}
+
+impl Instruction {
+    /// Display label ("I16 copy B0 [..] M2→M3" style).
+    pub fn label(&self) -> String {
+        match &self.kind {
+            InstructionKind::Alloc { alloc, memory, covers, size_bytes, .. } => {
+                format!("{} alloc {alloc} on {memory} {covers} ({size_bytes}B)", self.id)
+            }
+            InstructionKind::Copy { buffer, copy_box, src_memory, dst_memory, .. } => {
+                format!("{} copy {buffer} {copy_box} {src_memory}→{dst_memory}", self.id)
+            }
+            InstructionKind::Free { alloc, memory, .. } => {
+                format!("{} free {alloc} on {memory}", self.id)
+            }
+            InstructionKind::Send { buffer, send_box, target, msg, .. } => {
+                format!("{} send {buffer} {send_box} →{target} {msg}", self.id)
+            }
+            InstructionKind::Receive { buffer, region, .. } => {
+                format!("{} receive {buffer} {region}", self.id)
+            }
+            InstructionKind::SplitReceive { buffer, region, .. } => {
+                format!("{} split-receive {buffer} {region}", self.id)
+            }
+            InstructionKind::AwaitReceive { buffer, region, split } => {
+                format!("{} await-receive {buffer} {region} of {split}", self.id)
+            }
+            InstructionKind::DeviceKernel { device, chunk, .. } => {
+                let name = self.task.as_ref().map(|t| t.name.as_str()).unwrap_or("?");
+                format!("{} kernel '{name}' {chunk} on {device}", self.id)
+            }
+            InstructionKind::HostTask { chunk, .. } => {
+                let name = self.task.as_ref().map(|t| t.name.as_str()).unwrap_or("?");
+                format!("{} host-task '{name}' {chunk}", self.id)
+            }
+            InstructionKind::Horizon => format!("{} horizon", self.id),
+            InstructionKind::Epoch(a) => format!("{} epoch {a:?}", self.id),
+        }
+    }
+}
+
+pub type InstructionRef = Arc<Instruction>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_mnemonics_and_groups() {
+        // Exhaustive over Table 1: every row is represented and grouped as
+        // in the paper.
+        let rows: Vec<(InstructionKind, &str, &str)> = vec![
+            (
+                InstructionKind::Alloc {
+                    alloc: AllocationId(0),
+                    memory: MemoryId(2),
+                    buffer: None,
+                    covers: GridBox::EMPTY,
+                    size_bytes: 0,
+                },
+                "alloc",
+                "memory",
+            ),
+            (
+                InstructionKind::Free { alloc: AllocationId(0), memory: MemoryId(2), size_bytes: 0 },
+                "free",
+                "memory",
+            ),
+            (
+                InstructionKind::Receive {
+                    buffer: BufferId(0),
+                    region: Region::empty(),
+                    dst_alloc: AllocationId(0),
+                    dst_box: GridBox::EMPTY,
+                    transfer: crate::util::TaskId(0),
+                },
+                "receive",
+                "p2p",
+            ),
+            (
+                InstructionKind::AwaitReceive {
+                    buffer: BufferId(0),
+                    region: Region::empty(),
+                    split: InstructionId(0),
+                },
+                "await receive",
+                "p2p",
+            ),
+            (InstructionKind::Horizon, "horizon", "sync"),
+            (InstructionKind::Epoch(EpochAction::Init), "epoch", "sync"),
+        ];
+        for (k, mnemonic, group) in rows {
+            assert_eq!(k.mnemonic(), mnemonic);
+            assert_eq!(k.group(), group);
+        }
+    }
+}

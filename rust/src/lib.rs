@@ -1,0 +1,35 @@
+//! # celerity-idag
+//!
+//! Reproduction of *"Concurrent Scheduling of High-Level Parallel Programs
+//! on Multi-GPU Systems"* (Knorr, Salzmann, Thoman, Fahringer 2025): a
+//! Celerity-style runtime with **instruction-graph scheduling**.
+//!
+//! The library is organized along the paper's three graph layers plus the
+//! substrates they need:
+//!
+//! - [`grid`] — index-space algebra (boxes, regions, region maps)
+//! - [`dag`] — shared DAG storage with horizon-based pruning
+//! - [`task`] — user-facing buffers/accessors/range mappers and the TDAG
+//! - [`command`] — per-node CDAG generation with push/await-push (§2.4)
+//! - [`instruction`] — the IDAG: the paper's core contribution (§3)
+//! - [`scheduler`] — scheduler thread with lookahead / resize elision (§4.3)
+//! - [`executor`] — out-of-order engine, receive arbitration, baseline (§4.1–4.2)
+//! - [`comm`] — communicator: Isend/Irecv + pilot messages over channels
+//! - [`runtime`] — PJRT wrapper executing AOT-compiled HLO kernels
+//! - [`sim`] — discrete-event cluster simulator for the Fig 6 scaling study
+//! - [`apps`] — the three benchmark applications (N-body, RSim, WaveSim)
+
+pub mod buffer;
+pub mod comm;
+pub mod command;
+pub mod dag;
+pub mod driver;
+pub mod executor;
+pub mod grid;
+pub mod apps;
+pub mod instruction;
+pub mod runtime;
+pub mod scheduler;
+pub mod sim;
+pub mod task;
+pub mod util;

@@ -1,0 +1,157 @@
+//! `celerity` CLI: graph dumps and quick simulations.
+//!
+//! ```text
+//! celerity graph --app nbody --nodes 2 --devices 2 --dump tdag,cdag,idag
+//! celerity sim   --app rsim  --nodes 8 --devices 4 [--baseline] [--no-lookahead]
+//! ```
+//!
+//! `graph` prints Graphviz dot for the requested intermediate
+//! representations of the chosen application (Fig 2 / Fig 4 artifacts);
+//! `sim` runs the discrete-event cluster simulator and reports the virtual
+//! makespan (one row of Fig 6).
+
+use celerity::command::{CdagGenerator, SplitHint};
+use celerity::grid::{GridBox, Range, Region};
+use celerity::instruction::{IdagConfig, IdagGenerator};
+use celerity::sim::{simulate, ExecModel, SimConfig};
+use celerity::task::{RangeMapper, TaskDecl, TaskManager};
+use celerity::util::NodeId;
+
+fn build_app(tm: &mut TaskManager, app: &str, steps: u64) {
+    match app {
+        "nbody" => {
+            let range = Range::d1(4096);
+            let p = tm.create_buffer("P", range, 12, true);
+            let v = tm.create_buffer("V", range, 12, true);
+            for _ in 0..steps {
+                tm.submit(
+                    TaskDecl::device("timestep", range)
+                        .read(p, RangeMapper::All)
+                        .read_write(v, RangeMapper::OneToOne)
+                        .work_per_item(4096.0 * 20.0),
+                );
+                tm.submit(
+                    TaskDecl::device("update", range)
+                        .read(v, RangeMapper::OneToOne)
+                        .read_write(p, RangeMapper::OneToOne)
+                        .work_per_item(2.0),
+                );
+            }
+        }
+        "rsim" => {
+            let width = 4096u64;
+            let r = tm.create_buffer("R", Range::d2(steps, width), 4, true);
+            let vis = tm.create_buffer("VIS", Range::d2(width, 64), 4, true);
+            for t in 1..steps {
+                let prev = Region::from(GridBox::d2((0, 0), (t, width)));
+                tm.submit(
+                    TaskDecl::device("radiosity", Range::d1(width))
+                        .read(r, RangeMapper::Fixed(prev))
+                        .read(vis, RangeMapper::All)
+                        .write(r, RangeMapper::RowSlice(t))
+                        .work_per_item(t as f64 * 100.0),
+                );
+            }
+        }
+        "wavesim" => {
+            let range = Range::d2(1024, 256);
+            let bufs = [
+                tm.create_buffer("U0", range, 4, true),
+                tm.create_buffer("U1", range, 4, true),
+                tm.create_buffer("U2", range, 4, true),
+            ];
+            for s in 0..steps as usize {
+                let (p, c, n) = (bufs[s % 3], bufs[(s + 1) % 3], bufs[(s + 2) % 3]);
+                tm.submit(
+                    TaskDecl::device("wavesim", range)
+                        .read(p, RangeMapper::Neighborhood(Range::d2(1, 0)))
+                        .read(c, RangeMapper::Neighborhood(Range::d2(1, 0)))
+                        .write(n, RangeMapper::OneToOne)
+                        .work_per_item(10.0),
+                );
+            }
+        }
+        other => {
+            eprintln!("unknown app '{other}' (expected nbody|rsim|wavesim)");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn arg(args: &[String], key: &str, default: &str) -> String {
+    args.iter()
+        .position(|a| a == key)
+        .and_then(|i| args.get(i + 1).cloned())
+        .unwrap_or_else(|| default.to_string())
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let cmd = args.get(1).map(String::as_str).unwrap_or("help");
+    let app = arg(&args, "--app", "nbody");
+    let nodes: u64 = arg(&args, "--nodes", "2").parse().unwrap();
+    let devices: u64 = arg(&args, "--devices", "2").parse().unwrap();
+    let steps: u64 = arg(&args, "--steps", "2").parse().unwrap();
+
+    match cmd {
+        "graph" => {
+            let dump = arg(&args, "--dump", "tdag,cdag,idag");
+            let mut tm = TaskManager::new();
+            build_app(&mut tm, &app, steps);
+            let tasks = tm.take_new_tasks();
+            if dump.contains("tdag") {
+                println!("{}", tm.to_dot());
+            }
+            let mut cg = CdagGenerator::new(NodeId(0), nodes, SplitHint::D1, tm.buffers().clone());
+            for t in &tasks {
+                cg.compile(t);
+            }
+            let cmds = cg.take_new_commands();
+            if dump.contains("cdag") {
+                println!("{}", cg.to_dot());
+            }
+            if dump.contains("idag") {
+                let mut ig = IdagGenerator::new(
+                    IdagConfig {
+                        node: NodeId(0),
+                        num_nodes: nodes,
+                        num_devices: devices,
+                        ..Default::default()
+                    },
+                    tm.buffers().clone(),
+                );
+                for c in &cmds {
+                    ig.compile(c);
+                }
+                println!("{}", ig.to_dot());
+            }
+        }
+        "sim" => {
+            let cfg = SimConfig {
+                num_nodes: nodes,
+                num_devices: devices,
+                exec: if args.iter().any(|a| a == "--baseline") {
+                    ExecModel::Baseline
+                } else {
+                    ExecModel::Idag
+                },
+                lookahead: !args.iter().any(|a| a == "--no-lookahead"),
+                ..Default::default()
+            };
+            let r = simulate(&cfg, |tm| build_app(tm, &app, steps));
+            println!(
+                "app={app} nodes={nodes} devices={devices} steps={steps} exec={:?} lookahead={}",
+                cfg.exec, cfg.lookahead
+            );
+            println!(
+                "makespan {:.6} s | {} instructions | {} comm bytes | {} resizes | {} B allocated",
+                r.makespan, r.instructions, r.comm_bytes, r.resizes, r.allocated_bytes
+            );
+        }
+        _ => {
+            println!("usage: celerity graph|sim --app nbody|rsim|wavesim [--nodes N] [--devices D] [--steps S]");
+            println!("  graph: --dump tdag,cdag,idag   (Graphviz dot on stdout)");
+            println!("  sim:   [--baseline] [--no-lookahead]");
+        }
+    }
+}

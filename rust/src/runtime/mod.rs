@@ -1,0 +1,286 @@
+//! PJRT runtime: load AOT-compiled HLO artifacts and execute them from the
+//! L3 hot path.
+//!
+//! Python runs exactly once (`make artifacts`): `python/compile/aot.py`
+//! lowers the JAX/Pallas kernels to HLO *text* plus a manifest. This module
+//! parses the manifest, compiles each artifact on the PJRT CPU client, and
+//! exposes typed executables the device-kernel lanes call — Python is never
+//! on the request path.
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+/// Element type of a kernel argument.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    pub fn size(self) -> usize {
+        4
+    }
+}
+
+/// Shape + dtype of one kernel input/output.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArgSpec {
+    pub dtype: DType,
+    pub dims: Vec<usize>,
+}
+
+impl ArgSpec {
+    pub fn elements(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.elements() * self.dtype.size()
+    }
+
+    fn parse(s: &str) -> Result<ArgSpec> {
+        let (k, d) = s
+            .split_once(':')
+            .ok_or_else(|| anyhow!("bad arg spec '{s}'"))?;
+        let dtype = match k {
+            "f32" => DType::F32,
+            "i32" => DType::I32,
+            other => bail!("unsupported dtype '{other}'"),
+        };
+        let dims = d
+            .split('x')
+            .map(|x| x.parse::<usize>().context("bad dim"))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ArgSpec { dtype, dims })
+    }
+}
+
+/// One compiled kernel artifact.
+pub struct PjrtKernel {
+    pub name: String,
+    pub inputs: Vec<ArgSpec>,
+    pub outputs: Vec<ArgSpec>,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+// SAFETY: the PJRT CPU client is thread-safe; executions from multiple lane
+// threads are supported (each execute call marshals its own buffers). The
+// xla crate merely lacks the auto-trait because of raw pointers.
+unsafe impl Send for PjrtKernel {}
+unsafe impl Sync for PjrtKernel {}
+
+/// Argument payload for [`PjrtKernel::call`].
+pub enum ArgBytes<'a> {
+    /// Dense row-major f32/i32 bytes (from a `BindingView`).
+    Bytes(&'a [u8]),
+    /// A scalar parameter, expanded to the declared (1,) i32 spec.
+    ScalarI32(i32),
+}
+
+impl PjrtKernel {
+    /// Execute with positional arguments; returns dense row-major bytes per
+    /// output. Input byte lengths may be *shorter* than the spec (edge
+    /// chunks, growing buffers); they are zero-padded at the tail, matching
+    /// the zero-boundary / masked-history conventions of the kernels.
+    pub fn call(&self, args: &[ArgBytes]) -> Result<Vec<Vec<u8>>> {
+        if args.len() != self.inputs.len() {
+            bail!(
+                "kernel '{}' expects {} args, got {}",
+                self.name,
+                self.inputs.len(),
+                args.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(args.len());
+        for (spec, arg) in self.inputs.iter().zip(args) {
+            let lit = match (spec.dtype, arg) {
+                (DType::F32, ArgBytes::Bytes(bytes)) => {
+                    let mut vals = vec![0f32; spec.elements()];
+                    let n = bytes.len() / 4;
+                    if n > vals.len() {
+                        bail!("kernel '{}': arg too large ({n} > {})", self.name, vals.len());
+                    }
+                    for (i, c) in bytes.chunks_exact(4).enumerate() {
+                        vals[i] = f32::from_ne_bytes(c.try_into().unwrap());
+                    }
+                    let dims: Vec<i64> = spec.dims.iter().map(|d| *d as i64).collect();
+                    xla::Literal::vec1(&vals).reshape(&dims)?
+                }
+                (DType::I32, ArgBytes::ScalarI32(v)) => {
+                    let dims: Vec<i64> = spec.dims.iter().map(|d| *d as i64).collect();
+                    xla::Literal::vec1(&[*v]).reshape(&dims)?
+                }
+                (DType::I32, ArgBytes::Bytes(bytes)) => {
+                    let mut vals = vec![0i32; spec.elements()];
+                    for (i, c) in bytes.chunks_exact(4).enumerate() {
+                        vals[i] = i32::from_ne_bytes(c.try_into().unwrap());
+                    }
+                    let dims: Vec<i64> = spec.dims.iter().map(|d| *d as i64).collect();
+                    xla::Literal::vec1(&vals).reshape(&dims)?
+                }
+                (DType::F32, ArgBytes::ScalarI32(_)) => {
+                    bail!("kernel '{}': scalar passed for f32 arg", self.name)
+                }
+            };
+            literals.push(lit);
+        }
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: unpack n-tuples.
+        let elems = result.to_tuple()?;
+        let mut out = Vec::with_capacity(elems.len());
+        for (lit, spec) in elems.iter().zip(&self.outputs) {
+            let bytes = match spec.dtype {
+                DType::F32 => {
+                    let vals = lit.to_vec::<f32>()?;
+                    let mut b = Vec::with_capacity(vals.len() * 4);
+                    for v in vals {
+                        b.extend_from_slice(&v.to_ne_bytes());
+                    }
+                    b
+                }
+                DType::I32 => {
+                    let vals = lit.to_vec::<i32>()?;
+                    let mut b = Vec::with_capacity(vals.len() * 4);
+                    for v in vals {
+                        b.extend_from_slice(&v.to_ne_bytes());
+                    }
+                    b
+                }
+            };
+            out.push(bytes);
+        }
+        Ok(out)
+    }
+}
+
+/// The PJRT runtime client: a CPU PJRT client plus the compiled artifact
+/// set loaded from a manifest.
+pub struct RuntimeClient {
+    kernels: HashMap<String, Arc<PjrtKernel>>,
+    pub platform: String,
+}
+
+impl RuntimeClient {
+    /// Load and compile every artifact listed in `<dir>/manifest.txt`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<RuntimeClient> {
+        let dir = dir.as_ref();
+        let manifest = std::fs::read_to_string(dir.join("manifest.txt"))
+            .with_context(|| format!("reading {}/manifest.txt (run `make artifacts`)", dir.display()))?;
+        let client = xla::PjRtClient::cpu()?;
+        let platform = client.platform_name();
+        let mut kernels = HashMap::new();
+        for line in manifest.lines().filter(|l| !l.trim().is_empty()) {
+            let mut parts = line.split('\t');
+            let name = parts.next().ok_or_else(|| anyhow!("bad manifest line"))?;
+            let file = parts.next().ok_or_else(|| anyhow!("bad manifest line"))?;
+            let ins = parts
+                .next()
+                .and_then(|s| s.strip_prefix("in="))
+                .ok_or_else(|| anyhow!("bad manifest line"))?;
+            let outs = parts
+                .next()
+                .and_then(|s| s.strip_prefix("out="))
+                .ok_or_else(|| anyhow!("bad manifest line"))?;
+            let inputs = ins.split(',').map(ArgSpec::parse).collect::<Result<Vec<_>>>()?;
+            let outputs = outs.split(',').map(ArgSpec::parse).collect::<Result<Vec<_>>>()?;
+            let path: PathBuf = dir.join(file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp)?;
+            kernels.insert(
+                name.to_string(),
+                Arc::new(PjrtKernel { name: name.to_string(), inputs, outputs, exe }),
+            );
+        }
+        Ok(RuntimeClient { kernels, platform })
+    }
+
+    pub fn kernel(&self, name: &str) -> Option<Arc<PjrtKernel>> {
+        self.kernels.get(name).cloned()
+    }
+
+    pub fn kernel_names(&self) -> Vec<&str> {
+        self.kernels.keys().map(|s| s.as_str()).collect()
+    }
+}
+
+/// Default artifacts directory (workspace-relative).
+pub fn default_artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        let d = default_artifacts_dir();
+        d.join("manifest.txt").exists().then_some(d)
+    }
+
+    #[test]
+    fn argspec_parsing() {
+        assert_eq!(
+            ArgSpec::parse("f32:256x3").unwrap(),
+            ArgSpec { dtype: DType::F32, dims: vec![256, 3] }
+        );
+        assert_eq!(
+            ArgSpec::parse("i32:1").unwrap(),
+            ArgSpec { dtype: DType::I32, dims: vec![1] }
+        );
+        assert!(ArgSpec::parse("f64:2").is_err());
+        assert_eq!(ArgSpec::parse("f32:8x4").unwrap().bytes(), 128);
+    }
+
+    #[test]
+    fn loads_and_executes_nbody_update() {
+        // Requires `make artifacts`; skipped otherwise so `cargo test`
+        // stays green on a fresh checkout.
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: no artifacts (run `make artifacts`)");
+            return;
+        };
+        let rt = RuntimeClient::load(&dir).expect("load artifacts");
+        let k = rt.kernel("nbody_update").expect("nbody_update");
+        // p' = p + v*dt with dt = 1e-3
+        let c = k.inputs[0].dims[0];
+        let v: Vec<u8> = (0..c * 3).flat_map(|_| 1f32.to_ne_bytes()).collect();
+        let p: Vec<u8> = (0..c * 3).flat_map(|_| 2f32.to_ne_bytes()).collect();
+        let out = k
+            .call(&[ArgBytes::Bytes(&v), ArgBytes::Bytes(&p)])
+            .expect("execute");
+        assert_eq!(out.len(), 1);
+        let first = f32::from_ne_bytes(out[0][0..4].try_into().unwrap());
+        assert!((first - 2.001).abs() < 1e-6, "{first}");
+    }
+
+    #[test]
+    fn pjrt_timestep_matches_manifest_shapes() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: no artifacts (run `make artifacts`)");
+            return;
+        };
+        let rt = RuntimeClient::load(&dir).expect("load artifacts");
+        let k = rt.kernel("nbody_timestep").expect("nbody_timestep");
+        assert_eq!(k.inputs.len(), 3);
+        assert_eq!(k.inputs[2], ArgSpec { dtype: DType::I32, dims: vec![1] });
+        let n = k.inputs[0].dims[0];
+        let c = k.inputs[1].dims[0];
+        let p: Vec<u8> = (0..n * 3).flat_map(|i| ((i % 7) as f32).to_ne_bytes()).collect();
+        let v: Vec<u8> = (0..c * 3).flat_map(|_| 0f32.to_ne_bytes()).collect();
+        let out = k
+            .call(&[ArgBytes::Bytes(&p), ArgBytes::Bytes(&v), ArgBytes::ScalarI32(0)])
+            .expect("execute");
+        assert_eq!(out[0].len(), c * 3 * 4);
+        // Forces on distinct bodies are finite.
+        for chunk in out[0].chunks_exact(4) {
+            let f = f32::from_ne_bytes(chunk.try_into().unwrap());
+            assert!(f.is_finite());
+        }
+    }
+}

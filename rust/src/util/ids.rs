@@ -1,0 +1,137 @@
+//! Strongly-typed id newtypes used across the runtime.
+//!
+//! Every graph layer and hardware resource gets its own id space, mirroring
+//! the paper's nomenclature: tasks (T*), commands (C*), instructions (I*),
+//! nodes (N*), devices (D*), memories (M*), buffers (B*), allocations (A*),
+//! and message ids for pilot-message matching (§3.4).
+
+use std::fmt;
+
+macro_rules! id_type {
+    ($(#[$meta:meta])* $name:ident, $prefix:expr) => {
+        $(#[$meta])*
+        #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+        pub struct $name(pub u64);
+
+        impl $name {
+            /// Raw numeric value.
+            pub fn get(self) -> u64 {
+                self.0
+            }
+        }
+
+        impl fmt::Display for $name {
+            fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+                write!(f, "{}{}", $prefix, self.0)
+            }
+        }
+
+        impl From<u64> for $name {
+            fn from(v: u64) -> Self {
+                Self(v)
+            }
+        }
+    };
+}
+
+id_type!(
+    /// A task in the task graph (TDAG). Generated identically on all nodes.
+    TaskId,
+    "T"
+);
+id_type!(
+    /// A command in the command graph (CDAG). Node-local numbering.
+    CommandId,
+    "C"
+);
+id_type!(
+    /// An instruction in the instruction graph (IDAG). Node-local numbering.
+    InstructionId,
+    "I"
+);
+id_type!(
+    /// A cluster node (MPI-rank equivalent).
+    NodeId,
+    "N"
+);
+id_type!(
+    /// A device (GPU equivalent) local to one node.
+    DeviceId,
+    "D"
+);
+id_type!(
+    /// A memory space. M0 = user host memory, M1 = pinned host memory,
+    /// M2.. = device-native memories (§3.2).
+    MemoryId,
+    "M"
+);
+id_type!(
+    /// A user-visible virtualized buffer.
+    BufferId,
+    "B"
+);
+id_type!(
+    /// A backing allocation created by an `alloc` instruction (§3.2).
+    AllocationId,
+    "A"
+);
+id_type!(
+    /// Message id tagging a `send` instruction; matched against pilot
+    /// messages during receive arbitration (§3.4, §4.2).
+    MessageId,
+    "MSG"
+);
+id_type!(
+    /// Id of a physical HLO kernel artifact registered with the runtime.
+    KernelId,
+    "K"
+);
+
+impl MemoryId {
+    /// User-controlled host memory.
+    pub const USER: MemoryId = MemoryId(0);
+    /// DMA-capable page-locked host memory; staging area for sends/receives.
+    pub const HOST: MemoryId = MemoryId(1);
+
+    /// Native memory of device `d` under the canonical 1:1 mapping
+    /// D0→M2, D1→M3, ... (§3.2).
+    pub fn device_native(d: DeviceId) -> MemoryId {
+        MemoryId(2 + d.0)
+    }
+
+    /// Whether this memory id denotes a device-native memory.
+    pub fn is_device(self) -> bool {
+        self.0 >= 2
+    }
+
+    /// Inverse of [`MemoryId::device_native`], if this is a device memory.
+    pub fn to_device(self) -> Option<DeviceId> {
+        self.is_device().then(|| DeviceId(self.0 - 2))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_uses_paper_prefixes() {
+        assert_eq!(TaskId(3).to_string(), "T3");
+        assert_eq!(CommandId(5).to_string(), "C5");
+        assert_eq!(InstructionId(24).to_string(), "I24");
+        assert_eq!(NodeId(0).to_string(), "N0");
+        assert_eq!(DeviceId(1).to_string(), "D1");
+        assert_eq!(MemoryId(2).to_string(), "M2");
+    }
+
+    #[test]
+    fn device_memory_mapping_is_canonical() {
+        assert_eq!(MemoryId::device_native(DeviceId(0)), MemoryId(2));
+        assert_eq!(MemoryId::device_native(DeviceId(3)), MemoryId(5));
+        assert_eq!(MemoryId(4).to_device(), Some(DeviceId(2)));
+        assert_eq!(MemoryId::USER.to_device(), None);
+        assert_eq!(MemoryId::HOST.to_device(), None);
+        assert!(!MemoryId::HOST.is_device());
+        assert!(MemoryId(2).is_device());
+    }
+}

@@ -1,0 +1,10 @@
+//! Small shared utilities: deterministic RNG (no external `rand` available
+//! offline), id newtypes, and a tiny property-testing helper used across the
+//! test suite.
+
+pub mod ids;
+pub mod rng;
+pub mod spsc;
+
+pub use ids::*;
+pub use rng::XorShift64;

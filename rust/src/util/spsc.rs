@@ -1,0 +1,253 @@
+//! Bounded single-producer single-consumer queue.
+//!
+//! The paper's architecture (§4, Fig 5) mediates all inter-thread
+//! communication through spsc queues so that the main thread, scheduler
+//! thread, executor thread and backend threads never contend on shared
+//! scheduling state. We implement a classic ring buffer with acquire/release
+//! atomics; `send` parks briefly when full (backpressure), `recv` parks when
+//! empty. Blocking uses a tiny spin-then-yield strategy because queue
+//! residency is expected to be short (the consumer is a dedicated thread).
+
+use std::cell::UnsafeCell;
+use std::mem::MaybeUninit;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+
+struct Ring<T> {
+    buf: Box<[UnsafeCell<MaybeUninit<T>>]>,
+    capacity: usize,
+    head: AtomicUsize, // next slot to read (consumer-owned)
+    tail: AtomicUsize, // next slot to write (producer-owned)
+    closed: AtomicBool,
+}
+
+unsafe impl<T: Send> Send for Ring<T> {}
+unsafe impl<T: Send> Sync for Ring<T> {}
+
+/// Sending half; owned by exactly one thread.
+pub struct Sender<T> {
+    ring: Arc<Ring<T>>,
+}
+
+/// Receiving half; owned by exactly one thread.
+pub struct Receiver<T> {
+    ring: Arc<Ring<T>>,
+}
+
+/// Error returned when the peer has disconnected.
+#[derive(Debug, PartialEq, Eq)]
+pub struct Disconnected;
+
+/// Create a bounded spsc channel with the given capacity (rounded up to a
+/// power of two, minimum 2).
+pub fn channel<T>(capacity: usize) -> (Sender<T>, Receiver<T>) {
+    let capacity = capacity.max(2).next_power_of_two();
+    let buf = (0..capacity)
+        .map(|_| UnsafeCell::new(MaybeUninit::uninit()))
+        .collect::<Vec<_>>()
+        .into_boxed_slice();
+    let ring = Arc::new(Ring {
+        buf,
+        capacity,
+        head: AtomicUsize::new(0),
+        tail: AtomicUsize::new(0),
+        closed: AtomicBool::new(false),
+    });
+    (Sender { ring: ring.clone() }, Receiver { ring })
+}
+
+const SPIN_LIMIT: u32 = 64;
+const YIELD_LIMIT: u32 = 192;
+
+fn backoff(iter: &mut u32) {
+    if *iter < SPIN_LIMIT {
+        std::hint::spin_loop();
+    } else if *iter < YIELD_LIMIT {
+        std::thread::yield_now();
+    } else {
+        // Long wait: stop burning the core (matters on small machines where
+        // many runtime threads share few cores).
+        std::thread::sleep(std::time::Duration::from_micros(100));
+    }
+    *iter += 1;
+}
+
+impl<T> Sender<T> {
+    /// Push a value, blocking while the queue is full. Returns `Err` if the
+    /// receiver has been dropped (value is lost in that case).
+    pub fn send(&self, value: T) -> Result<(), Disconnected> {
+        let ring = &*self.ring;
+        let tail = ring.tail.load(Ordering::Relaxed);
+        let mut iter = 0;
+        loop {
+            let head = ring.head.load(Ordering::Acquire);
+            if tail.wrapping_sub(head) < ring.capacity {
+                break;
+            }
+            if ring.closed.load(Ordering::Acquire) {
+                return Err(Disconnected);
+            }
+            backoff(&mut iter);
+        }
+        if ring.closed.load(Ordering::Acquire) {
+            return Err(Disconnected);
+        }
+        unsafe {
+            (*ring.buf[tail & (ring.capacity - 1)].get()).write(value);
+        }
+        ring.tail.store(tail.wrapping_add(1), Ordering::Release);
+        Ok(())
+    }
+
+    /// Non-blocking push. Returns the value back if the queue is full.
+    pub fn try_send(&self, value: T) -> Result<(), Result<T, Disconnected>> {
+        let ring = &*self.ring;
+        if ring.closed.load(Ordering::Acquire) {
+            return Err(Err(Disconnected));
+        }
+        let tail = ring.tail.load(Ordering::Relaxed);
+        let head = ring.head.load(Ordering::Acquire);
+        if tail.wrapping_sub(head) == ring.capacity {
+            return Err(Ok(value));
+        }
+        unsafe {
+            (*ring.buf[tail & (ring.capacity - 1)].get()).write(value);
+        }
+        ring.tail.store(tail.wrapping_add(1), Ordering::Release);
+        Ok(())
+    }
+}
+
+impl<T> Receiver<T> {
+    /// Pop a value, blocking while the queue is empty. Returns `Err` once
+    /// the queue is empty *and* the sender has been dropped.
+    pub fn recv(&self) -> Result<T, Disconnected> {
+        let mut iter = 0;
+        loop {
+            match self.try_recv() {
+                Ok(v) => return Ok(v),
+                Err(Some(Disconnected)) => return Err(Disconnected),
+                Err(None) => backoff(&mut iter),
+            }
+        }
+    }
+
+    /// Non-blocking pop. `Err(None)` means empty-but-alive,
+    /// `Err(Some(Disconnected))` means empty-and-peer-gone.
+    pub fn try_recv(&self) -> Result<T, Option<Disconnected>> {
+        let ring = &*self.ring;
+        let head = ring.head.load(Ordering::Relaxed);
+        let tail = ring.tail.load(Ordering::Acquire);
+        if head == tail {
+            if ring.closed.load(Ordering::Acquire) {
+                // Re-check tail: sender may have pushed before closing.
+                let tail = ring.tail.load(Ordering::Acquire);
+                if head == tail {
+                    return Err(Some(Disconnected));
+                }
+            } else {
+                return Err(None);
+            }
+        }
+        let value = unsafe { (*ring.buf[head & (ring.capacity - 1)].get()).assume_init_read() };
+        ring.head.store(head.wrapping_add(1), Ordering::Release);
+        Ok(value)
+    }
+
+    /// Drain everything currently visible in the queue.
+    pub fn drain(&self) -> Vec<T> {
+        let mut out = Vec::new();
+        while let Ok(v) = self.try_recv() {
+            out.push(v);
+        }
+        out
+    }
+}
+
+impl<T> Drop for Sender<T> {
+    fn drop(&mut self) {
+        self.ring.closed.store(true, Ordering::Release);
+    }
+}
+
+impl<T> Drop for Receiver<T> {
+    fn drop(&mut self) {
+        self.ring.closed.store(true, Ordering::Release);
+        // Drop any unread values.
+        while let Ok(v) = self.try_recv() {
+            drop(v);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_order_single_thread() {
+        let (tx, rx) = channel(8);
+        for i in 0..8 {
+            tx.send(i).unwrap();
+        }
+        for i in 0..8 {
+            assert_eq!(rx.recv().unwrap(), i);
+        }
+        assert_eq!(rx.try_recv(), Err(None));
+    }
+
+    #[test]
+    fn try_send_full_returns_value() {
+        let (tx, rx) = channel(2);
+        tx.try_send(1).unwrap();
+        tx.try_send(2).unwrap();
+        assert_eq!(tx.try_send(3), Err(Ok(3)));
+        assert_eq!(rx.recv().unwrap(), 1);
+        tx.try_send(3).unwrap();
+    }
+
+    #[test]
+    fn recv_after_sender_drop_drains_then_disconnects() {
+        let (tx, rx) = channel(4);
+        tx.send("a").unwrap();
+        tx.send("b").unwrap();
+        drop(tx);
+        assert_eq!(rx.recv().unwrap(), "a");
+        assert_eq!(rx.recv().unwrap(), "b");
+        assert_eq!(rx.recv(), Err(Disconnected));
+    }
+
+    #[test]
+    fn send_after_receiver_drop_errors() {
+        let (tx, rx) = channel(4);
+        drop(rx);
+        assert_eq!(tx.send(1), Err(Disconnected));
+    }
+
+    #[test]
+    fn cross_thread_stress() {
+        let (tx, rx) = channel(16);
+        let n = 100_000u64;
+        let producer = std::thread::spawn(move || {
+            for i in 0..n {
+                tx.send(i).unwrap();
+            }
+        });
+        let mut expect = 0;
+        while expect < n {
+            let v = rx.recv().unwrap();
+            assert_eq!(v, expect);
+            expect += 1;
+        }
+        producer.join().unwrap();
+    }
+
+    #[test]
+    fn drain_collects_pending() {
+        let (tx, rx) = channel(8);
+        for i in 0..5 {
+            tx.send(i).unwrap();
+        }
+        assert_eq!(rx.drain(), vec![0, 1, 2, 3, 4]);
+    }
+}
