@@ -5,9 +5,9 @@
 //! **AOT-compiled JAX/Pallas kernels** executed through the PJRT CPU client
 //! (L1/L2), scheduled by the instruction-graph runtime (L3). Results are
 //! checked element-wise against sequential golden models and throughput is
-//! reported. Requires `make artifacts`.
+//! reported. Requires `make artifacts` and the `pjrt` feature:
 //!
-//!     cargo run --release --example e2e_driver
+//!     cargo run --release --features pjrt --example e2e_driver
 
 use celerity::apps::{nbody, rsim, wavesim};
 use celerity::driver::{run_cluster, ClusterConfig};
@@ -50,8 +50,8 @@ fn main() {
         let rc = results.clone();
         let t0 = Instant::now();
         let reports = run_cluster(cfg, move |q| {
-            let (p, _) = nbody::submit(q, 256, 20);
-            let got = q.fence_f32(p);
+            let (p, _) = nbody::submit(q, 256, 20).expect("submit nbody");
+            let got: Vec<f32> = q.fence(p).expect("fence").into_iter().flatten().collect();
             rc.lock().unwrap().push(got);
         });
         let wall = t0.elapsed();
@@ -78,8 +78,8 @@ fn main() {
         let rc = results.clone();
         let t0 = Instant::now();
         let reports = run_cluster(cfg, move |q| {
-            let out = wavesim::submit(q, 64, 64, 12);
-            let got = q.fence_f32(out);
+            let out = wavesim::submit(q, 64, 64, 12).expect("submit wavesim");
+            let got = q.fence(out).expect("fence");
             rc.lock().unwrap().push(got);
         });
         let wall = t0.elapsed();
@@ -103,8 +103,8 @@ fn main() {
         let rc = results.clone();
         let t0 = Instant::now();
         let reports = run_cluster(cfg, move |q| {
-            let (rbuf, _) = rsim::submit(q, 32, 64, false);
-            let got = q.fence_f32(rbuf);
+            let (rbuf, _) = rsim::submit(q, 32, 64, false).expect("submit rsim");
+            let got = q.fence(rbuf).expect("fence");
             rc.lock().unwrap().push(got);
         });
         let wall = t0.elapsed();

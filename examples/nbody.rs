@@ -22,8 +22,9 @@ fn main() {
     let rc = results.clone();
     let t0 = Instant::now();
     let reports = run_cluster(cfg, move |q| {
-        let (p, _v) = nbody::submit(q, n, steps);
-        let got = q.fence_f32(p);
+        let (p, _v) = nbody::submit(q, n, steps).expect("submit nbody");
+        // Typed fence: Vec<[f32; 3]>, flattened for the golden-model diff.
+        let got: Vec<f32> = q.fence(p).expect("fence").into_iter().flatten().collect();
         rc.lock().unwrap().push(got);
     });
     let wall = t0.elapsed();

@@ -1,15 +1,16 @@
-//! Quickstart: the smallest complete celerity-idag program.
+//! Quickstart: the smallest complete celerity-idag program, written
+//! against the typed command-group API.
 //!
-//! One node, two (simulated) devices: create a buffer, run two dependent
-//! data-parallel kernels through the full TDAG → CDAG → IDAG → executor
-//! pipeline, read the result back with a fence.
+//! One node, two (simulated) devices: create typed buffers, run two
+//! dependent data-parallel kernels through the full TDAG → CDAG → IDAG →
+//! executor pipeline, read the result back with a typed fence.
 //!
 //!     cargo run --release --example quickstart
 
 use celerity::driver::{run_cluster, ClusterConfig};
 use celerity::executor::{KernelCtx, Registry};
 use celerity::grid::{Point, Range};
-use celerity::task::{RangeMapper, TaskDecl};
+use celerity::task::RangeMapper;
 use std::sync::{Arc, Mutex};
 
 fn main() {
@@ -47,20 +48,25 @@ fn main() {
 
     let reports = run_cluster(cfg, move |q| {
         let n = Range::d1(1024);
-        let a = q.create_buffer("A", n, 4, false);
-        let b = q.create_buffer("B", n, 4, false);
-        q.submit(
-            TaskDecl::device("iota", n)
-                .discard_write(a, RangeMapper::OneToOne)
-                .kernel("iota"),
-        );
-        q.submit(
-            TaskDecl::device("prefix_mean", n)
-                .read(a, RangeMapper::All) // all-gather pattern
-                .discard_write(b, RangeMapper::OneToOne)
-                .kernel("prefix_mean"),
-        );
-        *rc.lock().unwrap() = q.fence_f32(b);
+        // Typed buffers: the runtime derives element size, allocations and
+        // transfers from the handle's type — no raw byte counts anywhere.
+        let a = q.create_buffer::<f32>("A", n);
+        let b = q.create_buffer::<f32>("B", n);
+        // A command group scopes accessor declarations and the kernel
+        // launch into one closure (Listing 1's `q.submit`).
+        q.submit(|cgh| {
+            cgh.discard_write(a, RangeMapper::OneToOne);
+            cgh.parallel_for("iota", n);
+        })
+        .expect("submit iota");
+        q.submit(|cgh| {
+            cgh.read(a, RangeMapper::All); // all-gather pattern
+            cgh.discard_write(b, RangeMapper::OneToOne);
+            cgh.parallel_for("prefix_mean", n);
+        })
+        .expect("submit prefix_mean");
+        // Typed fence: shape/dtype mismatches come back as QueueError.
+        *rc.lock().unwrap() = q.fence(b).expect("fence");
     });
 
     let got = result.lock().unwrap();

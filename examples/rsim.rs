@@ -22,8 +22,8 @@ fn run(lookahead: bool, workaround: bool, steps: u64, width: u64) -> (f64, u64, 
     let rc = results.clone();
     let t0 = Instant::now();
     let reports = run_cluster(cfg, move |q| {
-        let (r, _) = rsim::submit(q, steps, width, workaround);
-        let got = q.fence_f32(r);
+        let (r, _) = rsim::submit(q, steps, width, workaround).expect("submit rsim");
+        let got = q.fence(r).expect("fence");
         rc.lock().unwrap().push(got);
     });
     let wall = t0.elapsed().as_secs_f64();

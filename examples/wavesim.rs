@@ -23,10 +23,10 @@ fn main() {
     let rc = results.clone();
     let t0 = Instant::now();
     let reports = run_cluster(cfg, move |q| {
-        let out = wavesim::submit(q, rows, cols, steps);
+        let out = wavesim::submit(q, rows, cols, steps).expect("submit wavesim");
         // Fence before taking the shared lock: nodes must be free to
         // communicate while each other's fences drain.
-        let got = q.fence_f32(out);
+        let got = q.fence(out).expect("fence");
         rc.lock().unwrap().push(got);
     });
     let wall = t0.elapsed();

@@ -6,28 +6,29 @@
 
 use celerity::grid::{GridBox, Range, Region};
 use celerity::sim::{simulate, ExecModel, SimConfig};
-use celerity::task::{RangeMapper, TaskDecl, TaskManager};
+use celerity::task::{RangeMapper, TaskManager};
 
 fn rsim(steps: u64, width: u64, workaround: bool) -> impl Fn(&mut TaskManager) {
     move |tm| {
-        let r = tm.create_buffer("R", Range::d2(steps, width), 4, true);
-        let vis = tm.create_buffer("VIS", Range::d2(width, 64), 4, true);
+        let r = tm.create_buffer::<f32>("R", Range::d2(steps, width), true);
+        let vis = tm.create_buffer::<f32>("VIS", Range::d2(width, 64), true);
         if workaround {
-            tm.submit(
-                TaskDecl::device("touch", Range::d1(width))
-                    .read_write(r, RangeMapper::Fixed(Region::full(Range::d2(steps, width))))
-                    .work_per_item(1.0),
-            );
+            tm.submit_group(|cgh| {
+                cgh.read_write(r, RangeMapper::Fixed(Region::full(Range::d2(steps, width))));
+                cgh.parallel_for("touch", Range::d1(width)).work_per_item(1.0);
+            })
+            .expect("submit touch");
         }
         for t in 1..steps {
             let prev = Region::from(GridBox::d2((0, 0), (t, width)));
-            tm.submit(
-                TaskDecl::device("radiosity", Range::d1(width))
-                    .read(r, RangeMapper::Fixed(prev))
-                    .read(vis, RangeMapper::All)
-                    .write(r, RangeMapper::RowSlice(t))
-                    .work_per_item(t as f64 * 100.0),
-            );
+            tm.submit_group(|cgh| {
+                cgh.read(r, RangeMapper::Fixed(prev));
+                cgh.read(vis, RangeMapper::All);
+                cgh.write(r, RangeMapper::RowSlice(t));
+                cgh.parallel_for("radiosity", Range::d1(width))
+                    .work_per_item(t as f64 * 100.0);
+            })
+            .expect("submit radiosity");
         }
     }
 }

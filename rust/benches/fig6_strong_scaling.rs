@@ -12,7 +12,7 @@
 
 use celerity::grid::{GridBox, Range, Region};
 use celerity::sim::{simulate, ExecModel, SimConfig};
-use celerity::task::{RangeMapper, TaskDecl, TaskManager};
+use celerity::task::{RangeMapper, TaskManager};
 
 const GPUS: &[u64] = &[4, 8, 16, 32, 64, 128];
 const DEVS_PER_NODE: u64 = 4;
@@ -20,47 +20,48 @@ const DEVS_PER_NODE: u64 = 4;
 fn nbody(n: u64, steps: usize) -> impl Fn(&mut TaskManager) {
     move |tm| {
         let range = Range::d1(n);
-        let p = tm.create_buffer("P", range, 12, true);
-        let v = tm.create_buffer("V", range, 12, true);
+        let p = tm.create_buffer::<[f32; 3]>("P", range, true);
+        let v = tm.create_buffer::<[f32; 3]>("V", range, true);
         for _ in 0..steps {
-            tm.submit(
-                TaskDecl::device("timestep", range)
-                    .read(p, RangeMapper::All)
-                    .read_write(v, RangeMapper::OneToOne)
-                    .work_per_item(n as f64 * 20.0),
-            );
-            tm.submit(
-                TaskDecl::device("update", range)
-                    .read(v, RangeMapper::OneToOne)
-                    .read_write(p, RangeMapper::OneToOne)
-                    .work_per_item(2.0),
-            );
+            tm.submit_group(|cgh| {
+                cgh.read(p, RangeMapper::All);
+                cgh.read_write(v, RangeMapper::OneToOne);
+                cgh.parallel_for("timestep", range).work_per_item(n as f64 * 20.0);
+            })
+            .expect("submit timestep");
+            tm.submit_group(|cgh| {
+                cgh.read(v, RangeMapper::OneToOne);
+                cgh.read_write(p, RangeMapper::OneToOne);
+                cgh.parallel_for("update", range).work_per_item(2.0);
+            })
+            .expect("submit update");
         }
     }
 }
 
 fn rsim(steps: u64, width: u64, workaround: bool) -> impl Fn(&mut TaskManager) {
     move |tm| {
-        let r = tm.create_buffer("R", Range::d2(steps, width), 4, true);
-        let vis = tm.create_buffer("VIS", Range::d2(width, 64), 4, true);
+        let r = tm.create_buffer::<f32>("R", Range::d2(steps, width), true);
+        let vis = tm.create_buffer::<f32>("VIS", Range::d2(width, 64), true);
         if workaround {
-            tm.submit(
-                TaskDecl::device("touch", Range::d1(width))
-                    .read_write(r, RangeMapper::Fixed(Region::full(Range::d2(steps, width))))
-                    .work_per_item(1.0),
-            );
+            tm.submit_group(|cgh| {
+                cgh.read_write(r, RangeMapper::Fixed(Region::full(Range::d2(steps, width))));
+                cgh.parallel_for("touch", Range::d1(width)).work_per_item(1.0);
+            })
+            .expect("submit touch");
         }
         for t in 1..steps {
             let prev = Region::from(GridBox::d2((0, 0), (t, width)));
-            tm.submit(
-                TaskDecl::device("radiosity", Range::d1(width))
-                    .read(r, RangeMapper::Fixed(prev))
-                    .read(vis, RangeMapper::All)
-                    .write(r, RangeMapper::RowSlice(t))
-                    // RSim's kernel scales well with GPU count (§5.2): heavy
-                    // per-item work growing with the history length.
-                    .work_per_item(t as f64 * 2000.0),
-            );
+            tm.submit_group(|cgh| {
+                cgh.read(r, RangeMapper::Fixed(prev));
+                cgh.read(vis, RangeMapper::All);
+                cgh.write(r, RangeMapper::RowSlice(t));
+                // RSim's kernel scales well with GPU count (§5.2): heavy
+                // per-item work growing with the history length.
+                cgh.parallel_for("radiosity", Range::d1(width))
+                    .work_per_item(t as f64 * 2000.0);
+            })
+            .expect("submit radiosity");
         }
     }
 }
@@ -69,21 +70,21 @@ fn wavesim(rows: u64, cols: u64, steps: usize) -> impl Fn(&mut TaskManager) {
     move |tm| {
         let range = Range::d2(rows, cols);
         let bufs = [
-            tm.create_buffer("U0", range, 4, true),
-            tm.create_buffer("U1", range, 4, true),
-            tm.create_buffer("U2", range, 4, true),
+            tm.create_buffer::<f32>("U0", range, true),
+            tm.create_buffer::<f32>("U1", range, true),
+            tm.create_buffer::<f32>("U2", range, true),
         ];
         for s in 0..steps {
             let prev = bufs[s % 3];
             let curr = bufs[(s + 1) % 3];
             let next = bufs[(s + 2) % 3];
-            tm.submit(
-                TaskDecl::device("wavesim", range)
-                    .read(prev, RangeMapper::Neighborhood(Range::d2(1, 0)))
-                    .read(curr, RangeMapper::Neighborhood(Range::d2(1, 0)))
-                    .write(next, RangeMapper::OneToOne)
-                    .work_per_item(10.0),
-            );
+            tm.submit_group(|cgh| {
+                cgh.read(prev, RangeMapper::Neighborhood(Range::d2(1, 0)));
+                cgh.read(curr, RangeMapper::Neighborhood(Range::d2(1, 0)));
+                cgh.write(next, RangeMapper::OneToOne);
+                cgh.parallel_for("wavesim", range).work_per_item(10.0);
+            })
+            .expect("submit wavesim");
         }
     }
 }

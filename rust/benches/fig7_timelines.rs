@@ -11,7 +11,7 @@
 
 use celerity::grid::{GridBox, Range, Region};
 use celerity::sim::{simulate, SimConfig, TraceEvent};
-use celerity::task::{RangeMapper, TaskDecl, TaskManager};
+use celerity::task::RangeMapper;
 use std::collections::BTreeMap;
 
 const WIDTH: usize = 100;
@@ -50,21 +50,21 @@ fn main() {
     // N-body, small problem (paper: "small problem sizes").
     let r = simulate(&cfg, |tm| {
         let range = Range::d1(4096);
-        let p = tm.create_buffer("P", range, 12, true);
-        let v = tm.create_buffer("V", range, 12, true);
+        let p = tm.create_buffer::<[f32; 3]>("P", range, true);
+        let v = tm.create_buffer::<[f32; 3]>("V", range, true);
         for _ in 0..6 {
-            tm.submit(
-                TaskDecl::device("timestep", range)
-                    .read(p, RangeMapper::All)
-                    .read_write(v, RangeMapper::OneToOne)
-                    .work_per_item(4096.0 * 20.0),
-            );
-            tm.submit(
-                TaskDecl::device("update", range)
-                    .read(v, RangeMapper::OneToOne)
-                    .read_write(p, RangeMapper::OneToOne)
-                    .work_per_item(2.0),
-            );
+            tm.submit_group(|cgh| {
+                cgh.read(p, RangeMapper::All);
+                cgh.read_write(v, RangeMapper::OneToOne);
+                cgh.parallel_for("timestep", range).work_per_item(4096.0 * 20.0);
+            })
+            .expect("submit timestep");
+            tm.submit_group(|cgh| {
+                cgh.read(v, RangeMapper::OneToOne);
+                cgh.read_write(p, RangeMapper::OneToOne);
+                cgh.parallel_for("update", range).work_per_item(2.0);
+            })
+            .expect("submit update");
         }
     });
     render("N-body", &r.trace, r.makespan);
@@ -73,17 +73,18 @@ fn main() {
     // first instruction executes.
     let r = simulate(&cfg, |tm| {
         let (steps, width) = (24u64, 4096u64);
-        let rb = tm.create_buffer("R", Range::d2(steps, width), 4, true);
-        let vis = tm.create_buffer("VIS", Range::d2(width, 64), 4, true);
+        let rb = tm.create_buffer::<f32>("R", Range::d2(steps, width), true);
+        let vis = tm.create_buffer::<f32>("VIS", Range::d2(width, 64), true);
         for t in 1..steps {
             let prev = Region::from(GridBox::d2((0, 0), (t, width)));
-            tm.submit(
-                TaskDecl::device("radiosity", Range::d1(width))
-                    .read(rb, RangeMapper::Fixed(prev))
-                    .read(vis, RangeMapper::All)
-                    .write(rb, RangeMapper::RowSlice(t))
-                    .work_per_item(t as f64 * 500.0),
-            );
+            tm.submit_group(|cgh| {
+                cgh.read(rb, RangeMapper::Fixed(prev));
+                cgh.read(vis, RangeMapper::All);
+                cgh.write(rb, RangeMapper::RowSlice(t));
+                cgh.parallel_for("radiosity", Range::d1(width))
+                    .work_per_item(t as f64 * 500.0);
+            })
+            .expect("submit radiosity");
         }
     });
     render("RSim", &r.trace, r.makespan);
@@ -92,21 +93,21 @@ fn main() {
     let r = simulate(&cfg, |tm| {
         let range = Range::d2(512, 256);
         let bufs = [
-            tm.create_buffer("U0", range, 4, true),
-            tm.create_buffer("U1", range, 4, true),
-            tm.create_buffer("U2", range, 4, true),
+            tm.create_buffer::<f32>("U0", range, true),
+            tm.create_buffer::<f32>("U1", range, true),
+            tm.create_buffer::<f32>("U2", range, true),
         ];
         for s in 0..10usize {
             let prev = bufs[s % 3];
             let curr = bufs[(s + 1) % 3];
             let next = bufs[(s + 2) % 3];
-            tm.submit(
-                TaskDecl::device("wavesim", range)
-                    .read(prev, RangeMapper::Neighborhood(Range::d2(1, 0)))
-                    .read(curr, RangeMapper::Neighborhood(Range::d2(1, 0)))
-                    .write(next, RangeMapper::OneToOne)
-                    .work_per_item(10.0),
-            );
+            tm.submit_group(|cgh| {
+                cgh.read(prev, RangeMapper::Neighborhood(Range::d2(1, 0)));
+                cgh.read(curr, RangeMapper::Neighborhood(Range::d2(1, 0)));
+                cgh.write(next, RangeMapper::OneToOne);
+                cgh.parallel_for("wavesim", range).work_per_item(10.0);
+            })
+            .expect("submit wavesim");
         }
     });
     render("WaveSim", &r.trace, r.makespan);

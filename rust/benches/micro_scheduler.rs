@@ -14,7 +14,7 @@ use celerity::executor::ooo::OooEngine;
 use celerity::grid::{GridBox, Range, Region};
 use celerity::instruction::{IdagConfig, IdagGenerator};
 use celerity::scheduler::{Scheduler, SchedulerConfig};
-use celerity::task::{RangeMapper, TaskDecl, TaskManager};
+use celerity::task::{RangeMapper, TaskManager};
 use celerity::util::{spsc, NodeId};
 use std::time::Instant;
 
@@ -77,19 +77,21 @@ fn main() {
     bench("idag generation (nbody, 4 devices)", || {
         let mut tm = TaskManager::new();
         let range = Range::d1(1 << 16);
-        let p = tm.create_buffer("P", range, 12, true);
-        let v = tm.create_buffer("V", range, 12, true);
+        let p = tm.create_buffer::<[f32; 3]>("P", range, true);
+        let v = tm.create_buffer::<[f32; 3]>("V", range, true);
         for _ in 0..200 {
-            tm.submit(
-                TaskDecl::device("timestep", range)
-                    .read(p, RangeMapper::All)
-                    .read_write(v, RangeMapper::OneToOne),
-            );
-            tm.submit(
-                TaskDecl::device("update", range)
-                    .read(v, RangeMapper::OneToOne)
-                    .read_write(p, RangeMapper::OneToOne),
-            );
+            tm.submit_group(|cgh| {
+                cgh.read(p, RangeMapper::All);
+                cgh.read_write(v, RangeMapper::OneToOne);
+                cgh.parallel_for("timestep", range);
+            })
+            .expect("submit timestep");
+            tm.submit_group(|cgh| {
+                cgh.read(v, RangeMapper::OneToOne);
+                cgh.read_write(p, RangeMapper::OneToOne);
+                cgh.parallel_for("update", range);
+            })
+            .expect("submit update");
         }
         let tasks = tm.take_new_tasks();
         let mut sched = Scheduler::new(
@@ -109,19 +111,21 @@ fn main() {
     bench("cdag generation (nbody, node 0 of 32)", || {
         let mut tm = TaskManager::new();
         let range = Range::d1(1 << 16);
-        let p = tm.create_buffer("P", range, 12, true);
-        let v = tm.create_buffer("V", range, 12, true);
+        let p = tm.create_buffer::<[f32; 3]>("P", range, true);
+        let v = tm.create_buffer::<[f32; 3]>("V", range, true);
         for _ in 0..50 {
-            tm.submit(
-                TaskDecl::device("timestep", range)
-                    .read(p, RangeMapper::All)
-                    .read_write(v, RangeMapper::OneToOne),
-            );
-            tm.submit(
-                TaskDecl::device("update", range)
-                    .read(v, RangeMapper::OneToOne)
-                    .read_write(p, RangeMapper::OneToOne),
-            );
+            tm.submit_group(|cgh| {
+                cgh.read(p, RangeMapper::All);
+                cgh.read_write(v, RangeMapper::OneToOne);
+                cgh.parallel_for("timestep", range);
+            })
+            .expect("submit timestep");
+            tm.submit_group(|cgh| {
+                cgh.read(v, RangeMapper::OneToOne);
+                cgh.read_write(p, RangeMapper::OneToOne);
+                cgh.parallel_for("update", range);
+            })
+            .expect("submit update");
         }
         let tasks = tm.take_new_tasks();
         let mut cg = CdagGenerator::new(NodeId(0), 32, SplitHint::D1, tm.buffers().clone());
@@ -169,16 +173,17 @@ fn main() {
     bench("scheduler lookahead (rsim 64 steps)", || {
         let mut tm = TaskManager::new();
         let (steps, width) = (64u64, 4096u64);
-        let r = tm.create_buffer("R", Range::d2(steps, width), 4, true);
-        let vis = tm.create_buffer("VIS", Range::d2(width, 64), 4, true);
+        let r = tm.create_buffer::<f32>("R", Range::d2(steps, width), true);
+        let vis = tm.create_buffer::<f32>("VIS", Range::d2(width, 64), true);
         for t in 1..steps {
             let prev = Region::from(GridBox::d2((0, 0), (t, width)));
-            tm.submit(
-                TaskDecl::device("radiosity", Range::d1(width))
-                    .read(r, RangeMapper::Fixed(prev))
-                    .read(vis, RangeMapper::All)
-                    .write(r, RangeMapper::RowSlice(t)),
-            );
+            tm.submit_group(|cgh| {
+                cgh.read(r, RangeMapper::Fixed(prev));
+                cgh.read(vis, RangeMapper::All);
+                cgh.write(r, RangeMapper::RowSlice(t));
+                cgh.parallel_for("radiosity", Range::d1(width));
+            })
+            .expect("submit radiosity");
         }
         let tasks = tm.take_new_tasks();
         let mut sched = Scheduler::new(

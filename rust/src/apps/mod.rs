@@ -2,12 +2,12 @@
 //!
 //! Each app provides, in its submodule:
 //!
-//! - `submit_*`: the Celerity-style SPMD program (task submissions against
-//!   a [`NodeQueue`](crate::driver::NodeQueue)),
+//! - `submit`: the Celerity-style SPMD program (typed command-group
+//!   submissions against a [`Queue`](crate::driver::Queue)),
 //! - `register_reference_kernels`: pure-Rust kernel implementations with
 //!   the exact numerics of `python/compile/kernels/ref.py`,
-//! - `register_pjrt_kernels`: closures that execute the AOT-compiled
-//!   JAX/Pallas artifacts via [`crate::runtime`],
+//! - `register_pjrt_kernels` (behind the `pjrt` feature): closures that
+//!   execute the AOT-compiled JAX/Pallas artifacts via `crate::runtime`,
 //! - `reference`: a sequential golden model used by the tests and the
 //!   end-to-end driver to validate results.
 

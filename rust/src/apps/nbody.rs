@@ -1,56 +1,57 @@
 //! Direct N-body simulation (Listing 1): the all-gather access pattern.
 
 use super::consts::{DT, EPS2, M};
-use crate::driver::NodeQueue;
+use crate::buffer::Buffer;
+use crate::driver::Queue;
 use crate::executor::{KernelCtx, Registry};
 use crate::grid::{Point, Range};
+#[cfg(feature = "pjrt")]
 use crate::runtime::{ArgBytes, RuntimeClient};
-use crate::task::{RangeMapper, TaskDecl};
-use crate::util::BufferId;
+use crate::task::QueueError;
 use std::sync::Arc;
 
 /// Deterministic initial state: positions on a perturbed lattice,
-/// velocities zero. Returns (P, V) interleaved xyz, f32.
-pub fn initial_state(n: usize) -> (Vec<f32>, Vec<f32>) {
+/// velocities zero. Returns (P, V) as "double3"-style elements.
+pub fn initial_state(n: usize) -> (Vec<[f32; 3]>, Vec<[f32; 3]>) {
     let mut rng = crate::util::XorShift64::new(0x5EED + n as u64);
-    let mut p = Vec::with_capacity(n * 3);
+    let mut p = Vec::with_capacity(n);
     for i in 0..n {
-        for d in 0..3 {
-            p.push((i as f32 * 0.37 + d as f32) * 0.01 + rng.next_f64() as f32 * 0.1);
+        let mut e = [0f32; 3];
+        for (d, lane) in e.iter_mut().enumerate() {
+            *lane = (i as f32 * 0.37 + d as f32) * 0.01 + rng.next_f64() as f32 * 0.1;
         }
+        p.push(e);
     }
-    (p, vec![0f32; n * 3])
+    (p, vec![[0f32; 3]; n])
 }
 
 /// Submit the Listing-1 program: `steps` iterations of timestep + update.
 /// Buffers `p` and `v` hold one `double3`-style element (3×f32 = 12 B) per
-/// body. Returns (P, V) buffer ids.
-pub fn submit(q: &mut NodeQueue, n: u64, steps: usize) -> (BufferId, BufferId) {
+/// body. Returns the typed (P, V) buffer handles.
+pub fn submit(
+    q: &mut Queue,
+    n: u64,
+    steps: usize,
+) -> Result<(Buffer<[f32; 3]>, Buffer<[f32; 3]>), QueueError> {
     let range = Range::d1(n);
-    let p = q.create_buffer("P", range, 12, true);
-    let v = q.create_buffer("V", range, 12, true);
     let (p0, v0) = initial_state(n as usize);
-    q.init_buffer_f32(p, &p0);
-    q.init_buffer_f32(v, &v0);
+    let p = q.create_buffer_init("P", range, &p0)?;
+    let v = q.create_buffer_init("V", range, &v0)?;
     // Cost hint: the inner j-loop makes each work item O(N).
     let work = n as f64 * 20.0;
     for _ in 0..steps {
-        q.submit(
-            TaskDecl::device("timestep", range)
-                .read(p, RangeMapper::All)
-                .read_write(v, RangeMapper::OneToOne)
-                .kernel("nbody_timestep")
-                .work_per_item(work),
-        );
-        q.submit(
-            TaskDecl::device("update", range)
-                .read(v, RangeMapper::OneToOne)
-                .read_write(p, RangeMapper::OneToOne)
-                .kernel("nbody_update")
-                .work_per_item(2.0),
-        );
+        q.submit(|cgh| {
+            cgh.read(p, crate::task::RangeMapper::All);
+            cgh.read_write(v, crate::task::RangeMapper::OneToOne);
+            cgh.parallel_for("nbody_timestep", range).work_per_item(work);
+        })?;
+        q.submit(|cgh| {
+            cgh.read(v, crate::task::RangeMapper::OneToOne);
+            cgh.read_write(p, crate::task::RangeMapper::OneToOne);
+            cgh.parallel_for("nbody_update", range).work_per_item(2.0);
+        })?;
     }
-    (p, v)
+    Ok((p, v))
 }
 
 /// Force on body at `pi` from all bodies in `p_all` (softened gravity,
@@ -121,6 +122,7 @@ pub fn register_reference_kernels(registry: &Registry) {
 
 /// Kernels that execute the AOT-compiled JAX/Pallas artifacts. The artifact
 /// shapes (N, chunk) must match the cluster split — see `aot.py` defaults.
+#[cfg(feature = "pjrt")]
 pub fn register_pjrt_kernels(registry: &Registry, rt: &Arc<RuntimeClient>) {
     let timestep = rt.kernel("nbody_timestep").expect("artifact nbody_timestep");
     registry.register_kernel(
@@ -157,9 +159,12 @@ pub fn register_pjrt_kernels(registry: &Registry, rt: &Arc<RuntimeClient>) {
     );
 }
 
-/// Sequential golden model: returns final P after `steps` iterations.
+/// Sequential golden model: returns final P after `steps` iterations, as
+/// flat interleaved xyz.
 pub fn reference(n: usize, steps: usize) -> Vec<f32> {
-    let (mut p, mut v) = initial_state(n);
+    let (p0, v0) = initial_state(n);
+    let mut p: Vec<f32> = p0.into_iter().flatten().collect();
+    let mut v: Vec<f32> = v0.into_iter().flatten().collect();
     for _ in 0..steps {
         let snapshot = p.clone();
         for i in 0..n {
@@ -195,8 +200,8 @@ mod tests {
         let results = Arc::new(Mutex::new(Vec::new()));
         let rc = results.clone();
         let reports = run_cluster(cfg, move |q| {
-            let (p, _v) = submit(q, 64, 3);
-            let got = q.fence_f32(p);
+            let (p, _v) = submit(q, 64, 3).expect("submit nbody");
+            let got: Vec<f32> = q.fence(p).expect("fence").into_iter().flatten().collect();
             rc.lock().unwrap().push(got);
         });
         for r in &reports {

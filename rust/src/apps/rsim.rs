@@ -4,12 +4,13 @@
 //! unless scheduler lookahead (§4.3) is active."
 
 use super::consts::RSIM_NORM;
-use crate::driver::NodeQueue;
+use crate::buffer::Buffer;
+use crate::driver::Queue;
 use crate::executor::{KernelCtx, Registry};
 use crate::grid::{GridBox, Point, Range, Region};
+#[cfg(feature = "pjrt")]
 use crate::runtime::{ArgBytes, RuntimeClient};
-use crate::task::{RangeMapper, TaskDecl};
-use crate::util::BufferId;
+use crate::task::{QueueError, RangeMapper};
 use std::sync::Arc;
 
 /// Deterministic visibility/reflectance matrix (row-major W × W) and the
@@ -32,44 +33,39 @@ pub fn initial_scene(width: usize) -> (Vec<f32>, Vec<f32>) {
 /// kernel first, pre-allocating the whole buffer (the baseline-runtime
 /// workaround; with IDAG lookahead it is unnecessary).
 pub fn submit(
-    q: &mut NodeQueue,
+    q: &mut Queue,
     steps: u64,
     width: u64,
     workaround: bool,
-) -> (BufferId, BufferId) {
+) -> Result<(Buffer<f32>, Buffer<f32>), QueueError> {
     let (vis0, row0) = initial_scene(width as usize);
-    let r = q.create_buffer("R", Range::d2(steps, width), 4, true);
-    let vis = q.create_buffer("VIS", Range::d2(width, width), 4, true);
-    q.init_buffer_f32(vis, &vis0);
     // Row 0 = emission; rest zero.
     let mut r0 = vec![0f32; (steps * width) as usize];
     r0[..width as usize].copy_from_slice(&row0);
-    q.init_buffer_f32(r, &r0);
+    let r = q.create_buffer_init("R", Range::d2(steps, width), &r0)?;
+    let vis = q.create_buffer_init("VIS", Range::d2(width, width), &vis0)?;
 
     if workaround {
         // "a no-op kernel which zero-initializes (and thus allocates) the
         // entire buffer at the start of the program" — §5.2. Read-write
         // keeps row 0 intact.
-        q.submit(
-            TaskDecl::device("rsim_touch", Range::d1(width))
-                .read_write(r, RangeMapper::Fixed(Region::full(Range::d2(steps, width))))
-                .kernel("rsim_touch")
-                .work_per_item(1.0),
-        );
+        q.submit(|cgh| {
+            cgh.read_write(r, RangeMapper::Fixed(Region::full(Range::d2(steps, width))));
+            cgh.parallel_for("rsim_touch", Range::d1(width)).work_per_item(1.0);
+        })?;
     }
 
     for t in 1..steps {
         let prev = Region::from(GridBox::d2((0, 0), (t, width)));
-        q.submit(
-            TaskDecl::device("radiosity", Range::d1(width))
-                .read(r, RangeMapper::Fixed(prev))
-                .read(vis, RangeMapper::All)
-                .write(r, RangeMapper::RowSlice(t))
-                .kernel("rsim_row")
-                .work_per_item(t as f64 * width as f64),
-        );
+        q.submit(|cgh| {
+            cgh.read(r, RangeMapper::Fixed(prev));
+            cgh.read(vis, RangeMapper::All);
+            cgh.write(r, RangeMapper::RowSlice(t));
+            cgh.parallel_for("rsim_row", Range::d1(width))
+                .work_per_item(t as f64 * width as f64);
+        })?;
     }
-    (r, vis)
+    Ok((r, vis))
 }
 
 /// Pure-Rust kernels with ref.py numerics.
@@ -110,6 +106,7 @@ pub fn register_reference_kernels(registry: &Registry) {
 }
 
 /// PJRT kernels executing the padded-history `rsim_row` artifact.
+#[cfg(feature = "pjrt")]
 pub fn register_pjrt_kernels(registry: &Registry, rt: &Arc<RuntimeClient>) {
     let row = rt.kernel("rsim_row").expect("artifact rsim_row");
     registry.register_kernel(
@@ -173,12 +170,17 @@ mod tests {
     use crate::driver::{run_cluster, ClusterConfig};
     use std::sync::Mutex;
 
-    fn run(cfg: ClusterConfig, steps: u64, width: u64, workaround: bool) -> (Vec<Vec<f32>>, Vec<crate::driver::NodeReport>) {
+    fn run(
+        cfg: ClusterConfig,
+        steps: u64,
+        width: u64,
+        workaround: bool,
+    ) -> (Vec<Vec<f32>>, Vec<crate::driver::NodeReport>) {
         let results = Arc::new(Mutex::new(Vec::new()));
         let rc = results.clone();
         let reports = run_cluster(cfg, move |q| {
-            let (r, _) = submit(q, steps, width, workaround);
-            let got = q.fence_f32(r);
+            let (r, _) = submit(q, steps, width, workaround).expect("submit rsim");
+            let got = q.fence(r).expect("fence");
             rc.lock().unwrap().push(got);
         });
         let r = std::mem::take(&mut *results.lock().unwrap());

@@ -5,12 +5,13 @@
 //! Three buffers rotate through the (prev, curr, next) roles each step.
 
 use super::consts::WAVE_C;
-use crate::driver::NodeQueue;
+use crate::buffer::Buffer;
+use crate::driver::Queue;
 use crate::executor::{KernelCtx, Registry};
 use crate::grid::{Point, Range};
+#[cfg(feature = "pjrt")]
 use crate::runtime::{ArgBytes, RuntimeClient};
-use crate::task::{RangeMapper, TaskDecl};
-use crate::util::BufferId;
+use crate::task::{QueueError, RangeMapper};
 use std::sync::Arc;
 
 /// Deterministic initial field: a centered Gaussian-ish impulse.
@@ -28,31 +29,33 @@ pub fn initial_field(rows: usize, cols: usize) -> Vec<f32> {
 
 /// Submit `steps` stencil iterations over an (rows × cols) field.
 /// Returns the buffer holding the final field (depends on step parity).
-pub fn submit(q: &mut NodeQueue, rows: u64, cols: u64, steps: usize) -> BufferId {
+pub fn submit(
+    q: &mut Queue,
+    rows: u64,
+    cols: u64,
+    steps: usize,
+) -> Result<Buffer<f32>, QueueError> {
     let range = Range::d2(rows, cols);
     let u0 = initial_field(rows as usize, cols as usize);
+    let zeros = vec![0f32; (rows * cols) as usize];
     let bufs = [
-        q.create_buffer("U0", range, 4, true),
-        q.create_buffer("U1", range, 4, true),
-        q.create_buffer("U2", range, 4, true),
+        q.create_buffer_init("U0", range, &u0)?,
+        q.create_buffer_init("U1", range, &u0)?,
+        q.create_buffer_init("U2", range, &zeros)?,
     ];
-    q.init_buffer_f32(bufs[0], &u0);
-    q.init_buffer_f32(bufs[1], &u0);
     for s in 0..steps {
         let prev = bufs[s % 3];
         let curr = bufs[(s + 1) % 3];
         let next = bufs[(s + 2) % 3];
-        q.submit(
-            TaskDecl::device("wavesim", range)
-                // The artifact consumes haloed windows of both fields.
-                .read(prev, RangeMapper::Neighborhood(Range::d2(1, 0)))
-                .read(curr, RangeMapper::Neighborhood(Range::d2(1, 0)))
-                .write(next, RangeMapper::OneToOne)
-                .kernel("wavesim_step")
-                .work_per_item(10.0),
-        );
+        q.submit(|cgh| {
+            // The artifact consumes haloed windows of both fields.
+            cgh.read(prev, RangeMapper::Neighborhood(Range::d2(1, 0)));
+            cgh.read(curr, RangeMapper::Neighborhood(Range::d2(1, 0)));
+            cgh.write(next, RangeMapper::OneToOne);
+            cgh.parallel_for("wavesim_step", range).work_per_item(10.0);
+        })?;
     }
-    bufs[(steps + 1) % 3]
+    Ok(bufs[(steps + 1) % 3])
 }
 
 /// Pure-Rust stencil with ref.py numerics (zero Dirichlet boundary).
@@ -63,8 +66,6 @@ pub fn register_reference_kernels(registry: &Registry) {
             let prev = ctx.view(0);
             let curr = ctx.view(1);
             let next = ctx.view(2);
-            let rows = curr.binding.region.bounding_box().max[0]; // clamp source
-            let _ = rows;
             let full_rows = prev.binding.region.bounding_box();
             let cols = full_rows.max[1];
             let at = |v: &crate::executor::BindingView, r: i64, c: i64| -> f32 {
@@ -98,6 +99,7 @@ pub fn register_reference_kernels(registry: &Registry) {
 /// PJRT kernels executing the `wavesim_step` artifact. The artifact expects
 /// fixed (rows+2, cols) windows; edge chunks (clamped neighborhoods) are
 /// zero-padded to match — the zero Dirichlet boundary.
+#[cfg(feature = "pjrt")]
 pub fn register_pjrt_kernels(registry: &Registry, rt: &Arc<RuntimeClient>) {
     let step = rt.kernel("wavesim_step").expect("artifact wavesim_step");
     registry.register_kernel(
@@ -111,7 +113,6 @@ pub fn register_pjrt_kernels(registry: &Registry, rt: &Arc<RuntimeClient>) {
             let chunk_rows = (ctx.chunk.max[0] - ctx.chunk.min[0]) as usize;
             assert_eq!(chunk_rows + 2, win_rows, "artifact shard shape mismatch");
             let pad = |v: &crate::executor::BindingView| -> Vec<u8> {
-                let bbox = v.binding.region.bounding_box();
                 let bytes = v.read_region_bytes();
                 let row_bytes = cols * 4;
                 let mut out = vec![0u8; win_rows * row_bytes];
@@ -119,7 +120,6 @@ pub fn register_pjrt_kernels(registry: &Registry, rt: &Arc<RuntimeClient>) {
                 let lead_missing = if ctx.chunk.min[0] == 0 { 1 } else { 0 };
                 let start = lead_missing * row_bytes;
                 out[start..start + bytes.len()].copy_from_slice(&bytes);
-                let _ = bbox;
                 out
             };
             let p_bytes = pad(prev);
@@ -180,8 +180,8 @@ mod tests {
         let results = Arc::new(Mutex::new(Vec::new()));
         let rc = results.clone();
         let reports = run_cluster(cfg, move |q| {
-            let out = submit(q, 32, 16, 4);
-            let got = q.fence_f32(out);
+            let out = submit(q, 32, 16, 4).expect("submit wavesim");
+            let got = q.fence(out).expect("fence");
             rc.lock().unwrap().push(got);
         });
         for r in &reports {

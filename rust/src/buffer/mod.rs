@@ -3,12 +3,78 @@
 //! A Celerity buffer is a *virtual* n-dimensional array: the user sees a
 //! single global index space, while the runtime materializes only the
 //! subregions each memory actually accesses (§2.2). This module holds the
-//! buffer *metadata* registry; backing allocations live in the instruction
+//! buffer *metadata* registry plus the typed [`Buffer`] handle of the
+//! user-facing queue API; backing allocations live in the instruction
 //! layer, and concrete bytes live with the executor.
 
+use crate::dtype::{DType, Elem};
 use crate::grid::{Range, Region};
 use crate::util::BufferId;
 use std::collections::HashMap;
+use std::marker::PhantomData;
+
+/// Typed handle to a virtualized buffer, carrying the element type in its
+/// type parameter (Listing 1's `celerity::buffer<T, Dims>`). Handles are
+/// cheap `Copy` tokens — the metadata lives in the [`BufferPool`].
+pub struct Buffer<T: Elem> {
+    id: BufferId,
+    range: Range,
+    _elem: PhantomData<fn() -> T>,
+}
+
+impl<T: Elem> Buffer<T> {
+    /// Wrap a raw buffer id in a typed handle *without* checking the
+    /// registered dtype. Queue operations re-validate against the pool, so
+    /// a wrong cast surfaces as `QueueError::DTypeMismatch`, not UB.
+    pub fn from_raw(id: BufferId, range: Range) -> Self {
+        Buffer { id, range, _elem: PhantomData }
+    }
+
+    pub fn id(self) -> BufferId {
+        self.id
+    }
+
+    /// Extent of the (virtual) global index space.
+    pub fn range(self) -> Range {
+        self.range
+    }
+
+    /// Number of elements in the full index space.
+    pub fn len(self) -> u64 {
+        self.range.size()
+    }
+
+    pub fn is_empty(self) -> bool {
+        self.len() == 0
+    }
+}
+
+// Manual impls: `T` is phantom, so no `T: Clone/Copy/...` bounds needed.
+impl<T: Elem> Clone for Buffer<T> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+impl<T: Elem> Copy for Buffer<T> {}
+
+impl<T: Elem> PartialEq for Buffer<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.id == other.id
+    }
+}
+impl<T: Elem> Eq for Buffer<T> {}
+
+impl<T: Elem> std::fmt::Debug for Buffer<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Buffer<{}x{}>({})", T::DTYPE, T::LANES, self.id)
+    }
+}
+
+impl<T: Elem> From<Buffer<T>> for BufferId {
+    fn from(b: Buffer<T>) -> BufferId {
+        b.id
+    }
+}
 
 /// Static description of one virtualized buffer.
 #[derive(Debug, Clone)]
@@ -16,13 +82,17 @@ pub struct BufferInfo {
     pub id: BufferId,
     /// Extent of the (virtual) global index space.
     pub range: Range,
-    /// Size of one element in bytes.
+    /// Scalar type of each element lane.
+    pub dtype: DType,
+    /// Scalar lanes per element (3 for the "double3"-style N-body state).
+    pub lanes: usize,
+    /// Size of one element in bytes (`dtype.size() * lanes`).
     pub elem_size: usize,
     /// Debug name, e.g. `"P"` / `"V"` in the N-body listing.
     pub name: String,
-    /// Region whose contents were supplied by the user at creation (a
-    /// host-initialized buffer starts fully initialized; others start fully
-    /// uninitialized and reading them is a correctness error, §4.4).
+    /// Region whose contents were supplied by the user (a host-initialized
+    /// buffer starts fully initialized; others start fully uninitialized
+    /// and reading them is a correctness error, §4.4).
     pub host_initialized: Region,
 }
 
@@ -52,7 +122,8 @@ impl BufferPool {
         &mut self,
         name: impl Into<String>,
         range: Range,
-        elem_size: usize,
+        dtype: DType,
+        lanes: usize,
         host_initialized: bool,
     ) -> BufferId {
         let id = BufferId(self.next);
@@ -62,7 +133,9 @@ impl BufferPool {
             BufferInfo {
                 id,
                 range,
-                elem_size,
+                dtype,
+                lanes,
+                elem_size: dtype.size() * lanes,
                 name: name.into(),
                 host_initialized: if host_initialized {
                     Region::full(range)
@@ -76,6 +149,10 @@ impl BufferPool {
 
     pub fn get(&self, id: BufferId) -> &BufferInfo {
         &self.infos[&id]
+    }
+
+    pub(crate) fn get_mut(&mut self, id: BufferId) -> &mut BufferInfo {
+        self.infos.get_mut(&id).expect("unknown buffer id")
     }
 
     pub fn try_get(&self, id: BufferId) -> Option<&BufferInfo> {
@@ -102,19 +179,20 @@ mod tests {
     #[test]
     fn create_assigns_sequential_ids() {
         let mut pool = BufferPool::new();
-        let a = pool.create("P", Range::d1(128), 24, true);
-        let b = pool.create("V", Range::d1(128), 24, false);
+        let a = pool.create("P", Range::d1(128), DType::F64, 3, true);
+        let b = pool.create("V", Range::d1(128), DType::F64, 3, false);
         assert_eq!(a, BufferId(0));
         assert_eq!(b, BufferId(1));
         assert_eq!(pool.len(), 2);
         assert_eq!(pool.get(a).name, "P");
+        assert_eq!(pool.get(a).elem_size, 24);
     }
 
     #[test]
     fn host_init_region_matches_flag() {
         let mut pool = BufferPool::new();
-        let a = pool.create("init", Range::d2(4, 4), 8, true);
-        let b = pool.create("raw", Range::d2(4, 4), 8, false);
+        let a = pool.create("init", Range::d2(4, 4), DType::F64, 1, true);
+        let b = pool.create("raw", Range::d2(4, 4), DType::F64, 1, false);
         assert_eq!(pool.get(a).host_initialized.area(), 16);
         assert!(pool.get(b).host_initialized.is_empty());
     }
@@ -122,7 +200,18 @@ mod tests {
     #[test]
     fn full_size_bytes() {
         let mut pool = BufferPool::new();
-        let a = pool.create("x", Range::d2(100, 10), 8, false);
+        let a = pool.create("x", Range::d2(100, 10), DType::F64, 1, false);
         assert_eq!(pool.get(a).full_size_bytes(), 8000);
+    }
+
+    #[test]
+    fn typed_handles_are_copy_tokens() {
+        let b: Buffer<f32> = Buffer::from_raw(BufferId(7), Range::d1(32));
+        let c = b;
+        assert_eq!(b, c);
+        assert_eq!(b.id(), BufferId(7));
+        assert_eq!(b.len(), 32);
+        assert_eq!(BufferId::from(b), BufferId(7));
+        assert_eq!(format!("{b:?}"), "Buffer<f32x1>(B7)");
     }
 }

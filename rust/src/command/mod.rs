@@ -120,6 +120,17 @@ pub enum CommandError {
     },
 }
 
+impl std::fmt::Display for CommandError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CommandError::OverlappingWrites { task, buffer, overlap } => write!(
+                f,
+                "task {task}: concurrent chunks write overlapping region {overlap} of {buffer}"
+            ),
+        }
+    }
+}
+
 /// Per-buffer distributed tracking state. *All* nodes compute identical
 /// copies of this state by replaying the same deterministic algorithm over
 /// the same TDAG — that is what lets each node generate only its own
@@ -538,8 +549,8 @@ mod tests {
     fn compile_nbody(nodes: u64, steps: usize) -> Vec<Vec<CommandRef>> {
         let mut tm = TaskManager::with_horizon_step(u64::MAX);
         let n = Range::d1(4096);
-        let p = tm.create_buffer("P", n, 24, true);
-        let v = tm.create_buffer("V", n, 24, true);
+        let p = tm.create_buffer::<[f64; 3]>("P", n, true).id();
+        let v = tm.create_buffer::<[f64; 3]>("V", n, true).id();
         for _ in 0..steps {
             tm.submit(
                 TaskDecl::device("timestep", n)
@@ -670,10 +681,10 @@ mod tests {
         // Reading the same remote data twice must transfer it only once.
         let mut tm = TaskManager::with_horizon_step(u64::MAX);
         let n = Range::d1(128);
-        let b = tm.create_buffer("B", n, 8, true);
+        let b = tm.create_buffer::<f64>("B", n, true).id();
         tm.submit(TaskDecl::device("w", n).read_write(b, RangeMapper::OneToOne));
-        let o1 = tm.create_buffer("O1", n, 8, false);
-        let o2 = tm.create_buffer("O2", n, 8, false);
+        let o1 = tm.create_buffer::<f64>("O1", n, false).id();
+        let o2 = tm.create_buffer::<f64>("O2", n, false).id();
         tm.submit(
             TaskDecl::device("r1", n)
                 .read(b, RangeMapper::All)
@@ -706,8 +717,8 @@ mod tests {
     fn stencil_exchanges_only_halo() {
         let mut tm = TaskManager::with_horizon_step(u64::MAX);
         let n = Range::d2(64, 64);
-        let a = tm.create_buffer("A", n, 8, true);
-        let b = tm.create_buffer("B", n, 8, true);
+        let a = tm.create_buffer::<f64>("A", n, true).id();
+        let b = tm.create_buffer::<f64>("B", n, true).id();
         // Two stencil steps: B <- stencil(A), A <- stencil(B).
         tm.submit(
             TaskDecl::device("s1", n)
@@ -752,7 +763,7 @@ mod tests {
     fn overlapping_write_detected() {
         let mut tm = TaskManager::with_horizon_step(u64::MAX);
         let n = Range::d1(64);
-        let b = tm.create_buffer("B", n, 8, true);
+        let b = tm.create_buffer::<f64>("B", n, true).id();
         // Writing with an All mapper from a split task is a §4.4 error.
         tm.submit(TaskDecl::device("bad", n).write(b, RangeMapper::All));
         let tasks = tm.take_new_tasks();
@@ -774,7 +785,7 @@ mod tests {
     fn single_node_never_errors_on_all_write() {
         let mut tm = TaskManager::with_horizon_step(u64::MAX);
         let n = Range::d1(64);
-        let b = tm.create_buffer("B", n, 8, true);
+        let b = tm.create_buffer::<f64>("B", n, true).id();
         tm.submit(TaskDecl::device("ok", n).write(b, RangeMapper::All));
         let tasks = tm.take_new_tasks();
         let mut gen = CdagGenerator::new(NodeId(0), 1, SplitHint::D1, tm.buffers().clone());
@@ -788,7 +799,7 @@ mod tests {
     fn horizon_commands_prune_local_graph() {
         let mut tm = TaskManager::with_horizon_step(2);
         let n = Range::d1(64);
-        let b = tm.create_buffer("B", n, 8, true);
+        let b = tm.create_buffer::<f64>("B", n, true).id();
         for _ in 0..20 {
             tm.submit(TaskDecl::device("w", n).read_write(b, RangeMapper::OneToOne));
         }

@@ -13,15 +13,20 @@
 //!                                                       device/host/comm workers
 //! ```
 //!
+//! The user program talks to a typed [`Queue`] (Listing 1): typed buffer
+//! creation, command-group submission (`q.submit(|cgh| ...)`), typed
+//! initialization/fences, and `Result`-based §4.4 error propagation.
 //! Peer-to-peer communication flows through a [`ChannelWorld`], the
 //! in-process MPI substitute.
 
-use crate::command::SplitHint;
+use crate::buffer::Buffer;
 use crate::comm::{ChannelWorld, CommRef, NullCommunicator};
+use crate::command::SplitHint;
+use crate::dtype::{self, Elem};
 use crate::executor::{ExecEvent, ExecutorConfig, ExecutorHandle, ExecutorStats, Registry};
 use crate::grid::Range;
 use crate::scheduler::{SchedulerConfig, SchedulerHandle, SchedulerMsg, SchedulerOut, UserInit};
-use crate::task::{EpochAction, RangeMapper, TaskDecl, TaskManager};
+use crate::task::{CommandGroup, EpochAction, QueueError, RangeMapper, TaskDecl, TaskManager};
 use crate::util::{spsc, BufferId, NodeId, TaskId};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
@@ -68,88 +73,132 @@ pub struct NodeReport {
     pub errors: Vec<String>,
 }
 
-/// The per-node user-facing queue: buffer creation + command-group
-/// submission + synchronization, mirroring Listing 1's API surface.
-pub struct NodeQueue {
+/// The per-node user-facing queue, mirroring Listing 1's API surface:
+/// typed buffer creation + command-group submission + synchronization.
+///
+/// Every fallible operation returns [`QueueError`] instead of panicking:
+/// shape/dtype mismatches are caught before any instruction is generated,
+/// and §4.4 runtime errors observed while waiting surface as
+/// [`QueueError::Runtime`] (they are additionally accumulated into
+/// [`NodeReport::errors`]).
+pub struct Queue {
     pub node: NodeId,
     pub cfg: ClusterConfig,
     tm: TaskManager,
     sched: SchedulerHandle,
     exec: ExecutorHandle,
     errors: Vec<String>,
+    /// How many of `errors` have already been surfaced through a
+    /// `Result`; everything beyond this is reported by the next `wait()`.
+    errors_reported: usize,
     fence_counter: Arc<AtomicU64>,
 }
 
-impl NodeQueue {
-    /// Create a virtualized buffer visible to subsequent tasks.
-    pub fn create_buffer(
+/// Former name of [`Queue`]; the untyped `create_buffer(name, range,
+/// elem_size, host_initialized)` / `init_buffer_f32` / `fence_f32` surface
+/// was replaced by the typed command-group API.
+#[deprecated(note = "renamed to `Queue`; use the typed command-group API")]
+pub type NodeQueue = Queue;
+
+impl Queue {
+    /// Create a typed virtualized buffer, visible to subsequent tasks.
+    /// Contents start *uninitialized*: reading them before a producer task
+    /// or [`Queue::init`] is a §4.4 correctness error.
+    pub fn create_buffer<T: Elem>(&mut self, name: impl Into<String>, range: Range) -> Buffer<T> {
+        let buf = self.tm.create_buffer::<T>(name, range, false);
+        self.sched
+            .send(SchedulerMsg::Buffers(self.tm.buffers().clone()));
+        buf
+    }
+
+    /// Create a typed buffer and supply its full contents in one step.
+    pub fn create_buffer_init<T: Elem>(
         &mut self,
         name: impl Into<String>,
         range: Range,
-        elem_size: usize,
-        host_initialized: bool,
-    ) -> BufferId {
-        let id = self.tm.create_buffer(name, range, elem_size, host_initialized);
+        data: &[T],
+    ) -> Result<Buffer<T>, QueueError> {
+        let buf = self.create_buffer::<T>(name, range);
+        self.init(buf, data)?;
+        Ok(buf)
+    }
+
+    /// Supply the full contents of a buffer as typed elements. Must happen
+    /// before any task consumes the buffer; the length must match the
+    /// buffer's index-space size exactly.
+    pub fn init<T: Elem>(&mut self, buffer: Buffer<T>, data: &[T]) -> Result<(), QueueError> {
+        let info = self.check_typed(buffer)?;
+        if data.len() as u64 != info.1 {
+            return Err(QueueError::ShapeMismatch {
+                buffer: buffer.id(),
+                expected_elems: info.1,
+                got_elems: data.len() as u64,
+            });
+        }
+        self.tm.mark_host_initialized(buffer.id());
+        // Re-announce the pool (host_initialized changed), then materialize
+        // the user-memory (M0) allocation with the concrete bytes — ordered
+        // through the scheduler pipeline ahead of any consuming task.
         self.sched
             .send(SchedulerMsg::Buffers(self.tm.buffers().clone()));
-        if host_initialized {
-            // Materialize the user-memory (M0) allocation, zero-filled;
-            // `init_buffer_*` overwrites it with concrete data.
-            self.sched.send(SchedulerMsg::UserData(UserInit {
-                alloc: crate::instruction::user_alloc_id(id),
-                covers: crate::grid::GridBox::full(range),
-                elem_size,
-                bytes: Vec::new(),
-            }));
-        }
-        id
-    }
-
-    /// Supply the contents of a host-initialized buffer as raw bytes.
-    pub fn init_buffer_bytes(&mut self, buffer: BufferId, bytes: Vec<u8>) {
-        let info = self.tm.buffers().get(buffer).clone();
-        assert_eq!(
-            bytes.len() as u64,
-            info.range.size() * info.elem_size as u64,
-            "init size mismatch for {buffer}"
-        );
         self.sched.send(SchedulerMsg::UserData(UserInit {
-            alloc: crate::instruction::user_alloc_id(buffer),
-            covers: crate::grid::GridBox::full(info.range),
-            elem_size: info.elem_size,
-            bytes,
+            alloc: crate::instruction::user_alloc_id(buffer.id()),
+            covers: crate::grid::GridBox::full(buffer.range()),
+            elem_size: dtype::elem_size::<T>(),
+            bytes: dtype::to_bytes(data),
         }));
+        Ok(())
     }
 
-    /// Supply the contents of a host-initialized buffer as f32 values.
-    pub fn init_buffer_f32(&mut self, buffer: BufferId, values: &[f32]) {
-        let mut bytes = Vec::with_capacity(values.len() * 4);
-        for v in values {
-            bytes.extend_from_slice(&v.to_ne_bytes());
-        }
-        self.init_buffer_bytes(buffer, bytes);
+    /// Submit a command group (Listing 1's `q.submit`): the closure
+    /// declares typed accessors and the kernel launch on the handler.
+    pub fn submit(&mut self, build: impl FnOnce(&mut CommandGroup)) -> Result<TaskId, QueueError> {
+        let id = self.tm.submit_group(build)?;
+        self.forward_tasks();
+        Ok(id)
     }
 
-    /// Submit a command group (Listing 1's `q.submit`).
-    pub fn submit(&mut self, decl: TaskDecl) -> TaskId {
+    /// Submit a pre-built task declaration — the compatibility escape hatch
+    /// onto the internal IR (`TaskDecl`) underneath command groups.
+    pub fn submit_decl(&mut self, decl: TaskDecl) -> TaskId {
         let id = self.tm.submit(decl);
         self.forward_tasks();
         id
     }
 
-    /// Barrier: wait until everything submitted so far has executed.
-    pub fn wait(&mut self) {
+    /// Barrier: wait until everything submitted so far has executed. Any
+    /// §4.4 error not yet surfaced through a `Result` — including errors
+    /// drained asynchronously by earlier `submit` calls — comes back as
+    /// [`QueueError::Runtime`] (each error is reported exactly once; all
+    /// errors additionally accumulate into [`NodeReport::errors`]).
+    pub fn wait(&mut self) -> Result<(), QueueError> {
         self.tm.barrier();
         self.forward_tasks();
         let side = self.exec.wait_epoch(EpochAction::Barrier);
         self.collect_errors(side);
+        if self.errors.len() > self.errors_reported {
+            let fresh = self.errors[self.errors_reported..].to_vec();
+            self.errors_reported = self.errors.len();
+            return Err(QueueError::Runtime(fresh));
+        }
+        Ok(())
     }
 
-    /// Read back the full contents of a buffer as raw bytes (convenience
-    /// fence: internally a host task reading the buffer with an `all`
-    /// range mapper, followed by a barrier).
-    pub fn fence_bytes(&mut self, buffer: BufferId) -> Vec<u8> {
-        let info = self.tm.buffers().get(buffer).clone();
+    /// Read back the full contents of a buffer as typed elements
+    /// (convenience fence: internally a host task reading the buffer with
+    /// an `all` range mapper, followed by a barrier).
+    pub fn fence<T: Elem>(&mut self, buffer: Buffer<T>) -> Result<Vec<T>, QueueError> {
+        self.check_typed(buffer)?;
+        let bytes = self.fence_bytes(buffer.id())?;
+        Ok(dtype::from_bytes(&bytes))
+    }
+
+    /// Untyped fence: the full buffer contents as raw bytes.
+    pub fn fence_bytes(&mut self, buffer: BufferId) -> Result<Vec<u8>, QueueError> {
+        let info = match self.tm.buffers().try_get(buffer) {
+            Some(info) => info.clone(),
+            None => return Err(QueueError::UnknownBuffer(buffer)),
+        };
         // The registry is shared across all node threads: namespace the
         // fence task by node so each node's sink closure stays distinct.
         let name = format!(
@@ -166,36 +215,42 @@ impl NodeQueue {
                 *sink_c.lock().unwrap() = ctx.view(0).read_region_bytes();
             }),
         );
-        self.submit(
-            TaskDecl::host(name, info.range).read(buffer, RangeMapper::All),
-        );
-        self.wait();
+        self.submit_decl(TaskDecl::host(name, info.range).read(buffer, RangeMapper::All));
+        self.wait()?;
         let bytes = std::mem::take(&mut *sink.lock().unwrap());
-        assert_eq!(bytes.len() as u64, info.range.size() * info.elem_size as u64);
-        bytes
-    }
-
-    /// Read back a buffer as `f32`s.
-    pub fn fence_f32(&mut self, buffer: BufferId) -> Vec<f32> {
-        let bytes = self.fence_bytes(buffer);
-        bytes
-            .chunks_exact(4)
-            .map(|c| f32::from_ne_bytes(c.try_into().unwrap()))
-            .collect()
-    }
-
-    /// Read back a buffer as `f64`s.
-    pub fn fence_f64(&mut self, buffer: BufferId) -> Vec<f64> {
-        let bytes = self.fence_bytes(buffer);
-        bytes
-            .chunks_exact(8)
-            .map(|c| f64::from_ne_bytes(c.try_into().unwrap()))
-            .collect()
+        if bytes.len() as u64 != info.range.size() * info.elem_size as u64 {
+            return Err(QueueError::ShapeMismatch {
+                buffer,
+                expected_elems: info.range.size(),
+                got_elems: bytes.len() as u64 / info.elem_size.max(1) as u64,
+            });
+        }
+        Ok(bytes)
     }
 
     /// TDAG debug diagnostics observed so far (§4.4 uninitialized reads).
     pub fn take_debug_events(&mut self) -> Vec<crate::task::DebugEvent> {
         self.tm.take_debug_events()
+    }
+
+    /// Validate a typed handle against the registered buffer metadata;
+    /// returns `(elem_size, elems)` on success.
+    fn check_typed<T: Elem>(&self, buffer: Buffer<T>) -> Result<(usize, u64), QueueError> {
+        let info = self
+            .tm
+            .buffers()
+            .try_get(buffer.id())
+            .ok_or(QueueError::UnknownBuffer(buffer.id()))?;
+        if info.dtype != T::DTYPE || info.lanes != T::LANES {
+            return Err(QueueError::DTypeMismatch {
+                buffer: buffer.id(),
+                expected: info.dtype,
+                expected_lanes: info.lanes,
+                got: T::DTYPE,
+                got_lanes: T::LANES,
+            });
+        }
+        Ok((info.elem_size, info.range.size()))
     }
 
     fn forward_tasks(&mut self) {
@@ -239,7 +294,7 @@ impl NodeQueue {
     }
 }
 
-fn make_node(cfg: &ClusterConfig, node: NodeId, comm: CommRef) -> NodeQueue {
+fn make_node(cfg: &ClusterConfig, node: NodeId, comm: CommRef) -> Queue {
     let tm = TaskManager::new();
     let (out_tx, out_rx) = spsc::channel::<SchedulerOut>(4096);
     let sched = SchedulerHandle::spawn(
@@ -265,13 +320,14 @@ fn make_node(cfg: &ClusterConfig, node: NodeId, comm: CommRef) -> NodeQueue {
         comm,
         out_rx,
     );
-    NodeQueue {
+    Queue {
         node,
         cfg: cfg.clone(),
         tm,
         sched,
         exec,
         errors: Vec::new(),
+        errors_reported: 0,
         fence_counter: Arc::new(AtomicU64::new(0)),
     }
 }
@@ -281,7 +337,7 @@ fn make_node(cfg: &ClusterConfig, node: NodeId, comm: CommRef) -> NodeQueue {
 /// [`ChannelWorld`]. Returns per-node reports.
 pub fn run_cluster<F>(cfg: ClusterConfig, program: F) -> Vec<NodeReport>
 where
-    F: Fn(&mut NodeQueue) + Send + Sync + 'static,
+    F: Fn(&mut Queue) + Send + Sync + 'static,
 {
     assert!(cfg.num_nodes >= 1);
     if cfg.num_nodes == 1 {
@@ -318,6 +374,7 @@ where
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::dtype::DType;
     use crate::executor::KernelCtx;
     use crate::grid::Point;
 
@@ -363,20 +420,20 @@ mod tests {
         let result_c = result.clone();
         let reports = run_cluster(cfg, move |q| {
             let n = Range::d1(128);
-            let a = q.create_buffer("A", n, 4, false);
-            let b = q.create_buffer("B", n, 4, false);
-            q.submit(
-                TaskDecl::device("iota", n)
-                    .discard_write(a, RangeMapper::OneToOne)
-                    .kernel("iota"),
-            );
-            q.submit(
-                TaskDecl::device("sum_all", n)
-                    .read(a, RangeMapper::All)
-                    .discard_write(b, RangeMapper::OneToOne)
-                    .kernel("sum_all"),
-            );
-            *result_c.lock().unwrap() = q.fence_f32(b);
+            let a = q.create_buffer::<f32>("A", n);
+            let b = q.create_buffer::<f32>("B", n);
+            q.submit(|cgh| {
+                cgh.discard_write(a, RangeMapper::OneToOne);
+                cgh.parallel_for("iota", n);
+            })
+            .expect("submit iota");
+            q.submit(|cgh| {
+                cgh.read(a, RangeMapper::All);
+                cgh.discard_write(b, RangeMapper::OneToOne);
+                cgh.parallel_for("sum_all", n);
+            })
+            .expect("submit sum_all");
+            *result_c.lock().unwrap() = q.fence(b).expect("fence");
         });
         assert_eq!(reports.len(), 1);
         assert!(reports[0].errors.is_empty(), "{:?}", reports[0].errors);
@@ -403,20 +460,20 @@ mod tests {
         let results_c = results.clone();
         let reports = run_cluster(cfg, move |q| {
             let n = Range::d1(256);
-            let a = q.create_buffer("A", n, 4, false);
-            let b = q.create_buffer("B", n, 4, false);
-            q.submit(
-                TaskDecl::device("iota", n)
-                    .discard_write(a, RangeMapper::OneToOne)
-                    .kernel("iota"),
-            );
-            q.submit(
-                TaskDecl::device("sum_all", n)
-                    .read(a, RangeMapper::All)
-                    .discard_write(b, RangeMapper::OneToOne)
-                    .kernel("sum_all"),
-            );
-            let got = q.fence_f32(b);
+            let a = q.create_buffer::<f32>("A", n);
+            let b = q.create_buffer::<f32>("B", n);
+            q.submit(|cgh| {
+                cgh.discard_write(a, RangeMapper::OneToOne);
+                cgh.parallel_for("iota", n);
+            })
+            .expect("submit iota");
+            q.submit(|cgh| {
+                cgh.read(a, RangeMapper::All);
+                cgh.discard_write(b, RangeMapper::OneToOne);
+                cgh.parallel_for("sum_all", n);
+            })
+            .expect("submit sum_all");
+            let got = q.fence(b).expect("fence");
             results_c.lock().unwrap().push((q.node.0, got));
         });
         for r in &reports {
@@ -466,30 +523,30 @@ mod tests {
         let results_c = results.clone();
         let reports = run_cluster(cfg, move |q| {
             let n = Range::d1(64);
-            let a = q.create_buffer("A", n, 4, false);
-            let b = q.create_buffer("B", n, 4, false);
-            q.submit(
-                TaskDecl::device("iota", n)
-                    .discard_write(a, RangeMapper::OneToOne)
-                    .kernel("iota"),
-            );
+            let a = q.create_buffer::<f32>("A", n);
+            let b = q.create_buffer::<f32>("B", n);
+            q.submit(|cgh| {
+                cgh.discard_write(a, RangeMapper::OneToOne);
+                cgh.parallel_for("iota", n);
+            })
+            .expect("submit iota");
             for _ in 0..5 {
-                q.submit(
-                    TaskDecl::device("relax", n)
-                        .read(a, RangeMapper::All)
-                        .discard_write(b, RangeMapper::OneToOne)
-                        .kernel("relax"),
-                );
-                q.submit(
-                    TaskDecl::device("relax", n)
-                        .read(b, RangeMapper::All)
-                        .discard_write(a, RangeMapper::OneToOne)
-                        .kernel("relax"),
-                );
+                q.submit(|cgh| {
+                    cgh.read(a, RangeMapper::All);
+                    cgh.discard_write(b, RangeMapper::OneToOne);
+                    cgh.parallel_for("relax", n);
+                })
+                .expect("submit relax a->b");
+                q.submit(|cgh| {
+                    cgh.read(b, RangeMapper::All);
+                    cgh.discard_write(a, RangeMapper::OneToOne);
+                    cgh.parallel_for("relax", n);
+                })
+                .expect("submit relax b->a");
             }
             // NB: fence first, then lock — taking the shared mutex before
             // the fence would serialize nodes that must communicate.
-            let got = q.fence_f32(a);
+            let got = q.fence(a).expect("fence");
             results_c.lock().unwrap().push(got);
         });
         for r in &reports {
@@ -523,16 +580,162 @@ mod tests {
         };
         let reports = run_cluster(cfg, |q| {
             let n = Range::d1(32);
-            let a = q.create_buffer("A", n, 4, false);
-            q.submit(
-                TaskDecl::device("iota", n)
-                    .discard_write(a, RangeMapper::OneToOne)
-                    .kernel("iota"),
-            );
+            let a = q.create_buffer::<f32>("A", n);
+            q.submit(|cgh| {
+                cgh.discard_write(a, RangeMapper::OneToOne);
+                cgh.parallel_for("iota", n);
+            })
+            .expect("submit iota");
         });
         let r = &reports[0];
         assert!(r.instructions_generated > 0);
         assert!(r.commands_generated > 0);
         assert!(r.executor.retired as u64 >= r.instructions_generated);
+    }
+
+    // ── typed round-trips (new-API coverage) ────────────────────────────
+
+    fn registry_typed() -> Registry {
+        let registry = Registry::new();
+        registry.register_kernel(
+            "scale_f32",
+            Arc::new(|ctx: &KernelCtx| {
+                let inp = ctx.view(0);
+                let out = ctx.view(1);
+                for i in ctx.chunk.min[0]..ctx.chunk.max[0] {
+                    out.write_f32(Point::d1(i), inp.read_f32(Point::d1(i)) * 2.0);
+                }
+            }),
+        );
+        registry.register_kernel(
+            "shift_i32",
+            Arc::new(|ctx: &KernelCtx| {
+                let inp = ctx.view(0);
+                let out = ctx.view(1);
+                for i in ctx.chunk.min[0]..ctx.chunk.max[0] {
+                    out.write_i32(Point::d1(i), inp.read_i32(Point::d1(i)) + 7);
+                }
+            }),
+        );
+        registry
+    }
+
+    fn typed_roundtrip(num_nodes: u64) {
+        let cfg = ClusterConfig {
+            num_nodes,
+            num_devices: 2,
+            registry: registry_typed(),
+            ..Default::default()
+        };
+        let results: Arc<Mutex<Vec<(Vec<f32>, Vec<i32>)>>> = Arc::new(Mutex::new(vec![]));
+        let results_c = results.clone();
+        let reports = run_cluster(cfg, move |q| {
+            let n = Range::d1(96);
+            let src: Vec<f32> = (0..96).map(|i| i as f32 * 0.5).collect();
+            let isrc: Vec<i32> = (0..96).map(|i| i - 48).collect();
+            let a = q.create_buffer_init("A", n, &src).expect("init A");
+            let b = q.create_buffer::<f32>("B", n);
+            let c = q.create_buffer_init("C", n, &isrc).expect("init C");
+            let d = q.create_buffer::<i32>("D", n);
+            q.submit(|cgh| {
+                cgh.read(a, RangeMapper::OneToOne);
+                cgh.discard_write(b, RangeMapper::OneToOne);
+                cgh.parallel_for("scale_f32", n);
+            })
+            .expect("submit scale_f32");
+            q.submit(|cgh| {
+                cgh.read(c, RangeMapper::OneToOne);
+                cgh.discard_write(d, RangeMapper::OneToOne);
+                cgh.parallel_for("shift_i32", n);
+            })
+            .expect("submit shift_i32");
+            let fb = q.fence(b).expect("fence f32");
+            let fd = q.fence(d).expect("fence i32");
+            results_c.lock().unwrap().push((fb, fd));
+        });
+        for r in &reports {
+            assert!(r.errors.is_empty(), "node {}: {:?}", r.node, r.errors);
+        }
+        let results = results.lock().unwrap();
+        assert_eq!(results.len(), num_nodes as usize);
+        for (fb, fd) in results.iter() {
+            for i in 0..96usize {
+                assert_eq!(fb[i], i as f32, "f32 element {i}");
+                assert_eq!(fd[i], i as i32 - 48 + 7, "i32 element {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn typed_init_kernel_fence_roundtrip_single_node() {
+        typed_roundtrip(1);
+    }
+
+    #[test]
+    fn typed_init_kernel_fence_roundtrip_two_nodes() {
+        typed_roundtrip(2);
+    }
+
+    #[test]
+    fn dtype_mismatched_fence_returns_err() {
+        let cfg = ClusterConfig {
+            registry: registry_typed(),
+            ..Default::default()
+        };
+        let reports = run_cluster(cfg, |q| {
+            let n = Range::d1(16);
+            let a = q.create_buffer::<f32>("A", n);
+            // Forge an i32-typed view of the f32 buffer: the queue must
+            // reject it with a typed error, not panic.
+            let forged: Buffer<i32> = Buffer::from_raw(a.id(), a.range());
+            match q.fence(forged) {
+                Err(QueueError::DTypeMismatch { buffer, expected, got, .. }) => {
+                    assert_eq!(buffer, a.id());
+                    assert_eq!(expected, DType::F32);
+                    assert_eq!(got, DType::I32);
+                }
+                other => panic!("expected DTypeMismatch, got {other:?}"),
+            }
+            // Same for typed init through a forged handle.
+            assert!(matches!(
+                q.init(forged, &[0i32; 16]),
+                Err(QueueError::DTypeMismatch { .. })
+            ));
+        });
+        assert!(reports[0].errors.is_empty(), "{:?}", reports[0].errors);
+    }
+
+    #[test]
+    fn shape_mismatched_init_returns_err() {
+        let cfg = ClusterConfig {
+            registry: registry_typed(),
+            ..Default::default()
+        };
+        let reports = run_cluster(cfg, |q| {
+            let n = Range::d1(32);
+            let a = q.create_buffer::<f32>("A", n);
+            match q.init(a, &[1.0f32; 31]) {
+                Err(QueueError::ShapeMismatch { expected_elems, got_elems, .. }) => {
+                    assert_eq!(expected_elems, 32);
+                    assert_eq!(got_elems, 31);
+                }
+                other => panic!("expected ShapeMismatch, got {other:?}"),
+            }
+            // Unknown buffers are typed errors too.
+            let ghost: Buffer<f32> = Buffer::from_raw(BufferId(999), n);
+            assert!(matches!(
+                q.fence(ghost),
+                Err(QueueError::UnknownBuffer(BufferId(999)))
+            ));
+            // A command group without a launch is rejected before reaching
+            // the TDAG.
+            assert!(matches!(
+                q.submit(|cgh| {
+                    cgh.read(a, RangeMapper::All);
+                }),
+                Err(QueueError::IncompleteCommandGroup)
+            ));
+        });
+        assert!(reports[0].errors.is_empty(), "{:?}", reports[0].errors);
     }
 }

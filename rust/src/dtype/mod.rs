@@ -1,0 +1,211 @@
+//! Element types shared across the whole stack.
+//!
+//! `DType` is the single source of truth for element typing: buffers
+//! ([`crate::buffer::BufferInfo`]), accessor bindings
+//! ([`crate::instruction::AccessBinding`] → `executor::BindingView`) and the
+//! PJRT kernel argument specs (`runtime::ArgSpec`) all reference this one
+//! enum. The [`Elem`] trait maps Rust value types onto a `(DType, lanes)`
+//! layout so the user-facing queue API ([`crate::driver::Queue`]) can be
+//! fully typed: `Buffer<f32>`, `Buffer<[f32; 3]>`, `q.fence(buf) ->
+//! Result<Vec<T>, _>`.
+
+use std::fmt;
+
+/// Scalar element type of a buffer lane or kernel argument.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DType {
+    F32,
+    F64,
+    I32,
+    U32,
+}
+
+impl DType {
+    /// Size of one scalar in bytes.
+    pub fn size(self) -> usize {
+        match self {
+            DType::F32 | DType::I32 | DType::U32 => 4,
+            DType::F64 => 8,
+        }
+    }
+
+    /// The manifest / display spelling ("f32", "i32", ...).
+    pub fn name(self) -> &'static str {
+        match self {
+            DType::F32 => "f32",
+            DType::F64 => "f64",
+            DType::I32 => "i32",
+            DType::U32 => "u32",
+        }
+    }
+
+    /// Inverse of [`DType::name`], used by the artifact manifest parser.
+    pub fn parse(s: &str) -> Option<DType> {
+        match s {
+            "f32" => Some(DType::F32),
+            "f64" => Some(DType::F64),
+            "i32" => Some(DType::I32),
+            "u32" => Some(DType::U32),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for DType {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+mod sealed {
+    pub trait Sealed {}
+    impl Sealed for f32 {}
+    impl Sealed for f64 {}
+    impl Sealed for i32 {}
+    impl Sealed for u32 {}
+    impl Sealed for [f32; 3] {}
+    impl Sealed for [f64; 3] {}
+}
+
+/// A Rust value type usable as a buffer element: a scalar or a small
+/// fixed-lane vector (the "double3"-style particle elements of N-body).
+///
+/// Sealed: the set of element types is closed so every layout has a
+/// `DType` the scheduler and PJRT marshalling understand.
+pub trait Elem: sealed::Sealed + Copy + Default + Send + Sync + 'static {
+    /// Scalar type of each lane.
+    const DTYPE: DType;
+    /// Number of scalar lanes per element (1 for scalars).
+    const LANES: usize;
+
+    /// Append this element's native-endian bytes to `out`.
+    fn write_ne(self, out: &mut Vec<u8>);
+    /// Decode one element from exactly [`elem_size::<Self>()`] bytes.
+    fn read_ne(bytes: &[u8]) -> Self;
+}
+
+/// Bytes per element of `T` (`DType` scalar size × lanes).
+pub fn elem_size<T: Elem>() -> usize {
+    T::DTYPE.size() * T::LANES
+}
+
+macro_rules! scalar_elem {
+    ($t:ty, $d:expr) => {
+        impl Elem for $t {
+            const DTYPE: DType = $d;
+            const LANES: usize = 1;
+
+            fn write_ne(self, out: &mut Vec<u8>) {
+                out.extend_from_slice(&self.to_ne_bytes());
+            }
+
+            fn read_ne(bytes: &[u8]) -> Self {
+                <$t>::from_ne_bytes(bytes.try_into().expect("elem byte width"))
+            }
+        }
+    };
+}
+
+scalar_elem!(f32, DType::F32);
+scalar_elem!(f64, DType::F64);
+scalar_elem!(i32, DType::I32);
+scalar_elem!(u32, DType::U32);
+
+macro_rules! vec3_elem {
+    ($t:ty, $d:expr) => {
+        impl Elem for [$t; 3] {
+            const DTYPE: DType = $d;
+            const LANES: usize = 3;
+
+            fn write_ne(self, out: &mut Vec<u8>) {
+                for lane in self {
+                    out.extend_from_slice(&lane.to_ne_bytes());
+                }
+            }
+
+            fn read_ne(bytes: &[u8]) -> Self {
+                let w = $d.size();
+                let mut v = [<$t>::default(); 3];
+                for (i, lane) in v.iter_mut().enumerate() {
+                    *lane = <$t>::from_ne_bytes(
+                        bytes[i * w..(i + 1) * w].try_into().expect("lane byte width"),
+                    );
+                }
+                v
+            }
+        }
+    };
+}
+
+vec3_elem!(f32, DType::F32);
+vec3_elem!(f64, DType::F64);
+
+/// Encode a slice of typed elements as dense native-endian bytes.
+pub fn to_bytes<T: Elem>(values: &[T]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(values.len() * elem_size::<T>());
+    for v in values {
+        v.write_ne(&mut out);
+    }
+    out
+}
+
+/// Decode dense native-endian bytes into typed elements. `bytes.len()`
+/// must be a multiple of the element size (callers validate and surface
+/// `QueueError::ShapeMismatch` otherwise).
+pub fn from_bytes<T: Elem>(bytes: &[u8]) -> Vec<T> {
+    bytes.chunks_exact(elem_size::<T>()).map(T::read_ne).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_sizes() {
+        assert_eq!(DType::F32.size(), 4);
+        assert_eq!(DType::F64.size(), 8);
+        assert_eq!(DType::I32.size(), 4);
+        assert_eq!(DType::U32.size(), 4);
+        assert_eq!(elem_size::<f32>(), 4);
+        assert_eq!(elem_size::<f64>(), 8);
+        assert_eq!(elem_size::<[f32; 3]>(), 12);
+        assert_eq!(elem_size::<[f64; 3]>(), 24);
+    }
+
+    #[test]
+    fn parse_round_trips_names() {
+        for d in [DType::F32, DType::F64, DType::I32, DType::U32] {
+            assert_eq!(DType::parse(d.name()), Some(d));
+        }
+        assert_eq!(DType::parse("f16"), None);
+    }
+
+    #[test]
+    fn bytes_round_trip_scalars() {
+        let f: Vec<f32> = vec![0.0, -1.5, 3.25];
+        assert_eq!(from_bytes::<f32>(&to_bytes(&f)), f);
+        let i: Vec<i32> = vec![-7, 0, 123456];
+        assert_eq!(from_bytes::<i32>(&to_bytes(&i)), i);
+        let d: Vec<f64> = vec![1e-12, -2.5];
+        assert_eq!(from_bytes::<f64>(&to_bytes(&d)), d);
+        let u: Vec<u32> = vec![0, u32::MAX];
+        assert_eq!(from_bytes::<u32>(&to_bytes(&u)), u);
+    }
+
+    #[test]
+    fn bytes_round_trip_vec3() {
+        let v: Vec<[f32; 3]> = vec![[1.0, 2.0, 3.0], [-0.5, 0.0, 9.0]];
+        let b = to_bytes(&v);
+        assert_eq!(b.len(), 24);
+        assert_eq!(from_bytes::<[f32; 3]>(&b), v);
+    }
+
+    #[test]
+    fn layout_matches_flat_scalars() {
+        // [f32; 3] elements must serialize exactly like 3 interleaved f32s
+        // (the apps convert flat golden-model state to typed elements).
+        let flat: Vec<f32> = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let elems: Vec<[f32; 3]> = vec![[1.0, 2.0, 3.0], [4.0, 5.0, 6.0]];
+        assert_eq!(to_bytes(&flat), to_bytes(&elems));
+    }
+}

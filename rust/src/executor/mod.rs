@@ -16,6 +16,7 @@ pub use arena::{copy_between, AllocBuf, Arena};
 pub use ooo::{Lane, OooEngine};
 
 use crate::comm::{CommRef, Inbound};
+use crate::dtype::DType;
 use crate::grid::{GridBox, Point, Region};
 use crate::instruction::{AccessBinding, InstructionKind, InstructionRef};
 use crate::scheduler::SchedulerOut;
@@ -80,7 +81,19 @@ impl BindingView {
 
     typed_access!(read_f32, write_f32, f32);
     typed_access!(read_f64, write_f64, f64);
+    typed_access!(read_i32, write_i32, i32);
     typed_access!(read_u32, write_u32, u32);
+
+    /// Scalar element type of the accessed buffer (shared [`DType`],
+    /// carried through the instruction layer from the buffer registry).
+    pub fn dtype(&self) -> DType {
+        self.binding.dtype
+    }
+
+    /// Scalar lanes per element (3 for the "double3"-style N-body state).
+    pub fn lanes(&self) -> usize {
+        self.binding.lanes
+    }
 
     /// Read a 12-byte "double3"-style element as three f32 lanes.
     #[inline]
@@ -267,6 +280,12 @@ impl Executor {
                     match inbox.try_recv() {
                         Ok(batch) => {
                             progressed = true;
+                            // §4.4 scheduler errors (e.g. overlapping
+                            // writes) surface through the same event stream
+                            // as executor errors.
+                            for e in batch.errors {
+                                let _ = self.events.send(ExecEvent::Error(e));
+                            }
                             for init in batch.user_inits {
                                 self.arena.init_user(
                                     init.alloc,
@@ -601,7 +620,7 @@ mod tests {
     fn executes_pipeline_with_correct_numerics() {
         let mut tm = TaskManager::new();
         let n = Range::d1(256);
-        let a = tm.create_buffer("A", n, 4, false);
+        let a = tm.create_buffer::<f32>("A", n, false).id();
         // iota kernel writes A[i] = i; double kernel A[i] *= 2; host task
         // sums into a shared sink.
         tm.submit(
@@ -688,7 +707,7 @@ mod tests {
     fn oob_access_reported() {
         let mut tm = TaskManager::new();
         let n = Range::d1(64);
-        let a = tm.create_buffer("A", n, 4, false);
+        let a = tm.create_buffer::<f32>("A", n, false).id();
         tm.submit(
             TaskDecl::device("bad", n)
                 .discard_write(a, RangeMapper::OneToOne)

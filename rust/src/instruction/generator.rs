@@ -328,6 +328,8 @@ impl IdagGenerator {
                     region,
                     alloc: backing.alloc,
                     alloc_box: backing.covers,
+                    dtype: info.dtype,
+                    lanes: info.lanes,
                 });
             }
 
@@ -1090,8 +1092,8 @@ mod tests {
 
     fn nbody(tm: &mut TaskManager, steps: usize, n: u64) {
         let r = Range::d1(n);
-        let p = tm.create_buffer("P", r, 24, true);
-        let v = tm.create_buffer("V", r, 24, true);
+        let p = tm.create_buffer::<[f64; 3]>("P", r, true).id();
+        let v = tm.create_buffer::<[f64; 3]>("V", r, true).id();
         for _ in 0..steps {
             tm.submit(
                 TaskDecl::device("timestep", r)
@@ -1220,8 +1222,8 @@ mod tests {
         // awaited region → split receive + await receives (§3.4 case a/c).
         let (instrs, _, _) = build(2, 2, true, |tm| {
             let r = Range::d1(4096);
-            let a = tm.create_buffer("A", r, 8, true);
-            let b = tm.create_buffer("B", r, 8, false);
+            let a = tm.create_buffer::<f64>("A", r, true).id();
+            let b = tm.create_buffer::<f64>("B", r, false).id();
             // Step 1: everyone writes their part of A.
             tm.submit(TaskDecl::device("w", r).read_write(a, RangeMapper::OneToOne));
             // Step 2: shifted read: each element i reads a[i + 2048] where
@@ -1245,8 +1247,8 @@ mod tests {
         // task's backing must grow → alloc/copy/free resize chain (Fig 3).
         let (instrs, _, ig) = build(1, 1, true, |tm| {
             let r = Range::d1(1024);
-            let a = tm.create_buffer("A", r, 8, false);
-            let b = tm.create_buffer("B", r, 8, false);
+            let a = tm.create_buffer::<f64>("A", r, false).id();
+            let b = tm.create_buffer::<f64>("B", r, false).id();
             // Task writes only the middle of A.
             tm.submit(TaskDecl::device("w", Range::d1(512)).write(
                 a,
@@ -1279,8 +1281,8 @@ mod tests {
         // alloc covers everything, no resize.
         let mut tm = TaskManager::with_horizon_step(u64::MAX);
         let r = Range::d1(1024);
-        let a = tm.create_buffer("A", r, 8, false);
-        let b = tm.create_buffer("B", r, 8, false);
+        let a = tm.create_buffer::<f64>("A", r, false).id();
+        let b = tm.create_buffer::<f64>("B", r, false).id();
         tm.submit(TaskDecl::device("w", Range::d1(512)).write(
             a,
             RangeMapper::Shift(crate::grid::Point::d1(256)),
@@ -1327,7 +1329,7 @@ mod tests {
     fn would_allocate_predicate() {
         let mut tm = TaskManager::with_horizon_step(u64::MAX);
         let r = Range::d1(256);
-        let a = tm.create_buffer("A", r, 8, true);
+        let a = tm.create_buffer::<f64>("A", r, true).id();
         tm.submit(TaskDecl::device("w1", r).read_write(a, RangeMapper::OneToOne));
         tm.submit(TaskDecl::device("w2", r).read_write(a, RangeMapper::OneToOne));
         let tasks = tm.take_new_tasks();
@@ -1355,8 +1357,8 @@ mod tests {
         // First consumer of a host-initialized buffer pulls from M0.
         let (instrs, _, _) = build(1, 1, true, |tm| {
             let r = Range::d1(64);
-            let a = tm.create_buffer("A", r, 8, true);
-            let b = tm.create_buffer("B", r, 8, false);
+            let a = tm.create_buffer::<f64>("A", r, true).id();
+            let b = tm.create_buffer::<f64>("B", r, false).id();
             tm.submit(
                 TaskDecl::device("r", r)
                     .read(a, RangeMapper::OneToOne)
@@ -1390,7 +1392,7 @@ mod tests {
     fn horizons_bound_idag_size() {
         let mut tm = TaskManager::with_horizon_step(2);
         let r = Range::d1(512);
-        let a = tm.create_buffer("A", r, 8, true);
+        let a = tm.create_buffer::<f64>("A", r, true).id();
         for _ in 0..30 {
             tm.submit(TaskDecl::device("w", r).read_write(a, RangeMapper::OneToOne));
         }

@@ -34,6 +34,11 @@ pub struct AccessBinding {
     pub alloc: AllocationId,
     /// The buffer-space box the allocation covers (for pointer math).
     pub alloc_box: GridBox,
+    /// Scalar element type of the buffer (shared [`crate::dtype::DType`]);
+    /// exposed to kernels through `BindingView::dtype`.
+    pub dtype: crate::dtype::DType,
+    /// Scalar lanes per element.
+    pub lanes: usize,
 }
 
 /// All instruction types of Table 1, grouped as in the paper: memory

@@ -4,30 +4,66 @@
 //! on Multi-GPU Systems"* (Knorr, Salzmann, Thoman, Fahringer 2025): a
 //! Celerity-style runtime with **instruction-graph scheduling**.
 //!
+//! ## User API
+//!
+//! Programs talk to a typed, Listing-1-style queue ([`driver::Queue`]):
+//! buffers are typed handles ([`buffer::Buffer<T>`]) whose element layout
+//! ([`dtype::DType`] + lanes) the runtime derives allocations, transfers
+//! and dependencies from; work is submitted as *command groups* that scope
+//! accessor declarations and the kernel launch into one closure; and every
+//! fallible operation returns [`task::QueueError`] instead of panicking:
+//!
+//! ```no_run
+//! # // no_run: rustdoc test binaries lack the libxla rpath of this image.
+//! # use celerity::driver::{run_cluster, ClusterConfig};
+//! # use celerity::grid::Range;
+//! # use celerity::task::RangeMapper;
+//! let reports = run_cluster(ClusterConfig::default(), |q| {
+//!     let n = Range::d1(1024);
+//!     let a = q.create_buffer::<f32>("A", n);
+//!     q.submit(|cgh| {
+//!         cgh.discard_write(a, RangeMapper::OneToOne);
+//!         cgh.parallel_for("iota", n);
+//!     })
+//!     .expect("submit");
+//!     let data: Vec<f32> = q.fence(a).expect("fence");
+//! });
+//! ```
+//!
+//! ## Module map
+//!
 //! The library is organized along the paper's three graph layers plus the
 //! substrates they need:
 //!
+//! - [`dtype`] — the shared element-type system (`DType`, `Elem`) used by
+//!   buffers, accessor bindings and the PJRT argument specs
 //! - [`grid`] — index-space algebra (boxes, regions, region maps)
 //! - [`dag`] — shared DAG storage with horizon-based pruning
-//! - [`task`] — user-facing buffers/accessors/range mappers and the TDAG
+//! - [`buffer`] — typed buffer handles + the buffer metadata registry
+//! - [`task`] — command groups, accessors/range mappers and the TDAG
 //! - [`command`] — per-node CDAG generation with push/await-push (§2.4)
 //! - [`instruction`] — the IDAG: the paper's core contribution (§3)
 //! - [`scheduler`] — scheduler thread with lookahead / resize elision (§4.3)
 //! - [`executor`] — out-of-order engine, receive arbitration, baseline (§4.1–4.2)
 //! - [`comm`] — communicator: Isend/Irecv + pilot messages over channels
-//! - [`runtime`] — PJRT wrapper executing AOT-compiled HLO kernels
+//! - [`driver`] — the typed [`Queue`](driver::Queue) and the in-process
+//!   SPMD cluster runner
+//! - `runtime` — PJRT wrapper executing AOT-compiled HLO kernels
+//!   (requires the `pjrt` feature and an XLA toolchain)
 //! - [`sim`] — discrete-event cluster simulator for the Fig 6 scaling study
 //! - [`apps`] — the three benchmark applications (N-body, RSim, WaveSim)
 
+pub mod apps;
 pub mod buffer;
 pub mod comm;
 pub mod command;
 pub mod dag;
 pub mod driver;
+pub mod dtype;
 pub mod executor;
 pub mod grid;
-pub mod apps;
 pub mod instruction;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod scheduler;
 pub mod sim;

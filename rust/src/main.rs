@@ -14,61 +14,62 @@ use celerity::command::{CdagGenerator, SplitHint};
 use celerity::grid::{GridBox, Range, Region};
 use celerity::instruction::{IdagConfig, IdagGenerator};
 use celerity::sim::{simulate, ExecModel, SimConfig};
-use celerity::task::{RangeMapper, TaskDecl, TaskManager};
+use celerity::task::{RangeMapper, TaskManager};
 use celerity::util::NodeId;
 
 fn build_app(tm: &mut TaskManager, app: &str, steps: u64) {
     match app {
         "nbody" => {
             let range = Range::d1(4096);
-            let p = tm.create_buffer("P", range, 12, true);
-            let v = tm.create_buffer("V", range, 12, true);
+            let p = tm.create_buffer::<[f32; 3]>("P", range, true);
+            let v = tm.create_buffer::<[f32; 3]>("V", range, true);
             for _ in 0..steps {
-                tm.submit(
-                    TaskDecl::device("timestep", range)
-                        .read(p, RangeMapper::All)
-                        .read_write(v, RangeMapper::OneToOne)
-                        .work_per_item(4096.0 * 20.0),
-                );
-                tm.submit(
-                    TaskDecl::device("update", range)
-                        .read(v, RangeMapper::OneToOne)
-                        .read_write(p, RangeMapper::OneToOne)
-                        .work_per_item(2.0),
-                );
+                tm.submit_group(|cgh| {
+                    cgh.read(p, RangeMapper::All);
+                    cgh.read_write(v, RangeMapper::OneToOne);
+                    cgh.parallel_for("timestep", range).work_per_item(4096.0 * 20.0);
+                })
+                .expect("submit timestep");
+                tm.submit_group(|cgh| {
+                    cgh.read(v, RangeMapper::OneToOne);
+                    cgh.read_write(p, RangeMapper::OneToOne);
+                    cgh.parallel_for("update", range).work_per_item(2.0);
+                })
+                .expect("submit update");
             }
         }
         "rsim" => {
             let width = 4096u64;
-            let r = tm.create_buffer("R", Range::d2(steps, width), 4, true);
-            let vis = tm.create_buffer("VIS", Range::d2(width, 64), 4, true);
+            let r = tm.create_buffer::<f32>("R", Range::d2(steps, width), true);
+            let vis = tm.create_buffer::<f32>("VIS", Range::d2(width, 64), true);
             for t in 1..steps {
                 let prev = Region::from(GridBox::d2((0, 0), (t, width)));
-                tm.submit(
-                    TaskDecl::device("radiosity", Range::d1(width))
-                        .read(r, RangeMapper::Fixed(prev))
-                        .read(vis, RangeMapper::All)
-                        .write(r, RangeMapper::RowSlice(t))
-                        .work_per_item(t as f64 * 100.0),
-                );
+                tm.submit_group(|cgh| {
+                    cgh.read(r, RangeMapper::Fixed(prev));
+                    cgh.read(vis, RangeMapper::All);
+                    cgh.write(r, RangeMapper::RowSlice(t));
+                    cgh.parallel_for("radiosity", Range::d1(width))
+                        .work_per_item(t as f64 * 100.0);
+                })
+                .expect("submit radiosity");
             }
         }
         "wavesim" => {
             let range = Range::d2(1024, 256);
             let bufs = [
-                tm.create_buffer("U0", range, 4, true),
-                tm.create_buffer("U1", range, 4, true),
-                tm.create_buffer("U2", range, 4, true),
+                tm.create_buffer::<f32>("U0", range, true),
+                tm.create_buffer::<f32>("U1", range, true),
+                tm.create_buffer::<f32>("U2", range, true),
             ];
             for s in 0..steps as usize {
                 let (p, c, n) = (bufs[s % 3], bufs[(s + 1) % 3], bufs[(s + 2) % 3]);
-                tm.submit(
-                    TaskDecl::device("wavesim", range)
-                        .read(p, RangeMapper::Neighborhood(Range::d2(1, 0)))
-                        .read(c, RangeMapper::Neighborhood(Range::d2(1, 0)))
-                        .write(n, RangeMapper::OneToOne)
-                        .work_per_item(10.0),
-                );
+                tm.submit_group(|cgh| {
+                    cgh.read(p, RangeMapper::Neighborhood(Range::d2(1, 0)));
+                    cgh.read(c, RangeMapper::Neighborhood(Range::d2(1, 0)));
+                    cgh.write(n, RangeMapper::OneToOne);
+                    cgh.parallel_for("wavesim", range).work_per_item(10.0);
+                })
+                .expect("submit wavesim");
             }
         }
         other => {

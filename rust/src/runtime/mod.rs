@@ -12,18 +12,9 @@ use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
-/// Element type of a kernel argument.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum DType {
-    F32,
-    I32,
-}
-
-impl DType {
-    pub fn size(self) -> usize {
-        4
-    }
-}
+// The element type of a kernel argument is the same `DType` the buffer
+// registry and accessor bindings use — one definition for the whole stack.
+pub use crate::dtype::DType;
 
 /// Shape + dtype of one kernel input/output.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -45,11 +36,7 @@ impl ArgSpec {
         let (k, d) = s
             .split_once(':')
             .ok_or_else(|| anyhow!("bad arg spec '{s}'"))?;
-        let dtype = match k {
-            "f32" => DType::F32,
-            "i32" => DType::I32,
-            other => bail!("unsupported dtype '{other}'"),
-        };
+        let dtype = DType::parse(k).ok_or_else(|| anyhow!("unsupported dtype '{k}'"))?;
         let dims = d
             .split('x')
             .map(|x| x.parse::<usize>().context("bad dim"))
@@ -124,6 +111,11 @@ impl PjrtKernel {
                 (DType::F32, ArgBytes::ScalarI32(_)) => {
                     bail!("kernel '{}': scalar passed for f32 arg", self.name)
                 }
+                (DType::F64 | DType::U32, _) => bail!(
+                    "kernel '{}': dtype {} has no PJRT marshalling path yet",
+                    self.name,
+                    spec.dtype
+                ),
             };
             literals.push(lit);
         }
@@ -149,6 +141,11 @@ impl PjrtKernel {
                     }
                     b
                 }
+                DType::F64 | DType::U32 => bail!(
+                    "kernel '{}': dtype {} has no PJRT marshalling path yet",
+                    self.name,
+                    spec.dtype
+                ),
             };
             out.push(bytes);
         }
@@ -233,7 +230,10 @@ mod tests {
             ArgSpec::parse("i32:1").unwrap(),
             ArgSpec { dtype: DType::I32, dims: vec![1] }
         );
-        assert!(ArgSpec::parse("f64:2").is_err());
+        // f64 manifests parse with the unified DType (8-byte scalars)...
+        assert_eq!(ArgSpec::parse("f64:2").unwrap().bytes(), 16);
+        // ...but unknown dtypes are still rejected.
+        assert!(ArgSpec::parse("f16:2").is_err());
         assert_eq!(ArgSpec::parse("f32:8x4").unwrap().bytes(), 128);
     }
 

@@ -245,7 +245,7 @@ mod tests {
     /// Drive the scheduler with an RSim-like growing access pattern:
     /// step t writes row t of a (T × W) buffer and reads rows [0, t).
     fn rsim_tasks(tm: &mut TaskManager, steps: u64, width: u64) -> crate::util::BufferId {
-        let b = tm.create_buffer("R", Range::d2(steps, width), 8, false);
+        let b = tm.create_buffer::<f64>("R", Range::d2(steps, width), false).id();
         for t in 0..steps {
             let row =
                 Region::from(GridBox::d2((t, 0), (t + 1, width)));
@@ -325,8 +325,8 @@ mod tests {
         // After two horizons, the scheduler must return to pass-through.
         let mut tm = TaskManager::with_horizon_step(2);
         let n = Range::d2(64, 64);
-        let a = tm.create_buffer("A", n, 8, true);
-        let b = tm.create_buffer("B", n, 8, true);
+        let a = tm.create_buffer::<f64>("A", n, true).id();
+        let b = tm.create_buffer::<f64>("B", n, true).id();
         let tasks: Vec<_> = {
             for _ in 0..20 {
                 tm.submit(
@@ -348,11 +348,13 @@ mod tests {
             let (instrs, _) = sched.process(t);
             tail_latency.push(instrs.len());
         }
-        // The last quarter of tasks must compile immediately (pass-through).
+        // The last quarter of tasks must compile immediately (pass-through):
+        // once allocations are stable, *every* processed task emits its
+        // instructions right away instead of queueing behind the lookahead.
         let tail = &tail_latency[tail_latency.len() - 10..];
         assert!(
-            tail.iter().all(|&n| n > 0 || true) && tail.iter().sum::<usize>() > 0,
-            "steady state must emit instructions continuously"
+            tail.iter().all(|&n| n > 0),
+            "steady state must emit instructions on every task, got tail {tail:?}"
         );
         assert_eq!(sched.queue_len(), 0, "queue must be drained in steady state");
         assert_eq!(sched.idag().resizes_emitted, 0);

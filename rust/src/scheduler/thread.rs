@@ -37,11 +37,19 @@ pub struct SchedulerOut {
     pub instructions: Vec<InstructionRef>,
     pub pilots: Vec<Pilot>,
     pub user_inits: Vec<UserInit>,
+    /// §4.4 errors detected during command generation, forwarded through
+    /// the executor's event stream to the user-facing queue.
+    pub errors: Vec<String>,
 }
 
 impl SchedulerOut {
     pub fn batch(instructions: Vec<InstructionRef>, pilots: Vec<Pilot>) -> Self {
-        SchedulerOut { instructions, pilots, user_inits: Vec::new() }
+        SchedulerOut {
+            instructions,
+            pilots,
+            user_inits: Vec::new(),
+            errors: Vec::new(),
+        }
     }
 }
 
@@ -73,6 +81,7 @@ impl SchedulerHandle {
                                 instructions: vec![],
                                 pilots: vec![],
                                 user_inits: vec![init],
+                                errors: vec![],
                             });
                         }
                         Ok(SchedulerMsg::Task(task)) => {
@@ -84,14 +93,24 @@ impl SchedulerHandle {
                             if trace {
                                 eprintln!("[sched {}] emitted {} instrs {} pilots (queue={})", cfg_node, instructions.len(), pilots.len(), sched.queue_len());
                             }
-                            if !instructions.is_empty() || !pilots.is_empty() {
-                                let _ = out.send(SchedulerOut::batch(instructions, pilots));
+                            let errors: Vec<String> =
+                                sched.take_errors().iter().map(|e| e.to_string()).collect();
+                            if !instructions.is_empty() || !pilots.is_empty() || !errors.is_empty()
+                            {
+                                let mut batch = SchedulerOut::batch(instructions, pilots);
+                                batch.errors = errors;
+                                let _ = out.send(batch);
                             }
                         }
                         Ok(SchedulerMsg::Shutdown) | Err(_) => {
                             let (instructions, pilots) = sched.flush_now();
-                            if !instructions.is_empty() || !pilots.is_empty() {
-                                let _ = out.send(SchedulerOut::batch(instructions, pilots));
+                            let errors: Vec<String> =
+                                sched.take_errors().iter().map(|e| e.to_string()).collect();
+                            if !instructions.is_empty() || !pilots.is_empty() || !errors.is_empty()
+                            {
+                                let mut batch = SchedulerOut::batch(instructions, pilots);
+                                batch.errors = errors;
+                                let _ = out.send(batch);
                             }
                             break;
                         }
@@ -126,7 +145,7 @@ mod tests {
     fn thread_processes_and_flushes_on_shutdown() {
         let mut tm = TaskManager::new();
         let n = Range::d1(128);
-        let a = tm.create_buffer("A", n, 8, true);
+        let a = tm.create_buffer::<f64>("A", n, true).id();
         for _ in 0..4 {
             tm.submit(TaskDecl::device("w", n).read_write(a, RangeMapper::OneToOne));
         }

@@ -571,8 +571,8 @@ mod tests {
     fn nbody_build(n: u64, steps: usize) -> impl Fn(&mut TaskManager) {
         move |tm: &mut TaskManager| {
             let range = crate::grid::Range::d1(n);
-            let p = tm.create_buffer("P", range, 12, true);
-            let v = tm.create_buffer("V", range, 12, true);
+            let p = tm.create_buffer::<[f32; 3]>("P", range, true).id();
+            let v = tm.create_buffer::<[f32; 3]>("V", range, true).id();
             for _ in 0..steps {
                 tm.submit(
                     crate::task::TaskDecl::device("timestep", range)
@@ -633,9 +633,9 @@ mod tests {
             // pay a resize whose cost grows linearly every step.
             let steps = 128u64;
             let width = 8192u64;
-            let r = tm.create_buffer("R", crate::grid::Range::d2(steps, width), 4, true);
+            let r = tm.create_buffer::<f32>("R", crate::grid::Range::d2(steps, width), true).id();
             let vis =
-                tm.create_buffer("VIS", crate::grid::Range::d2(width, 64), 4, true);
+                tm.create_buffer::<f32>("VIS", crate::grid::Range::d2(width, 64), true).id();
             for t in 1..steps {
                 let prev = Region::from(crate::grid::GridBox::d2((0, 0), (t, width)));
                 tm.submit(
@@ -687,8 +687,8 @@ mod tests {
         let cfg = SimConfig::default();
         let r = simulate(&cfg, |tm| {
             let range = crate::grid::Range::d2(64, 64);
-            let a = tm.create_buffer("A", range, 4, true);
-            let b = tm.create_buffer("B", range, 4, true);
+            let a = tm.create_buffer::<f32>("A", range, true).id();
+            let b = tm.create_buffer::<f32>("B", range, true).id();
             for _ in 0..4 {
                 tm.submit(
                     crate::task::TaskDecl::device("s", range)

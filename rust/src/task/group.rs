@@ -1,0 +1,275 @@
+//! The typed command-group API (Listing 1).
+//!
+//! A command group scopes accessor declarations and the kernel launch into
+//! one closure, mirroring Celerity/SYCL:
+//!
+//! ```no_run
+//! # // no_run: rustdoc test binaries lack the libxla rpath of this image.
+//! # use celerity::driver::{run_cluster, ClusterConfig};
+//! # use celerity::grid::Range;
+//! # use celerity::task::RangeMapper;
+//! # let _ = run_cluster(ClusterConfig::default(), |q| {
+//! let n = Range::d1(1024);
+//! let a = q.create_buffer::<f32>("A", n);
+//! let b = q.create_buffer::<f32>("B", n);
+//! q.submit(|cgh| {
+//!     cgh.discard_write(a, RangeMapper::OneToOne);
+//!     cgh.parallel_for("iota", n);
+//! })
+//! .unwrap();
+//! q.submit(|cgh| {
+//!     cgh.read(a, RangeMapper::All);
+//!     cgh.discard_write(b, RangeMapper::OneToOne);
+//!     cgh.parallel_for("prefix_mean", n);
+//! })
+//! .unwrap();
+//! let out: Vec<f32> = q.fence(b).unwrap();
+//! # });
+//! ```
+//!
+//! The builder lowers to [`TaskDecl`], which stays the internal IR consumed
+//! by the TDAG generator — the typed surface is a veneer, not a new graph
+//! layer.
+
+use super::{Access, AccessMode, RangeMapper, TaskDecl};
+use crate::buffer::Buffer;
+use crate::dtype::{DType, Elem};
+use crate::grid::Range;
+use crate::util::BufferId;
+use std::fmt;
+
+/// Errors surfaced by the typed queue API ([`crate::driver::Queue`]):
+/// shape/dtype mismatches of typed init/fence operations, malformed command
+/// groups, and §4.4 runtime errors observed while synchronizing.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum QueueError {
+    /// The command-group closure declared no kernel launch or host task.
+    IncompleteCommandGroup,
+    /// A typed handle refers to a buffer this queue never created.
+    UnknownBuffer(BufferId),
+    /// Element count does not match the buffer's index-space size.
+    ShapeMismatch {
+        buffer: BufferId,
+        expected_elems: u64,
+        got_elems: u64,
+    },
+    /// The handle's element layout disagrees with the registered buffer.
+    DTypeMismatch {
+        buffer: BufferId,
+        expected: DType,
+        expected_lanes: usize,
+        got: DType,
+        got_lanes: usize,
+    },
+    /// §4.4 correctness errors reported by the scheduler or executor while
+    /// waiting (overlapping writes, out-of-bounds accesses, missing
+    /// kernels, stalls).
+    Runtime(Vec<String>),
+}
+
+impl fmt::Display for QueueError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            QueueError::IncompleteCommandGroup => {
+                write!(f, "command group declared no parallel_for or host task")
+            }
+            QueueError::UnknownBuffer(b) => write!(f, "unknown buffer {b}"),
+            QueueError::ShapeMismatch { buffer, expected_elems, got_elems } => write!(
+                f,
+                "shape mismatch on {buffer}: buffer holds {expected_elems} elements, got {got_elems}"
+            ),
+            QueueError::DTypeMismatch { buffer, expected, expected_lanes, got, got_lanes } => {
+                write!(
+                    f,
+                    "dtype mismatch on {buffer}: buffer is {expected}x{expected_lanes}, \
+                     handle is {got}x{got_lanes}"
+                )
+            }
+            QueueError::Runtime(errs) => {
+                write!(f, "{} runtime error(s): {}", errs.len(), errs.join("; "))
+            }
+        }
+    }
+}
+
+impl std::error::Error for QueueError {}
+
+/// A declared accessor: proof that `buffer` was registered with the command
+/// group, plus its position in the task's access list (the `ctx.view(i)`
+/// index seen by the kernel functor).
+#[derive(Debug, Clone, Copy)]
+pub struct Accessor<T: Elem> {
+    pub buffer: Buffer<T>,
+    pub mode: AccessMode,
+    /// Declaration index: `KernelCtx::view(index)` is this accessor's view.
+    pub index: usize,
+}
+
+/// Collects accessor declarations and the kernel launch of one command
+/// group; handed to the closure passed to `Queue::submit` /
+/// `TaskManager::submit_group`.
+#[derive(Debug)]
+pub struct CommandGroup {
+    accesses: Vec<Access>,
+    name: Option<String>,
+    kernel: Option<String>,
+    range: Option<Range>,
+    on_host: bool,
+    work_per_item: f64,
+}
+
+impl CommandGroup {
+    /// Sole constructor: `work_per_item` defaults to 1.0 (one abstract
+    /// work unit per item), matching `TaskDecl`'s default.
+    pub(crate) fn new() -> Self {
+        CommandGroup {
+            accesses: Vec::new(),
+            name: None,
+            kernel: None,
+            range: None,
+            on_host: false,
+            work_per_item: 1.0,
+        }
+    }
+
+    fn access<T: Elem>(
+        &mut self,
+        buffer: Buffer<T>,
+        mode: AccessMode,
+        mapper: RangeMapper,
+    ) -> Accessor<T> {
+        let index = self.accesses.len();
+        self.accesses.push(Access::new(buffer.id(), mode, mapper));
+        Accessor { buffer, mode, index }
+    }
+
+    /// Declare a consumer access.
+    pub fn read<T: Elem>(&mut self, buffer: Buffer<T>, mapper: RangeMapper) -> Accessor<T> {
+        self.access(buffer, AccessMode::Read, mapper)
+    }
+
+    /// Declare a producer access that overwrites the mapped region.
+    pub fn write<T: Elem>(&mut self, buffer: Buffer<T>, mapper: RangeMapper) -> Accessor<T> {
+        self.access(buffer, AccessMode::Write, mapper)
+    }
+
+    /// Declare a read-modify-write access.
+    pub fn read_write<T: Elem>(&mut self, buffer: Buffer<T>, mapper: RangeMapper) -> Accessor<T> {
+        self.access(buffer, AccessMode::ReadWrite, mapper)
+    }
+
+    /// Declare a producer access that does not preserve prior contents.
+    pub fn discard_write<T: Elem>(
+        &mut self,
+        buffer: Buffer<T>,
+        mapper: RangeMapper,
+    ) -> Accessor<T> {
+        self.access(buffer, AccessMode::DiscardWrite, mapper)
+    }
+
+    /// Launch a device kernel over `range`. `kernel` names both the task
+    /// and the registered kernel implementation / AOT artifact.
+    pub fn parallel_for(&mut self, kernel: impl Into<String>, range: Range) -> &mut Self {
+        let kernel = kernel.into();
+        self.name = Some(kernel.clone());
+        self.kernel = Some(kernel);
+        self.range = Some(range);
+        self.on_host = false;
+        self
+    }
+
+    /// Launch a host task over `range` (split across nodes, executed in
+    /// host threads).
+    pub fn host_task(&mut self, name: impl Into<String>, range: Range) -> &mut Self {
+        self.name = Some(name.into());
+        self.kernel = None;
+        self.range = Some(range);
+        self.on_host = true;
+        self
+    }
+
+    /// Cost-model hint for sim mode: abstract work units per work item.
+    pub fn work_per_item(&mut self, w: f64) -> &mut Self {
+        self.work_per_item = w;
+        self
+    }
+
+    /// Lower to the internal IR. Errors if the closure never declared a
+    /// launch.
+    pub(crate) fn into_decl(self) -> Result<TaskDecl, QueueError> {
+        let (Some(name), Some(range)) = (self.name, self.range) else {
+            return Err(QueueError::IncompleteCommandGroup);
+        };
+        let mut decl = if self.on_host {
+            TaskDecl::host(name, range)
+        } else {
+            TaskDecl::device(name, range)
+        };
+        decl.accesses = self.accesses;
+        decl.work_per_item = self.work_per_item;
+        decl.kernel = self.kernel;
+        Ok(decl)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::BufferId;
+
+    fn buf(id: u64, n: u64) -> Buffer<f32> {
+        Buffer::from_raw(BufferId(id), Range::d1(n))
+    }
+
+    #[test]
+    fn builds_device_decl_in_declaration_order() {
+        let mut cgh = CommandGroup::new();
+        let a = cgh.read(buf(0, 64), RangeMapper::All);
+        let b = cgh.discard_write(buf(1, 64), RangeMapper::OneToOne);
+        cgh.parallel_for("iota", Range::d1(64)).work_per_item(3.0);
+        assert_eq!(a.index, 0);
+        assert_eq!(b.index, 1);
+        assert_eq!(b.mode, AccessMode::DiscardWrite);
+        let decl = cgh.into_decl().unwrap();
+        assert_eq!(decl.name, "iota");
+        assert_eq!(decl.kernel.as_deref(), Some("iota"));
+        assert!(!decl.on_host);
+        assert_eq!(decl.work_per_item, 3.0);
+        assert_eq!(decl.accesses.len(), 2);
+        assert_eq!(decl.accesses[0].buffer, BufferId(0));
+        assert_eq!(decl.accesses[0].mode, AccessMode::Read);
+        assert_eq!(decl.accesses[1].buffer, BufferId(1));
+        assert_eq!(decl.accesses[1].mode, AccessMode::DiscardWrite);
+    }
+
+    #[test]
+    fn builds_host_decl() {
+        let mut cgh = CommandGroup::new();
+        cgh.read(buf(2, 16), RangeMapper::All);
+        cgh.host_task("sink", Range::d1(16));
+        let decl = cgh.into_decl().unwrap();
+        assert!(decl.on_host);
+        assert_eq!(decl.name, "sink");
+        assert!(decl.kernel.is_none());
+    }
+
+    #[test]
+    fn missing_launch_is_an_error_not_a_panic() {
+        let mut cgh = CommandGroup::new();
+        cgh.read(buf(0, 8), RangeMapper::All);
+        assert_eq!(cgh.into_decl().unwrap_err(), QueueError::IncompleteCommandGroup);
+    }
+
+    #[test]
+    fn errors_render_for_humans() {
+        let e = QueueError::DTypeMismatch {
+            buffer: BufferId(3),
+            expected: DType::F32,
+            expected_lanes: 1,
+            got: DType::I32,
+            got_lanes: 1,
+        };
+        let s = e.to_string();
+        assert!(s.contains("B3") && s.contains("f32") && s.contains("i32"), "{s}");
+    }
+}

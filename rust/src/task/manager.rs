@@ -1,8 +1,9 @@
 //! TDAG generation: element-granular dependency tracking, horizons, epochs.
 
-use super::{Access, EpochAction, Task, TaskDecl, TaskKind, TaskRef};
-use crate::buffer::BufferPool;
+use super::{Access, CommandGroup, EpochAction, QueueError, Task, TaskDecl, TaskKind, TaskRef};
+use crate::buffer::{Buffer, BufferPool};
 use crate::dag::{Dag, Dep, DepKind};
+use crate::dtype::{DType, Elem};
 use crate::grid::{Region, RegionMap};
 use crate::util::{BufferId, TaskId};
 use std::collections::HashMap;
@@ -82,16 +83,29 @@ impl TaskManager {
         tm
     }
 
-    /// Create a buffer. `host_initialized` buffers start fully defined, with
-    /// the initial epoch as their original producer.
-    pub fn create_buffer(
+    /// Create a typed buffer. `host_initialized` buffers start fully
+    /// defined, with the initial epoch as their original producer.
+    pub fn create_buffer<T: Elem>(
         &mut self,
         name: impl Into<String>,
         range: crate::grid::Range,
-        elem_size: usize,
+        host_initialized: bool,
+    ) -> Buffer<T> {
+        let id = self.create_buffer_raw(name, range, T::DTYPE, T::LANES, host_initialized);
+        Buffer::from_raw(id, range)
+    }
+
+    /// Untyped creation path shared by the typed wrapper and tests that
+    /// only care about element *size*.
+    pub(crate) fn create_buffer_raw(
+        &mut self,
+        name: impl Into<String>,
+        range: crate::grid::Range,
+        dtype: DType,
+        lanes: usize,
         host_initialized: bool,
     ) -> BufferId {
-        let id = self.buffers.create(name, range, elem_size, host_initialized);
+        let id = self.buffers.create(name, range, dtype, lanes, host_initialized);
         let info = self.buffers.get(id);
         self.states.insert(
             id,
@@ -104,12 +118,37 @@ impl TaskManager {
         id
     }
 
+    /// Retroactively mark a buffer host-initialized: the user supplied its
+    /// full contents (`Queue::init`) before any task produced them. The
+    /// init epoch is already every element's last writer, so only the
+    /// initialization tracking changes.
+    pub(crate) fn mark_host_initialized(&mut self, id: BufferId) {
+        let range = self.buffers.get(id).range;
+        self.buffers.get_mut(id).host_initialized = Region::full(range);
+        if let Some(st) = self.states.get_mut(&id) {
+            st.initialized.update_region(&Region::full(range), true);
+        }
+    }
+
     pub fn buffers(&self) -> &BufferPool {
         &self.buffers
     }
 
-    /// Submit one command group; returns the id of the generated task.
-    /// May additionally generate a horizon task into the outbox.
+    /// Submit a typed command group (the Listing-1 `q.submit(...)` surface
+    /// for graph-only consumers: the simulator, benches and graph dumps).
+    /// Returns the id of the generated task.
+    pub fn submit_group(
+        &mut self,
+        build: impl FnOnce(&mut CommandGroup),
+    ) -> Result<TaskId, QueueError> {
+        let mut cgh = CommandGroup::new();
+        build(&mut cgh);
+        Ok(self.submit(cgh.into_decl()?))
+    }
+
+    /// Submit one task declaration (the internal IR underneath command
+    /// groups); returns the id of the generated task. May additionally
+    /// generate a horizon task into the outbox.
     pub fn submit(&mut self, decl: TaskDecl) -> TaskId {
         let (name, kind) = decl.into_kind();
         let deps = self.compute_deps(&kind, &name);
@@ -351,8 +390,8 @@ mod tests {
 
     fn nbody_like(tm: &mut TaskManager, steps: usize) -> (BufferId, BufferId) {
         let n = Range::d1(64);
-        let p = tm.create_buffer("P", n, 24, true);
-        let v = tm.create_buffer("V", n, 24, true);
+        let p = tm.create_buffer::<[f64; 3]>("P", n, true).id();
+        let v = tm.create_buffer::<[f64; 3]>("V", n, true).id();
         for _ in 0..steps {
             tm.submit(
                 TaskDecl::device("timestep", n)
@@ -390,8 +429,8 @@ mod tests {
     fn independent_tasks_share_no_deps() {
         let mut tm = TaskManager::with_horizon_step(u64::MAX);
         let n = Range::d1(16);
-        let a = tm.create_buffer("A", n, 8, true);
-        let b = tm.create_buffer("B", n, 8, true);
+        let a = tm.create_buffer::<f64>("A", n, true).id();
+        let b = tm.create_buffer::<f64>("B", n, true).id();
         let ta = tm.submit(TaskDecl::device("ta", n).read_write(a, RangeMapper::OneToOne));
         let tb = tm.submit(TaskDecl::device("tb", n).read_write(b, RangeMapper::OneToOne));
         let tasks = tm.take_new_tasks();
@@ -406,7 +445,7 @@ mod tests {
         // Region granularity: writes to disjoint halves are independent.
         let mut tm = TaskManager::with_horizon_step(u64::MAX);
         let n = Range::d1(100);
-        let b = tm.create_buffer("B", n, 8, true);
+        let b = tm.create_buffer::<f64>("B", n, true).id();
         let lo = RangeMapper::Fixed(Region::from(GridBox::d1(0, 50)));
         let hi = RangeMapper::Fixed(Region::from(GridBox::d1(50, 100)));
         let t1 = tm.submit(TaskDecl::device("lo", n).write(b, lo));
@@ -424,7 +463,7 @@ mod tests {
     fn anti_dependency_on_readers() {
         let mut tm = TaskManager::with_horizon_step(u64::MAX);
         let n = Range::d1(16);
-        let b = tm.create_buffer("B", n, 8, true);
+        let b = tm.create_buffer::<f64>("B", n, true).id();
         let _w1 = tm.submit(TaskDecl::device("w1", n).write(b, RangeMapper::OneToOne));
         let r = tm.submit(TaskDecl::device("r", n).read(b, RangeMapper::OneToOne));
         let w2 = tm.submit(TaskDecl::device("w2", n).write(b, RangeMapper::OneToOne));
@@ -437,7 +476,7 @@ mod tests {
     fn discard_write_carries_no_dataflow() {
         let mut tm = TaskManager::with_horizon_step(u64::MAX);
         let n = Range::d1(16);
-        let b = tm.create_buffer("B", n, 8, true);
+        let b = tm.create_buffer::<f64>("B", n, true).id();
         let w1 = tm.submit(TaskDecl::device("w1", n).write(b, RangeMapper::OneToOne));
         let dw = tm.submit(TaskDecl::device("dw", n).discard_write(b, RangeMapper::OneToOne));
         let tasks = tm.take_new_tasks();
@@ -451,7 +490,7 @@ mod tests {
     fn uninitialized_read_detected() {
         let mut tm = TaskManager::with_horizon_step(u64::MAX);
         let n = Range::d1(16);
-        let b = tm.create_buffer("B", n, 8, false);
+        let b = tm.create_buffer::<f64>("B", n, false).id();
         tm.submit(TaskDecl::device("w_half", n).write(
             b,
             RangeMapper::Fixed(Region::from(GridBox::d1(0, 8))),
@@ -471,7 +510,7 @@ mod tests {
     fn host_initialized_read_is_clean() {
         let mut tm = TaskManager::with_horizon_step(u64::MAX);
         let n = Range::d1(16);
-        let b = tm.create_buffer("B", n, 8, true);
+        let b = tm.create_buffer::<f64>("B", n, true).id();
         tm.submit(TaskDecl::device("r", n).read(b, RangeMapper::All));
         assert!(tm.take_debug_events().is_empty());
     }
@@ -498,8 +537,8 @@ mod tests {
     fn horizon_subsumes_old_producers() {
         let mut tm = TaskManager::with_horizon_step(2);
         let n = Range::d1(16);
-        let a = tm.create_buffer("A", n, 8, true);
-        let b = tm.create_buffer("B", n, 8, true);
+        let a = tm.create_buffer::<f64>("A", n, true).id();
+        let b = tm.create_buffer::<f64>("B", n, true).id();
         // Write A once early, then churn on B to force horizons.
         tm.submit(TaskDecl::device("wa", n).read_write(a, RangeMapper::OneToOne));
         for _ in 0..10 {
@@ -519,7 +558,7 @@ mod tests {
     fn epoch_resets_tracking() {
         let mut tm = TaskManager::with_horizon_step(u64::MAX);
         let n = Range::d1(16);
-        let b = tm.create_buffer("B", n, 8, true);
+        let b = tm.create_buffer::<f64>("B", n, true).id();
         let w = tm.submit(TaskDecl::device("w", n).read_write(b, RangeMapper::OneToOne));
         let e = tm.barrier();
         let r = tm.submit(TaskDecl::device("r", n).read(b, RangeMapper::OneToOne));
@@ -537,8 +576,8 @@ mod tests {
     fn shutdown_epoch_depends_on_front() {
         let mut tm = TaskManager::with_horizon_step(u64::MAX);
         let n = Range::d1(16);
-        let a = tm.create_buffer("A", n, 8, true);
-        let b = tm.create_buffer("B", n, 8, true);
+        let a = tm.create_buffer::<f64>("A", n, true).id();
+        let b = tm.create_buffer::<f64>("B", n, true).id();
         let ta = tm.submit(TaskDecl::device("ta", n).read_write(a, RangeMapper::OneToOne));
         let tb = tm.submit(TaskDecl::device("tb", n).read_write(b, RangeMapper::OneToOne));
         let sd = tm.shutdown();

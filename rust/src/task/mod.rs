@@ -6,9 +6,11 @@
 //! granularity of individual buffer regions, not whole buffers (§2.3).
 
 mod access;
+mod group;
 mod manager;
 
 pub use access::{Access, AccessMode, RangeMapper};
+pub use group::{Accessor, CommandGroup, QueueError};
 pub use manager::{DebugEvent, TaskManager};
 
 use crate::grid::Range;
@@ -138,24 +140,35 @@ impl TaskDecl {
         TaskDecl { on_host: true, ..TaskDecl::device(name, range) }
     }
 
-    pub fn access(mut self, buffer: crate::util::BufferId, mode: AccessMode, mapper: RangeMapper) -> Self {
-        self.accesses.push(Access::new(buffer, mode, mapper));
+    /// Typed [`crate::buffer::Buffer`] handles and raw
+    /// [`BufferId`](crate::util::BufferId)s are both accepted.
+    pub fn access(
+        mut self,
+        buffer: impl Into<crate::util::BufferId>,
+        mode: AccessMode,
+        mapper: RangeMapper,
+    ) -> Self {
+        self.accesses.push(Access::new(buffer.into(), mode, mapper));
         self
     }
 
-    pub fn read(self, buffer: crate::util::BufferId, mapper: RangeMapper) -> Self {
+    pub fn read(self, buffer: impl Into<crate::util::BufferId>, mapper: RangeMapper) -> Self {
         self.access(buffer, AccessMode::Read, mapper)
     }
 
-    pub fn write(self, buffer: crate::util::BufferId, mapper: RangeMapper) -> Self {
+    pub fn write(self, buffer: impl Into<crate::util::BufferId>, mapper: RangeMapper) -> Self {
         self.access(buffer, AccessMode::Write, mapper)
     }
 
-    pub fn read_write(self, buffer: crate::util::BufferId, mapper: RangeMapper) -> Self {
+    pub fn read_write(self, buffer: impl Into<crate::util::BufferId>, mapper: RangeMapper) -> Self {
         self.access(buffer, AccessMode::ReadWrite, mapper)
     }
 
-    pub fn discard_write(self, buffer: crate::util::BufferId, mapper: RangeMapper) -> Self {
+    pub fn discard_write(
+        self,
+        buffer: impl Into<crate::util::BufferId>,
+        mapper: RangeMapper,
+    ) -> Self {
         self.access(buffer, AccessMode::DiscardWrite, mapper)
     }
 
