@@ -5,45 +5,134 @@
 //! - out-of-order engine admit+retire latency,
 //! - IDAG generation throughput (instructions/s),
 //! - spsc queue round-trip throughput,
-//! - region-algebra ops (the scheduler's inner loop).
+//! - region-algebra and region-map ops (the scheduler's inner loop).
 //!
 //!     cargo bench --bench micro_scheduler
+//!
+//! Besides the stdout table, results are written as machine-readable JSON
+//! to `BENCH_scheduler.json` at the repository root (override the path with
+//! `BENCH_SCHEDULER_JSON`), tagged with git revision and date — the
+//! perf-trajectory baseline future PRs compare against. Set `BENCH_QUICK=1`
+//! for a fast smoke run (CI): same components, reduced op counts.
 
 use celerity::command::{CdagGenerator, SplitHint};
 use celerity::executor::ooo::OooEngine;
-use celerity::grid::{GridBox, Range, Region};
+use celerity::grid::{GridBox, Range, Region, RegionMap};
 use celerity::instruction::{IdagConfig, IdagGenerator};
 use celerity::scheduler::{Scheduler, SchedulerConfig};
 use celerity::task::{RangeMapper, TaskManager};
 use celerity::util::{spsc, NodeId};
 use std::time::Instant;
 
-fn bench<F: FnMut() -> u64>(name: &str, mut f: F) {
-    // Warmup + best-of-3 (median would need more runs; min is stable for
-    // CPU-bound loops).
+struct BenchResult {
+    name: &'static str,
+    ops_per_s: f64,
+    ns_per_op: f64,
+    ops: u64,
+}
+
+/// Warmup + best-of-N (median would need more runs; min is stable for
+/// CPU-bound loops).
+fn bench(
+    results: &mut Vec<BenchResult>,
+    repeats: u32,
+    name: &'static str,
+    mut f: impl FnMut() -> u64,
+) {
     f();
     let mut best = f64::MAX;
     let mut ops = 0;
-    for _ in 0..3 {
+    for _ in 0..repeats {
         let t0 = Instant::now();
         ops = f();
         let dt = t0.elapsed().as_secs_f64();
         best = best.min(dt);
     }
-    println!(
-        "{name:<44} {:>12.0} ops/s   ({:>8.1} ns/op, {ops} ops)",
-        ops as f64 / best,
-        best / ops as f64 * 1e9
-    );
+    let ops_per_s = ops as f64 / best;
+    let ns_per_op = best / ops as f64 * 1e9;
+    println!("{name:<44} {ops_per_s:>12.0} ops/s   ({ns_per_op:>8.1} ns/op, {ops} ops)");
+    results.push(BenchResult { name, ops_per_s, ns_per_op, ops });
+}
+
+fn git_rev() -> String {
+    std::process::Command::new("git")
+        .args(["rev-parse", "--short", "HEAD"])
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .unwrap_or_else(|| "unknown".to_string())
+}
+
+/// Days-since-epoch → (year, month, day), proleptic Gregorian
+/// (Howard Hinnant's civil_from_days), to avoid a date-crate dependency.
+fn civil_from_unix(secs: u64) -> (i64, u64, u64) {
+    let z = (secs / 86_400) as i64 + 719_468;
+    let era = z.div_euclid(146_097);
+    let doe = z.rem_euclid(146_097) as u64;
+    let yoe = (doe - doe / 1460 + doe / 36_524 - doe / 146_096) / 365;
+    let doy = doe - (365 * yoe + yoe / 4 - yoe / 100);
+    let mp = (5 * doy + 2) / 153;
+    let d = doy - (153 * mp + 2) / 5 + 1;
+    let m = if mp < 10 { mp + 3 } else { mp - 9 };
+    let y = yoe as i64 + era * 400 + i64::from(m <= 2);
+    (y, m, d)
+}
+
+fn json_escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+fn write_json(results: &[BenchResult], quick: bool) {
+    let path = std::env::var("BENCH_SCHEDULER_JSON").unwrap_or_else(|_| {
+        format!("{}/../BENCH_scheduler.json", env!("CARGO_MANIFEST_DIR"))
+    });
+    let unix_time = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    let (y, m, d) = civil_from_unix(unix_time);
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str("  \"bench\": \"micro_scheduler\",\n");
+    s.push_str("  \"schema\": 1,\n");
+    s.push_str(&format!("  \"git_rev\": \"{}\",\n", json_escape(&git_rev())));
+    s.push_str(&format!("  \"date\": \"{y:04}-{m:02}-{d:02}\",\n"));
+    s.push_str(&format!("  \"unix_time\": {unix_time},\n"));
+    s.push_str(&format!("  \"quick\": {quick},\n"));
+    s.push_str("  \"components\": [\n");
+    for (i, r) in results.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"name\": \"{}\", \"ops_per_s\": {:.1}, \"ns_per_op\": {:.2}, \"ops\": {}}}{}\n",
+            json_escape(r.name),
+            r.ops_per_s,
+            r.ns_per_op,
+            r.ops,
+            if i + 1 < results.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    match std::fs::write(&path, s) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("\nfailed to write {path}: {e}"),
+    }
 }
 
 fn main() {
+    let quick = std::env::var("BENCH_QUICK").is_ok_and(|v| !v.is_empty() && v != "0");
+    // Scale divides inner-loop op counts; quick mode is a CI smoke run.
+    let scale: u64 = if quick { 16 } else { 1 };
+    let repeats: u32 = if quick { 1 } else { 3 };
+    let mut results: Vec<BenchResult> = Vec::new();
+    let res = &mut results;
     println!("== micro_scheduler: latency-critical component benchmarks ==\n");
 
     // 1. OoO engine: admit + retire a linear chain (worst case: every
     //    retire unblocks exactly one successor).
-    bench("ooo admit+retire (chain, eager path)", || {
-        let n = 100_000u64;
+    bench(res, repeats, "ooo admit+retire (chain, eager path)", || {
+        let n = 100_000u64 / scale;
         let mut e = OooEngine::new(4);
         let mut pending = Vec::with_capacity(n as usize);
         for i in 0..n {
@@ -74,12 +163,13 @@ fn main() {
     });
 
     // 2. IDAG generation throughput on the N-body pattern (4 devices).
-    bench("idag generation (nbody, 4 devices)", || {
+    bench(res, repeats, "idag generation (nbody, 4 devices)", || {
+        let steps = 200 / scale.min(8);
         let mut tm = TaskManager::new();
         let range = Range::d1(1 << 16);
         let p = tm.create_buffer::<[f32; 3]>("P", range, true);
         let v = tm.create_buffer::<[f32; 3]>("V", range, true);
-        for _ in 0..200 {
+        for _ in 0..steps {
             tm.submit_group(|cgh| {
                 cgh.read(p, RangeMapper::All);
                 cgh.read_write(v, RangeMapper::OneToOne);
@@ -98,22 +188,22 @@ fn main() {
             SchedulerConfig { num_devices: 4, ..Default::default() },
             tm.buffers().clone(),
         );
-        let mut total = 0;
-        for t in &tasks {
-            let (i, _) = sched.process(t);
-            total += i.len() as u64;
-        }
+        // Batched pipeline: one wakeup per run of available tasks.
+        let (i, _) = sched.process_batch(&tasks);
+        let mut total = i.len() as u64;
         let (i, _) = sched.flush_now();
-        total + i.len() as u64
+        total += i.len() as u64;
+        total
     });
 
     // 3. CDAG generation throughput at 32 nodes (the distributed split).
-    bench("cdag generation (nbody, node 0 of 32)", || {
+    bench(res, repeats, "cdag generation (nbody, node 0 of 32)", || {
+        let steps = 50 / scale.min(5);
         let mut tm = TaskManager::new();
         let range = Range::d1(1 << 16);
         let p = tm.create_buffer::<[f32; 3]>("P", range, true);
         let v = tm.create_buffer::<[f32; 3]>("V", range, true);
-        for _ in 0..50 {
+        for _ in 0..steps {
             tm.submit_group(|cgh| {
                 cgh.read(p, RangeMapper::All);
                 cgh.read_write(v, RangeMapper::OneToOne);
@@ -138,8 +228,8 @@ fn main() {
     });
 
     // 4. spsc queue round trip (the Fig-5 thread fabric).
-    bench("spsc send+recv round trip", || {
-        let n = 500_000u64;
+    bench(res, repeats, "spsc send+recv round trip", || {
+        let n = 500_000u64 / scale;
         let (tx, rx) = spsc::channel::<u64>(1024);
         let t = std::thread::spawn(move || {
             for i in 0..n {
@@ -157,9 +247,10 @@ fn main() {
     });
 
     // 5. Region algebra (scheduler inner loop).
-    bench("region union+intersect+difference (2D)", || {
-        let n = 50_000u64;
-        let a = Region::from_boxes([GridBox::d2((0, 0), (64, 64)), GridBox::d2((64, 32), (128, 96))]);
+    bench(res, repeats, "region union+intersect+difference (2D)", || {
+        let n = 50_000u64 / scale;
+        let a =
+            Region::from_boxes([GridBox::d2((0, 0), (64, 64)), GridBox::d2((64, 32), (128, 96))]);
         let b = Region::from(GridBox::d2((32, 32), (96, 96)));
         let mut acc = 0u64;
         for _ in 0..n {
@@ -169,10 +260,56 @@ fn main() {
         n * 3
     });
 
-    // 6. RSim lookahead scheduling cost (queue + flush).
-    bench("scheduler lookahead (rsim 64 steps)", || {
+    // 6. Region map: the RSim row pattern that fragments last-writer
+    //    tracking — per-row updates against a growing fragment list, plus
+    //    the prefix queries the generator issues per command. This is the
+    //    structure the interval index exists for.
+    bench(res, repeats, "region map update+query (rsim rows, 2D)", || {
+        let (rows, width, reps) = (256u64, 4096u64, 40 / scale.clamp(1, 8));
+        let mut acc = 0u64;
+        for _ in 0..reps {
+            let mut m = RegionMap::new(Range::d2(rows, width), 0u64);
+            for t in 0..rows {
+                m.update_box(&GridBox::d2((t, 0), (t + 1, width)), t + 1);
+                let prev = GridBox::d2((0, 0), (t.max(1), width));
+                m.for_each_intersecting(&prev, |b, v| acc += b.area() + v);
+            }
+        }
+        std::hint::black_box(acc);
+        256 * 2 * reps
+    });
+
+    // 7. Region map: reader-set tracking (`Vec` payloads) under
+    //    apply_to_region — the op that used to deep-clone every list.
+    bench(res, repeats, "region map apply (reader sets, 1D)", || {
+        let n = 2_000u64 / scale.clamp(1, 8);
+        let ext = 1u64 << 16;
+        let mut m = RegionMap::new(Range::d1(ext), Vec::<u64>::new());
+        // Pre-fragment: 64 disjoint writer stripes.
+        for i in 0..64 {
+            m.update_box(&GridBox::d1(i * (ext / 64), i * (ext / 64) + ext / 128), vec![i]);
+        }
+        for i in 0..n {
+            let lo = (i * 977) % (ext - 1024);
+            let r = Region::from(GridBox::d1(lo, lo + 1024));
+            m.apply_to_region(&r, |rs| {
+                let mut rs = rs.clone();
+                rs.push(i);
+                rs
+            });
+            if i % 64 == 63 {
+                // Horizon-style reset keeps fragment counts bounded.
+                m.update_box(&GridBox::d1(0, ext), Vec::new());
+            }
+        }
+        std::hint::black_box(m.fragments());
+        n
+    });
+
+    // 8. RSim lookahead scheduling cost (queue + flush).
+    bench(res, repeats, "scheduler lookahead (rsim 64 steps)", || {
         let mut tm = TaskManager::new();
-        let (steps, width) = (64u64, 4096u64);
+        let (steps, width) = (64u64 / scale.min(4), 4096u64);
         let r = tm.create_buffer::<f32>("R", Range::d2(steps, width), true);
         let vis = tm.create_buffer::<f32>("VIS", Range::d2(width, 64), true);
         for t in 1..steps {
@@ -190,16 +327,16 @@ fn main() {
             SchedulerConfig { num_devices: 4, ..Default::default() },
             tm.buffers().clone(),
         );
-        let mut total = 0;
-        for t in &tasks {
-            let (i, _) = sched.process(t);
-            total += i.len() as u64;
-        }
+        let (i, _) = sched.process_batch(&tasks);
+        let mut total = i.len() as u64;
         let (i, _) = sched.flush_now();
-        total + i.len() as u64
+        total += i.len() as u64;
+        total
     });
 
     // Sanity anchor: an IdagGenerator must stay usable for the suite.
     let _ = IdagGenerator::new(IdagConfig::default(), celerity::buffer::BufferPool::new());
     println!("\ntargets (DESIGN.md §7): ooo < 2 µs/instr; idag gen > 10k instr/s");
+
+    write_json(&results, quick);
 }

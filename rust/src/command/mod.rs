@@ -299,13 +299,13 @@ impl CdagGenerator {
                 continue;
             }
             let st = &self.states[&a.buffer];
-            let missing = Region::from_boxes(
-                st.replicated
-                    .query_region(&read)
-                    .into_iter()
-                    .filter(|(_, set)| !set.contains(self.node))
-                    .map(|(b, _)| b),
-            );
+            let mut missing_boxes: Vec<GridBox> = Vec::new();
+            st.replicated.for_each_in_region(&read, |b, set| {
+                if !set.contains(self.node) {
+                    missing_boxes.push(b);
+                }
+            });
+            let missing = Region::from_boxes(missing_boxes);
             if missing.is_empty() {
                 continue;
             }
@@ -314,16 +314,16 @@ impl CdagGenerator {
             let mut deps: Vec<(CommandId, DepKind)> = Vec::new();
             {
                 let st = &self.states[&a.buffer];
-                for (_, readers) in st.readers_since.query_region(&missing) {
+                st.readers_since.for_each_in_region(&missing, |_, readers| {
                     for r in readers {
-                        push_dep(&mut deps, r, DepKind::Anti);
+                        push_dep(&mut deps, *r, DepKind::Anti);
                     }
-                }
-                for (_, w) in st.last_writer_cmd.query_region(&missing) {
+                });
+                st.last_writer_cmd.for_each_in_region(&missing, |_, w| {
                     if let Some(w) = w {
-                        push_dep(&mut deps, w, DepKind::Anti);
+                        push_dep(&mut deps, *w, DepKind::Anti);
                     }
-                }
+                });
             }
             let id = self.push_command(
                 task,
@@ -355,30 +355,30 @@ impl CdagGenerator {
                 }
                 let st = &self.states[&a.buffer];
                 // What we own out of the peer's need...
-                let ours = Region::from_boxes(
-                    st.owner
-                        .query_region(&read)
-                        .into_iter()
-                        .filter(|(_, o)| *o == self.node)
-                        .map(|(b, _)| b),
-                );
+                let mut our_boxes: Vec<GridBox> = Vec::new();
+                st.owner.for_each_in_region(&read, |b, o| {
+                    if *o == self.node {
+                        our_boxes.push(b);
+                    }
+                });
+                let ours = Region::from_boxes(our_boxes);
                 // ...minus what the peer already has.
-                let to_send = Region::from_boxes(
-                    st.replicated
-                        .query_region(&ours)
-                        .into_iter()
-                        .filter(|(_, set)| !set.contains(peer))
-                        .map(|(b, _)| b),
-                );
+                let mut send_boxes: Vec<GridBox> = Vec::new();
+                st.replicated.for_each_in_region(&ours, |b, set| {
+                    if !set.contains(peer) {
+                        send_boxes.push(b);
+                    }
+                });
+                let to_send = Region::from_boxes(send_boxes);
                 if to_send.is_empty() {
                     continue;
                 }
                 let mut deps: Vec<(CommandId, DepKind)> = Vec::new();
-                for (_, w) in self.states[&a.buffer].last_writer_cmd.query_region(&to_send) {
+                self.states[&a.buffer].last_writer_cmd.for_each_in_region(&to_send, |_, w| {
                     if let Some(w) = w {
-                        push_dep(&mut deps, w, DepKind::Dataflow);
+                        push_dep(&mut deps, *w, DepKind::Dataflow);
                     }
-                }
+                });
                 let id = self.push_command(
                     task,
                     CommandKind::Push { buffer: a.buffer, region: to_send.clone(), target: peer },
@@ -405,23 +405,23 @@ impl CdagGenerator {
                 }
                 let st = &self.states[&a.buffer];
                 if a.mode.is_consumer() {
-                    for (_, w) in st.last_writer_cmd.query_region(&region) {
+                    st.last_writer_cmd.for_each_in_region(&region, |_, w| {
                         if let Some(w) = w {
-                            push_dep(&mut deps, w, DepKind::Dataflow);
+                            push_dep(&mut deps, *w, DepKind::Dataflow);
                         }
-                    }
+                    });
                 }
                 if a.mode.is_producer() {
-                    for (_, readers) in st.readers_since.query_region(&region) {
+                    st.readers_since.for_each_in_region(&region, |_, readers| {
                         for r in readers {
-                            push_dep(&mut deps, r, DepKind::Anti);
+                            push_dep(&mut deps, *r, DepKind::Anti);
                         }
-                    }
-                    for (_, w) in st.last_writer_cmd.query_region(&region) {
+                    });
+                    st.last_writer_cmd.for_each_in_region(&region, |_, w| {
                         if let Some(w) = w {
-                            push_dep(&mut deps, w, DepKind::Output);
+                            push_dep(&mut deps, *w, DepKind::Output);
                         }
-                    }
+                    });
                 }
             }
             if deps.is_empty() {

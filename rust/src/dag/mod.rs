@@ -5,9 +5,20 @@
 //! successors, Fig 4 caption), and epoch-based pruning so that tracking
 //! structures stay bounded (the horizon mechanism, §3.5). `Dag<N>` provides
 //! exactly that, with the payload type supplied per layer.
+//!
+//! Two hot-path properties (§4.1 — horizons and epochs run at a fixed
+//! cadence through the scheduler's inner loop):
+//!
+//! - the execution front is maintained **incrementally** on `push` /
+//!   `prune_before` instead of rescanning every live node, so `front()` is
+//!   `O(front)`;
+//! - dependency sets are **interned**: repeated identical predecessor lists
+//!   (ubiquitous in data-parallel programs, where every chunk of a task
+//!   depends on the same producers) share one allocation.
 
-use std::collections::HashMap;
+use std::collections::{BTreeSet, HashMap, HashSet};
 use std::fmt;
+use std::sync::Arc;
 
 /// Why a dependency edge exists. Mirrors the edge coloring of Fig 2:
 /// dataflow (black), anti- and output dependencies (green), and
@@ -43,12 +54,14 @@ pub struct Dep {
     pub kind: DepKind,
 }
 
-/// One node of a DAG: a payload plus its predecessor list.
+/// One node of a DAG: a payload plus its predecessor list. The predecessor
+/// list is a shared slice — identical dependency sets are interned by
+/// [`Dag::push`].
 #[derive(Debug, Clone)]
 pub struct DagNode<N> {
     pub id: u64,
     pub payload: N,
-    pub deps: Vec<Dep>,
+    pub deps: Arc<[Dep]>,
     /// Number of recorded successors (maintained for front tracking).
     succ_count: usize,
 }
@@ -60,6 +73,11 @@ impl<N> DagNode<N> {
     }
 }
 
+/// Interned dependency sets are only worth caching while they repeat;
+/// pruning invalidates old sets anyway, so the cache is simply bounded and
+/// dropped wholesale when it overflows.
+const DEP_CACHE_MAX: usize = 1024;
+
 /// Append-only DAG with pruning. Node ids are assigned monotonically and are
 /// never reused; pruned nodes simply disappear from the map (the horizon
 /// mechanism guarantees nothing references them anymore).
@@ -67,12 +85,24 @@ impl<N> DagNode<N> {
 pub struct Dag<N> {
     nodes: HashMap<u64, DagNode<N>>,
     order: Vec<u64>, // topological (insertion) order of live nodes
+    /// Live nodes without successors, maintained incrementally. Sorted so
+    /// `front()` reproduces insertion (= id) order.
+    frontier: BTreeSet<u64>,
+    /// Interning cache for repeated dependency sets (the `Arc` doubles as
+    /// the key via `Borrow<[Dep]>`, so each set is stored once).
+    dep_sets: HashSet<Arc<[Dep]>>,
     next_id: u64,
 }
 
 impl<N> Default for Dag<N> {
     fn default() -> Self {
-        Dag { nodes: HashMap::new(), order: Vec::new(), next_id: 0 }
+        Dag {
+            nodes: HashMap::new(),
+            order: Vec::new(),
+            frontier: BTreeSet::new(),
+            dep_sets: HashSet::new(),
+            next_id: 0,
+        }
     }
 }
 
@@ -101,14 +131,30 @@ impl<N> Dag<N> {
             uniq.push(d);
         }
         for d in &uniq {
-            if let Some(n) = self.nodes.get_mut(&d.from) {
-                n.succ_count += 1;
+            let n = self.nodes.get_mut(&d.from).expect("dep target is live");
+            if n.succ_count == 0 {
+                self.frontier.remove(&d.from);
             }
+            n.succ_count += 1;
         }
+        let deps = self.intern_deps(uniq);
         self.nodes
-            .insert(id, DagNode { id, payload, deps: uniq, succ_count: 0 });
+            .insert(id, DagNode { id, payload, deps, succ_count: 0 });
         self.order.push(id);
+        self.frontier.insert(id);
         id
+    }
+
+    fn intern_deps(&mut self, uniq: Vec<Dep>) -> Arc<[Dep]> {
+        if let Some(shared) = self.dep_sets.get(uniq.as_slice()) {
+            return shared.clone();
+        }
+        let shared: Arc<[Dep]> = uniq.into();
+        if self.dep_sets.len() >= DEP_CACHE_MAX {
+            self.dep_sets.clear();
+        }
+        self.dep_sets.insert(shared.clone());
+        shared
     }
 
     /// Number of live (unpruned) nodes.
@@ -144,36 +190,47 @@ impl<N> Dag<N> {
 
     /// The *execution front*: live nodes that no other live node depends on.
     /// A horizon node "by definition depends on all instructions on the
-    /// current execution front" (§3.6).
+    /// current execution front" (§3.6). Maintained incrementally; this is
+    /// `O(front)`, not `O(live nodes)`.
     pub fn front(&self) -> Vec<u64> {
-        self.iter()
-            .filter(|n| n.succ_count == 0)
-            .map(|n| n.id)
-            .collect()
+        self.frontier.iter().copied().collect()
     }
 
     /// Drop all nodes with `id < before`. Used when a horizon is applied:
     /// everything older has completed and can no longer be referenced.
     pub fn prune_before(&mut self, before: u64) -> usize {
         let dead: Vec<u64> = self.order.iter().copied().filter(|&id| id < before).collect();
+        if dead.is_empty() {
+            return 0;
+        }
         for id in &dead {
             if let Some(n) = self.nodes.remove(id) {
                 // Decrement successor counts of surviving predecessors.
-                for d in n.deps {
+                // (Edges point backwards, so predecessors of dead nodes are
+                // normally dead themselves — this is belt and braces.)
+                for d in n.deps.iter() {
                     if let Some(p) = self.nodes.get_mut(&d.from) {
                         p.succ_count -= 1;
+                        if p.succ_count == 0 {
+                            self.frontier.insert(d.from);
+                        }
                     }
                 }
             }
+            self.frontier.remove(id);
         }
-        self.order.retain(|id| !dead.contains(id));
+        self.order.retain(|id| *id >= before);
         // Surviving nodes may still point at pruned predecessors; those
-        // edges are vacuously satisfied. Clean them up so successor counts
-        // and dep walks stay consistent.
-        let live: std::collections::HashSet<u64> = self.nodes.keys().copied().collect();
+        // edges are vacuously satisfied. Drop them so dep walks stay
+        // consistent. (All retained edges target ids >= before, which are
+        // exactly the surviving nodes.)
         for n in self.nodes.values_mut() {
-            n.deps.retain(|d| live.contains(&d.from));
+            if n.deps.iter().any(|d| d.from < before) {
+                n.deps = n.deps.iter().copied().filter(|d| d.from >= before).collect();
+            }
         }
+        // Cached dep sets may embed pruned ids; drop them wholesale.
+        self.dep_sets.clear();
         dead.len()
     }
 
@@ -190,7 +247,7 @@ impl<N> Dag<N> {
         let _ = writeln!(s, "  rankdir=TB; node [shape=box, fontname=\"monospace\"];");
         for n in self.iter() {
             let _ = writeln!(s, "  n{} [label=\"{}\"];", n.id, f(&n.payload).replace('"', "'"));
-            for d in &n.deps {
+            for d in n.deps.iter() {
                 let color = match d.kind {
                     DepKind::Dataflow => "black",
                     DepKind::Anti | DepKind::Output => "darkgreen",
@@ -210,6 +267,18 @@ mod tests {
 
     fn dep(from: u64) -> Dep {
         Dep { from, kind: DepKind::Dataflow }
+    }
+
+    /// Recompute the execution front from scratch: live nodes that no other
+    /// live node depends on.
+    fn recomputed_front<N>(g: &Dag<N>) -> Vec<u64> {
+        let mut has_succ: std::collections::HashSet<u64> = std::collections::HashSet::new();
+        for n in g.iter() {
+            for d in n.dep_ids() {
+                has_succ.insert(d);
+            }
+        }
+        g.iter().filter(|n| !has_succ.contains(&n.id)).map(|n| n.id).collect()
     }
 
     #[test]
@@ -261,6 +330,56 @@ mod tests {
         // Ids keep counting up after pruning.
         let d = g.push("d", [dep(c)]);
         assert_eq!(d, 3);
+    }
+
+    #[test]
+    fn identical_dep_sets_are_interned() {
+        let mut g: Dag<&str> = Dag::new();
+        let a = g.push("a", []);
+        let b = g.push("b", []);
+        let c = g.push("c", [dep(a), dep(b)]);
+        let d = g.push("d", [dep(a), dep(b)]);
+        let cd = g.get(c).unwrap().deps.clone();
+        let dd = g.get(d).unwrap().deps.clone();
+        assert!(Arc::ptr_eq(&cd, &dd), "equal dep sets must share one allocation");
+        // Different sets do not alias.
+        let e = g.push("e", [dep(a)]);
+        assert!(!Arc::ptr_eq(&cd, &g.get(e).unwrap().deps.clone()));
+    }
+
+    /// Satellite: the incrementally maintained front matches a
+    /// from-scratch recomputation under interleaved `push`/`prune_before`.
+    #[test]
+    fn frontier_matches_recomputation_under_interleaving() {
+        use crate::util::XorShift64;
+        let mut rng = XorShift64::new(0xF00D);
+        let mut g: Dag<u64> = Dag::new();
+        let mut pruned_below = 0u64;
+        for step in 0..2000u64 {
+            if step % 97 == 96 && g.total_created() > pruned_below + 4 {
+                // Prune a random prefix of the live window (horizon apply).
+                let span = g.total_created() - pruned_below;
+                pruned_below += 1 + rng.next_below(span - 2);
+                g.prune_before(pruned_below);
+            } else {
+                // Push with 0..=3 deps on random recent nodes.
+                let n_deps = rng.next_below(4);
+                let lo = pruned_below;
+                let hi = g.total_created();
+                let deps: Vec<Dep> = (0..n_deps)
+                    .filter(|_| hi > lo)
+                    .map(|_| dep(lo + rng.next_below(hi - lo)))
+                    .collect();
+                g.push(step, deps);
+            }
+            assert_eq!(
+                g.front(),
+                recomputed_front(&g),
+                "front diverged at step {step} (pruned_below={pruned_below})"
+            );
+            assert!(g.check_acyclic());
+        }
+        assert!(g.total_created() > 1500);
     }
 
     #[test]

@@ -6,15 +6,54 @@
 //! up-to-date-memories coherence tracking in the IDAG. Updates overwrite a
 //! region with a new value; queries return the covering `(box, value)`
 //! fragments of a region.
+//!
+//! # Indexing scheme (scheduler hot path)
+//!
+//! This map sits in the inner loop of all three graph generators, so every
+//! operation must avoid rescanning and re-cloning the whole fragment list
+//! (§4.1: "as little time as possible must be spent" in the scheduler):
+//!
+//! - **Sorted interval index.** Fragments are kept sorted by their `min`
+//!   corner (major dimension first). Together with `max_span` — an upper
+//!   bound on any fragment's major-dimension extent — a query for box `b`
+//!   binary-searches the *candidate window* of fragments whose dimension-0
+//!   interval can intersect `b`, then applies a bounding-box check per
+//!   candidate. Disjoint workloads (the common case: per-row updates,
+//!   per-chunk queries) touch `O(log n + answer)` fragments instead of all.
+//! - **`Cow`-style value sharing.** Values are stored behind `Arc<T>`, so
+//!   splitting a fragment copies a pointer — never the payload. This matters
+//!   for reader-set tracking (`RegionMap<Vec<InstructionId>>`) where the old
+//!   flat representation deep-cloned every reader list on every split.
+//! - **Batched overwrites.** [`RegionMap::update_boxes`] applies many
+//!   `(box, value)` overwrites in one partition pass; the instruction
+//!   generator uses it when a single command produces many fragments.
+//! - **Borrowing visitors.** [`RegionMap::for_each_intersecting`] /
+//!   [`RegionMap::for_each_in_region`] visit covering fragments without
+//!   allocating or cloning values; `query_box`/`query_region` remain as
+//!   owned-result conveniences on top.
 
-use super::{GridBox, Range, Region};
+use super::{GridBox, Point, Range, Region};
+use std::sync::Arc;
+
+/// Coalescing needs a cheap "same value?" check; pointer equality
+/// short-circuits the deep comparison for fragments sharing one `Arc`.
+fn val_eq<T: PartialEq>(a: &Arc<T>, b: &Arc<T>) -> bool {
+    Arc::ptr_eq(a, b) || **a == **b
+}
 
 /// A total map from `[0, extent)` to `T`, stored as disjoint `(box, value)`
 /// entries. Adjacent entries holding equal values are coalesced.
 #[derive(Debug, Clone)]
 pub struct RegionMap<T> {
     extent: GridBox,
-    entries: Vec<(GridBox, T)>,
+    /// Disjoint fragments sorted by `min` (lexicographic, dimension 0
+    /// first). Two disjoint non-empty boxes never share a `min` corner, so
+    /// the key is unique. Values are `Arc`-shared across splits.
+    entries: Vec<(GridBox, Arc<T>)>,
+    /// Upper bound on `max[0] - min[0]` over all entries (monotone; never
+    /// recomputed on removal). Bounds the candidate window of the interval
+    /// index.
+    max_span: u64,
 }
 
 impl<T: Clone + PartialEq> RegionMap<T> {
@@ -24,7 +63,8 @@ impl<T: Clone + PartialEq> RegionMap<T> {
         let full = GridBox::full(extent);
         RegionMap {
             extent: full,
-            entries: if full.is_empty() { vec![] } else { vec![(full, default)] },
+            entries: if full.is_empty() { vec![] } else { vec![(full, Arc::new(default))] },
+            max_span: if full.is_empty() { 0 } else { full.max[0] - full.min[0] },
         }
     }
 
@@ -39,11 +79,100 @@ impl<T: Clone + PartialEq> RegionMap<T> {
         self.entries.len()
     }
 
+    /// The `[lo, hi)` entry window whose dimension-0 intervals can intersect
+    /// `b`. Candidates still need a per-entry bounding-box check.
+    fn window(&self, b: &GridBox) -> (usize, usize) {
+        if b.is_empty() || self.entries.is_empty() {
+            return (0, 0);
+        }
+        let span = self.max_span;
+        let lo = self
+            .entries
+            .partition_point(|(e, _)| e.min[0].saturating_add(span) <= b.min[0]);
+        let hi = self.entries.partition_point(|(e, _)| e.min[0] < b.max[0]);
+        (lo, hi.max(lo))
+    }
+
+    /// Index of the entry whose box is exactly `b`, if still present.
+    fn find_exact(&self, b: &GridBox) -> Option<usize> {
+        let pos = self.entries.partition_point(|(e, _)| e.min.0 < b.min.0);
+        match self.entries.get(pos) {
+            Some((eb, _)) if eb == b => Some(pos),
+            _ => None,
+        }
+    }
+
+    /// Insert fragments, keeping the sort order and `max_span` invariants.
+    /// Cost is `O(k log k + affected range)` — the fragments are sorted
+    /// among themselves and merged into the key range they span, instead of
+    /// re-sorting the whole entry vector.
+    fn insert_all(&mut self, mut frags: Vec<(GridBox, Arc<T>)>) {
+        if frags.is_empty() {
+            return;
+        }
+        for (b, _) in &frags {
+            self.max_span = self.max_span.max(b.max[0] - b.min[0]);
+        }
+        if frags.len() == 1 {
+            let (b, v) = frags.into_iter().next().unwrap();
+            let pos = self.entries.partition_point(|(e, _)| e.min.0 < b.min.0);
+            self.entries.insert(pos, (b, v));
+            return;
+        }
+        frags.sort_unstable_by_key(|(b, _)| b.min.0);
+        let lo_key = frags.first().unwrap().0.min.0;
+        let hi_key = frags.last().unwrap().0.min.0;
+        let r0 = self.entries.partition_point(|(e, _)| e.min.0 < lo_key);
+        let r1 = self.entries.partition_point(|(e, _)| e.min.0 <= hi_key);
+        let old: Vec<(GridBox, Arc<T>)> = self.entries.drain(r0..r1).collect();
+        let mut merged = Vec::with_capacity(old.len() + frags.len());
+        let mut a = old.into_iter().peekable();
+        let mut b = frags.into_iter().peekable();
+        loop {
+            match (a.peek(), b.peek()) {
+                (Some(x), Some(y)) => {
+                    if x.0.min.0 <= y.0.min.0 {
+                        merged.push(a.next().unwrap());
+                    } else {
+                        merged.push(b.next().unwrap());
+                    }
+                }
+                (Some(_), None) => merged.push(a.next().unwrap()),
+                (None, Some(_)) => merged.push(b.next().unwrap()),
+                (None, None) => break,
+            }
+        }
+        self.entries.splice(r0..r0, merged);
+    }
+
+    /// Restore the exactness of `max_span` after removing entries. `max_span`
+    /// must stay *attained* by a live entry, or the window's lower bound
+    /// degrades to a linear scan (the seed fragment spans the full extent, so
+    /// a pinned bound would make the index inert forever after the first
+    /// split). Recomputes only when a removed entry attained the prior bound.
+    fn refresh_max_span(&mut self, prior_span: u64, removed: &[(GridBox, Arc<T>)]) {
+        if removed.iter().all(|(b, _)| b.max[0] - b.min[0] < prior_span) {
+            return;
+        }
+        self.max_span = self
+            .entries
+            .iter()
+            .map(|(b, _)| b.max[0] - b.min[0])
+            .max()
+            .unwrap_or(0);
+    }
+
     /// Overwrite `region ∩ extent` with `value`.
     pub fn update_region(&mut self, region: &Region, value: T) {
-        for b in region.boxes() {
-            self.update_box(b, value.clone());
-        }
+        let v = Arc::new(value);
+        let updates: Vec<(GridBox, Arc<T>)> = region
+            .boxes()
+            .iter()
+            .map(|b| b.intersection(&self.extent))
+            .filter(|b| !b.is_empty())
+            .map(|b| (b, v.clone()))
+            .collect();
+        self.overwrite(updates);
     }
 
     /// Overwrite `b ∩ extent` with `value`.
@@ -52,75 +181,193 @@ impl<T: Clone + PartialEq> RegionMap<T> {
         if b.is_empty() {
             return;
         }
-        let mut next = Vec::with_capacity(self.entries.len() + 1);
-        for (eb, ev) in self.entries.drain(..) {
-            if eb.intersects(&b) {
-                for rest in eb.difference(&b) {
-                    next.push((rest, ev.clone()));
-                }
+        self.overwrite(vec![(b, Arc::new(value))]);
+    }
+
+    /// Overwrite many `(box, value)` pairs in a single partition pass. On
+    /// overlap between update boxes, the later pair wins (callers usually
+    /// pass disjoint boxes — e.g. the producer-split fragments of one
+    /// command). Boxes are clamped to the extent.
+    pub fn update_boxes(&mut self, updates: impl IntoIterator<Item = (GridBox, T)>) {
+        let updates: Vec<(GridBox, Arc<T>)> = updates
+            .into_iter()
+            .map(|(b, v)| (b.intersection(&self.extent), Arc::new(v)))
+            .filter(|(b, _)| !b.is_empty())
+            .collect();
+        self.overwrite(updates);
+    }
+
+    /// Core overwrite: one pass over the candidate window, value pointers
+    /// shared into split fragments.
+    fn overwrite(&mut self, updates: Vec<(GridBox, Arc<T>)>) {
+        if updates.is_empty() {
+            return;
+        }
+        let cover = updates
+            .iter()
+            .fold(GridBox::EMPTY, |acc, (b, _)| acc.bounding_union(b));
+        let prior_span = self.max_span;
+        let (lo, hi) = self.window(&cover);
+
+        // Extract the entries hit by any update box (stable compaction of
+        // the untouched remainder).
+        let mut removed: Vec<(GridBox, Arc<T>)> = Vec::new();
+        let mut keep = lo;
+        for r in lo..hi {
+            if updates.iter().any(|(u, _)| u.intersects(&self.entries[r].0)) {
+                removed.push(self.entries[r].clone());
             } else {
-                next.push((eb, ev));
+                self.entries.swap(keep, r);
+                keep += 1;
             }
         }
-        next.push((b, value));
-        self.entries = next;
-        self.coalesce();
+        self.entries.drain(keep..hi);
+
+        // Surviving fragments of the removed entries keep their (shared)
+        // value pointer.
+        let mut frags: Vec<(GridBox, Arc<T>)> = Vec::new();
+        for (eb, ev) in &removed {
+            let mut parts = vec![*eb];
+            for (u, _) in &updates {
+                let mut next = Vec::new();
+                for p in parts {
+                    next.extend(p.difference(u));
+                }
+                parts = next;
+                if parts.is_empty() {
+                    break;
+                }
+            }
+            frags.extend(parts.into_iter().map(|p| (p, ev.clone())));
+        }
+        // The update boxes themselves; later updates win on overlap.
+        for (i, (u, v)) in updates.iter().enumerate() {
+            let mut parts = vec![*u];
+            for (later, _) in &updates[i + 1..] {
+                let mut next = Vec::new();
+                for p in parts {
+                    next.extend(p.difference(later));
+                }
+                parts = next;
+                if parts.is_empty() {
+                    break;
+                }
+            }
+            frags.extend(parts.into_iter().map(|p| (p, v.clone())));
+        }
+
+        let seeds: Vec<GridBox> = frags.iter().map(|(b, _)| *b).collect();
+        self.insert_all(frags);
+        self.refresh_max_span(prior_span, &removed);
+        self.coalesce_around(seeds);
     }
 
     /// Apply `f` to the value over `region ∩ extent`, splitting fragments as
-    /// needed. Used e.g. to add a memory id to coherence sets.
+    /// needed. Used e.g. to add a memory id to coherence sets. Fragments
+    /// fully inside the region are rewritten in place (no splitting, no
+    /// clone of the untouched remainder).
     pub fn apply_to_region(&mut self, region: &Region, f: impl Fn(&T) -> T) {
-        let mut next: Vec<(GridBox, T)> = Vec::with_capacity(self.entries.len());
-        for (eb, ev) in self.entries.drain(..) {
+        if region.is_empty() || self.entries.is_empty() {
+            return;
+        }
+        let bb = region.bounding_box();
+        let prior_span = self.max_span;
+        let (lo, hi) = self.window(&bb);
+        let mut removed: Vec<(GridBox, Arc<T>)> = Vec::new();
+        let mut seeds: Vec<GridBox> = Vec::new();
+        let mut keep = lo;
+        for r in lo..hi {
+            let eb = self.entries[r].0;
             let inside = region.intersection_box(&eb);
             if inside.is_empty() {
-                next.push((eb, ev));
-                continue;
-            }
-            // Fragments inside the region get the new value...
-            for ib in inside.boxes() {
-                next.push((*ib, f(&ev)));
-            }
-            // ...fragments outside keep the old one.
-            let outside = Region::from(eb).difference(&inside);
-            for ob in outside.boxes() {
-                next.push((*ob, ev.clone()));
+                self.entries.swap(keep, r);
+                keep += 1;
+            } else if inside.area() == eb.area() {
+                // Fully covered: rewrite in place.
+                let nv = f(&self.entries[r].1);
+                if nv != *self.entries[r].1 {
+                    self.entries[r].1 = Arc::new(nv);
+                    seeds.push(eb);
+                }
+                self.entries.swap(keep, r);
+                keep += 1;
+            } else {
+                removed.push(self.entries[r].clone());
             }
         }
-        self.entries = next;
-        self.coalesce();
+        self.entries.drain(keep..hi);
+
+        let mut frags: Vec<(GridBox, Arc<T>)> = Vec::new();
+        for (eb, ev) in &removed {
+            let inside = region.intersection_box(eb);
+            let nv = Arc::new(f(ev));
+            for ib in inside.boxes() {
+                frags.push((*ib, nv.clone()));
+            }
+            for ob in Region::from(*eb).difference(&inside).boxes() {
+                frags.push((*ob, ev.clone()));
+            }
+        }
+        seeds.extend(frags.iter().map(|(b, _)| *b));
+        self.insert_all(frags);
+        self.refresh_max_span(prior_span, &removed);
+        self.coalesce_around(seeds);
+    }
+
+    /// Visit the `(fragment ∩ b, value)` pairs covering `b ∩ extent`,
+    /// without cloning values.
+    pub fn for_each_intersecting(&self, b: &GridBox, mut f: impl FnMut(GridBox, &T)) {
+        let (lo, hi) = self.window(b);
+        for (eb, ev) in &self.entries[lo..hi] {
+            let c = eb.intersection(b);
+            if !c.is_empty() {
+                f(c, ev);
+            }
+        }
+    }
+
+    /// Visit the `(box, value)` fragments covering `region ∩ extent`,
+    /// without cloning values.
+    pub fn for_each_in_region(&self, region: &Region, mut f: impl FnMut(GridBox, &T)) {
+        if region.boxes().len() == 1 {
+            self.for_each_intersecting(&region.boxes()[0], f);
+            return;
+        }
+        let bb = region.bounding_box();
+        let (lo, hi) = self.window(&bb);
+        for (eb, ev) in &self.entries[lo..hi] {
+            if !eb.intersects(&bb) {
+                continue;
+            }
+            let inside = region.intersection_box(eb);
+            for ib in inside.boxes() {
+                f(*ib, ev);
+            }
+        }
     }
 
     /// All `(box, value)` fragments covering `region ∩ extent`.
     pub fn query_region(&self, region: &Region) -> Vec<(GridBox, T)> {
         let mut out = Vec::new();
-        for (eb, ev) in &self.entries {
-            let inside = region.intersection_box(eb);
-            for ib in inside.boxes() {
-                out.push((*ib, ev.clone()));
-            }
-        }
+        self.for_each_in_region(region, |b, v| out.push((b, v.clone())));
         out
     }
 
     /// All `(box, value)` fragments covering `b ∩ extent`.
     pub fn query_box(&self, b: &GridBox) -> Vec<(GridBox, T)> {
         let mut out = Vec::new();
-        for (eb, ev) in &self.entries {
-            let c = eb.intersection(b);
-            if !c.is_empty() {
-                out.push((c, ev.clone()));
-            }
-        }
+        self.for_each_intersecting(b, |c, v| out.push((c, v.clone())));
         out
     }
 
     /// The value at a single point, if inside the extent.
-    pub fn at(&self, p: super::Point) -> Option<&T> {
-        self.entries
+    pub fn at(&self, p: Point) -> Option<&T> {
+        let pb = GridBox { min: p, max: Point([p[0] + 1, p[1] + 1, p[2] + 1]) };
+        let (lo, hi) = self.window(&pb);
+        self.entries[lo..hi]
             .iter()
             .find(|(b, _)| b.contains_point(p))
-            .map(|(_, v)| v)
+            .map(|(_, v)| &**v)
     }
 
     /// The region over which `pred` holds.
@@ -134,37 +381,48 @@ impl<T: Clone + PartialEq> RegionMap<T> {
     }
 
     /// Iterate over all fragments.
-    pub fn iter(&self) -> impl Iterator<Item = &(GridBox, T)> {
-        self.entries.iter()
+    pub fn iter(&self) -> impl Iterator<Item = (&GridBox, &T)> {
+        self.entries.iter().map(|(b, v)| (b, &**v))
     }
 
-    /// Fuse mergeable fragments holding equal values.
-    fn coalesce(&mut self) {
-        let mut changed = true;
-        while changed {
-            changed = false;
-            'outer: for i in 0..self.entries.len() {
-                for j in (i + 1)..self.entries.len() {
-                    if self.entries[i].1 == self.entries[j].1
-                        && self.entries[i].0.mergeable(&self.entries[j].0)
-                    {
-                        let m = self.entries[i].0.merged(&self.entries[j].0);
-                        self.entries.swap_remove(j);
-                        self.entries[i].0 = m;
-                        changed = true;
-                        break 'outer;
-                    }
-                }
+    /// Fuse mergeable equal-valued fragments, looking only around the given
+    /// seed boxes (the fragments an update just touched). Partners of a box
+    /// share or touch its dimension-0 interval, so they lie inside the
+    /// windowed neighborhood — no global `O(n²)` fixpoint scan.
+    fn coalesce_around(&mut self, mut work: Vec<GridBox>) {
+        while let Some(b) = work.pop() {
+            let Some(i) = self.find_exact(&b) else { continue };
+            let probe = GridBox {
+                min: Point([b.min[0].saturating_sub(1), b.min[1], b.min[2]]),
+                max: Point([b.max[0].saturating_add(1), b.max[1], b.max[2]]),
+            };
+            let (lo, hi) = self.window(&probe);
+            let (ib, iv) = self.entries[i].clone();
+            let partner = self.entries[lo..hi]
+                .iter()
+                .enumerate()
+                .map(|(off, e)| (lo + off, e))
+                .find(|(j, (jb, jv))| *j != i && ib.mergeable(jb) && val_eq(&iv, jv))
+                .map(|(j, _)| j);
+            if let Some(j) = partner {
+                let jb = self.entries[j].0;
+                let (hi_idx, lo_idx) = if i > j { (i, j) } else { (j, i) };
+                self.entries.remove(hi_idx);
+                self.entries.remove(lo_idx);
+                let m = ib.merged(&jb);
+                self.max_span = self.max_span.max(m.max[0] - m.min[0]);
+                let pos = self.entries.partition_point(|(e, _)| e.min.0 < m.min.0);
+                self.entries.insert(pos, (m, iv));
+                work.push(m);
             }
         }
-        self.entries.sort_by_key(|(b, _)| (b.min.0, b.max.0));
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::grid::Point;
+    use crate::util::XorShift64;
 
     #[test]
     fn fresh_map_is_single_fragment() {
@@ -230,25 +488,209 @@ mod tests {
     }
 
     #[test]
+    fn update_boxes_applies_batch_with_later_wins() {
+        let mut m = RegionMap::new(Range::d1(100), 0u32);
+        m.update_boxes([
+            (GridBox::d1(0, 50), 1),
+            (GridBox::d1(60, 80), 2),
+            (GridBox::d1(40, 70), 3), // overlaps both earlier boxes; wins
+        ]);
+        assert_eq!(m.at(Point::d1(10)), Some(&1));
+        assert_eq!(m.at(Point::d1(45)), Some(&3));
+        assert_eq!(m.at(Point::d1(65)), Some(&3));
+        assert_eq!(m.at(Point::d1(75)), Some(&2));
+        assert_eq!(m.at(Point::d1(90)), Some(&0));
+        let covered: u64 = m.iter().map(|(b, _)| b.area()).sum();
+        assert_eq!(covered, 100);
+    }
+
+    #[test]
+    fn visitors_match_owned_queries() {
+        let mut m = RegionMap::new(Range::d2(16, 16), 0u32);
+        m.update_box(&GridBox::d2((2, 2), (10, 10)), 1);
+        m.update_box(&GridBox::d2((5, 5), (8, 14)), 2);
+        let probe = GridBox::d2((0, 0), (12, 12));
+        let mut visited: Vec<(GridBox, u32)> = Vec::new();
+        m.for_each_intersecting(&probe, |b, v| visited.push((b, *v)));
+        let owned = m.query_box(&probe);
+        assert_eq!(visited, owned);
+
+        let region =
+            Region::from_boxes([GridBox::d2((0, 0), (6, 6)), GridBox::d2((9, 9), (16, 16))]);
+        let mut visited: Vec<(GridBox, u32)> = Vec::new();
+        m.for_each_in_region(&region, |b, v| visited.push((b, *v)));
+        let owned = m.query_region(&region);
+        assert_eq!(visited, owned);
+        let total: u64 = visited.iter().map(|(b, _)| b.area()).sum();
+        assert_eq!(total, region.area());
+    }
+
+    fn check_invariants<T: Clone + PartialEq + std::fmt::Debug>(m: &RegionMap<T>) {
+        // Total area invariant.
+        let covered: u64 = m.iter().map(|(b, _)| b.area()).sum();
+        assert_eq!(covered, m.extent().area());
+        // Disjointness invariant.
+        let frags: Vec<_> = m.iter().map(|(b, _)| *b).collect();
+        for (i, a) in frags.iter().enumerate() {
+            for b in &frags[i + 1..] {
+                assert!(!a.intersects(b), "{a} intersects {b}");
+            }
+        }
+        // Sort-order invariant of the interval index.
+        for w in frags.windows(2) {
+            assert!(w[0].min.0 < w[1].min.0, "entries out of order");
+        }
+    }
+
+    #[test]
     fn map_remains_total_partition_under_random_updates() {
-        use crate::util::XorShift64;
         let mut rng = XorShift64::new(77);
         let mut m = RegionMap::new(Range::d2(32, 32), 0u64);
-        for step in 0..200 {
+        let rand_box = |rng: &mut XorShift64| {
             let x0 = rng.next_below(32);
             let y0 = rng.next_below(32);
             let x1 = x0 + rng.next_range(1, 16);
             let y1 = y0 + rng.next_range(1, 16);
-            m.update_box(&GridBox::d2((x0, y0), (x1, y1)), step);
-            // Total area invariant.
-            let covered: u64 = m.iter().map(|(b, _)| b.area()).sum();
-            assert_eq!(covered, 32 * 32);
-            // Disjointness invariant.
-            let frags: Vec<_> = m.iter().map(|(b, _)| *b).collect();
-            for (i, a) in frags.iter().enumerate() {
-                for b in &frags[i + 1..] {
-                    assert!(!a.intersects(b));
+            GridBox::d2((x0, y0), (x1, y1))
+        };
+        for step in 0..300 {
+            match step % 3 {
+                0 => m.update_box(&rand_box(&mut rng), step),
+                1 => m.update_boxes([
+                    (rand_box(&mut rng), step),
+                    (rand_box(&mut rng), step + 1_000_000),
+                ]),
+                _ => m.apply_to_region(&Region::from(rand_box(&mut rng)), |v| {
+                    v.wrapping_mul(31).wrapping_add(7)
+                }),
+            }
+            check_invariants(&m);
+        }
+    }
+
+    /// The pre-indexing seed implementation: flat vector, full rebuild and
+    /// deep value clone on every update. Kept as the executable
+    /// specification the indexed map is checked against.
+    struct NaiveMap<T> {
+        extent: GridBox,
+        entries: Vec<(GridBox, T)>,
+    }
+
+    impl<T: Clone + PartialEq> NaiveMap<T> {
+        fn new(extent: Range, default: T) -> Self {
+            let full = GridBox::full(extent);
+            NaiveMap { extent: full, entries: vec![(full, default)] }
+        }
+
+        fn update_box(&mut self, b: &GridBox, value: T) {
+            let b = b.intersection(&self.extent);
+            if b.is_empty() {
+                return;
+            }
+            let mut next = Vec::new();
+            for (eb, ev) in self.entries.drain(..) {
+                if eb.intersects(&b) {
+                    for rest in eb.difference(&b) {
+                        next.push((rest, ev.clone()));
+                    }
+                } else {
+                    next.push((eb, ev));
                 }
+            }
+            next.push((b, value));
+            self.entries = next;
+        }
+
+        fn apply_to_region(&mut self, region: &Region, f: impl Fn(&T) -> T) {
+            let mut next = Vec::new();
+            for (eb, ev) in self.entries.drain(..) {
+                let inside = region.intersection_box(&eb);
+                if inside.is_empty() {
+                    next.push((eb, ev));
+                    continue;
+                }
+                for ib in inside.boxes() {
+                    next.push((*ib, f(&ev)));
+                }
+                for ob in Region::from(eb).difference(&inside).boxes() {
+                    next.push((*ob, ev.clone()));
+                }
+            }
+            self.entries = next;
+        }
+
+        fn at(&self, p: Point) -> Option<&T> {
+            self.entries
+                .iter()
+                .find(|(b, _)| b.contains_point(p))
+                .map(|(_, v)| v)
+        }
+    }
+
+    /// Satellite property test: the indexed map stays value-equal to the
+    /// naive reference (and a total partition of the extent) under ~10k
+    /// random update / batched-update / apply / query operations.
+    #[test]
+    fn indexed_map_matches_naive_reference_under_random_ops() {
+        const W: u64 = 24;
+        let mut rng = XorShift64::new(0xDECAF);
+        let mut idx = RegionMap::new(Range::d2(W, W), 0u64);
+        let mut naive = NaiveMap::new(Range::d2(W, W), 0u64);
+        let rand_box = |rng: &mut XorShift64| {
+            let x0 = rng.next_below(W);
+            let y0 = rng.next_below(W);
+            let x1 = x0 + rng.next_range(1, 12);
+            let y1 = y0 + rng.next_range(1, 12);
+            GridBox::d2((x0, y0), (x1, y1))
+        };
+        for step in 0..10_000u64 {
+            match rng.next_below(10) {
+                0..=3 => {
+                    let b = rand_box(&mut rng);
+                    idx.update_box(&b, step);
+                    naive.update_box(&b, step);
+                }
+                4..=6 => {
+                    // Batched overwrite == sequential overwrites, in order.
+                    let boxes = [rand_box(&mut rng), rand_box(&mut rng), rand_box(&mut rng)];
+                    idx.update_boxes(boxes.iter().enumerate().map(|(i, b)| (*b, step + i as u64)));
+                    for (i, b) in boxes.iter().enumerate() {
+                        naive.update_box(b, step + i as u64);
+                    }
+                }
+                7..=8 => {
+                    let r = Region::from_boxes([rand_box(&mut rng), rand_box(&mut rng)]);
+                    let f = |v: &u64| v.wrapping_mul(6364136223846793005).wrapping_add(step);
+                    idx.apply_to_region(&r, f);
+                    naive.apply_to_region(&r, f);
+                }
+                _ => {
+                    // Query op: covering fragments of a random box agree in
+                    // area and point values.
+                    let b = rand_box(&mut rng).intersection(&idx.extent());
+                    let q = idx.query_box(&b);
+                    let covered: u64 = q.iter().map(|(qb, _)| qb.area()).sum();
+                    assert_eq!(covered, b.area());
+                    for (qb, qv) in &q {
+                        assert_eq!(naive.at(qb.min), Some(qv), "at {}", qb.min);
+                    }
+                }
+            }
+            if step % 128 == 0 {
+                check_invariants(&idx);
+                for x in 0..W {
+                    for y in 0..W {
+                        let p = Point::d2(x, y);
+                        assert_eq!(idx.at(p), naive.at(p), "mismatch at {p} after step {step}");
+                    }
+                }
+            }
+        }
+        check_invariants(&idx);
+        for x in 0..W {
+            for y in 0..W {
+                let p = Point::d2(x, y);
+                assert_eq!(idx.at(p), naive.at(p), "final mismatch at {p}");
             }
         }
     }

@@ -226,12 +226,24 @@ impl IdagGenerator {
     /// Whether compiling `cmd` right now would emit any `alloc` instruction
     /// (the *allocating command* predicate driving lookahead, §4.3).
     pub fn would_allocate(&self, cmd: &Command) -> bool {
-        self.requirements(cmd).into_iter().any(|(buffer, mem, bbox)| {
-            match self.states.get(&buffer) {
-                Some(st) => st.per_mem[mem.0 as usize].backings.needs_alloc(&bbox),
-                None => true,
-            }
+        self.would_allocate_reqs(&self.requirements(cmd))
+    }
+
+    /// [`Self::would_allocate`] over precomputed requirements, so the
+    /// scheduler's lookahead window computes each command's requirement set
+    /// once instead of re-walking the task split per predicate (§4.3).
+    pub fn would_allocate_reqs(&self, reqs: &[(BufferId, MemoryId, GridBox)]) -> bool {
+        reqs.iter().any(|(buffer, mem, bbox)| match self.states.get(buffer) {
+            Some(st) => st.per_mem[mem.0 as usize].backings.needs_alloc(bbox),
+            None => true,
         })
+    }
+
+    /// Total `(allocation, user instruction)` tracking entries currently
+    /// held for eventual `free` dependencies. Horizon application must keep
+    /// this bounded (§3.5) — diagnostics for the regression test.
+    pub fn alloc_user_entries(&self) -> usize {
+        self.alloc_users.values().map(|v| v.len()).sum()
     }
 
     /// Merge future requirements observed in the scheduler queue; the next
@@ -333,29 +345,29 @@ impl IdagGenerator {
                 });
             }
 
-            // 2. Dependencies.
+            // 2. Dependencies (borrowing visitors: no fragment clones).
             let mut deps: Vec<(InstructionId, DepKind)> = Vec::new();
             for b in &bindings {
                 let st = &self.states[&b.buffer];
                 let ms = &st.per_mem[mem.0 as usize];
                 if b.mode.is_consumer() {
-                    for (_, w) in ms.last_writer.query_region(&b.region) {
+                    ms.last_writer.for_each_in_region(&b.region, |_, w| {
                         if let Some(w) = w {
-                            push_dep(&mut deps, w, DepKind::Dataflow);
+                            push_dep(&mut deps, *w, DepKind::Dataflow);
                         }
-                    }
+                    });
                 }
                 if b.mode.is_producer() {
-                    for (_, readers) in ms.readers_since.query_region(&b.region) {
+                    ms.readers_since.for_each_in_region(&b.region, |_, readers| {
                         for r in readers {
-                            push_dep(&mut deps, r, DepKind::Anti);
+                            push_dep(&mut deps, *r, DepKind::Anti);
                         }
-                    }
-                    for (_, w) in ms.last_writer.query_region(&b.region) {
+                    });
+                    ms.last_writer.for_each_in_region(&b.region, |_, w| {
                         if let Some(w) = w {
-                            push_dep(&mut deps, w, DepKind::Output);
+                            push_dep(&mut deps, *w, DepKind::Output);
                         }
-                    }
+                    });
                 }
                 // First use of a fresh allocation must wait for the alloc.
                 if let Some(bk) = st.per_mem[mem.0 as usize].backings.containing(&b.region.bounding_box()) {
@@ -419,14 +431,14 @@ impl IdagGenerator {
         let st = &self.states[&buffer];
         let hs = &st.per_mem[MemoryId::HOST.0 as usize];
         let mut sends: Vec<(GridBox, Option<InstructionId>, Backing)> = Vec::new();
-        for (pbox, producer) in hs.last_writer.query_region(&region) {
+        hs.last_writer.for_each_in_region(&region, |pbox, producer| {
             for bk in hs.backings.intersecting(&pbox) {
                 let frag = pbox.intersection(&bk.covers);
                 if !frag.is_empty() {
-                    sends.push((frag, producer, bk.clone()));
+                    sends.push((frag, *producer, bk.clone()));
                 }
             }
-        }
+        });
         for (send_box, producer, backing) in sends {
             let msg = MessageId(self.next_msg);
             self.next_msg += 1;
@@ -485,16 +497,16 @@ impl IdagGenerator {
         {
             let st = &self.states[&buffer];
             let hs = &st.per_mem[MemoryId::HOST.0 as usize];
-            for (_, readers) in hs.readers_since.query_region(&region) {
+            hs.readers_since.for_each_in_region(&region, |_, readers| {
                 for r in readers {
-                    push_dep(&mut deps, r, DepKind::Anti);
+                    push_dep(&mut deps, *r, DepKind::Anti);
                 }
-            }
-            for (_, w) in hs.last_writer.query_region(&region) {
+            });
+            hs.last_writer.for_each_in_region(&region, |_, w| {
                 if let Some(w) = w {
-                    push_dep(&mut deps, w, DepKind::Anti);
+                    push_dep(&mut deps, *w, DepKind::Anti);
                 }
-            }
+            });
         }
         push_dep(&mut deps, backing.alloc_instr, DepKind::Dataflow);
 
@@ -711,16 +723,16 @@ impl IdagGenerator {
             let mut deps: Vec<(InstructionId, DepKind)> = vec![(alloc_instr, DepKind::Dataflow)];
             {
                 let ms = &self.states[&buffer].per_mem[mem.0 as usize];
-                for (_, w) in ms.last_writer.query_box(&copy_box) {
+                ms.last_writer.for_each_intersecting(&copy_box, |_, w| {
                     if let Some(w) = w {
-                        push_dep(&mut deps, w, DepKind::Dataflow);
+                        push_dep(&mut deps, *w, DepKind::Dataflow);
                     }
-                }
-                for (_, readers) in ms.readers_since.query_box(&copy_box) {
+                });
+                ms.readers_since.for_each_intersecting(&copy_box, |_, readers| {
                     for r in readers {
-                        push_dep(&mut deps, r, DepKind::Dataflow);
+                        push_dep(&mut deps, *r, DepKind::Dataflow);
                     }
-                }
+                });
             }
             push_dep(&mut deps, bk.alloc_instr, DepKind::Dataflow);
             let copy_id = self.push_instruction(
@@ -792,12 +804,12 @@ impl IdagGenerator {
         task: Option<&TaskRef>,
     ) {
         // Fragments not yet coherent in dst, keyed by source-memory set.
-        let missing: Vec<(GridBox, MemMask)> = self.states[&buffer]
-            .coherent
-            .query_region(region)
-            .into_iter()
-            .filter(|(_, mask)| !mask.contains(dst) && !mask.is_empty())
-            .collect();
+        let mut missing: Vec<(GridBox, MemMask)> = Vec::new();
+        self.states[&buffer].coherent.for_each_in_region(region, |b, mask| {
+            if !mask.contains(dst) && !mask.is_empty() {
+                missing.push((b, *mask));
+            }
+        });
         for (mbox, mask) in missing {
             let src = self.pick_source(dst, mask);
             match src {
@@ -831,7 +843,7 @@ impl IdagGenerator {
             let sm = &st.per_mem[src.0 as usize];
             let dm = &st.per_mem[dst.0 as usize];
             let mut v = Vec::new();
-            for (pbox, producer) in sm.last_writer.query_box(mbox) {
+            sm.last_writer.for_each_intersecting(mbox, |pbox, producer| {
                 for sbk in sm.backings.intersecting(&pbox) {
                     let frag = pbox.intersection(&sbk.covers);
                     if frag.is_empty() {
@@ -845,11 +857,19 @@ impl IdagGenerator {
                             "no dst backing for {} of buffer {} on {dst}",
                             frag, st.name
                         ));
-                    v.push((frag, producer, sbk.clone(), dbk));
+                    v.push((frag, *producer, sbk.clone(), dbk));
                 }
-            }
+            });
             v
         };
+        // One copy per fragment; the fragments partition `mbox ∩ producers`,
+        // so their tracking updates are independent and can be applied as
+        // one batch after the loop (a single partition pass per map instead
+        // of one rebuild per copy).
+        let mut copied_boxes: Vec<GridBox> = Vec::new();
+        let mut writer_updates: Vec<(GridBox, Option<InstructionId>)> = Vec::new();
+        let mut reader_resets: Vec<(GridBox, Vec<InstructionId>)> = Vec::new();
+        let mut src_reader_adds: Vec<(GridBox, InstructionId)> = Vec::new();
         for (frag, producer, sbk, dbk) in frags {
             let mut deps: Vec<(InstructionId, DepKind)> = Vec::new();
             if let Some(p) = producer {
@@ -860,16 +880,16 @@ impl IdagGenerator {
             {
                 let st = &self.states[&buffer];
                 let dm = &st.per_mem[dst.0 as usize];
-                for (_, readers) in dm.readers_since.query_box(&frag) {
+                dm.readers_since.for_each_intersecting(&frag, |_, readers| {
                     for r in readers {
-                        push_dep(&mut deps, r, DepKind::Anti);
+                        push_dep(&mut deps, *r, DepKind::Anti);
                     }
-                }
-                for (_, w) in dm.last_writer.query_box(&frag) {
+                });
+                dm.last_writer.for_each_intersecting(&frag, |_, w| {
                     if let Some(w) = w {
-                        push_dep(&mut deps, w, DepKind::Output);
+                        push_dep(&mut deps, *w, DepKind::Output);
                     }
-                }
+                });
             }
             let id = self.push_instruction(
                 InstructionKind::Copy {
@@ -887,17 +907,28 @@ impl IdagGenerator {
             );
             self.alloc_users.entry(sbk.alloc).or_default().push(id);
             self.alloc_users.entry(dbk.alloc).or_default().push(id);
+            copied_boxes.push(frag);
+            writer_updates.push((frag, Some(id)));
+            reader_resets.push((frag, Vec::new()));
+            src_reader_adds.push((frag, id));
+        }
+        if !copied_boxes.is_empty() {
             let st = self.states.get_mut(&buffer).unwrap();
-            st.coherent.apply_to_region(&Region::from(frag), |m| m.insert(dst));
+            st.coherent.apply_to_region(
+                &Region::from_boxes(copied_boxes.iter().copied()),
+                |m| m.insert(dst),
+            );
             let dm = &mut st.per_mem[dst.0 as usize];
-            dm.last_writer.update_region(&Region::from(frag), Some(id));
-            dm.readers_since.update_region(&Region::from(frag), Vec::new());
+            dm.last_writer.update_boxes(writer_updates);
+            dm.readers_since.update_boxes(reader_resets);
             let sm = &mut st.per_mem[src.0 as usize];
-            sm.readers_since.apply_to_region(&Region::from(frag), |rs| {
-                let mut rs = rs.clone();
-                rs.push(id);
-                rs
-            });
+            for (frag, id) in src_reader_adds {
+                sm.readers_since.apply_to_region(&Region::from(frag), |rs| {
+                    let mut rs = rs.clone();
+                    rs.push(id);
+                    rs
+                });
+            }
         }
     }
 
@@ -1415,6 +1446,47 @@ mod tests {
             "pruning must keep the live IDAG small: live={} total={}",
             ig.dag().len(),
             ig.dag().total_created()
+        );
+    }
+
+    #[test]
+    fn horizon_application_bounds_alloc_user_tracking() {
+        // Satellite regression: applying horizons must substitute the
+        // boundary for old alloc users, keeping `alloc_users` bounded
+        // instead of growing with every kernel ever emitted.
+        let run = |horizon_step: u64| {
+            let mut tm = TaskManager::with_horizon_step(horizon_step);
+            let r = Range::d1(512);
+            let a = tm.create_buffer::<f64>("A", r, true).id();
+            let b = tm.create_buffer::<f64>("B", r, true).id();
+            for _ in 0..60 {
+                tm.submit(
+                    TaskDecl::device("w", r)
+                        .read(a, RangeMapper::All)
+                        .read_write(b, RangeMapper::OneToOne),
+                );
+            }
+            let tasks = tm.take_new_tasks();
+            let mut cg = CdagGenerator::new(NodeId(0), 1, SplitHint::D1, tm.buffers().clone());
+            for t in &tasks {
+                cg.compile(t);
+            }
+            let cmds = cg.take_new_commands();
+            let mut ig = IdagGenerator::new(
+                IdagConfig { num_devices: 2, ..Default::default() },
+                tm.buffers().clone(),
+            );
+            for c in &cmds {
+                ig.compile(c);
+            }
+            assert!(ig.dag().check_acyclic());
+            ig.alloc_user_entries()
+        };
+        let bounded = run(2);
+        let unbounded = run(u64::MAX);
+        assert!(
+            bounded * 3 < unbounded,
+            "horizons must prune alloc-user tracking: bounded={bounded} unbounded={unbounded}"
         );
     }
 

@@ -52,6 +52,26 @@
 //!   (requires the `pjrt` feature and an XLA toolchain)
 //! - [`sim`] — discrete-event cluster simulator for the Fig 6 scaling study
 //! - [`apps`] — the three benchmark applications (N-body, RSim, WaveSim)
+//!
+//! ## Scheduler hot path
+//!
+//! Scheduling runs concurrently with execution (Fig 5), so the per-command
+//! cost of the scheduler's inner loop bounds the whole system (§4.1). The
+//! latency-critical pieces and their design:
+//!
+//! - [`grid::RegionMap`] — sorted major-dimension interval index with
+//!   bounding-box early exit, `Arc`-shared values (splits copy pointers,
+//!   not payloads), batched `update_boxes` and borrowing
+//!   `for_each_intersecting`/`for_each_in_region` visitors;
+//! - [`dag::Dag`] — incrementally maintained execution front (`front()` is
+//!   `O(front)`, not `O(live)`) and interned dependency sets;
+//! - [`scheduler::Scheduler::process_batch`] — the scheduler thread drains
+//!   a run of tasks per wakeup, computes each command's requirement set
+//!   once for the §4.3 lookahead, and emits one batched `SchedulerOut`.
+//!
+//! `cargo bench --bench micro_scheduler` measures each component and
+//! writes `BENCH_scheduler.json` (see the "Scheduler performance" section
+//! of the README).
 
 pub mod apps;
 pub mod buffer;

@@ -77,6 +77,10 @@ pub struct Scheduler {
     pub instructions_generated: u64,
     pub max_queue_len: usize,
     pub flushes: u64,
+    /// Wakeup batches processed (a batch = one [`Scheduler::process_batch`]
+    /// call; the scheduler thread drains its task queue per wakeup).
+    pub batches: u64,
+    pub max_batch_tasks: usize,
 }
 
 impl Scheduler {
@@ -105,6 +109,8 @@ impl Scheduler {
             instructions_generated: 0,
             max_queue_len: 0,
             flushes: 0,
+            batches: 0,
+            max_batch_tasks: 0,
         }
     }
 
@@ -117,7 +123,21 @@ impl Scheduler {
     /// Process one task: returns the instructions (possibly none, while the
     /// lookahead holds) and pilot messages that became ready.
     pub fn process(&mut self, task: &TaskRef) -> (Vec<InstructionRef>, Vec<Pilot>) {
-        self.cdag.compile(task);
+        self.process_batch(std::slice::from_ref(task))
+    }
+
+    /// Process a run of queued tasks in one wakeup (the batched pipeline):
+    /// all commands are generated and fed through the lookahead window
+    /// first, then the resulting instructions and pilots are drained as a
+    /// single batch — amortizing outbox/channel traffic across the run.
+    /// Equivalent to processing the tasks one by one and concatenating the
+    /// results.
+    pub fn process_batch(&mut self, tasks: &[TaskRef]) -> (Vec<InstructionRef>, Vec<Pilot>) {
+        self.batches += 1;
+        self.max_batch_tasks = self.max_batch_tasks.max(tasks.len());
+        for task in tasks {
+            self.cdag.compile(task);
+        }
         let cmds = self.cdag.take_new_commands();
         self.commands_generated += cmds.len() as u64;
         for cmd in cmds {
@@ -164,9 +184,11 @@ impl Scheduler {
         // Is this command allocating, accounting for requirements already
         // queued ahead of it? ("Whenever a new command has been generated,
         // the scheduler will inquire whether compiling it right away would
-        // emit any alloc instructions" — §4.3.)
+        // emit any alloc instructions" — §4.3.) The requirement set is
+        // computed once and reused for the predicate, the queued-cover check
+        // and the cover extension below.
         let reqs = self.idag.requirements(&cmd);
-        let allocating = self.idag.would_allocate(&cmd)
+        let allocating = self.idag.would_allocate_reqs(&reqs)
             && reqs.iter().any(|(buf, mem, bbox)| {
                 !self
                     .queued_cover
@@ -384,6 +406,43 @@ mod tests {
         }
         assert_eq!(sched.queue_len(), 0, "barrier epoch must flush the queue");
         assert!(total > 8);
+    }
+
+    #[test]
+    fn process_batch_matches_sequential_processing() {
+        // The batched pipeline must be observationally identical to
+        // one-task-at-a-time processing: same instructions, same resize
+        // behavior — only the wakeup granularity differs.
+        let build = |tm: &mut TaskManager| {
+            rsim_tasks(tm, 24, 48);
+            tm.shutdown();
+        };
+        let mut tm = TaskManager::new();
+        build(&mut tm);
+        let tasks = tm.take_new_tasks();
+
+        let mut seq = Scheduler::new(SchedulerConfig::default(), tm.buffers().clone());
+        let mut seq_instrs = Vec::new();
+        for t in &tasks {
+            let (i, _) = seq.process(t);
+            seq_instrs.extend(i);
+        }
+        let (i, _) = seq.flush_now();
+        seq_instrs.extend(i);
+
+        let mut bat = Scheduler::new(SchedulerConfig::default(), tm.buffers().clone());
+        let (mut bat_instrs, _) = bat.process_batch(&tasks);
+        let (i, _) = bat.flush_now();
+        bat_instrs.extend(i);
+
+        assert_eq!(seq_instrs.len(), bat_instrs.len());
+        assert!(seq_instrs
+            .iter()
+            .zip(&bat_instrs)
+            .all(|(a, b)| a.id == b.id && a.kind.mnemonic() == b.kind.mnemonic()));
+        assert_eq!(seq.idag().resizes_emitted, bat.idag().resizes_emitted);
+        assert_eq!(bat.batches, 1);
+        assert_eq!(bat.max_batch_tasks, tasks.len());
     }
 
     #[test]

@@ -53,6 +53,12 @@ impl SchedulerOut {
     }
 }
 
+/// Upper bound on tasks compiled per wakeup. Draining amortizes channel
+/// traffic, but an unbounded batch would delay the first instruction of a
+/// large backlog behind the whole compile; the cap keeps time-to-first-
+/// instruction bounded while still coalescing bursts.
+const MAX_WAKEUP_BATCH: usize = 64;
+
 /// Handle to a running scheduler thread.
 pub struct SchedulerHandle {
     pub tx: spsc::Sender<SchedulerMsg>,
@@ -73,8 +79,15 @@ impl SchedulerHandle {
             .spawn(move || {
                 let cfg_node = cfg.node;
                 let mut sched = Scheduler::new(cfg, buffers);
+                // Non-task message popped while draining a task run; handled
+                // on the next loop iteration to preserve message order.
+                let mut carry: Option<SchedulerMsg> = None;
                 loop {
-                    match rx.recv() {
+                    let msg = match carry.take() {
+                        Some(m) => Ok(m),
+                        None => rx.recv().map_err(|_| ()),
+                    };
+                    match msg {
                         Ok(SchedulerMsg::Buffers(pool)) => sched.notify_buffers(pool),
                         Ok(SchedulerMsg::UserData(init)) => {
                             let _ = out.send(SchedulerOut {
@@ -85,13 +98,35 @@ impl SchedulerHandle {
                             });
                         }
                         Ok(SchedulerMsg::Task(task)) => {
+                            // Batched wakeup: drain the run of tasks already
+                            // queued behind this one and compile them in a
+                            // single pipeline pass; one SchedulerOut per
+                            // wakeup amortizes channel traffic and lets the
+                            // lookahead see the whole window at once (§4.3).
+                            let mut tasks = vec![task];
+                            while tasks.len() < MAX_WAKEUP_BATCH {
+                                match rx.try_recv() {
+                                    Ok(SchedulerMsg::Task(t)) => tasks.push(t),
+                                    Ok(other) => {
+                                        carry = Some(other);
+                                        break;
+                                    }
+                                    Err(_) => break,
+                                }
+                            }
                             let trace = std::env::var_os("CELERITY_COMM_TRACE").is_some();
                             if trace {
-                                eprintln!("[sched {}] processing {} '{}'", cfg_node, task.id, task.name);
+                                eprintln!(
+                                    "[sched {}] processing batch of {} (first: {} '{}')",
+                                    cfg_node, tasks.len(), tasks[0].id, tasks[0].name
+                                );
                             }
-                            let (instructions, pilots) = sched.process(&task);
+                            let (instructions, pilots) = sched.process_batch(&tasks);
                             if trace {
-                                eprintln!("[sched {}] emitted {} instrs {} pilots (queue={})", cfg_node, instructions.len(), pilots.len(), sched.queue_len());
+                                eprintln!(
+                                    "[sched {}] emitted {} instrs {} pilots (queue={})",
+                                    cfg_node, instructions.len(), pilots.len(), sched.queue_len()
+                                );
                             }
                             let errors: Vec<String> =
                                 sched.take_errors().iter().map(|e| e.to_string()).collect();
@@ -102,7 +137,7 @@ impl SchedulerHandle {
                                 let _ = out.send(batch);
                             }
                         }
-                        Ok(SchedulerMsg::Shutdown) | Err(_) => {
+                        Ok(SchedulerMsg::Shutdown) | Err(()) => {
                             let (instructions, pilots) = sched.flush_now();
                             let errors: Vec<String> =
                                 sched.take_errors().iter().map(|e| e.to_string()).collect();
@@ -158,15 +193,23 @@ mod tests {
             tm.buffers().clone(),
             out_tx,
         );
+        let n_tasks = tasks.len() as u64;
         for t in tasks {
             h.send(SchedulerMsg::Task(t));
         }
         let sched = h.join();
         let mut total = 0;
+        let mut outs = 0u64;
         while let Ok(batch) = out_rx.recv() {
             total += batch.instructions.len();
+            outs += 1;
         }
         assert_eq!(total as u64, sched.instructions_generated);
         assert!(total > 4);
+        // Wakeup batching: every task was processed, in at most one batch
+        // per task message (how runs coalesce depends on thread timing),
+        // and output batches never exceed wakeups + the shutdown flush.
+        assert!(sched.batches >= 1 && sched.batches <= n_tasks, "batches={}", sched.batches);
+        assert!(outs <= sched.batches + 1, "outs={outs} batches={}", sched.batches);
     }
 }

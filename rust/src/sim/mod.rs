@@ -208,8 +208,13 @@ where
                 let mut avail = HashMap::new();
                 let mut clock = 0.0;
                 for t in &tasks {
+                    // One task per wakeup: the simulated main thread submits
+                    // concurrently with execution, so the scheduler never
+                    // sees a queued run to batch — the worst case for
+                    // per-wakeup overhead (the live thread drains runs via
+                    // the same process_batch entry point).
                     clock += cfg.cost.sched_task_cost;
-                    let (batch, _) = sched.process(t);
+                    let (batch, _) = sched.process_batch(std::slice::from_ref(t));
                     clock += cfg.cost.sched_instr_cost * batch.len() as f64;
                     for i in batch {
                         avail.insert(i.id.0, clock);

@@ -240,9 +240,9 @@ impl TaskManager {
             let st = &self.states[&access.buffer];
             if access.mode.is_consumer() {
                 // Dataflow on the last writer of each fragment.
-                for (_, writer) in st.last_writers.query_region(&region) {
-                    add(writer, DepKind::Dataflow, &mut deps);
-                }
+                st.last_writers.for_each_in_region(&region, |_, writer| {
+                    add(*writer, DepKind::Dataflow, &mut deps);
+                });
                 // Uninitialized-read detection (§4.4).
                 let uninit = st
                     .initialized
@@ -262,17 +262,17 @@ impl TaskManager {
             }
             if access.mode.is_producer() {
                 // Anti-dependencies on readers since the last write.
-                for (_, readers) in st.readers_since.query_region(&region) {
+                st.readers_since.for_each_in_region(&region, |_, readers| {
                     for r in readers {
-                        add(r, DepKind::Anti, &mut deps);
+                        add(*r, DepKind::Anti, &mut deps);
                     }
-                }
+                });
                 // Output dependency on the previous writer (ordering only;
                 // for DiscardWrite this is still required for the IDAG's
                 // allocation lifetime reasoning).
-                for (_, writer) in st.last_writers.query_region(&region) {
-                    add(writer, DepKind::Output, &mut deps);
-                }
+                st.last_writers.for_each_in_region(&region, |_, writer| {
+                    add(*writer, DepKind::Output, &mut deps);
+                });
             }
         }
         // Everything depends at least on the last epoch.
