@@ -10,10 +10,16 @@
 //!     cargo bench --bench micro_scheduler
 //!
 //! Besides the stdout table, results are written as machine-readable JSON
-//! to `BENCH_scheduler.json` at the repository root (override the path with
-//! `BENCH_SCHEDULER_JSON`), tagged with git revision and date — the
-//! perf-trajectory baseline future PRs compare against. Set `BENCH_QUICK=1`
-//! for a fast smoke run (CI): same components, reduced op counts.
+//! to `BENCH_scheduler.local.json` at the repository root — gitignored, so
+//! local runs never dirty the committed baseline. CI (and deliberate
+//! baseline refreshes) opt into the canonical `BENCH_scheduler.json` path
+//! via `BENCH_SCHEDULER_JSON`; `scripts/bench_gate.py` compares the fresh
+//! run against the committed baseline and fails on a >25% throughput drop.
+//! Set `BENCH_QUICK=1` for a fast smoke run (CI): same components, reduced
+//! op counts.
+
+#[path = "support/mod.rs"]
+mod support;
 
 use celerity::command::{CdagGenerator, SplitHint};
 use celerity::executor::ooo::OooEngine;
@@ -54,59 +60,14 @@ fn bench(
     results.push(BenchResult { name, ops_per_s, ns_per_op, ops });
 }
 
-fn git_rev() -> String {
-    std::process::Command::new("git")
-        .args(["rev-parse", "--short", "HEAD"])
-        .current_dir(env!("CARGO_MANIFEST_DIR"))
-        .output()
-        .ok()
-        .filter(|o| o.status.success())
-        .and_then(|o| String::from_utf8(o.stdout).ok())
-        .map(|s| s.trim().to_string())
-        .unwrap_or_else(|| "unknown".to_string())
-}
-
-/// Days-since-epoch → (year, month, day), proleptic Gregorian
-/// (Howard Hinnant's civil_from_days), to avoid a date-crate dependency.
-fn civil_from_unix(secs: u64) -> (i64, u64, u64) {
-    let z = (secs / 86_400) as i64 + 719_468;
-    let era = z.div_euclid(146_097);
-    let doe = z.rem_euclid(146_097) as u64;
-    let yoe = (doe - doe / 1460 + doe / 36_524 - doe / 146_096) / 365;
-    let doy = doe - (365 * yoe + yoe / 4 - yoe / 100);
-    let mp = (5 * doy + 2) / 153;
-    let d = doy - (153 * mp + 2) / 5 + 1;
-    let m = if mp < 10 { mp + 3 } else { mp - 9 };
-    let y = yoe as i64 + era * 400 + i64::from(m <= 2);
-    (y, m, d)
-}
-
-fn json_escape(s: &str) -> String {
-    s.replace('\\', "\\\\").replace('"', "\\\"")
-}
-
 fn write_json(results: &[BenchResult], quick: bool) {
-    let path = std::env::var("BENCH_SCHEDULER_JSON").unwrap_or_else(|_| {
-        format!("{}/../BENCH_scheduler.json", env!("CARGO_MANIFEST_DIR"))
-    });
-    let unix_time = std::time::SystemTime::now()
-        .duration_since(std::time::UNIX_EPOCH)
-        .map(|d| d.as_secs())
-        .unwrap_or(0);
-    let (y, m, d) = civil_from_unix(unix_time);
-    let mut s = String::new();
-    s.push_str("{\n");
-    s.push_str("  \"bench\": \"micro_scheduler\",\n");
-    s.push_str("  \"schema\": 1,\n");
-    s.push_str(&format!("  \"git_rev\": \"{}\",\n", json_escape(&git_rev())));
-    s.push_str(&format!("  \"date\": \"{y:04}-{m:02}-{d:02}\",\n"));
-    s.push_str(&format!("  \"unix_time\": {unix_time},\n"));
-    s.push_str(&format!("  \"quick\": {quick},\n"));
+    let path = support::out_path("BENCH_SCHEDULER_JSON", "scheduler");
+    let mut s = support::json_header("micro_scheduler", quick);
     s.push_str("  \"components\": [\n");
     for (i, r) in results.iter().enumerate() {
         s.push_str(&format!(
             "    {{\"name\": \"{}\", \"ops_per_s\": {:.1}, \"ns_per_op\": {:.2}, \"ops\": {}}}{}\n",
-            json_escape(r.name),
+            support::json_escape(r.name),
             r.ops_per_s,
             r.ns_per_op,
             r.ops,

@@ -1,0 +1,181 @@
+//! Strong scaling of the LIVE cluster — real bytes, real threads, real
+//! sockets — across node counts and transports.
+//!
+//! Where `fig6_strong_scaling` reproduces the paper's curves on the
+//! discrete-event simulator (virtual time, no data movement),
+//! this harness runs nbody/wavesim/rsim through the full
+//! TDAG→CDAG→IDAG→executor pipeline with the pure-Rust reference kernels,
+//! at 1/2/4/8 simulated nodes over both transports (in-process channels
+//! and loopback TCP). It measures what the simulator cannot: executor
+//! latency, receive-arbitration overhead and the wire cost of the pilot
+//! protocol.
+//!
+//!     cargo bench --bench strong_scaling            # full run
+//!     BENCH_QUICK=1 cargo bench --bench strong_scaling   # CI smoke: 1+2 nodes
+//!
+//! Results go to stdout and, machine-readable, to
+//! `BENCH_strong_scaling.local.json` at the repo root (gitignored;
+//! override the path with `BENCH_STRONG_SCALING_JSON` — CI sets it to the
+//! canonical `BENCH_strong_scaling.json` and uploads the artifact).
+
+#[path = "support/mod.rs"]
+mod support;
+
+use celerity::apps;
+use celerity::comm::Transport;
+use celerity::driver::{run_cluster, ClusterConfig, Queue};
+use std::time::Instant;
+
+struct Row {
+    app: &'static str,
+    transport: Transport,
+    nodes: u64,
+    devices: u64,
+    wall_s: f64,
+    /// Total grid-cell updates performed by the workload (throughput unit).
+    cells: u64,
+    cells_per_s: f64,
+    /// Speedup vs the same app+transport at 1 node.
+    speedup_vs_1: f64,
+}
+
+struct Workload {
+    app: &'static str,
+    /// Cell updates this workload performs (for ops/s).
+    cells: u64,
+    /// Shared so each cluster run can move a clone into its node threads.
+    submit: std::sync::Arc<dyn Fn(&mut Queue) + Send + Sync>,
+}
+
+fn workloads(quick: bool) -> Vec<Workload> {
+    // Sizes chosen so the full matrix finishes in minutes on a laptop and
+    // the quick matrix in seconds on a 2-core CI runner; big enough that
+    // per-node work dominates constant overheads at 8 nodes.
+    let (nbody_n, nbody_steps) = if quick { (256u64, 2usize) } else { (512, 4) };
+    let (ws_rows, ws_cols, ws_steps) = if quick { (64u64, 32u64, 4usize) } else { (128, 64, 8) };
+    let (rs_rows, rs_width) = if quick { (12u64, 128u64) } else { (24, 256) };
+    vec![
+        Workload {
+            app: "nbody",
+            cells: nbody_n * nbody_steps as u64,
+            submit: std::sync::Arc::new(move |q: &mut Queue| {
+                let (p, _v) = apps::nbody::submit(q, nbody_n, nbody_steps).expect("submit nbody");
+                let _ = q.fence_bytes(p.id()).expect("fence P");
+            }),
+        },
+        Workload {
+            app: "wavesim",
+            cells: ws_rows * ws_cols * ws_steps as u64,
+            submit: std::sync::Arc::new(move |q: &mut Queue| {
+                let out =
+                    apps::wavesim::submit(q, ws_rows, ws_cols, ws_steps).expect("submit wavesim");
+                let _ = q.fence_bytes(out.id()).expect("fence U");
+            }),
+        },
+        Workload {
+            app: "rsim",
+            cells: (rs_rows - 1) * rs_width,
+            submit: std::sync::Arc::new(move |q: &mut Queue| {
+                let (r, _vis) =
+                    apps::rsim::submit(q, rs_rows, rs_width, false).expect("submit rsim");
+                let _ = q.fence_bytes(r.id()).expect("fence R");
+            }),
+        },
+    ]
+}
+
+fn run_once(w: &Workload, transport: Transport, nodes: u64, devices: u64) -> f64 {
+    let cfg = ClusterConfig {
+        num_nodes: nodes,
+        num_devices: devices,
+        registry: apps::reference_registry(),
+        transport,
+        ..Default::default()
+    };
+    let submit = w.submit.clone();
+    let t0 = Instant::now();
+    let reports = run_cluster(cfg, move |q| submit(q));
+    let wall = t0.elapsed().as_secs_f64();
+    for r in &reports {
+        assert!(r.errors.is_empty(), "node {}: {:?}", r.node, r.errors);
+    }
+    wall
+}
+
+fn write_json(rows: &[Row], quick: bool) {
+    let path = support::out_path("BENCH_STRONG_SCALING_JSON", "strong_scaling");
+    let mut s = support::json_header("strong_scaling", quick);
+    s.push_str("  \"rows\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"app\": \"{}\", \"transport\": \"{}\", \"nodes\": {}, \"devices\": {}, \"wall_s\": {:.6}, \"cells\": {}, \"cells_per_s\": {:.1}, \"speedup_vs_1\": {:.3}}}{}\n",
+            r.app,
+            r.transport.name(),
+            r.nodes,
+            r.devices,
+            r.wall_s,
+            r.cells,
+            r.cells_per_s,
+            r.speedup_vs_1,
+            if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    match std::fs::write(&path, s) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("\nfailed to write {path}: {e}"),
+    }
+}
+
+fn main() {
+    let quick = std::env::var("BENCH_QUICK").is_ok_and(|v| !v.is_empty() && v != "0");
+    let node_counts: &[u64] = if quick { &[1, 2] } else { &[1, 2, 4, 8] };
+    let devices = 2u64;
+    let filter = std::env::args()
+        .skip(1)
+        .find(|a| !a.starts_with('-'))
+        .unwrap_or_default();
+
+    println!("== strong_scaling: live cluster, both transports ==");
+    println!(
+        "{:>8} {:>9} {:>6} {:>10} {:>14} {:>9}",
+        "app", "transport", "nodes", "wall (s)", "cells/s", "speedup"
+    );
+    let mut rows: Vec<Row> = Vec::new();
+    for w in &workloads(quick) {
+        if !filter.is_empty() && filter != w.app {
+            continue;
+        }
+        for &transport in &[Transport::Channel, Transport::Tcp] {
+            let mut base = f64::NAN;
+            for &nodes in node_counts {
+                let wall = run_once(w, transport, nodes, devices);
+                if nodes == 1 {
+                    base = wall;
+                }
+                let row = Row {
+                    app: w.app,
+                    transport,
+                    nodes,
+                    devices,
+                    wall_s: wall,
+                    cells: w.cells,
+                    cells_per_s: w.cells as f64 / wall,
+                    speedup_vs_1: base / wall,
+                };
+                println!(
+                    "{:>8} {:>9} {:>6} {:>10.4} {:>14.0} {:>9.2}",
+                    row.app,
+                    row.transport.name(),
+                    row.nodes,
+                    row.wall_s,
+                    row.cells_per_s,
+                    row.speedup_vs_1
+                );
+                rows.push(row);
+            }
+        }
+    }
+    println!("\n(live run with reference kernels: wall time includes scheduling, transfers and the transport; tiny problem sizes mean sub-linear speedup is expected — the claim is the *trend* and the channel-vs-tcp delta)");
+    write_json(&rows, quick);
+}

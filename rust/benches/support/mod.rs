@@ -1,0 +1,69 @@
+//! Helpers shared by the bench harnesses (included via `#[path]`, not a
+//! bench target itself): git metadata, dependency-free date formatting,
+//! JSON escaping, and the output-path convention.
+//!
+//! Output-path convention: every bench writes its machine-readable JSON to
+//! `BENCH_<name>.local.json` at the repository root by default — gitignored,
+//! so casual local `cargo bench` runs never dirty the working tree. CI (and
+//! anyone refreshing the committed baseline deliberately) opts into the
+//! canonical `BENCH_<name>.json` path via the bench's `BENCH_*_JSON` env
+//! var.
+
+/// Short git revision of the working tree, or "unknown".
+pub fn git_rev() -> String {
+    std::process::Command::new("git")
+        .args(["rev-parse", "--short", "HEAD"])
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .unwrap_or_else(|| "unknown".to_string())
+}
+
+/// Days-since-epoch → (year, month, day), proleptic Gregorian
+/// (Howard Hinnant's civil_from_days), to avoid a date-crate dependency.
+pub fn civil_from_unix(secs: u64) -> (i64, u64, u64) {
+    let z = (secs / 86_400) as i64 + 719_468;
+    let era = z.div_euclid(146_097);
+    let doe = z.rem_euclid(146_097) as u64;
+    let yoe = (doe - doe / 1460 + doe / 36_524 - doe / 146_096) / 365;
+    let doy = doe - (365 * yoe + yoe / 4 - yoe / 100);
+    let mp = (5 * doy + 2) / 153;
+    let d = doy - (153 * mp + 2) / 5 + 1;
+    let m = if mp < 10 { mp + 3 } else { mp - 9 };
+    let y = yoe as i64 + era * 400 + i64::from(m <= 2);
+    (y, m, d)
+}
+
+pub fn json_escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+/// Seconds since the Unix epoch (0 if the clock is broken).
+pub fn unix_now() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0)
+}
+
+/// The JSON header fields every bench schema shares.
+pub fn json_header(bench: &str, quick: bool) -> String {
+    let unix_time = unix_now();
+    let (y, m, d) = civil_from_unix(unix_time);
+    format!(
+        "{{\n  \"bench\": \"{}\",\n  \"schema\": 1,\n  \"git_rev\": \"{}\",\n  \"date\": \"{y:04}-{m:02}-{d:02}\",\n  \"unix_time\": {unix_time},\n  \"quick\": {quick},\n",
+        json_escape(bench),
+        json_escape(&git_rev()),
+    )
+}
+
+/// Resolve the output path: `env_var` if set, else
+/// `<repo root>/BENCH_<name>.local.json` (gitignored).
+pub fn out_path(env_var: &str, name: &str) -> String {
+    std::env::var(env_var).unwrap_or_else(|_| {
+        format!("{}/../BENCH_{name}.local.json", env!("CARGO_MANIFEST_DIR"))
+    })
+}

@@ -15,6 +15,17 @@ pub mod nbody;
 pub mod rsim;
 pub mod wavesim;
 
+/// A [`Registry`](crate::executor::Registry) with every app's pure-Rust
+/// reference kernels — the one-stop setup used by the CLI (`run`/`worker`),
+/// the live strong-scaling bench and integration tests.
+pub fn reference_registry() -> crate::executor::Registry {
+    let registry = crate::executor::Registry::new();
+    nbody::register_reference_kernels(&registry);
+    rsim::register_reference_kernels(&registry);
+    wavesim::register_reference_kernels(&registry);
+    registry
+}
+
 /// Physics constants; must match `python/compile/kernels/ref.py`.
 pub mod consts {
     /// Integration time step.

@@ -1,0 +1,180 @@
+//! In-process channel transport: the fastest fabric for simulated clusters
+//! whose nodes run as threads of one process.
+//!
+//! [`ChannelWorld`] wires `n` [`ChannelCommunicator`]s together over
+//! `std::sync::mpsc` channels — delivery is immediate and lossless, which
+//! makes it the reference transport the TCP fabric is validated against
+//! (see `rust/tests/distributed.rs`).
+
+use super::{Communicator, Inbound};
+use crate::instruction::Pilot;
+use crate::util::{MessageId, NodeId};
+use std::sync::mpsc;
+use std::sync::Mutex;
+
+/// In-process fabric connecting `n` [`ChannelCommunicator`]s.
+pub struct ChannelWorld {
+    senders: Vec<mpsc::Sender<Inbound>>,
+    receivers: Vec<Option<mpsc::Receiver<Inbound>>>,
+}
+
+impl ChannelWorld {
+    pub fn new(num_nodes: u64) -> ChannelWorld {
+        let mut senders = Vec::new();
+        let mut receivers = Vec::new();
+        for _ in 0..num_nodes {
+            let (tx, rx) = mpsc::channel();
+            senders.push(tx);
+            receivers.push(Some(rx));
+        }
+        ChannelWorld { senders, receivers }
+    }
+
+    /// Extract the communicator endpoint for `node`. Each may be taken once.
+    pub fn communicator(&mut self, node: NodeId) -> ChannelCommunicator {
+        ChannelCommunicator {
+            node,
+            peers: self.senders.clone(),
+            inbox: Mutex::new(
+                self.receivers[node.0 as usize]
+                    .take()
+                    .expect("communicator already taken"),
+            ),
+        }
+    }
+
+    /// All communicators at once (for spawning node threads).
+    pub fn communicators(mut self) -> Vec<ChannelCommunicator> {
+        (0..self.senders.len())
+            .map(|i| self.communicator(NodeId(i as u64)))
+            .collect()
+    }
+}
+
+/// Channel-backed [`Communicator`].
+pub struct ChannelCommunicator {
+    node: NodeId,
+    peers: Vec<mpsc::Sender<Inbound>>,
+    inbox: Mutex<mpsc::Receiver<Inbound>>,
+}
+
+impl Communicator for ChannelCommunicator {
+    fn node(&self) -> NodeId {
+        self.node
+    }
+
+    fn num_nodes(&self) -> u64 {
+        self.peers.len() as u64
+    }
+
+    fn send_pilot(&self, pilot: Pilot) {
+        let to = pilot.to.0 as usize;
+        if super::comm_trace() {
+            eprintln!("[comm] {} pilot {} {} t{} -> {}", self.node, pilot.msg, pilot.send_box, pilot.transfer.0, pilot.to);
+        }
+        // A dropped peer means that node already shut down; losing the
+        // pilot is then inconsequential.
+        let _ = self.peers[to].send(Inbound::Pilot(pilot));
+    }
+
+    fn send_data(&self, to: NodeId, msg: MessageId, bytes: Vec<u8>) {
+        if super::comm_trace() {
+            eprintln!("[comm] {} data {} ({}B) -> {}", self.node, msg, bytes.len(), to);
+        }
+        let _ = self.peers[to.0 as usize].send(Inbound::Data { from: self.node, msg, bytes });
+    }
+
+    fn poll(&self) -> Option<Inbound> {
+        self.inbox.lock().unwrap().try_recv().ok()
+    }
+}
+
+/// A no-op communicator for single-node runs.
+pub struct NullCommunicator(pub NodeId);
+
+impl Communicator for NullCommunicator {
+    fn node(&self) -> NodeId {
+        self.0
+    }
+    fn num_nodes(&self) -> u64 {
+        1
+    }
+    fn send_pilot(&self, _: Pilot) {
+        panic!("single-node run must not send pilots");
+    }
+    fn send_data(&self, _: NodeId, _: MessageId, _: Vec<u8>) {
+        panic!("single-node run must not send data");
+    }
+    fn poll(&self) -> Option<Inbound> {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::grid::GridBox;
+    use crate::util::BufferId;
+
+    fn pilot(from: u64, to: u64, msg: u64) -> Pilot {
+        Pilot {
+            from: NodeId(from),
+            to: NodeId(to),
+            msg: MessageId(msg),
+            buffer: BufferId(0),
+            send_box: GridBox::d1(0, 4),
+            transfer: crate::util::TaskId(0),
+        }
+    }
+
+    #[test]
+    fn pilots_and_data_are_routed() {
+        let mut world = ChannelWorld::new(2);
+        let c0 = world.communicator(NodeId(0));
+        let c1 = world.communicator(NodeId(1));
+        c0.send_pilot(pilot(0, 1, 7));
+        c0.send_data(NodeId(1), MessageId(7), vec![1, 2, 3]);
+        match c1.poll().unwrap() {
+            Inbound::Pilot(p) => assert_eq!(p.msg, MessageId(7)),
+            other => panic!("{other:?}"),
+        }
+        match c1.poll().unwrap() {
+            Inbound::Data { from, msg, bytes } => {
+                assert_eq!(from, NodeId(0));
+                assert_eq!(msg, MessageId(7));
+                assert_eq!(bytes, vec![1, 2, 3]);
+            }
+            other => panic!("{other:?}"),
+        }
+        assert!(c1.poll().is_none());
+        assert!(c0.poll().is_none());
+    }
+
+    #[test]
+    fn cross_thread_messaging() {
+        let mut world = ChannelWorld::new(2);
+        let c0 = world.communicator(NodeId(0));
+        let c1 = world.communicator(NodeId(1));
+        let t = std::thread::spawn(move || {
+            for i in 0..100u64 {
+                c1.send_data(NodeId(0), MessageId(i), vec![i as u8]);
+            }
+        });
+        let mut got = 0;
+        while got < 100 {
+            if let Some(Inbound::Data { msg, bytes, .. }) = c0.poll() {
+                assert_eq!(bytes, vec![msg.0 as u8]);
+                got += 1;
+            } else {
+                std::thread::yield_now();
+            }
+        }
+        t.join().unwrap();
+    }
+
+    #[test]
+    #[should_panic(expected = "single-node")]
+    fn null_communicator_rejects_sends() {
+        NullCommunicator(NodeId(0)).send_data(NodeId(0), MessageId(0), vec![]);
+    }
+}

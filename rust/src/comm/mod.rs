@@ -1,16 +1,40 @@
-//! The communicator: peer-to-peer messaging between nodes (§3.4, §4.2).
+//! The communicator subsystem: peer-to-peer messaging between nodes
+//! (§3.4, §4.2).
 //!
 //! The paper's implementation wraps MPI (`MPI_Isend`/`MPI_Irecv` plus
-//! out-of-band *pilot messages*). This repo substitutes an in-process
-//! channel-based fabric with identical semantics: non-blocking sends,
-//! polling receipt, pilots travelling eagerly ahead of data. Each node of
-//! the (simulated) cluster runs as a thread holding one
-//! [`ChannelCommunicator`].
+//! out-of-band *pilot messages*). This repo substitutes pluggable
+//! transports with identical semantics — non-blocking sends, polling
+//! receipt, pilots travelling eagerly ahead of data:
+//!
+//! - [`ChannelWorld`] / [`ChannelCommunicator`] ([`channel`]): in-process
+//!   mpsc fabric; every node of the simulated cluster is a thread. Fastest,
+//!   and the reference the socket transport is validated against.
+//! - [`TcpWorld`] / [`TcpCommunicator`] ([`tcp`]): real sockets with the
+//!   length-prefixed frame format of [`wire`]; nodes may be threads of one
+//!   process (`TcpWorld::bind_local`) or genuinely separate OS processes
+//!   (`TcpCommunicator::bind` + the `celerity worker` CLI).
+//! - [`NullCommunicator`]: the single-node stub.
+//!
+//! Which transport a cluster uses is a [`Transport`] config value on
+//! `driver::ClusterConfig`, orthogonal to the program being run — the
+//! cross-transport tests in `rust/tests/distributed.rs` pin both fabrics
+//! to byte-identical application results.
+//!
+//! The *receive arbitration* consuming these messages (matching pilots and
+//! out-of-order payload fragments against `receive`/`split receive`/`await
+//! receive` instructions) lives with the executor:
+//! [`crate::executor::ReceiveArbiter`].
+
+pub mod channel;
+pub mod tcp;
+pub mod wire;
+
+pub use channel::{ChannelCommunicator, ChannelWorld, NullCommunicator};
+pub use tcp::{TcpCommunicator, TcpWorld};
 
 use crate::instruction::Pilot;
 use crate::util::{MessageId, NodeId};
-use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
 /// A message arriving at a node.
 #[derive(Debug)]
@@ -23,8 +47,8 @@ pub enum Inbound {
 
 /// Node-local endpoint of the cluster fabric.
 ///
-/// All operations are non-blocking: `send_*` enqueue into the peer's
-/// mailbox, `poll` drains the local mailbox. This mirrors how the executor
+/// All operations are non-blocking: `send_*` enqueue toward the peer,
+/// `poll` drains the local mailbox. This mirrors how the executor
 /// integrates MPI: "an executor loop issuing ready instructions and polling
 /// active ones for completion" (§4.1).
 pub trait Communicator: Send {
@@ -38,172 +62,56 @@ pub trait Communicator: Send {
     fn poll(&self) -> Option<Inbound>;
 }
 
-/// In-process fabric connecting `n` [`ChannelCommunicator`]s.
-pub struct ChannelWorld {
-    senders: Vec<mpsc::Sender<Inbound>>,
-    receivers: Vec<Option<mpsc::Receiver<Inbound>>>,
-}
-
-impl ChannelWorld {
-    pub fn new(num_nodes: u64) -> ChannelWorld {
-        let mut senders = Vec::new();
-        let mut receivers = Vec::new();
-        for _ in 0..num_nodes {
-            let (tx, rx) = mpsc::channel();
-            senders.push(tx);
-            receivers.push(Some(rx));
-        }
-        ChannelWorld { senders, receivers }
-    }
-
-    /// Extract the communicator endpoint for `node`. Each may be taken once.
-    pub fn communicator(&mut self, node: NodeId) -> ChannelCommunicator {
-        ChannelCommunicator {
-            node,
-            peers: self.senders.clone(),
-            inbox: Mutex::new(
-                self.receivers[node.0 as usize]
-                    .take()
-                    .expect("communicator already taken"),
-            ),
-        }
-    }
-
-    /// All communicators at once (for spawning node threads).
-    pub fn communicators(mut self) -> Vec<ChannelCommunicator> {
-        (0..self.senders.len())
-            .map(|i| self.communicator(NodeId(i as u64)))
-            .collect()
-    }
-}
-
-/// Channel-backed [`Communicator`].
-pub struct ChannelCommunicator {
-    node: NodeId,
-    peers: Vec<mpsc::Sender<Inbound>>,
-    inbox: Mutex<mpsc::Receiver<Inbound>>,
-}
-
-impl Communicator for ChannelCommunicator {
-    fn node(&self) -> NodeId {
-        self.node
-    }
-
-    fn num_nodes(&self) -> u64 {
-        self.peers.len() as u64
-    }
-
-    fn send_pilot(&self, pilot: Pilot) {
-        let to = pilot.to.0 as usize;
-        if std::env::var_os("CELERITY_COMM_TRACE").is_some() {
-            eprintln!("[comm] {} pilot {} {} t{} -> {}", self.node, pilot.msg, pilot.send_box, pilot.transfer.0, pilot.to);
-        }
-        // A dropped peer means that node already shut down; losing the
-        // pilot is then inconsequential.
-        let _ = self.peers[to].send(Inbound::Pilot(pilot));
-    }
-
-    fn send_data(&self, to: NodeId, msg: MessageId, bytes: Vec<u8>) {
-        if std::env::var_os("CELERITY_COMM_TRACE").is_some() {
-            eprintln!("[comm] {} data {} ({}B) -> {}", self.node, msg, bytes.len(), to);
-        }
-        let _ = self.peers[to.0 as usize].send(Inbound::Data { from: self.node, msg, bytes });
-    }
-
-    fn poll(&self) -> Option<Inbound> {
-        self.inbox.lock().unwrap().try_recv().ok()
-    }
-}
-
-/// A no-op communicator for single-node runs.
-pub struct NullCommunicator(pub NodeId);
-
-impl Communicator for NullCommunicator {
-    fn node(&self) -> NodeId {
-        self.0
-    }
-    fn num_nodes(&self) -> u64 {
-        1
-    }
-    fn send_pilot(&self, _: Pilot) {
-        panic!("single-node run must not send pilots");
-    }
-    fn send_data(&self, _: NodeId, _: MessageId, _: Vec<u8>) {
-        panic!("single-node run must not send data");
-    }
-    fn poll(&self) -> Option<Inbound> {
-        None
-    }
-}
-
 /// Shareable communicator handle (executor + its lanes).
 pub type CommRef = Arc<dyn Communicator + Sync>;
+
+/// Whether `CELERITY_COMM_TRACE` is set — cached once, because the check
+/// sits on the per-message send path (env lookups take the process-wide
+/// environment lock).
+pub(crate) fn comm_trace() -> bool {
+    static TRACE: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
+    *TRACE.get_or_init(|| std::env::var_os("CELERITY_COMM_TRACE").is_some())
+}
+
+/// Which fabric connects the nodes of a cluster run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Transport {
+    /// In-process mpsc channels (nodes are threads). The default.
+    #[default]
+    Channel,
+    /// Loopback TCP sockets (same node-per-thread layout, real kernel
+    /// sockets in between — the fabric separate worker processes use).
+    Tcp,
+}
+
+impl Transport {
+    /// Parse a CLI/config spelling.
+    pub fn parse(s: &str) -> Option<Transport> {
+        match s {
+            "channel" => Some(Transport::Channel),
+            "tcp" => Some(Transport::Tcp),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Transport::Channel => "channel",
+            Transport::Tcp => "tcp",
+        }
+    }
+}
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::grid::GridBox;
-    use crate::util::BufferId;
-
-    fn pilot(from: u64, to: u64, msg: u64) -> Pilot {
-        Pilot {
-            from: NodeId(from),
-            to: NodeId(to),
-            msg: MessageId(msg),
-            buffer: BufferId(0),
-            send_box: GridBox::d1(0, 4),
-            transfer: crate::util::TaskId(0),
-        }
-    }
 
     #[test]
-    fn pilots_and_data_are_routed() {
-        let mut world = ChannelWorld::new(2);
-        let c0 = world.communicator(NodeId(0));
-        let c1 = world.communicator(NodeId(1));
-        c0.send_pilot(pilot(0, 1, 7));
-        c0.send_data(NodeId(1), MessageId(7), vec![1, 2, 3]);
-        match c1.poll().unwrap() {
-            Inbound::Pilot(p) => assert_eq!(p.msg, MessageId(7)),
-            other => panic!("{other:?}"),
+    fn transport_parse_round_trips() {
+        for t in [Transport::Channel, Transport::Tcp] {
+            assert_eq!(Transport::parse(t.name()), Some(t));
         }
-        match c1.poll().unwrap() {
-            Inbound::Data { from, msg, bytes } => {
-                assert_eq!(from, NodeId(0));
-                assert_eq!(msg, MessageId(7));
-                assert_eq!(bytes, vec![1, 2, 3]);
-            }
-            other => panic!("{other:?}"),
-        }
-        assert!(c1.poll().is_none());
-        assert!(c0.poll().is_none());
-    }
-
-    #[test]
-    fn cross_thread_messaging() {
-        let mut world = ChannelWorld::new(2);
-        let c0 = world.communicator(NodeId(0));
-        let c1 = world.communicator(NodeId(1));
-        let t = std::thread::spawn(move || {
-            for i in 0..100u64 {
-                c1.send_data(NodeId(0), MessageId(i), vec![i as u8]);
-            }
-        });
-        let mut got = 0;
-        while got < 100 {
-            if let Some(Inbound::Data { msg, bytes, .. }) = c0.poll() {
-                assert_eq!(bytes, vec![msg.0 as u8]);
-                got += 1;
-            } else {
-                std::thread::yield_now();
-            }
-        }
-        t.join().unwrap();
-    }
-
-    #[test]
-    #[should_panic(expected = "single-node")]
-    fn null_communicator_rejects_sends() {
-        NullCommunicator(NodeId(0)).send_data(NodeId(0), MessageId(0), vec![]);
+        assert_eq!(Transport::parse("mpi"), None);
+        assert_eq!(Transport::default(), Transport::Channel);
     }
 }

@@ -1,0 +1,385 @@
+//! TCP transport: a [`Communicator`] whose peers talk over real sockets.
+//!
+//! Unlike the [`ChannelWorld`](super::ChannelWorld) thread fabric, this
+//! transport crosses process boundaries: every node owns one listening
+//! socket and lazily opens one outbound stream per peer, so a simulated
+//! cluster can run as `n` threads of one process ([`TcpWorld::bind_local`])
+//! *or* as `n` genuinely separate OS processes ([`TcpCommunicator::bind`]
+//! with a shared address list — see the `celerity worker` CLI subcommand).
+//!
+//! Semantics match the channel transport exactly: non-blocking sends,
+//! polled receipt, pilots racing ahead of (or behind) their payloads, and
+//! sends to an already-departed peer silently dropped (that node has
+//! shut down, so nobody is waiting for the bytes). Frames use the
+//! length-prefixed format of [`super::wire`]; `TCP_NODELAY` is set on
+//! every stream because the executor's latency — not bandwidth — is what
+//! the paper's WaveSim workload stresses.
+
+use super::{wire, Communicator, Inbound};
+use crate::instruction::Pilot;
+use crate::util::{MessageId, NodeId};
+use std::io::BufReader;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Default startup grace: how long outbound connects retry before giving
+/// up. Separate worker processes start in arbitrary order; the first sender
+/// may race a peer that has not bound its listener yet. Once the grace
+/// window (measured from communicator creation) has passed, a refused
+/// connection means the peer has departed and the send is dropped.
+const CONNECT_GRACE: Duration = Duration::from_secs(10);
+const CONNECT_BACKOFF: Duration = Duration::from_millis(20);
+/// Accept-loop poll interval (the listener is non-blocking so the thread
+/// can observe shutdown).
+const ACCEPT_POLL: Duration = Duration::from_micros(500);
+
+/// In-process convenience: bind `n` loopback listeners on ephemeral ports
+/// and wire the full mesh. The TCP analogue of [`super::ChannelWorld`].
+pub struct TcpWorld {
+    comms: Vec<TcpCommunicator>,
+}
+
+impl TcpWorld {
+    pub fn bind_local(num_nodes: u64) -> std::io::Result<TcpWorld> {
+        let mut listeners = Vec::new();
+        let mut addrs = Vec::new();
+        for _ in 0..num_nodes {
+            let l = TcpListener::bind(("127.0.0.1", 0))?;
+            addrs.push(l.local_addr()?);
+            listeners.push(l);
+        }
+        let comms = listeners
+            .into_iter()
+            .enumerate()
+            .map(|(i, l)| TcpCommunicator::from_listener(NodeId(i as u64), l, addrs.clone()))
+            .collect::<std::io::Result<Vec<_>>>()?;
+        Ok(TcpWorld { comms })
+    }
+
+    /// The listen addresses, indexed by node id.
+    pub fn addrs(&self) -> Vec<SocketAddr> {
+        self.comms[0].peers.clone()
+    }
+
+    /// All communicators at once (for spawning node threads).
+    pub fn communicators(self) -> Vec<TcpCommunicator> {
+        self.comms
+    }
+}
+
+/// Socket-backed [`Communicator`]: one listener, `n` lazily-connected
+/// outbound streams, a reader thread per accepted connection decoding
+/// frames into the poll queue.
+pub struct TcpCommunicator {
+    node: NodeId,
+    /// Listen addresses of the whole cluster, indexed by node id.
+    peers: Vec<SocketAddr>,
+    /// Outbound streams, lazily connected; one mutex per peer so sends to
+    /// different peers never serialize against each other.
+    outbound: Vec<Mutex<Option<TcpStream>>>,
+    inbox: Mutex<mpsc::Receiver<Inbound>>,
+    shutdown: Arc<AtomicBool>,
+    /// Connect retries stop at this instant (creation + startup grace).
+    connect_deadline: Instant,
+}
+
+impl TcpCommunicator {
+    /// Bind the listener for `node` at `peers[node]` and become that node's
+    /// endpoint of the mesh. Every process of a multi-process cluster calls
+    /// this with the *same* address list and its own node id.
+    pub fn bind(node: NodeId, peers: Vec<SocketAddr>) -> std::io::Result<TcpCommunicator> {
+        let listener = TcpListener::bind(peers[node.0 as usize])?;
+        Self::from_listener(node, listener, peers)
+    }
+
+    fn from_listener(
+        node: NodeId,
+        listener: TcpListener,
+        peers: Vec<SocketAddr>,
+    ) -> std::io::Result<TcpCommunicator> {
+        listener.set_nonblocking(true)?;
+        let (tx, rx) = mpsc::channel::<Inbound>();
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let flag = shutdown.clone();
+        std::thread::Builder::new()
+            .name(format!("celerity-tcp-accept-{}", node.0))
+            .spawn(move || accept_loop(listener, tx, flag))
+            .expect("spawn tcp accept thread");
+        let outbound = peers.iter().map(|_| Mutex::new(None)).collect();
+        Ok(TcpCommunicator {
+            node,
+            peers,
+            outbound,
+            inbox: Mutex::new(rx),
+            shutdown,
+            connect_deadline: Instant::now() + CONNECT_GRACE,
+        })
+    }
+
+    /// Shrink the startup grace window (tests exercising departed peers).
+    #[cfg(test)]
+    fn set_connect_grace(&mut self, grace: Duration) {
+        self.connect_deadline = Instant::now() + grace;
+    }
+
+    /// Write one frame to `to`, connecting on first use. Failures are
+    /// swallowed like the channel transport's dropped-peer sends: a peer
+    /// that cannot be reached anymore has already shut down.
+    fn send_frame(&self, to: NodeId, frame: &[u8]) {
+        let mut slot = self.outbound[to.0 as usize].lock().unwrap();
+        if slot.is_none() {
+            *slot = connect_with_retry(self.peers[to.0 as usize], self.connect_deadline);
+        }
+        let failed = match slot.as_mut() {
+            Some(stream) => wire::write_frame(stream, frame).is_err(),
+            None => true,
+        };
+        if failed {
+            // Drop the stream so a later send re-attempts the connection
+            // rather than writing into a known-broken pipe.
+            *slot = None;
+            if super::comm_trace() {
+                eprintln!("[comm] {} tcp send to {} failed (peer gone)", self.node, to);
+            }
+        }
+    }
+}
+
+impl Communicator for TcpCommunicator {
+    fn node(&self) -> NodeId {
+        self.node
+    }
+
+    fn num_nodes(&self) -> u64 {
+        self.peers.len() as u64
+    }
+
+    fn send_pilot(&self, pilot: Pilot) {
+        if super::comm_trace() {
+            eprintln!("[comm] {} pilot {} {} t{} -> {} (tcp)", self.node, pilot.msg, pilot.send_box, pilot.transfer.0, pilot.to);
+        }
+        let to = pilot.to;
+        self.send_frame(to, &wire::encode_pilot(&pilot));
+    }
+
+    fn send_data(&self, to: NodeId, msg: MessageId, bytes: Vec<u8>) {
+        if super::comm_trace() {
+            eprintln!("[comm] {} data {} ({}B) -> {} (tcp)", self.node, msg, bytes.len(), to);
+        }
+        self.send_frame(to, &wire::encode_data(self.node, msg, &bytes));
+    }
+
+    fn poll(&self) -> Option<Inbound> {
+        self.inbox.lock().unwrap().try_recv().ok()
+    }
+}
+
+impl Drop for TcpCommunicator {
+    fn drop(&mut self) {
+        // Stop the accept loop; reader threads exit on their own when the
+        // peers' outbound streams close.
+        self.shutdown.store(true, Ordering::Relaxed);
+    }
+}
+
+fn accept_loop(listener: TcpListener, tx: mpsc::Sender<Inbound>, shutdown: Arc<AtomicBool>) {
+    let mut readers = 0u64;
+    while !shutdown.load(Ordering::Relaxed) {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                let _ = stream.set_nodelay(true);
+                let _ = stream.set_nonblocking(false);
+                let tx = tx.clone();
+                readers += 1;
+                let _ = std::thread::Builder::new()
+                    .name(format!("celerity-tcp-read-{readers}"))
+                    .spawn(move || reader_loop(stream, tx));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(ACCEPT_POLL);
+            }
+            Err(_) => break,
+        }
+    }
+}
+
+fn reader_loop(stream: TcpStream, tx: mpsc::Sender<Inbound>) {
+    let mut r = BufReader::new(stream);
+    loop {
+        match wire::read_frame(&mut r) {
+            // Receiver side dropped: the local node is shutting down.
+            Ok(Some(m)) => {
+                if tx.send(m).is_err() {
+                    break;
+                }
+            }
+            // Clean EOF: the sending peer closed its outbound stream.
+            Ok(None) => break,
+            Err(e) => {
+                // Connection reset during peer teardown is normal; anything
+                // else indicates stream corruption and is worth a trace.
+                if super::comm_trace() {
+                    eprintln!("[comm] tcp reader: {e}");
+                }
+                break;
+            }
+        }
+    }
+}
+
+fn connect_with_retry(addr: SocketAddr, deadline: Instant) -> Option<TcpStream> {
+    loop {
+        match TcpStream::connect(addr) {
+            Ok(stream) => {
+                let _ = stream.set_nodelay(true);
+                return Some(stream);
+            }
+            Err(_) if Instant::now() < deadline => std::thread::sleep(CONNECT_BACKOFF),
+            Err(e) => {
+                if super::comm_trace() {
+                    eprintln!("[comm] tcp connect {addr} failed: {e}");
+                }
+                return None;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::grid::GridBox;
+    use crate::util::{BufferId, TaskId};
+    use std::time::Duration;
+
+    fn pilot(from: u64, to: u64, msg: u64) -> Pilot {
+        Pilot {
+            from: NodeId(from),
+            to: NodeId(to),
+            msg: MessageId(msg),
+            buffer: BufferId(3),
+            send_box: GridBox::d2((2, 0), (4, 8)),
+            transfer: TaskId(9),
+        }
+    }
+
+    /// Spin-poll with a deadline: TCP delivery is asynchronous.
+    fn poll_one(c: &TcpCommunicator) -> Inbound {
+        let deadline = Instant::now() + Duration::from_secs(10);
+        loop {
+            if let Some(m) = c.poll() {
+                return m;
+            }
+            assert!(Instant::now() < deadline, "no message within deadline");
+            std::thread::yield_now();
+        }
+    }
+
+    #[test]
+    fn pilots_and_data_are_routed() {
+        let world = TcpWorld::bind_local(2).unwrap();
+        let mut comms = world.communicators();
+        let c1 = comms.pop().unwrap();
+        let c0 = comms.pop().unwrap();
+        c0.send_pilot(pilot(0, 1, 7));
+        c0.send_data(NodeId(1), MessageId(7), vec![1, 2, 3]);
+        // One stream carries both frames: order within a peer pair holds.
+        match poll_one(&c1) {
+            Inbound::Pilot(p) => assert_eq!(p, pilot(0, 1, 7)),
+            other => panic!("{other:?}"),
+        }
+        match poll_one(&c1) {
+            Inbound::Data { from, msg, bytes } => {
+                assert_eq!(from, NodeId(0));
+                assert_eq!(msg, MessageId(7));
+                assert_eq!(bytes, vec![1, 2, 3]);
+            }
+            other => panic!("{other:?}"),
+        }
+        assert!(c1.poll().is_none());
+        assert!(c0.poll().is_none());
+    }
+
+    #[test]
+    fn cross_thread_messaging_many() {
+        let world = TcpWorld::bind_local(2).unwrap();
+        let mut comms = world.communicators();
+        let c1 = comms.pop().unwrap();
+        let c0 = comms.pop().unwrap();
+        let t = std::thread::spawn(move || {
+            for i in 0..200u64 {
+                c1.send_data(NodeId(0), MessageId(i), vec![i as u8]);
+            }
+            c1 // keep alive until the receiver drained everything
+        });
+        let mut got = 0;
+        while got < 200 {
+            if let Inbound::Data { msg, bytes, .. } = poll_one(&c0) {
+                assert_eq!(bytes, vec![msg.0 as u8]);
+                got += 1;
+            }
+        }
+        drop(t.join().unwrap());
+    }
+
+    #[test]
+    fn large_payload_round_trips() {
+        let world = TcpWorld::bind_local(2).unwrap();
+        let mut comms = world.communicators();
+        let c1 = comms.pop().unwrap();
+        let c0 = comms.pop().unwrap();
+        let big: Vec<u8> = (0..1_000_000u32).map(|i| (i % 251) as u8).collect();
+        c0.send_data(NodeId(1), MessageId(1), big.clone());
+        match poll_one(&c1) {
+            Inbound::Data { bytes, .. } => assert_eq!(bytes, big),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn full_mesh_all_pairs() {
+        let world = TcpWorld::bind_local(3).unwrap();
+        let comms = world.communicators();
+        for (i, c) in comms.iter().enumerate() {
+            for j in 0..3u64 {
+                if j != i as u64 {
+                    c.send_data(NodeId(j), MessageId(i as u64), vec![i as u8, j as u8]);
+                }
+            }
+        }
+        for (j, c) in comms.iter().enumerate() {
+            let mut seen = Vec::new();
+            for _ in 0..2 {
+                match poll_one(c) {
+                    Inbound::Data { from, bytes, .. } => {
+                        assert_eq!(bytes, vec![from.0 as u8, j as u8]);
+                        seen.push(from.0);
+                    }
+                    other => panic!("{other:?}"),
+                }
+            }
+            seen.sort();
+            let want: Vec<u64> = (0..3).filter(|k| *k != j as u64).collect();
+            assert_eq!(seen, want);
+        }
+    }
+
+    #[test]
+    fn send_to_departed_peer_is_dropped_not_fatal() {
+        let world = TcpWorld::bind_local(2).unwrap();
+        let mut comms = world.communicators();
+        let c1 = comms.pop().unwrap();
+        let mut c0 = comms.pop().unwrap();
+        c0.set_connect_grace(Duration::from_millis(50));
+        drop(c1);
+        // Listener gone: connect may still succeed against the dead socket's
+        // backlog or fail outright — either way the send must not panic and
+        // must return promptly once the grace window lapses.
+        std::thread::sleep(Duration::from_millis(60));
+        let t0 = Instant::now();
+        c0.send_data(NodeId(1), MessageId(0), vec![1]);
+        assert!(t0.elapsed() < Duration::from_secs(5));
+    }
+}

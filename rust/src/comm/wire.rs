@@ -1,0 +1,231 @@
+//! Wire format of the socket transports.
+//!
+//! Every message travelling a byte stream is one self-delimiting *frame*:
+//!
+//! ```text
+//! frame   := tag:u8 body
+//! pilot   := tag=1, 11 × u64 LE
+//!            (from, to, msg, buffer, transfer, min[0..3], max[0..3])
+//! data    := tag=2, 3 × u64 LE (from, msg, len), len bytes of payload
+//! ```
+//!
+//! All integers are little-endian `u64` so the format is trivially
+//! inspectable and has no alignment requirements. A frame is decoded with
+//! exact-size reads; a clean EOF *between* frames means the peer closed the
+//! connection (normal shutdown), an EOF *inside* a frame is a protocol
+//! error.
+
+use super::Inbound;
+use crate::grid::GridBox;
+use crate::grid::Point;
+use crate::instruction::Pilot;
+use crate::util::{BufferId, MessageId, NodeId, TaskId};
+use std::io::{self, Read, Write};
+
+const TAG_PILOT: u8 = 1;
+const TAG_DATA: u8 = 2;
+
+/// Upper bound on a data frame's payload: 1 GiB. A larger length field is
+/// certain corruption (a single transfer of the simulated workloads is at
+/// most a few MB); refusing it keeps a corrupt stream from triggering an
+/// absurd allocation.
+pub const MAX_DATA_LEN: u64 = 1 << 30;
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Encode a pilot frame.
+pub fn encode_pilot(p: &Pilot) -> Vec<u8> {
+    let mut out = Vec::with_capacity(1 + 11 * 8);
+    out.push(TAG_PILOT);
+    put_u64(&mut out, p.from.0);
+    put_u64(&mut out, p.to.0);
+    put_u64(&mut out, p.msg.0);
+    put_u64(&mut out, p.buffer.0);
+    put_u64(&mut out, p.transfer.0);
+    for i in 0..3 {
+        put_u64(&mut out, p.send_box.min[i]);
+    }
+    for i in 0..3 {
+        put_u64(&mut out, p.send_box.max[i]);
+    }
+    out
+}
+
+/// Encode a data frame.
+pub fn encode_data(from: NodeId, msg: MessageId, bytes: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(1 + 3 * 8 + bytes.len());
+    out.push(TAG_DATA);
+    put_u64(&mut out, from.0);
+    put_u64(&mut out, msg.0);
+    put_u64(&mut out, bytes.len() as u64);
+    out.extend_from_slice(bytes);
+    out
+}
+
+/// Write a frame to a stream in one call (the frames are built contiguously
+/// so a single `write_all` keeps them atomic w.r.t. interleaving at the
+/// application level — per-peer streams are additionally mutex-guarded).
+pub fn write_frame(w: &mut impl Write, frame: &[u8]) -> io::Result<()> {
+    w.write_all(frame)?;
+    w.flush()
+}
+
+fn read_u64(r: &mut impl Read) -> io::Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+/// Read one frame. `Ok(None)` means the peer closed the stream cleanly
+/// between frames; any mid-frame EOF or unknown tag is an error.
+pub fn read_frame(r: &mut impl Read) -> io::Result<Option<Inbound>> {
+    let mut tag = [0u8; 1];
+    // Distinguish clean EOF (0 bytes) from a real error.
+    match r.read(&mut tag) {
+        Ok(0) => return Ok(None),
+        Ok(_) => {}
+        Err(ref e) if e.kind() == io::ErrorKind::Interrupted => return read_frame(r),
+        Err(e) => return Err(e),
+    }
+    match tag[0] {
+        TAG_PILOT => {
+            let from = NodeId(read_u64(r)?);
+            let to = NodeId(read_u64(r)?);
+            let msg = MessageId(read_u64(r)?);
+            let buffer = BufferId(read_u64(r)?);
+            let transfer = TaskId(read_u64(r)?);
+            let mut min = [0u64; 3];
+            let mut max = [0u64; 3];
+            for m in &mut min {
+                *m = read_u64(r)?;
+            }
+            for m in &mut max {
+                *m = read_u64(r)?;
+            }
+            Ok(Some(Inbound::Pilot(Pilot {
+                from,
+                to,
+                msg,
+                buffer,
+                send_box: GridBox { min: Point(min), max: Point(max) },
+                transfer,
+            })))
+        }
+        TAG_DATA => {
+            let from = NodeId(read_u64(r)?);
+            let msg = MessageId(read_u64(r)?);
+            let len = read_u64(r)?;
+            if len > MAX_DATA_LEN {
+                return Err(io::Error::new(
+                    io::ErrorKind::InvalidData,
+                    format!("data frame length {len} exceeds {MAX_DATA_LEN}"),
+                ));
+            }
+            let mut bytes = vec![0u8; len as usize];
+            r.read_exact(&mut bytes)?;
+            Ok(Some(Inbound::Data { from, msg, bytes }))
+        }
+        other => Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("unknown frame tag {other}"),
+        )),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::XorShift64;
+
+    fn sample_pilot(seed: u64) -> Pilot {
+        let mut rng = XorShift64::new(seed);
+        let lo = [rng.next_below(100), rng.next_below(100), rng.next_below(100)];
+        Pilot {
+            from: NodeId(rng.next_below(32)),
+            to: NodeId(rng.next_below(32)),
+            msg: MessageId(rng.next_u64()),
+            buffer: BufferId(rng.next_below(16)),
+            send_box: GridBox {
+                min: Point(lo),
+                max: Point([
+                    lo[0] + 1 + rng.next_below(50),
+                    lo[1] + 1 + rng.next_below(50),
+                    lo[2] + 1 + rng.next_below(50),
+                ]),
+            },
+            transfer: TaskId(rng.next_u64()),
+        }
+    }
+
+    #[test]
+    fn pilot_frames_round_trip() {
+        for seed in 1..50 {
+            let p = sample_pilot(seed);
+            let frame = encode_pilot(&p);
+            let mut cur = io::Cursor::new(frame);
+            match read_frame(&mut cur).unwrap() {
+                Some(Inbound::Pilot(q)) => assert_eq!(p, q),
+                other => panic!("{other:?}"),
+            }
+            assert!(read_frame(&mut cur).unwrap().is_none(), "clean EOF after frame");
+        }
+    }
+
+    #[test]
+    fn data_frames_round_trip() {
+        let mut rng = XorShift64::new(3);
+        for len in [0usize, 1, 7, 8, 1024, 100_000] {
+            let bytes: Vec<u8> = (0..len).map(|_| rng.next_u64() as u8).collect();
+            let frame = encode_data(NodeId(5), MessageId(99), &bytes);
+            let mut cur = io::Cursor::new(frame);
+            match read_frame(&mut cur).unwrap() {
+                Some(Inbound::Data { from, msg, bytes: got }) => {
+                    assert_eq!(from, NodeId(5));
+                    assert_eq!(msg, MessageId(99));
+                    assert_eq!(got, bytes);
+                }
+                other => panic!("{other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn back_to_back_frames_parse_in_order() {
+        let p = sample_pilot(7);
+        let mut stream = encode_pilot(&p);
+        stream.extend(encode_data(NodeId(1), MessageId(2), &[9, 9, 9]));
+        stream.extend(encode_pilot(&p));
+        let mut cur = io::Cursor::new(stream);
+        assert!(matches!(read_frame(&mut cur).unwrap(), Some(Inbound::Pilot(_))));
+        assert!(matches!(read_frame(&mut cur).unwrap(), Some(Inbound::Data { .. })));
+        assert!(matches!(read_frame(&mut cur).unwrap(), Some(Inbound::Pilot(_))));
+        assert!(read_frame(&mut cur).unwrap().is_none());
+    }
+
+    #[test]
+    fn truncated_frame_is_an_error() {
+        let p = sample_pilot(11);
+        let mut frame = encode_pilot(&p);
+        frame.truncate(frame.len() - 3);
+        let mut cur = io::Cursor::new(frame);
+        assert!(read_frame(&mut cur).is_err());
+    }
+
+    #[test]
+    fn unknown_tag_is_an_error() {
+        let mut cur = io::Cursor::new(vec![42u8, 0, 0]);
+        assert!(read_frame(&mut cur).is_err());
+    }
+
+    #[test]
+    fn absurd_data_length_is_rejected() {
+        let mut frame = vec![TAG_DATA];
+        frame.extend_from_slice(&0u64.to_le_bytes());
+        frame.extend_from_slice(&1u64.to_le_bytes());
+        frame.extend_from_slice(&(MAX_DATA_LEN + 1).to_le_bytes());
+        let mut cur = io::Cursor::new(frame);
+        assert!(read_frame(&mut cur).is_err());
+    }
+}

@@ -16,11 +16,14 @@
 //! The user program talks to a typed [`Queue`] (Listing 1): typed buffer
 //! creation, command-group submission (`q.submit(|cgh| ...)`), typed
 //! initialization/fences, and `Result`-based §4.4 error propagation.
-//! Peer-to-peer communication flows through a [`ChannelWorld`], the
-//! in-process MPI substitute.
+//! Peer-to-peer communication flows through the transport selected by
+//! [`ClusterConfig::transport`]: a [`ChannelWorld`] (in-process MPI
+//! substitute, the default) or a loopback [`TcpWorld`](crate::comm::TcpWorld)
+//! mesh — the same fabric the `celerity worker` CLI uses to run each node
+//! as a separate OS process ([`run_node`] is the per-process entry point).
 
 use crate::buffer::Buffer;
-use crate::comm::{ChannelWorld, CommRef, NullCommunicator};
+use crate::comm::{ChannelWorld, CommRef, NullCommunicator, TcpWorld, Transport};
 use crate::command::SplitHint;
 use crate::dtype::{self, Elem};
 use crate::executor::{ExecEvent, ExecutorConfig, ExecutorHandle, ExecutorStats, Registry};
@@ -42,6 +45,8 @@ pub struct ClusterConfig {
     pub node_hint: SplitHint,
     pub device_hint: SplitHint,
     pub registry: Registry,
+    /// Fabric connecting the nodes (ignored for single-node runs).
+    pub transport: Transport,
 }
 
 impl Default for ClusterConfig {
@@ -55,6 +60,7 @@ impl Default for ClusterConfig {
             node_hint: SplitHint::D1,
             device_hint: SplitHint::D1,
             registry: Registry::new(),
+            transport: Transport::Channel,
         }
     }
 }
@@ -332,9 +338,23 @@ fn make_node(cfg: &ClusterConfig, node: NodeId, comm: CommRef) -> Queue {
     }
 }
 
+/// Run one node of a cluster against an externally-built communicator and
+/// return its report. This is the per-process entry point of multi-process
+/// deployments (`celerity worker` builds a
+/// [`TcpCommunicator`](crate::comm::TcpCommunicator) from its peer list and
+/// calls this); [`run_cluster`] uses it for every node thread.
+pub fn run_node<F>(cfg: &ClusterConfig, node: NodeId, comm: CommRef, program: F) -> NodeReport
+where
+    F: Fn(&mut Queue),
+{
+    let mut q = make_node(cfg, node, comm);
+    program(&mut q);
+    q.shutdown()
+}
+
 /// Run `program` SPMD on an in-process cluster: one OS thread per node,
-/// each with its own scheduler/executor stack, connected by a
-/// [`ChannelWorld`]. Returns per-node reports.
+/// each with its own scheduler/executor stack, connected by the fabric
+/// selected in [`ClusterConfig::transport`]. Returns per-node reports.
 pub fn run_cluster<F>(cfg: ClusterConfig, program: F) -> Vec<NodeReport>
 where
     F: Fn(&mut Queue) + Send + Sync + 'static,
@@ -342,12 +362,21 @@ where
     assert!(cfg.num_nodes >= 1);
     if cfg.num_nodes == 1 {
         let comm: CommRef = Arc::new(NullCommunicator(NodeId(0)));
-        let mut q = make_node(&cfg, NodeId(0), comm);
-        program(&mut q);
-        return vec![q.shutdown()];
+        return vec![run_node(&cfg, NodeId(0), comm, program)];
     }
-    let world = ChannelWorld::new(cfg.num_nodes);
-    let comms = world.communicators();
+    let comms: Vec<CommRef> = match cfg.transport {
+        Transport::Channel => ChannelWorld::new(cfg.num_nodes)
+            .communicators()
+            .into_iter()
+            .map(|c| Arc::new(c) as CommRef)
+            .collect(),
+        Transport::Tcp => TcpWorld::bind_local(cfg.num_nodes)
+            .expect("bind loopback TCP mesh")
+            .communicators()
+            .into_iter()
+            .map(|c| Arc::new(c) as CommRef)
+            .collect(),
+    };
     let program = Arc::new(program);
     let mut joins = Vec::new();
     for (i, comm) in comms.into_iter().enumerate() {
@@ -356,12 +385,7 @@ where
         joins.push(
             std::thread::Builder::new()
                 .name(format!("celerity-node-{i}"))
-                .spawn(move || {
-                    let comm: CommRef = Arc::new(comm);
-                    let mut q = make_node(&cfg, NodeId(i as u64), comm);
-                    program(&mut q);
-                    q.shutdown()
-                })
+                .spawn(move || run_node(&cfg, NodeId(i as u64), comm, |q| program(q)))
                 .expect("spawn node thread"),
         );
     }

@@ -94,11 +94,23 @@ impl ReceiveArbiter {
         }
     }
 
-    /// Register an `await receive` for a subregion of `split`.
+    /// Register an `await receive` for a subregion of `split`. Must be
+    /// called after `register_receive(split, ..)` — the IDAG guarantees
+    /// this ordering (every `await receive` depends on its `split
+    /// receive`).
     pub fn register_await(&mut self, id: InstructionId, split: InstructionId, region: Region) {
-        // Maybe already satisfied.
-        if let Some(ar) = self.active.get(&split) {
-            if ar.received.contains(&region) {
+        match self.active.get(&split) {
+            // Maybe already satisfied.
+            Some(ar) => {
+                if ar.received.contains(&region) {
+                    self.completions.push(id);
+                    return;
+                }
+            }
+            // The split receive's entire region drained and its state was
+            // garbage collected (payloads can race arbitrarily far ahead
+            // of the awaiting instructions): any subregion is complete.
+            None => {
                 self.completions.push(id);
                 return;
             }
@@ -351,5 +363,193 @@ mod tests {
         a.register_receive(InstructionId(1), BufferId(0), crate::util::TaskId(1), Region::from(GridBox::d1(0, 10)), buf, false);
         a.on_data(NodeId(1), MessageId(1), payload(&GridBox::d1(0, 10), 1.0));
         assert_eq!(a.take_completions(), vec![InstructionId(1)]);
+    }
+
+    // ── property test: fully out-of-order delivery ──────────────────────
+    //
+    // Randomized region splits delivered in adversarial order — payloads
+    // racing ahead of their pilots, fragments arriving before the receive
+    // is even posted, consumer splits orthogonal to sender splits — must
+    // always reassemble byte-exactly and complete every instruction.
+
+    use crate::grid::Point;
+    use crate::util::XorShift64;
+
+    /// Deterministic per-point byte pattern (distinguishes every element,
+    /// so any misplaced fragment shows up as a byte mismatch).
+    fn pattern(p: Point, seed: u64) -> u32 {
+        (p[0].wrapping_mul(1_000_003)
+            ^ p[1].wrapping_mul(10_007)
+            ^ p[2].wrapping_mul(101)
+            ^ seed) as u32
+    }
+
+    /// Dense row-major payload of `b` under the pattern (matches the
+    /// iteration order of `AllocBuf::{read_box,write_box}`).
+    fn pattern_payload(b: &GridBox, seed: u64) -> Vec<u8> {
+        let mut out = Vec::with_capacity(b.area() as usize * 4);
+        for x in b.min[0]..b.max[0] {
+            for y in b.min[1]..b.max[1] {
+                for z in b.min[2]..b.max[2] {
+                    out.extend_from_slice(&pattern(Point::d3(x, y, z), seed).to_ne_bytes());
+                }
+            }
+        }
+        out
+    }
+
+    /// Random partition of `b` into disjoint boxes (recursive splits).
+    fn random_partition(rng: &mut XorShift64, b: GridBox, depth: u32) -> Vec<GridBox> {
+        let splittable: Vec<usize> =
+            (0..3).filter(|&d| b.max[d] - b.min[d] > 1).collect();
+        if depth == 0 || splittable.is_empty() || rng.chance(0.3) {
+            return vec![b];
+        }
+        let d = *rng.pick(&splittable);
+        let cut = rng.next_range(b.min[d] + 1, b.max[d] - 1);
+        let (mut lo_max, mut hi_min) = (b.max, b.min);
+        lo_max[d] = cut;
+        hi_min[d] = cut;
+        let mut out = random_partition(rng, GridBox { min: b.min, max: lo_max }, depth - 1);
+        out.extend(random_partition(rng, GridBox { min: hi_min, max: b.max }, depth - 1));
+        out
+    }
+
+    enum Ev {
+        Recv,
+        Await(usize),
+        Pilot(usize),
+        Data(usize),
+    }
+
+    fn run_out_of_order_case(seed: u64, forced_worst_case: bool) {
+        let mut rng = XorShift64::new(seed);
+        // Random ≤3D box, non-degenerate in the used dims.
+        let dims = 1 + rng.next_below(3) as usize;
+        let mut min = [0u64; 3];
+        let mut max = [1u64; 3];
+        for d in 0..dims {
+            min[d] = rng.next_below(6);
+            max[d] = min[d] + rng.next_range(1, 10);
+        }
+        let bbox = GridBox { min: Point(min), max: Point(max) };
+        let region = Region::from(bbox);
+
+        // Sender split: fragments with unique (sender, msg) and pilots.
+        let frags = random_partition(&mut rng, bbox, 4);
+        // Consumer split (split-receive mode only): an independent
+        // partition — random cases include geometry orthogonal to the
+        // sender split (§3.4 case c).
+        let is_split = rng.chance(0.5);
+        let awaits: Vec<GridBox> = if is_split {
+            random_partition(&mut rng, bbox, 2)
+        } else {
+            Vec::new()
+        };
+
+        let recv_id = InstructionId(1000);
+        let await_ids: Vec<InstructionId> =
+            (0..awaits.len() as u64).map(|i| InstructionId(2000 + i)).collect();
+        let transfer = crate::util::TaskId(7);
+        let dst = Arc::new(AllocBuf::new(bbox, 4));
+
+        // Event list. The receive always precedes its awaits (the IDAG
+        // dependency the executor enforces); everything else is free.
+        let mut events: Vec<Ev> = Vec::new();
+        for i in 0..frags.len() {
+            events.push(Ev::Pilot(i));
+            events.push(Ev::Data(i));
+        }
+        if forced_worst_case {
+            // All payloads first, then all pilots, then the receive, then
+            // the awaits: data-before-pilot AND fragment-before-receive.
+            events.clear();
+            for i in 0..frags.len() {
+                events.push(Ev::Data(i));
+            }
+            for i in 0..frags.len() {
+                events.push(Ev::Pilot(i));
+            }
+            events.push(Ev::Recv);
+            for i in 0..awaits.len() {
+                events.push(Ev::Await(i));
+            }
+        } else {
+            // Fisher–Yates over pilots+data, then insert the receive at a
+            // random position and the awaits at random positions after it.
+            for i in (1..events.len()).rev() {
+                events.swap(i, rng.next_below(i as u64 + 1) as usize);
+            }
+            let rpos = rng.next_below(events.len() as u64 + 1) as usize;
+            events.insert(rpos, Ev::Recv);
+            for i in 0..awaits.len() {
+                let pos = rng.next_range(rpos as u64 + 1, events.len() as u64) as usize;
+                events.insert(pos, Ev::Await(i));
+            }
+        }
+
+        let mut a = ReceiveArbiter::new();
+        let mut done: Vec<InstructionId> = Vec::new();
+        for ev in events {
+            match ev {
+                Ev::Recv => a.register_receive(
+                    recv_id,
+                    BufferId(0),
+                    transfer,
+                    region.clone(),
+                    dst.clone(),
+                    is_split,
+                ),
+                Ev::Await(i) => a.register_await(await_ids[i], recv_id, Region::from(awaits[i])),
+                Ev::Pilot(i) => a.on_pilot(Pilot {
+                    from: NodeId(1 + (i as u64 % 3)),
+                    to: NodeId(0),
+                    msg: MessageId(100 + i as u64),
+                    buffer: BufferId(0),
+                    send_box: frags[i],
+                    transfer,
+                }),
+                Ev::Data(i) => a.on_data(
+                    NodeId(1 + (i as u64 % 3)),
+                    MessageId(100 + i as u64),
+                    pattern_payload(&frags[i], seed),
+                ),
+            }
+            done.extend(a.take_completions());
+        }
+
+        // Every instruction completed, exactly once.
+        let mut expect: Vec<InstructionId> = vec![recv_id];
+        expect.extend(await_ids.iter().copied());
+        let mut got = done.clone();
+        got.sort();
+        got.dedup();
+        expect.sort();
+        assert_eq!(got, expect, "seed {seed}: completions");
+        assert_eq!(done.len(), expect.len(), "seed {seed}: duplicate completions");
+        assert!(a.is_idle(), "seed {seed}: arbiter not idle");
+
+        // Byte-exact reassembly: every fragment landed at its offset.
+        for f in &frags {
+            assert_eq!(
+                dst.read_box(f),
+                pattern_payload(f, seed),
+                "seed {seed}: bytes of fragment {f}"
+            );
+        }
+    }
+
+    #[test]
+    fn property_out_of_order_reassembly() {
+        for seed in 1..=60 {
+            run_out_of_order_case(seed, false);
+        }
+    }
+
+    #[test]
+    fn property_worst_case_order_data_pilots_receive_awaits() {
+        for seed in 1..=30 {
+            run_out_of_order_case(seed, true);
+        }
     }
 }

@@ -45,9 +45,15 @@
 //! - [`instruction`] — the IDAG: the paper's core contribution (§3)
 //! - [`scheduler`] — scheduler thread with lookahead / resize elision (§4.3)
 //! - [`executor`] — out-of-order engine, receive arbitration, baseline (§4.1–4.2)
-//! - [`comm`] — communicator: Isend/Irecv + pilot messages over channels
-//! - [`driver`] — the typed [`Queue`](driver::Queue) and the in-process
-//!   SPMD cluster runner
+//! - [`comm`] — the p2p subsystem: the [`Communicator`](comm::Communicator)
+//!   trait, the in-process [`ChannelWorld`](comm::ChannelWorld), the
+//!   loopback/cross-process [`TcpWorld`](comm::TcpWorld) with its
+//!   length-prefixed [`wire`](comm::wire) format, and the
+//!   [`Transport`](comm::Transport) selector
+//! - [`driver`] — the typed [`Queue`](driver::Queue), the in-process SPMD
+//!   cluster runner ([`run_cluster`](driver::run_cluster)) and the
+//!   per-process entry point ([`run_node`](driver::run_node)) used by
+//!   `celerity worker` for multi-process TCP clusters
 //! - `runtime` — PJRT wrapper executing AOT-compiled HLO kernels
 //!   (requires the `pjrt` feature and an XLA toolchain)
 //! - [`sim`] — discrete-event cluster simulator for the Fig 6 scaling study
@@ -70,8 +76,12 @@
 //!   once for the §4.3 lookahead, and emits one batched `SchedulerOut`.
 //!
 //! `cargo bench --bench micro_scheduler` measures each component and
-//! writes `BENCH_scheduler.json` (see the "Scheduler performance" section
-//! of the README).
+//! writes `BENCH_scheduler.local.json` (gitignored; CI redirects to the
+//! canonical `BENCH_scheduler.json` via `BENCH_SCHEDULER_JSON` and gates
+//! regressions with `scripts/bench_gate.py` — see the "Scheduler
+//! performance" section of the README). `cargo bench --bench
+//! strong_scaling` measures the live cluster across node counts and
+//! transports (see the "Distributed execution" section).
 
 pub mod apps;
 pub mod buffer;

@@ -1,21 +1,32 @@
-//! `celerity` CLI: graph dumps and quick simulations.
+//! `celerity` CLI: graph dumps, quick simulations, and live cluster runs.
 //!
 //! ```text
-//! celerity graph --app nbody --nodes 2 --devices 2 --dump tdag,cdag,idag
-//! celerity sim   --app rsim  --nodes 8 --devices 4 [--baseline] [--no-lookahead]
+//! celerity graph  --app nbody --nodes 2 --devices 2 --dump tdag,cdag,idag
+//! celerity sim    --app rsim  --nodes 8 --devices 4 [--baseline] [--no-lookahead]
+//! celerity run    --app wavesim --nodes 4 --transport tcp|channel
+//! celerity worker --app wavesim --node 1 --peers 127.0.0.1:7700,127.0.0.1:7701
 //! ```
 //!
 //! `graph` prints Graphviz dot for the requested intermediate
 //! representations of the chosen application (Fig 2 / Fig 4 artifacts);
 //! `sim` runs the discrete-event cluster simulator and reports the virtual
-//! makespan (one row of Fig 6).
+//! makespan (one row of Fig 6); `run` executes the app on the live
+//! in-process cluster with real bytes over the chosen transport; `worker`
+//! runs ONE node of a multi-process cluster over TCP — launch one worker
+//! per node with the same `--peers` list (order defines node ids) and
+//! compare the printed fence digests, which must agree across nodes and
+//! with a 1-node `run`.
 
+use celerity::apps;
 use celerity::command::{CdagGenerator, SplitHint};
+use celerity::comm::{CommRef, TcpCommunicator, Transport};
+use celerity::driver::{run_cluster, run_node, ClusterConfig, Queue};
 use celerity::grid::{GridBox, Range, Region};
 use celerity::instruction::{IdagConfig, IdagGenerator};
 use celerity::sim::{simulate, ExecModel, SimConfig};
 use celerity::task::{RangeMapper, TaskManager};
 use celerity::util::NodeId;
+use std::sync::{Arc, Mutex};
 
 fn build_app(tm: &mut TaskManager, app: &str, steps: u64) {
     match app {
@@ -77,6 +88,38 @@ fn build_app(tm: &mut TaskManager, app: &str, steps: u64) {
             std::process::exit(2);
         }
     }
+}
+
+/// Submit the chosen app on a live queue and fence its result buffer.
+fn run_live_app(q: &mut Queue, app: &str, steps: u64) -> Vec<u8> {
+    match app {
+        "nbody" => {
+            let (p, _v) = apps::nbody::submit(q, 1024, steps as usize).expect("submit nbody");
+            q.fence_bytes(p.id()).expect("fence P")
+        }
+        "rsim" => {
+            let (r, _vis) = apps::rsim::submit(q, steps.max(2), 256, false).expect("submit rsim");
+            q.fence_bytes(r.id()).expect("fence R")
+        }
+        "wavesim" => {
+            let out = apps::wavesim::submit(q, 64, 64, steps as usize).expect("submit wavesim");
+            q.fence_bytes(out.id()).expect("fence U")
+        }
+        other => {
+            eprintln!("unknown app '{other}' (expected nbody|rsim|wavesim)");
+            std::process::exit(2);
+        }
+    }
+}
+
+/// FNV-1a digest of a fence result — cheap cross-process comparison.
+fn digest(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in bytes {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
 }
 
 fn arg(args: &[String], key: &str, default: &str) -> String {
@@ -149,10 +192,88 @@ fn main() {
                 r.makespan, r.instructions, r.comm_bytes, r.resizes, r.allocated_bytes
             );
         }
+        "run" => {
+            let transport = Transport::parse(&arg(&args, "--transport", "channel"))
+                .unwrap_or_else(|| {
+                    eprintln!("unknown transport (expected channel|tcp)");
+                    std::process::exit(2);
+                });
+            let cfg = ClusterConfig {
+                num_nodes: nodes,
+                num_devices: devices,
+                registry: apps::reference_registry(),
+                transport,
+                ..Default::default()
+            };
+            let digests: Arc<Mutex<Vec<(u64, u64)>>> = Arc::new(Mutex::new(Vec::new()));
+            let dc = digests.clone();
+            let app_c = app.clone();
+            let t0 = std::time::Instant::now();
+            let reports = run_cluster(cfg, move |q| {
+                let bytes = run_live_app(q, &app_c, steps);
+                dc.lock().unwrap().push((q.node.0, digest(&bytes)));
+            });
+            let wall = t0.elapsed().as_secs_f64();
+            for r in &reports {
+                for e in &r.errors {
+                    eprintln!("node {} error: {e}", r.node);
+                }
+            }
+            let mut digests = digests.lock().unwrap().clone();
+            digests.sort();
+            for (node, d) in &digests {
+                println!("node {node} digest {d:016x}");
+            }
+            let agree = digests.windows(2).all(|w| w[0].1 == w[1].1);
+            println!(
+                "app={app} nodes={nodes} devices={devices} steps={steps} transport={} wall={wall:.3}s digests_agree={agree}",
+                transport.name()
+            );
+            if !agree || reports.iter().any(|r| !r.errors.is_empty()) {
+                std::process::exit(1);
+            }
+        }
+        "worker" => {
+            let node = NodeId(arg(&args, "--node", "0").parse().unwrap());
+            let peers_raw = arg(&args, "--peers", "");
+            let peers: Vec<std::net::SocketAddr> = peers_raw
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .map(|s| s.parse().expect("peer address host:port"))
+                .collect();
+            if peers.len() < 2 || node.0 as usize >= peers.len() {
+                eprintln!("worker needs --peers a,b,... (>= 2 addresses) and --node < len(peers)");
+                std::process::exit(2);
+            }
+            let cfg = ClusterConfig {
+                num_nodes: peers.len() as u64,
+                num_devices: devices,
+                registry: apps::reference_registry(),
+                transport: Transport::Tcp,
+                ..Default::default()
+            };
+            let comm: CommRef =
+                Arc::new(TcpCommunicator::bind(node, peers).expect("bind worker listener"));
+            let app_c = app.clone();
+            let out: Arc<Mutex<Vec<u8>>> = Arc::new(Mutex::new(Vec::new()));
+            let oc = out.clone();
+            let report = run_node(&cfg, node, comm, move |q| {
+                *oc.lock().unwrap() = run_live_app(q, &app_c, steps);
+            });
+            for e in &report.errors {
+                eprintln!("node {} error: {e}", report.node);
+            }
+            println!("node {} digest {:016x}", node, digest(&out.lock().unwrap()));
+            if !report.errors.is_empty() {
+                std::process::exit(1);
+            }
+        }
         _ => {
-            println!("usage: celerity graph|sim --app nbody|rsim|wavesim [--nodes N] [--devices D] [--steps S]");
-            println!("  graph: --dump tdag,cdag,idag   (Graphviz dot on stdout)");
-            println!("  sim:   [--baseline] [--no-lookahead]");
+            println!("usage: celerity graph|sim|run|worker --app nbody|rsim|wavesim [--nodes N] [--devices D] [--steps S]");
+            println!("  graph:  --dump tdag,cdag,idag   (Graphviz dot on stdout)");
+            println!("  sim:    [--baseline] [--no-lookahead]");
+            println!("  run:    [--transport channel|tcp]   (live in-process cluster)");
+            println!("  worker: --node I --peers a:p,b:p,...   (one node of a multi-process TCP cluster)");
         }
     }
 }

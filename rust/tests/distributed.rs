@@ -1,0 +1,149 @@
+//! Cross-transport distributed-execution tests.
+//!
+//! The transport is a pluggable fabric underneath the exact same
+//! pilot/receive-arbitration protocol, so the application-visible results
+//! must be *byte-identical* across (a) transports and (b) cluster sizes:
+//! wavesim is a float stencil whose per-element operation order is fixed
+//! by the kernel, making bitwise equality the right bar (any divergence
+//! means a fragment landed at the wrong offset or a transfer was dropped).
+
+use celerity::apps::{self, wavesim};
+use celerity::comm::{CommRef, TcpWorld, Transport};
+use celerity::driver::{run_cluster, run_node, ClusterConfig};
+use celerity::util::NodeId;
+use std::sync::{Arc, Mutex};
+
+const ROWS: u64 = 32;
+const COLS: u64 = 16;
+const STEPS: usize = 4;
+
+/// Run wavesim on a live cluster and return every node's fence bytes.
+fn wavesim_fences(transport: Transport, nodes: u64, devices: u64) -> Vec<Vec<u8>> {
+    let cfg = ClusterConfig {
+        num_nodes: nodes,
+        num_devices: devices,
+        registry: apps::reference_registry(),
+        transport,
+        ..Default::default()
+    };
+    let results: Arc<Mutex<Vec<Vec<u8>>>> = Arc::new(Mutex::new(Vec::new()));
+    let rc = results.clone();
+    let reports = run_cluster(cfg, move |q| {
+        let out = wavesim::submit(q, ROWS, COLS, STEPS).expect("submit wavesim");
+        let bytes = q.fence_bytes(out.id()).expect("fence");
+        rc.lock().unwrap().push(bytes);
+    });
+    for r in &reports {
+        assert!(
+            r.errors.is_empty(),
+            "{} nodes over {}: node {} errors: {:?}",
+            nodes,
+            transport.name(),
+            r.node,
+            r.errors
+        );
+    }
+    let results = results.lock().unwrap().clone();
+    assert_eq!(results.len(), nodes as usize);
+    let bytes = ROWS * COLS * 4;
+    for (i, f) in results.iter().enumerate() {
+        assert_eq!(f.len() as u64, bytes, "node {i} fence size");
+    }
+    results
+}
+
+/// All nodes of one run must agree among themselves (each node fences the
+/// full field, assembled from every peer's fragments).
+fn assert_all_equal(fences: &[Vec<u8>], what: &str) {
+    for (i, f) in fences.iter().enumerate() {
+        assert_eq!(
+            f.as_slice(),
+            fences[0].as_slice(),
+            "{what}: node {i} fence differs from node 0"
+        );
+    }
+}
+
+#[test]
+fn wavesim_2_nodes_identical_across_transports() {
+    let chan = wavesim_fences(Transport::Channel, 2, 2);
+    let tcp = wavesim_fences(Transport::Tcp, 2, 2);
+    assert_all_equal(&chan, "channel 2-node");
+    assert_all_equal(&tcp, "tcp 2-node");
+    assert_eq!(
+        chan[0], tcp[0],
+        "ChannelWorld and TCP transports must produce identical fence results"
+    );
+}
+
+/// Acceptance criterion: wavesim on 4 simulated nodes yields fence results
+/// byte-identical to the 1-node run, over both transports.
+#[test]
+fn wavesim_4_nodes_byte_identical_to_single_node_both_transports() {
+    let single = wavesim_fences(Transport::Channel, 1, 2);
+    for transport in [Transport::Channel, Transport::Tcp] {
+        let four = wavesim_fences(transport, 4, 2);
+        assert_all_equal(&four, transport.name());
+        assert_eq!(
+            four[0],
+            single[0],
+            "4-node {} run must be byte-identical to the 1-node run",
+            transport.name()
+        );
+    }
+}
+
+/// The per-process entry point (`run_node` + an explicitly-built TCP
+/// communicator — what each `celerity worker` process executes) produces
+/// the same bytes as the `run_cluster` convenience path.
+#[test]
+fn run_node_over_explicit_tcp_endpoints_matches_cluster() {
+    let cfg = ClusterConfig {
+        num_nodes: 2,
+        num_devices: 2,
+        registry: apps::reference_registry(),
+        transport: Transport::Tcp,
+        ..Default::default()
+    };
+    let comms = TcpWorld::bind_local(2).expect("bind mesh").communicators();
+    let mut joins = Vec::new();
+    for (i, comm) in comms.into_iter().enumerate() {
+        let cfg = cfg.clone();
+        joins.push(std::thread::spawn(move || {
+            let comm: CommRef = Arc::new(comm);
+            let fence: Arc<Mutex<Vec<u8>>> = Arc::new(Mutex::new(Vec::new()));
+            let fc = fence.clone();
+            let report = run_node(&cfg, NodeId(i as u64), comm, move |q| {
+                let out = wavesim::submit(q, ROWS, COLS, STEPS).expect("submit wavesim");
+                *fc.lock().unwrap() = q.fence_bytes(out.id()).expect("fence");
+            });
+            assert!(report.errors.is_empty(), "node {i}: {:?}", report.errors);
+            let bytes = fence.lock().unwrap().clone();
+            bytes
+        }));
+    }
+    let fences: Vec<Vec<u8>> = joins.into_iter().map(|j| j.join().expect("node")).collect();
+    assert_all_equal(&fences, "run_node tcp");
+    let via_cluster = wavesim_fences(Transport::Channel, 1, 2);
+    assert_eq!(fences[0], via_cluster[0], "run_node path must match run_cluster");
+}
+
+/// The golden model agrees too (guards against a bug identical on all
+/// cluster shapes).
+#[test]
+fn wavesim_cluster_matches_reference_model() {
+    let got = wavesim_fences(Transport::Tcp, 2, 2);
+    let want = wavesim::reference(ROWS as usize, COLS as usize, STEPS);
+    let got_f32: Vec<f32> = got[0]
+        .chunks_exact(4)
+        .map(|c| f32::from_ne_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    for i in 0..want.len() {
+        assert!(
+            (got_f32[i] - want[i]).abs() < 1e-4,
+            "element {i}: {} vs {}",
+            got_f32[i],
+            want[i]
+        );
+    }
+}

@@ -1,0 +1,122 @@
+#!/usr/bin/env python3
+"""Bench regression gate: compare a fresh bench JSON against the committed
+baseline and fail on a significant throughput drop.
+
+Usage:
+    bench_gate.py BASELINE.json FRESH.json [--threshold 0.25]
+
+Semantics:
+  - Baselines whose "git_rev" is "unmeasured" are schema placeholders (the
+    repo has never been benchmarked on a real machine): the gate SKIPS and
+    exits 0, printing why.
+  - Otherwise every component present in the baseline must reach at least
+    (1 - threshold) x its baseline "ops_per_s" in the fresh run. A component
+    missing from the fresh run is a failure (a silently-dropped benchmark
+    must not pass the gate); components only present in the fresh run are
+    reported but do not fail.
+  - Works on any schema that stores [{"name"/"app"..., "ops_per_s"/"cells_per_s"}]
+    rows under "components" or "rows" (micro_scheduler and strong_scaling).
+
+Exit codes: 0 ok/skip, 1 regression, 2 usage or malformed input.
+"""
+
+import json
+import sys
+
+
+def rows(doc):
+    """Normalize a bench document to {key: throughput}."""
+    out = {}
+    for row in doc.get("components", []) + doc.get("rows", []):
+        if "name" in row:
+            key = row["name"]
+        else:
+            key = "{}/{}/{}n".format(
+                row.get("app", "?"), row.get("transport", "?"), row.get("nodes", "?")
+            )
+        thr = row.get("ops_per_s", row.get("cells_per_s"))
+        if thr is not None:
+            out[key] = float(thr)
+    return out
+
+
+def main(argv):
+    args = []
+    threshold = 0.25
+    it = iter(argv[1:])
+    for a in it:
+        if a.startswith("--threshold"):
+            threshold = float(a.split("=", 1)[1]) if "=" in a else float(next(it))
+        elif a.startswith("--"):
+            print(f"bench_gate: unknown flag {a}", file=sys.stderr)
+            return 2
+        else:
+            args.append(a)
+    if len(args) != 2:
+        print(__doc__, file=sys.stderr)
+        return 2
+    baseline_path, fresh_path = args
+
+    try:
+        with open(baseline_path) as f:
+            baseline = json.load(f)
+        with open(fresh_path) as f:
+            fresh = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"bench_gate: cannot read inputs: {e}", file=sys.stderr)
+        return 2
+
+    if baseline.get("git_rev") == "unmeasured":
+        print(
+            "bench_gate: SKIP - committed baseline is the 'unmeasured' schema "
+            "placeholder; nothing to compare against yet. To arm the gate, "
+            "capture a QUICK-mode baseline (CI compares quick runs): "
+            "BENCH_QUICK=1 BENCH_SCHEDULER_JSON=<repo>/BENCH_scheduler.json "
+            "cargo bench --bench micro_scheduler, then commit the file."
+        )
+        return 0
+    if baseline.get("quick") != fresh.get("quick"):
+        print(
+            "bench_gate: SKIP - baseline quick={} vs fresh quick={}; "
+            "quick and full runs are not comparable. CI runs quick mode, so "
+            "the committed baseline must be captured with BENCH_QUICK=1 for "
+            "the gate to arm.".format(baseline.get("quick"), fresh.get("quick"))
+        )
+        return 0
+
+    base_rows = rows(baseline)
+    fresh_rows = rows(fresh)
+    if not base_rows:
+        print("bench_gate: SKIP - baseline has no measured rows.")
+        return 0
+
+    failures = []
+    print(
+        f"bench_gate: comparing {len(base_rows)} baseline rows "
+        f"(threshold: {threshold:.0%} drop) "
+        f"[baseline {baseline.get('git_rev')} vs fresh {fresh.get('git_rev')}]"
+    )
+    for key, base_thr in sorted(base_rows.items()):
+        got = fresh_rows.get(key)
+        if got is None:
+            failures.append(f"{key}: missing from fresh run")
+            continue
+        ratio = got / base_thr if base_thr > 0 else float("inf")
+        status = "OK " if ratio >= 1.0 - threshold else "FAIL"
+        print(f"  {status} {key}: {base_thr:.0f} -> {got:.0f} ({ratio:.2f}x)")
+        if ratio < 1.0 - threshold:
+            failures.append(f"{key}: {base_thr:.0f} -> {got:.0f} ops/s ({ratio:.2f}x)")
+    for key in sorted(set(fresh_rows) - set(base_rows)):
+        print(f"  NEW {key}: {fresh_rows[key]:.0f} (no baseline)")
+
+    if failures:
+        print("\nbench_gate: REGRESSION", file=sys.stderr)
+        for f_ in failures:
+            print(f"  {f_}", file=sys.stderr)
+        return 1
+    print("bench_gate: all components within threshold.")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

@@ -1,0 +1,141 @@
+#!/usr/bin/env python3
+"""Self-test for bench_gate.py: runs the gate against known-pass /
+known-fail / must-skip fixture documents and checks the exit codes.
+
+CI runs this before the real gate so a regression in the gate's own logic
+(skip conditions, row normalization, threshold math) cannot silently turn
+the bench gate into a no-op.
+
+    python3 scripts/test_bench_gate.py
+"""
+
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+GATE = os.path.join(os.path.dirname(os.path.abspath(__file__)), "bench_gate.py")
+
+
+def run_gate(baseline, fresh, extra=()):
+    with tempfile.TemporaryDirectory() as d:
+        bp = os.path.join(d, "baseline.json")
+        fp = os.path.join(d, "fresh.json")
+        with open(bp, "w") as f:
+            json.dump(baseline, f)
+        with open(fp, "w") as f:
+            json.dump(fresh, f)
+        r = subprocess.run(
+            [sys.executable, GATE, bp, fp, *extra],
+            capture_output=True,
+            text=True,
+        )
+        return r.returncode, r.stdout + r.stderr
+
+
+def doc(rev, quick, components=None, rows=None):
+    d = {"bench": "x", "schema": 1, "git_rev": rev, "quick": quick}
+    if components is not None:
+        d["components"] = components
+    if rows is not None:
+        d["rows"] = rows
+    return d
+
+
+def check(name, got, want, output):
+    if got != want:
+        print(f"FAIL {name}: exit {got}, wanted {want}\n{output}")
+        return False
+    print(f"ok   {name}")
+    return True
+
+
+def main():
+    comp = lambda n, t: {"name": n, "ops_per_s": t}
+    cases = [
+        # (name, baseline, fresh, extra args, expected exit)
+        (
+            "unmeasured placeholder skips",
+            doc("unmeasured", False, components=[]),
+            doc("abc", True, components=[comp("a", 1.0)]),
+            (),
+            0,
+        ),
+        (
+            "within threshold passes",
+            doc("abc", True, components=[comp("a", 1000), comp("b", 500)]),
+            doc("def", True, components=[comp("a", 800), comp("b", 400)]),
+            (),
+            0,
+        ),
+        (
+            ">25% drop fails",
+            doc("abc", True, components=[comp("a", 1000)]),
+            doc("def", True, components=[comp("a", 700)]),
+            (),
+            1,
+        ),
+        (
+            "missing component fails",
+            doc("abc", True, components=[comp("a", 1000), comp("gone", 10)]),
+            doc("def", True, components=[comp("a", 1000)]),
+            (),
+            1,
+        ),
+        (
+            "extra fresh component tolerated",
+            doc("abc", True, components=[comp("a", 1000)]),
+            doc("def", True, components=[comp("a", 1000), comp("new", 1)]),
+            (),
+            0,
+        ),
+        (
+            "quick/full mismatch skips",
+            doc("abc", False, components=[comp("a", 1000)]),
+            doc("def", True, components=[comp("a", 1)]),
+            (),
+            0,
+        ),
+        (
+            "custom threshold",
+            doc("abc", True, components=[comp("a", 1000)]),
+            doc("def", True, components=[comp("a", 900)]),
+            ("--threshold", "0.05"),
+            1,
+        ),
+        (
+            "strong_scaling rows schema",
+            doc(
+                "abc",
+                True,
+                rows=[{"app": "nbody", "transport": "tcp", "nodes": 2, "cells_per_s": 100.0}],
+            ),
+            doc(
+                "def",
+                True,
+                rows=[{"app": "nbody", "transport": "tcp", "nodes": 2, "cells_per_s": 50.0}],
+            ),
+            (),
+            1,
+        ),
+        (
+            "empty measured baseline skips",
+            doc("abc", True, components=[]),
+            doc("def", True, components=[comp("a", 1)]),
+            (),
+            0,
+        ),
+    ]
+    ok = True
+    for name, baseline, fresh, extra, want in cases:
+        got, output = run_gate(baseline, fresh, extra)
+        ok &= check(name, got, want, output)
+    if not ok:
+        return 1
+    print("bench_gate self-test: all cases passed.")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
