@@ -157,8 +157,11 @@ fn main() {
         total
     });
 
-    // 3. CDAG generation throughput at 32 nodes (the distributed split).
-    bench(res, repeats, "cdag generation (nbody, node 0 of 32)", || {
+    // 3. CDAG generation throughput at 32 nodes (the distributed split) —
+    //    once with the original p2p lowering (n−1 pushes per step) and once
+    //    with collective lowering (one command + the pattern check), so the
+    //    gate tracks both paths.
+    let cdag_nbody = |collectives: bool, scale: u64| {
         let steps = 50 / scale.min(5);
         let mut tm = TaskManager::new();
         let range = Range::d1(1 << 16);
@@ -180,12 +183,19 @@ fn main() {
         }
         let tasks = tm.take_new_tasks();
         let mut cg = CdagGenerator::new(NodeId(0), 32, SplitHint::D1, tm.buffers().clone());
+        cg.set_collectives(collectives);
         let mut total = 0;
         for t in &tasks {
             cg.compile(t);
             total += cg.take_new_commands().len() as u64;
         }
         total
+    };
+    bench(res, repeats, "cdag generation (nbody p2p, node 0 of 32)", || {
+        cdag_nbody(false, scale)
+    });
+    bench(res, repeats, "cdag generation (nbody collective, node 0 of 32)", || {
+        cdag_nbody(true, scale)
     });
 
     // 4. spsc queue round trip (the Fig-5 thread fabric).

@@ -8,7 +8,9 @@
 //! at 1/2/4/8 simulated nodes over both transports (in-process channels
 //! and loopback TCP). It measures what the simulator cannot: executor
 //! latency, receive-arbitration overhead and the wire cost of the pilot
-//! protocol.
+//! protocol. nbody — the all-gather workload — additionally runs a
+//! collectives-on/off ablation ("nbody" vs "nbody-p2p" rows): ring
+//! lowering vs the original O(n²) push/await-push pairs.
 //!
 //!     cargo bench --bench strong_scaling            # full run
 //!     BENCH_QUICK=1 cargo bench --bench strong_scaling   # CI smoke: 1+2 nodes
@@ -27,15 +29,19 @@ use celerity::driver::{run_cluster, ClusterConfig, Queue};
 use std::time::Instant;
 
 struct Row {
-    app: &'static str,
+    /// App name; the collectives-off ablation suffixes "-p2p" so the bench
+    /// gate keys the two lowerings separately.
+    app: String,
     transport: Transport,
     nodes: u64,
     devices: u64,
+    /// Collective-group lowering enabled for this row?
+    collectives: bool,
     wall_s: f64,
     /// Total grid-cell updates performed by the workload (throughput unit).
     cells: u64,
     cells_per_s: f64,
-    /// Speedup vs the same app+transport at 1 node.
+    /// Speedup vs the same app+transport+lowering at 1 node.
     speedup_vs_1: f64,
 }
 
@@ -84,12 +90,19 @@ fn workloads(quick: bool) -> Vec<Workload> {
     ]
 }
 
-fn run_once(w: &Workload, transport: Transport, nodes: u64, devices: u64) -> f64 {
+fn run_once(
+    w: &Workload,
+    transport: Transport,
+    nodes: u64,
+    devices: u64,
+    collectives: bool,
+) -> f64 {
     let cfg = ClusterConfig {
         num_nodes: nodes,
         num_devices: devices,
         registry: apps::reference_registry(),
         transport,
+        collectives,
         ..Default::default()
     };
     let submit = w.submit.clone();
@@ -108,11 +121,12 @@ fn write_json(rows: &[Row], quick: bool) {
     s.push_str("  \"rows\": [\n");
     for (i, r) in rows.iter().enumerate() {
         s.push_str(&format!(
-            "    {{\"app\": \"{}\", \"transport\": \"{}\", \"nodes\": {}, \"devices\": {}, \"wall_s\": {:.6}, \"cells\": {}, \"cells_per_s\": {:.1}, \"speedup_vs_1\": {:.3}}}{}\n",
+            "    {{\"app\": \"{}\", \"transport\": \"{}\", \"nodes\": {}, \"devices\": {}, \"collectives\": {}, \"wall_s\": {:.6}, \"cells\": {}, \"cells_per_s\": {:.1}, \"speedup_vs_1\": {:.3}}}{}\n",
             r.app,
             r.transport.name(),
             r.nodes,
             r.devices,
+            r.collectives,
             r.wall_s,
             r.cells,
             r.cells_per_s,
@@ -138,44 +152,56 @@ fn main() {
 
     println!("== strong_scaling: live cluster, both transports ==");
     println!(
-        "{:>8} {:>9} {:>6} {:>10} {:>14} {:>9}",
-        "app", "transport", "nodes", "wall (s)", "cells/s", "speedup"
+        "{:>10} {:>9} {:>6} {:>11} {:>10} {:>14} {:>9}",
+        "app", "transport", "nodes", "collectives", "wall (s)", "cells/s", "speedup"
     );
     let mut rows: Vec<Row> = Vec::new();
     for w in &workloads(quick) {
         if !filter.is_empty() && filter != w.app {
             continue;
         }
-        for &transport in &[Transport::Channel, Transport::Tcp] {
-            let mut base = f64::NAN;
-            for &nodes in node_counts {
-                let wall = run_once(w, transport, nodes, devices);
-                if nodes == 1 {
-                    base = wall;
+        // Collectives-on/off ablation: only nbody's all-gather pattern
+        // triggers collective lowering, so only it gets the off-variant —
+        // keyed "nbody-p2p" so the bench gate tracks both lowerings.
+        let variants: &[bool] = if w.app == "nbody" { &[true, false] } else { &[true] };
+        for &collectives in variants {
+            for &transport in &[Transport::Channel, Transport::Tcp] {
+                let mut base = f64::NAN;
+                for &nodes in node_counts {
+                    let wall = run_once(w, transport, nodes, devices, collectives);
+                    if nodes == 1 {
+                        base = wall;
+                    }
+                    let row = Row {
+                        app: if collectives {
+                            w.app.to_string()
+                        } else {
+                            format!("{}-p2p", w.app)
+                        },
+                        transport,
+                        nodes,
+                        devices,
+                        collectives,
+                        wall_s: wall,
+                        cells: w.cells,
+                        cells_per_s: w.cells as f64 / wall,
+                        speedup_vs_1: base / wall,
+                    };
+                    println!(
+                        "{:>10} {:>9} {:>6} {:>11} {:>10.4} {:>14.0} {:>9.2}",
+                        row.app,
+                        row.transport.name(),
+                        row.nodes,
+                        row.collectives,
+                        row.wall_s,
+                        row.cells_per_s,
+                        row.speedup_vs_1
+                    );
+                    rows.push(row);
                 }
-                let row = Row {
-                    app: w.app,
-                    transport,
-                    nodes,
-                    devices,
-                    wall_s: wall,
-                    cells: w.cells,
-                    cells_per_s: w.cells as f64 / wall,
-                    speedup_vs_1: base / wall,
-                };
-                println!(
-                    "{:>8} {:>9} {:>6} {:>10.4} {:>14.0} {:>9.2}",
-                    row.app,
-                    row.transport.name(),
-                    row.nodes,
-                    row.wall_s,
-                    row.cells_per_s,
-                    row.speedup_vs_1
-                );
-                rows.push(row);
             }
         }
     }
-    println!("\n(live run with reference kernels: wall time includes scheduling, transfers and the transport; tiny problem sizes mean sub-linear speedup is expected — the claim is the *trend* and the channel-vs-tcp delta)");
+    println!("\n(live run with reference kernels: wall time includes scheduling, transfers and the transport; tiny problem sizes mean sub-linear speedup is expected — the claim is the *trend*, the channel-vs-tcp delta, and nbody's collectives-vs-p2p delta)");
     write_json(&rows, quick);
 }

@@ -72,16 +72,36 @@ impl Communicator for ChannelCommunicator {
         if super::comm_trace() {
             eprintln!("[comm] {} pilot {} {} t{} -> {}", self.node, pilot.msg, pilot.send_box, pilot.transfer.0, pilot.to);
         }
+        // Out-of-range node ids (stale config) are reported and dropped —
+        // same as the TCP fabric — instead of panicking the sender.
+        let Some(peer) = self.peers.get(to) else {
+            eprintln!(
+                "[comm] {} pilot to {} dropped: node id out of range for this {}-node cluster",
+                self.node,
+                pilot.to,
+                self.peers.len()
+            );
+            return;
+        };
         // A dropped peer means that node already shut down; losing the
         // pilot is then inconsequential.
-        let _ = self.peers[to].send(Inbound::Pilot(pilot));
+        let _ = peer.send(Inbound::Pilot(pilot));
     }
 
     fn send_data(&self, to: NodeId, msg: MessageId, bytes: Vec<u8>) {
         if super::comm_trace() {
             eprintln!("[comm] {} data {} ({}B) -> {}", self.node, msg, bytes.len(), to);
         }
-        let _ = self.peers[to.0 as usize].send(Inbound::Data { from: self.node, msg, bytes });
+        let Some(peer) = self.peers.get(to.0 as usize) else {
+            eprintln!(
+                "[comm] {} data to {} dropped: node id out of range for this {}-node cluster",
+                self.node,
+                to,
+                self.peers.len()
+            );
+            return;
+        };
+        let _ = peer.send(Inbound::Data { from: self.node, msg, bytes });
     }
 
     fn poll(&self) -> Option<Inbound> {
@@ -176,5 +196,24 @@ mod tests {
     #[should_panic(expected = "single-node")]
     fn null_communicator_rejects_sends() {
         NullCommunicator(NodeId(0)).send_data(NodeId(0), MessageId(0), vec![]);
+    }
+
+    /// Out-of-range node ids are dropped with a report, not a panic
+    /// (mirrors the TCP fabric's stale-config behavior).
+    #[test]
+    fn send_to_out_of_range_node_is_dropped() {
+        let mut world = ChannelWorld::new(2);
+        let c0 = world.communicator(NodeId(0));
+        let c1 = world.communicator(NodeId(1));
+        c0.send_data(NodeId(9), MessageId(0), vec![1]);
+        c0.send_pilot(pilot(0, 9, 1));
+        c0.send_data(NodeId(1), MessageId(2), vec![7]);
+        match c1.poll().unwrap() {
+            Inbound::Data { msg, bytes, .. } => {
+                assert_eq!(msg, MessageId(2));
+                assert_eq!(bytes, vec![7]);
+            }
+            other => panic!("{other:?}"),
+        }
     }
 }

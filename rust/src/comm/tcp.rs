@@ -128,6 +128,18 @@ impl TcpCommunicator {
     /// swallowed like the channel transport's dropped-peer sends: a peer
     /// that cannot be reached anymore has already shut down.
     fn send_frame(&self, to: NodeId, frame: &[u8]) {
+        // A node id beyond the peer list (stale config, wrong --peers
+        // order) must not panic a reader/executor thread: report and drop
+        // the frame like any other unreachable-peer send.
+        if to.0 as usize >= self.outbound.len() {
+            eprintln!(
+                "[comm] {} send to {} dropped: node id out of range for this {}-node cluster (stale config?)",
+                self.node,
+                to,
+                self.peers.len()
+            );
+            return;
+        }
         let mut slot = self.outbound[to.0 as usize].lock().unwrap();
         if slot.is_none() {
             *slot = connect_with_retry(self.peers[to.0 as usize], self.connect_deadline);
@@ -363,6 +375,26 @@ mod tests {
             seen.sort();
             let want: Vec<u64> = (0..3).filter(|k| *k != j as u64).collect();
             assert_eq!(seen, want);
+        }
+    }
+
+    /// Regression: an out-of-range `NodeId` (stale cluster config) used to
+    /// index `outbound` unchecked and panic the sending thread; it must be
+    /// reported and dropped through the unreachable-peer path instead.
+    #[test]
+    fn send_to_out_of_range_node_is_dropped_not_fatal() {
+        let world = TcpWorld::bind_local(2).unwrap();
+        let comms = world.communicators();
+        comms[0].send_data(NodeId(5), MessageId(1), vec![1, 2, 3]);
+        comms[0].send_pilot(pilot(0, 7, 2));
+        // The in-range peer still works afterwards.
+        comms[0].send_data(NodeId(1), MessageId(3), vec![9]);
+        match poll_one(&comms[1]) {
+            Inbound::Data { msg, bytes, .. } => {
+                assert_eq!(msg, MessageId(3));
+                assert_eq!(bytes, vec![9]);
+            }
+            other => panic!("{other:?}"),
         }
     }
 

@@ -55,6 +55,27 @@ impl NodeSet {
     }
 }
 
+/// Which collective pattern a [`CommandKind::Collective`] implements.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CollectiveKind {
+    /// Every node owns a disjoint slice and every node needs the full
+    /// region (N-body's position broadcast): n·(n−1) p2p pushes collapse
+    /// into n−1 ring rounds.
+    AllGather,
+    /// One node owns the entire region and every node needs it: the ring
+    /// degenerates into a pipeline rooted at the owner.
+    Broadcast,
+}
+
+impl CollectiveKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            CollectiveKind::AllGather => "all-gather",
+            CollectiveKind::Broadcast => "broadcast",
+        }
+    }
+}
+
 /// What a command does. One node's view: execution of its kernel chunk plus
 /// the communication that chunk requires.
 #[derive(Debug, Clone)]
@@ -67,6 +88,20 @@ pub enum CommandKind {
     /// Await inbound transfers covering `region` of `buffer`. Senders and
     /// per-sender geometry are *unknown* until pilot messages arrive (§3.4).
     AwaitPush { buffer: BufferId, region: Region },
+    /// Group communication detected from the CDAG geometry: `region` of
+    /// `buffer` is gathered so every node ends up with all of it. Replaces
+    /// this node's n−1 pushes *and* its await-push with one command;
+    /// `slices[i]` is the slice node *i* contributes (empty for
+    /// non-owners). Executed as a ring schedule over the ordinary
+    /// pilot/send primitives (n−1 rounds), so no transport changes are
+    /// needed. Emitted only when the exact pattern check passes — every
+    /// other geometry falls back to p2p push/await-push.
+    Collective {
+        buffer: BufferId,
+        region: Region,
+        kind: CollectiveKind,
+        slices: Arc<Vec<GridBox>>,
+    },
     /// Scheduling-complexity bound (§3.5).
     Horizon,
     /// Graph-based synchronization with the main thread.
@@ -99,6 +134,9 @@ impl Command {
             }
             CommandKind::AwaitPush { buffer, region } => {
                 format!("{} await {buffer} {region}", self.id)
+            }
+            CommandKind::Collective { buffer, region, kind, .. } => {
+                format!("{} {} {buffer} {region}", self.id, kind.name())
             }
             CommandKind::Horizon => format!("{} horizon", self.id),
             CommandKind::Epoch(a) => format!("{} epoch {a:?}", self.id),
@@ -159,6 +197,12 @@ pub struct CdagGenerator {
     errors: Vec<CommandError>,
     current_horizon: Option<CommandId>,
     last_epoch: Option<CommandId>,
+    /// Lower detected all-gather/broadcast patterns to
+    /// [`CommandKind::Collective`] instead of p2p pairs. On by default;
+    /// turned off for the p2p-identity tests and the bench ablation.
+    collectives: bool,
+    /// Statistics: collective commands emitted (ablation metric).
+    pub collectives_emitted: u64,
 }
 
 impl CdagGenerator {
@@ -175,7 +219,14 @@ impl CdagGenerator {
             errors: Vec::new(),
             current_horizon: None,
             last_epoch: None,
+            collectives: true,
+            collectives_emitted: 0,
         }
+    }
+
+    /// Enable or disable collective-group lowering (default: enabled).
+    pub fn set_collectives(&mut self, enabled: bool) {
+        self.collectives = enabled;
     }
 
     /// Register a buffer created after generator construction (streaming
@@ -286,11 +337,97 @@ impl CdagGenerator {
             }
         }
 
+        // 0. Collective detection (ROADMAP "collective groups"): when every
+        //    chunk consumes the *same* region of a buffer whose elements are
+        //    each held exclusively by their owner, the p2p lowering would
+        //    emit n−1 pushes + 1 await-push on every node — O(n²) transfers
+        //    cluster-wide. Lower the whole exchange to one Collective
+        //    command per node instead; anything that fails the pattern
+        //    check keeps the precise p2p path.
+        let mut collective_bufs: std::collections::HashSet<BufferId> =
+            std::collections::HashSet::new();
+        if self.collectives && self.num_nodes >= 2 {
+            for a in &accesses {
+                if !a.mode.is_consumer() || a.mode.is_producer() {
+                    continue;
+                }
+                // Exactly one consumer access of this buffer in the task: a
+                // second access could consume a different region and break
+                // the geometry argument below.
+                if accesses
+                    .iter()
+                    .filter(|b| b.buffer == a.buffer && b.mode.is_consumer())
+                    .count()
+                    != 1
+                {
+                    continue;
+                }
+                let info = self.buffers.get(a.buffer).clone();
+                let Some((region, slices, kind)) =
+                    self.detect_collective(a, &chunks, range, info.range)
+                else {
+                    continue;
+                };
+                let buffer = a.buffer;
+                let own = Region::from(slices[self.node.0 as usize]);
+                let inbound = region.difference(&own);
+                // Dependencies mirror the p2p pair this replaces: dataflow
+                // on the producers of our contribution (push semantics),
+                // anti-dependencies against local commands still touching
+                // the bytes the inbound slices overwrite (await semantics).
+                let mut deps: Vec<(CommandId, DepKind)> = Vec::new();
+                {
+                    let st = &self.states[&buffer];
+                    st.last_writer_cmd.for_each_in_region(&own, |_, w| {
+                        if let Some(w) = w {
+                            push_dep(&mut deps, *w, DepKind::Dataflow);
+                        }
+                    });
+                    st.readers_since.for_each_in_region(&inbound, |_, readers| {
+                        for r in readers {
+                            push_dep(&mut deps, *r, DepKind::Anti);
+                        }
+                    });
+                    st.last_writer_cmd.for_each_in_region(&inbound, |_, w| {
+                        if let Some(w) = w {
+                            push_dep(&mut deps, *w, DepKind::Anti);
+                        }
+                    });
+                }
+                let id = self.push_command(
+                    task,
+                    CommandKind::Collective {
+                        buffer,
+                        region: region.clone(),
+                        kind,
+                        slices: Arc::new(slices),
+                    },
+                    deps,
+                );
+                self.collectives_emitted += 1;
+                // Local tracking: the collective produces the inbound bytes
+                // (await-push role) and reads our owned slice (push role).
+                let st = self.states.get_mut(&buffer).unwrap();
+                if !inbound.is_empty() {
+                    st.last_writer_cmd.update_region(&inbound, Some(id));
+                    st.readers_since.update_region(&inbound, Vec::new());
+                }
+                if !own.is_empty() {
+                    st.readers_since.apply_to_region(&own, |rs| {
+                        let mut rs = rs.clone();
+                        rs.push(id);
+                        rs
+                    });
+                }
+                collective_bufs.insert(buffer);
+            }
+        }
+
         // 1. Inbound: regions my chunk consumes that are neither produced
         //    here nor already replicated here → one await-push per buffer.
         let mut await_cmds: HashMap<BufferId, CommandId> = HashMap::new();
         for a in &accesses {
-            if !a.mode.is_consumer() {
+            if !a.mode.is_consumer() || collective_bufs.contains(&a.buffer) {
                 continue;
             }
             let info = self.buffers.get(a.buffer).clone();
@@ -340,7 +477,7 @@ impl CdagGenerator {
         // 2. Outbound: regions peer chunks consume that *we* own and the
         //    peer does not replicate → one push per (buffer, peer).
         for a in &accesses {
-            if !a.mode.is_consumer() {
+            if !a.mode.is_consumer() || collective_bufs.contains(&a.buffer) {
                 continue;
             }
             let info = self.buffers.get(a.buffer).clone();
@@ -479,6 +616,76 @@ impl CdagGenerator {
         }
     }
 
+    /// Check one consumer access against the collective-group geometry:
+    /// every chunk consumes the identical non-empty region, and every
+    /// element of that region is replicated *only* on its owner, whose
+    /// slice coalesces to a single box (the ring forwards one rectangle
+    /// per round). Returns the gathered region, the per-node contribution
+    /// slices (indexed by node id, `EMPTY` for non-owners) and the
+    /// collective kind; `None` means the pattern does not apply and the
+    /// caller keeps the p2p lowering.
+    ///
+    /// The check reads only the deterministically-replicated tracking
+    /// state, so all nodes reach the same verdict without coordination —
+    /// the same property that makes distributed p2p generation work.
+    fn detect_collective(
+        &self,
+        a: &crate::task::Access,
+        chunks: &[GridBox],
+        range: crate::grid::Range,
+        buffer_range: crate::grid::Range,
+    ) -> Option<(Region, Vec<GridBox>, CollectiveKind)> {
+        let region = a.mapper.apply(&chunks[0], range, buffer_range);
+        if region.is_empty() {
+            return None;
+        }
+        for c in &chunks[1..] {
+            if a.mapper.apply(c, range, buffer_range) != region {
+                return None;
+            }
+        }
+        let st = &self.states[&a.buffer];
+        let mut owner_boxes: Vec<Vec<GridBox>> = vec![Vec::new(); self.num_nodes as usize];
+        let mut in_range = true;
+        st.owner.for_each_in_region(&region, |b, o| {
+            match owner_boxes.get_mut(o.0 as usize) {
+                Some(v) => v.push(b),
+                None => in_range = false,
+            }
+        });
+        if !in_range {
+            return None;
+        }
+        let mut slices = vec![GridBox::EMPTY; self.num_nodes as usize];
+        let mut owners = 0u64;
+        for (i, boxes) in owner_boxes.into_iter().enumerate() {
+            if boxes.is_empty() {
+                continue;
+            }
+            let owned = Region::from_boxes(boxes);
+            if owned.boxes().len() != 1 {
+                return None;
+            }
+            let mut exclusive = true;
+            st.replicated.for_each_in_region(&owned, |_, set| {
+                if *set != NodeSet::single(NodeId(i as u64)) {
+                    exclusive = false;
+                }
+            });
+            if !exclusive {
+                return None;
+            }
+            slices[i] = owned.boxes()[0];
+            owners += 1;
+        }
+        let kind = if owners == 1 {
+            CollectiveKind::Broadcast
+        } else {
+            CollectiveKind::AllGather
+        };
+        Some((region, slices, kind))
+    }
+
     /// Command depending on the entire local execution front (horizon/epoch).
     fn push_front_command(&mut self, task: &TaskRef, kind: CommandKind) -> CommandId {
         let deps: Vec<(CommandId, DepKind)> = self
@@ -545,8 +752,10 @@ mod tests {
     use crate::task::{RangeMapper, TaskDecl, TaskManager};
 
     /// Build the N-body TDAG on a fresh manager and compile it on `nodes`
-    /// CDAG generators; returns per-node command lists.
-    fn compile_nbody(nodes: u64, steps: usize) -> Vec<Vec<CommandRef>> {
+    /// CDAG generators; returns per-node command lists. `collectives`
+    /// selects the lowering for the all-gather pattern (the p2p tests pin
+    /// the paper's original push/await-push structure).
+    fn compile_nbody_with(nodes: u64, steps: usize, collectives: bool) -> Vec<Vec<CommandRef>> {
         let mut tm = TaskManager::with_horizon_step(u64::MAX);
         let n = Range::d1(4096);
         let p = tm.create_buffer::<[f64; 3]>("P", n, true).id();
@@ -572,6 +781,7 @@ mod tests {
                     SplitHint::D1,
                     tm.buffers().clone(),
                 );
+                gen.set_collectives(collectives);
                 for t in &tasks {
                     gen.compile(t);
                 }
@@ -579,6 +789,10 @@ mod tests {
                 gen.take_new_commands()
             })
             .collect()
+    }
+
+    fn compile_nbody(nodes: u64, steps: usize) -> Vec<Vec<CommandRef>> {
+        compile_nbody_with(nodes, steps, false)
     }
 
     #[test]
@@ -697,6 +911,7 @@ mod tests {
         );
         let tasks = tm.take_new_tasks();
         let mut gen = CdagGenerator::new(NodeId(0), 2, SplitHint::D1, tm.buffers().clone());
+        gen.set_collectives(false);
         for t in &tasks {
             gen.compile(t);
         }
@@ -711,6 +926,303 @@ mod tests {
             .count();
         assert_eq!(pushes, 1, "second all-read must reuse the replica");
         assert_eq!(awaits, 1);
+    }
+
+    // ── collective-group lowering ───────────────────────────────────────
+
+    fn count_kinds(cmds: &[CommandRef]) -> (usize, usize, usize) {
+        let pushes = cmds.iter().filter(|c| matches!(c.kind, CommandKind::Push { .. })).count();
+        let awaits =
+            cmds.iter().filter(|c| matches!(c.kind, CommandKind::AwaitPush { .. })).count();
+        let colls =
+            cmds.iter().filter(|c| matches!(c.kind, CommandKind::Collective { .. })).count();
+        (pushes, awaits, colls)
+    }
+
+    /// Acceptance criterion: nbody at 4 nodes compiles to O(n) collective
+    /// rounds — one command per node per comm step — instead of the
+    /// n·(n−1) push/await-push pairs of the p2p lowering.
+    #[test]
+    fn nbody_four_nodes_collective_command_counts() {
+        let steps = 3; // comm happens on steps 2 and 3 → 2 exchanges
+        let p2p = compile_nbody_with(4, steps, false);
+        let coll = compile_nbody_with(4, steps, true);
+        let mut p2p_pushes_total = 0;
+        for (node, cmds) in p2p.iter().enumerate() {
+            let (pushes, awaits, colls) = count_kinds(cmds);
+            assert_eq!(pushes, 2 * 3, "node {node}: (n−1) pushes per exchange");
+            assert_eq!(awaits, 2, "node {node}: 1 await-push per exchange");
+            assert_eq!(colls, 0);
+            p2p_pushes_total += pushes;
+        }
+        // Cluster-wide: n·(n−1) pushes per exchange — the O(n²) pattern.
+        assert_eq!(p2p_pushes_total, 2 * 4 * 3);
+        for (node, cmds) in coll.iter().enumerate() {
+            let (pushes, awaits, colls) = count_kinds(cmds);
+            assert_eq!((pushes, awaits), (0, 0), "node {node}: no p2p left for P");
+            assert_eq!(colls, 2, "node {node}: one collective per exchange");
+            for c in cmds {
+                if let CommandKind::Collective { region, kind, slices, .. } = &c.kind {
+                    assert_eq!(*kind, CollectiveKind::AllGather);
+                    assert_eq!(*region, Region::from(GridBox::d1(0, 4096)));
+                    assert_eq!(slices.len(), 4);
+                    for (i, s) in slices.iter().enumerate() {
+                        assert_eq!(
+                            *s,
+                            GridBox::d1(i as u64 * 1024, (i as u64 + 1) * 1024),
+                            "slice of node {i}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn collective_depends_on_producer_and_feeds_consumer() {
+        let per_node = compile_nbody_with(2, 2, true);
+        let n0 = &per_node[0];
+        let coll = n0
+            .iter()
+            .find(|c| matches!(c.kind, CommandKind::Collective { .. }))
+            .expect("one collective on node 0");
+        // Dataflow on the "update" execute that produced our half of P.
+        let update_exec = n0
+            .iter()
+            .find(|c| c.is_execution() && c.task.name == "update")
+            .unwrap();
+        assert!(coll
+            .deps
+            .iter()
+            .any(|(d, k)| *d == update_exec.id && *k == DepKind::Dataflow));
+        // The second timestep execute consumes the gathered region.
+        let second_timestep = n0
+            .iter()
+            .filter(|c| c.is_execution() && c.task.name == "timestep")
+            .nth(1)
+            .unwrap();
+        assert!(second_timestep
+            .deps
+            .iter()
+            .any(|(d, k)| *d == coll.id && *k == DepKind::Dataflow));
+    }
+
+    /// The detector must not fire on stencil halo exchanges (per-chunk
+    /// read regions differ) — those stay on the precise p2p path.
+    #[test]
+    fn stencil_keeps_p2p_lowering_with_collectives_enabled() {
+        let mut tm = TaskManager::with_horizon_step(u64::MAX);
+        let n = Range::d2(64, 64);
+        let a = tm.create_buffer::<f64>("A", n, true).id();
+        let b = tm.create_buffer::<f64>("B", n, true).id();
+        tm.submit(
+            TaskDecl::device("s1", n)
+                .read(a, RangeMapper::Neighborhood(Range::d2(1, 1)))
+                .write(b, RangeMapper::OneToOne),
+        );
+        tm.submit(
+            TaskDecl::device("s2", n)
+                .read(b, RangeMapper::Neighborhood(Range::d2(1, 1)))
+                .write(a, RangeMapper::OneToOne),
+        );
+        let tasks = tm.take_new_tasks();
+        let mut gen = CdagGenerator::new(NodeId(0), 2, SplitHint::D1, tm.buffers().clone());
+        for t in &tasks {
+            gen.compile(t);
+        }
+        let cmds = gen.take_new_commands();
+        let (pushes, awaits, colls) = count_kinds(&cmds);
+        assert_eq!(colls, 0, "halo exchange is not an all-gather");
+        assert_eq!((pushes, awaits), (1, 1));
+        assert_eq!(gen.collectives_emitted, 0);
+    }
+
+    /// Broadcast variant: one node owns the whole region, everyone reads it.
+    #[test]
+    fn single_owner_all_read_lowers_to_broadcast() {
+        let mut tm = TaskManager::with_horizon_step(u64::MAX);
+        let n = Range::d1(256);
+        let b = tm.create_buffer::<f64>("B", n, true).id();
+        let o = tm.create_buffer::<f64>("O", n, false).id();
+        // A 1-item task: only node 0's chunk is non-empty → node 0 writes
+        // (and thus owns) the whole fixed region.
+        tm.submit(
+            TaskDecl::device("root_write", Range::d1(1))
+                .write(b, RangeMapper::Fixed(Region::full(n))),
+        );
+        tm.submit(
+            TaskDecl::device("consume", n)
+                .read(b, RangeMapper::All)
+                .write(o, RangeMapper::OneToOne),
+        );
+        let tasks = tm.take_new_tasks();
+        for nid in 0..2 {
+            let mut gen =
+                CdagGenerator::new(NodeId(nid), 2, SplitHint::D1, tm.buffers().clone());
+            for t in &tasks {
+                gen.compile(t);
+            }
+            let cmds = gen.take_new_commands();
+            let colls: Vec<_> = cmds
+                .iter()
+                .filter_map(|c| match &c.kind {
+                    CommandKind::Collective { kind, slices, .. } => Some((*kind, slices.clone())),
+                    _ => None,
+                })
+                .collect();
+            assert_eq!(colls.len(), 1, "node {nid}");
+            let (kind, slices) = &colls[0];
+            assert_eq!(*kind, CollectiveKind::Broadcast);
+            assert_eq!(slices[0], GridBox::d1(0, 256));
+            assert_eq!(slices[1], GridBox::EMPTY);
+        }
+    }
+
+    /// Property test: on randomized programs (random buffer sizes, node
+    /// counts, write extents and read mappers), whenever the detector fires
+    /// on a node it must fire identically on *every* node, and the
+    /// collective must carry exactly the communication the p2p lowering
+    /// would have performed: inbound = the node's await-push region,
+    /// contribution = what it would have pushed to each consuming peer. A
+    /// detector firing on a non-all-gather geometry fails these checks.
+    #[test]
+    fn property_collective_matches_p2p_communication() {
+        for seed in 1..=120u64 {
+            let mut rng = crate::util::XorShift64::new(seed);
+            let nodes = rng.next_range(2, 5);
+            let len = rng.next_range(2, 8) * nodes; // splittable sizes
+            let n = Range::d1(len);
+            let mut tm = TaskManager::with_horizon_step(u64::MAX);
+            let b = tm.create_buffer::<f64>("B", n, rng.chance(0.5)).id();
+            let tasks = {
+                for _ in 0..rng.next_range(1, 4) {
+                    // Random producer: full or partial one-to-one write.
+                    if rng.chance(0.7) {
+                        tm.submit(TaskDecl::device("w", n).read_write(b, RangeMapper::OneToOne));
+                    } else {
+                        let sub = rng.next_range(1, len);
+                        tm.submit(TaskDecl::device("wp", Range::d1(sub)).write(
+                            b,
+                            RangeMapper::Shift(crate::grid::Point::d1(
+                                rng.next_below(len - sub + 1),
+                            )),
+                        ));
+                    }
+                    // Random consumer geometry.
+                    let mapper = match rng.next_below(4) {
+                        0 => RangeMapper::All,
+                        1 => RangeMapper::OneToOne,
+                        2 => {
+                            let lo = rng.next_below(len);
+                            let hi = rng.next_range(lo + 1, len);
+                            RangeMapper::Fixed(Region::from(GridBox::d1(lo, hi)))
+                        }
+                        _ => RangeMapper::Neighborhood(Range::d1(rng.next_range(1, 3))),
+                    };
+                    tm.submit(TaskDecl::device("r", n).read(b, mapper));
+                }
+                tm.take_new_tasks()
+            };
+
+            // Compile every node twice: collectives on and off, in
+            // lockstep, comparing the communication they describe.
+            let mut fired_per_task: Vec<Vec<(u64, Region, Vec<GridBox>)>> = Vec::new();
+            for nid in 0..nodes {
+                let mut with = CdagGenerator::new(
+                    NodeId(nid),
+                    nodes,
+                    SplitHint::D1,
+                    tm.buffers().clone(),
+                );
+                let mut without = CdagGenerator::new(
+                    NodeId(nid),
+                    nodes,
+                    SplitHint::D1,
+                    tm.buffers().clone(),
+                );
+                without.set_collectives(false);
+                let mut fired: Vec<(u64, Region, Vec<GridBox>)> = Vec::new();
+                for (ti, t) in tasks.iter().enumerate() {
+                    with.compile(t);
+                    without.compile(t);
+                    let wc = with.take_new_commands();
+                    let pc = without.take_new_commands();
+                    let colls: Vec<_> = wc
+                        .iter()
+                        .filter_map(|c| match &c.kind {
+                            CommandKind::Collective { region, slices, .. } => {
+                                Some((region.clone(), slices.as_ref().clone()))
+                            }
+                            _ => None,
+                        })
+                        .collect();
+                    assert!(colls.len() <= 1, "seed {seed}: one buffer, one collective");
+                    if let Some((region, slices)) = colls.into_iter().next() {
+                        // Inbound must equal the p2p await-push region.
+                        let own = Region::from(slices[nid as usize]);
+                        let inbound = region.difference(&own);
+                        let p2p_await = pc
+                            .iter()
+                            .filter_map(|c| match &c.kind {
+                                CommandKind::AwaitPush { region, .. } => Some(region.clone()),
+                                _ => None,
+                            })
+                            .fold(Region::empty(), |acc, r| acc.union(&r));
+                        assert_eq!(
+                            inbound, p2p_await,
+                            "seed {seed} node {nid} task {ti}: collective inbound vs p2p awaits"
+                        );
+                        // Contribution must equal what we would have pushed
+                        // to every consuming peer.
+                        let mut push_regions: HashMap<NodeId, Region> = HashMap::new();
+                        for c in &pc {
+                            if let CommandKind::Push { region, target, .. } = &c.kind {
+                                let e = push_regions
+                                    .entry(*target)
+                                    .or_insert_with(Region::empty);
+                                *e = e.union(region);
+                            }
+                        }
+                        for (peer, pushed) in &push_regions {
+                            assert_eq!(
+                                *pushed, own,
+                                "seed {seed} node {nid} task {ti}: push to {peer} vs own slice"
+                            );
+                        }
+                        if own.is_empty() {
+                            assert!(push_regions.is_empty(), "seed {seed}: non-owner pushing");
+                        } else {
+                            assert_eq!(
+                                push_regions.len() as u64,
+                                nodes - 1,
+                                "seed {seed} node {nid} task {ti}: all-gather pushes to every peer"
+                            );
+                        }
+                        fired.push((ti as u64, region, slices));
+                    } else {
+                        // No collective → the p2p run compiled the same
+                        // command kinds and geometry. (Ids and deps may
+                        // differ once an earlier task lowered collectively,
+                        // so compare id-free kind signatures.)
+                        assert_eq!(
+                            wc.iter().map(|c| format!("{:?}", c.kind)).collect::<Vec<_>>(),
+                            pc.iter().map(|c| format!("{:?}", c.kind)).collect::<Vec<_>>(),
+                            "seed {seed} node {nid} task {ti}: lowering must only differ when it fires"
+                        );
+                    }
+                }
+                assert!(with.dag().check_acyclic(), "seed {seed} node {nid}");
+                fired_per_task.push(fired);
+            }
+            // Deterministic replication: every node fired on the same
+            // tasks with the same geometry.
+            for nid in 1..nodes as usize {
+                assert_eq!(
+                    fired_per_task[0], fired_per_task[nid],
+                    "seed {seed}: node {nid} disagrees with node 0 on collective geometry"
+                );
+            }
+        }
     }
 
     #[test]

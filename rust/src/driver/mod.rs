@@ -47,6 +47,9 @@ pub struct ClusterConfig {
     pub registry: Registry,
     /// Fabric connecting the nodes (ignored for single-node runs).
     pub transport: Transport,
+    /// Lower all-gather/broadcast patterns to collective ring commands
+    /// instead of p2p push/await-push pairs (default: on).
+    pub collectives: bool,
 }
 
 impl Default for ClusterConfig {
@@ -61,6 +64,7 @@ impl Default for ClusterConfig {
             device_hint: SplitHint::D1,
             registry: Registry::new(),
             transport: Transport::Channel,
+            collectives: true,
         }
     }
 }
@@ -313,6 +317,7 @@ fn make_node(cfg: &ClusterConfig, node: NodeId, comm: CommRef) -> Queue {
             d2d: cfg.d2d,
             lookahead: cfg.lookahead,
             horizon_flush: 2,
+            collectives: cfg.collectives,
         },
         tm.buffers().clone(),
         out_tx,

@@ -16,6 +16,21 @@ use crate::util::{BufferId, InstructionId, MessageId, NodeId};
 use std::collections::HashMap;
 use std::sync::Arc;
 
+/// How completion of an active receive is signalled.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum RecvMode {
+    /// Plain `receive`: completes when `remaining` drains.
+    Plain,
+    /// `split receive`: completes at registration; its `await receive`s
+    /// carry the data dependency.
+    Split,
+    /// Collective ring member: data lands here like any receive, but
+    /// completion (and garbage collection) is driven externally by the
+    /// executor's [`super::collective::CollectiveEngine`], which polls
+    /// [`ReceiveArbiter::received_region`] to advance ring rounds.
+    Collective,
+}
+
 struct ActiveReceive {
     buffer: BufferId,
     /// Transfer id (consuming task): pilots match on (buffer, transfer).
@@ -25,9 +40,7 @@ struct ActiveReceive {
     /// What has arrived so far (for await-receive checks).
     received: Region,
     dst: Arc<AllocBuf>,
-    /// Split receives complete at registration; their await-receives carry
-    /// the data dependency. Plain receives complete when `remaining` drains.
-    is_split: bool,
+    mode: RecvMode,
     done: bool,
 }
 
@@ -71,18 +84,53 @@ impl ReceiveArbiter {
         dst: Arc<AllocBuf>,
         is_split: bool,
     ) {
+        let mode = if is_split { RecvMode::Split } else { RecvMode::Plain };
+        self.register(id, buffer, transfer, region, dst, mode);
+    }
+
+    /// Register the inbound side of a collective ring member: fragments
+    /// land in `dst` like any receive, but no completion is ever pushed —
+    /// the collective engine owns completion and calls
+    /// [`ReceiveArbiter::finish_collective`] when the ring has run its
+    /// rounds.
+    pub fn register_collective(
+        &mut self,
+        id: InstructionId,
+        buffer: BufferId,
+        transfer: crate::util::TaskId,
+        region: Region,
+        dst: Arc<AllocBuf>,
+    ) {
+        self.register(id, buffer, transfer, region, dst, RecvMode::Collective);
+    }
+
+    fn register(
+        &mut self,
+        id: InstructionId,
+        buffer: BufferId,
+        transfer: crate::util::TaskId,
+        region: Region,
+        dst: Arc<AllocBuf>,
+        mode: RecvMode,
+    ) {
         let mut ar = ActiveReceive {
             buffer,
             transfer,
             remaining: region,
             received: Region::empty(),
             dst,
-            is_split,
+            mode,
             done: false,
         };
-        if is_split {
-            self.completions.push(id);
-            ar.done = true; // instruction-level completion; data still tracked
+        match mode {
+            RecvMode::Split => {
+                self.completions.push(id);
+                ar.done = true; // instruction-level completion; data still tracked
+            }
+            RecvMode::Collective => {
+                ar.done = true; // completion owned by the collective engine
+            }
+            RecvMode::Plain => {}
         }
         self.active.insert(id, ar);
         // Match any pilots that arrived before the instruction (receives
@@ -92,6 +140,17 @@ impl ReceiveArbiter {
         for p in pilots {
             self.on_pilot(p);
         }
+    }
+
+    /// What has arrived so far for an active receive (collective ring
+    /// progress poll). `None` once the entry has been garbage collected.
+    pub fn received_region(&self, id: InstructionId) -> Option<Region> {
+        self.active.get(&id).map(|ar| ar.received.clone())
+    }
+
+    /// Drop a collective entry once its engine declared the ring complete.
+    pub fn finish_collective(&mut self, id: InstructionId) {
+        self.active.remove(&id);
     }
 
     /// Register an `await receive` for a subregion of `split`. Must be
@@ -163,7 +222,7 @@ impl ReceiveArbiter {
         let got = Region::from(*send_box);
         ar.remaining = ar.remaining.difference(&got);
         ar.received = ar.received.union(&got);
-        if !ar.is_split && !ar.done && ar.remaining.is_empty() {
+        if ar.mode == RecvMode::Plain && !ar.done && ar.remaining.is_empty() {
             ar.done = true;
             self.completions.push(id);
         }
@@ -180,10 +239,13 @@ impl ReceiveArbiter {
             self.completions.push(k);
         }
         // Fully drained plain receive or split receive with no outstanding
-        // awaits can be garbage collected.
+        // awaits can be garbage collected. Collective entries stay until
+        // their engine calls `finish_collective` — the ring may still need
+        // to read `received_region` to schedule its remaining sends.
         let ar = self.active.get(&id).unwrap();
         if ar.remaining.is_empty()
             && ar.done
+            && ar.mode != RecvMode::Collective
             && !self.awaits.values().any(|aw| aw.split == id)
         {
             self.active.remove(&id);
@@ -353,6 +415,45 @@ mod tests {
         assert_eq!(a.take_completions(), vec![InstructionId(11)]);
         a.on_data(NodeId(1), MessageId(2), payload(&GridBox::d1(45, 90), 1.0));
         assert_eq!(a.take_completions(), vec![InstructionId(12)]);
+    }
+
+    /// Collective mode: data lands and `received_region` tracks progress,
+    /// but the arbiter never pushes a completion — the ring engine owns it.
+    #[test]
+    fn collective_mode_tracks_progress_without_completing() {
+        let mut a = ReceiveArbiter::new();
+        let buf = dst();
+        a.register_collective(
+            InstructionId(20),
+            BufferId(0),
+            crate::util::TaskId(1),
+            Region::from(GridBox::d1(0, 100)),
+            buf.clone(),
+        );
+        assert!(a.take_completions().is_empty(), "no completion at registration");
+        assert_eq!(a.received_region(InstructionId(20)), Some(Region::empty()));
+        a.on_pilot(pilot(1, GridBox::d1(0, 50)));
+        a.on_data(NodeId(1), MessageId(1), payload(&GridBox::d1(0, 50), 1.5));
+        assert!(a.take_completions().is_empty(), "collectives never self-complete");
+        assert_eq!(
+            a.received_region(InstructionId(20)),
+            Some(Region::from(GridBox::d1(0, 50)))
+        );
+        a.on_pilot(pilot(2, GridBox::d1(50, 100)));
+        a.on_data(NodeId(1), MessageId(2), payload(&GridBox::d1(50, 100), 2.5));
+        assert!(a.take_completions().is_empty());
+        // Fully received, still queryable until the engine finishes it.
+        assert_eq!(
+            a.received_region(InstructionId(20)),
+            Some(Region::from(GridBox::d1(0, 100)))
+        );
+        unsafe {
+            assert_eq!(buf.read::<f32>(crate::grid::Point::d1(25)), 1.5);
+            assert_eq!(buf.read::<f32>(crate::grid::Point::d1(75)), 2.5);
+        }
+        a.finish_collective(InstructionId(20));
+        assert_eq!(a.received_region(InstructionId(20)), None);
+        assert!(a.is_idle());
     }
 
     #[test]

@@ -1,0 +1,374 @@
+//! Collective-group execution: ring schedules over the p2p primitives.
+//!
+//! A [`crate::instruction::InstructionKind::Collective`] gathers a buffer
+//! region across all nodes in `n−1` ring rounds. Each node repeatedly
+//! forwards one slice to its successor: round 0 sends its own contribution,
+//! round *r* forwards the slice received from the predecessor in round
+//! *r−1*. All transfers are ordinary pilot + [`Communicator::send_data`]
+//! messages — the transports (`channel` and `tcp`) are untouched — and
+//! inbound fragments land through the regular [`ReceiveArbiter`], which the
+//! engine polls for per-round progress via `received_region`.
+//!
+//! The schedule is deadlock-free by induction: round 0 needs no inbound
+//! data, and round *r*'s send only waits for round *r−1*'s receive, which
+//! the predecessor's round *r−1* send satisfies.
+
+use super::arbitration::ReceiveArbiter;
+use super::arena::AllocBuf;
+use crate::comm::CommRef;
+use crate::grid::{GridBox, Region};
+use crate::util::{InstructionId, MessageId, NodeId};
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// One in-flight collective on this node.
+struct CollectiveRun {
+    rank: usize,
+    /// Per-node contribution slices, indexed by node id.
+    slices: Arc<Vec<GridBox>>,
+    /// Message id per ring round (pre-allocated by the IDAG generator).
+    msgs: Vec<MessageId>,
+    succ: NodeId,
+    /// The contiguous host backing holding the gathered region.
+    dst: Arc<AllocBuf>,
+    /// Current ring round; `slices.len() − 1` means the ring has finished.
+    round: usize,
+    /// Rounds whose outbound send has been performed.
+    sent: usize,
+}
+
+impl CollectiveRun {
+    fn n(&self) -> usize {
+        self.slices.len()
+    }
+
+    /// Slice this node sends in `round`: (rank − round) mod n.
+    fn send_slice(&self, round: usize) -> GridBox {
+        self.slices[(self.rank + self.n() - round) % self.n()]
+    }
+
+    /// Slice this node receives in `round`: (rank − 1 − round) mod n.
+    fn recv_slice(&self, round: usize) -> GridBox {
+        self.slices[(self.rank + self.n() - 1 - round) % self.n()]
+    }
+}
+
+/// Drives every active collective ring on this node. Owned by the executor,
+/// pumped whenever inbound data arrived or a collective was dispatched.
+#[derive(Default)]
+pub struct CollectiveEngine {
+    active: HashMap<InstructionId, CollectiveRun>,
+}
+
+impl CollectiveEngine {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register a dispatched collective instruction. The caller must have
+    /// registered the inbound region with the arbiter first
+    /// (`register_collective`), then pump the engine once.
+    pub fn start(
+        &mut self,
+        id: InstructionId,
+        rank: NodeId,
+        slices: Arc<Vec<GridBox>>,
+        msgs: Vec<MessageId>,
+        dst: Arc<AllocBuf>,
+    ) {
+        let n = slices.len();
+        debug_assert!(n >= 2, "collective needs at least 2 nodes");
+        debug_assert_eq!(msgs.len(), n - 1, "one message id per ring round");
+        let succ = NodeId((rank.0 + 1) % n as u64);
+        self.active.insert(
+            id,
+            CollectiveRun {
+                rank: rank.0 as usize,
+                slices,
+                msgs,
+                succ,
+                dst,
+                round: 0,
+                sent: 0,
+            },
+        );
+    }
+
+    /// Advance every active ring as far as received data allows: perform
+    /// due sends, step rounds whose inbound slice has fully arrived, and
+    /// return the ids of collectives whose ring completed (the caller
+    /// retires them and drops their arbiter entry).
+    pub fn pump(&mut self, arbiter: &ReceiveArbiter, comm: &CommRef) -> Vec<InstructionId> {
+        let mut done = Vec::new();
+        for (id, run) in self.active.iter_mut() {
+            let rounds = run.n() - 1;
+            let received = arbiter.received_region(*id);
+            loop {
+                if run.round >= rounds {
+                    done.push(*id);
+                    break;
+                }
+                // Send phase of the current round (exactly once). The bytes
+                // come straight from the gathered-region backing: round 0's
+                // slice was made coherent there by the IDAG, later rounds'
+                // slices were landed there by the arbiter.
+                if run.sent == run.round {
+                    let s = run.send_slice(run.round);
+                    if !s.is_empty() {
+                        comm.send_data(run.succ, run.msgs[run.round], run.dst.read_box(&s));
+                    }
+                    run.sent += 1;
+                }
+                // Receive phase: the round is over once the predecessor's
+                // slice for it has fully arrived (empty slices by geometry
+                // count as arrived). The arbiter entry exists for the whole
+                // ring lifetime — it is only removed by `finish_collective`
+                // after we report completion — so a missing entry is a
+                // sequencing bug, not "everything arrived": fail loudly in
+                // debug, stall visibly (not corrupt silently) in release.
+                let want = run.recv_slice(run.round);
+                let arrived = want.is_empty()
+                    || match &received {
+                        Some(r) => r.contains(&Region::from(want)),
+                        None => {
+                            debug_assert!(
+                                false,
+                                "collective I{} pumped without an arbiter entry",
+                                id.0
+                            );
+                            false
+                        }
+                    };
+                if arrived {
+                    run.round += 1;
+                } else {
+                    break;
+                }
+            }
+        }
+        for id in &done {
+            self.active.remove(id);
+        }
+        done
+    }
+
+    /// Number of collectives still in flight.
+    pub fn len(&self) -> usize {
+        self.active.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.active.is_empty()
+    }
+
+    /// Human-readable state dump (stall diagnostics).
+    pub fn debug_state(&self) -> String {
+        use std::fmt::Write;
+        let mut s = String::new();
+        for (id, run) in &self.active {
+            let _ = writeln!(
+                s,
+                "  collective I{} rank {}/{} round {}/{} (sent {})",
+                id.0,
+                run.rank,
+                run.n(),
+                run.round,
+                run.n() - 1,
+                run.sent
+            );
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::{ChannelWorld, Inbound};
+    use crate::instruction::Pilot;
+    use crate::util::{BufferId, TaskId};
+
+    /// Drive a full n-node all-gather ring by hand: one arbiter + engine +
+    /// destination buffer per node, messages carried by the channel fabric.
+    /// Every node must end up with every slice, byte-exact, in n−1 rounds.
+    fn run_ring(n: usize) {
+        let total = 8 * n as u64;
+        let bbox = GridBox::d1(0, total);
+        let slices: Arc<Vec<GridBox>> = Arc::new(
+            (0..n as u64).map(|i| GridBox::d1(i * 8, (i + 1) * 8)).collect(),
+        );
+        let comms: Vec<CommRef> = ChannelWorld::new(n as u64)
+            .communicators()
+            .into_iter()
+            .map(|c| Arc::new(c) as CommRef)
+            .collect();
+        let transfer = TaskId(42);
+        let buffer = BufferId(0);
+        let id = InstructionId(7);
+
+        let mut arbiters: Vec<ReceiveArbiter> = (0..n).map(|_| ReceiveArbiter::new()).collect();
+        let mut engines: Vec<CollectiveEngine> =
+            (0..n).map(|_| CollectiveEngine::new()).collect();
+        let mut dsts: Vec<Arc<AllocBuf>> = Vec::new();
+
+        for rank in 0..n {
+            let dst = Arc::new(AllocBuf::new(bbox, 4));
+            // Seed our own slice (what make_coherent would have staged).
+            let own = slices[rank];
+            let bytes: Vec<u8> = (own.min[0]..own.max[0])
+                .flat_map(|i| (i as u32).to_ne_bytes())
+                .collect();
+            dst.write_box(&own, &bytes);
+            let inbound = Region::from(bbox).difference(&Region::from(own));
+            arbiters[rank].register_collective(id, buffer, transfer, inbound, dst.clone());
+            // Pilots the IDAG would have emitted: one per non-empty round.
+            let succ = NodeId(((rank + 1) % n) as u64);
+            for r in 0..n - 1 {
+                let send_box = slices[(rank + n - r) % n];
+                if !send_box.is_empty() {
+                    comms[rank].send_pilot(Pilot {
+                        from: NodeId(rank as u64),
+                        to: succ,
+                        msg: MessageId(100 + r as u64),
+                        buffer,
+                        send_box,
+                        transfer,
+                    });
+                }
+            }
+            engines[rank].start(
+                id,
+                NodeId(rank as u64),
+                slices.clone(),
+                (0..n - 1).map(|r| MessageId(100 + r as u64)).collect(),
+                dst.clone(),
+            );
+            dsts.push(dst);
+        }
+
+        // Event loop: poll each node's fabric into its arbiter, pump rings.
+        let mut finished = vec![false; n];
+        let mut spins = 0;
+        while finished.iter().any(|f| !f) {
+            spins += 1;
+            assert!(spins < 100_000, "ring did not converge");
+            for rank in 0..n {
+                while let Some(m) = comms[rank].poll() {
+                    match m {
+                        Inbound::Pilot(p) => arbiters[rank].on_pilot(p),
+                        Inbound::Data { from, msg, bytes } => {
+                            arbiters[rank].on_data(from, msg, bytes)
+                        }
+                    }
+                }
+                for done in engines[rank].pump(&arbiters[rank], &comms[rank]) {
+                    assert_eq!(done, id);
+                    arbiters[rank].finish_collective(done);
+                    finished[rank] = true;
+                }
+            }
+        }
+
+        // Byte-exact gather everywhere.
+        for (rank, dst) in dsts.iter().enumerate() {
+            let want: Vec<u8> = (0..total).flat_map(|i| (i as u32).to_ne_bytes()).collect();
+            assert_eq!(dst.read_box(&bbox), want, "node {rank} gathered bytes");
+            assert!(engines[rank].is_empty());
+        }
+    }
+
+    #[test]
+    fn two_node_ring_gathers() {
+        run_ring(2);
+    }
+
+    #[test]
+    fn four_node_ring_gathers() {
+        run_ring(4);
+    }
+
+    #[test]
+    fn seven_node_ring_gathers() {
+        run_ring(7);
+    }
+
+    /// Broadcast degenerates to a pipeline: only the root owns a slice.
+    #[test]
+    fn broadcast_pipeline_delivers_to_all() {
+        let n = 4usize;
+        let root = 2usize;
+        let bbox = GridBox::d1(0, 16);
+        let mut slices = vec![GridBox::EMPTY; n];
+        slices[root] = bbox;
+        let slices = Arc::new(slices);
+        let comms: Vec<CommRef> = ChannelWorld::new(n as u64)
+            .communicators()
+            .into_iter()
+            .map(|c| Arc::new(c) as CommRef)
+            .collect();
+        let (buffer, transfer, id) = (BufferId(1), TaskId(9), InstructionId(3));
+        let payload: Vec<u8> = (0..16u32).flat_map(|i| (i * 3).to_ne_bytes()).collect();
+
+        let mut arbiters: Vec<ReceiveArbiter> = (0..n).map(|_| ReceiveArbiter::new()).collect();
+        let mut engines: Vec<CollectiveEngine> =
+            (0..n).map(|_| CollectiveEngine::new()).collect();
+        let mut dsts = Vec::new();
+        for rank in 0..n {
+            let dst = Arc::new(AllocBuf::new(bbox, 4));
+            if rank == root {
+                dst.write_box(&bbox, &payload);
+            }
+            let inbound = if rank == root {
+                Region::empty()
+            } else {
+                Region::from(bbox)
+            };
+            arbiters[rank].register_collective(id, buffer, transfer, inbound, dst.clone());
+            let succ = NodeId(((rank + 1) % n) as u64);
+            for r in 0..n - 1 {
+                let send_box = slices[(rank + n - r) % n];
+                if !send_box.is_empty() {
+                    comms[rank].send_pilot(Pilot {
+                        from: NodeId(rank as u64),
+                        to: succ,
+                        msg: MessageId(200 + r as u64),
+                        buffer,
+                        send_box,
+                        transfer,
+                    });
+                }
+            }
+            engines[rank].start(
+                id,
+                NodeId(rank as u64),
+                slices.clone(),
+                (0..n - 1).map(|r| MessageId(200 + r as u64)).collect(),
+                dst.clone(),
+            );
+            dsts.push(dst);
+        }
+        let mut finished = vec![false; n];
+        let mut spins = 0;
+        while finished.iter().any(|f| !f) {
+            spins += 1;
+            assert!(spins < 100_000, "broadcast did not converge");
+            for rank in 0..n {
+                while let Some(m) = comms[rank].poll() {
+                    match m {
+                        Inbound::Pilot(p) => arbiters[rank].on_pilot(p),
+                        Inbound::Data { from, msg, bytes } => {
+                            arbiters[rank].on_data(from, msg, bytes)
+                        }
+                    }
+                }
+                for done in engines[rank].pump(&arbiters[rank], &comms[rank]) {
+                    arbiters[rank].finish_collective(done);
+                    finished[rank] = true;
+                }
+            }
+        }
+        for (rank, dst) in dsts.iter().enumerate() {
+            assert_eq!(dst.read_box(&bbox), payload, "node {rank} broadcast bytes");
+        }
+    }
+}

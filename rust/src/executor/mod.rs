@@ -8,11 +8,13 @@
 
 pub mod arbitration;
 pub mod arena;
+pub mod collective;
 pub mod lanes;
 pub mod ooo;
 
 pub use arbitration::ReceiveArbiter;
 pub use arena::{copy_between, AllocBuf, Arena};
+pub use collective::CollectiveEngine;
 pub use ooo::{Lane, OooEngine};
 
 use crate::comm::{CommRef, Inbound};
@@ -237,6 +239,7 @@ pub struct Executor {
     comm: CommRef,
     ooo: OooEngine,
     arbiter: ReceiveArbiter,
+    collectives: CollectiveEngine,
     arena: Arena,
     lanes: LanePool,
     lane_completions: mpsc::Receiver<InstructionId>,
@@ -252,6 +255,7 @@ impl Executor {
         Executor {
             ooo: OooEngine::new(cfg.host_lanes),
             arbiter: ReceiveArbiter::new(),
+            collectives: CollectiveEngine::new(),
             arena: Arena::new(),
             lanes: LanePool::new(ctx, node),
             lane_completions: crx,
@@ -313,12 +317,22 @@ impl Executor {
             }
 
             // 2. Inbound communication → receive arbitration.
+            let mut inbound_data = false;
             while let Some(m) = self.comm.poll() {
                 progressed = true;
                 match m {
                     Inbound::Pilot(p) => self.arbiter.on_pilot(p),
-                    Inbound::Data { from, msg, bytes } => self.arbiter.on_data(from, msg, bytes),
+                    Inbound::Data { from, msg, bytes } => {
+                        inbound_data = true;
+                        self.arbiter.on_data(from, msg, bytes)
+                    }
                 }
+            }
+            // New data may unblock collective ring rounds (sends and/or
+            // completions); pumping on other iterations is pointless since
+            // rounds only advance on arrivals.
+            if inbound_data {
+                self.pump_collectives();
             }
             for id in self.arbiter.take_completions() {
                 progressed = true;
@@ -362,13 +376,19 @@ impl Executor {
                 {
                     stall_reported = true;
                     let msg = format!(
-                        "executor stalled on node {}: {} waiting, {} in flight, arbiter idle={}",
+                        "executor stalled on node {}: {} waiting, {} in flight, arbiter idle={}, {} collectives in flight",
                         self.cfg.node,
                         self.ooo.waiting_len(),
                         self.ooo.in_flight_len(),
                         self.arbiter.is_idle(),
+                        self.collectives.len(),
                     );
-                    eprintln!("{msg}\n{}{}", self.ooo.debug_pending(), self.arbiter.debug_state());
+                    eprintln!(
+                        "{msg}\n{}{}{}",
+                        self.ooo.debug_pending(),
+                        self.arbiter.debug_state(),
+                        self.collectives.debug_state()
+                    );
                     let _ = self.events.send(ExecEvent::Error(msg));
                 }
                 // Polling loop etiquette: spin briefly, then yield, then
@@ -457,6 +477,23 @@ impl Executor {
             }
             InstructionKind::AwaitReceive { region, split, .. } => {
                 self.arbiter.register_await(id, *split, region.clone());
+                self.drain_arbiter();
+            }
+            InstructionKind::Collective {
+                region, slices, dst_alloc, transfer, msgs, buffer, ..
+            } => {
+                let dst = self.arena.get(*dst_alloc);
+                let own = Region::from(slices[self.cfg.node.0 as usize]);
+                let inbound = region.difference(&own);
+                // Inbound slices land through the ordinary arbiter; the
+                // ring engine owns round scheduling and completion.
+                self.arbiter
+                    .register_collective(id, *buffer, *transfer, inbound, dst.clone());
+                self.collectives
+                    .start(id, self.cfg.node, slices.clone(), msgs.clone(), dst);
+                // Round 0 sends immediately; data already queued locally
+                // may even finish the ring on the spot.
+                self.pump_collectives();
                 self.drain_arbiter();
             }
 
@@ -551,6 +588,15 @@ impl Executor {
 
     fn drain_arbiter(&mut self) {
         for cid in self.arbiter.take_completions() {
+            let newly = self.ooo.retire(cid);
+            self.ready.extend(newly);
+        }
+    }
+
+    /// Advance collective rings and retire completed ones.
+    fn pump_collectives(&mut self) {
+        for cid in self.collectives.pump(&self.arbiter, &self.comm) {
+            self.arbiter.finish_collective(cid);
             let newly = self.ooo.retire(cid);
             self.ready.extend(newly);
         }

@@ -69,7 +69,10 @@ pub fn target_lane(kind: &InstructionKind, host_lanes: usize, id: InstructionId)
         InstructionKind::Send { .. } => Lane::Comm,
         InstructionKind::Receive { .. }
         | InstructionKind::SplitReceive { .. }
-        | InstructionKind::AwaitReceive { .. } => Lane::Arbiter,
+        | InstructionKind::AwaitReceive { .. }
+        // Collective completion is event-driven (ring rounds), like the
+        // receive family: never eligible for eager assignment.
+        | InstructionKind::Collective { .. } => Lane::Arbiter,
     }
 }
 

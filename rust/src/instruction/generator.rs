@@ -127,7 +127,8 @@ pub struct IdagGenerator {
 
 impl IdagGenerator {
     pub fn new(cfg: IdagConfig, buffers: BufferPool) -> Self {
-        assert!(cfg.num_devices >= 1 && cfg.num_devices <= 30);
+        // 2 host memories + devices must fit the 64-bit coherence MemMask.
+        assert!(cfg.num_devices >= 1 && cfg.num_devices <= 62);
         IdagGenerator {
             cfg,
             buffers,
@@ -218,6 +219,13 @@ impl IdagGenerator {
             CommandKind::AwaitPush { buffer, region } => {
                 out.push((*buffer, MemoryId::HOST, region.bounding_box()));
             }
+            CommandKind::Collective { buffer, region, .. } => {
+                // One contiguous host backing for the whole gathered region
+                // (send staging + receive target in one), so the lookahead
+                // window sees collectives exactly like other allocating
+                // commands (§4.3).
+                out.push((*buffer, MemoryId::HOST, region.bounding_box()));
+            }
             _ => {}
         }
         out
@@ -271,6 +279,9 @@ impl IdagGenerator {
             }
             CommandKind::AwaitPush { buffer, region } => {
                 self.compile_await_push(cmd, buffer, region)
+            }
+            CommandKind::Collective { buffer, region, kind, slices } => {
+                self.compile_collective(cmd, buffer, region, kind, slices)
             }
             CommandKind::Horizon => {
                 let id = self.push_front_instruction(InstructionKind::Horizon, Some(&cmd.task));
@@ -569,6 +580,115 @@ impl IdagGenerator {
                 hs.last_writer.update_region(&sub, Some(id));
                 hs.readers_since.update_region(&sub, Vec::new());
             }
+        }
+    }
+
+    /// Collective group operation (all-gather / broadcast): one contiguous
+    /// pinned-host backing for the whole gathered region doubles as send
+    /// staging and receive target; our contribution slice is made coherent
+    /// there, and the executor then runs `n−1` ring rounds over the
+    /// ordinary pilot/send primitives. Pilots for every round we will send
+    /// travel eagerly at generation time (§3.4), exactly like p2p sends.
+    fn compile_collective(
+        &mut self,
+        cmd: &Command,
+        buffer: BufferId,
+        region: Region,
+        kind: crate::command::CollectiveKind,
+        slices: std::sync::Arc<Vec<GridBox>>,
+    ) {
+        self.ensure_state(buffer);
+        let me = self.cfg.node;
+        let n = slices.len();
+        debug_assert!(n as u64 == self.cfg.num_nodes && n >= 2);
+        let own = Region::from(slices[me.0 as usize]);
+        let inbound = region.difference(&own);
+        let bbox = region.bounding_box();
+        let backing = self.ensure_backing(buffer, MemoryId::HOST, bbox, Some(&cmd.task));
+        if !own.is_empty() {
+            self.make_coherent(buffer, MemoryId::HOST, &own, Some(&cmd.task));
+        }
+
+        // Dependencies: dataflow on the producers of our contribution in
+        // host memory (send role), anti-dependencies against anything still
+        // touching the bytes the inbound slices overwrite (receive role).
+        let mut deps: Vec<(InstructionId, DepKind)> = Vec::new();
+        {
+            let st = &self.states[&buffer];
+            let hs = &st.per_mem[MemoryId::HOST.0 as usize];
+            hs.last_writer.for_each_in_region(&own, |_, w| {
+                if let Some(w) = w {
+                    push_dep(&mut deps, *w, DepKind::Dataflow);
+                }
+            });
+            hs.readers_since.for_each_in_region(&inbound, |_, readers| {
+                for r in readers {
+                    push_dep(&mut deps, *r, DepKind::Anti);
+                }
+            });
+            hs.last_writer.for_each_in_region(&inbound, |_, w| {
+                if let Some(w) = w {
+                    push_dep(&mut deps, *w, DepKind::Anti);
+                }
+            });
+        }
+        push_dep(&mut deps, backing.alloc_instr, DepKind::Dataflow);
+
+        // One message id per ring round; round r forwards slice
+        // (me − r) mod n to the successor. Pilots only for non-empty
+        // rounds — the peer's round check skips empty slices by geometry.
+        let succ = NodeId((me.0 + 1) % n as u64);
+        let mut msgs = Vec::with_capacity(n - 1);
+        for r in 0..n - 1 {
+            let msg = MessageId(self.next_msg);
+            self.next_msg += 1;
+            msgs.push(msg);
+            let send_box = slices[(me.0 as usize + n - r) % n];
+            if !send_box.is_empty() {
+                self.pilots.push(Pilot {
+                    from: me,
+                    to: succ,
+                    msg,
+                    buffer,
+                    send_box,
+                    transfer: cmd.task.id,
+                });
+            }
+        }
+
+        let id = self.push_instruction(
+            InstructionKind::Collective {
+                buffer,
+                region: region.clone(),
+                kind,
+                slices,
+                dst_alloc: backing.alloc,
+                dst_box: backing.covers,
+                transfer: cmd.task.id,
+                msgs,
+            },
+            deps,
+            Some(&cmd.task),
+        );
+        self.alloc_users.entry(backing.alloc).or_default().push(id);
+
+        // Tracking: the collective is the local original producer of the
+        // inbound bytes (they exist only on the host after it), and a
+        // reader of our own contribution.
+        let st = self.states.get_mut(&buffer).unwrap();
+        if !inbound.is_empty() {
+            st.coherent.update_region(&inbound, MemMask::single(MemoryId::HOST));
+            let hs = &mut st.per_mem[MemoryId::HOST.0 as usize];
+            hs.last_writer.update_region(&inbound, Some(id));
+            hs.readers_since.update_region(&inbound, Vec::new());
+        }
+        if !own.is_empty() {
+            let hs = &mut st.per_mem[MemoryId::HOST.0 as usize];
+            hs.readers_since.apply_to_region(&own, |rs| {
+                let mut rs = rs.clone();
+                rs.push(id);
+                rs
+            });
         }
     }
 
@@ -1085,6 +1205,8 @@ mod tests {
 
     /// Full pipeline helper: submit tasks, compile CDAG on node 0 of
     /// `nodes`, compile IDAG with `devices`, return all instructions.
+    /// Collective lowering is disabled — these tests pin the paper's p2p
+    /// instruction shapes; the collective path has its own tests below.
     fn build(
         nodes: u64,
         devices: u64,
@@ -1095,6 +1217,7 @@ mod tests {
         f(&mut tm);
         let tasks = tm.take_new_tasks();
         let mut cg = CdagGenerator::new(NodeId(0), nodes, SplitHint::D1, tm.buffers().clone());
+        cg.set_collectives(false);
         for t in &tasks {
             cg.compile(t);
         }
@@ -1505,6 +1628,120 @@ mod tests {
                 assert!(!chunk.is_empty());
             }
         }
+    }
+
+    /// Collective lowering helper: like [`build`] but with collectives on
+    /// and a configurable node id.
+    fn build_collective(
+        node: u64,
+        nodes: u64,
+        devices: u64,
+        f: impl FnOnce(&mut TaskManager),
+    ) -> (Vec<InstructionRef>, Vec<Pilot>, IdagGenerator) {
+        let mut tm = TaskManager::with_horizon_step(u64::MAX);
+        f(&mut tm);
+        let tasks = tm.take_new_tasks();
+        let mut cg = CdagGenerator::new(NodeId(node), nodes, SplitHint::D1, tm.buffers().clone());
+        for t in &tasks {
+            cg.compile(t);
+        }
+        let cmds = cg.take_new_commands();
+        let cfg = IdagConfig {
+            node: NodeId(node),
+            num_nodes: nodes,
+            num_devices: devices,
+            node_hint: SplitHint::D1,
+            device_hint: SplitHint::D1,
+            d2d: true,
+        };
+        let mut ig = IdagGenerator::new(cfg, tm.buffers().clone());
+        for c in &cmds {
+            ig.compile(c);
+        }
+        assert!(ig.dag().check_acyclic());
+        let instrs = ig.take_new_instructions();
+        let pilots = ig.take_pilots();
+        (instrs, pilots, ig)
+    }
+
+    /// The all-gather command compiles into one collective instruction per
+    /// exchange: pilots go to the ring successor only (one per round), the
+    /// gathered region gets a single contiguous host backing, and no
+    /// p2p send/receive instructions remain for that buffer.
+    #[test]
+    fn collective_lowering_ring_pilots_and_backing() {
+        let nodes = 4u64;
+        for node in 0..nodes {
+            let (instrs, pilots, _) =
+                build_collective(node, nodes, 2, |tm| nbody(tm, 2, 4096));
+            let colls: Vec<_> = instrs
+                .iter()
+                .filter_map(|i| match &i.kind {
+                    InstructionKind::Collective { region, slices, msgs, dst_box, .. } => {
+                        Some((region.clone(), slices.clone(), msgs.clone(), *dst_box))
+                    }
+                    _ => None,
+                })
+                .collect();
+            assert_eq!(colls.len(), 1, "node {node}: one exchange in 2 steps");
+            let (region, slices, msgs, dst_box) = &colls[0];
+            assert_eq!(*region, Region::from(GridBox::d1(0, 4096)));
+            assert_eq!(slices.len(), nodes as usize);
+            assert_eq!(msgs.len(), nodes as usize - 1, "one message per ring round");
+            assert!(dst_box.contains(&region.bounding_box()), "contiguous backing");
+            // No p2p left for the gathered buffer.
+            assert_eq!(count(&instrs, "send"), 0);
+            assert_eq!(count(&instrs, "receive"), 0);
+            assert_eq!(count(&instrs, "split receive"), 0);
+            // All pilots target the ring successor, one per round, and
+            // announce the statically-known forwarded slices.
+            let succ = NodeId((node + 1) % nodes);
+            assert_eq!(pilots.len(), nodes as usize - 1);
+            for (r, p) in pilots.iter().enumerate() {
+                assert_eq!(p.to, succ, "node {node} round {r}");
+                assert_eq!(p.from, NodeId(node));
+                assert_eq!(
+                    p.send_box,
+                    slices[((node as usize) + nodes as usize - r) % nodes as usize],
+                    "node {node} round {r} forwards the right slice"
+                );
+            }
+            // The collective depends on the d2h staging of our own slice.
+            let coll = instrs
+                .iter()
+                .find(|i| matches!(i.kind, InstructionKind::Collective { .. }))
+                .unwrap();
+            assert!(!coll.deps.is_empty());
+        }
+    }
+
+    /// Lookahead integration: a collective command reports its host-memory
+    /// requirement, so `would_allocate` treats it like other allocating
+    /// commands (§4.3) and the first host alloc covers the gathered region.
+    #[test]
+    fn collective_requirements_drive_would_allocate() {
+        let mut tm = TaskManager::with_horizon_step(u64::MAX);
+        nbody(&mut tm, 2, 1024);
+        let tasks = tm.take_new_tasks();
+        let mut cg = CdagGenerator::new(NodeId(0), 2, SplitHint::D1, tm.buffers().clone());
+        for t in &tasks {
+            cg.compile(t);
+        }
+        let cmds = cg.take_new_commands();
+        let coll_cmd = cmds
+            .iter()
+            .find(|c| matches!(c.kind, crate::command::CommandKind::Collective { .. }))
+            .expect("nbody all-gather fires");
+        let ig = IdagGenerator::new(
+            IdagConfig { num_nodes: 2, num_devices: 2, ..Default::default() },
+            tm.buffers().clone(),
+        );
+        let reqs = ig.requirements(coll_cmd);
+        assert_eq!(reqs.len(), 1);
+        let (_, mem, bbox) = reqs[0];
+        assert_eq!(mem, MemoryId::HOST);
+        assert_eq!(bbox, GridBox::d1(0, 1024));
+        assert!(ig.would_allocate(coll_cmd), "fresh generator must allocate");
     }
 
     #[test]

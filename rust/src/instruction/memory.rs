@@ -6,26 +6,47 @@ use crate::util::{AllocationId, InstructionId, MemoryId};
 /// A set of memory ids as a bitmask (bit *i* = memory M*i*). Used by the
 /// coherence tracker: which memories hold the newest version of a buffer
 /// fragment (§3.3).
+///
+/// The mask is 64 bits wide: M0 (user) + M1 (pinned host) + up to 62
+/// device-native memories. Memory ids ≥ 64 are rejected with a clear panic
+/// instead of the silent shift overflow a narrower mask would produce
+/// (`1 << m` wraps in release builds — a correctness bug, not a crash).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
-pub struct MemMask(pub u32);
+pub struct MemMask(pub u64);
+
+/// Number of distinct memory ids a [`MemMask`] can track.
+pub const MEM_MASK_BITS: u64 = 64;
+
+#[inline]
+fn mask_bit(m: MemoryId) -> u64 {
+    assert!(
+        m.0 < MEM_MASK_BITS,
+        "memory id {m} out of range for MemMask ({MEM_MASK_BITS} memories max; \
+         2 host memories + {} devices)",
+        MEM_MASK_BITS - 2
+    );
+    1u64 << m.0
+}
 
 impl MemMask {
     pub const EMPTY: MemMask = MemMask(0);
 
     pub fn single(m: MemoryId) -> MemMask {
-        MemMask(1 << m.0)
+        MemMask(mask_bit(m))
     }
 
     pub fn contains(self, m: MemoryId) -> bool {
-        self.0 & (1 << m.0) != 0
+        self.0 & mask_bit(m) != 0
     }
 
     pub fn insert(self, m: MemoryId) -> MemMask {
-        MemMask(self.0 | (1 << m.0))
+        MemMask(self.0 | mask_bit(m))
     }
 
     pub fn iter(self) -> impl Iterator<Item = MemoryId> {
-        (0..32).filter(move |i| self.0 & (1 << i) != 0).map(|i| MemoryId(i as u64))
+        (0..MEM_MASK_BITS)
+            .filter(move |i| self.0 & (1u64 << i) != 0)
+            .map(MemoryId)
     }
 
     pub fn is_empty(self) -> bool {
@@ -97,6 +118,39 @@ mod tests {
         assert!(!m.contains(MemoryId(1)));
         assert_eq!(m.iter().collect::<Vec<_>>(), vec![MemoryId(2), MemoryId(3)]);
         assert!(MemMask::EMPTY.is_empty());
+    }
+
+    /// Regression: `MemMask` was a `u32` whose `1 << m` overflowed at the
+    /// 32-memory boundary (debug panic, silent wrap in release) and whose
+    /// `iter()` hardcoded `0..32`. Ids 31, 32 and 63 must all round-trip.
+    #[test]
+    fn memmask_boundary_ids_round_trip() {
+        for id in [31u64, 32, 63] {
+            let m = MemMask::single(MemoryId(id));
+            assert!(m.contains(MemoryId(id)), "id {id} lost by the mask");
+            assert!(!m.contains(MemoryId(id - 1)));
+            assert_eq!(m.iter().collect::<Vec<_>>(), vec![MemoryId(id)], "iter missed id {id}");
+        }
+        // All three coexist in one mask.
+        let m = MemMask::single(MemoryId(31))
+            .insert(MemoryId(32))
+            .insert(MemoryId(63));
+        assert_eq!(
+            m.iter().collect::<Vec<_>>(),
+            vec![MemoryId(31), MemoryId(32), MemoryId(63)]
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range for MemMask")]
+    fn memmask_rejects_out_of_range_id() {
+        let _ = MemMask::single(MemoryId(64));
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range for MemMask")]
+    fn memmask_contains_rejects_out_of_range_id() {
+        let _ = MemMask::EMPTY.contains(MemoryId(64));
     }
 
     #[test]

@@ -109,6 +109,26 @@ pub enum InstructionKind {
         region: Region,
         split: InstructionId,
     },
+    /// Execute one node's side of a collective group operation (all-gather
+    /// or broadcast) as a ring schedule: `slices.len() − 1` rounds, each
+    /// forwarding one slice to the ring successor over the ordinary
+    /// pilot/send primitives while the receive arbiter lands the
+    /// predecessor's slices in `dst_alloc`. Completion is event-driven
+    /// (after the last round's slice arrived), like the receive family.
+    Collective {
+        buffer: BufferId,
+        /// The full gathered region; every participant holds it afterwards.
+        region: Region,
+        kind: crate::command::CollectiveKind,
+        /// Per-node contribution, indexed by node id (`EMPTY` = non-owner).
+        slices: Arc<Vec<GridBox>>,
+        dst_alloc: AllocationId,
+        dst_box: GridBox,
+        /// Transfer id (the consuming task) matched by inbound pilots.
+        transfer: crate::util::TaskId,
+        /// Pre-allocated message ids, one per ring round.
+        msgs: Vec<MessageId>,
+    },
 
     // ── compute ──────────────────────────────────────────────────────────
     /// Launch a SYCL kernel chunk on one device.
@@ -145,7 +165,8 @@ impl InstructionKind {
             InstructionKind::Send { .. }
             | InstructionKind::Receive { .. }
             | InstructionKind::SplitReceive { .. }
-            | InstructionKind::AwaitReceive { .. } => "p2p",
+            | InstructionKind::AwaitReceive { .. }
+            | InstructionKind::Collective { .. } => "p2p",
             InstructionKind::DeviceKernel { .. } | InstructionKind::HostTask { .. } => "compute",
             InstructionKind::Horizon | InstructionKind::Epoch(_) => "sync",
         }
@@ -161,6 +182,7 @@ impl InstructionKind {
             InstructionKind::Receive { .. } => "receive",
             InstructionKind::SplitReceive { .. } => "split receive",
             InstructionKind::AwaitReceive { .. } => "await receive",
+            InstructionKind::Collective { .. } => "collective",
             InstructionKind::DeviceKernel { .. } => "device kernel",
             InstructionKind::HostTask { .. } => "host task",
             InstructionKind::Horizon => "horizon",
@@ -204,6 +226,14 @@ impl Instruction {
             }
             InstructionKind::AwaitReceive { buffer, region, split } => {
                 format!("{} await-receive {buffer} {region} of {split}", self.id)
+            }
+            InstructionKind::Collective { buffer, region, kind, slices, .. } => {
+                format!(
+                    "{} {} {buffer} {region} ({} nodes)",
+                    self.id,
+                    kind.name(),
+                    slices.len()
+                )
             }
             InstructionKind::DeviceKernel { device, chunk, .. } => {
                 let name = self.task.as_ref().map(|t| t.name.as_str()).unwrap_or("?");

@@ -41,10 +41,14 @@
 //! - [`dag`] — shared DAG storage with horizon-based pruning
 //! - [`buffer`] — typed buffer handles + the buffer metadata registry
 //! - [`task`] — command groups, accessors/range mappers and the TDAG
-//! - [`command`] — per-node CDAG generation with push/await-push (§2.4)
+//! - [`command`] — per-node CDAG generation with push/await-push (§2.4) and
+//!   collective-group detection (all-gather/broadcast → one
+//!   [`Collective`](command::CommandKind::Collective) command instead of
+//!   O(n²) p2p pairs; p2p fallback for every other geometry)
 //! - [`instruction`] — the IDAG: the paper's core contribution (§3)
 //! - [`scheduler`] — scheduler thread with lookahead / resize elision (§4.3)
-//! - [`executor`] — out-of-order engine, receive arbitration, baseline (§4.1–4.2)
+//! - [`executor`] — out-of-order engine, receive arbitration, collective
+//!   ring engine, baseline (§4.1–4.2)
 //! - [`comm`] — the p2p subsystem: the [`Communicator`](comm::Communicator)
 //!   trait, the in-process [`ChannelWorld`](comm::ChannelWorld), the
 //!   loopback/cross-process [`TcpWorld`](comm::TcpWorld) with its

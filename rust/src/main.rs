@@ -129,13 +129,23 @@ fn arg(args: &[String], key: &str, default: &str) -> String {
         .unwrap_or_else(|| default.to_string())
 }
 
+/// Parse a numeric flag with a friendly error instead of a panic.
+fn num_arg(args: &[String], key: &str, default: &str) -> u64 {
+    let raw = arg(args, key, default);
+    raw.parse().unwrap_or_else(|_| {
+        eprintln!("celerity: invalid {key} '{raw}' (expected a non-negative integer)");
+        std::process::exit(2);
+    })
+}
+
 fn main() {
     let args: Vec<String> = std::env::args().collect();
     let cmd = args.get(1).map(String::as_str).unwrap_or("help");
     let app = arg(&args, "--app", "nbody");
-    let nodes: u64 = arg(&args, "--nodes", "2").parse().unwrap();
-    let devices: u64 = arg(&args, "--devices", "2").parse().unwrap();
-    let steps: u64 = arg(&args, "--steps", "2").parse().unwrap();
+    let nodes: u64 = num_arg(&args, "--nodes", "2");
+    let devices: u64 = num_arg(&args, "--devices", "2");
+    let steps: u64 = num_arg(&args, "--steps", "2");
+    let collectives = !args.iter().any(|a| a == "--no-collectives");
 
     match cmd {
         "graph" => {
@@ -203,6 +213,7 @@ fn main() {
                 num_devices: devices,
                 registry: apps::reference_registry(),
                 transport,
+                collectives,
                 ..Default::default()
             };
             let digests: Arc<Mutex<Vec<(u64, u64)>>> = Arc::new(Mutex::new(Vec::new()));
@@ -234,15 +245,35 @@ fn main() {
             }
         }
         "worker" => {
-            let node = NodeId(arg(&args, "--node", "0").parse().unwrap());
+            let node = NodeId(num_arg(&args, "--node", "0"));
             let peers_raw = arg(&args, "--peers", "");
-            let peers: Vec<std::net::SocketAddr> = peers_raw
-                .split(',')
-                .filter(|s| !s.is_empty())
-                .map(|s| s.parse().expect("peer address host:port"))
-                .collect();
-            if peers.len() < 2 || node.0 as usize >= peers.len() {
-                eprintln!("worker needs --peers a,b,... (>= 2 addresses) and --node < len(peers)");
+            let mut peers: Vec<std::net::SocketAddr> = Vec::new();
+            for entry in peers_raw.split(',').filter(|s| !s.is_empty()) {
+                match entry.parse() {
+                    Ok(a) => peers.push(a),
+                    Err(e) => {
+                        eprintln!(
+                            "celerity worker: invalid --peers entry '{entry}': {e} (expected host:port, e.g. 127.0.0.1:7700)"
+                        );
+                        std::process::exit(2);
+                    }
+                }
+            }
+            // A 1-address peer list is a valid degenerate run: one worker
+            // process, no communication — useful for digest comparison.
+            if peers.is_empty() {
+                eprintln!(
+                    "celerity worker: --peers requires at least one host:port address (comma-separated, order defines node ids)"
+                );
+                std::process::exit(2);
+            }
+            if node.0 as usize >= peers.len() {
+                eprintln!(
+                    "celerity worker: --node {} out of range for a {}-address --peers list (node ids are 0..{})",
+                    node.0,
+                    peers.len(),
+                    peers.len() - 1
+                );
                 std::process::exit(2);
             }
             let cfg = ClusterConfig {
@@ -250,10 +281,17 @@ fn main() {
                 num_devices: devices,
                 registry: apps::reference_registry(),
                 transport: Transport::Tcp,
+                collectives,
                 ..Default::default()
             };
-            let comm: CommRef =
-                Arc::new(TcpCommunicator::bind(node, peers).expect("bind worker listener"));
+            let bind_addr = peers[node.0 as usize];
+            let comm: CommRef = match TcpCommunicator::bind(node, peers) {
+                Ok(c) => Arc::new(c),
+                Err(e) => {
+                    eprintln!("celerity worker: cannot bind listener on {bind_addr}: {e}");
+                    std::process::exit(1);
+                }
+            };
             let app_c = app.clone();
             let out: Arc<Mutex<Vec<u8>>> = Arc::new(Mutex::new(Vec::new()));
             let oc = out.clone();
@@ -272,8 +310,8 @@ fn main() {
             println!("usage: celerity graph|sim|run|worker --app nbody|rsim|wavesim [--nodes N] [--devices D] [--steps S]");
             println!("  graph:  --dump tdag,cdag,idag   (Graphviz dot on stdout)");
             println!("  sim:    [--baseline] [--no-lookahead]");
-            println!("  run:    [--transport channel|tcp]   (live in-process cluster)");
-            println!("  worker: --node I --peers a:p,b:p,...   (one node of a multi-process TCP cluster)");
+            println!("  run:    [--transport channel|tcp] [--no-collectives]   (live in-process cluster)");
+            println!("  worker: --node I --peers a:p[,b:p,...] [--no-collectives]   (one node of a multi-process TCP cluster; a single address is a valid 1-node run)");
         }
     }
 }

@@ -40,6 +40,11 @@ pub struct SchedulerConfig {
     /// Flush the queue after this many horizons without an allocating
     /// command (the paper uses 2).
     pub horizon_flush: u32,
+    /// Lower detected all-gather/broadcast patterns to collective commands
+    /// (ring schedule) instead of O(n²) p2p push/await-push pairs. On by
+    /// default; off reproduces the pure p2p protocol (identity tests,
+    /// bench ablation).
+    pub collectives: bool,
 }
 
 impl Default for SchedulerConfig {
@@ -53,6 +58,7 @@ impl Default for SchedulerConfig {
             d2d: true,
             lookahead: true,
             horizon_flush: 2,
+            collectives: true,
         }
     }
 }
@@ -85,7 +91,8 @@ pub struct Scheduler {
 
 impl Scheduler {
     pub fn new(cfg: SchedulerConfig, buffers: BufferPool) -> Self {
-        let cdag = CdagGenerator::new(cfg.node, cfg.num_nodes, cfg.node_hint, buffers.clone());
+        let mut cdag = CdagGenerator::new(cfg.node, cfg.num_nodes, cfg.node_hint, buffers.clone());
+        cdag.set_collectives(cfg.collectives);
         let idag = IdagGenerator::new(
             IdagConfig {
                 node: cfg.node,

@@ -1,0 +1,134 @@
+//! Collective-group lowering: cross-path byte-identity tests.
+//!
+//! The collective ring is an *optimization of the lowering*, not of the
+//! numerics: an all-gather executed as n−1 ring rounds must hand every
+//! kernel exactly the bytes the p2p push/await-push protocol would have —
+//! so nbody's fence results are required to be bitwise identical between
+//! the two lowerings, across node counts and across both transports.
+
+use celerity::apps::{self, nbody};
+use celerity::comm::Transport;
+use celerity::driver::{run_cluster, ClusterConfig};
+use std::sync::{Arc, Mutex};
+
+const BODIES: u64 = 64;
+const STEPS: usize = 3;
+
+/// Run nbody on a live cluster; returns every node's fence bytes of P.
+fn nbody_fences(transport: Transport, nodes: u64, collectives: bool) -> Vec<Vec<u8>> {
+    let cfg = ClusterConfig {
+        num_nodes: nodes,
+        num_devices: 2,
+        registry: apps::reference_registry(),
+        transport,
+        collectives,
+        ..Default::default()
+    };
+    let results: Arc<Mutex<Vec<Vec<u8>>>> = Arc::new(Mutex::new(Vec::new()));
+    let rc = results.clone();
+    let reports = run_cluster(cfg, move |q| {
+        let (p, _v) = nbody::submit(q, BODIES, STEPS).expect("submit nbody");
+        let bytes = q.fence_bytes(p.id()).expect("fence P");
+        rc.lock().unwrap().push(bytes);
+    });
+    for r in &reports {
+        assert!(
+            r.errors.is_empty(),
+            "{nodes} nodes over {} (collectives={collectives}): node {} errors: {:?}",
+            transport.name(),
+            r.node,
+            r.errors
+        );
+    }
+    let results = results.lock().unwrap().clone();
+    assert_eq!(results.len(), nodes as usize);
+    for (i, f) in results.iter().enumerate() {
+        assert_eq!(f.len() as u64, BODIES * 12, "node {i} fence size");
+    }
+    results
+}
+
+/// Acceptance criterion: fence digests byte-identical between the
+/// collective and the p2p lowering, for nbody at 2 and 4 nodes, over both
+/// transports.
+#[test]
+fn nbody_collective_byte_identical_to_p2p_both_transports() {
+    let reference = nbody_fences(Transport::Channel, 1, true);
+    for nodes in [2u64, 4] {
+        for transport in [Transport::Channel, Transport::Tcp] {
+            let p2p = nbody_fences(transport, nodes, false);
+            let coll = nbody_fences(transport, nodes, true);
+            for i in 0..nodes as usize {
+                assert_eq!(
+                    coll[i], p2p[i],
+                    "{nodes} nodes over {}: node {i} collective fence differs from p2p",
+                    transport.name()
+                );
+                assert_eq!(
+                    coll[i], coll[0],
+                    "{nodes} nodes over {}: node {i} disagrees with node 0",
+                    transport.name()
+                );
+            }
+            // And both match the single-node run (no comm at all).
+            assert_eq!(
+                coll[0],
+                reference[0],
+                "{nodes} nodes over {}: collective result differs from 1-node run",
+                transport.name()
+            );
+        }
+    }
+}
+
+/// The collective path must still match the sequential golden model (guards
+/// against a bug identical in both lowerings).
+#[test]
+fn nbody_collective_matches_reference_model() {
+    let got = nbody_fences(Transport::Tcp, 4, true);
+    let want = nbody::reference(BODIES as usize, STEPS);
+    let got_f32: Vec<f32> = got[0]
+        .chunks_exact(4)
+        .map(|c| f32::from_ne_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    assert_eq!(got_f32.len(), want.len());
+    for i in 0..want.len() {
+        assert!(
+            (got_f32[i] - want[i]).abs() < 1e-4,
+            "element {i}: {} vs {}",
+            got_f32[i],
+            want[i]
+        );
+    }
+}
+
+/// wavesim (stencil halo) never matches the collective pattern: enabling
+/// collectives must not change its lowering or results.
+#[test]
+fn wavesim_unaffected_by_collectives_flag() {
+    use celerity::apps::wavesim;
+    let run = |collectives: bool| {
+        let cfg = ClusterConfig {
+            num_nodes: 2,
+            num_devices: 2,
+            registry: apps::reference_registry(),
+            transport: Transport::Channel,
+            collectives,
+            ..Default::default()
+        };
+        let out: Arc<Mutex<Vec<u8>>> = Arc::new(Mutex::new(Vec::new()));
+        let oc = out.clone();
+        let reports = run_cluster(cfg, move |q| {
+            let b = wavesim::submit(q, 32, 16, 4).expect("submit wavesim");
+            let bytes = q.fence_bytes(b.id()).expect("fence");
+            if q.node.0 == 0 {
+                *oc.lock().unwrap() = bytes;
+            }
+        });
+        for r in &reports {
+            assert!(r.errors.is_empty(), "{:?}", r.errors);
+        }
+        out.lock().unwrap().clone()
+    };
+    assert_eq!(run(true), run(false));
+}

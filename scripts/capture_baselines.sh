@@ -1,0 +1,29 @@
+#!/usr/bin/env bash
+# Capture the quick-mode bench baselines the CI gate compares against.
+#
+# The committed BENCH_scheduler.json / BENCH_strong_scaling.json start as
+# "git_rev": "unmeasured" schema placeholders, which makes
+# scripts/bench_gate.py skip. Running this script on a real machine (or via
+# the ci.yml `bench-baseline` workflow_dispatch job) overwrites them with
+# measured quick-mode numbers — committing the result arms the gate.
+#
+# Quick mode is mandatory: CI's smoke jobs run BENCH_QUICK=1, and the gate
+# refuses to compare quick runs against a full-mode baseline.
+set -euo pipefail
+
+repo="$(cd "$(dirname "$0")/.." && pwd)"
+cd "$repo/rust"
+
+echo "== capturing quick-mode micro_scheduler baseline =="
+BENCH_QUICK=1 BENCH_SCHEDULER_JSON="$repo/BENCH_scheduler.json" \
+    cargo bench --bench micro_scheduler
+
+echo "== capturing quick-mode strong_scaling baseline =="
+BENCH_QUICK=1 BENCH_STRONG_SCALING_JSON="$repo/BENCH_strong_scaling.json" \
+    cargo bench --bench strong_scaling
+
+echo
+echo "Baselines written to:"
+echo "  $repo/BENCH_scheduler.json"
+echo "  $repo/BENCH_strong_scaling.json"
+echo "Commit both files to arm scripts/bench_gate.py in CI."
