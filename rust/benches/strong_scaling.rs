@@ -10,7 +10,10 @@
 //! latency, receive-arbitration overhead and the wire cost of the pilot
 //! protocol. nbody — the all-gather workload — additionally runs a
 //! collectives-on/off ablation ("nbody" vs "nbody-p2p" rows): ring
-//! lowering vs the original O(n²) push/await-push pairs.
+//! lowering vs the original O(n²) push/await-push pairs. The p2p rows run
+//! a second ablation for direct device transfers ("-staged" suffix =
+//! `--no-direct-comm`): sends/receives staged through pinned host memory
+//! vs reading/landing in device allocations directly.
 //!
 //!     cargo bench --bench strong_scaling            # full run
 //!     BENCH_QUICK=1 cargo bench --bench strong_scaling   # CI smoke: 1+2 nodes
@@ -29,14 +32,17 @@ use celerity::driver::{run_cluster, ClusterConfig, Queue};
 use std::time::Instant;
 
 struct Row {
-    /// App name; the collectives-off ablation suffixes "-p2p" so the bench
-    /// gate keys the two lowerings separately.
+    /// App name; ablations suffix the key ("-p2p" = collectives off,
+    /// "-staged" = direct device transfers off) so the bench gate keys
+    /// each lowering separately.
     app: String,
     transport: Transport,
     nodes: u64,
     devices: u64,
     /// Collective-group lowering enabled for this row?
     collectives: bool,
+    /// Direct device transfers (p2p staging elision) enabled for this row?
+    direct: bool,
     wall_s: f64,
     /// Total grid-cell updates performed by the workload (throughput unit).
     cells: u64,
@@ -96,6 +102,7 @@ fn run_once(
     nodes: u64,
     devices: u64,
     collectives: bool,
+    direct: bool,
 ) -> f64 {
     let cfg = ClusterConfig {
         num_nodes: nodes,
@@ -103,6 +110,7 @@ fn run_once(
         registry: apps::reference_registry(),
         transport,
         collectives,
+        direct_comm: direct,
         ..Default::default()
     };
     let submit = w.submit.clone();
@@ -121,12 +129,13 @@ fn write_json(rows: &[Row], quick: bool) {
     s.push_str("  \"rows\": [\n");
     for (i, r) in rows.iter().enumerate() {
         s.push_str(&format!(
-            "    {{\"app\": \"{}\", \"transport\": \"{}\", \"nodes\": {}, \"devices\": {}, \"collectives\": {}, \"wall_s\": {:.6}, \"cells\": {}, \"cells_per_s\": {:.1}, \"speedup_vs_1\": {:.3}}}{}\n",
+            "    {{\"app\": \"{}\", \"transport\": \"{}\", \"nodes\": {}, \"devices\": {}, \"collectives\": {}, \"direct\": {}, \"wall_s\": {:.6}, \"cells\": {}, \"cells_per_s\": {:.1}, \"speedup_vs_1\": {:.3}}}{}\n",
             r.app,
             r.transport.name(),
             r.nodes,
             r.devices,
             r.collectives,
+            r.direct,
             r.wall_s,
             r.cells,
             r.cells_per_s,
@@ -152,47 +161,53 @@ fn main() {
 
     println!("== strong_scaling: live cluster, both transports ==");
     println!(
-        "{:>10} {:>9} {:>6} {:>11} {:>10} {:>14} {:>9}",
-        "app", "transport", "nodes", "collectives", "wall (s)", "cells/s", "speedup"
+        "{:>16} {:>9} {:>6} {:>11} {:>7} {:>10} {:>14} {:>9}",
+        "app", "transport", "nodes", "collectives", "direct", "wall (s)", "cells/s", "speedup"
     );
     let mut rows: Vec<Row> = Vec::new();
     for w in &workloads(quick) {
         if !filter.is_empty() && filter != w.app {
             continue;
         }
-        // Collectives-on/off ablation: only nbody's all-gather pattern
-        // triggers collective lowering, so only it gets the off-variant —
-        // keyed "nbody-p2p" so the bench gate tracks both lowerings.
-        let variants: &[bool] = if w.app == "nbody" { &[true, false] } else { &[true] };
-        for &collectives in variants {
+        // Ablations, keyed by app-name suffix so the bench gate tracks
+        // every lowering separately:
+        //   - collectives on/off ("-p2p"): only nbody's all-gather pattern
+        //     triggers collective lowering;
+        //   - direct device transfers on/off ("-staged"): measured on the
+        //     p2p paths they specialize (wavesim's stencil exchange and
+        //     nbody's p2p lowering; the collective ring always stages).
+        let variants: &[(&str, bool, bool)] = match w.app {
+            "nbody" => &[("", true, true), ("-p2p", false, true), ("-p2p-staged", false, false)],
+            "wavesim" => &[("", true, true), ("-staged", true, false)],
+            _ => &[("", true, true)],
+        };
+        for &(suffix, collectives, direct) in variants {
             for &transport in &[Transport::Channel, Transport::Tcp] {
                 let mut base = f64::NAN;
                 for &nodes in node_counts {
-                    let wall = run_once(w, transport, nodes, devices, collectives);
+                    let wall = run_once(w, transport, nodes, devices, collectives, direct);
                     if nodes == 1 {
                         base = wall;
                     }
                     let row = Row {
-                        app: if collectives {
-                            w.app.to_string()
-                        } else {
-                            format!("{}-p2p", w.app)
-                        },
+                        app: format!("{}{}", w.app, suffix),
                         transport,
                         nodes,
                         devices,
                         collectives,
+                        direct,
                         wall_s: wall,
                         cells: w.cells,
                         cells_per_s: w.cells as f64 / wall,
                         speedup_vs_1: base / wall,
                     };
                     println!(
-                        "{:>10} {:>9} {:>6} {:>11} {:>10.4} {:>14.0} {:>9.2}",
+                        "{:>16} {:>9} {:>6} {:>11} {:>7} {:>10.4} {:>14.0} {:>9.2}",
                         row.app,
                         row.transport.name(),
                         row.nodes,
                         row.collectives,
+                        row.direct,
                         row.wall_s,
                         row.cells_per_s,
                         row.speedup_vs_1
@@ -202,6 +217,6 @@ fn main() {
             }
         }
     }
-    println!("\n(live run with reference kernels: wall time includes scheduling, transfers and the transport; tiny problem sizes mean sub-linear speedup is expected — the claim is the *trend*, the channel-vs-tcp delta, and nbody's collectives-vs-p2p delta)");
+    println!("\n(live run with reference kernels: wall time includes scheduling, transfers and the transport; tiny problem sizes mean sub-linear speedup is expected — the claim is the *trend*, the channel-vs-tcp delta, nbody's collectives-vs-p2p delta, and the direct-vs-staged delta on the p2p rows)");
     write_json(&rows, quick);
 }

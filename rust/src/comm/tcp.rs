@@ -103,10 +103,13 @@ impl TcpCommunicator {
         let (tx, rx) = mpsc::channel::<Inbound>();
         let shutdown = Arc::new(AtomicBool::new(false));
         let flag = shutdown.clone();
+        // Thread-spawn failure (resource exhaustion) propagates as an
+        // io::Error through bind/bind_local → driver::run_node, so the
+        // `celerity worker` CLI can print a friendly message and exit 2
+        // instead of aborting on a raw panic.
         std::thread::Builder::new()
             .name(format!("celerity-tcp-accept-{}", node.0))
-            .spawn(move || accept_loop(listener, tx, flag))
-            .expect("spawn tcp accept thread");
+            .spawn(move || accept_loop(listener, tx, flag))?;
         let outbound = peers.iter().map(|_| Mutex::new(None)).collect();
         Ok(TcpCommunicator {
             node,
@@ -396,6 +399,19 @@ mod tests {
             }
             other => panic!("{other:?}"),
         }
+    }
+
+    /// Satellite regression: a bind conflict (port already taken) must
+    /// come back as an `io::Result::Err` for the caller (`driver::run_node`
+    /// / `celerity worker` print it and exit 2), never a panic.
+    #[test]
+    fn bind_conflict_is_an_error_not_a_panic() {
+        let world = TcpWorld::bind_local(2).unwrap();
+        let addrs = world.addrs();
+        // Both listeners are alive: re-binding node 0's address must fail
+        // gracefully.
+        let err = TcpCommunicator::bind(NodeId(0), addrs);
+        assert!(err.is_err(), "duplicate bind must surface as io::Error");
     }
 
     #[test]

@@ -50,6 +50,12 @@ pub struct ClusterConfig {
     /// Lower all-gather/broadcast patterns to collective ring commands
     /// instead of p2p push/await-push pairs (default: on).
     pub collectives: bool,
+    /// Direct device transfers on the p2p path (default: on): sends read
+    /// device-resident data straight from the device backing and receives
+    /// land in the consuming device's allocation, eliding the pinned-host
+    /// (M1) staging round trip. `--no-direct-comm` turns it off (ablation;
+    /// byte-identical results either way).
+    pub direct_comm: bool,
 }
 
 impl Default for ClusterConfig {
@@ -65,6 +71,7 @@ impl Default for ClusterConfig {
             registry: Registry::new(),
             transport: Transport::Channel,
             collectives: true,
+            direct_comm: true,
         }
     }
 }
@@ -318,6 +325,7 @@ fn make_node(cfg: &ClusterConfig, node: NodeId, comm: CommRef) -> Queue {
             lookahead: cfg.lookahead,
             horizon_flush: 2,
             collectives: cfg.collectives,
+            direct_comm: cfg.direct_comm,
         },
         tm.buffers().clone(),
         out_tx,
@@ -360,14 +368,28 @@ where
 /// Run `program` SPMD on an in-process cluster: one OS thread per node,
 /// each with its own scheduler/executor stack, connected by the fabric
 /// selected in [`ClusterConfig::transport`]. Returns per-node reports.
+///
+/// Panics if the transport cannot be brought up (e.g. the loopback TCP
+/// mesh fails to bind); use [`try_run_cluster`] where that should surface
+/// as an `io::Result` instead — the `celerity run` CLI does, printing a
+/// friendly error and exiting 2.
 pub fn run_cluster<F>(cfg: ClusterConfig, program: F) -> Vec<NodeReport>
+where
+    F: Fn(&mut Queue) + Send + Sync + 'static,
+{
+    try_run_cluster(cfg, program).expect("bind cluster transport")
+}
+
+/// [`run_cluster`] with transport-setup failures propagated as
+/// `io::Result` instead of a panic.
+pub fn try_run_cluster<F>(cfg: ClusterConfig, program: F) -> std::io::Result<Vec<NodeReport>>
 where
     F: Fn(&mut Queue) + Send + Sync + 'static,
 {
     assert!(cfg.num_nodes >= 1);
     if cfg.num_nodes == 1 {
         let comm: CommRef = Arc::new(NullCommunicator(NodeId(0)));
-        return vec![run_node(&cfg, NodeId(0), comm, program)];
+        return Ok(vec![run_node(&cfg, NodeId(0), comm, program)]);
     }
     let comms: Vec<CommRef> = match cfg.transport {
         Transport::Channel => ChannelWorld::new(cfg.num_nodes)
@@ -375,8 +397,7 @@ where
             .into_iter()
             .map(|c| Arc::new(c) as CommRef)
             .collect(),
-        Transport::Tcp => TcpWorld::bind_local(cfg.num_nodes)
-            .expect("bind loopback TCP mesh")
+        Transport::Tcp => TcpWorld::bind_local(cfg.num_nodes)?
             .communicators()
             .into_iter()
             .map(|c| Arc::new(c) as CommRef)
@@ -394,10 +415,10 @@ where
                 .expect("spawn node thread"),
         );
     }
-    joins
+    Ok(joins
         .into_iter()
         .map(|j| j.join().expect("node thread panicked"))
-        .collect()
+        .collect())
 }
 
 #[cfg(test)]

@@ -62,6 +62,10 @@ pub struct ReceiveArbiter {
     active: HashMap<InstructionId, ActiveReceive>,
     awaits: HashMap<InstructionId, PendingAwait>,
     completions: Vec<InstructionId>,
+    /// Protocol anomalies tolerated instead of panicking (e.g. a payload
+    /// arriving for an already-retired receive); drained by the executor
+    /// into its `ExecEvent::Error` stream (§4.4).
+    errors: Vec<String>,
     /// Statistics: how many MPI_Irecv-equivalents were posted before the
     /// data arrived (the §4.2 double-buffering-elimination effect).
     pub irecvs_posted_early: u64,
@@ -217,7 +221,17 @@ impl ReceiveArbiter {
     }
 
     fn ingest(&mut self, id: InstructionId, send_box: &crate::grid::GridBox, bytes: &[u8]) {
-        let ar = self.active.get_mut(&id).expect("active receive");
+        // Defensive: the expectation table should only ever name live
+        // receives, but a protocol bug (e.g. overlapping sends draining an
+        // entry early) must drop the payload with a reported §4.4 error,
+        // not panic the executor thread mid-run.
+        let Some(ar) = self.active.get_mut(&id) else {
+            self.errors.push(format!(
+                "receive arbitration: payload for retired receive I{} ({send_box}) dropped",
+                id.0
+            ));
+            return;
+        };
         ar.dst.write_box(send_box, bytes);
         let got = Region::from(*send_box);
         ar.remaining = ar.remaining.difference(&got);
@@ -255,6 +269,11 @@ impl ReceiveArbiter {
     /// Drain instruction completions produced by recent events.
     pub fn take_completions(&mut self) -> Vec<InstructionId> {
         std::mem::take(&mut self.completions)
+    }
+
+    /// Drain tolerated protocol anomalies (§4.4 error stream).
+    pub fn take_errors(&mut self) -> Vec<String> {
+        std::mem::take(&mut self.errors)
     }
 
     /// Anything still outstanding? (Shutdown sanity check.)
@@ -454,6 +473,37 @@ mod tests {
         a.finish_collective(InstructionId(20));
         assert_eq!(a.received_region(InstructionId(20)), None);
         assert!(a.is_idle());
+    }
+
+    /// Panic-hardening: a payload whose receive entry is already gone must
+    /// be dropped with a reported §4.4 error, not a panic — and the report
+    /// flows through `take_errors` (→ `ExecEvent::Error`), not just stderr.
+    #[test]
+    fn payload_for_retired_receive_reports_error_not_panic() {
+        let mut a = ReceiveArbiter::new();
+        let buf = dst();
+        a.register_receive(
+            InstructionId(1),
+            BufferId(0),
+            crate::util::TaskId(1),
+            Region::from(GridBox::d1(0, 10)),
+            buf,
+            false,
+        );
+        a.on_pilot(pilot(1, GridBox::d1(0, 10)));
+        // Second pilot for the same bytes (overlapping-send protocol bug):
+        // the entry drains on the first payload and is garbage collected.
+        a.on_pilot(pilot(2, GridBox::d1(0, 10)));
+        a.on_data(NodeId(1), MessageId(1), payload(&GridBox::d1(0, 10), 1.0));
+        assert_eq!(a.take_completions(), vec![InstructionId(1)]);
+        assert!(a.take_errors().is_empty());
+        // The late duplicate payload hits the retired entry.
+        a.on_data(NodeId(1), MessageId(2), payload(&GridBox::d1(0, 10), 2.0));
+        let errors = a.take_errors();
+        assert_eq!(errors.len(), 1, "{errors:?}");
+        assert!(errors[0].contains("retired receive"), "{errors:?}");
+        assert!(a.take_completions().is_empty());
+        assert!(a.take_errors().is_empty(), "drained");
     }
 
     #[test]

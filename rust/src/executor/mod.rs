@@ -353,6 +353,11 @@ impl Executor {
                 self.dispatch(instr, lane);
             }
 
+            // Spurious completions / protocol anomalies tolerated by the
+            // OoO engine and receive arbiter surface as §4.4 errors rather
+            // than killing the executor thread.
+            self.drain_engine_errors();
+
             if self.shutting_down && self.ooo.is_drained() {
                 break;
             }
@@ -404,6 +409,7 @@ impl Executor {
                 }
             }
         }
+        self.drain_engine_errors();
         let stats = ExecutorStats {
             issued_direct: self.ooo.issued_direct,
             issued_eager: self.ooo.issued_eager,
@@ -420,6 +426,17 @@ impl Executor {
     fn retire_inline(&mut self, id: InstructionId) {
         let newly = self.ooo.retire(id);
         self.ready.extend(newly);
+    }
+
+    /// Forward tolerated engine anomalies (OoO spurious completions,
+    /// arbiter payloads for retired receives) to the event stream.
+    fn drain_engine_errors(&mut self) {
+        for e in self.ooo.take_errors() {
+            let _ = self.events.send(ExecEvent::Error(e));
+        }
+        for e in self.arbiter.take_errors() {
+            let _ = self.events.send(ExecEvent::Error(e));
+        }
     }
 
     fn make_views(&self, bindings: &[AccessBinding]) -> Vec<BindingView> {

@@ -102,6 +102,10 @@ pub struct OooEngine {
     pub issued_eager: u64,
     pub retired: u64,
     pub peak_waiting: usize,
+    /// Spurious completions (duplicate or never-issued ids) tolerated and
+    /// reported instead of corrupting engine state; drained by the
+    /// executor into its `ExecEvent::Error` stream (§4.4).
+    errors: Vec<String>,
 }
 
 impl OooEngine {
@@ -117,7 +121,13 @@ impl OooEngine {
             issued_eager: 0,
             retired: 0,
             peak_waiting: 0,
+            errors: Vec::new(),
         }
+    }
+
+    /// Drain spurious-completion reports (§4.4 error stream).
+    pub fn take_errors(&mut self) -> Vec<String> {
+        std::mem::take(&mut self.errors)
     }
 
     fn is_complete(&self, id: u64) -> bool {
@@ -161,9 +171,24 @@ impl OooEngine {
     }
 
     /// Record a completion; returns instructions that became issuable.
+    ///
+    /// A duplicate completion (id already retired) or an unknown one (id
+    /// never issued — e.g. a confused backend lane or arbitration bug) is
+    /// tolerated: the engine's state is left untouched and the event is
+    /// reported through [`OooEngine::take_errors`] instead of panicking
+    /// the executor thread or double-releasing dependents.
     pub fn retire(&mut self, id: InstructionId) -> Vec<(InstructionRef, Lane)> {
         let id = id.0;
-        debug_assert!(!self.is_complete(id), "double retire of I{id}");
+        if self.is_complete(id) {
+            self.errors
+                .push(format!("duplicate completion of I{id} ignored (already retired)"));
+            return Vec::new();
+        }
+        if !self.in_flight.contains_key(&id) {
+            self.errors
+                .push(format!("completion of I{id} ignored: instruction was never issued"));
+            return Vec::new();
+        }
         self.completed.insert(id);
         self.in_flight.remove(&id);
         self.retired += 1;
@@ -362,6 +387,7 @@ mod tests {
             kind: InstructionKind::Receive {
                 buffer: crate::util::BufferId(0),
                 region: crate::grid::Region::empty(),
+                dst_memory: MemoryId::HOST,
                 dst_alloc: crate::util::AllocationId(1),
                 dst_box: crate::grid::GridBox::d1(0, 1),
                 transfer: crate::util::TaskId(0),
@@ -375,6 +401,7 @@ mod tests {
             kind: InstructionKind::Receive {
                 buffer: crate::util::BufferId(0),
                 region: crate::grid::Region::empty(),
+                dst_memory: MemoryId::HOST,
                 dst_alloc: crate::util::AllocationId(1),
                 dst_box: crate::grid::GridBox::d1(0, 1),
                 transfer: crate::util::TaskId(0),
@@ -398,6 +425,62 @@ mod tests {
         // Later instructions with deps below the watermark admit directly.
         assert!(e.admit(kernel(11, 0, &[3, 7])).is_some());
         assert!(e.completed.len() <= 2);
+    }
+
+    /// Satellite regression: a double completion used to trip a debug
+    /// assert / corrupt release-mode state (`waiting.remove(..).unwrap()`
+    /// family); it must now be tolerated and reported, leaving the engine
+    /// fully functional.
+    #[test]
+    fn duplicate_completion_is_reported_not_fatal() {
+        let mut e = OooEngine::new(2);
+        e.admit(kernel(0, 0, &[])).unwrap();
+        assert!(e.admit(kernel(1, 1, &[0])).is_none());
+        assert_eq!(e.retire(InstructionId(0)).len(), 1);
+        assert!(e.take_errors().is_empty());
+        // Inject the double completion.
+        let newly = e.retire(InstructionId(0));
+        assert!(newly.is_empty(), "duplicate must not re-release dependents");
+        let errors = e.take_errors();
+        assert_eq!(errors.len(), 1, "{errors:?}");
+        assert!(errors[0].contains("duplicate completion of I0"), "{errors:?}");
+        assert_eq!(e.retired, 1, "stats must not double-count");
+        // Engine still drains normally afterwards.
+        assert!(e.retire(InstructionId(1)).is_empty());
+        assert!(e.is_drained());
+        assert!(e.take_errors().is_empty());
+    }
+
+    /// A completion for an id that was never issued (confused lane /
+    /// arbitration bug) is reported and ignored.
+    #[test]
+    fn unknown_completion_is_reported_not_fatal() {
+        let mut e = OooEngine::new(2);
+        e.admit(kernel(0, 0, &[])).unwrap();
+        assert!(e.retire(InstructionId(77)).is_empty());
+        let errors = e.take_errors();
+        assert_eq!(errors.len(), 1);
+        assert!(errors[0].contains("never issued"), "{errors:?}");
+        // The legitimate completion still works.
+        assert!(e.retire(InstructionId(0)).is_empty());
+        assert!(e.is_drained());
+    }
+
+    /// Duplicate completion below the horizon watermark (after compaction)
+    /// is classified as a duplicate too.
+    #[test]
+    fn duplicate_completion_below_watermark_reported() {
+        let mut e = OooEngine::new(2);
+        for i in 0..4 {
+            e.admit(kernel(i, 0, &[])).unwrap();
+            e.retire(InstructionId(i));
+        }
+        e.admit(horizon(4, &[3])).unwrap();
+        e.retire(InstructionId(4));
+        e.compact_below(InstructionId(4));
+        assert!(e.retire(InstructionId(2)).is_empty());
+        let errors = e.take_errors();
+        assert!(errors[0].contains("duplicate"), "{errors:?}");
     }
 
     #[test]

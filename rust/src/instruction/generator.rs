@@ -41,6 +41,15 @@ pub struct IdagConfig {
     /// false, inter-device coherence stages through pinned host memory
     /// (§3.3, consumer-GPU case).
     pub d2d: bool,
+    /// Direct device transfers (§3.3–3.4 specialization): when true,
+    /// device-resident pushed regions are sent straight from the device
+    /// backing (no d2h coherence hop into M1), and inbound transfers whose
+    /// consumer geometry is a single known device land directly in that
+    /// device's allocation (no pinned intermediate + h2d hop). The M1
+    /// detour remains the automatic fallback (unknown/host/multi-consumer
+    /// geometry, consumer splits) and the forced path when false
+    /// (`--no-direct-comm` ablation).
+    pub direct_comm: bool,
 }
 
 impl Default for IdagConfig {
@@ -52,6 +61,7 @@ impl Default for IdagConfig {
             node_hint: SplitHint::D1,
             device_hint: SplitHint::D1,
             d2d: true,
+            direct_comm: true,
         }
     }
 }
@@ -117,6 +127,11 @@ pub struct IdagGenerator {
     next_msg: u64,
     current_horizon: Option<InstructionId>,
     last_epoch: Option<InstructionId>,
+    /// §4.4 correctness errors detected during instruction generation
+    /// (e.g. a push/consume of a region no task has ever written). Drained
+    /// by the scheduler into `SchedulerOut.errors`, surfacing as
+    /// `QueueError::Runtime` instead of a scheduler-thread panic.
+    errors: Vec<String>,
     /// Statistics: total alloc instructions emitted (resize metric, §4.3).
     pub allocs_emitted: u64,
     /// Statistics: total bytes requested by alloc instructions.
@@ -142,6 +157,7 @@ impl IdagGenerator {
             next_msg: 1,
             current_horizon: None,
             last_epoch: None,
+            errors: Vec::new(),
             allocs_emitted: 0,
             bytes_allocated: 0,
             resizes_emitted: 0,
@@ -165,6 +181,11 @@ impl IdagGenerator {
     /// Drain pilot messages generated since the last call.
     pub fn take_pilots(&mut self) -> Vec<Pilot> {
         std::mem::take(&mut self.pilots)
+    }
+
+    /// Drain §4.4 errors detected during instruction generation.
+    pub fn take_errors(&mut self) -> Vec<String> {
+        std::mem::take(&mut self.errors)
     }
 
     pub fn dag(&self) -> &Dag<InstructionRef> {
@@ -212,12 +233,37 @@ impl IdagGenerator {
                 }
             }
             CommandKind::Push { buffer, region, .. } => {
-                for b in region.boxes() {
-                    out.push((*buffer, MemoryId::HOST, *b));
+                // With direct transfers, fragments coherent in *any* memory
+                // are sent from where they live (device, M1 or M0) and need
+                // no pinned staging backing; only never-written fragments
+                // fall back to M1 (and are reported as §4.4 errors when
+                // compiled). Without elision — or before the buffer has any
+                // tracking state — the whole region stages through M1.
+                match self.states.get(buffer) {
+                    Some(st) if self.cfg.direct_comm => {
+                        let mut fallback: Vec<GridBox> = Vec::new();
+                        st.coherent.for_each_in_region(region, |b, mask| {
+                            if mask.is_empty() {
+                                fallback.push(b);
+                            }
+                        });
+                        for b in fallback {
+                            out.push((*buffer, MemoryId::HOST, b));
+                        }
+                    }
+                    _ => {
+                        for b in region.boxes() {
+                            out.push((*buffer, MemoryId::HOST, *b));
+                        }
+                    }
                 }
             }
             CommandKind::AwaitPush { buffer, region } => {
-                out.push((*buffer, MemoryId::HOST, region.bounding_box()));
+                // Direct landing targets the consuming device's memory, so
+                // the lookahead merges this requirement with the consuming
+                // kernel's own allocation instead of a pinned intermediate.
+                let mem = self.receive_memory(&cmd.task, *buffer, region);
+                out.push((*buffer, mem, region.bounding_box()));
             }
             CommandKind::Collective { buffer, region, .. } => {
                 // One contiguous host backing for the whole gathered region
@@ -428,92 +474,184 @@ impl IdagGenerator {
         }
     }
 
-    /// Outbound transfer (§3.4): coherence-copy to pinned host memory, then
-    /// one `send` per (rectangle × original producer) — producer split.
+    /// Outbound transfer (§3.4). With direct transfers enabled, every
+    /// fragment of the pushed region is sent straight from the memory it is
+    /// coherent in — pinned host if already staged, the device backing for
+    /// device-resident data (eliding the d2h coherence hop), or user memory
+    /// for never-touched host-initialized bytes. Without elision (or for
+    /// never-written fragments) the classic path applies: coherence-copy to
+    /// pinned host memory, then send from M1. In every mode the sends are
+    /// producer-split: one `send` per (rectangle × original producer).
     fn compile_push(&mut self, cmd: &Command, buffer: BufferId, region: Region, target: NodeId) {
         self.ensure_state(buffer);
-        // Host backing + coherence for the whole pushed region.
-        for b in region.boxes() {
-            self.ensure_backing(buffer, MemoryId::HOST, *b, Some(&cmd.task));
-        }
-        self.make_coherent(buffer, MemoryId::HOST, &region, Some(&cmd.task));
 
-        // Producer split: one send per original-producer fragment.
-        let st = &self.states[&buffer];
-        let hs = &st.per_mem[MemoryId::HOST.0 as usize];
-        let mut sends: Vec<(GridBox, Option<InstructionId>, Backing)> = Vec::new();
-        hs.last_writer.for_each_in_region(&region, |pbox, producer| {
-            for bk in hs.backings.intersecting(&pbox) {
-                let frag = pbox.intersection(&bk.covers);
-                if !frag.is_empty() {
-                    sends.push((frag, *producer, bk.clone()));
+        // Partition the pushed region by send-source memory (one coherence
+        // scan also collects never-written fragments for the §4.4 report).
+        let mut uninit: Vec<GridBox> = Vec::new();
+        let mut plan: Vec<(MemoryId, Region)> = Vec::new();
+        fn add(plan: &mut Vec<(MemoryId, Region)>, mem: MemoryId, b: GridBox) {
+            match plan.iter_mut().find(|(m, _)| *m == mem) {
+                Some((_, r)) => *r = r.union(&Region::from(b)),
+                None => plan.push((mem, Region::from(b))),
+            }
+        }
+        if self.cfg.direct_comm {
+            let st = &self.states[&buffer];
+            st.coherent.for_each_in_region(&region, |b, mask| {
+                let src = if mask.contains(MemoryId::HOST) {
+                    MemoryId::HOST // already staged — free
+                } else if let Some(d) = mask.first_device() {
+                    d // device-resident: send directly, no d2h hop
+                } else if mask.contains(MemoryId::USER) {
+                    MemoryId::USER // host-initialized, never copied: send from M0
+                } else {
+                    uninit.push(b); // never written (§4.4 below): M1 fallback
+                    MemoryId::HOST
+                };
+                add(&mut plan, src, b);
+            });
+            // Fallback fragments need a backing to read zeroes out of; the
+            // host-coherent ones already have one (coherence implies a
+            // backing), making these calls no-ops for them.
+            let host_part: Option<Region> = plan
+                .iter()
+                .find(|(m, _)| *m == MemoryId::HOST)
+                .map(|(_, r)| r.clone());
+            if let Some(r) = host_part {
+                for b in r.boxes() {
+                    self.ensure_backing(buffer, MemoryId::HOST, *b, Some(&cmd.task));
                 }
             }
-        });
-        for (send_box, producer, backing) in sends {
-            let msg = MessageId(self.next_msg);
-            self.next_msg += 1;
-            let mut deps: Vec<(InstructionId, DepKind)> = Vec::new();
-            if let Some(p) = producer {
-                push_dep(&mut deps, p, DepKind::Dataflow);
+        } else {
+            // Staged lowering: host backing + coherence for the whole
+            // pushed region, one d2h copy per device-resident producer
+            // fragment, sends read M1. (make_coherent skips empty-mask
+            // fragments, so the uninit scan here is the only report.)
+            self.states[&buffer].coherent.for_each_in_region(&region, |b, mask| {
+                if mask.is_empty() {
+                    uninit.push(b);
+                }
+            });
+            for b in region.boxes() {
+                self.ensure_backing(buffer, MemoryId::HOST, *b, Some(&cmd.task));
             }
-            push_dep(&mut deps, backing.alloc_instr, DepKind::Dataflow);
-            let id = self.push_instruction(
-                InstructionKind::Send {
+            self.make_coherent(buffer, MemoryId::HOST, &region, Some(&cmd.task));
+            plan.push((MemoryId::HOST, region.clone()));
+        }
+
+        // §4.4: a push of bytes no task has ever produced means the peer
+        // will consume garbage. Report it (the scheduler forwards this into
+        // the executor's event stream), but still transmit from an M1
+        // backing so the peer's await-push cannot hang.
+        if !uninit.is_empty() {
+            self.errors.push(format!(
+                "push of buffer '{}' to {target}: region {} was never written by any \
+                 task or init (§4.4); transmitting uninitialized bytes",
+                self.states[&buffer].name,
+                Region::from_boxes(uninit),
+            ));
+        }
+
+        // Producer split per source memory: one send per original-producer
+        // fragment × backing overlap.
+        for (src_mem, sub) in plan {
+            let st = &self.states[&buffer];
+            let ms = &st.per_mem[src_mem.0 as usize];
+            let mut sends: Vec<(GridBox, Option<InstructionId>, Backing)> = Vec::new();
+            ms.last_writer.for_each_in_region(&sub, |pbox, producer| {
+                for bk in ms.backings.intersecting(&pbox) {
+                    let frag = pbox.intersection(&bk.covers);
+                    if !frag.is_empty() {
+                        sends.push((frag, *producer, bk.clone()));
+                    }
+                }
+            });
+            for (send_box, producer, backing) in sends {
+                let msg = MessageId(self.next_msg);
+                self.next_msg += 1;
+                let mut deps: Vec<(InstructionId, DepKind)> = Vec::new();
+                if let Some(p) = producer {
+                    push_dep(&mut deps, p, DepKind::Dataflow);
+                }
+                push_dep(&mut deps, backing.alloc_instr, DepKind::Dataflow);
+                let id = self.push_instruction(
+                    InstructionKind::Send {
+                        buffer,
+                        send_box,
+                        target,
+                        msg,
+                        src_memory: src_mem,
+                        src_alloc: backing.alloc,
+                        src_box: backing.covers,
+                    },
+                    deps,
+                    Some(&cmd.task),
+                );
+                self.alloc_users.entry(backing.alloc).or_default().push(id);
+                // The send reads the source memory: later writers of these
+                // bytes (in *that* memory) must wait for it.
+                let st = self.states.get_mut(&buffer).unwrap();
+                st.per_mem[src_mem.0 as usize]
+                    .readers_since
+                    .apply_to_region(&Region::from(send_box), |rs| {
+                        let mut rs = rs.clone();
+                        rs.push(id);
+                        rs
+                    });
+                // Pilot message announced to the peer immediately (§3.4).
+                self.pilots.push(Pilot {
+                    from: self.cfg.node,
+                    to: target,
+                    msg,
                     buffer,
                     send_box,
-                    target,
-                    msg,
-                    src_alloc: backing.alloc,
-                    src_box: backing.covers,
-                },
-                deps,
-                Some(&cmd.task),
-            );
-            self.alloc_users.entry(backing.alloc).or_default().push(id);
-            let st = self.states.get_mut(&buffer).unwrap();
-            st.per_mem[MemoryId::HOST.0 as usize]
-                .readers_since
-                .apply_to_region(&Region::from(send_box), |rs| {
-                    let mut rs = rs.clone();
-                    rs.push(id);
-                    rs
+                    transfer: cmd.task.id,
                 });
-            // Pilot message announced to the peer immediately (§3.4).
-            self.pilots.push(Pilot {
-                from: self.cfg.node,
-                to: target,
-                msg,
-                buffer,
-                send_box,
-                transfer: cmd.task.id,
-            });
+            }
         }
     }
 
-    /// Inbound transfer (§3.4): contiguous host backing for the whole
-    /// awaited region (case b), then either a single `receive` or a
-    /// `split receive` + consumer-split `await receive`s (cases a/c).
+    /// Inbound transfer (§3.4): contiguous backing for the whole awaited
+    /// region (case b), then either a single `receive` or a `split receive`
+    /// + consumer-split `await receive`s (cases a/c).
+    ///
+    /// When direct transfers are enabled and the consumer geometry is a
+    /// single known device consuming the entire region, fragments land
+    /// straight in that device's allocation (h2d from the wire buffer) —
+    /// no pinned intermediate, no staging copy. Everything else (host
+    /// consumers, consumer splits, partial overlap) keeps the M1 detour.
     fn compile_await_push(&mut self, cmd: &Command, buffer: BufferId, region: Region) {
         self.ensure_state(buffer);
         let bbox = region.bounding_box();
-        let backing = self.ensure_backing(buffer, MemoryId::HOST, bbox, Some(&cmd.task));
 
         // Consumer split: which local device chunks of the owning task
         // consume which subregions of the awaited region?
-        let consumers = self.consumer_subregions(&cmd.task, buffer, &region);
+        let by_mem = self.consumer_subregions_by_mem(&cmd.task, buffer, &region);
+        let dst_mem = self.landing_memory(&by_mem, &region);
+        let consumers: Vec<Region> = {
+            let mut out: Vec<Region> = Vec::new();
+            for (_, r) in &by_mem {
+                if !out.iter().any(|o| o == r) {
+                    out.push(r.clone());
+                }
+            }
+            out
+        };
 
-        // Anti-dependencies: incoming data overwrites local bytes.
+        let backing = self.ensure_backing(buffer, dst_mem, bbox, Some(&cmd.task));
+
+        // Anti-dependencies: incoming data overwrites local bytes in the
+        // landing memory.
         let mut deps: Vec<(InstructionId, DepKind)> = Vec::new();
         {
             let st = &self.states[&buffer];
-            let hs = &st.per_mem[MemoryId::HOST.0 as usize];
-            hs.readers_since.for_each_in_region(&region, |_, readers| {
+            let dm = &st.per_mem[dst_mem.0 as usize];
+            dm.readers_since.for_each_in_region(&region, |_, readers| {
                 for r in readers {
                     push_dep(&mut deps, *r, DepKind::Anti);
                 }
             });
-            hs.last_writer.for_each_in_region(&region, |_, w| {
+            dm.last_writer.for_each_in_region(&region, |_, w| {
                 if let Some(w) = w {
                     push_dep(&mut deps, *w, DepKind::Anti);
                 }
@@ -521,12 +659,16 @@ impl IdagGenerator {
         }
         push_dep(&mut deps, backing.alloc_instr, DepKind::Dataflow);
 
+        // A direct device landing implies some consumer covers the whole
+        // region, so it always takes the single-receive path.
         let single = consumers.len() <= 1 || consumers.iter().any(|c| *c == region);
+        debug_assert!(single || dst_mem == MemoryId::HOST);
         if single {
             let id = self.push_instruction(
                 InstructionKind::Receive {
                     buffer,
                     region: region.clone(),
+                    dst_memory: dst_mem,
                     dst_alloc: backing.alloc,
                     dst_box: backing.covers,
                     transfer: cmd.task.id,
@@ -536,15 +678,16 @@ impl IdagGenerator {
             );
             self.alloc_users.entry(backing.alloc).or_default().push(id);
             let st = self.states.get_mut(&buffer).unwrap();
-            st.coherent.update_region(&region, MemMask::single(MemoryId::HOST));
-            let hs = &mut st.per_mem[MemoryId::HOST.0 as usize];
-            hs.last_writer.update_region(&region, Some(id));
-            hs.readers_since.update_region(&region, Vec::new());
+            st.coherent.update_region(&region, MemMask::single(dst_mem));
+            let dm = &mut st.per_mem[dst_mem.0 as usize];
+            dm.last_writer.update_region(&region, Some(id));
+            dm.readers_since.update_region(&region, Vec::new());
         } else {
             let split_id = self.push_instruction(
                 InstructionKind::SplitReceive {
                     buffer,
                     region: region.clone(),
+                    dst_memory: MemoryId::HOST,
                     dst_alloc: backing.alloc,
                     dst_box: backing.covers,
                     transfer: cmd.task.id,
@@ -692,10 +835,16 @@ impl IdagGenerator {
         }
     }
 
-    /// The distinct per-device consumed subregions of an awaited region
-    /// (consumer split, §3.4). Recomputes the hierarchical split of the
-    /// task deterministically.
-    fn consumer_subregions(&self, task: &TaskRef, buffer: BufferId, region: &Region) -> Vec<Region> {
+    /// The per-device-chunk consumed subregions of an awaited region
+    /// (consumer split, §3.4), tagged with the memory each chunk executes
+    /// against. Recomputes the hierarchical split of the task
+    /// deterministically; deduplicated by (memory, region).
+    fn consumer_subregions_by_mem(
+        &self,
+        task: &TaskRef,
+        buffer: BufferId,
+        region: &Region,
+    ) -> Vec<(MemoryId, Region)> {
         let Some(range) = task.kind.execution_range() else {
             return vec![];
         };
@@ -707,14 +856,18 @@ impl IdagGenerator {
             return vec![];
         }
         let on_host = matches!(task.kind, TaskKind::HostTask { .. });
-        let dchunks = if on_host {
-            vec![my_chunk]
+        let dchunks: Vec<(MemoryId, GridBox)> = if on_host {
+            vec![(MemoryId::HOST, my_chunk)]
         } else {
             split_box(&my_chunk, self.cfg.num_devices, self.cfg.device_hint)
+                .into_iter()
+                .enumerate()
+                .map(|(d, c)| (MemoryId::device_native(DeviceId(d as u64)), c))
+                .collect()
         };
         let info = self.buffers.get(buffer);
-        let mut out: Vec<Region> = Vec::new();
-        for c in dchunks {
+        let mut out: Vec<(MemoryId, Region)> = Vec::new();
+        for (mem, c) in dchunks {
             let mut consumed = Region::empty();
             for a in task.kind.accesses() {
                 if a.buffer == buffer && a.mode.is_consumer() {
@@ -722,11 +875,43 @@ impl IdagGenerator {
                 }
             }
             let consumed = consumed.intersection(region);
-            if !consumed.is_empty() && !out.iter().any(|r| *r == consumed) {
-                out.push(consumed);
+            if !consumed.is_empty() && !out.iter().any(|(m, r)| *m == mem && *r == consumed) {
+                out.push((mem, consumed));
             }
         }
         out
+    }
+
+    /// Where inbound fragments of an awaited region should land: the
+    /// consuming device's native memory when direct transfers are on and a
+    /// single known device consumes the *entire* region (and every other
+    /// consumer can be made coherent from it — trivially true with d2d
+    /// copies, or when it is the only consumer); pinned host memory (M1)
+    /// otherwise.
+    fn landing_memory(&self, by_mem: &[(MemoryId, Region)], region: &Region) -> MemoryId {
+        if !self.cfg.direct_comm {
+            return MemoryId::HOST;
+        }
+        by_mem
+            .iter()
+            .find(|(m, r)| {
+                m.is_device()
+                    && r == region
+                    && (self.cfg.d2d || by_mem.iter().all(|(m2, _)| m2 == m))
+            })
+            .map(|(m, _)| *m)
+            .unwrap_or(MemoryId::HOST)
+    }
+
+    /// [`Self::landing_memory`] from a command's task (lookahead support:
+    /// `requirements` must announce the same memory `compile_await_push`
+    /// will allocate in).
+    fn receive_memory(&self, task: &TaskRef, buffer: BufferId, region: &Region) -> MemoryId {
+        if !self.cfg.direct_comm || self.buffers.try_get(buffer).is_none() {
+            return MemoryId::HOST;
+        }
+        let by_mem = self.consumer_subregions_by_mem(task, buffer, region);
+        self.landing_memory(&by_mem, region)
     }
 
     // ──────────────────────────────────────────────────────────────────────
@@ -931,16 +1116,26 @@ impl IdagGenerator {
             }
         });
         for (mbox, mask) in missing {
-            let src = self.pick_source(dst, mask);
-            match src {
-                CopyPath::Direct(src_mem) => {
+            match self.pick_source(dst, mask) {
+                Some(CopyPath::Direct(src_mem)) => {
                     self.emit_copies(buffer, src_mem, dst, &mbox, task);
                 }
-                CopyPath::Staged(src_mem) => {
+                Some(CopyPath::Staged(src_mem)) => {
                     // Device→host, then host→device (§3.3 consumer-GPU path).
                     self.ensure_backing(buffer, MemoryId::HOST, mbox, task);
                     self.emit_copies(buffer, src_mem, MemoryId::HOST, &mbox, task);
                     self.emit_copies(buffer, MemoryId::HOST, dst, &mbox, task);
+                }
+                // No usable copy source (§4.4): report through the
+                // scheduler's error stream instead of panicking the
+                // scheduler thread; the consumer reads the (uninitialized)
+                // destination backing.
+                None => {
+                    self.errors.push(format!(
+                        "cannot make {} of buffer '{}' coherent on {dst}: no readable \
+                         copy source in coherence mask {:#x} (§4.4)",
+                        mbox, self.states[&buffer].name, mask.0
+                    ));
                 }
             }
         }
@@ -1052,22 +1247,25 @@ impl IdagGenerator {
         }
     }
 
-    /// Choose the copy source for data currently coherent in `mask`.
-    fn pick_source(&self, dst: MemoryId, mask: MemMask) -> CopyPath {
+    /// Choose the copy source for data currently coherent in `mask`, or
+    /// `None` when the mask names no readable memory (never-written bytes
+    /// or corrupted tracking state — a §4.4 error for the caller to report,
+    /// not a reason to kill the scheduler thread).
+    fn pick_source(&self, dst: MemoryId, mask: MemMask) -> Option<CopyPath> {
         // Host sources (pinned first, then user memory) are always direct.
         if mask.contains(MemoryId::HOST) {
-            return CopyPath::Direct(MemoryId::HOST);
+            return Some(CopyPath::Direct(MemoryId::HOST));
         }
         if mask.contains(MemoryId::USER) {
-            return CopyPath::Direct(MemoryId::USER);
+            return Some(CopyPath::Direct(MemoryId::USER));
         }
         // Device source.
-        let src_dev = mask.iter().find(|m| m.is_device()).expect("nonempty mask");
-        if !dst.is_device() || self.cfg.d2d {
+        let src_dev = mask.first_device()?;
+        Some(if !dst.is_device() || self.cfg.d2d {
             CopyPath::Direct(src_dev)
         } else {
             CopyPath::Staged(src_dev)
-        }
+        })
     }
 
     // ──────────────────────────────────────────────────────────────────────
@@ -1207,10 +1405,22 @@ mod tests {
     /// `nodes`, compile IDAG with `devices`, return all instructions.
     /// Collective lowering is disabled — these tests pin the paper's p2p
     /// instruction shapes; the collective path has its own tests below.
+    /// Direct device transfers are on (the default); `build_with` exposes
+    /// the `--no-direct-comm` staged lowering.
     fn build(
         nodes: u64,
         devices: u64,
         d2d: bool,
+        f: impl FnOnce(&mut TaskManager),
+    ) -> (Vec<InstructionRef>, Vec<Pilot>, IdagGenerator) {
+        build_with(nodes, devices, d2d, true, f)
+    }
+
+    fn build_with(
+        nodes: u64,
+        devices: u64,
+        d2d: bool,
+        direct_comm: bool,
         f: impl FnOnce(&mut TaskManager),
     ) -> (Vec<InstructionRef>, Vec<Pilot>, IdagGenerator) {
         let mut tm = TaskManager::with_horizon_step(u64::MAX);
@@ -1229,6 +1439,7 @@ mod tests {
             node_hint: SplitHint::D1,
             device_hint: SplitHint::D1,
             d2d,
+            direct_comm,
         };
         let mut ig = IdagGenerator::new(cfg, tm.buffers().clone());
         for c in &cmds {
@@ -1340,10 +1551,11 @@ mod tests {
 
     #[test]
     fn fig4_two_nodes_emits_sends_and_receive() {
-        // Node 0 of 2, 2 devices (Fig 4 exactly): the push command becomes
-        // producer-split sends (one per device producing half of our half),
-        // with pilots; the await-push becomes a receive.
-        let (instrs, pilots, _) = build(2, 2, true, |tm| nbody(tm, 2, 4096));
+        // Node 0 of 2, 2 devices (Fig 4 exactly, staged lowering — direct
+        // transfers off): the push command becomes producer-split sends
+        // (one per device producing half of our half), with pilots; the
+        // await-push becomes a receive.
+        let (instrs, pilots, _) = build_with(2, 2, true, false, |tm| nbody(tm, 2, 4096));
         let sends = count(&instrs, "send");
         // Our half of P (0..2048) is produced by update-kernels on D0
         // (0..1024) and D1 (1024..2048) → 2 producer-split sends (I10/I11).
@@ -1653,6 +1865,7 @@ mod tests {
             node_hint: SplitHint::D1,
             device_hint: SplitHint::D1,
             d2d: true,
+            direct_comm: true,
         };
         let mut ig = IdagGenerator::new(cfg, tm.buffers().clone());
         for c in &cmds {
@@ -1747,18 +1960,250 @@ mod tests {
     #[test]
     fn sends_depend_on_their_producers_only() {
         // Producer split (§3.3): each send depends on the specific kernel
-        // that produced its fragment, not on both.
+        // that produced its fragment, not on both. Holds on the direct path
+        // (sends depend on the producing kernels themselves) exactly as on
+        // the staged path (where they depend on per-producer d2h copies).
         let (instrs, _, _) = build(2, 2, true, |tm| nbody(tm, 2, 4096));
         let sends: Vec<_> = instrs
             .iter()
             .filter(|i| matches!(i.kind, InstructionKind::Send { .. }))
             .collect();
         assert_eq!(sends.len(), 2);
-        // Each send's transitive d2h copy traces back to a distinct update
-        // kernel; the two sends must not share all dependencies.
         assert_ne!(
             sends[0].deps.iter().map(|(d, _)| *d).collect::<Vec<_>>(),
             sends[1].deps.iter().map(|(d, _)| *d).collect::<Vec<_>>()
         );
+    }
+
+    // ── direct device transfers (d2h/h2d staging elision) ───────────────
+
+    /// Count instructions that touch pinned host memory (M1) for `buffer`
+    /// in any role: backings, copies in or out, send sources, receive
+    /// destinations.
+    fn m1_touches(instrs: &[InstructionRef], buffer: BufferId) -> usize {
+        instrs
+            .iter()
+            .filter(|i| match &i.kind {
+                InstructionKind::Alloc { memory, buffer: b, .. } => {
+                    *memory == MemoryId::HOST && *b == Some(buffer)
+                }
+                InstructionKind::Copy { buffer: b, src_memory, dst_memory, .. } => {
+                    *b == buffer
+                        && (*src_memory == MemoryId::HOST || *dst_memory == MemoryId::HOST)
+                }
+                InstructionKind::Send { buffer: b, src_memory, .. } => {
+                    *b == buffer && *src_memory == MemoryId::HOST
+                }
+                InstructionKind::Receive { buffer: b, dst_memory, .. }
+                | InstructionKind::SplitReceive { buffer: b, dst_memory, .. } => {
+                    *b == buffer && *dst_memory == MemoryId::HOST
+                }
+                _ => false,
+            })
+            .count()
+    }
+
+    /// Acceptance: a device-resident push with elision on emits *zero* M1
+    /// staging instructions for that buffer — the send reads the device
+    /// backing directly and the receive lands straight in the consuming
+    /// device's allocation. The staged lowering of the same program pays
+    /// both hops.
+    #[test]
+    fn device_resident_push_elides_all_host_staging() {
+        let find_p = |instrs: &[InstructionRef]| {
+            // nbody buffer P is pushed (peers read it with the All mapper).
+            instrs
+                .iter()
+                .find_map(|i| match &i.kind {
+                    InstructionKind::Send { buffer, .. } => Some(*buffer),
+                    _ => None,
+                })
+                .expect("nbody must push P")
+        };
+
+        // Direct: single device per node — the awaited region's only
+        // consumer is that device, so both ends elide M1 entirely.
+        let (direct, pilots, _) = build(2, 1, true, |tm| nbody(tm, 2, 4096));
+        let p = find_p(&direct);
+        assert_eq!(m1_touches(&direct, p), 0, "elision must leave no M1 staging");
+        for i in &direct {
+            match &i.kind {
+                InstructionKind::Send { src_memory, .. } => {
+                    assert!(src_memory.is_device(), "send must read the device backing");
+                }
+                InstructionKind::Receive { dst_memory, .. } => {
+                    assert!(dst_memory.is_device(), "receive must land in the device");
+                }
+                _ => {}
+            }
+        }
+        assert!(!pilots.is_empty(), "pilot protocol is unchanged");
+
+        // Staged lowering of the identical program: d2h before the send,
+        // M1 landing + h2d after the receive.
+        let (staged, _, _) = build_with(2, 1, true, false, |tm| nbody(tm, 2, 4096));
+        assert!(m1_touches(&staged, p) > 0, "staged path must use M1");
+        let d2h = staged
+            .iter()
+            .filter(|i| matches!(&i.kind,
+                InstructionKind::Copy { src_memory, dst_memory, .. }
+                    if src_memory.is_device() && *dst_memory == MemoryId::HOST))
+            .count();
+        assert!(d2h >= 1, "staged sends are preceded by d2h copies");
+
+        // Same sends/receives/pilots shape either way — only the memory
+        // path differs.
+        assert_eq!(count(&direct, "send"), count(&staged, "send"));
+        assert_eq!(count(&direct, "receive"), count(&staged, "receive"));
+    }
+
+    /// Multi-device node: the producer split keeps one direct send per
+    /// producing device (src M2 and M3), and the full-region consumer
+    /// geometry lands the inbound transfer in one device from which the
+    /// other is made coherent by a d2d copy — no M1 hop anywhere.
+    #[test]
+    fn direct_sends_split_across_producing_devices() {
+        let (instrs, _, _) = build(2, 2, true, |tm| nbody(tm, 2, 4096));
+        let send_srcs: Vec<MemoryId> = instrs
+            .iter()
+            .filter_map(|i| match &i.kind {
+                InstructionKind::Send { src_memory, .. } => Some(*src_memory),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(send_srcs.len(), 2);
+        assert!(send_srcs.contains(&MemoryId(2)) && send_srcs.contains(&MemoryId(3)),
+            "{send_srcs:?}");
+        // No d2h staging copies for the pushed buffer.
+        let d2h = instrs
+            .iter()
+            .filter(|i| matches!(&i.kind,
+                InstructionKind::Copy { src_memory, dst_memory, .. }
+                    if src_memory.is_device() && *dst_memory == MemoryId::HOST))
+            .count();
+        assert_eq!(d2h, 0, "direct sends must not stage through M1");
+        // The receive lands on the first consuming device.
+        let recv_dst: Vec<MemoryId> = instrs
+            .iter()
+            .filter_map(|i| match &i.kind {
+                InstructionKind::Receive { dst_memory, .. } => Some(*dst_memory),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(recv_dst, vec![MemoryId(2)]);
+    }
+
+    /// The consumer-split fallback: disjoint per-device consumers keep the
+    /// pinned-host detour (split receive into M1) even with elision on.
+    #[test]
+    fn consumer_split_falls_back_to_host_staging() {
+        let (instrs, _, _) = build(2, 2, true, |tm| {
+            let r = Range::d1(4096);
+            let a = tm.create_buffer::<f64>("A", r, true).id();
+            let b = tm.create_buffer::<f64>("B", r, false).id();
+            tm.submit(TaskDecl::device("w", r).read_write(a, RangeMapper::OneToOne));
+            tm.submit(
+                TaskDecl::device("shift", r)
+                    .read(a, RangeMapper::Shift(crate::grid::Point::d1(2048)))
+                    .write(b, RangeMapper::OneToOne),
+            );
+        });
+        let split_dst: Vec<MemoryId> = instrs
+            .iter()
+            .filter_map(|i| match &i.kind {
+                InstructionKind::SplitReceive { dst_memory, .. } => Some(*dst_memory),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(split_dst, vec![MemoryId::HOST]);
+    }
+
+    /// Satellite regression: a push of a region no task has ever written
+    /// must not panic the generator (it used to die in `pick_source` /
+    /// leave the peer hanging); it reports a §4.4 error, still emits the
+    /// send (uninitialized bytes from an M1 backing) so the peer's
+    /// await-push completes, and stays usable afterwards.
+    #[test]
+    fn push_of_never_written_region_reports_error_not_panic() {
+        let mut tm = TaskManager::with_horizon_step(u64::MAX);
+        let r = Range::d1(256);
+        let a = tm.create_buffer::<f64>("A", r, false).id();
+        // A task only so the hand-built command has a TaskRef.
+        tm.submit(TaskDecl::device("w", r).write(a, RangeMapper::OneToOne));
+        let tasks = tm.take_new_tasks();
+        let task = tasks
+            .iter()
+            .find(|t| matches!(t.kind, TaskKind::DeviceCompute { .. }))
+            .unwrap()
+            .clone();
+
+        let mut ig = IdagGenerator::new(
+            IdagConfig { num_nodes: 2, ..Default::default() },
+            tm.buffers().clone(),
+        );
+        let push = crate::command::Command {
+            id: crate::util::CommandId(99),
+            task,
+            kind: crate::command::CommandKind::Push {
+                buffer: a,
+                region: Region::from(GridBox::d1(0, 256)),
+                target: NodeId(1),
+            },
+            deps: vec![],
+        };
+        ig.compile(&push); // must not panic
+        let errors = ig.take_errors();
+        assert_eq!(errors.len(), 1, "{errors:?}");
+        assert!(errors[0].contains("never written"), "{errors:?}");
+        let instrs = ig.take_new_instructions();
+        assert_eq!(
+            instrs.iter().filter(|i| i.kind.mnemonic() == "send").count(),
+            1,
+            "liveness: the peer's await still gets bytes"
+        );
+        assert_eq!(ig.take_pilots().len(), 1);
+        assert!(ig.dag().check_acyclic());
+        // The generator keeps working after the error.
+        ig.compile(&push);
+        assert!(!ig.take_errors().is_empty());
+    }
+
+    /// Lookahead integration: with direct transfers the await-push reports
+    /// the consuming *device* memory as its requirement, so the first
+    /// device alloc covers the received region and the kernel's own
+    /// accesses in one backing.
+    #[test]
+    fn await_push_requirements_target_consuming_device() {
+        let mut tm = TaskManager::with_horizon_step(u64::MAX);
+        nbody(&mut tm, 2, 1024);
+        let tasks = tm.take_new_tasks();
+        let mut cg = CdagGenerator::new(NodeId(0), 2, SplitHint::D1, tm.buffers().clone());
+        cg.set_collectives(false);
+        for t in &tasks {
+            cg.compile(t);
+        }
+        let cmds = cg.take_new_commands();
+        let await_cmd = cmds
+            .iter()
+            .find(|c| matches!(c.kind, crate::command::CommandKind::AwaitPush { .. }))
+            .expect("nbody p2p lowering awaits the peer half");
+        let direct = IdagGenerator::new(
+            IdagConfig { num_nodes: 2, num_devices: 1, ..Default::default() },
+            tm.buffers().clone(),
+        );
+        let reqs = direct.requirements(await_cmd);
+        assert_eq!(reqs.len(), 1);
+        assert!(reqs[0].1.is_device(), "direct landing requirement: {reqs:?}");
+        let staged = IdagGenerator::new(
+            IdagConfig {
+                num_nodes: 2,
+                num_devices: 1,
+                direct_comm: false,
+                ..Default::default()
+            },
+            tm.buffers().clone(),
+        );
+        let reqs = staged.requirements(await_cmd);
+        assert_eq!(reqs[0].1, MemoryId::HOST, "staged landing requirement");
     }
 }

@@ -52,6 +52,14 @@ impl MemMask {
     pub fn is_empty(self) -> bool {
         self.0 == 0
     }
+
+    /// The lowest-numbered device-native memory in the set, if any.
+    /// Deterministic (lowest id wins), so every replica of the generator
+    /// picks the same direct-send source for a multi-device-coherent
+    /// fragment.
+    pub fn first_device(self) -> Option<MemoryId> {
+        self.iter().find(|m| m.is_device())
+    }
 }
 
 /// One buffer-backing allocation on a specific memory (§3.2): covers a
@@ -118,6 +126,20 @@ mod tests {
         assert!(!m.contains(MemoryId(1)));
         assert_eq!(m.iter().collect::<Vec<_>>(), vec![MemoryId(2), MemoryId(3)]);
         assert!(MemMask::EMPTY.is_empty());
+    }
+
+    #[test]
+    fn first_device_skips_host_memories() {
+        assert_eq!(MemMask::EMPTY.first_device(), None);
+        assert_eq!(MemMask::single(MemoryId::USER).first_device(), None);
+        assert_eq!(
+            MemMask::single(MemoryId::HOST).insert(MemoryId(1)).first_device(),
+            None
+        );
+        let m = MemMask::single(MemoryId::USER)
+            .insert(MemoryId(3))
+            .insert(MemoryId(5));
+        assert_eq!(m.first_device(), Some(MemoryId(3)), "lowest device id wins");
     }
 
     /// Regression: `MemMask` was a `u32` whose `1 << m` overflowed at the

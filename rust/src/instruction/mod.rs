@@ -74,30 +74,41 @@ pub enum InstructionKind {
 
     // ── peer-to-peer communication ───────────────────────────────────────
     /// Perform an `MPI_Isend` of one rectangular box to `target`. The
-    /// matching pilot message travels eagerly (§3.4).
+    /// matching pilot message travels eagerly (§3.4). `src_memory` records
+    /// which memory the payload is read from: pinned host memory (M1) on
+    /// the staged path, or a device-native / user memory directly when the
+    /// d2h staging hop has been elided (direct device transfers).
     Send {
         buffer: BufferId,
         send_box: GridBox,
         target: NodeId,
         msg: MessageId,
+        src_memory: MemoryId,
         src_alloc: AllocationId,
         src_box: GridBox,
     },
     /// Perform one or more `MPI_Irecv`s covering `region` into a contiguous
-    /// host allocation; sender geometry resolved by receive arbitration.
+    /// allocation; sender geometry resolved by receive arbitration.
+    /// `dst_memory` is pinned host memory (M1) on the staged path, or the
+    /// consuming device's native memory when fragments land directly in the
+    /// device allocation (receive-side staging elision).
     Receive {
         buffer: BufferId,
         region: Region,
+        dst_memory: MemoryId,
         dst_alloc: AllocationId,
         dst_box: GridBox,
         /// Transfer id: the consuming task (matches the pilots' `transfer`).
         transfer: crate::util::TaskId,
     },
     /// Initiate a receive whose completion is consumed piecewise by
-    /// `AwaitReceive` instructions (consumer split, §3.4 case a/c).
+    /// `AwaitReceive` instructions (consumer split, §3.4 case a/c). Always
+    /// lands in pinned host memory (the consumer split means no single
+    /// device owns the whole region — the M1 detour is the fallback).
     SplitReceive {
         buffer: BufferId,
         region: Region,
+        dst_memory: MemoryId,
         dst_alloc: AllocationId,
         dst_box: GridBox,
         /// Transfer id: the consuming task (matches the pilots' `transfer`).
@@ -215,14 +226,14 @@ impl Instruction {
             InstructionKind::Free { alloc, memory, .. } => {
                 format!("{} free {alloc} on {memory}", self.id)
             }
-            InstructionKind::Send { buffer, send_box, target, msg, .. } => {
-                format!("{} send {buffer} {send_box} →{target} {msg}", self.id)
+            InstructionKind::Send { buffer, send_box, target, msg, src_memory, .. } => {
+                format!("{} send {buffer} {send_box} from {src_memory} →{target} {msg}", self.id)
             }
-            InstructionKind::Receive { buffer, region, .. } => {
-                format!("{} receive {buffer} {region}", self.id)
+            InstructionKind::Receive { buffer, region, dst_memory, .. } => {
+                format!("{} receive {buffer} {region} into {dst_memory}", self.id)
             }
-            InstructionKind::SplitReceive { buffer, region, .. } => {
-                format!("{} split-receive {buffer} {region}", self.id)
+            InstructionKind::SplitReceive { buffer, region, dst_memory, .. } => {
+                format!("{} split-receive {buffer} {region} into {dst_memory}", self.id)
             }
             InstructionKind::AwaitReceive { buffer, region, split } => {
                 format!("{} await-receive {buffer} {region} of {split}", self.id)
@@ -280,6 +291,7 @@ mod tests {
                 InstructionKind::Receive {
                     buffer: BufferId(0),
                     region: Region::empty(),
+                    dst_memory: MemoryId::HOST,
                     dst_alloc: AllocationId(0),
                     dst_box: GridBox::EMPTY,
                     transfer: crate::util::TaskId(0),

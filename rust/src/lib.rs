@@ -45,7 +45,11 @@
 //!   collective-group detection (all-gather/broadcast → one
 //!   [`Collective`](command::CommandKind::Collective) command instead of
 //!   O(n²) p2p pairs; p2p fallback for every other geometry)
-//! - [`instruction`] — the IDAG: the paper's core contribution (§3)
+//! - [`instruction`] — the IDAG: the paper's core contribution (§3),
+//!   including the direct-device-transfer lowering (sends read
+//!   device-resident data in place, receives land in the consuming
+//!   device's allocation; the pinned-host M1 detour is the fallback and
+//!   the `--no-direct-comm` ablation)
 //! - [`scheduler`] — scheduler thread with lookahead / resize elision (§4.3)
 //! - [`executor`] — out-of-order engine, receive arbitration, collective
 //!   ring engine, baseline (§4.1–4.2)

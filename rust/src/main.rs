@@ -20,7 +20,7 @@
 use celerity::apps;
 use celerity::command::{CdagGenerator, SplitHint};
 use celerity::comm::{CommRef, TcpCommunicator, Transport};
-use celerity::driver::{run_cluster, run_node, ClusterConfig, Queue};
+use celerity::driver::{run_node, try_run_cluster, ClusterConfig, Queue};
 use celerity::grid::{GridBox, Range, Region};
 use celerity::instruction::{IdagConfig, IdagGenerator};
 use celerity::sim::{simulate, ExecModel, SimConfig};
@@ -146,6 +146,7 @@ fn main() {
     let devices: u64 = num_arg(&args, "--devices", "2");
     let steps: u64 = num_arg(&args, "--steps", "2");
     let collectives = !args.iter().any(|a| a == "--no-collectives");
+    let direct_comm = !args.iter().any(|a| a == "--no-direct-comm");
 
     match cmd {
         "graph" => {
@@ -190,6 +191,7 @@ fn main() {
                     ExecModel::Idag
                 },
                 lookahead: !args.iter().any(|a| a == "--no-lookahead"),
+                direct_comm,
                 ..Default::default()
             };
             let r = simulate(&cfg, |tm| build_app(tm, &app, steps));
@@ -214,16 +216,23 @@ fn main() {
                 registry: apps::reference_registry(),
                 transport,
                 collectives,
+                direct_comm,
                 ..Default::default()
             };
             let digests: Arc<Mutex<Vec<(u64, u64)>>> = Arc::new(Mutex::new(Vec::new()));
             let dc = digests.clone();
             let app_c = app.clone();
             let t0 = std::time::Instant::now();
-            let reports = run_cluster(cfg, move |q| {
+            let reports = match try_run_cluster(cfg, move |q| {
                 let bytes = run_live_app(q, &app_c, steps);
                 dc.lock().unwrap().push((q.node.0, digest(&bytes)));
-            });
+            }) {
+                Ok(r) => r,
+                Err(e) => {
+                    eprintln!("celerity run: cannot bring up the {} transport: {e}", transport.name());
+                    std::process::exit(2);
+                }
+            };
             let wall = t0.elapsed().as_secs_f64();
             for r in &reports {
                 for e in &r.errors {
@@ -282,14 +291,17 @@ fn main() {
                 registry: apps::reference_registry(),
                 transport: Transport::Tcp,
                 collectives,
+                direct_comm,
                 ..Default::default()
             };
             let bind_addr = peers[node.0 as usize];
             let comm: CommRef = match TcpCommunicator::bind(node, peers) {
                 Ok(c) => Arc::new(c),
                 Err(e) => {
+                    // Environment/config problem, not an application error:
+                    // exit 2 like the other CLI-usage failures.
                     eprintln!("celerity worker: cannot bind listener on {bind_addr}: {e}");
-                    std::process::exit(1);
+                    std::process::exit(2);
                 }
             };
             let app_c = app.clone();
@@ -309,9 +321,9 @@ fn main() {
         _ => {
             println!("usage: celerity graph|sim|run|worker --app nbody|rsim|wavesim [--nodes N] [--devices D] [--steps S]");
             println!("  graph:  --dump tdag,cdag,idag   (Graphviz dot on stdout)");
-            println!("  sim:    [--baseline] [--no-lookahead]");
-            println!("  run:    [--transport channel|tcp] [--no-collectives]   (live in-process cluster)");
-            println!("  worker: --node I --peers a:p[,b:p,...] [--no-collectives]   (one node of a multi-process TCP cluster; a single address is a valid 1-node run)");
+            println!("  sim:    [--baseline] [--no-lookahead] [--no-direct-comm]");
+            println!("  run:    [--transport channel|tcp] [--no-collectives] [--no-direct-comm]   (live in-process cluster)");
+            println!("  worker: --node I --peers a:p[,b:p,...] [--no-collectives] [--no-direct-comm]   (one node of a multi-process TCP cluster; a single address is a valid 1-node run)");
         }
     }
 }

@@ -45,6 +45,11 @@ pub struct SchedulerConfig {
     /// default; off reproduces the pure p2p protocol (identity tests,
     /// bench ablation).
     pub collectives: bool,
+    /// Direct device transfers: elide the pinned-host (M1) staging hops on
+    /// the p2p send/receive path when the data is device-resident and the
+    /// consumer geometry is known. On by default; off (`--no-direct-comm`)
+    /// reproduces the fully staged lowering (ablation).
+    pub direct_comm: bool,
 }
 
 impl Default for SchedulerConfig {
@@ -59,6 +64,7 @@ impl Default for SchedulerConfig {
             lookahead: true,
             horizon_flush: 2,
             collectives: true,
+            direct_comm: true,
         }
     }
 }
@@ -101,6 +107,7 @@ impl Scheduler {
                 node_hint: cfg.node_hint,
                 device_hint: cfg.device_hint,
                 d2d: cfg.d2d,
+                direct_comm: cfg.direct_comm,
             },
             buffers,
         );
@@ -166,6 +173,13 @@ impl Scheduler {
     /// Scheduler errors from command generation (§4.4).
     pub fn take_errors(&mut self) -> Vec<crate::command::CommandError> {
         self.cdag.take_errors()
+    }
+
+    /// §4.4 errors from instruction generation (e.g. a push of a region no
+    /// task ever wrote) — reported instead of panicking the scheduler
+    /// thread, merged into `SchedulerOut.errors` alongside CDAG errors.
+    pub fn take_idag_errors(&mut self) -> Vec<String> {
+        self.idag.take_errors()
     }
 
     pub fn idag(&self) -> &IdagGenerator {
@@ -460,5 +474,38 @@ mod tests {
         assert_eq!(sched.instructions_generated as usize, instrs.len());
         assert!(sched.commands_generated >= 8);
         assert!(sched.max_queue_len >= 8);
+    }
+
+    /// Satellite regression: IDAG-level §4.4 errors (push of a never-
+    /// written region) flow out through `take_idag_errors` — the scheduler
+    /// thread forwards them in `SchedulerOut.errors` instead of dying.
+    #[test]
+    fn idag_errors_surface_through_scheduler() {
+        let mut tm = TaskManager::new();
+        let r = Range::d1(64);
+        let a = tm.create_buffer::<f64>("A", r, false).id();
+        tm.submit(TaskDecl::device("w", r).write(a, RangeMapper::OneToOne));
+        let tasks = tm.take_new_tasks();
+        let task = tasks.last().unwrap().clone();
+        let mut sched = Scheduler::new(
+            SchedulerConfig { num_nodes: 2, ..Default::default() },
+            tm.buffers().clone(),
+        );
+        // Drive the pathological command straight into the scheduler's
+        // IDAG (the CDAG never produces it for well-formed programs).
+        sched.idag.compile(&crate::command::Command {
+            id: crate::util::CommandId(1),
+            task,
+            kind: crate::command::CommandKind::Push {
+                buffer: a,
+                region: Region::from(GridBox::d1(0, 64)),
+                target: crate::util::NodeId(1),
+            },
+            deps: vec![],
+        });
+        let errors = sched.take_idag_errors();
+        assert_eq!(errors.len(), 1, "{errors:?}");
+        assert!(errors[0].contains("never written"));
+        assert!(sched.take_idag_errors().is_empty(), "drained");
     }
 }

@@ -128,8 +128,9 @@ impl SchedulerHandle {
                                     cfg_node, instructions.len(), pilots.len(), sched.queue_len()
                                 );
                             }
-                            let errors: Vec<String> =
+                            let mut errors: Vec<String> =
                                 sched.take_errors().iter().map(|e| e.to_string()).collect();
+                            errors.extend(sched.take_idag_errors());
                             if !instructions.is_empty() || !pilots.is_empty() || !errors.is_empty()
                             {
                                 let mut batch = SchedulerOut::batch(instructions, pilots);
@@ -139,8 +140,9 @@ impl SchedulerHandle {
                         }
                         Ok(SchedulerMsg::Shutdown) | Err(()) => {
                             let (instructions, pilots) = sched.flush_now();
-                            let errors: Vec<String> =
+                            let mut errors: Vec<String> =
                                 sched.take_errors().iter().map(|e| e.to_string()).collect();
+                            errors.extend(sched.take_idag_errors());
                             if !instructions.is_empty() || !pilots.is_empty() || !errors.is_empty()
                             {
                                 let mut batch = SchedulerOut::batch(instructions, pilots);

@@ -103,6 +103,9 @@ pub struct SimConfig {
     /// Lookahead only applies to the IDAG executor; the baseline has no
     /// scheduler queue.
     pub lookahead: bool,
+    /// Direct device transfers (p2p staging elision) — IDAG executor only;
+    /// the §2.5 baseline always stages through pinned host memory.
+    pub direct_comm: bool,
     pub hint: SplitHint,
     pub cost: CostModel,
     /// Record a per-instruction timeline (Fig 7).
@@ -116,6 +119,7 @@ impl Default for SimConfig {
             num_devices: 4,
             exec: ExecModel::Idag,
             lookahead: true,
+            direct_comm: true,
             hint: SplitHint::D1,
             cost: CostModel::default(),
             record_trace: false,
@@ -208,6 +212,7 @@ where
                         // defaults to collectives — see the strong_scaling
                         // bench ablation for the measured delta).
                         collectives: false,
+                        direct_comm: cfg.direct_comm,
                     },
                     buffers.clone(),
                 );
@@ -253,6 +258,9 @@ where
                         node_hint: cfg.hint,
                         device_hint: cfg.hint,
                         d2d: true,
+                        // §2.5 ad-hoc memory management predates the direct
+                        // device path: every transfer stages through M1.
+                        direct_comm: false,
                     },
                     buffers.clone(),
                 );
@@ -482,10 +490,19 @@ where
                 chunk.area() as f64 * work_per_item / cost.host_flops,
                 "host",
             ),
-            InstructionKind::Send { send_box, buffer, .. } => {
+            InstructionKind::Send { send_box, buffer, src_memory, .. } => {
                 let bytes =
                     (send_box.area() * buffers.get(*buffer).elem_size as u64) as f64;
-                (Some(Res::Nic), bytes / cost.net_bw, "send")
+                // A direct-from-device send streams over the device↔host
+                // link into the NIC (GPUDirect-style): the staged d2h copy
+                // hop is gone, but the effective bandwidth is the min of
+                // the two links. Host-sourced sends see the NIC alone.
+                let bw = if src_memory.is_device() {
+                    cost.net_bw.min(cost.d2h_bw)
+                } else {
+                    cost.net_bw
+                };
+                (Some(Res::Nic), bytes / bw, "send")
             }
             InstructionKind::Receive { .. }
             | InstructionKind::SplitReceive { .. }
@@ -691,6 +708,23 @@ mod tests {
         );
         // And even without lookahead, the OoO engine keeps the IDAG ahead.
         assert!(rn.makespan < rb.makespan, "{} vs {}", rn.makespan, rb.makespan);
+    }
+
+    /// Direct device transfers drop the staged d2h/h2d hops from the
+    /// simulated instruction stream: same wire bytes, fewer instructions.
+    #[test]
+    fn direct_transfers_elide_staging_in_the_cost_model() {
+        let direct = SimConfig { num_nodes: 2, num_devices: 2, ..Default::default() };
+        let staged = SimConfig { direct_comm: false, ..direct.clone() };
+        let rd = simulate(&direct, nbody_build(1 << 12, 4));
+        let rs = simulate(&staged, nbody_build(1 << 12, 4));
+        assert_eq!(rd.comm_bytes, rs.comm_bytes, "the wire traffic is unchanged");
+        assert!(
+            rd.instructions < rs.instructions,
+            "staging copies must disappear: direct={} staged={}",
+            rd.instructions,
+            rs.instructions
+        );
     }
 
     #[test]

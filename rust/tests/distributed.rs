@@ -7,9 +7,9 @@
 //! by the kernel, making bitwise equality the right bar (any divergence
 //! means a fragment landed at the wrong offset or a transfer was dropped).
 
-use celerity::apps::{self, wavesim};
+use celerity::apps::{self, nbody, wavesim};
 use celerity::comm::{CommRef, TcpWorld, Transport};
-use celerity::driver::{run_cluster, run_node, ClusterConfig};
+use celerity::driver::{run_cluster, run_node, ClusterConfig, Queue};
 use celerity::util::NodeId;
 use std::sync::{Arc, Mutex};
 
@@ -17,39 +17,83 @@ const ROWS: u64 = 32;
 const COLS: u64 = 16;
 const STEPS: usize = 4;
 
-/// Run wavesim on a live cluster and return every node's fence bytes.
-fn wavesim_fences(transport: Transport, nodes: u64, devices: u64) -> Vec<Vec<u8>> {
-    let cfg = ClusterConfig {
+/// Run `submit` on a live cluster under `cfg` and return every node's
+/// fence bytes (all nodes fence the same buffer).
+fn cluster_fences(
+    cfg: ClusterConfig,
+    expected_bytes: u64,
+    submit: impl Fn(&mut Queue) -> Vec<u8> + Send + Sync + 'static,
+) -> Vec<Vec<u8>> {
+    let nodes = cfg.num_nodes;
+    let what = format!(
+        "{} nodes over {} (direct_comm={}, collectives={})",
+        nodes,
+        cfg.transport.name(),
+        cfg.direct_comm,
+        cfg.collectives
+    );
+    let results: Arc<Mutex<Vec<Vec<u8>>>> = Arc::new(Mutex::new(Vec::new()));
+    let rc = results.clone();
+    let reports = run_cluster(cfg, move |q| {
+        let bytes = submit(q);
+        rc.lock().unwrap().push(bytes);
+    });
+    for r in &reports {
+        assert!(r.errors.is_empty(), "{what}: node {} errors: {:?}", r.node, r.errors);
+    }
+    let results = results.lock().unwrap().clone();
+    assert_eq!(results.len(), nodes as usize);
+    for (i, f) in results.iter().enumerate() {
+        assert_eq!(f.len() as u64, expected_bytes, "{what}: node {i} fence size");
+    }
+    results
+}
+
+fn wavesim_cfg(transport: Transport, nodes: u64, devices: u64, direct: bool) -> ClusterConfig {
+    ClusterConfig {
         num_nodes: nodes,
         num_devices: devices,
         registry: apps::reference_registry(),
         transport,
+        direct_comm: direct,
+        ..Default::default()
+    }
+}
+
+/// Run wavesim on a live cluster and return every node's fence bytes.
+fn wavesim_fences(transport: Transport, nodes: u64, devices: u64) -> Vec<Vec<u8>> {
+    wavesim_fences_direct(transport, nodes, devices, true)
+}
+
+fn wavesim_fences_direct(
+    transport: Transport,
+    nodes: u64,
+    devices: u64,
+    direct: bool,
+) -> Vec<Vec<u8>> {
+    cluster_fences(wavesim_cfg(transport, nodes, devices, direct), ROWS * COLS * 4, |q| {
+        let out = wavesim::submit(q, ROWS, COLS, STEPS).expect("submit wavesim");
+        q.fence_bytes(out.id()).expect("fence")
+    })
+}
+
+/// Run nbody over the p2p lowering (collectives off, so push/await-push —
+/// the path direct device transfers specialize) and fence the positions.
+fn nbody_fences_direct(transport: Transport, nodes: u64, direct: bool) -> Vec<Vec<u8>> {
+    const N: u64 = 128;
+    let cfg = ClusterConfig {
+        num_nodes: nodes,
+        num_devices: 2,
+        registry: apps::reference_registry(),
+        transport,
+        collectives: false,
+        direct_comm: direct,
         ..Default::default()
     };
-    let results: Arc<Mutex<Vec<Vec<u8>>>> = Arc::new(Mutex::new(Vec::new()));
-    let rc = results.clone();
-    let reports = run_cluster(cfg, move |q| {
-        let out = wavesim::submit(q, ROWS, COLS, STEPS).expect("submit wavesim");
-        let bytes = q.fence_bytes(out.id()).expect("fence");
-        rc.lock().unwrap().push(bytes);
-    });
-    for r in &reports {
-        assert!(
-            r.errors.is_empty(),
-            "{} nodes over {}: node {} errors: {:?}",
-            nodes,
-            transport.name(),
-            r.node,
-            r.errors
-        );
-    }
-    let results = results.lock().unwrap().clone();
-    assert_eq!(results.len(), nodes as usize);
-    let bytes = ROWS * COLS * 4;
-    for (i, f) in results.iter().enumerate() {
-        assert_eq!(f.len() as u64, bytes, "node {i} fence size");
-    }
-    results
+    cluster_fences(cfg, N * 12, move |q| {
+        let (p, _v) = nbody::submit(q, N, 2).expect("submit nbody");
+        q.fence_bytes(p.id()).expect("fence P")
+    })
 }
 
 /// All nodes of one run must agree among themselves (each node fences the
@@ -126,6 +170,50 @@ fn run_node_over_explicit_tcp_endpoints_matches_cluster() {
     assert_all_equal(&fences, "run_node tcp");
     let via_cluster = wavesim_fences(Transport::Channel, 1, 2);
     assert_eq!(fences[0], via_cluster[0], "run_node path must match run_cluster");
+}
+
+/// Acceptance: direct device transfers are a pure lowering change — fence
+/// digests must be byte-identical with `--no-direct-comm` on/off at 2 and
+/// 4 nodes over both transports, for the stencil workload (wavesim, p2p
+/// push/await-push with consumer-split fallbacks)...
+#[test]
+fn wavesim_direct_vs_staged_byte_identical() {
+    let reference = wavesim_fences_direct(Transport::Channel, 1, 2, true);
+    for transport in [Transport::Channel, Transport::Tcp] {
+        for nodes in [2u64, 4] {
+            for direct in [true, false] {
+                let fences = wavesim_fences_direct(transport, nodes, 2, direct);
+                let what = format!(
+                    "wavesim {} nodes over {} direct={direct}",
+                    nodes,
+                    transport.name()
+                );
+                assert_all_equal(&fences, &what);
+                assert_eq!(fences[0], reference[0], "{what} vs 1-node reference");
+            }
+        }
+    }
+}
+
+/// ...and for the all-gather workload (nbody over the p2p lowering, where
+/// whole device-resident halves are pushed every timestep).
+#[test]
+fn nbody_p2p_direct_vs_staged_byte_identical() {
+    let reference = nbody_fences_direct(Transport::Channel, 1, true);
+    for transport in [Transport::Channel, Transport::Tcp] {
+        for nodes in [2u64, 4] {
+            for direct in [true, false] {
+                let fences = nbody_fences_direct(transport, nodes, direct);
+                let what = format!(
+                    "nbody {} nodes over {} direct={direct}",
+                    nodes,
+                    transport.name()
+                );
+                assert_all_equal(&fences, &what);
+                assert_eq!(fences[0], reference[0], "{what} vs 1-node reference");
+            }
+        }
+    }
 }
 
 /// The golden model agrees too (guards against a bug identical on all

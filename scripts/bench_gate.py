@@ -16,6 +16,9 @@ Semantics:
     reported but do not fail.
   - Works on any schema that stores [{"name"/"app"..., "ops_per_s"/"cells_per_s"}]
     rows under "components" or "rows" (micro_scheduler and strong_scaling).
+    strong_scaling keys are "app/transport/Nn"; ablation rows suffix the app
+    name ("nbody-p2p" = collectives off, "wavesim-staged"/"nbody-p2p-staged"
+    = direct device transfers off), so every lowering is gated separately.
 
 Exit codes: 0 ok/skip, 1 regression, 2 usage or malformed input.
 """

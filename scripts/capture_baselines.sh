@@ -9,6 +9,11 @@
 #
 # Quick mode is mandatory: CI's smoke jobs run BENCH_QUICK=1, and the gate
 # refuses to compare quick runs against a full-mode baseline.
+#
+# The strong_scaling baseline includes the ablation rows ("nbody-p2p" =
+# collectives off, "wavesim-staged"/"nbody-p2p-staged" = direct device
+# transfers off); re-capture after adding/renaming ablation variants so the
+# gate's per-row keys stay in sync with the bench output.
 set -euo pipefail
 
 repo="$(cd "$(dirname "$0")/.." && pwd)"

@@ -105,6 +105,52 @@ def main():
             1,
         ),
         (
+            "ablation-suffixed rows gate independently",
+            doc(
+                "abc",
+                True,
+                rows=[
+                    {"app": "wavesim", "transport": "tcp", "nodes": 2, "cells_per_s": 100.0},
+                    {"app": "wavesim-staged", "transport": "tcp", "nodes": 2, "cells_per_s": 80.0},
+                    {"app": "nbody-p2p-staged", "transport": "channel", "nodes": 2, "cells_per_s": 50.0},
+                ],
+            ),
+            doc(
+                "def",
+                True,
+                rows=[
+                    {"app": "wavesim", "transport": "tcp", "nodes": 2, "cells_per_s": 95.0},
+                    # The staged ablation row regressed >25%: must fail even
+                    # though the direct row is healthy.
+                    {"app": "wavesim-staged", "transport": "tcp", "nodes": 2, "cells_per_s": 40.0},
+                    {"app": "nbody-p2p-staged", "transport": "channel", "nodes": 2, "cells_per_s": 50.0},
+                ],
+            ),
+            (),
+            1,
+        ),
+        (
+            "ablation-suffixed rows all healthy pass",
+            doc(
+                "abc",
+                True,
+                rows=[
+                    {"app": "wavesim", "transport": "tcp", "nodes": 2, "cells_per_s": 100.0},
+                    {"app": "wavesim-staged", "transport": "tcp", "nodes": 2, "cells_per_s": 80.0},
+                ],
+            ),
+            doc(
+                "def",
+                True,
+                rows=[
+                    {"app": "wavesim", "transport": "tcp", "nodes": 2, "cells_per_s": 110.0},
+                    {"app": "wavesim-staged", "transport": "tcp", "nodes": 2, "cells_per_s": 78.0},
+                ],
+            ),
+            (),
+            0,
+        ),
+        (
             "strong_scaling rows schema",
             doc(
                 "abc",
