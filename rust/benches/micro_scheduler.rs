@@ -305,6 +305,24 @@ fn main() {
         total
     });
 
+    // 9. Trace recorder, disabled path: the guard every hot-path call site
+    //    pays when `--trace` is off — one relaxed atomic load and an early
+    //    return. Tracked by the gate so instrumentation creep (work done
+    //    before the guard) shows up as a throughput drop here instead of as
+    //    a silent tax on every scheduler/executor row above.
+    bench(res, repeats, "trace instant (tracing off, guard only)", || {
+        let n = 2_000_000u64 / scale;
+        assert!(!celerity::trace::enabled(), "this row measures the disabled path");
+        for i in 0..n {
+            celerity::trace::instant(
+                0,
+                celerity::trace::Track::Executor,
+                celerity::trace::EventKind::Issue { instr: i },
+            );
+        }
+        n
+    });
+
     // Sanity anchor: an IdagGenerator must stay usable for the suite.
     let _ = IdagGenerator::new(IdagConfig::default(), celerity::buffer::BufferPool::new());
     println!("\ntargets (DESIGN.md §7): ooo < 2 µs/instr; idag gen > 10k instr/s");

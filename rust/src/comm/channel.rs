@@ -104,6 +104,18 @@ impl Communicator for ChannelCommunicator {
         let _ = peer.send(Inbound::Data { from: self.node, msg, bytes });
     }
 
+    fn send_heartbeat(&self, to: NodeId, departing: bool) {
+        // Out-of-range / dropped peers lose the beacon silently — liveness
+        // signals are best-effort by contract.
+        let Some(peer) = self.peers.get(to.0 as usize) else { return };
+        let msg = if departing {
+            Inbound::Goodbye { from: self.node }
+        } else {
+            Inbound::Heartbeat { from: self.node }
+        };
+        let _ = peer.send(msg);
+    }
+
     fn poll(&self) -> Option<Inbound> {
         self.inbox.lock().unwrap().try_recv().ok()
     }
@@ -190,6 +202,19 @@ mod tests {
             }
         }
         t.join().unwrap();
+    }
+
+    #[test]
+    fn heartbeats_and_goodbyes_are_routed() {
+        let mut world = ChannelWorld::new(2);
+        let c0 = world.communicator(NodeId(0));
+        let c1 = world.communicator(NodeId(1));
+        c0.send_heartbeat(NodeId(1), false);
+        c0.send_heartbeat(NodeId(1), true);
+        c0.send_heartbeat(NodeId(9), false); // out of range: dropped
+        assert!(matches!(c1.poll(), Some(Inbound::Heartbeat { from }) if from == NodeId(0)));
+        assert!(matches!(c1.poll(), Some(Inbound::Goodbye { from }) if from == NodeId(0)));
+        assert!(c1.poll().is_none());
     }
 
     #[test]

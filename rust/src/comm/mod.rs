@@ -43,6 +43,24 @@ pub enum Inbound {
     Pilot(Pilot),
     /// The payload of a `send` instruction, tagged with its message id.
     Data { from: NodeId, msg: MessageId, bytes: Vec<u8> },
+    /// A liveness beacon from a peer's heartbeat monitor.
+    Heartbeat { from: NodeId },
+    /// A peer's announcement of clean shutdown: it must no longer count
+    /// toward failure detection.
+    Goodbye { from: NodeId },
+}
+
+impl Inbound {
+    /// The peer this message came from (any inbound traffic is proof of
+    /// life, so the heartbeat monitor refreshes on every variant).
+    pub fn from(&self) -> NodeId {
+        match self {
+            Inbound::Pilot(p) => p.from,
+            Inbound::Data { from, .. } => *from,
+            Inbound::Heartbeat { from } => *from,
+            Inbound::Goodbye { from } => *from,
+        }
+    }
 }
 
 /// Node-local endpoint of the cluster fabric.
@@ -58,6 +76,10 @@ pub trait Communicator: Send {
     fn send_pilot(&self, pilot: Pilot);
     /// Non-blocking data send (`MPI_Isend` equivalent).
     fn send_data(&self, to: NodeId, msg: MessageId, bytes: Vec<u8>);
+    /// Best-effort liveness signal (`departing` = clean-shutdown goodbye).
+    /// Losable by design — the heartbeat monitor only needs *eventual*
+    /// delivery — so transports without a control plane may ignore it.
+    fn send_heartbeat(&self, _to: NodeId, _departing: bool) {}
     /// Drain one pending inbound message, if any.
     fn poll(&self) -> Option<Inbound>;
 }

@@ -20,8 +20,9 @@ use crate::instruction::Pilot;
 use crate::util::{MessageId, NodeId};
 use std::io::BufReader;
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 /// Default startup grace: how long outbound connects retry before giving
@@ -34,6 +35,33 @@ const CONNECT_BACKOFF: Duration = Duration::from_millis(20);
 /// Accept-loop poll interval (the listener is non-blocking so the thread
 /// can observe shutdown).
 const ACCEPT_POLL: Duration = Duration::from_micros(500);
+/// Single-shot connect timeout for heartbeat frames. Liveness beacons must
+/// never park the executor in the startup-grace retry loop a dead peer
+/// causes — one bounded attempt, then drop (the next tick retries anyway).
+const HEARTBEAT_CONNECT_TIMEOUT: Duration = Duration::from_millis(250);
+
+/// Bookkeeping shared between the communicator, its accept loop and its
+/// reader threads, so teardown can *join* everything it spawned (readers
+/// used to be detached and leak past cluster shutdown).
+struct ReaderSet {
+    /// One entry per accepted connection: a clone of the stream (to force
+    /// a blocked read to return via `TcpStream::shutdown`) and the reader's
+    /// join handle.
+    conns: Mutex<Vec<(TcpStream, Option<JoinHandle<()>>)>>,
+    /// Live reader-thread count; drops to zero once teardown has joined
+    /// them all (asserted by the teardown regression test).
+    active: AtomicUsize,
+}
+
+/// Decrements the live-reader gauge when a reader thread exits, however it
+/// exits (EOF, error, or forced socket shutdown).
+struct ReaderGuard(Arc<ReaderSet>);
+
+impl Drop for ReaderGuard {
+    fn drop(&mut self) {
+        self.0.active.fetch_sub(1, Ordering::Release);
+    }
+}
 
 /// In-process convenience: bind `n` loopback listeners on ephemeral ports
 /// and wire the full mesh. The TCP analogue of [`super::ChannelWorld`].
@@ -83,6 +111,8 @@ pub struct TcpCommunicator {
     shutdown: Arc<AtomicBool>,
     /// Connect retries stop at this instant (creation + startup grace).
     connect_deadline: Instant,
+    accept_join: Option<JoinHandle<()>>,
+    readers: Arc<ReaderSet>,
 }
 
 impl TcpCommunicator {
@@ -103,13 +133,18 @@ impl TcpCommunicator {
         let (tx, rx) = mpsc::channel::<Inbound>();
         let shutdown = Arc::new(AtomicBool::new(false));
         let flag = shutdown.clone();
+        let readers = Arc::new(ReaderSet {
+            conns: Mutex::new(Vec::new()),
+            active: AtomicUsize::new(0),
+        });
+        let reader_set = readers.clone();
         // Thread-spawn failure (resource exhaustion) propagates as an
         // io::Error through bind/bind_local → driver::run_node, so the
         // `celerity worker` CLI can print a friendly message and exit 2
         // instead of aborting on a raw panic.
-        std::thread::Builder::new()
+        let accept_join = std::thread::Builder::new()
             .name(format!("celerity-tcp-accept-{}", node.0))
-            .spawn(move || accept_loop(listener, tx, flag))?;
+            .spawn(move || accept_loop(listener, tx, flag, reader_set))?;
         let outbound = peers.iter().map(|_| Mutex::new(None)).collect();
         Ok(TcpCommunicator {
             node,
@@ -118,19 +153,32 @@ impl TcpCommunicator {
             inbox: Mutex::new(rx),
             shutdown,
             connect_deadline: Instant::now() + CONNECT_GRACE,
+            accept_join: Some(accept_join),
+            readers,
         })
     }
 
-    /// Shrink the startup grace window (tests exercising departed peers).
-    #[cfg(test)]
-    fn set_connect_grace(&mut self, grace: Duration) {
+    /// Shrink the startup grace window: after it lapses, a refused connect
+    /// means the peer is gone and the frame is dropped instead of retried.
+    /// Tests exercising dead peers use this to keep detection fast.
+    pub fn set_connect_grace(&mut self, grace: Duration) {
         self.connect_deadline = Instant::now() + grace;
+    }
+
+    /// Live reader-thread count (teardown regression test hook).
+    #[cfg(test)]
+    fn reader_gauge(&self) -> Arc<ReaderSet> {
+        self.readers.clone()
     }
 
     /// Write one frame to `to`, connecting on first use. Failures are
     /// swallowed like the channel transport's dropped-peer sends: a peer
     /// that cannot be reached anymore has already shut down.
     fn send_frame(&self, to: NodeId, frame: &[u8]) {
+        self.send_frame_opts(to, frame, true);
+    }
+
+    fn send_frame_opts(&self, to: NodeId, frame: &[u8], retry_connect: bool) {
         // A node id beyond the peer list (stale config, wrong --peers
         // order) must not panic a reader/executor thread: report and drop
         // the frame like any other unreachable-peer send.
@@ -145,7 +193,12 @@ impl TcpCommunicator {
         }
         let mut slot = self.outbound[to.0 as usize].lock().unwrap();
         if slot.is_none() {
-            *slot = connect_with_retry(self.peers[to.0 as usize], self.connect_deadline);
+            let addr = self.peers[to.0 as usize];
+            *slot = if retry_connect {
+                connect_with_retry(addr, self.connect_deadline)
+            } else {
+                connect_once(addr)
+            };
         }
         let failed = match slot.as_mut() {
             Some(stream) => wire::write_frame(stream, frame).is_err(),
@@ -186,6 +239,12 @@ impl Communicator for TcpCommunicator {
         self.send_frame(to, &wire::encode_data(self.node, msg, &bytes));
     }
 
+    fn send_heartbeat(&self, to: NodeId, departing: bool) {
+        // No connect-retry loop: a heartbeat to a not-yet (or no-longer)
+        // reachable peer is dropped after one bounded attempt.
+        self.send_frame_opts(to, &wire::encode_heartbeat(self.node, departing), false);
+    }
+
     fn poll(&self) -> Option<Inbound> {
         self.inbox.lock().unwrap().try_recv().ok()
     }
@@ -193,24 +252,59 @@ impl Communicator for TcpCommunicator {
 
 impl Drop for TcpCommunicator {
     fn drop(&mut self) {
-        // Stop the accept loop; reader threads exit on their own when the
-        // peers' outbound streams close.
+        // Satellite fix: teardown used to just set the flag and leave the
+        // accept/reader threads detached, leaking them (and their output)
+        // past cluster shutdown. Join everything: stop the accept loop,
+        // close our outbound streams so peers see EOF promptly, then force
+        // each reader's blocking read to return by shutting its socket
+        // down — bounded even against a wedged peer — and join it.
         self.shutdown.store(true, Ordering::Relaxed);
+        for slot in &self.outbound {
+            if let Some(stream) = slot.lock().unwrap().take() {
+                let _ = stream.shutdown(std::net::Shutdown::Both);
+            }
+        }
+        if let Some(j) = self.accept_join.take() {
+            let _ = j.join();
+        }
+        let mut conns = self.readers.conns.lock().unwrap();
+        for (stream, join) in conns.drain(..) {
+            let _ = stream.shutdown(std::net::Shutdown::Both);
+            if let Some(j) = join {
+                let _ = j.join();
+            }
+        }
     }
 }
 
-fn accept_loop(listener: TcpListener, tx: mpsc::Sender<Inbound>, shutdown: Arc<AtomicBool>) {
-    let mut readers = 0u64;
+fn accept_loop(
+    listener: TcpListener,
+    tx: mpsc::Sender<Inbound>,
+    shutdown: Arc<AtomicBool>,
+    readers: Arc<ReaderSet>,
+) {
+    let mut count = 0u64;
     while !shutdown.load(Ordering::Relaxed) {
         match listener.accept() {
             Ok((stream, _)) => {
                 let _ = stream.set_nodelay(true);
                 let _ = stream.set_nonblocking(false);
+                // Teardown needs a second handle to the socket to force a
+                // blocked read to return; without one (fd exhaustion) the
+                // connection cannot be supervised — refuse it and let the
+                // peer's send-retry path reconnect.
+                let Ok(handle) = stream.try_clone() else { continue };
                 let tx = tx.clone();
-                readers += 1;
-                let _ = std::thread::Builder::new()
-                    .name(format!("celerity-tcp-read-{readers}"))
-                    .spawn(move || reader_loop(stream, tx));
+                count += 1;
+                readers.active.fetch_add(1, Ordering::Acquire);
+                let guard = ReaderGuard(readers.clone());
+                let join = std::thread::Builder::new()
+                    .name(format!("celerity-tcp-read-{count}"))
+                    .spawn(move || reader_loop(stream, tx, guard))
+                    .ok();
+                // A failed spawn dropped the closure (and its guard), so
+                // the gauge is already balanced; join is None then.
+                readers.conns.lock().unwrap().push((handle, join));
             }
             Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                 std::thread::sleep(ACCEPT_POLL);
@@ -220,7 +314,7 @@ fn accept_loop(listener: TcpListener, tx: mpsc::Sender<Inbound>, shutdown: Arc<A
     }
 }
 
-fn reader_loop(stream: TcpStream, tx: mpsc::Sender<Inbound>) {
+fn reader_loop(stream: TcpStream, tx: mpsc::Sender<Inbound>, _guard: ReaderGuard) {
     let mut r = BufReader::new(stream);
     loop {
         match wire::read_frame(&mut r) {
@@ -241,6 +335,17 @@ fn reader_loop(stream: TcpStream, tx: mpsc::Sender<Inbound>) {
                 break;
             }
         }
+    }
+}
+
+/// One bounded connect attempt (heartbeat frames — never retry-loop).
+fn connect_once(addr: SocketAddr) -> Option<TcpStream> {
+    match TcpStream::connect_timeout(&addr, HEARTBEAT_CONNECT_TIMEOUT) {
+        Ok(stream) => {
+            let _ = stream.set_nodelay(true);
+            Some(stream)
+        }
+        Err(_) => None,
     }
 }
 
@@ -412,6 +517,66 @@ mod tests {
         // gracefully.
         let err = TcpCommunicator::bind(NodeId(0), addrs);
         assert!(err.is_err(), "duplicate bind must surface as io::Error");
+    }
+
+    /// Satellite regression: reader/accept threads used to be detached and
+    /// leak past cluster teardown. Drop must join them all — observed by
+    /// the live-reader gauge hitting zero *immediately* after drop returns.
+    #[test]
+    fn teardown_joins_reader_and_accept_threads() {
+        let world = TcpWorld::bind_local(2).unwrap();
+        let mut comms = world.communicators();
+        let c1 = comms.pop().unwrap();
+        let c0 = comms.pop().unwrap();
+        // Establish streams in both directions so both nodes spawn readers.
+        c0.send_data(NodeId(1), MessageId(1), vec![1]);
+        c1.send_data(NodeId(0), MessageId(2), vec![2]);
+        assert!(matches!(poll_one(&c1), Inbound::Data { .. }));
+        assert!(matches!(poll_one(&c0), Inbound::Data { .. }));
+        let g0 = c0.reader_gauge();
+        let g1 = c1.reader_gauge();
+        assert!(g0.active.load(Ordering::Acquire) >= 1, "node 0 spawned a reader");
+        assert!(g1.active.load(Ordering::Acquire) >= 1, "node 1 spawned a reader");
+        drop(c0);
+        drop(c1);
+        // Joined means *done*, synchronously — not "will exit eventually".
+        assert_eq!(g0.active.load(Ordering::Acquire), 0, "node 0 readers leaked");
+        assert_eq!(g1.active.load(Ordering::Acquire), 0, "node 1 readers leaked");
+    }
+
+    #[test]
+    fn heartbeats_and_goodbyes_round_trip() {
+        let world = TcpWorld::bind_local(2).unwrap();
+        let mut comms = world.communicators();
+        let c1 = comms.pop().unwrap();
+        let c0 = comms.pop().unwrap();
+        c0.send_heartbeat(NodeId(1), false);
+        match poll_one(&c1) {
+            Inbound::Heartbeat { from } => assert_eq!(from, NodeId(0)),
+            other => panic!("{other:?}"),
+        }
+        c0.send_heartbeat(NodeId(1), true);
+        match poll_one(&c1) {
+            Inbound::Goodbye { from } => assert_eq!(from, NodeId(0)),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    /// A heartbeat to a dead peer must return promptly (single bounded
+    /// connect attempt — no startup-grace retry loop) and not panic.
+    #[test]
+    fn heartbeat_to_dead_peer_is_fast_and_nonfatal() {
+        let world = TcpWorld::bind_local(2).unwrap();
+        let mut comms = world.communicators();
+        let c1 = comms.pop().unwrap();
+        let c0 = comms.pop().unwrap();
+        drop(c1);
+        let t0 = Instant::now();
+        c0.send_heartbeat(NodeId(1), false);
+        assert!(
+            t0.elapsed() < Duration::from_secs(2),
+            "heartbeat send must not sit in the connect-retry loop"
+        );
     }
 
     #[test]

@@ -4,9 +4,11 @@
 //!
 //! ```text
 //! frame   := tag:u8 body
-//! pilot   := tag=1, 11 × u64 LE
-//!            (from, to, msg, buffer, transfer, min[0..3], max[0..3])
-//! data    := tag=2, 3 × u64 LE (from, msg, len), len bytes of payload
+//! pilot     := tag=1, 11 × u64 LE
+//!              (from, to, msg, buffer, transfer, min[0..3], max[0..3])
+//! data      := tag=2, 3 × u64 LE (from, msg, len), len bytes of payload
+//! heartbeat := tag=3, 1 × u64 LE (from)
+//! goodbye   := tag=4, 1 × u64 LE (from)
 //! ```
 //!
 //! All integers are little-endian `u64` so the format is trivially
@@ -24,6 +26,8 @@ use std::io::{self, Read, Write};
 
 const TAG_PILOT: u8 = 1;
 const TAG_DATA: u8 = 2;
+const TAG_HEARTBEAT: u8 = 3;
+const TAG_GOODBYE: u8 = 4;
 
 /// Upper bound on a data frame's payload: 1 GiB. A larger length field is
 /// certain corruption (a single transfer of the simulated workloads is at
@@ -61,6 +65,14 @@ pub fn encode_data(from: NodeId, msg: MessageId, bytes: &[u8]) -> Vec<u8> {
     put_u64(&mut out, msg.0);
     put_u64(&mut out, bytes.len() as u64);
     out.extend_from_slice(bytes);
+    out
+}
+
+/// Encode a heartbeat (or, with `departing`, a goodbye) frame.
+pub fn encode_heartbeat(from: NodeId, departing: bool) -> Vec<u8> {
+    let mut out = Vec::with_capacity(1 + 8);
+    out.push(if departing { TAG_GOODBYE } else { TAG_HEARTBEAT });
+    put_u64(&mut out, from.0);
     out
 }
 
@@ -127,6 +139,8 @@ pub fn read_frame(r: &mut impl Read) -> io::Result<Option<Inbound>> {
             r.read_exact(&mut bytes)?;
             Ok(Some(Inbound::Data { from, msg, bytes }))
         }
+        TAG_HEARTBEAT => Ok(Some(Inbound::Heartbeat { from: NodeId(read_u64(r)?) })),
+        TAG_GOODBYE => Ok(Some(Inbound::Goodbye { from: NodeId(read_u64(r)?) })),
         other => Err(io::Error::new(
             io::ErrorKind::InvalidData,
             format!("unknown frame tag {other}"),
@@ -202,6 +216,26 @@ mod tests {
         assert!(matches!(read_frame(&mut cur).unwrap(), Some(Inbound::Data { .. })));
         assert!(matches!(read_frame(&mut cur).unwrap(), Some(Inbound::Pilot(_))));
         assert!(read_frame(&mut cur).unwrap().is_none());
+    }
+
+    #[test]
+    fn heartbeat_and_goodbye_frames_round_trip() {
+        for (departing, node) in [(false, 0u64), (false, 7), (true, 3)] {
+            let frame = encode_heartbeat(NodeId(node), departing);
+            let mut cur = io::Cursor::new(frame);
+            match read_frame(&mut cur).unwrap() {
+                Some(Inbound::Heartbeat { from }) => {
+                    assert!(!departing);
+                    assert_eq!(from, NodeId(node));
+                }
+                Some(Inbound::Goodbye { from }) => {
+                    assert!(departing);
+                    assert_eq!(from, NodeId(node));
+                }
+                other => panic!("{other:?}"),
+            }
+            assert!(read_frame(&mut cur).unwrap().is_none());
+        }
     }
 
     #[test]

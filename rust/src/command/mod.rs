@@ -1078,6 +1078,118 @@ mod tests {
         }
     }
 
+    /// Multi-box owner slices must be rejected: a partial rewrite
+    /// fragments ownership so a node's slice no longer coalesces to one
+    /// rectangle, and the ring protocol forwards exactly one rectangle per
+    /// round — the all-read has to stay on the precise p2p path. A
+    /// genuine all-gather in the same program still fires (control).
+    #[test]
+    fn multi_box_owner_slice_keeps_p2p_lowering() {
+        for nodes in [2u64, 4] {
+            let mut tm = TaskManager::with_horizon_step(u64::MAX);
+            let n = Range::d1(64);
+            let b = tm.create_buffer::<f64>("B", n, false).id();
+            let o = tm.create_buffer::<f64>("O", n, false).id();
+            let o2 = tm.create_buffer::<f64>("O2", n, false).id();
+            tm.submit(TaskDecl::device("iota", n).write(b, RangeMapper::OneToOne));
+            // Redistribute the prefix [0, 16): every node except node 0
+            // now owns a shard of the prefix *plus* the rest of its
+            // original slice — two disjoint boxes.
+            tm.submit(
+                TaskDecl::device("rewrite", Range::d1(16)).write(b, RangeMapper::OneToOne),
+            );
+            tm.submit(
+                TaskDecl::device("consume", n)
+                    .read(b, RangeMapper::All)
+                    .write(o, RangeMapper::OneToOne),
+            );
+            // Control: O has exclusive single-box owners, so this all-read
+            // is the genuine gather geometry.
+            tm.submit(
+                TaskDecl::device("consume2", n)
+                    .read(o, RangeMapper::All)
+                    .write(o2, RangeMapper::OneToOne),
+            );
+            let tasks = tm.take_new_tasks();
+            for nid in 0..nodes {
+                let mut gen =
+                    CdagGenerator::new(NodeId(nid), nodes, SplitHint::D1, tm.buffers().clone());
+                for t in &tasks {
+                    gen.compile(t);
+                }
+                let cmds = gen.take_new_commands();
+                assert!(gen.dag().check_acyclic());
+                assert_eq!(
+                    gen.collectives_emitted, 1,
+                    "{nodes} nodes, node {nid}: only the control may lower collectively"
+                );
+                let colls: Vec<_> = cmds
+                    .iter()
+                    .filter(|c| matches!(c.kind, CommandKind::Collective { .. }))
+                    .collect();
+                assert_eq!(colls.len(), 1);
+                assert_eq!(colls[0].task.name, "consume2", "node {nid}");
+                // The fragmented gather fell back to pushes/await-pushes
+                // for B.
+                let b_awaits = cmds
+                    .iter()
+                    .filter(|c| {
+                        matches!(&c.kind, CommandKind::AwaitPush { buffer, .. } if *buffer == b)
+                    })
+                    .count();
+                assert!(b_awaits >= 1, "{nodes} nodes, node {nid}: p2p fallback must gather B");
+            }
+        }
+    }
+
+    /// Partial replication must be rejected: after a halo read, boundary
+    /// elements live on two nodes, so a later all-read is no longer the
+    /// exclusive-owner gather the ring forwards — p2p (which skips
+    /// already-replicated bytes) is the only correct lowering.
+    #[test]
+    fn partially_replicated_buffer_keeps_p2p_lowering() {
+        for nodes in [2u64, 4] {
+            let mut tm = TaskManager::with_horizon_step(u64::MAX);
+            let n = Range::d1(64);
+            let b = tm.create_buffer::<f64>("B", n, false).id();
+            let h = tm.create_buffer::<f64>("H", n, false).id();
+            let o = tm.create_buffer::<f64>("O", n, false).id();
+            tm.submit(TaskDecl::device("iota", n).write(b, RangeMapper::OneToOne));
+            // The halo read replicates B's chunk-boundary elements onto the
+            // neighbouring node as well as the owner.
+            tm.submit(
+                TaskDecl::device("halo", n)
+                    .read(b, RangeMapper::Neighborhood(Range::d1(1)))
+                    .write(h, RangeMapper::OneToOne),
+            );
+            tm.submit(
+                TaskDecl::device("consume", n)
+                    .read(b, RangeMapper::All)
+                    .write(o, RangeMapper::OneToOne),
+            );
+            let tasks = tm.take_new_tasks();
+            for nid in 0..nodes {
+                let mut gen =
+                    CdagGenerator::new(NodeId(nid), nodes, SplitHint::D1, tm.buffers().clone());
+                for t in &tasks {
+                    gen.compile(t);
+                }
+                let cmds = gen.take_new_commands();
+                assert!(gen.dag().check_acyclic());
+                assert_eq!(
+                    gen.collectives_emitted, 0,
+                    "{nodes} nodes, node {nid}: partially replicated all-read must stay p2p"
+                );
+                let (pushes, awaits, colls) = count_kinds(&cmds);
+                assert_eq!(colls, 0);
+                assert!(
+                    pushes >= 1 && awaits >= 1,
+                    "{nodes} nodes, node {nid}: p2p fallback must still communicate"
+                );
+            }
+        }
+    }
+
     /// Property test: on randomized programs (random buffer sizes, node
     /// counts, write extents and read mappers), whenever the detector fires
     /// on a node it must fire identically on *every* node, and the

@@ -56,6 +56,12 @@ pub struct ClusterConfig {
     /// (M1) staging round trip. `--no-direct-comm` turns it off (ablation;
     /// byte-identical results either way).
     pub direct_comm: bool,
+    /// Declare a silent peer dead after this many milliseconds (`None`
+    /// disables liveness monitoring — the in-process default, where a dead
+    /// "node" is a panic the driver already surfaces). Multi-process
+    /// deployments (`celerity launch`/`worker`) set this so a killed worker
+    /// produces an attributed cluster error instead of a hang.
+    pub heartbeat_timeout_ms: Option<u64>,
 }
 
 impl Default for ClusterConfig {
@@ -72,6 +78,7 @@ impl Default for ClusterConfig {
             transport: Transport::Channel,
             collectives: true,
             direct_comm: true,
+            heartbeat_timeout_ms: None,
         }
     }
 }
@@ -272,6 +279,11 @@ impl Queue {
 
     fn forward_tasks(&mut self) {
         for t in self.tm.take_new_tasks() {
+            crate::trace::instant(
+                self.node.0,
+                crate::trace::Track::Main,
+                crate::trace::EventKind::TaskSubmit { task: t.id.0 },
+            );
             self.sched.send(SchedulerMsg::Task(t));
         }
         // Drain pending error events without blocking.
@@ -298,6 +310,9 @@ impl Queue {
         self.collect_errors(side);
         let sched = self.sched.join();
         let executor = self.exec.join();
+        // The node thread's own events (task submits) live in its
+        // thread-local buffer; publish them before the thread exits.
+        crate::trace::flush_thread();
         NodeReport {
             node: self.node,
             executor,
@@ -335,6 +350,9 @@ fn make_node(cfg: &ClusterConfig, node: NodeId, comm: CommRef) -> Queue {
             node,
             host_lanes: cfg.host_lanes,
             registry: cfg.registry.clone(),
+            heartbeat: cfg
+                .heartbeat_timeout_ms
+                .map(crate::executor::HeartbeatConfig::from_timeout_ms),
         },
         comm,
         out_rx,

@@ -1,0 +1,200 @@
+//! Worker liveness: heartbeats over the comm fabric.
+//!
+//! A multi-process cluster used to hang forever when one worker died — its
+//! peers would wait indefinitely on receives that could never complete.
+//! The monitor turns that into a clean, *attributed* error: each executor
+//! thread ticks the monitor once per loop iteration, which (a) sends a
+//! periodic beacon to every peer and (b) checks how long each peer has
+//! been silent. *Any* inbound traffic (pilot, data, heartbeat, goodbye)
+//! counts as proof of life, so a busy fabric never needs extra beacons and
+//! a slow-but-alive worker (long kernel, long host task) never trips the
+//! detector — its executor thread keeps beating regardless of lane work.
+//!
+//! A cleanly departing node broadcasts a goodbye first, excluding itself
+//! from failure detection on the survivors (nodes finish at different
+//! times; a finished peer is not a dead peer).
+
+use crate::comm::CommRef;
+use crate::util::NodeId;
+use std::time::{Duration, Instant};
+
+/// Monitor tuning. Derived from a single user-facing timeout.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct HeartbeatConfig {
+    /// How often to beacon each peer.
+    pub interval: Duration,
+    /// Silence longer than this declares the peer dead.
+    pub timeout: Duration,
+}
+
+impl HeartbeatConfig {
+    /// Beacon at a quarter of the timeout (min 10 ms) so several beacons
+    /// must be lost before a false positive is possible.
+    pub fn from_timeout_ms(timeout_ms: u64) -> HeartbeatConfig {
+        let timeout_ms = timeout_ms.max(1);
+        HeartbeatConfig {
+            interval: Duration::from_millis((timeout_ms / 4).max(10)),
+            timeout: Duration::from_millis(timeout_ms),
+        }
+    }
+}
+
+/// Per-node liveness state, owned by the executor thread.
+pub struct HeartbeatMonitor {
+    cfg: HeartbeatConfig,
+    node: NodeId,
+    last_send: Instant,
+    /// Most recent proof of life per peer (own slot unused).
+    last_seen: Vec<Instant>,
+    /// Peers that announced clean shutdown.
+    departed: Vec<bool>,
+    failed: bool,
+}
+
+impl HeartbeatMonitor {
+    pub fn new(cfg: HeartbeatConfig, node: NodeId, num_nodes: u64) -> HeartbeatMonitor {
+        let now = Instant::now();
+        HeartbeatMonitor {
+            cfg,
+            node,
+            // Immediately due: announce ourselves on the first tick.
+            last_send: now.checked_sub(cfg.interval).unwrap_or(now),
+            last_seen: vec![now; num_nodes as usize],
+            departed: vec![false; num_nodes as usize],
+            failed: false,
+        }
+    }
+
+    /// Record proof of life from `from` (any inbound message).
+    pub fn mark_alive(&mut self, from: NodeId) {
+        if let Some(slot) = self.last_seen.get_mut(from.0 as usize) {
+            *slot = Instant::now();
+        }
+    }
+
+    /// Record a clean-shutdown announcement from `from`.
+    pub fn mark_departed(&mut self, from: NodeId) {
+        if let Some(slot) = self.departed.get_mut(from.0 as usize) {
+            *slot = true;
+        }
+    }
+
+    /// Send due beacons and check peer silence. Returns an attributed
+    /// error message on the first detected failure (once).
+    pub fn tick(&mut self, comm: &CommRef) -> Option<String> {
+        if self.failed {
+            return None;
+        }
+        let now = Instant::now();
+        if now.duration_since(self.last_send) >= self.cfg.interval {
+            self.last_send = now;
+            for peer in self.live_peers() {
+                comm.send_heartbeat(peer, false);
+            }
+        }
+        for peer in self.live_peers() {
+            let silent = now.duration_since(self.last_seen[peer.0 as usize]);
+            if silent > self.cfg.timeout {
+                self.failed = true;
+                return Some(format!(
+                    "heartbeat timeout on node {}: no sign of life from node {} for {} ms \
+                     (limit {} ms) — peer process dead or wedged; aborting this node \
+                     instead of hanging",
+                    self.node.0,
+                    peer.0,
+                    silent.as_millis(),
+                    self.cfg.timeout.as_millis(),
+                ));
+            }
+        }
+        None
+    }
+
+    /// Broadcast a clean-shutdown goodbye to all still-live peers.
+    pub fn say_goodbye(&self, comm: &CommRef) {
+        for peer in self.live_peers() {
+            comm.send_heartbeat(peer, true);
+        }
+    }
+
+    /// Whether this monitor already reported a failure.
+    pub fn failed(&self) -> bool {
+        self.failed
+    }
+
+    fn live_peers(&self) -> impl Iterator<Item = NodeId> + '_ {
+        let me = self.node.0;
+        self.departed
+            .iter()
+            .enumerate()
+            .filter(move |(i, departed)| *i as u64 != me && !**departed)
+            .map(|(i, _)| NodeId(i as u64))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::{ChannelWorld, CommRef, Inbound};
+    use std::sync::Arc;
+
+    fn pair() -> (CommRef, CommRef) {
+        let mut world = ChannelWorld::new(2);
+        let c0: CommRef = Arc::new(world.communicator(NodeId(0)));
+        let c1: CommRef = Arc::new(world.communicator(NodeId(1)));
+        (c0, c1)
+    }
+
+    #[test]
+    fn config_derives_interval_from_timeout() {
+        let cfg = HeartbeatConfig::from_timeout_ms(1000);
+        assert_eq!(cfg.interval, Duration::from_millis(250));
+        assert_eq!(cfg.timeout, Duration::from_millis(1000));
+        // Tiny timeouts clamp the interval to something sendable.
+        assert_eq!(HeartbeatConfig::from_timeout_ms(20).interval, Duration::from_millis(10));
+    }
+
+    #[test]
+    fn first_tick_beacons_all_peers() {
+        let (c0, c1) = pair();
+        let mut m = HeartbeatMonitor::new(HeartbeatConfig::from_timeout_ms(10_000), NodeId(0), 2);
+        assert!(m.tick(&c0).is_none());
+        assert!(matches!(c1.poll(), Some(Inbound::Heartbeat { from }) if from == NodeId(0)));
+    }
+
+    #[test]
+    fn silence_past_timeout_is_an_attributed_failure() {
+        let (c0, _c1) = pair();
+        let mut m = HeartbeatMonitor::new(HeartbeatConfig::from_timeout_ms(30), NodeId(0), 2);
+        std::thread::sleep(Duration::from_millis(60));
+        let err = m.tick(&c0).expect("peer must be declared dead");
+        assert!(err.contains("node 1"), "{err}");
+        assert!(err.contains("heartbeat timeout"), "{err}");
+        assert!(m.failed());
+        // Reported exactly once.
+        assert!(m.tick(&c0).is_none());
+    }
+
+    #[test]
+    fn inbound_traffic_resets_the_clock() {
+        let (c0, _c1) = pair();
+        let mut m = HeartbeatMonitor::new(HeartbeatConfig::from_timeout_ms(80), NodeId(0), 2);
+        for _ in 0..6 {
+            std::thread::sleep(Duration::from_millis(25));
+            m.mark_alive(NodeId(1));
+            assert!(m.tick(&c0).is_none(), "refreshed peer must stay alive");
+        }
+    }
+
+    #[test]
+    fn departed_peer_is_exempt_from_detection() {
+        let (c0, c1) = pair();
+        let mut m = HeartbeatMonitor::new(HeartbeatConfig::from_timeout_ms(30), NodeId(0), 2);
+        m.mark_departed(NodeId(1));
+        std::thread::sleep(Duration::from_millis(60));
+        assert!(m.tick(&c0).is_none(), "goodbye exempts the peer");
+        // And goodbyes skip departed peers too.
+        m.say_goodbye(&c0);
+        assert!(c1.poll().is_none());
+    }
+}

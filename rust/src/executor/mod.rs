@@ -9,12 +9,14 @@
 pub mod arbitration;
 pub mod arena;
 pub mod collective;
+pub mod heartbeat;
 pub mod lanes;
 pub mod ooo;
 
 pub use arbitration::ReceiveArbiter;
 pub use arena::{copy_between, AllocBuf, Arena};
 pub use collective::CollectiveEngine;
+pub use heartbeat::{HeartbeatConfig, HeartbeatMonitor};
 pub use ooo::{Lane, OooEngine};
 
 use crate::comm::{CommRef, Inbound};
@@ -23,6 +25,7 @@ use crate::grid::{GridBox, Point, Region};
 use crate::instruction::{AccessBinding, InstructionKind, InstructionRef};
 use crate::scheduler::SchedulerOut;
 use crate::task::EpochAction;
+use crate::trace;
 use crate::util::{spsc, InstructionId, NodeId};
 use lanes::{Job, LanePool};
 use std::collections::{HashMap, VecDeque};
@@ -204,11 +207,20 @@ pub struct ExecutorConfig {
     /// Host worker threads for host tasks and host-side copies.
     pub host_lanes: usize,
     pub registry: Registry,
+    /// Peer liveness monitoring (multi-process clusters). `None` disables
+    /// it — the right default in-process, where a "dead peer" is a panic
+    /// the driver already surfaces.
+    pub heartbeat: Option<HeartbeatConfig>,
 }
 
 impl Default for ExecutorConfig {
     fn default() -> Self {
-        ExecutorConfig { node: NodeId(0), host_lanes: 4, registry: Registry::new() }
+        ExecutorConfig {
+            node: NodeId(0),
+            host_lanes: 4,
+            registry: Registry::new(),
+            heartbeat: None,
+        }
     }
 }
 
@@ -246,12 +258,18 @@ pub struct Executor {
     events: mpsc::Sender<ExecEvent>,
     ready: VecDeque<(InstructionRef, Lane)>,
     shutting_down: bool,
+    monitor: Option<HeartbeatMonitor>,
 }
 
 impl Executor {
     pub fn new(cfg: ExecutorConfig, comm: CommRef, events: mpsc::Sender<ExecEvent>) -> Executor {
         let (ctx, crx) = mpsc::channel();
         let node = cfg.node.0;
+        // Liveness monitoring only makes sense with actual peers.
+        let monitor = cfg
+            .heartbeat
+            .filter(|_| comm.num_nodes() > 1)
+            .map(|hc| HeartbeatMonitor::new(hc, cfg.node, comm.num_nodes()));
         Executor {
             ooo: OooEngine::new(cfg.host_lanes),
             arbiter: ReceiveArbiter::new(),
@@ -264,6 +282,7 @@ impl Executor {
             events,
             ready: VecDeque::new(),
             shutting_down: false,
+            monitor,
         }
     }
 
@@ -275,8 +294,22 @@ impl Executor {
         let mut inbox_open = true;
         let mut last_progress = std::time::Instant::now();
         let mut stall_reported = false;
+        let mut heartbeat_failed = false;
         loop {
             let mut progressed = false;
+
+            // 0. Liveness: beacon peers and check their silence. Runs every
+            // iteration — even a saturated executor must keep beating, or
+            // *it* would look dead to its peers.
+            if let Some(m) = &mut self.monitor {
+                if let Some(err) = m.tick(&self.comm) {
+                    let _ = self.events.send(ExecEvent::Error(err));
+                    // Abort the node: pending receives from the dead peer
+                    // can never complete, so draining would hang forever.
+                    heartbeat_failed = true;
+                    break;
+                }
+            }
 
             // 1. New instructions + outbound pilots from the scheduler.
             if inbox_open {
@@ -316,15 +349,44 @@ impl Executor {
                 }
             }
 
-            // 2. Inbound communication → receive arbitration.
+            // 2. Inbound communication → receive arbitration. Any inbound
+            // message is proof of life for its sender.
             let mut inbound_data = false;
+            let node = self.cfg.node.0;
             while let Some(m) = self.comm.poll() {
                 progressed = true;
+                if let Some(mon) = &mut self.monitor {
+                    mon.mark_alive(m.from());
+                }
                 match m {
-                    Inbound::Pilot(p) => self.arbiter.on_pilot(p),
+                    Inbound::Pilot(p) => {
+                        trace::instant(
+                            node,
+                            trace::Track::CommIn,
+                            trace::EventKind::PilotIn { from: p.from.0 },
+                        );
+                        self.arbiter.on_pilot(p)
+                    }
                     Inbound::Data { from, msg, bytes } => {
                         inbound_data = true;
+                        trace::instant(
+                            node,
+                            trace::Track::CommIn,
+                            trace::EventKind::DataIn { from: from.0, bytes: bytes.len() as u64 },
+                        );
                         self.arbiter.on_data(from, msg, bytes)
+                    }
+                    Inbound::Heartbeat { from } => {
+                        trace::instant(
+                            node,
+                            trace::Track::CommIn,
+                            trace::EventKind::HeartbeatIn { from: from.0 },
+                        );
+                    }
+                    Inbound::Goodbye { from } => {
+                        if let Some(mon) = &mut self.monitor {
+                            mon.mark_departed(from);
+                        }
                     }
                 }
             }
@@ -336,15 +398,13 @@ impl Executor {
             }
             for id in self.arbiter.take_completions() {
                 progressed = true;
-                let newly = self.ooo.retire(id);
-                self.ready.extend(newly);
+                self.finish(id);
             }
 
             // 3. Lane completions.
             while let Ok(id) = self.lane_completions.try_recv() {
                 progressed = true;
-                let newly = self.ooo.retire(id);
-                self.ready.extend(newly);
+                self.finish(id);
             }
 
             // 4. Dispatch everything issuable.
@@ -410,6 +470,14 @@ impl Executor {
             }
         }
         self.drain_engine_errors();
+        // Tell surviving peers this node's silence from here on is a clean
+        // departure, not a death (skipped after a heartbeat failure: peers
+        // of a dying cluster should fail attributably too).
+        if !heartbeat_failed {
+            if let Some(m) = &self.monitor {
+                m.say_goodbye(&self.comm);
+            }
+        }
         let stats = ExecutorStats {
             issued_direct: self.ooo.issued_direct,
             issued_eager: self.ooo.issued_eager,
@@ -419,11 +487,19 @@ impl Executor {
             lanes_spawned: self.lanes.len(),
         };
         self.lanes.shutdown();
+        trace::flush_thread();
         stats
     }
 
-    /// Retire an instruction executed inline and queue newly-ready work.
-    fn retire_inline(&mut self, id: InstructionId) {
+    /// Retire `id` and queue newly-ready dependents. The single retirement
+    /// point: every completion path (inline, lane, arbiter, collective)
+    /// funnels through here so the trace sees each retire exactly once.
+    fn finish(&mut self, id: InstructionId) {
+        trace::instant(
+            self.cfg.node.0,
+            trace::Track::Executor,
+            trace::EventKind::Retire { instr: id.0 },
+        );
         let newly = self.ooo.retire(id);
         self.ready.extend(newly);
     }
@@ -452,6 +528,11 @@ impl Executor {
 
     fn dispatch(&mut self, instr: InstructionRef, lane: Lane) {
         let id = instr.id;
+        trace::instant(
+            self.cfg.node.0,
+            trace::Track::Executor,
+            trace::EventKind::Issue { instr: id.0 },
+        );
         match &instr.kind {
             // ── inline instructions ─────────────────────────────────────
             InstructionKind::Alloc { alloc, covers, size_bytes, .. } => {
@@ -461,14 +542,19 @@ impl Executor {
                     1
                 };
                 self.arena.alloc(*alloc, *covers, elem.max(1));
-                self.retire_inline(id);
+                trace::instant(
+                    self.cfg.node.0,
+                    trace::Track::Executor,
+                    trace::EventKind::Alloc { bytes: *size_bytes },
+                );
+                self.finish(id);
             }
             InstructionKind::Free { alloc, .. } => {
                 self.arena.free(*alloc);
-                self.retire_inline(id);
+                self.finish(id);
             }
             InstructionKind::Horizon => {
-                self.retire_inline(id);
+                self.finish(id);
                 self.ooo.compact_below(id);
             }
             InstructionKind::Epoch(action) => {
@@ -476,7 +562,7 @@ impl Executor {
                     self.shutting_down = true;
                 }
                 let _ = self.events.send(ExecEvent::Epoch(*action, id));
-                self.retire_inline(id);
+                self.finish(id);
             }
 
             // ── arbitration-completed instructions ──────────────────────
@@ -519,28 +605,30 @@ impl Executor {
                 let src = self.arena.get(*src_alloc);
                 let dst = self.arena.get(*dst_alloc);
                 let copy_box = *copy_box;
-                self.lanes.submit(
+                let job = traced_job(
+                    self.cfg.node.0,
                     lane,
-                    Job {
-                        id,
-                        run: Box::new(move || copy_between(&src, &dst, &copy_box)),
-                    },
+                    instr.kind.mnemonic(),
+                    id,
+                    Box::new(move || copy_between(&src, &dst, &copy_box)),
                 );
+                self.lanes.submit(lane, job);
             }
             InstructionKind::Send { send_box, target, msg, src_alloc, .. } => {
                 let src = self.arena.get(*src_alloc);
                 let comm = self.comm.clone();
                 let (send_box, target, msg) = (*send_box, *target, *msg);
-                self.lanes.submit(
+                let job = traced_job(
+                    self.cfg.node.0,
                     lane,
-                    Job {
-                        id,
-                        run: Box::new(move || {
-                            let bytes = src.read_box(&send_box);
-                            comm.send_data(target, msg, bytes);
-                        }),
-                    },
+                    instr.kind.mnemonic(),
+                    id,
+                    Box::new(move || {
+                        let bytes = src.read_box(&send_box);
+                        comm.send_data(target, msg, bytes);
+                    }),
                 );
+                self.lanes.submit(lane, job);
             }
             InstructionKind::DeviceKernel { chunk, bindings, kernel, .. } => {
                 let name = kernel
@@ -569,44 +657,46 @@ impl Executor {
         name: &str,
         host: bool,
     ) {
+        let mnemonic = if host { "host task" } else { "device kernel" };
         let Some(f) = self.cfg.registry.lookup(name, host) else {
             let _ = self.events.send(ExecEvent::Error(format!(
                 "no {} registered under '{name}'; treating as no-op",
                 if host { "host task" } else { "kernel" }
             )));
             // Still execute as a no-op through the lane to preserve ordering.
-            self.lanes.submit(lane, Job { id, run: Box::new(|| {}) });
+            let job = traced_job(self.cfg.node.0, lane, mnemonic, id, Box::new(|| {}));
+            self.lanes.submit(lane, job);
             return;
         };
         let views = self.make_views(bindings);
         let events = self.events.clone();
         let label = name.to_string();
-        self.lanes.submit(
+        let job = traced_job(
+            self.cfg.node.0,
             lane,
-            Job {
-                id,
-                run: Box::new(move || {
-                    let ctx = KernelCtx { chunk, views };
-                    f(&ctx);
-                    // §4.4 accessor bounds checking: report after the kernel
-                    // exits.
-                    for v in &ctx.views {
-                        if let Some((lo, hi)) = v.oob.get() {
-                            let _ = events.send(ExecEvent::Error(format!(
-                                "kernel '{label}': out-of-bounds access on buffer {} within [{lo} - {hi}], permitted region {}",
-                                v.binding.buffer, v.binding.region
-                            )));
-                        }
+            mnemonic,
+            id,
+            Box::new(move || {
+                let ctx = KernelCtx { chunk, views };
+                f(&ctx);
+                // §4.4 accessor bounds checking: report after the kernel
+                // exits.
+                for v in &ctx.views {
+                    if let Some((lo, hi)) = v.oob.get() {
+                        let _ = events.send(ExecEvent::Error(format!(
+                            "kernel '{label}': out-of-bounds access on buffer {} within [{lo} - {hi}], permitted region {}",
+                            v.binding.buffer, v.binding.region
+                        )));
                     }
-                }),
-            },
+                }
+            }),
         );
+        self.lanes.submit(lane, job);
     }
 
     fn drain_arbiter(&mut self) {
         for cid in self.arbiter.take_completions() {
-            let newly = self.ooo.retire(cid);
-            self.ready.extend(newly);
+            self.finish(cid);
         }
     }
 
@@ -614,9 +704,45 @@ impl Executor {
     fn pump_collectives(&mut self) {
         for cid in self.collectives.pump(&self.arbiter, &self.comm) {
             self.arbiter.finish_collective(cid);
-            let newly = self.ooo.retire(cid);
-            self.ready.extend(newly);
+            self.finish(cid);
         }
+    }
+}
+
+/// The trace track a lane's work is recorded on.
+fn lane_track(lane: Lane) -> trace::Track {
+    match lane {
+        Lane::DeviceKernel(d) => trace::Track::DeviceKernel(d.0),
+        Lane::DeviceCopy(d, ooo::Direction::In) => trace::Track::DeviceCopyIn(d.0),
+        Lane::DeviceCopy(d, ooo::Direction::Out) => trace::Track::DeviceCopyOut(d.0),
+        Lane::Host(i) => trace::Track::Host(i as u64),
+        Lane::Comm => trace::Track::Comm,
+        Lane::Arbiter | Lane::Inline => trace::Track::Executor,
+    }
+}
+
+/// Wrap a lane job in an `Exec` trace span when tracing is on.
+/// The timing closure runs on the lane thread, so the span lands in that
+/// thread's local buffer; with tracing off the job is passed through
+/// untouched and the hot path pays only this one branch.
+fn traced_job(
+    node: u64,
+    lane: Lane,
+    mnemonic: &'static str,
+    id: InstructionId,
+    run: Box<dyn FnOnce() + Send>,
+) -> Job {
+    if !trace::enabled() {
+        return Job { id, run };
+    }
+    let track = lane_track(lane);
+    Job {
+        id,
+        run: Box::new(move || {
+            let t0 = trace::now_ns();
+            run();
+            trace::span(node, track, t0, trace::EventKind::Exec { instr: id.0, mnemonic });
+        }),
     }
 }
 

@@ -1,0 +1,281 @@
+//! `celerity launch`: single-command bring-up of a multi-process cluster.
+//!
+//! `celerity launch -n 8 -- nbody --steps 4` replaces eight hand-typed
+//! `celerity worker` invocations: it allocates loopback ports, spawns one
+//! worker process per node with the rendezvous peer list, streams each
+//! worker's output with a `[node i]` prefix, cross-checks the fence digests
+//! the workers print, and aggregates exit codes into a single pass/fail.
+//!
+//! Workers are launched with heartbeats on by default (see
+//! [`crate::executor::HeartbeatMonitor`]), so a worker that dies mid-run
+//! takes the cluster down with an attributed error within the heartbeat
+//! timeout instead of hanging the launcher forever.
+//!
+//! The digest cross-check rides on a dedicated marker line: workers print
+//! exactly one [`DIGEST_MARKER`] line on success, atomically via a single
+//! write, so concurrent node output cannot interleave inside it
+//! (`rust/tests/launch_cli.rs` parses the same contract).
+
+use crate::util::NodeId;
+use std::io::{BufRead, BufReader};
+use std::net::{SocketAddr, TcpListener};
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::sync::{Arc, Mutex};
+
+/// First token of the one machine-parseable line a worker prints on
+/// success. Kept stable: `rust/tests/launch_cli.rs` and external
+/// harnesses grep for it.
+pub const DIGEST_MARKER: &str = "CELERITY-DIGEST";
+
+/// Format the marker line: `CELERITY-DIGEST node=<i> value=<hex16>`.
+pub fn digest_marker(node: NodeId, digest: u64) -> String {
+    format!("{DIGEST_MARKER} node={} value={digest:016x}", node.0)
+}
+
+/// Parse a marker line back into `(node, digest)`. Tolerates surrounding
+/// whitespace but nothing interleaved inside the line.
+pub fn parse_digest_marker(line: &str) -> Option<(u64, u64)> {
+    let mut words = line.split_whitespace();
+    if words.next()? != DIGEST_MARKER {
+        return None;
+    }
+    let node = words.next()?.strip_prefix("node=")?.parse().ok()?;
+    let value = u64::from_str_radix(words.next()?.strip_prefix("value=")?, 16).ok()?;
+    Some((node, value))
+}
+
+/// Launcher configuration (the `celerity launch` CLI fills this in).
+#[derive(Clone)]
+pub struct LaunchConfig {
+    pub nodes: u64,
+    /// Application name, forwarded to every worker as `--app`.
+    pub app: String,
+    /// Extra arguments forwarded to every worker verbatim (`--steps 4`,
+    /// `--devices 2`, `--no-collectives`, ...).
+    pub app_args: Vec<String>,
+    /// Worker heartbeat timeout; 0 disables liveness monitoring.
+    pub heartbeat_timeout_ms: u64,
+    /// Base path for per-node Chrome trace JSON (`<base>.node<i>.json`).
+    pub trace: Option<String>,
+    /// Worker binary; defaults to the launcher's own executable.
+    pub worker_exe: Option<PathBuf>,
+}
+
+impl LaunchConfig {
+    pub fn new(nodes: u64, app: impl Into<String>) -> LaunchConfig {
+        LaunchConfig {
+            nodes,
+            app: app.into(),
+            app_args: Vec::new(),
+            heartbeat_timeout_ms: DEFAULT_HEARTBEAT_TIMEOUT_MS,
+            trace: None,
+            worker_exe: None,
+        }
+    }
+}
+
+/// Default worker heartbeat timeout for launched clusters: generous enough
+/// for slow CI machines, small enough that a killed worker fails the run
+/// in seconds, not forever.
+pub const DEFAULT_HEARTBEAT_TIMEOUT_MS: u64 = 10_000;
+
+/// Aggregated outcome of one launched cluster run.
+#[derive(Debug)]
+pub struct LaunchReport {
+    /// Per-node exit code (`None` = terminated by a signal).
+    pub exit_codes: Vec<Option<i32>>,
+    /// Per-node fence digest parsed from the marker line (`None` = the
+    /// worker never printed one, e.g. it died).
+    pub digests: Vec<Option<u64>>,
+    /// Launcher-level failures, each attributed to a node where possible.
+    pub errors: Vec<String>,
+}
+
+impl LaunchReport {
+    /// Everything exited 0, every digest arrived, and they all agree.
+    pub fn success(&self) -> bool {
+        self.errors.is_empty()
+    }
+}
+
+/// Reserve `n` distinct loopback ports by binding ephemeral listeners,
+/// recording their addresses, and releasing them. The tiny window between
+/// release and worker bind is benign on loopback: the kernel does not
+/// re-hand an ephemeral port while its previous owner lingers in TIME_WAIT.
+pub fn allocate_ports(n: u64) -> std::io::Result<Vec<SocketAddr>> {
+    let mut listeners = Vec::new();
+    let mut addrs = Vec::new();
+    for _ in 0..n {
+        let l = TcpListener::bind("127.0.0.1:0")?;
+        addrs.push(l.local_addr()?);
+        listeners.push(l); // hold all n at once so the ports are distinct
+    }
+    Ok(addrs)
+}
+
+/// Spawn the cluster, stream its output, and aggregate the outcome.
+///
+/// Blocking: returns when every worker has exited. With heartbeats enabled
+/// (the default) a dead worker bounds the wait — its peers abort within the
+/// heartbeat timeout — so the launcher itself needs no watchdog.
+pub fn launch(cfg: &LaunchConfig) -> std::io::Result<LaunchReport> {
+    assert!(cfg.nodes >= 1, "launch needs at least one node");
+    let peers = allocate_ports(cfg.nodes)?
+        .iter()
+        .map(|a| a.to_string())
+        .collect::<Vec<_>>()
+        .join(",");
+    let exe = match &cfg.worker_exe {
+        Some(p) => p.clone(),
+        None => std::env::current_exe()?,
+    };
+
+    let digests: Arc<Mutex<Vec<Option<u64>>>> =
+        Arc::new(Mutex::new(vec![None; cfg.nodes as usize]));
+    let mut children: Vec<Child> = Vec::new();
+    let mut streamers = Vec::new();
+    for i in 0..cfg.nodes {
+        let mut cmd = Command::new(&exe);
+        cmd.arg("worker")
+            .arg("--app")
+            .arg(&cfg.app)
+            .arg("--node")
+            .arg(i.to_string())
+            .arg("--peers")
+            .arg(&peers)
+            .stdin(Stdio::null())
+            .stdout(Stdio::piped())
+            .stderr(Stdio::piped());
+        if cfg.heartbeat_timeout_ms > 0 {
+            cmd.arg("--heartbeat-timeout").arg(cfg.heartbeat_timeout_ms.to_string());
+        }
+        if let Some(base) = &cfg.trace {
+            cmd.arg("--trace").arg(format!("{base}.node{i}.json"));
+        }
+        cmd.args(&cfg.app_args);
+        let mut child = match cmd.spawn() {
+            Ok(c) => c,
+            Err(e) => {
+                // Take down what already started rather than leaking
+                // half a cluster of orphans waiting on a rendezvous that
+                // will never complete.
+                for mut c in children {
+                    let _ = c.kill();
+                    let _ = c.wait();
+                }
+                return Err(e);
+            }
+        };
+        let stdout = child.stdout.take().expect("stdout piped");
+        let stderr = child.stderr.take().expect("stderr piped");
+        let dg = digests.clone();
+        streamers.push(std::thread::spawn(move || {
+            for line in BufReader::new(stdout).lines() {
+                let Ok(line) = line else { break };
+                if let Some((node, value)) = parse_digest_marker(&line) {
+                    if let Some(slot) = dg.lock().unwrap().get_mut(node as usize) {
+                        *slot = Some(value);
+                    }
+                }
+                println!("[node {i}] {line}");
+            }
+        }));
+        streamers.push(std::thread::spawn(move || {
+            for line in BufReader::new(stderr).lines() {
+                let Ok(line) = line else { break };
+                eprintln!("[node {i}] {line}");
+            }
+        }));
+        children.push(child);
+    }
+
+    let mut exit_codes = Vec::new();
+    for (i, mut child) in children.into_iter().enumerate() {
+        match child.wait() {
+            Ok(status) => exit_codes.push(status.code()),
+            Err(e) => {
+                eprintln!("[launch] waiting on node {i}: {e}");
+                exit_codes.push(None);
+            }
+        }
+    }
+    for s in streamers {
+        let _ = s.join();
+    }
+
+    let digests = Arc::try_unwrap(digests)
+        .map(|m| m.into_inner().unwrap())
+        .unwrap_or_else(|arc| arc.lock().unwrap().clone());
+    let mut errors = Vec::new();
+    for (i, code) in exit_codes.iter().enumerate() {
+        match code {
+            Some(0) => {}
+            Some(c) => errors.push(format!("node {i} exited with code {c}")),
+            None => errors.push(format!("node {i} was killed by a signal")),
+        }
+    }
+    for (i, d) in digests.iter().enumerate() {
+        if d.is_none() && exit_codes.get(i) == Some(&Some(0)) {
+            errors.push(format!("node {i} exited 0 but printed no digest marker"));
+        }
+    }
+    let seen: Vec<(usize, u64)> =
+        digests.iter().enumerate().filter_map(|(i, d)| d.map(|v| (i, v))).collect();
+    if let Some(((first_node, first), rest)) = seen.split_first() {
+        for (i, v) in rest {
+            if v != first {
+                errors.push(format!(
+                    "digest mismatch: node {first_node} got {first:016x} but node {i} got {v:016x}"
+                ));
+            }
+        }
+    }
+    Ok(LaunchReport { exit_codes, digests, errors })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn digest_marker_round_trips() {
+        let line = digest_marker(NodeId(3), 0xdead_beef_0123_4567);
+        assert_eq!(parse_digest_marker(&line), Some((3, 0xdead_beef_0123_4567)));
+        // Prefix noise must not parse: the marker is a whole-line contract.
+        assert_eq!(parse_digest_marker(&format!("x {line}")), None);
+        assert_eq!(parse_digest_marker("CELERITY-DIGEST node=1"), None);
+        assert_eq!(parse_digest_marker("CELERITY-DIGEST node=1 value=xyz"), None);
+        assert_eq!(parse_digest_marker("unrelated output"), None);
+    }
+
+    #[test]
+    fn allocated_ports_are_distinct_and_bindable() {
+        let addrs = allocate_ports(4).expect("allocate");
+        assert_eq!(addrs.len(), 4);
+        let mut ports: Vec<u16> = addrs.iter().map(|a| a.port()).collect();
+        ports.sort_unstable();
+        ports.dedup();
+        assert_eq!(ports.len(), 4, "ports must be distinct");
+        // And actually free again: a worker must be able to bind them.
+        for a in &addrs {
+            TcpListener::bind(a).expect("released port must be bindable");
+        }
+    }
+
+    #[test]
+    fn report_aggregation_flags_failures() {
+        let ok = LaunchReport {
+            exit_codes: vec![Some(0), Some(0)],
+            digests: vec![Some(7), Some(7)],
+            errors: vec![],
+        };
+        assert!(ok.success());
+        let bad = LaunchReport {
+            exit_codes: vec![Some(0), Some(1)],
+            digests: vec![Some(7), None],
+            errors: vec!["node 1 exited with code 1".into()],
+        };
+        assert!(!bad.success());
+    }
+}

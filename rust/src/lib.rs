@@ -62,6 +62,16 @@
 //!   cluster runner ([`run_cluster`](driver::run_cluster)) and the
 //!   per-process entry point ([`run_node`](driver::run_node)) used by
 //!   `celerity worker` for multi-process TCP clusters
+//! - [`trace`] — low-overhead event timeline (thread-local buffers behind
+//!   one atomic gate) recording scheduler compile batches and per-lane
+//!   issue/exec/retire; exports Chrome-tracing JSON
+//!   ([`trace::chrome`]), a Graphviz DAG with critical-path annotation
+//!   ([`trace::dot`]), and the `scheduler_lag` concurrency metric
+//! - [`launch`] — multi-process orchestration behind `celerity launch`:
+//!   port allocation, worker spawning/rendezvous, prefixed log streaming,
+//!   fence-digest cross-checking and exit-code aggregation; worker
+//!   liveness is guarded by heartbeats over the comm fabric
+//!   ([`executor::heartbeat`])
 //! - `runtime` — PJRT wrapper executing AOT-compiled HLO kernels
 //!   (requires the `pjrt` feature and an XLA toolchain)
 //! - [`sim`] — discrete-event cluster simulator for the Fig 6 scaling study
@@ -101,9 +111,11 @@ pub mod dtype;
 pub mod executor;
 pub mod grid;
 pub mod instruction;
+pub mod launch;
 #[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod scheduler;
 pub mod sim;
 pub mod task;
+pub mod trace;
 pub mod util;

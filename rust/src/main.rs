@@ -3,8 +3,9 @@
 //! ```text
 //! celerity graph  --app nbody --nodes 2 --devices 2 --dump tdag,cdag,idag
 //! celerity sim    --app rsim  --nodes 8 --devices 4 [--baseline] [--no-lookahead]
-//! celerity run    --app wavesim --nodes 4 --transport tcp|channel
+//! celerity run    --app wavesim --nodes 4 --transport tcp|channel [--trace out.json]
 //! celerity worker --app wavesim --node 1 --peers 127.0.0.1:7700,127.0.0.1:7701
+//! celerity launch -n 4 -- nbody --steps 4
 //! ```
 //!
 //! `graph` prints Graphviz dot for the requested intermediate
@@ -15,7 +16,10 @@
 //! runs ONE node of a multi-process cluster over TCP — launch one worker
 //! per node with the same `--peers` list (order defines node ids) and
 //! compare the printed fence digests, which must agree across nodes and
-//! with a 1-node `run`.
+//! with a 1-node `run`; `launch` does all of that in one command — port
+//! allocation, worker spawning, prefixed log streaming, digest
+//! cross-checking and exit-code aggregation — with worker heartbeats on
+//! so a killed node fails the whole run instead of hanging it.
 
 use celerity::apps;
 use celerity::command::{CdagGenerator, SplitHint};
@@ -23,8 +27,10 @@ use celerity::comm::{CommRef, TcpCommunicator, Transport};
 use celerity::driver::{run_node, try_run_cluster, ClusterConfig, Queue};
 use celerity::grid::{GridBox, Range, Region};
 use celerity::instruction::{IdagConfig, IdagGenerator};
+use celerity::launch::{self, LaunchConfig};
 use celerity::sim::{simulate, ExecModel, SimConfig};
-use celerity::task::{RangeMapper, TaskManager};
+use celerity::task::{QueueError, RangeMapper, TaskManager};
+use celerity::trace;
 use celerity::util::NodeId;
 use std::sync::{Arc, Mutex};
 
@@ -91,19 +97,22 @@ fn build_app(tm: &mut TaskManager, app: &str, steps: u64) {
 }
 
 /// Submit the chosen app on a live queue and fence its result buffer.
-fn run_live_app(q: &mut Queue, app: &str, steps: u64) -> Vec<u8> {
+/// Runtime failures (§4.4 errors, heartbeat-detected peer deaths) come
+/// back as `Err` so the caller exits with an attributed message instead
+/// of a panic backtrace.
+fn run_live_app(q: &mut Queue, app: &str, steps: u64) -> Result<Vec<u8>, QueueError> {
     match app {
         "nbody" => {
-            let (p, _v) = apps::nbody::submit(q, 1024, steps as usize).expect("submit nbody");
-            q.fence_bytes(p.id()).expect("fence P")
+            let (p, _v) = apps::nbody::submit(q, 1024, steps as usize)?;
+            q.fence_bytes(p.id())
         }
         "rsim" => {
-            let (r, _vis) = apps::rsim::submit(q, steps.max(2), 256, false).expect("submit rsim");
-            q.fence_bytes(r.id()).expect("fence R")
+            let (r, _vis) = apps::rsim::submit(q, steps.max(2), 256, false)?;
+            q.fence_bytes(r.id())
         }
         "wavesim" => {
-            let out = apps::wavesim::submit(q, 64, 64, steps as usize).expect("submit wavesim");
-            q.fence_bytes(out.id()).expect("fence U")
+            let out = apps::wavesim::submit(q, 64, 64, steps as usize)?;
+            q.fence_bytes(out.id())
         }
         other => {
             eprintln!("unknown app '{other}' (expected nbody|rsim|wavesim)");
@@ -136,6 +145,43 @@ fn num_arg(args: &[String], key: &str, default: &str) -> u64 {
         eprintln!("celerity: invalid {key} '{raw}' (expected a non-negative integer)");
         std::process::exit(2);
     })
+}
+
+/// Optional flag: `None` when absent.
+fn opt_arg(args: &[String], key: &str) -> Option<String> {
+    args.iter().position(|a| a == key).and_then(|i| args.get(i + 1).cloned())
+}
+
+fn opt_num_arg(args: &[String], key: &str) -> Option<u64> {
+    let raw = opt_arg(args, key)?;
+    Some(raw.parse().unwrap_or_else(|_| {
+        eprintln!("celerity: invalid {key} '{raw}' (expected a non-negative integer)");
+        std::process::exit(2);
+    }))
+}
+
+/// Drain the trace recorder, write the Chrome JSON (and optional Graphviz)
+/// artifacts, and print the derived scheduler-lag summary.
+fn export_trace(json_path: &str, dot_path: Option<&str>) {
+    let tr = trace::drain();
+    if let Err(e) = tr.validate() {
+        // A malformed trace is a bug worth hearing about, but the run's
+        // numerical result already stands — don't fail it retroactively.
+        eprintln!("celerity: trace failed validation: {e}");
+    }
+    if let Err(e) = std::fs::write(json_path, trace::chrome::to_chrome_json(&tr)) {
+        eprintln!("celerity: cannot write trace '{json_path}': {e}");
+        std::process::exit(2);
+    }
+    println!("{}", tr.scheduler_lag());
+    println!("trace: {} events -> {json_path}", tr.len());
+    if let Some(p) = dot_path {
+        if let Err(e) = std::fs::write(p, trace::dot::to_dot(&tr)) {
+            eprintln!("celerity: cannot write trace dot '{p}': {e}");
+            std::process::exit(2);
+        }
+        println!("trace dot: {p}");
+    }
 }
 
 fn main() {
@@ -210,6 +256,11 @@ fn main() {
                     eprintln!("unknown transport (expected channel|tcp)");
                     std::process::exit(2);
                 });
+            let trace_json = opt_arg(&args, "--trace");
+            let trace_dot = opt_arg(&args, "--trace-dot");
+            if trace_json.is_some() || trace_dot.is_some() {
+                trace::enable();
+            }
             let cfg = ClusterConfig {
                 num_nodes: nodes,
                 num_devices: devices,
@@ -217,6 +268,7 @@ fn main() {
                 transport,
                 collectives,
                 direct_comm,
+                heartbeat_timeout_ms: opt_num_arg(&args, "--heartbeat-timeout"),
                 ..Default::default()
             };
             let digests: Arc<Mutex<Vec<(u64, u64)>>> = Arc::new(Mutex::new(Vec::new()));
@@ -224,8 +276,10 @@ fn main() {
             let app_c = app.clone();
             let t0 = std::time::Instant::now();
             let reports = match try_run_cluster(cfg, move |q| {
-                let bytes = run_live_app(q, &app_c, steps);
-                dc.lock().unwrap().push((q.node.0, digest(&bytes)));
+                match run_live_app(q, &app_c, steps) {
+                    Ok(bytes) => dc.lock().unwrap().push((q.node.0, digest(&bytes))),
+                    Err(e) => eprintln!("node {} failed: {e}", q.node),
+                }
             }) {
                 Ok(r) => r,
                 Err(e) => {
@@ -242,13 +296,24 @@ fn main() {
             let mut digests = digests.lock().unwrap().clone();
             digests.sort();
             for (node, d) in &digests {
-                println!("node {node} digest {d:016x}");
+                println!("{}", launch::digest_marker(NodeId(*node), *d));
             }
-            let agree = digests.windows(2).all(|w| w[0].1 == w[1].1);
+            let complete = digests.len() as u64 == nodes;
+            let agree = complete && digests.windows(2).all(|w| w[0].1 == w[1].1);
             println!(
                 "app={app} nodes={nodes} devices={devices} steps={steps} transport={} wall={wall:.3}s digests_agree={agree}",
                 transport.name()
             );
+            if let Some(p) = &trace_json {
+                export_trace(p, trace_dot.as_deref());
+            } else if let Some(p) = &trace_dot {
+                let tr = trace::drain();
+                if let Err(e) = std::fs::write(p, trace::dot::to_dot(&tr)) {
+                    eprintln!("celerity: cannot write trace dot '{p}': {e}");
+                    std::process::exit(2);
+                }
+                println!("trace dot: {p}");
+            }
             if !agree || reports.iter().any(|r| !r.errors.is_empty()) {
                 std::process::exit(1);
             }
@@ -285,6 +350,21 @@ fn main() {
                 );
                 std::process::exit(2);
             }
+            let trace_json = opt_arg(&args, "--trace");
+            if trace_json.is_some() {
+                trace::enable();
+            }
+            // Test-only fault injection: `--fault-node I --fault-exit-after MS`
+            // hard-kills this process mid-run so the heartbeat path can be
+            // exercised end-to-end from the launcher.
+            if opt_num_arg(&args, "--fault-node") == Some(node.0) {
+                let after = opt_num_arg(&args, "--fault-exit-after").unwrap_or(500);
+                std::thread::spawn(move || {
+                    std::thread::sleep(std::time::Duration::from_millis(after));
+                    eprintln!("celerity worker: injected fault on node {node}: exiting");
+                    std::process::exit(3);
+                });
+            }
             let cfg = ClusterConfig {
                 num_nodes: peers.len() as u64,
                 num_devices: devices,
@@ -292,6 +372,7 @@ fn main() {
                 transport: Transport::Tcp,
                 collectives,
                 direct_comm,
+                heartbeat_timeout_ms: opt_num_arg(&args, "--heartbeat-timeout"),
                 ..Default::default()
             };
             let bind_addr = peers[node.0 as usize];
@@ -305,7 +386,7 @@ fn main() {
                 }
             };
             let app_c = app.clone();
-            let out: Arc<Mutex<Vec<u8>>> = Arc::new(Mutex::new(Vec::new()));
+            let out: Arc<Mutex<Result<Vec<u8>, QueueError>>> = Arc::new(Mutex::new(Ok(Vec::new())));
             let oc = out.clone();
             let report = run_node(&cfg, node, comm, move |q| {
                 *oc.lock().unwrap() = run_live_app(q, &app_c, steps);
@@ -313,17 +394,83 @@ fn main() {
             for e in &report.errors {
                 eprintln!("node {} error: {e}", report.node);
             }
-            println!("node {} digest {:016x}", node, digest(&out.lock().unwrap()));
+            if let Some(p) = &trace_json {
+                export_trace(p, None);
+            }
+            match &*out.lock().unwrap() {
+                Ok(bytes) => {
+                    // One atomic marker line (single write): the contract
+                    // `celerity launch` and the tests parse. Interleaving
+                    // with other nodes' output cannot corrupt it.
+                    println!("{}", launch::digest_marker(node, digest(bytes)));
+                }
+                Err(e) => {
+                    eprintln!("node {node} failed: {e}");
+                    std::process::exit(1);
+                }
+            }
             if !report.errors.is_empty() {
                 std::process::exit(1);
             }
         }
+        "launch" => {
+            // Flags before `--` belong to the launcher; the first token
+            // after it names the app and the rest pass through to every
+            // worker verbatim.
+            let sep = args.iter().position(|a| a == "--").unwrap_or_else(|| {
+                eprintln!(
+                    "celerity launch: missing '--' separator (usage: celerity launch -n 4 -- nbody --steps 4)"
+                );
+                std::process::exit(2);
+            });
+            let (own, rest) = args.split_at(sep);
+            let Some(launch_app) = rest.get(1).cloned() else {
+                eprintln!("celerity launch: missing app after '--' (nbody|rsim|wavesim)");
+                std::process::exit(2);
+            };
+            let n = opt_num_arg(own, "-n")
+                .or_else(|| opt_num_arg(own, "--nodes"))
+                .unwrap_or(2);
+            if n == 0 {
+                eprintln!("celerity launch: -n must be at least 1");
+                std::process::exit(2);
+            }
+            let mut lcfg = LaunchConfig::new(n, launch_app);
+            lcfg.app_args = rest[2..].to_vec();
+            if let Some(ms) = opt_num_arg(own, "--heartbeat-timeout") {
+                lcfg.heartbeat_timeout_ms = ms;
+            }
+            lcfg.trace = opt_arg(own, "--trace");
+            let t0 = std::time::Instant::now();
+            let report = match launch::launch(&lcfg) {
+                Ok(r) => r,
+                Err(e) => {
+                    eprintln!("celerity launch: cannot start the cluster: {e}");
+                    std::process::exit(2);
+                }
+            };
+            for e in &report.errors {
+                eprintln!("[launch] {e}");
+            }
+            let first = report.digests.iter().flatten().next();
+            println!(
+                "launch: {} nodes, wall={:.3}s, digests_agree={}, {}",
+                lcfg.nodes,
+                t0.elapsed().as_secs_f64(),
+                first.is_some() && report.digests.iter().all(|d| d.as_ref() == first),
+                if report.success() { "ok" } else { "FAILED" },
+            );
+            if !report.success() {
+                std::process::exit(1);
+            }
+        }
         _ => {
-            println!("usage: celerity graph|sim|run|worker --app nbody|rsim|wavesim [--nodes N] [--devices D] [--steps S]");
+            println!("usage: celerity graph|sim|run|worker|launch --app nbody|rsim|wavesim [--nodes N] [--devices D] [--steps S]");
             println!("  graph:  --dump tdag,cdag,idag   (Graphviz dot on stdout)");
             println!("  sim:    [--baseline] [--no-lookahead] [--no-direct-comm]");
-            println!("  run:    [--transport channel|tcp] [--no-collectives] [--no-direct-comm]   (live in-process cluster)");
-            println!("  worker: --node I --peers a:p[,b:p,...] [--no-collectives] [--no-direct-comm]   (one node of a multi-process TCP cluster; a single address is a valid 1-node run)");
+            println!("  run:    [--transport channel|tcp] [--no-collectives] [--no-direct-comm] [--trace out.json] [--trace-dot out.dot] [--heartbeat-timeout MS]   (live in-process cluster)");
+            println!("  worker: --node I --peers a:p[,b:p,...] [--heartbeat-timeout MS] [--trace out.json] [--no-collectives] [--no-direct-comm]   (one node of a multi-process TCP cluster; a single address is a valid 1-node run)");
+            println!("  launch: -n N [--heartbeat-timeout MS] [--trace base] -- <app> [worker args...]   (spawn N worker processes, stream logs, cross-check digests)");
         }
     }
 }

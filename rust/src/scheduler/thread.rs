@@ -121,7 +121,20 @@ impl SchedulerHandle {
                                     cfg_node, tasks.len(), tasks[0].id, tasks[0].name
                                 );
                             }
+                            let tracing = crate::trace::enabled();
+                            let t0 = if tracing { crate::trace::now_ns() } else { 0 };
+                            let flushes_before = sched.flushes;
                             let (instructions, pilots) = sched.process_batch(&tasks);
+                            if tracing {
+                                record_batch_trace(
+                                    cfg_node.0,
+                                    t0,
+                                    tasks.len(),
+                                    &instructions,
+                                    sched.queue_len(),
+                                    sched.flushes - flushes_before,
+                                );
+                            }
                             if trace {
                                 eprintln!(
                                     "[sched {}] emitted {} instrs {} pilots (queue={})",
@@ -139,7 +152,20 @@ impl SchedulerHandle {
                             }
                         }
                         Ok(SchedulerMsg::Shutdown) | Err(()) => {
+                            let tracing = crate::trace::enabled();
+                            let t0 = if tracing { crate::trace::now_ns() } else { 0 };
+                            let flushes_before = sched.flushes;
                             let (instructions, pilots) = sched.flush_now();
+                            if tracing {
+                                record_batch_trace(
+                                    cfg_node.0,
+                                    t0,
+                                    0,
+                                    &instructions,
+                                    sched.queue_len(),
+                                    sched.flushes - flushes_before,
+                                );
+                            }
                             let mut errors: Vec<String> =
                                 sched.take_errors().iter().map(|e| e.to_string()).collect();
                             errors.extend(sched.take_idag_errors());
@@ -153,6 +179,7 @@ impl SchedulerHandle {
                         }
                     }
                 }
+                crate::trace::flush_thread();
                 sched
             })
             .expect("spawn scheduler thread");
@@ -169,6 +196,46 @@ impl SchedulerHandle {
         let _ = self.tx.send(SchedulerMsg::Shutdown);
         drop(self.tx);
         self.join.join().expect("scheduler thread panicked")
+    }
+}
+
+/// Record one wakeup into the trace: a `SchedBatch` span over the compile,
+/// a `Compiled` instant per emitted instruction (carrying the IDAG edges
+/// for the Graphviz export), and a `LookaheadFlush` instant per lookahead
+/// flush the batch triggered. Only called with tracing enabled, so the
+/// per-instruction dep vectors are never built on the normal path.
+fn record_batch_trace(
+    node: u64,
+    t0: u64,
+    tasks: usize,
+    instructions: &[InstructionRef],
+    queue_len: usize,
+    flushes: u64,
+) {
+    use crate::trace::{self, EventKind, Track};
+    trace::span(
+        node,
+        Track::Scheduler,
+        t0,
+        EventKind::SchedBatch {
+            tasks: tasks as u64,
+            instructions: instructions.len() as u64,
+            queue_len: queue_len as u64,
+        },
+    );
+    for i in instructions {
+        trace::instant(
+            node,
+            Track::Scheduler,
+            EventKind::Compiled {
+                instr: i.id.0,
+                mnemonic: i.kind.mnemonic(),
+                deps: i.deps.iter().map(|(d, _)| d.0).collect(),
+            },
+        );
+    }
+    for _ in 0..flushes {
+        trace::instant(node, Track::Scheduler, EventKind::LookaheadFlush);
     }
 }
 

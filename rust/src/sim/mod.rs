@@ -150,6 +150,29 @@ pub struct SimResult {
     pub trace: Vec<TraceEvent>,
 }
 
+impl SimResult {
+    /// Lower the virtual-time timeline onto the shared trace schema, so a
+    /// simulated run exports to the same Chrome-tracing JSON as a live one
+    /// (`crate::trace::chrome::to_chrome_json`). Virtual seconds map to
+    /// nanoseconds 1:1; resources become named tracks.
+    pub fn to_trace(&self) -> crate::trace::Trace {
+        let to_ns = |t: f64| (t.max(0.0) * 1e9) as u64;
+        let mut events: Vec<crate::trace::Event> = self
+            .trace
+            .iter()
+            .map(|e| crate::trace::Event {
+                node: e.node,
+                track: crate::trace::Track::Named(e.resource.clone()),
+                start_ns: to_ns(e.start),
+                end_ns: to_ns(e.end.max(e.start)),
+                kind: crate::trace::EventKind::Span { label: e.label.clone() },
+            })
+            .collect();
+        events.sort_by_key(|e| (e.start_ns, e.node));
+        crate::trace::Trace { events }
+    }
+}
+
 // ── internal DES machinery ────────────────────────────────────────────────
 
 #[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
@@ -733,6 +756,20 @@ mod tests {
         let r = simulate(&cfg, nbody_build(1 << 10, 2));
         assert!(r.trace.iter().any(|e| e.resource.contains("Kernel")));
         assert!(r.trace.iter().all(|e| e.end >= e.start));
+    }
+
+    /// The simulator timeline lowers onto the shared trace schema and
+    /// exports through the same Chrome-JSON path as a live run.
+    #[test]
+    fn sim_timeline_exports_as_shared_trace() {
+        let cfg = SimConfig { num_nodes: 2, record_trace: true, ..Default::default() };
+        let r = simulate(&cfg, nbody_build(1 << 10, 2));
+        let tr = r.to_trace();
+        assert!(!tr.is_empty());
+        tr.validate().expect("sim trace must satisfy the schema");
+        let json = crate::trace::chrome::to_chrome_json(&tr);
+        assert!(json.contains("\"traceEvents\""));
+        assert!(json.contains("Kernel"));
     }
 
     #[test]

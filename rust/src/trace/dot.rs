@@ -1,0 +1,198 @@
+//! Graphviz export of the traced instruction DAG, with the critical path
+//! highlighted.
+//!
+//! The graph is reconstructed entirely from the trace: `Compiled` events
+//! carry each instruction's dependency edges, `Exec` spans (falling back
+//! to issue→retire extent) supply weights. Instruction ids are node-local
+//! and monotonically increasing with dependencies pointing backwards, so
+//! the longest weighted path is a single forward scan in id order. Each
+//! cluster node becomes a dot subgraph cluster with its own critical path
+//! painted red.
+
+use super::{EventKind, Trace};
+use std::collections::HashMap;
+use std::fmt::Write as _;
+
+struct InstrInfo {
+    mnemonic: &'static str,
+    deps: Vec<u64>,
+    dur_ns: u64,
+}
+
+/// Render the whole trace as a dot digraph (one cluster per node).
+pub fn to_dot(trace: &Trace) -> String {
+    let mut out = String::from("digraph idag {\n  rankdir=LR;\n  node [shape=box, fontsize=10];\n");
+    for node in trace.nodes() {
+        let instrs = collect(trace, node);
+        if instrs.is_empty() {
+            continue;
+        }
+        let critical = critical_path(&instrs);
+        let _ = writeln!(out, "  subgraph cluster_n{node} {{");
+        let _ = writeln!(out, "    label=\"node {node}\";");
+        let mut ids: Vec<&u64> = instrs.keys().collect();
+        ids.sort();
+        for id in &ids {
+            let info = &instrs[*id];
+            let hot = critical.contains(*id);
+            let _ = writeln!(
+                out,
+                "    n{node}_i{id} [label=\"I{id} {}\\n{:.1} us\"{}];",
+                info.mnemonic,
+                info.dur_ns as f64 / 1_000.0,
+                if hot { ", color=red, penwidth=2" } else { "" }
+            );
+        }
+        for id in &ids {
+            for dep in &instrs[*id].deps {
+                if !instrs.contains_key(dep) {
+                    continue; // dependency compiled before tracing began
+                }
+                let hot = critical.contains(*id) && critical.contains(dep);
+                let _ = writeln!(
+                    out,
+                    "    n{node}_i{dep} -> n{node}_i{id}{};",
+                    if hot { " [color=red, penwidth=2]" } else { "" }
+                );
+            }
+        }
+        out.push_str("  }\n");
+    }
+    out.push_str("}\n");
+    out
+}
+
+/// Gather per-instruction metadata and execution durations for one node.
+fn collect(trace: &Trace, node: u64) -> HashMap<u64, InstrInfo> {
+    let mut instrs: HashMap<u64, InstrInfo> = HashMap::new();
+    let mut issue: HashMap<u64, u64> = HashMap::new();
+    let mut extent: HashMap<u64, u64> = HashMap::new();
+    for ev in trace.events.iter().filter(|e| e.node == node) {
+        match &ev.kind {
+            EventKind::Compiled { instr, mnemonic, deps } => {
+                instrs.insert(
+                    *instr,
+                    InstrInfo { mnemonic, deps: deps.clone(), dur_ns: 0 },
+                );
+            }
+            EventKind::Exec { instr, .. } => {
+                instrs
+                    .entry(*instr)
+                    .and_modify(|i| i.dur_ns += ev.end_ns - ev.start_ns);
+            }
+            EventKind::Issue { instr } => {
+                issue.insert(*instr, ev.start_ns);
+            }
+            EventKind::Retire { instr } => {
+                if let Some(t0) = issue.get(instr) {
+                    extent.insert(*instr, ev.end_ns.saturating_sub(*t0));
+                }
+            }
+            _ => {}
+        }
+    }
+    // Instructions without a lane span (inline, receives) get their
+    // issue→retire extent as the weight.
+    for (id, info) in instrs.iter_mut() {
+        if info.dur_ns == 0 {
+            info.dur_ns = extent.get(id).copied().unwrap_or(0);
+        }
+    }
+    instrs
+}
+
+/// Longest weighted path through the dependency DAG (ids ascend along
+/// edges, so a forward scan in id order is a topological order).
+fn critical_path(instrs: &HashMap<u64, InstrInfo>) -> std::collections::HashSet<u64> {
+    let mut ids: Vec<u64> = instrs.keys().copied().collect();
+    ids.sort_unstable();
+    let mut dist: HashMap<u64, u64> = HashMap::new();
+    let mut parent: HashMap<u64, u64> = HashMap::new();
+    let (mut best_id, mut best_dist) = (None, 0u64);
+    for id in &ids {
+        let info = &instrs[id];
+        let mut d = 0u64;
+        for dep in &info.deps {
+            if let Some(dd) = dist.get(dep) {
+                if *dd >= d {
+                    d = *dd;
+                    parent.insert(*id, *dep);
+                }
+            }
+        }
+        let total = d + info.dur_ns;
+        dist.insert(*id, total);
+        if total >= best_dist {
+            best_dist = total;
+            best_id = Some(*id);
+        }
+    }
+    let mut path = std::collections::HashSet::new();
+    let mut cur = best_id;
+    while let Some(id) = cur {
+        path.insert(id);
+        cur = parent.get(&id).copied();
+    }
+    path
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::{Event, Track};
+
+    fn compiled(node: u64, instr: u64, deps: Vec<u64>, ts: u64) -> Event {
+        Event {
+            node,
+            track: Track::Scheduler,
+            start_ns: ts,
+            end_ns: ts,
+            kind: EventKind::Compiled { instr, mnemonic: "device kernel", deps },
+        }
+    }
+
+    fn exec(node: u64, instr: u64, start: u64, end: u64) -> Event {
+        Event {
+            node,
+            track: Track::DeviceKernel(0),
+            start_ns: start,
+            end_ns: end,
+            kind: EventKind::Exec { instr, mnemonic: "device kernel" },
+        }
+    }
+
+    #[test]
+    fn critical_path_prefers_heavier_chain() {
+        // 1 -> 2 (10us) and 1 -> 3 (1us); 2,3 -> 4. Path 1-2-4 must win.
+        let tr = Trace {
+            events: vec![
+                compiled(0, 1, vec![], 0),
+                compiled(0, 2, vec![1], 1),
+                compiled(0, 3, vec![1], 2),
+                compiled(0, 4, vec![2, 3], 3),
+                exec(0, 1, 10, 1_010),
+                exec(0, 2, 1_010, 11_010),
+                exec(0, 3, 1_010, 2_010),
+                exec(0, 4, 11_010, 12_010),
+            ],
+        };
+        let dot = to_dot(&tr);
+        assert!(dot.contains("digraph idag"));
+        assert!(dot.contains("subgraph cluster_n0"));
+        assert!(dot.contains("n0_i2 [label=\"I2 device kernel\\n10.0 us\", color=red"));
+        // The light branch stays uncolored.
+        assert!(dot.contains("n0_i3 [label=\"I3 device kernel\\n1.0 us\"];"));
+        assert!(dot.contains("n0_i1 -> n0_i2 [color=red"));
+        assert!(dot.contains("n0_i3 -> n0_i4;"));
+    }
+
+    #[test]
+    fn missing_dependencies_are_tolerated() {
+        let tr = Trace {
+            events: vec![compiled(0, 5, vec![2], 0)], // dep 2 never traced
+        };
+        let dot = to_dot(&tr);
+        assert!(dot.contains("n0_i5"));
+        assert!(!dot.contains("n0_i2 ->"));
+    }
+}

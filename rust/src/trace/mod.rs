@@ -1,0 +1,510 @@
+//! Low-overhead event tracing for the concurrent scheduler/executor.
+//!
+//! The paper's central claim — instruction-graph scheduling running
+//! *concurrently* with execution — is only demonstrable with a timeline:
+//! when was each instruction compiled, when was it issued, when did it
+//! retire, and what was each lane doing meanwhile. This module records
+//! exactly that, with a design constraint of near-zero cost when disabled
+//! and no cross-thread contention when enabled:
+//!
+//! - A single global [`AtomicBool`] gates every record call. Disabled, a
+//!   record is one relaxed load and a branch — cheap enough to leave
+//!   compiled into the scheduler and executor hot paths (guarded by a
+//!   `micro_scheduler` bench row).
+//! - Enabled, events go into a plain `Vec` in thread-local storage; no
+//!   locks, no allocation beyond the vec's amortized growth. Buffers are
+//!   flushed into a global sink when each thread exits (all runtime
+//!   threads are joined during shutdown) and on [`drain`].
+//! - Timestamps are nanoseconds from a process-wide epoch fixed at
+//!   [`enable`] time, so rows from different threads line up.
+//!
+//! Post-run, [`drain`] yields a [`Trace`] that exports to Chrome's
+//! `chrome://tracing` JSON ([`chrome::to_chrome_json`]), to a Graphviz DAG
+//! with critical-path annotation ([`dot::to_dot`]), and summarizes the
+//! paper's concurrency claim as a [`SchedulerLag`] metric (how long each
+//! instruction sat compiled-but-unissued, against how busy the lanes were).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::fmt;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+pub mod chrome;
+pub mod dot;
+
+/// Global recording gate. Relaxed ordering is sufficient: a record racing
+/// an enable/disable transition may be dropped or kept, both acceptable.
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Process-wide time origin, fixed on first [`enable`].
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+
+/// Merged event sink; thread-local buffers land here on thread exit.
+static SINK: Mutex<Vec<Event>> = Mutex::new(Vec::new());
+
+/// Which timeline row an event belongs to, within one node's process row.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub enum Track {
+    /// The application thread driving the queue.
+    Main,
+    /// The scheduler thread (CDAG/IDAG compilation).
+    Scheduler,
+    /// The executor thread (admission, dispatch, retirement).
+    Executor,
+    /// Inbound comm activity observed by the executor's poll loop.
+    CommIn,
+    /// The outbound comm lane (send instructions).
+    Comm,
+    /// Kernel lane of one device.
+    DeviceKernel(u64),
+    /// Host-to-device copy lane of one device.
+    DeviceCopyIn(u64),
+    /// Device-to-host copy lane of one device.
+    DeviceCopyOut(u64),
+    /// One host task lane.
+    Host(u64),
+    /// Free-form row, used by the discrete-event simulator's converter.
+    Named(String),
+}
+
+impl Track {
+    /// Stable ordering rank for export (lower = higher in the timeline).
+    fn rank(&self) -> u64 {
+        match self {
+            Track::Main => 0,
+            Track::Scheduler => 1,
+            Track::Executor => 2,
+            Track::CommIn => 3,
+            Track::Comm => 4,
+            Track::Host(i) => 10 + i,
+            Track::DeviceKernel(d) => 100 + 10 * d,
+            Track::DeviceCopyIn(d) => 101 + 10 * d,
+            Track::DeviceCopyOut(d) => 102 + 10 * d,
+            Track::Named(_) => 1000,
+        }
+    }
+
+    /// Human-readable row label.
+    pub fn label(&self) -> String {
+        match self {
+            Track::Main => "main".into(),
+            Track::Scheduler => "scheduler".into(),
+            Track::Executor => "executor".into(),
+            Track::CommIn => "comm-in".into(),
+            Track::Comm => "comm lane".into(),
+            Track::Host(i) => format!("host lane {i}"),
+            Track::DeviceKernel(d) => format!("D{d} kernel"),
+            Track::DeviceCopyIn(d) => format!("D{d} copy-in"),
+            Track::DeviceCopyOut(d) => format!("D{d} copy-out"),
+            Track::Named(s) => s.clone(),
+        }
+    }
+}
+
+/// What happened. Instants carry `start_ns == end_ns`; spans cover a range.
+#[derive(Debug, Clone)]
+pub enum EventKind {
+    /// A task entered the scheduler queue (recorded on the main thread as
+    /// the application submits).
+    TaskSubmit { task: u64 },
+    /// One scheduler wakeup: TDAG batch through CDAG + IDAG compilation.
+    SchedBatch { tasks: u64, instructions: u64, queue_len: u64 },
+    /// The lookahead window flushed (allocation-shape mismatch or horizon).
+    LookaheadFlush,
+    /// An instruction left the IDAG generator, dependencies resolved.
+    Compiled { instr: u64, mnemonic: &'static str, deps: Vec<u64> },
+    /// The executor dispatched the instruction to its lane/engine.
+    Issue { instr: u64 },
+    /// The instruction completed and released its dependents.
+    Retire { instr: u64 },
+    /// A lane actually ran the instruction's payload (kernel, copy, send,
+    /// host task); recorded on the lane's own track.
+    Exec { instr: u64, mnemonic: &'static str },
+    /// An inbound payload arrived from a peer.
+    DataIn { from: u64, bytes: u64 },
+    /// An inbound pilot arrived from a peer.
+    PilotIn { from: u64 },
+    /// A liveness heartbeat arrived from a peer.
+    HeartbeatIn { from: u64 },
+    /// The arena backed an alloc instruction.
+    Alloc { bytes: u64 },
+    /// Free-form span (simulator timelines).
+    Span { label: String },
+}
+
+impl EventKind {
+    /// Short display name (Chrome event name / dot node label).
+    pub fn name(&self) -> &str {
+        match self {
+            EventKind::TaskSubmit { .. } => "task submit",
+            EventKind::SchedBatch { .. } => "compile batch",
+            EventKind::LookaheadFlush => "lookahead flush",
+            EventKind::Compiled { .. } => "compiled",
+            EventKind::Issue { .. } => "issue",
+            EventKind::Retire { .. } => "retire",
+            EventKind::Exec { mnemonic, .. } => mnemonic,
+            EventKind::DataIn { .. } => "data in",
+            EventKind::PilotIn { .. } => "pilot in",
+            EventKind::HeartbeatIn { .. } => "heartbeat in",
+            EventKind::Alloc { .. } => "alloc",
+            EventKind::Span { label } => label,
+        }
+    }
+}
+
+/// One recorded event.
+#[derive(Debug, Clone)]
+pub struct Event {
+    pub node: u64,
+    pub track: Track,
+    pub start_ns: u64,
+    pub end_ns: u64,
+    pub kind: EventKind,
+}
+
+impl Event {
+    pub fn is_span(&self) -> bool {
+        self.end_ns > self.start_ns
+    }
+}
+
+/// Thread-local buffer whose drop (at thread exit, after the runtime joins
+/// the thread) merges its events into the global sink.
+struct LocalBuf {
+    events: Vec<Event>,
+}
+
+impl Drop for LocalBuf {
+    fn drop(&mut self) {
+        if !self.events.is_empty() {
+            if let Ok(mut sink) = SINK.lock() {
+                sink.append(&mut self.events);
+            }
+        }
+    }
+}
+
+thread_local! {
+    static LOCAL: RefCell<LocalBuf> = const { RefCell::new(LocalBuf { events: Vec::new() }) };
+}
+
+/// Turn recording on. Fixes the time epoch on first call.
+pub fn enable() {
+    EPOCH.get_or_init(Instant::now);
+    ENABLED.store(true, Ordering::Relaxed);
+}
+
+/// Turn recording off (already-buffered events stay until [`drain`]).
+pub fn disable() {
+    ENABLED.store(false, Ordering::Relaxed);
+}
+
+/// Whether recording is currently on. This is the hot-path guard: callers
+/// that must build a payload (e.g. dependency vectors) check it first.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Nanoseconds since the trace epoch. Returns 0 if tracing never enabled.
+#[inline]
+pub fn now_ns() -> u64 {
+    match EPOCH.get() {
+        Some(e) => e.elapsed().as_nanos() as u64,
+        None => 0,
+    }
+}
+
+/// Record a fully-formed event (caller supplies timestamps).
+#[inline]
+pub fn record(ev: Event) {
+    if !enabled() {
+        return;
+    }
+    push(ev);
+}
+
+/// Record an instantaneous event stamped now.
+#[inline]
+pub fn instant(node: u64, track: Track, kind: EventKind) {
+    if !enabled() {
+        return;
+    }
+    let t = now_ns();
+    push(Event { node, track, start_ns: t, end_ns: t, kind });
+}
+
+/// Record a span that started at `start_ns` (from [`now_ns`]) and ends now.
+#[inline]
+pub fn span(node: u64, track: Track, start_ns: u64, kind: EventKind) {
+    if !enabled() {
+        return;
+    }
+    let end = now_ns();
+    push(Event { node, track, start_ns, end_ns: end.max(start_ns), kind });
+}
+
+fn push(ev: Event) {
+    // Ignore records from threads whose TLS is mid-teardown.
+    let _ = LOCAL.try_with(|b| b.borrow_mut().events.push(ev));
+}
+
+/// Flush the calling thread's buffer into the global sink.
+pub fn flush_thread() {
+    LOCAL.with(|b| {
+        let mut b = b.borrow_mut();
+        if !b.events.is_empty() {
+            SINK.lock().unwrap().append(&mut b.events);
+        }
+    });
+}
+
+/// Stop recording and take everything recorded so far. Only events from
+/// threads that have exited (the runtime joins all of its threads during
+/// shutdown) and from the calling thread are guaranteed to be included.
+pub fn drain() -> Trace {
+    disable();
+    flush_thread();
+    let events = std::mem::take(&mut *SINK.lock().unwrap());
+    Trace { events }
+}
+
+/// A drained set of events plus the analyses the CLI and tests consume.
+#[derive(Debug, Clone, Default)]
+pub struct Trace {
+    pub events: Vec<Event>,
+}
+
+/// The `scheduler_lag` summary: quantifies §2's concurrent-scheduling
+/// claim. For each instruction observed both leaving the scheduler
+/// (`Compiled`) and entering a lane (`Issue`), the lag is the time it sat
+/// compiled-but-unissued; lane-busy vs wall time shows whether the
+/// executor was starved (high lag + idle lanes) or saturated (lag is free).
+#[derive(Debug, Clone, Default)]
+pub struct SchedulerLag {
+    /// Instructions with both a `Compiled` and an `Issue` record.
+    pub instructions: u64,
+    /// Mean compiled→issued wait.
+    pub mean_lag_ns: f64,
+    /// Worst compiled→issued wait.
+    pub max_lag_ns: u64,
+    /// Total lane-execution time summed over all lanes and nodes.
+    pub lane_busy_ns: u64,
+    /// First-to-last event wall-clock extent.
+    pub wall_ns: u64,
+}
+
+impl fmt::Display for SchedulerLag {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "scheduler_lag: {} instructions, mean {:.1} us compiled->issued, \
+             max {:.1} us; lanes busy {:.2} ms over {:.2} ms wall",
+            self.instructions,
+            self.mean_lag_ns / 1_000.0,
+            self.max_lag_ns as f64 / 1_000.0,
+            self.lane_busy_ns as f64 / 1e6,
+            self.wall_ns as f64 / 1e6,
+        )
+    }
+}
+
+impl Trace {
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Node ids present, ascending.
+    pub fn nodes(&self) -> Vec<u64> {
+        let mut ns: Vec<u64> = self.events.iter().map(|e| e.node).collect();
+        ns.sort_unstable();
+        ns.dedup();
+        ns
+    }
+
+    /// Count of events matching a predicate.
+    pub fn count(&self, pred: impl Fn(&EventKind) -> bool) -> usize {
+        self.events.iter().filter(|e| pred(&e.kind)).count()
+    }
+
+    /// Schema self-check: spans must not end before they start, per-track
+    /// event order must be chronological (each track is written by exactly
+    /// one thread), and every `Retire` needs a preceding `Issue` for the
+    /// same (node, instruction).
+    pub fn validate(&self) -> Result<(), String> {
+        let mut last: HashMap<(u64, &Track), u64> = HashMap::new();
+        let mut issued: std::collections::HashSet<(u64, u64)> = Default::default();
+        for ev in &self.events {
+            if ev.end_ns < ev.start_ns {
+                return Err(format!("event ends before it starts: {ev:?}"));
+            }
+            let key = (ev.node, &ev.track);
+            if let Some(prev) = last.get(&key) {
+                if ev.start_ns < *prev {
+                    return Err(format!(
+                        "track {:?} on node {} goes backwards in time at {ev:?}",
+                        ev.track, ev.node
+                    ));
+                }
+            }
+            last.insert(key, ev.start_ns);
+            match ev.kind {
+                EventKind::Issue { instr } => {
+                    issued.insert((ev.node, instr));
+                }
+                EventKind::Retire { instr } => {
+                    if !issued.contains(&(ev.node, instr)) {
+                        return Err(format!(
+                            "node {} retired I{} without an issue record",
+                            ev.node, instr
+                        ));
+                    }
+                }
+                _ => {}
+            }
+        }
+        Ok(())
+    }
+
+    /// Derive the [`SchedulerLag`] summary.
+    pub fn scheduler_lag(&self) -> SchedulerLag {
+        let mut compiled: HashMap<(u64, u64), u64> = HashMap::new();
+        let mut lags: Vec<u64> = Vec::new();
+        let mut lane_busy = 0u64;
+        let mut t_min = u64::MAX;
+        let mut t_max = 0u64;
+        for ev in &self.events {
+            t_min = t_min.min(ev.start_ns);
+            t_max = t_max.max(ev.end_ns);
+            match ev.kind {
+                EventKind::Compiled { instr, .. } => {
+                    compiled.insert((ev.node, instr), ev.start_ns);
+                }
+                EventKind::Issue { instr } => {
+                    if let Some(c) = compiled.get(&(ev.node, instr)) {
+                        lags.push(ev.start_ns.saturating_sub(*c));
+                    }
+                }
+                EventKind::Exec { .. } | EventKind::Span { .. } => {
+                    lane_busy += ev.end_ns - ev.start_ns;
+                }
+                _ => {}
+            }
+        }
+        let n = lags.len() as u64;
+        SchedulerLag {
+            instructions: n,
+            mean_lag_ns: if n == 0 {
+                0.0
+            } else {
+                lags.iter().sum::<u64>() as f64 / n as f64
+            },
+            max_lag_ns: lags.iter().copied().max().unwrap_or(0),
+            lane_busy_ns: lane_busy,
+            wall_ns: if t_max >= t_min { t_max - t_min } else { 0 },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Tracing state is process-global; serialize the tests that toggle it.
+    static TEST_LOCK: Mutex<()> = Mutex::new(());
+
+    fn ev(node: u64, track: Track, start: u64, end: u64, kind: EventKind) -> Event {
+        Event { node, track, start_ns: start, end_ns: end, kind }
+    }
+
+    #[test]
+    fn disabled_records_are_dropped() {
+        let _g = TEST_LOCK.lock().unwrap();
+        let _ = drain(); // clears the sink and disables recording
+        instant(0, Track::Executor, EventKind::Issue { instr: 1 });
+        assert_eq!(drain().len(), 0);
+    }
+
+    #[test]
+    fn enabled_records_round_trip_through_drain() {
+        let _g = TEST_LOCK.lock().unwrap();
+        let _ = drain();
+        enable();
+        instant(0, Track::Executor, EventKind::Issue { instr: 7 });
+        let t0 = now_ns();
+        span(0, Track::DeviceKernel(0), t0, EventKind::Exec { instr: 7, mnemonic: "device kernel" });
+        instant(0, Track::Executor, EventKind::Retire { instr: 7 });
+        let tr = drain();
+        assert_eq!(tr.len(), 3);
+        assert!(tr.validate().is_ok());
+        assert!(!enabled(), "drain must disable recording");
+    }
+
+    #[test]
+    fn events_from_other_threads_are_flushed_on_join() {
+        let _g = TEST_LOCK.lock().unwrap();
+        let _ = drain();
+        enable();
+        let j = std::thread::spawn(|| {
+            instant(3, Track::Scheduler, EventKind::LookaheadFlush);
+        });
+        j.join().unwrap();
+        let tr = drain();
+        assert_eq!(tr.count(|k| matches!(k, EventKind::LookaheadFlush)), 1);
+        assert_eq!(tr.nodes(), vec![3]);
+    }
+
+    #[test]
+    fn validate_rejects_retire_without_issue() {
+        let tr = Trace {
+            events: vec![ev(0, Track::Executor, 5, 5, EventKind::Retire { instr: 9 })],
+        };
+        assert!(tr.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_backwards_track_time() {
+        let tr = Trace {
+            events: vec![
+                ev(0, Track::Executor, 10, 10, EventKind::Issue { instr: 1 }),
+                ev(0, Track::Executor, 5, 5, EventKind::Retire { instr: 1 }),
+            ],
+        };
+        assert!(tr.validate().is_err());
+    }
+
+    #[test]
+    fn scheduler_lag_pairs_compiled_with_issue() {
+        let tr = Trace {
+            events: vec![
+                ev(
+                    0,
+                    Track::Scheduler,
+                    100,
+                    100,
+                    EventKind::Compiled { instr: 1, mnemonic: "x", deps: vec![] },
+                ),
+                ev(0, Track::Executor, 400, 400, EventKind::Issue { instr: 1 }),
+                ev(
+                    0,
+                    Track::DeviceKernel(0),
+                    400,
+                    900,
+                    EventKind::Exec { instr: 1, mnemonic: "x" },
+                ),
+            ],
+        };
+        let lag = tr.scheduler_lag();
+        assert_eq!(lag.instructions, 1);
+        assert_eq!(lag.mean_lag_ns, 300.0);
+        assert_eq!(lag.max_lag_ns, 300);
+        assert_eq!(lag.lane_busy_ns, 500);
+        assert_eq!(lag.wall_ns, 800);
+    }
+}

@@ -1,0 +1,183 @@
+//! p2p-fallback geometries: workloads whose all-reads the collective
+//! detector must REJECT — multi-box owner slices (a partial rewrite
+//! fragments ownership) and partial replication (a halo read leaves
+//! boundary elements on two nodes). With `collectives` enabled the
+//! detector keeps the precise p2p lowering for these, so fence results
+//! must be byte-identical with collectives on and off, at 2 and 4 nodes,
+//! and equal to the 1-node run. The CDAG-level rejection itself is pinned
+//! by unit tests in `src/command/mod.rs`; this file proves the fallback
+//! executes correctly end to end.
+
+use celerity::comm::Transport;
+use celerity::driver::{run_cluster, ClusterConfig};
+use celerity::executor::{KernelCtx, Registry};
+use celerity::grid::{Point, Range};
+use celerity::task::RangeMapper;
+use std::sync::{Arc, Mutex};
+
+const N: u64 = 64;
+
+/// Kernels for the geometry workload. Full-buffer sums run sequentially
+/// over `0..N` so the float accumulation order is identical on every
+/// split — byte equality is the right bar.
+fn geometry_registry() -> Registry {
+    let r = Registry::new();
+    r.register_kernel(
+        "geo_iota",
+        Arc::new(|ctx: &KernelCtx| {
+            let a = ctx.view(0);
+            for i in ctx.chunk.min[0]..ctx.chunk.max[0] {
+                a.write_f32(Point::d1(i), i as f32 + 1.0);
+            }
+        }),
+    );
+    r.register_kernel(
+        "geo_rewrite",
+        Arc::new(|ctx: &KernelCtx| {
+            let a = ctx.view(0);
+            for i in ctx.chunk.min[0]..ctx.chunk.max[0] {
+                a.write_f32(Point::d1(i), 100.0 - i as f32);
+            }
+        }),
+    );
+    // out[i] = sum(src) + i — reads `src` with an All mapper.
+    r.register_kernel(
+        "geo_gather",
+        Arc::new(|ctx: &KernelCtx| {
+            let (src, out) = (ctx.view(0), ctx.view(1));
+            let mut sum = 0.0f32;
+            for i in 0..N {
+                sum += src.read_f32(Point::d1(i));
+            }
+            for i in ctx.chunk.min[0]..ctx.chunk.max[0] {
+                out.write_f32(Point::d1(i), sum * 0.001 + i as f32);
+            }
+        }),
+    );
+    // out[i] = src[i-1] + src[i] + src[i+1] (zero boundary) — the halo
+    // read that partially replicates `src`.
+    r.register_kernel(
+        "geo_halo",
+        Arc::new(|ctx: &KernelCtx| {
+            let (src, out) = (ctx.view(0), ctx.view(1));
+            for i in ctx.chunk.min[0]..ctx.chunk.max[0] {
+                let left = if i == 0 { 0.0 } else { src.read_f32(Point::d1(i - 1)) };
+                let right = if i + 1 >= N { 0.0 } else { src.read_f32(Point::d1(i + 1)) };
+                out.write_f32(Point::d1(i), left + src.read_f32(Point::d1(i)) + right);
+            }
+        }),
+    );
+    // out[i] = sum(all_src) + 3·elem_src[i] — All read plus an element-wise
+    // read of a second buffer.
+    r.register_kernel(
+        "geo_combine",
+        Arc::new(|ctx: &KernelCtx| {
+            let (all_src, elem_src, out) = (ctx.view(0), ctx.view(1), ctx.view(2));
+            let mut sum = 0.0f32;
+            for i in 0..N {
+                sum += all_src.read_f32(Point::d1(i));
+            }
+            for i in ctx.chunk.min[0]..ctx.chunk.max[0] {
+                out.write_f32(
+                    Point::d1(i),
+                    sum * 0.001 + 3.0 * elem_src.read_f32(Point::d1(i)),
+                );
+            }
+        }),
+    );
+    r
+}
+
+/// Run the chained geometry workload and return every node's fence bytes
+/// of the final buffer (which depends on every earlier stage).
+fn geometry_fences(nodes: u64, collectives: bool) -> Vec<Vec<u8>> {
+    let cfg = ClusterConfig {
+        num_nodes: nodes,
+        num_devices: 2,
+        registry: geometry_registry(),
+        transport: Transport::Channel,
+        collectives,
+        ..Default::default()
+    };
+    let results: Arc<Mutex<Vec<Vec<u8>>>> = Arc::new(Mutex::new(Vec::new()));
+    let rc = results.clone();
+    let reports = run_cluster(cfg, move |q| {
+        let range = Range::d1(N);
+        let a = q.create_buffer::<f32>("A", range);
+        let c = q.create_buffer::<f32>("C", range);
+        let h = q.create_buffer::<f32>("H", range);
+        let d = q.create_buffer::<f32>("D", range);
+        q.submit(|cgh| {
+            cgh.write(a, RangeMapper::OneToOne);
+            cgh.parallel_for("geo_iota", range);
+        })
+        .expect("iota");
+        // Fragment A's ownership: the prefix [0, N/4) is redistributed, so
+        // owner slices stop coalescing to single boxes.
+        q.submit(|cgh| {
+            cgh.write(a, RangeMapper::OneToOne);
+            cgh.parallel_for("geo_rewrite", Range::d1(N / 4));
+        })
+        .expect("rewrite");
+        // All-read of the fragmented buffer → detector must reject
+        // (multi-box owner slices) and fall back to p2p.
+        q.submit(|cgh| {
+            cgh.read(a, RangeMapper::All);
+            cgh.write(c, RangeMapper::OneToOne);
+            cgh.parallel_for("geo_gather", range);
+        })
+        .expect("gather");
+        // Halo read of C: boundary elements become replicated on two nodes.
+        q.submit(|cgh| {
+            cgh.read(c, RangeMapper::Neighborhood(Range::d1(1)));
+            cgh.write(h, RangeMapper::OneToOne);
+            cgh.parallel_for("geo_halo", range);
+        })
+        .expect("halo");
+        // All-read of the partially replicated buffer → detector must
+        // reject (non-exclusive replication) and fall back to p2p.
+        q.submit(|cgh| {
+            cgh.read(c, RangeMapper::All);
+            cgh.read(h, RangeMapper::OneToOne);
+            cgh.write(d, RangeMapper::OneToOne);
+            cgh.parallel_for("geo_combine", range);
+        })
+        .expect("combine");
+        let bytes = q.fence_bytes(d.id()).expect("fence D");
+        rc.lock().unwrap().push(bytes);
+    });
+    for r in &reports {
+        assert!(
+            r.errors.is_empty(),
+            "{nodes} nodes (collectives={collectives}): node {} errors: {:?}",
+            r.node,
+            r.errors
+        );
+    }
+    let results = results.lock().unwrap().clone();
+    assert_eq!(results.len(), nodes as usize);
+    for (i, f) in results.iter().enumerate() {
+        assert_eq!(f.len() as u64, N * 4, "node {i} fence size");
+    }
+    results
+}
+
+/// Acceptance: rejected geometries are a no-op for the collectives flag —
+/// byte-identical fences with collectives on vs off at 2 and 4 nodes, all
+/// equal to the 1-node run.
+#[test]
+fn fallback_geometries_byte_identical_with_collectives_on_or_off() {
+    let reference = geometry_fences(1, true);
+    for nodes in [2u64, 4] {
+        let with = geometry_fences(nodes, true);
+        let without = geometry_fences(nodes, false);
+        for i in 0..nodes as usize {
+            assert_eq!(
+                with[i], without[i],
+                "{nodes} nodes: node {i} differs between collectives on/off"
+            );
+            assert_eq!(with[i], with[0], "{nodes} nodes: node {i} disagrees with node 0");
+        }
+        assert_eq!(with[0], reference[0], "{nodes} nodes vs 1-node reference");
+    }
+}

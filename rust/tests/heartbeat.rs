@@ -1,0 +1,121 @@
+//! Worker-liveness integration tests: a dead peer must produce a clean,
+//! attributed cluster error within the heartbeat timeout (never a hang),
+//! and a slow-but-alive peer must never be declared dead.
+
+use celerity::apps::{self, nbody};
+use celerity::comm::{CommRef, TcpWorld, Transport};
+use celerity::driver::{run_node, ClusterConfig, NodeReport};
+use celerity::executor::Registry;
+use celerity::grid::Range;
+use celerity::task::TaskDecl;
+use celerity::util::NodeId;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Bring up an N-node TCP mesh, never start the last node (its endpoint is
+/// dropped — the moral equivalent of `kill -9` before the first fence),
+/// and run a communicating program on the survivors.
+fn run_with_dead_peer(num_nodes: u64) -> Vec<NodeReport> {
+    let cfg = ClusterConfig {
+        num_nodes,
+        num_devices: 2,
+        registry: apps::reference_registry(),
+        transport: Transport::Tcp,
+        heartbeat_timeout_ms: Some(800),
+        ..Default::default()
+    };
+    let mut comms = TcpWorld::bind_local(num_nodes).expect("bind mesh").communicators();
+    // Shrink the connect-retry grace so data sends to the dead peer fail
+    // fast; the detection bound under test is the heartbeat timeout.
+    for c in &mut comms {
+        c.set_connect_grace(Duration::from_millis(300));
+    }
+    let victim = comms.pop().expect("at least one node");
+    drop(victim);
+    let mut joins = Vec::new();
+    for (i, comm) in comms.into_iter().enumerate() {
+        let cfg = cfg.clone();
+        joins.push(std::thread::spawn(move || {
+            let comm: CommRef = Arc::new(comm);
+            run_node(&cfg, NodeId(i as u64), comm, |q| {
+                // nbody reads every peer's positions each step, so without
+                // liveness detection this would wait forever on receives
+                // from the dead node. Errors surface through the report.
+                if let Ok((p, _v)) = nbody::submit(q, 128, 2) {
+                    let _ = q.fence_bytes(p.id());
+                }
+            })
+        }));
+    }
+    joins.into_iter().map(|j| j.join().expect("node thread")).collect()
+}
+
+fn assert_dead_peer_detected(num_nodes: u64) {
+    let dead = num_nodes - 1;
+    let t0 = Instant::now();
+    let reports = run_with_dead_peer(num_nodes);
+    let wall = t0.elapsed();
+    assert!(
+        wall < Duration::from_secs(30),
+        "{num_nodes}-node cluster with a dead peer took {wall:?} — detection must be bounded"
+    );
+    assert_eq!(reports.len(), (num_nodes - 1) as usize);
+    for r in &reports {
+        let attributed = r
+            .errors
+            .iter()
+            .any(|e| e.contains("heartbeat timeout") && e.contains(&format!("node {dead}")));
+        assert!(
+            attributed,
+            "node {} must report an attributed heartbeat failure for node {dead}, got {:?}",
+            r.node, r.errors
+        );
+    }
+}
+
+#[test]
+fn dead_peer_detected_2_nodes_tcp() {
+    assert_dead_peer_detected(2);
+}
+
+#[test]
+fn dead_peer_detected_4_nodes_tcp() {
+    assert_dead_peer_detected(4);
+}
+
+/// A worker whose lanes are busy far longer than the heartbeat timeout is
+/// *alive*: its executor thread keeps beating while the host lane sleeps,
+/// so the run must finish with no liveness errors (no false positives).
+#[test]
+fn slow_but_alive_worker_is_not_declared_dead() {
+    let registry = Registry::new();
+    registry.register_host_task(
+        "nap",
+        Arc::new(|_ctx| std::thread::sleep(Duration::from_millis(1200))),
+    );
+    let cfg = ClusterConfig {
+        num_nodes: 2,
+        registry,
+        transport: Transport::Tcp,
+        // Timeout far below the nap: only the executor thread's own
+        // beacons keep the peer alive.
+        heartbeat_timeout_ms: Some(400),
+        ..Default::default()
+    };
+    let comms = TcpWorld::bind_local(2).expect("bind mesh").communicators();
+    let mut joins = Vec::new();
+    for (i, comm) in comms.into_iter().enumerate() {
+        let cfg = cfg.clone();
+        joins.push(std::thread::spawn(move || {
+            let comm: CommRef = Arc::new(comm);
+            run_node(&cfg, NodeId(i as u64), comm, |q| {
+                q.submit_decl(TaskDecl::host("nap", Range::d1(2)));
+                q.wait().expect("slow-but-alive cluster must complete cleanly");
+            })
+        }));
+    }
+    for j in joins {
+        let r = j.join().expect("node thread");
+        assert!(r.errors.is_empty(), "node {}: {:?}", r.node, r.errors);
+    }
+}

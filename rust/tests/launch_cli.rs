@@ -1,0 +1,87 @@
+//! End-to-end tests of `celerity launch`: real worker processes over real
+//! sockets, digest cross-checking, and killed-worker attribution.
+
+use std::process::Command;
+use std::time::{Duration, Instant};
+
+const EXE: &str = env!("CARGO_BIN_EXE_celerity");
+
+/// Parse every digest-marker line out of a stdout capture.
+fn digest_markers(stdout: &str) -> Vec<(u64, u64)> {
+    stdout
+        .lines()
+        .filter_map(|l| {
+            // `launch` prefixes streamed worker lines with "[node i] ".
+            let l = l.split("] ").last().unwrap_or(l);
+            celerity::launch::parse_digest_marker(l)
+        })
+        .collect()
+}
+
+#[test]
+fn launch_two_nodes_runs_to_matching_digests() {
+    let out = Command::new(EXE)
+        .args([
+            "launch", "-n", "2", "--heartbeat-timeout", "8000", "--", "nbody", "--steps", "2",
+        ])
+        .output()
+        .expect("spawn celerity launch");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(
+        out.status.success(),
+        "launch must exit 0\nstdout:\n{stdout}\nstderr:\n{stderr}"
+    );
+    let digests = digest_markers(&stdout);
+    assert_eq!(digests.len(), 2, "one marker per node\nstdout:\n{stdout}");
+    assert_eq!(digests[0].1, digests[1].1, "fence digests must agree");
+    assert!(stdout.contains("digests_agree=true"), "stdout:\n{stdout}");
+}
+
+/// Killing one worker mid-run must fail the whole launch with an error
+/// attributing the dead node — within the heartbeat timeout, not after a
+/// transport-level hang.
+#[test]
+fn launch_with_killed_worker_fails_attributed_and_bounded() {
+    let t0 = Instant::now();
+    let out = Command::new(EXE)
+        .args([
+            "launch",
+            "-n",
+            "2",
+            "--heartbeat-timeout",
+            "1500",
+            "--",
+            "nbody",
+            "--steps",
+            "2000",
+            "--fault-node",
+            "1",
+            "--fault-exit-after",
+            "800",
+        ])
+        .output()
+        .expect("spawn celerity launch");
+    let wall = t0.elapsed();
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(
+        !out.status.success(),
+        "a killed worker must fail the launch\nstdout:\n{stdout}\nstderr:\n{stderr}"
+    );
+    assert!(
+        wall < Duration::from_secs(60),
+        "launch with a dead worker took {wall:?} — must be bounded by the heartbeat timeout"
+    );
+    // The launcher attributes the dead node's exit...
+    assert!(
+        stderr.contains("node 1 exited with code 3"),
+        "stderr must attribute the injected fault:\n{stderr}"
+    );
+    // ...and the survivor reports the heartbeat-detected death, also
+    // naming node 1.
+    assert!(
+        stderr.contains("heartbeat timeout") && stderr.contains("node 1"),
+        "survivor must report an attributed heartbeat failure:\n{stderr}"
+    );
+}

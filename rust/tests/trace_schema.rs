@@ -1,0 +1,79 @@
+//! Trace-schema acceptance: a traced 4-node run must produce a valid,
+//! monotonic event stream covering (nearly) every retired instruction, a
+//! well-formed Chrome JSON export, a critical-path dot dump, and a
+//! meaningful scheduler-lag summary.
+//!
+//! Single #[test] on purpose: the trace recorder is process-global, so one
+//! traced run per test binary keeps the event stream attributable.
+
+use celerity::apps::{self, wavesim};
+use celerity::driver::{run_cluster, ClusterConfig};
+use celerity::trace;
+
+#[test]
+fn traced_4_node_run_satisfies_the_schema() {
+    trace::enable();
+    let cfg = ClusterConfig {
+        num_nodes: 4,
+        num_devices: 2,
+        registry: apps::reference_registry(),
+        ..Default::default()
+    };
+    let reports = run_cluster(cfg, |q| {
+        let out = wavesim::submit(q, 32, 16, 4).expect("submit wavesim");
+        q.fence_bytes(out.id()).expect("fence");
+    });
+    let tr = trace::drain();
+    for r in &reports {
+        assert!(r.errors.is_empty(), "node {}: {:?}", r.node, r.errors);
+    }
+
+    // Structural validity: span extents, per-track monotonicity, and
+    // issue-before-retire pairing.
+    tr.validate().expect("trace must satisfy the schema");
+    assert_eq!(tr.nodes().len(), 4, "every node must contribute events");
+
+    // Coverage: ≥95% of retired instructions appear as retire events
+    // (in practice 100% — the margin only tolerates TLS-teardown races).
+    let retired: u64 = reports.iter().map(|r| r.executor.retired).sum();
+    let retire_events =
+        tr.count(|e| matches!(e.kind, trace::EventKind::Retire { .. })) as u64;
+    assert!(
+        retire_events * 100 >= retired * 95,
+        "retire coverage: {retire_events} events for {retired} retired instructions"
+    );
+    // Scheduler-side events made it out of the scheduler threads too.
+    assert!(tr.count(|e| matches!(e.kind, trace::EventKind::SchedBatch { .. })) > 0);
+    assert!(tr.count(|e| matches!(e.kind, trace::EventKind::Compiled { .. })) > 0);
+    assert!(tr.count(|e| matches!(e.kind, trace::EventKind::TaskSubmit { .. })) > 0);
+    // A 4-node stencil must exchange halos: comm events prove the inbound
+    // path is instrumented.
+    assert!(tr.count(|e| matches!(e.kind, trace::EventKind::DataIn { .. })) > 0);
+
+    // Chrome export: metadata rows, complete events, instants.
+    let json = trace::chrome::to_chrome_json(&tr);
+    assert!(json.starts_with("{\"traceEvents\":["));
+    assert!(json.ends_with("}\n") || json.ends_with('}'));
+    for needle in ["\"ph\":\"M\"", "\"ph\":\"X\"", "\"ph\":\"i\"", "process_name", "thread_name"] {
+        assert!(json.contains(needle), "chrome JSON must contain {needle}");
+    }
+    // Balanced braces/brackets — cheap well-formedness proxy without a
+    // JSON parser dependency (scripts/check_trace.py does the real parse
+    // in CI).
+    let balance = |open: char, close: char| {
+        json.chars().filter(|&c| c == open).count() == json.chars().filter(|&c| c == close).count()
+    };
+    assert!(balance('{', '}') && balance('[', ']'), "unbalanced JSON");
+
+    // Graphviz export with a critical path.
+    let dot = trace::dot::to_dot(&tr);
+    assert!(dot.starts_with("digraph"));
+    assert!(dot.contains("color=red"), "critical path must be annotated");
+
+    // The derived summary metric sees the pipeline.
+    let lag = tr.scheduler_lag();
+    assert!(lag.instructions > 0, "scheduler_lag must cover instructions");
+    assert!(lag.wall_ns > 0);
+    let line = lag.to_string();
+    assert!(line.contains("scheduler_lag:"), "{line}");
+}

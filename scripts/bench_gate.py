@@ -27,6 +27,17 @@ import json
 import sys
 
 
+def skip(reason, detail):
+    """Print a skip verdict plus a GitHub Actions annotation.
+
+    A skipped gate exits 0, which renders as a green check — the `::notice`
+    workflow command makes the skip visible on the run summary page instead
+    of silently passing. Outside Actions the extra line is inert output.
+    """
+    print(f"bench_gate: SKIP - {detail}")
+    print(f"::notice title=bench gate skipped::{reason} - the bench regression gate is NOT armed.")
+
+
 def rows(doc):
     """Normalize a bench document to {key: throughput}."""
     out = {}
@@ -70,27 +81,29 @@ def main(argv):
         return 2
 
     if baseline.get("git_rev") == "unmeasured":
-        print(
-            "bench_gate: SKIP - committed baseline is the 'unmeasured' schema "
+        skip(
+            "baseline is the 'unmeasured' placeholder",
+            "committed baseline is the 'unmeasured' schema "
             "placeholder; nothing to compare against yet. To arm the gate, "
             "capture a QUICK-mode baseline (CI compares quick runs): "
             "BENCH_QUICK=1 BENCH_SCHEDULER_JSON=<repo>/BENCH_scheduler.json "
-            "cargo bench --bench micro_scheduler, then commit the file."
+            "cargo bench --bench micro_scheduler, then commit the file.",
         )
         return 0
     if baseline.get("quick") != fresh.get("quick"):
-        print(
-            "bench_gate: SKIP - baseline quick={} vs fresh quick={}; "
+        skip(
+            "quick/full run mismatch",
+            "baseline quick={} vs fresh quick={}; "
             "quick and full runs are not comparable. CI runs quick mode, so "
             "the committed baseline must be captured with BENCH_QUICK=1 for "
-            "the gate to arm.".format(baseline.get("quick"), fresh.get("quick"))
+            "the gate to arm.".format(baseline.get("quick"), fresh.get("quick")),
         )
         return 0
 
     base_rows = rows(baseline)
     fresh_rows = rows(fresh)
     if not base_rows:
-        print("bench_gate: SKIP - baseline has no measured rows.")
+        skip("baseline has no measured rows", "baseline has no measured rows.")
         return 0
 
     failures = []

@@ -1,0 +1,169 @@
+#!/usr/bin/env python3
+"""Validate a Chrome-tracing JSON document emitted by `--trace`.
+
+CI runs this against a real trace from a live multi-node run (and the
+`--self-test` fixtures before that), so a schema drift in the Rust exporter
+fails the build instead of silently producing files chrome://tracing
+rejects.
+
+Usage:
+    check_trace.py TRACE.json [TRACE2.json ...]
+    check_trace.py --self-test
+
+Checks per document:
+  - parses as JSON with a non-empty "traceEvents" list,
+  - every node (pid) has a process_name and every track a thread_name,
+  - every event has ph/pid/tid; ts >= 0 and dur >= 0 where present,
+  - non-metadata events are monotonic in file order (the exporter sorts),
+  - per pid, every retired instruction id was previously issued.
+
+Exit codes: 0 ok, 1 schema violation, 2 usage or unreadable input.
+"""
+
+import json
+import sys
+
+
+def check_doc(doc, path):
+    errors = []
+    events = doc.get("traceEvents")
+    if not isinstance(events, list) or not events:
+        return [f"{path}: traceEvents missing or empty"]
+
+    named_pids = set()
+    named_tids = set()
+    seen_pids = set()
+    seen_tids = set()
+    issued = {}  # pid -> set of instruction ids
+    retired = {}
+    last_ts = None
+    for i, ev in enumerate(events):
+        where = f"{path}: event {i}"
+        if not isinstance(ev, dict):
+            errors.append(f"{where}: not an object")
+            continue
+        ph = ev.get("ph")
+        pid = ev.get("pid")
+        tid = ev.get("tid")
+        if ph is None or pid is None or tid is None:
+            errors.append(f"{where}: missing ph/pid/tid: {ev}")
+            continue
+        if ph == "M":
+            if ev.get("name") == "process_name":
+                named_pids.add(pid)
+            elif ev.get("name") == "thread_name":
+                named_tids.add((pid, tid))
+            continue
+        seen_pids.add(pid)
+        seen_tids.add((pid, tid))
+        ts = ev.get("ts")
+        if not isinstance(ts, (int, float)) or ts < 0:
+            errors.append(f"{where}: bad ts {ts!r}")
+            continue
+        if last_ts is not None and ts < last_ts:
+            errors.append(f"{where}: ts {ts} < previous {last_ts} (file must be sorted)")
+        last_ts = ts
+        if ph == "X":
+            dur = ev.get("dur")
+            if not isinstance(dur, (int, float)) or dur < 0:
+                errors.append(f"{where}: span with bad dur {dur!r}")
+        elif ph == "i":
+            if ev.get("s") not in ("t", "p", "g"):
+                errors.append(f"{where}: instant without a valid scope: {ev}")
+        name = ev.get("name")
+        instr = (ev.get("args") or {}).get("instr")
+        if name == "issue" and instr is not None:
+            issued.setdefault(pid, set()).add(instr)
+        if name == "retire" and instr is not None:
+            retired.setdefault(pid, set()).add(instr)
+
+    for pid in sorted(seen_pids):
+        if pid not in named_pids:
+            errors.append(f"{path}: pid {pid} has events but no process_name metadata")
+    for pid, tid in sorted(seen_tids):
+        if (pid, tid) not in named_tids:
+            errors.append(f"{path}: tid {pid}/{tid} has events but no thread_name metadata")
+    for pid, rets in sorted(retired.items()):
+        ghosts = rets - issued.get(pid, set())
+        if ghosts:
+            errors.append(
+                f"{path}: pid {pid} retired {len(ghosts)} instruction(s) never issued, "
+                f"e.g. {sorted(ghosts)[:5]}"
+            )
+    return errors
+
+
+def check_file(path):
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"check_trace: cannot read {path}: {e}", file=sys.stderr)
+        return 2
+    errors = check_doc(doc, path)
+    if errors:
+        print(f"check_trace: {path}: SCHEMA VIOLATIONS", file=sys.stderr)
+        for e in errors:
+            print(f"  {e}", file=sys.stderr)
+        return 1
+    n = sum(1 for ev in doc["traceEvents"] if ev.get("ph") != "M")
+    print(f"check_trace: {path}: ok ({n} events)")
+    return 0
+
+
+def self_test():
+    """Fixture documents exercising both the accept and every reject path."""
+    meta = [
+        {"ph": "M", "name": "process_name", "pid": 0, "tid": 0, "args": {"name": "node 0"}},
+        {"ph": "M", "name": "thread_name", "pid": 0, "tid": 1, "args": {"name": "executor"}},
+    ]
+    good = meta + [
+        {"ph": "i", "s": "t", "name": "issue", "pid": 0, "tid": 1, "ts": 1.0,
+         "args": {"instr": 7}},
+        {"ph": "X", "name": "device kernel", "pid": 0, "tid": 1, "ts": 2.0, "dur": 3.5,
+         "args": {"instr": 7}},
+        {"ph": "i", "s": "t", "name": "retire", "pid": 0, "tid": 1, "ts": 6.0,
+         "args": {"instr": 7}},
+    ]
+    cases = [
+        ("valid document accepted", {"traceEvents": good}, 0),
+        ("empty traceEvents rejected", {"traceEvents": []}, 1),
+        ("negative dur rejected",
+         {"traceEvents": meta + [{"ph": "X", "name": "k", "pid": 0, "tid": 1, "ts": 1.0,
+                                  "dur": -1.0}]}, 1),
+        ("unsorted ts rejected",
+         {"traceEvents": meta + [
+             {"ph": "i", "s": "t", "name": "a", "pid": 0, "tid": 1, "ts": 5.0},
+             {"ph": "i", "s": "t", "name": "b", "pid": 0, "tid": 1, "ts": 1.0}]}, 1),
+        ("unnamed pid rejected",
+         {"traceEvents": [{"ph": "i", "s": "t", "name": "a", "pid": 9, "tid": 0, "ts": 0.0}]}, 1),
+        ("retire without issue rejected",
+         {"traceEvents": meta + [{"ph": "i", "s": "t", "name": "retire", "pid": 0, "tid": 1,
+                                  "ts": 1.0, "args": {"instr": 3}}]}, 1),
+    ]
+    ok = True
+    for name, doc, want in cases:
+        got = 1 if check_doc(doc, "<fixture>") else 0
+        status = "ok  " if got == want else "FAIL"
+        ok &= got == want
+        print(f"{status} {name}")
+    if not ok:
+        return 1
+    print("check_trace self-test: all cases passed.")
+    return 0
+
+
+def main(argv):
+    if len(argv) < 2:
+        print(__doc__, file=sys.stderr)
+        return 2
+    if argv[1] == "--self-test":
+        return self_test()
+    rc = 0
+    for path in argv[1:]:
+        rc = max(rc, check_file(path))
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

@@ -177,6 +177,14 @@ def main():
     for name, baseline, fresh, extra, want in cases:
         got, output = run_gate(baseline, fresh, extra)
         ok &= check(name, got, want, output)
+        # Every skip must carry a GitHub annotation so the disarmed gate is
+        # visible on the Actions summary instead of passing silently.
+        if name.endswith("skips"):
+            if "::notice" not in output:
+                print(f"FAIL {name}: skip output lacks a ::notice annotation\n{output}")
+                ok = False
+            else:
+                print(f"ok   {name} (annotated)")
     if not ok:
         return 1
     print("bench_gate self-test: all cases passed.")
