@@ -323,6 +323,29 @@ fn main() {
         n
     });
 
+    // 10. Wire framing: CRC32 + sequence stamping on the TCP data path —
+    //     encode a 4 KiB data frame and decode it back through the checked
+    //     reader. This is the per-frame tax the fault-recovery layer added;
+    //     the gate catches regressions (e.g. an accidental extra copy or a
+    //     slower CRC) before they show up as cluster-level slowdowns.
+    bench(res, repeats, "wire frame encode+decode (4 KiB, crc+seq)", || {
+        use celerity::comm::wire;
+        let n = 20_000u64 / scale;
+        let payload = vec![0xA5u8; 4096];
+        let mut acc = 0u64;
+        for i in 0..n {
+            let frame =
+                wire::encode_data(NodeId(0), celerity::util::MessageId(i), &payload, i);
+            let mut cur = std::io::Cursor::new(frame);
+            match wire::read_frame(&mut cur) {
+                Ok(Some(wire::WireMsg::Msg { seq, .. })) => acc += seq,
+                other => panic!("round trip must decode a data frame, got {other:?}"),
+            }
+        }
+        std::hint::black_box(acc);
+        n
+    });
+
     // Sanity anchor: an IdagGenerator must stay usable for the suite.
     let _ = IdagGenerator::new(IdagConfig::default(), celerity::buffer::BufferPool::new());
     println!("\ntargets (DESIGN.md §7): ooo < 2 µs/instr; idag gen > 10k instr/s");

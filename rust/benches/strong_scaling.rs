@@ -13,7 +13,11 @@
 //! lowering vs the original O(n²) push/await-push pairs. The p2p rows run
 //! a second ablation for direct device transfers ("-staged" suffix =
 //! `--no-direct-comm`): sends/receives staged through pinned host memory
-//! vs reading/landing in device allocations directly.
+//! vs reading/landing in device allocations directly. wavesim — the
+//! stencil-exchange workload — additionally runs a fault-recovery
+//! ablation ("wavesim-faulty", TCP only): a fixed seeded fault plan
+//! (drops, dups, corruption) so the gate prices the CRC/retransmit
+//! machinery's overhead against the clean "wavesim" TCP rows.
 //!
 //!     cargo bench --bench strong_scaling            # full run
 //!     BENCH_QUICK=1 cargo bench --bench strong_scaling   # CI smoke: 1+2 nodes
@@ -43,6 +47,8 @@ struct Row {
     collectives: bool,
     /// Direct device transfers (p2p staging elision) enabled for this row?
     direct: bool,
+    /// Ran under a seeded fault plan (the "-faulty" recovery ablation)?
+    fault: bool,
     wall_s: f64,
     /// Total grid-cell updates performed by the workload (throughput unit).
     cells: u64,
@@ -96,6 +102,12 @@ fn workloads(quick: bool) -> Vec<Workload> {
     ]
 }
 
+/// Fixed fault plan for the "-faulty" ablation rows: mild sustained
+/// drop/dup/corrupt pressure that the CRC/ack-retransmit layer repairs
+/// transparently. Deterministic by construction (seeded), so row-to-row
+/// noise is the transport's, not the injector's.
+const FAULTY_PLAN: &str = "seed=42 drop=0.01 dup=0.005 corrupt=0.002";
+
 fn run_once(
     w: &Workload,
     transport: Transport,
@@ -103,6 +115,7 @@ fn run_once(
     devices: u64,
     collectives: bool,
     direct: bool,
+    fault: bool,
 ) -> f64 {
     let cfg = ClusterConfig {
         num_nodes: nodes,
@@ -111,6 +124,8 @@ fn run_once(
         transport,
         collectives,
         direct_comm: direct,
+        fault_plan: fault
+            .then(|| celerity::fault::FaultPlan::parse(FAULTY_PLAN).expect("valid fault plan")),
         ..Default::default()
     };
     let submit = w.submit.clone();
@@ -129,13 +144,14 @@ fn write_json(rows: &[Row], quick: bool) {
     s.push_str("  \"rows\": [\n");
     for (i, r) in rows.iter().enumerate() {
         s.push_str(&format!(
-            "    {{\"app\": \"{}\", \"transport\": \"{}\", \"nodes\": {}, \"devices\": {}, \"collectives\": {}, \"direct\": {}, \"wall_s\": {:.6}, \"cells\": {}, \"cells_per_s\": {:.1}, \"speedup_vs_1\": {:.3}}}{}\n",
+            "    {{\"app\": \"{}\", \"transport\": \"{}\", \"nodes\": {}, \"devices\": {}, \"collectives\": {}, \"direct\": {}, \"fault\": {}, \"wall_s\": {:.6}, \"cells\": {}, \"cells_per_s\": {:.1}, \"speedup_vs_1\": {:.3}}}{}\n",
             r.app,
             r.transport.name(),
             r.nodes,
             r.devices,
             r.collectives,
             r.direct,
+            r.fault,
             r.wall_s,
             r.cells,
             r.cells_per_s,
@@ -175,17 +191,32 @@ fn main() {
         //     triggers collective lowering;
         //   - direct device transfers on/off ("-staged"): measured on the
         //     p2p paths they specialize (wavesim's stencil exchange and
-        //     nbody's p2p lowering; the collective ring always stages).
-        let variants: &[(&str, bool, bool)] = match w.app {
-            "nbody" => &[("", true, true), ("-p2p", false, true), ("-p2p-staged", false, false)],
-            "wavesim" => &[("", true, true), ("-staged", true, false)],
-            _ => &[("", true, true)],
+        //     nbody's p2p lowering; the collective ring always stages);
+        //   - fault recovery on/off ("-faulty", TCP only — the channel
+        //     fabric has no retransmit layer, so injected drops would
+        //     hang it): wavesim under FAULTY_PLAN vs the clean rows.
+        let variants: &[(&str, bool, bool, bool)] = match w.app {
+            "nbody" => &[
+                ("", true, true, false),
+                ("-p2p", false, true, false),
+                ("-p2p-staged", false, false, false),
+            ],
+            "wavesim" => &[
+                ("", true, true, false),
+                ("-staged", true, false, false),
+                ("-faulty", true, true, true),
+            ],
+            _ => &[("", true, true, false)],
         };
-        for &(suffix, collectives, direct) in variants {
+        for &(suffix, collectives, direct, fault) in variants {
             for &transport in &[Transport::Channel, Transport::Tcp] {
+                if fault && transport == Transport::Channel {
+                    continue;
+                }
                 let mut base = f64::NAN;
                 for &nodes in node_counts {
-                    let wall = run_once(w, transport, nodes, devices, collectives, direct);
+                    let wall =
+                        run_once(w, transport, nodes, devices, collectives, direct, fault);
                     if nodes == 1 {
                         base = wall;
                     }
@@ -196,6 +227,7 @@ fn main() {
                         devices,
                         collectives,
                         direct,
+                        fault,
                         wall_s: wall,
                         cells: w.cells,
                         cells_per_s: w.cells as f64 / wall,
@@ -217,6 +249,6 @@ fn main() {
             }
         }
     }
-    println!("\n(live run with reference kernels: wall time includes scheduling, transfers and the transport; tiny problem sizes mean sub-linear speedup is expected — the claim is the *trend*, the channel-vs-tcp delta, nbody's collectives-vs-p2p delta, and the direct-vs-staged delta on the p2p rows)");
+    println!("\n(live run with reference kernels: wall time includes scheduling, transfers and the transport; tiny problem sizes mean sub-linear speedup is expected — the claim is the *trend*, the channel-vs-tcp delta, nbody's collectives-vs-p2p delta, the direct-vs-staged delta on the p2p rows, and wavesim's faulty-vs-clean tcp delta pricing the recovery layer)");
     write_json(&rows, quick);
 }

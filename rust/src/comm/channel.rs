@@ -5,6 +5,12 @@
 //! `std::sync::mpsc` channels — delivery is immediate and lossless, which
 //! makes it the reference transport the TCP fabric is validated against
 //! (see `rust/tests/distributed.rs`).
+//!
+//! There is no wire format here, so chaos testing injects at the message
+//! level instead: wrap an endpoint in
+//! [`crate::fault::FaultyCommunicator`] to apply a seeded drop/delay/dup
+//! plan (corruption needs a CRC to be detectable and is a wire-level,
+//! TCP-only fault).
 
 use super::{Communicator, Inbound};
 use crate::instruction::Pilot;
@@ -221,6 +227,45 @@ mod tests {
     #[should_panic(expected = "single-node")]
     fn null_communicator_rejects_sends() {
         NullCommunicator(NodeId(0)).send_data(NodeId(0), MessageId(0), vec![]);
+    }
+
+    /// The channel fabric composes with the message-level chaos wrapper:
+    /// a `dup=1` plan duplicates every message, a `drop=1` plan loses every
+    /// message, and heartbeats are exempt either way.
+    #[test]
+    fn faulty_wrapper_injects_on_the_channel_fabric() {
+        use crate::fault::{FaultPlan, FaultyCommunicator};
+
+        // dup=1: every data-plane message is delivered twice.
+        let mut world = ChannelWorld::new(2);
+        let c0 = world.communicator(NodeId(0));
+        let c1 = world.communicator(NodeId(1));
+        let dup =
+            FaultyCommunicator::wrap(Box::new(c0), FaultPlan::parse("seed=3 dup=1").unwrap());
+        dup.send_data(NodeId(1), MessageId(4), vec![1]);
+        for _ in 0..2 {
+            assert!(matches!(
+                c1.poll(),
+                Some(Inbound::Data { msg, .. }) if msg == MessageId(4)
+            ));
+        }
+        assert!(c1.poll().is_none());
+        assert_eq!(dup.injector().frames_sent(), 1);
+
+        // drop=1: every data-plane message is lost; heartbeats are exempt.
+        let mut world = ChannelWorld::new(2);
+        let c0 = world.communicator(NodeId(0));
+        let c1 = world.communicator(NodeId(1));
+        let lossy =
+            FaultyCommunicator::wrap(Box::new(c0), FaultPlan::parse("seed=3 drop=1").unwrap());
+        lossy.send_pilot(pilot(0, 1, 9));
+        lossy.send_heartbeat(NodeId(1), false);
+        assert!(
+            matches!(c1.poll(), Some(Inbound::Heartbeat { .. })),
+            "control plane is exempt from injection"
+        );
+        assert!(c1.poll().is_none(), "pilot was dropped");
+        assert_eq!(lossy.injector().frames_sent(), 1, "heartbeats are not stamped");
     }
 
     /// Out-of-range node ids are dropped with a report, not a panic

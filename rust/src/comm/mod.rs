@@ -10,10 +10,15 @@
 //!   mpsc fabric; every node of the simulated cluster is a thread. Fastest,
 //!   and the reference the socket transport is validated against.
 //! - [`TcpWorld`] / [`TcpCommunicator`] ([`tcp`]): real sockets with the
-//!   length-prefixed frame format of [`wire`]; nodes may be threads of one
-//!   process (`TcpWorld::bind_local`) or genuinely separate OS processes
-//!   (`TcpCommunicator::bind` + the `celerity worker` CLI).
+//!   CRC32-checked, sequence-numbered frame format of [`wire`]; nodes may
+//!   be threads of one process (`TcpWorld::bind_local`) or genuinely
+//!   separate OS processes (`TcpCommunicator::bind` + the `celerity
+//!   worker` CLI). Transient stream faults are survived transparently via
+//!   ack/retransmit with reconnect (see [`tcp`]).
 //! - [`NullCommunicator`]: the single-node stub.
+//! - [`crate::fault::FaultyCommunicator`]: a deterministic chaos wrapper
+//!   around any of the above, driven by a seeded
+//!   [`crate::fault::FaultPlan`].
 //!
 //! Which transport a cluster uses is a [`Transport`] config value on
 //! `driver::ClusterConfig`, orthogonal to the program being run — the
@@ -37,7 +42,7 @@ use crate::util::{MessageId, NodeId};
 use std::sync::Arc;
 
 /// A message arriving at a node.
-#[derive(Debug)]
+#[derive(Debug, Clone, PartialEq)]
 pub enum Inbound {
     /// A pilot announcing an upcoming data transfer (§3.4).
     Pilot(Pilot),
@@ -48,17 +53,58 @@ pub enum Inbound {
     /// A peer's announcement of clean shutdown: it must no longer count
     /// toward failure detection.
     Goodbye { from: NodeId },
+    /// A transport-level fault report: a detected-and-recovered wire fault
+    /// (CRC mismatch, out-of-sequence frame, reconnect, retransmit) or —
+    /// with `fatal` — an unrecoverable peer failure. The executor traces
+    /// every report and surfaces fatal ones on its error stream instead of
+    /// letting the fabric desynchronize silently.
+    Fault { from: NodeId, kind: FaultKind, detail: String, fatal: bool },
+}
+
+/// What kind of transport fault an [`Inbound::Fault`] reports.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// A frame failed its CRC check (or was otherwise undecodable).
+    Corrupt,
+    /// A data-plane frame skipped ahead of the expected sequence number.
+    OutOfSeq,
+    /// The stream ended mid-frame.
+    Truncated,
+    /// A frame declared a payload beyond [`wire::MAX_DATA_LEN`].
+    Oversized,
+    /// A broken stream was re-established.
+    Reconnect,
+    /// Unacked frames were re-sent after a reconnect or an ack stall.
+    Retransmit,
+    /// Recovery was exhausted: the peer is considered lost.
+    PeerLost,
+}
+
+impl FaultKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultKind::Corrupt => "corrupt",
+            FaultKind::OutOfSeq => "out-of-seq",
+            FaultKind::Truncated => "truncated",
+            FaultKind::Oversized => "oversized",
+            FaultKind::Reconnect => "reconnect",
+            FaultKind::Retransmit => "retransmit",
+            FaultKind::PeerLost => "peer-lost",
+        }
+    }
 }
 
 impl Inbound {
     /// The peer this message came from (any inbound traffic is proof of
-    /// life, so the heartbeat monitor refreshes on every variant).
+    /// life, so the heartbeat monitor refreshes on every variant — except
+    /// fault reports, which may implicate a peer that is already gone).
     pub fn from(&self) -> NodeId {
         match self {
             Inbound::Pilot(p) => p.from,
             Inbound::Data { from, .. } => *from,
             Inbound::Heartbeat { from } => *from,
             Inbound::Goodbye { from } => *from,
+            Inbound::Fault { from, .. } => *from,
         }
     }
 }

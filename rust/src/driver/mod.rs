@@ -62,6 +62,14 @@ pub struct ClusterConfig {
     /// deployments (`celerity launch`/`worker`) set this so a killed worker
     /// produces an attributed cluster error instead of a hang.
     pub heartbeat_timeout_ms: Option<u64>,
+    /// Deterministic comm-fabric chaos plan (`--fault-plan`, see
+    /// [`crate::fault::FaultPlan`]). On the TCP fabric faults are injected
+    /// at the wire level below the retransmission layer, so a run under an
+    /// active plan must still produce byte-identical results; on the
+    /// channel fabric drops/delays/dups apply at the message level (no
+    /// recovery — for testing detection, not transparency). `kill=` sites
+    /// only apply to separate-process workers and are ignored in-process.
+    pub fault_plan: Option<crate::fault::FaultPlan>,
 }
 
 impl Default for ClusterConfig {
@@ -79,6 +87,7 @@ impl Default for ClusterConfig {
             collectives: true,
             direct_comm: true,
             heartbeat_timeout_ms: None,
+            fault_plan: None,
         }
     }
 }
@@ -95,6 +104,10 @@ pub struct NodeReport {
     pub max_queue_len: usize,
     /// Runtime errors (§4.4) observed on this node.
     pub errors: Vec<String>,
+    /// Non-fatal comm-fabric fault notices (corrupt frame rejected,
+    /// reconnects, retransmissions). Repaired or contained by the fabric:
+    /// reported for observability, never a failure by themselves.
+    pub faults: Vec<String>,
 }
 
 /// The per-node user-facing queue, mirroring Listing 1's API surface:
@@ -112,6 +125,7 @@ pub struct Queue {
     sched: SchedulerHandle,
     exec: ExecutorHandle,
     errors: Vec<String>,
+    faults: Vec<String>,
     /// How many of `errors` have already been surfaced through a
     /// `Result`; everything beyond this is reported by the next `wait()`.
     errors_reported: usize,
@@ -290,6 +304,7 @@ impl Queue {
         while let Ok(ev) = self.exec.events.try_recv() {
             match ev {
                 ExecEvent::Error(e) => self.errors.push(e),
+                ExecEvent::Fault(f) => self.faults.push(f),
                 ExecEvent::Epoch(..) => {}
             }
         }
@@ -297,8 +312,10 @@ impl Queue {
 
     fn collect_errors(&mut self, side: Vec<ExecEvent>) {
         for ev in side {
-            if let ExecEvent::Error(e) = ev {
-                self.errors.push(e);
+            match ev {
+                ExecEvent::Error(e) => self.errors.push(e),
+                ExecEvent::Fault(f) => self.faults.push(f),
+                ExecEvent::Epoch(..) => {}
             }
         }
     }
@@ -322,6 +339,7 @@ impl Queue {
             bytes_allocated: sched.idag().bytes_allocated,
             max_queue_len: sched.max_queue_len,
             errors: self.errors,
+            faults: self.faults,
         }
     }
 }
@@ -364,6 +382,7 @@ fn make_node(cfg: &ClusterConfig, node: NodeId, comm: CommRef) -> Queue {
         sched,
         exec,
         errors: Vec::new(),
+        faults: Vec::new(),
         errors_reported: 0,
         fence_counter: Arc::new(AtomicU64::new(0)),
     }
@@ -409,16 +428,41 @@ where
         let comm: CommRef = Arc::new(NullCommunicator(NodeId(0)));
         return Ok(vec![run_node(&cfg, NodeId(0), comm, program)]);
     }
+    let mut cfg = cfg;
+    if cfg.fault_plan.as_ref().map_or(false, |p| p.is_active())
+        && cfg.heartbeat_timeout_ms.is_none()
+    {
+        // Tail-loss recovery rides on heartbeat beacons (the ack-stall
+        // nudge re-sends unacked frames): an active chaos plan forces
+        // liveness monitoring on.
+        cfg.heartbeat_timeout_ms = Some(5_000);
+    }
+    let plan = cfg.fault_plan.as_ref().filter(|p| p.is_active());
     let comms: Vec<CommRef> = match cfg.transport {
         Transport::Channel => ChannelWorld::new(cfg.num_nodes)
             .communicators()
             .into_iter()
-            .map(|c| Arc::new(c) as CommRef)
+            .map(|c| match plan {
+                // Message-level chaos: no wire format to corrupt, no
+                // retransmission — detection testing, not transparency.
+                Some(p) => Arc::new(crate::fault::FaultyCommunicator::wrap(
+                    Box::new(c),
+                    p.clone(),
+                )) as CommRef,
+                None => Arc::new(c) as CommRef,
+            })
             .collect(),
         Transport::Tcp => TcpWorld::bind_local(cfg.num_nodes)?
             .communicators()
             .into_iter()
-            .map(|c| Arc::new(c) as CommRef)
+            .map(|mut c| {
+                if let Some(p) = plan {
+                    // Wire-level chaos below the retransmission layer: the
+                    // fabric repairs the damage transparently.
+                    c.set_fault_plan(p);
+                }
+                Arc::new(c) as CommRef
+            })
             .collect(),
     };
     let program = Arc::new(program);

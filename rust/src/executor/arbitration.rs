@@ -281,6 +281,39 @@ impl ReceiveArbiter {
         self.active.iter().all(|(_, a)| a.remaining.is_empty()) && self.awaits.is_empty()
     }
 
+    /// Graceful degradation on unrecoverable peer loss: fail every pending
+    /// receive and await with an attributed error instead of letting them
+    /// (and the fences behind them) hang forever. Returns the instructions
+    /// that were abandoned; their errors are queued on the §4.4 stream.
+    pub fn fail_all(&mut self, reason: &str) -> Vec<InstructionId> {
+        let mut failed: Vec<InstructionId> = Vec::new();
+        for (id, ar) in &self.active {
+            if !ar.remaining.is_empty() || !ar.done {
+                failed.push(*id);
+                self.errors.push(format!(
+                    "receive I{} (buffer {}, transfer T{}, remaining {}) abandoned: {reason}",
+                    id.0, ar.buffer, ar.transfer.0, ar.remaining
+                ));
+            }
+        }
+        for (id, aw) in &self.awaits {
+            failed.push(*id);
+            self.errors.push(format!(
+                "await receive I{} (split I{}, region {}) abandoned: {reason}",
+                id.0,
+                aw.split.0,
+                aw.region.bounding_box()
+            ));
+        }
+        failed.sort();
+        self.active.clear();
+        self.awaits.clear();
+        self.expected.clear();
+        self.early_data.clear();
+        self.unmatched_pilots.clear();
+        failed
+    }
+
     /// Human-readable state dump (stall diagnostics).
     pub fn debug_state(&self) -> String {
         use std::fmt::Write;
@@ -504,6 +537,41 @@ mod tests {
         assert!(errors[0].contains("retired receive"), "{errors:?}");
         assert!(a.take_completions().is_empty());
         assert!(a.take_errors().is_empty(), "drained");
+    }
+
+    /// Graceful degradation: `fail_all` abandons every pending receive and
+    /// await with an attributed error and leaves the arbiter idle — a lost
+    /// peer must fail fences, not hang them.
+    #[test]
+    fn fail_all_abandons_pending_work_with_attributed_errors() {
+        let mut a = ReceiveArbiter::new();
+        a.register_receive(
+            InstructionId(1),
+            BufferId(0),
+            crate::util::TaskId(1),
+            Region::from(GridBox::d1(0, 10)),
+            dst(),
+            false,
+        );
+        a.register_receive(
+            InstructionId(2),
+            BufferId(0),
+            crate::util::TaskId(2),
+            Region::from(GridBox::d1(0, 20)),
+            dst(),
+            true,
+        );
+        a.take_completions(); // the split receive completes immediately
+        a.register_await(InstructionId(3), InstructionId(2), Region::from(GridBox::d1(0, 10)));
+        let failed = a.fail_all("node 1 lost (transport gave up)");
+        assert_eq!(failed, vec![InstructionId(1), InstructionId(2), InstructionId(3)]);
+        let errors = a.take_errors();
+        assert_eq!(errors.len(), 3, "{errors:?}");
+        assert!(errors.iter().all(|e| e.contains("node 1 lost")), "{errors:?}");
+        assert!(errors.iter().any(|e| e.contains("receive I1")), "{errors:?}");
+        assert!(errors.iter().any(|e| e.contains("await receive I3")), "{errors:?}");
+        assert!(a.is_idle(), "failed state must not linger");
+        assert!(a.take_completions().is_empty(), "abandoned ≠ completed");
     }
 
     #[test]

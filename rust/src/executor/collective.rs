@@ -259,6 +259,9 @@ mod tests {
                         Inbound::Data { from, msg, bytes } => {
                             arbiters[rank].on_data(from, msg, bytes)
                         }
+                        // No heartbeats, goodbyes or faults on this
+                        // fault-free in-process fixture.
+                        _ => {}
                     }
                 }
                 for done in engines[rank].pump(&arbiters[rank], &comms[rank]) {
@@ -359,6 +362,7 @@ mod tests {
                         Inbound::Data { from, msg, bytes } => {
                             arbiters[rank].on_data(from, msg, bytes)
                         }
+                        _ => {}
                     }
                 }
                 for done in engines[rank].pump(&arbiters[rank], &comms[rank]) {

@@ -79,9 +79,9 @@ impl HeartbeatMonitor {
         }
     }
 
-    /// Send due beacons and check peer silence. Returns an attributed
-    /// error message on the first detected failure (once).
-    pub fn tick(&mut self, comm: &CommRef) -> Option<String> {
+    /// Send due beacons and check peer silence. Returns the dead peer and
+    /// an attributed error message on the first detected failure (once).
+    pub fn tick(&mut self, comm: &CommRef) -> Option<(NodeId, String)> {
         if self.failed {
             return None;
         }
@@ -96,18 +96,38 @@ impl HeartbeatMonitor {
             let silent = now.duration_since(self.last_seen[peer.0 as usize]);
             if silent > self.cfg.timeout {
                 self.failed = true;
-                return Some(format!(
-                    "heartbeat timeout on node {}: no sign of life from node {} for {} ms \
-                     (limit {} ms) — peer process dead or wedged; aborting this node \
-                     instead of hanging",
-                    self.node.0,
-                    peer.0,
-                    silent.as_millis(),
-                    self.cfg.timeout.as_millis(),
+                return Some((
+                    peer,
+                    format!(
+                        "heartbeat timeout on node {}: no sign of life from node {} for {} ms \
+                         (limit {} ms) — peer process dead or wedged; aborting this node \
+                         instead of hanging",
+                        self.node.0,
+                        peer.0,
+                        silent.as_millis(),
+                        self.cfg.timeout.as_millis(),
+                    ),
                 ));
             }
         }
         None
+    }
+
+    /// Declare `peer` dead immediately (e.g. the comm fabric escalated an
+    /// unrecoverable stream). Returns `None` if a failure was already
+    /// reported or the peer departed cleanly.
+    pub fn declare_dead(&mut self, peer: NodeId, why: &str) -> Option<(NodeId, String)> {
+        if self.failed || self.departed.get(peer.0 as usize).copied().unwrap_or(true) {
+            return None;
+        }
+        self.failed = true;
+        Some((
+            peer,
+            format!(
+                "node {} lost contact with node {}: {why}; aborting this node instead of hanging",
+                self.node.0, peer.0,
+            ),
+        ))
     }
 
     /// Broadcast a clean-shutdown goodbye to all still-live peers.
@@ -167,12 +187,25 @@ mod tests {
         let (c0, _c1) = pair();
         let mut m = HeartbeatMonitor::new(HeartbeatConfig::from_timeout_ms(30), NodeId(0), 2);
         std::thread::sleep(Duration::from_millis(60));
-        let err = m.tick(&c0).expect("peer must be declared dead");
+        let (who, err) = m.tick(&c0).expect("peer must be declared dead");
+        assert_eq!(who, NodeId(1));
         assert!(err.contains("node 1"), "{err}");
         assert!(err.contains("heartbeat timeout"), "{err}");
         assert!(m.failed());
         // Reported exactly once.
         assert!(m.tick(&c0).is_none());
+    }
+
+    #[test]
+    fn declare_dead_reports_once_and_respects_departures() {
+        let mut m = HeartbeatMonitor::new(HeartbeatConfig::from_timeout_ms(10_000), NodeId(0), 3);
+        m.mark_departed(NodeId(2));
+        assert!(m.declare_dead(NodeId(2), "stream broke").is_none(), "departed peers are exempt");
+        let (who, err) = m.declare_dead(NodeId(1), "stream unrecoverable").unwrap();
+        assert_eq!(who, NodeId(1));
+        assert!(err.contains("stream unrecoverable"), "{err}");
+        assert!(m.failed());
+        assert!(m.declare_dead(NodeId(1), "again").is_none(), "reported exactly once");
     }
 
     #[test]

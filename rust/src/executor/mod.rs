@@ -231,6 +231,10 @@ pub enum ExecEvent {
     Epoch(EpochAction, InstructionId),
     /// A runtime correctness error (§4.4), e.g. accessor out-of-bounds.
     Error(String),
+    /// A non-fatal comm-fabric fault notice (corrupt frame rejected,
+    /// reconnect, retransmission). The fabric already repaired or contained
+    /// the damage; these are surfaced for observability, not failure.
+    Fault(String),
 }
 
 /// Final statistics returned by [`ExecutorHandle::join`].
@@ -302,10 +306,10 @@ impl Executor {
             // iteration — even a saturated executor must keep beating, or
             // *it* would look dead to its peers.
             if let Some(m) = &mut self.monitor {
-                if let Some(err) = m.tick(&self.comm) {
-                    let _ = self.events.send(ExecEvent::Error(err));
+                if let Some((peer, err)) = m.tick(&self.comm) {
                     // Abort the node: pending receives from the dead peer
                     // can never complete, so draining would hang forever.
+                    self.abort_unreachable(peer, err);
                     heartbeat_failed = true;
                     break;
                 }
@@ -350,13 +354,18 @@ impl Executor {
             }
 
             // 2. Inbound communication → receive arbitration. Any inbound
-            // message is proof of life for its sender.
+            // message is proof of life for its sender — except fault
+            // notices, which the fabric generates locally *about* a peer
+            // and must not refresh that peer's liveness clock.
             let mut inbound_data = false;
+            let mut fatal_fault: Option<(NodeId, String)> = None;
             let node = self.cfg.node.0;
             while let Some(m) = self.comm.poll() {
                 progressed = true;
-                if let Some(mon) = &mut self.monitor {
-                    mon.mark_alive(m.from());
+                if !matches!(m, Inbound::Fault { .. }) {
+                    if let Some(mon) = &mut self.monitor {
+                        mon.mark_alive(m.from());
+                    }
                 }
                 match m {
                     Inbound::Pilot(p) => {
@@ -388,6 +397,54 @@ impl Executor {
                             mon.mark_departed(from);
                         }
                     }
+                    Inbound::Fault { from, kind, detail, fatal } => {
+                        use crate::comm::FaultKind;
+                        // Fault trace events are emitted here, on the
+                        // executor thread, so per-(node, track) timestamp
+                        // monotonicity holds (reader threads race).
+                        trace::instant(
+                            node,
+                            trace::Track::CommIn,
+                            match kind {
+                                FaultKind::Reconnect => {
+                                    trace::EventKind::Reconnect { peer: from.0 }
+                                }
+                                FaultKind::Retransmit => {
+                                    trace::EventKind::Retransmit { peer: from.0 }
+                                }
+                                k => trace::EventKind::CommFault {
+                                    from: from.0,
+                                    what: k.name(),
+                                    fatal,
+                                },
+                            },
+                        );
+                        if fatal {
+                            fatal_fault = Some((from, detail));
+                            break;
+                        }
+                        // Non-fatal: the fabric repaired or contained it
+                        // (CRC reject + retransmit, reconnect, dedup).
+                        // Report for observability without failing the run.
+                        let _ = self.events.send(ExecEvent::Fault(format!(
+                            "[{}] {detail}",
+                            kind.name()
+                        )));
+                    }
+                }
+            }
+            // Unrecoverable peer loss escalated by the comm fabric: abort
+            // like a heartbeat timeout — pending receives from that peer
+            // can never complete.
+            if let Some((peer, detail)) = fatal_fault {
+                let attributed = match &mut self.monitor {
+                    Some(mon) => mon.declare_dead(peer, &detail),
+                    None => Some((peer, format!("lost contact with node {}: {detail}", peer.0))),
+                };
+                if let Some((peer, err)) = attributed {
+                    self.abort_unreachable(peer, err);
+                    heartbeat_failed = true;
+                    break;
                 }
             }
             // New data may unblock collective ring rounds (sends and/or
@@ -502,6 +559,18 @@ impl Executor {
         );
         let newly = self.ooo.retire(id);
         self.ready.extend(newly);
+    }
+
+    /// Unrecoverable peer loss (heartbeat timeout or escalated comm
+    /// fault): report the attributed error, then fail every pending
+    /// receive/await with an attributed error of its own so fences and
+    /// waits observe failures instead of hanging forever (graceful
+    /// degradation, §ISSUE: "drain lanes and fail pending receives").
+    fn abort_unreachable(&mut self, peer: NodeId, err: String) {
+        let _ = self.events.send(ExecEvent::Error(err));
+        self.arbiter
+            .fail_all(&format!("node {} is unreachable", peer.0));
+        self.drain_engine_errors();
     }
 
     /// Forward tolerated engine anomalies (OoO spurious completions,

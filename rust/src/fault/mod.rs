@@ -1,0 +1,479 @@
+//! Deterministic fault injection for the comm fabric.
+//!
+//! A [`FaultPlan`] is parsed from `--fault-plan` / `CELERITY_FAULT_PLAN`
+//! and describes reproducible chaos:
+//!
+//! ```text
+//! seed=7 drop=0.01 delay=0..5ms dup=0.005 corrupt=0.002 break=node1@frame200 kill=node2@frame500
+//! ```
+//!
+//! * `seed=N` — seeds the per-peer [`XorShift64`] streams; the same plan
+//!   and seed reproduce the same per-peer fault sequence.
+//! * `drop=P` / `dup=P` / `corrupt=P` — per-frame probabilities in [0, 1].
+//! * `delay=LO..HIms` (or a single `delay=3ms`, `us` also accepted) —
+//!   uniform extra latency per frame.
+//! * `break=nodeN@frameM` — node N severs the outbound stream carrying its
+//!   M-th data-plane frame, once (exercises reconnect+resume).
+//! * `kill=nodeN@frameM` — node N's worker process exits with code 3
+//!   after its M-th frame (multi-process `celerity launch` only).
+//!
+//! Faults are applied *below* the reliability layer: on the TCP fabric a
+//! [`FaultInjector`] mutates encoded wire frames inside
+//! [`TcpCommunicator`](crate::comm::TcpCommunicator), where CRC32 +
+//! sequence numbers + ack/retransmit recover them transparently (fence
+//! digests stay byte-identical to a fault-free run). The message-level
+//! [`FaultyCommunicator`] wrapper applies drop/delay/dup to *any*
+//! transport — on the in-process channel fabric, which has no wire-level
+//! recovery, drops and dups exercise detection and graceful degradation
+//! rather than transparent repair (`corrupt` is ignored there: without a
+//! CRC the corruption would be silent, which is worse than nothing).
+
+use crate::comm::{Communicator, Inbound};
+use crate::instruction::Pilot;
+use crate::util::{MessageId, NodeId, XorShift64};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// A parsed, deterministic fault plan. See the module docs for grammar.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultPlan {
+    pub seed: u64,
+    /// Per-frame probability the frame is silently not written.
+    pub drop: f64,
+    /// Per-frame probability the frame is written twice.
+    pub dup: f64,
+    /// Per-frame probability one byte of the frame is flipped on the wire.
+    pub corrupt: f64,
+    /// Uniform extra per-frame latency, microseconds (inclusive range).
+    pub delay_min_us: u64,
+    pub delay_max_us: u64,
+    /// (node, frame): sever that node's outbound streams once at frame N.
+    pub break_at: Option<(u64, u64)>,
+    /// (node, frame): that node's worker process exits(3) at frame N.
+    pub kill_at: Option<(u64, u64)>,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        FaultPlan {
+            seed: 1,
+            drop: 0.0,
+            dup: 0.0,
+            corrupt: 0.0,
+            delay_min_us: 0,
+            delay_max_us: 0,
+            break_at: None,
+            kill_at: None,
+        }
+    }
+}
+
+impl FaultPlan {
+    /// Parse the `key=value ...` plan grammar. Unknown keys, bad numbers
+    /// and out-of-range probabilities are reported, not ignored — a typo
+    /// in a chaos plan must not silently produce a fault-free run.
+    pub fn parse(s: &str) -> Result<FaultPlan, String> {
+        let mut plan = FaultPlan::default();
+        for tok in s.split_whitespace() {
+            let (key, val) = tok
+                .split_once('=')
+                .ok_or_else(|| format!("fault plan: expected key=value, got '{tok}'"))?;
+            match key {
+                "seed" => {
+                    plan.seed = val
+                        .parse()
+                        .map_err(|_| format!("fault plan: bad seed '{val}'"))?
+                }
+                "drop" => plan.drop = parse_prob(key, val)?,
+                "dup" => plan.dup = parse_prob(key, val)?,
+                "corrupt" => plan.corrupt = parse_prob(key, val)?,
+                "delay" => (plan.delay_min_us, plan.delay_max_us) = parse_delay(val)?,
+                "break" => plan.break_at = Some(parse_site(key, val)?),
+                "kill" => plan.kill_at = Some(parse_site(key, val)?),
+                other => {
+                    return Err(format!(
+                        "fault plan: unknown key '{other}' \
+                         (expected seed/drop/delay/dup/corrupt/break/kill)"
+                    ))
+                }
+            }
+        }
+        Ok(plan)
+    }
+
+    /// Plan from `CELERITY_FAULT_PLAN`, if the variable is set.
+    pub fn from_env() -> Result<Option<FaultPlan>, String> {
+        match std::env::var("CELERITY_FAULT_PLAN") {
+            Ok(s) if !s.trim().is_empty() => Self::parse(&s).map(Some),
+            _ => Ok(None),
+        }
+    }
+
+    /// Does this plan inject anything at all?
+    pub fn is_active(&self) -> bool {
+        self.drop > 0.0
+            || self.dup > 0.0
+            || self.corrupt > 0.0
+            || self.delay_max_us > 0
+            || self.break_at.is_some()
+            || self.kill_at.is_some()
+    }
+}
+
+fn parse_prob(key: &str, val: &str) -> Result<f64, String> {
+    let p: f64 = val
+        .parse()
+        .map_err(|_| format!("fault plan: bad {key} probability '{val}'"))?;
+    if !(0.0..=1.0).contains(&p) {
+        return Err(format!("fault plan: {key}={val} outside [0, 1]"));
+    }
+    Ok(p)
+}
+
+/// `LO..HIms`, `LO..HIus`, or a single `Nms`/`Nus`.
+fn parse_delay(val: &str) -> Result<(u64, u64), String> {
+    let (num, scale) = if let Some(v) = val.strip_suffix("ms") {
+        (v, 1000)
+    } else if let Some(v) = val.strip_suffix("us") {
+        (v, 1)
+    } else {
+        return Err(format!("fault plan: delay '{val}' needs a ms/us suffix"));
+    };
+    let (lo, hi) = match num.split_once("..") {
+        Some((lo, hi)) => (lo, hi),
+        None => (num, num),
+    };
+    let lo: u64 = lo
+        .parse()
+        .map_err(|_| format!("fault plan: bad delay bound in '{val}'"))?;
+    let hi: u64 = hi
+        .parse()
+        .map_err(|_| format!("fault plan: bad delay bound in '{val}'"))?;
+    if lo > hi {
+        return Err(format!("fault plan: delay '{val}' has lo > hi"));
+    }
+    Ok((lo * scale, hi * scale))
+}
+
+/// `nodeN@frameM`.
+fn parse_site(key: &str, val: &str) -> Result<(u64, u64), String> {
+    let err = || format!("fault plan: {key}='{val}' (expected nodeN@frameM)");
+    let (node, frame) = val.split_once('@').ok_or_else(err)?;
+    let node = node.strip_prefix("node").ok_or_else(err)?;
+    let frame = frame.strip_prefix("frame").ok_or_else(err)?;
+    Ok((
+        node.parse().map_err(|_| err())?,
+        frame.parse().map_err(|_| err())?,
+    ))
+}
+
+impl std::fmt::Display for FaultPlan {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "seed={}", self.seed)?;
+        if self.drop > 0.0 {
+            write!(f, " drop={}", self.drop)?;
+        }
+        if self.delay_max_us > 0 {
+            write!(f, " delay={}..{}us", self.delay_min_us, self.delay_max_us)?;
+        }
+        if self.dup > 0.0 {
+            write!(f, " dup={}", self.dup)?;
+        }
+        if self.corrupt > 0.0 {
+            write!(f, " corrupt={}", self.corrupt)?;
+        }
+        if let Some((n, fr)) = self.break_at {
+            write!(f, " break=node{n}@frame{fr}")?;
+        }
+        if let Some((n, fr)) = self.kill_at {
+            write!(f, " kill=node{n}@frame{fr}")?;
+        }
+        Ok(())
+    }
+}
+
+/// What happens to one outbound data-plane frame.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Fate {
+    Deliver,
+    /// Silently lose the frame (the reliability layer must re-deliver it).
+    Drop,
+    /// Write the frame twice (receive-side seq dedup must drop one).
+    Duplicate,
+    /// Flip one byte of the written copy (CRC must reject it; the sender's
+    /// retained original is what retransmission re-delivers).
+    Corrupt,
+}
+
+/// Everything injected into one frame.
+#[derive(Debug, Clone, Copy)]
+pub struct FrameFaults {
+    pub fate: Fate,
+    pub delay: Option<Duration>,
+    /// This frame trips the one-shot `break=` point: sever streams now.
+    pub break_now: bool,
+}
+
+/// Per-node injector state shared by every send path of one communicator.
+/// Frame fates are sampled from per-peer [`XorShift64`] streams (see
+/// [`FaultInjector::peer_rng`]), so the fault sequence each peer link sees
+/// is a deterministic function of (plan seed, sender, receiver, frame
+/// index on that link) regardless of cross-peer thread interleaving.
+pub struct FaultInjector {
+    plan: FaultPlan,
+    node: NodeId,
+    /// Data-plane frames sent by this node (drives `break=`/`kill=`).
+    frames: AtomicU64,
+    broke: AtomicBool,
+    kill: AtomicBool,
+}
+
+impl FaultInjector {
+    pub fn new(plan: FaultPlan, node: NodeId) -> Self {
+        FaultInjector {
+            plan,
+            node,
+            frames: AtomicU64::new(0),
+            broke: AtomicBool::new(false),
+            kill: AtomicBool::new(false),
+        }
+    }
+
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+
+    /// The deterministic fault stream for one (sender, peer) link.
+    pub fn peer_rng(&self, peer: NodeId) -> XorShift64 {
+        XorShift64::new(
+            self.plan
+                .seed
+                .wrapping_add(self.node.0.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+                .wrapping_add(peer.0.wrapping_mul(0xD1B5_4A32_D192_ED03)),
+        )
+    }
+
+    /// Stamp one outbound data-plane frame: advance the node-wide frame
+    /// counter (arming `break=`/`kill=` trip points) and sample this
+    /// frame's fate from the link's rng.
+    pub fn on_frame(&self, rng: &mut XorShift64) -> FrameFaults {
+        let n = self.frames.fetch_add(1, Ordering::Relaxed) + 1;
+        let mut break_now = false;
+        if let Some((node, at)) = self.plan.break_at {
+            if node == self.node.0 && n >= at && !self.broke.swap(true, Ordering::Relaxed) {
+                break_now = true;
+            }
+        }
+        if let Some((node, at)) = self.plan.kill_at {
+            if node == self.node.0 && n >= at {
+                self.kill.store(true, Ordering::Relaxed);
+            }
+        }
+        // Fixed sampling order: every decision draws exactly once so the
+        // stream position stays aligned across fates.
+        let drop = rng.chance(self.plan.drop);
+        let corrupt = rng.chance(self.plan.corrupt);
+        let dup = rng.chance(self.plan.dup);
+        let delay = if self.plan.delay_max_us > 0 {
+            let us = rng.next_range(self.plan.delay_min_us, self.plan.delay_max_us);
+            (us > 0).then(|| Duration::from_micros(us))
+        } else {
+            None
+        };
+        let fate = if drop {
+            Fate::Drop
+        } else if corrupt {
+            Fate::Corrupt
+        } else if dup {
+            Fate::Duplicate
+        } else {
+            Fate::Deliver
+        };
+        FrameFaults { fate, delay, break_now }
+    }
+
+    /// `kill=` tripped: the worker process should exit(3). Only honored by
+    /// `celerity worker` (killing an in-process cluster would take every
+    /// node with it); [`crate::driver::try_run_cluster`] ignores it.
+    pub fn kill_requested(&self) -> bool {
+        self.kill.load(Ordering::Relaxed)
+    }
+
+    pub fn frames_sent(&self) -> u64 {
+        self.frames.load(Ordering::Relaxed)
+    }
+}
+
+/// Message-level chaos wrapper for any [`Communicator`] — the fabric-
+/// agnostic injection point (`try_run_cluster` uses it for the channel
+/// transport; the TCP fabric injects at the wire level instead, where
+/// recovery can repair the damage). Drop/delay/dup only: see module docs.
+pub struct FaultyCommunicator {
+    inner: Box<dyn Communicator + Sync>,
+    injector: Arc<FaultInjector>,
+    rng: Mutex<XorShift64>,
+}
+
+impl FaultyCommunicator {
+    pub fn wrap(inner: Box<dyn Communicator + Sync>, plan: FaultPlan) -> Self {
+        let node = inner.node();
+        let injector = Arc::new(FaultInjector::new(plan, node));
+        // One message stream for all peers: channel sends are routed by
+        // the inner communicator, so per-peer streams would have to
+        // duplicate its routing logic for no determinism gain.
+        let rng = Mutex::new(injector.peer_rng(node));
+        FaultyCommunicator { inner, injector, rng }
+    }
+
+    pub fn injector(&self) -> Arc<FaultInjector> {
+        self.injector.clone()
+    }
+
+    fn faults(&self) -> FrameFaults {
+        let mut rng = self.rng.lock().unwrap_or_else(|e| e.into_inner());
+        self.injector.on_frame(&mut rng)
+    }
+}
+
+impl Communicator for FaultyCommunicator {
+    fn node(&self) -> NodeId {
+        self.inner.node()
+    }
+
+    fn num_nodes(&self) -> u64 {
+        self.inner.num_nodes()
+    }
+
+    fn send_pilot(&self, pilot: Pilot) {
+        let f = self.faults();
+        if let Some(d) = f.delay {
+            std::thread::sleep(d);
+        }
+        match f.fate {
+            Fate::Drop => {}
+            Fate::Duplicate => {
+                self.inner.send_pilot(pilot.clone());
+                self.inner.send_pilot(pilot);
+            }
+            // Corruption of a typed in-process message would be silent —
+            // deliver it intact instead (wire-level injection covers it).
+            Fate::Deliver | Fate::Corrupt => self.inner.send_pilot(pilot),
+        }
+    }
+
+    fn send_data(&self, to: NodeId, msg: MessageId, bytes: Vec<u8>) {
+        let f = self.faults();
+        if let Some(d) = f.delay {
+            std::thread::sleep(d);
+        }
+        match f.fate {
+            Fate::Drop => {}
+            Fate::Duplicate => {
+                self.inner.send_data(to, msg, bytes.clone());
+                self.inner.send_data(to, msg, bytes);
+            }
+            Fate::Deliver | Fate::Corrupt => self.inner.send_data(to, msg, bytes),
+        }
+    }
+
+    fn send_heartbeat(&self, to: NodeId, departing: bool) {
+        // Control plane is exempt: liveness detection must stay sound.
+        self.inner.send_heartbeat(to, departing);
+    }
+
+    fn poll(&self) -> Option<Inbound> {
+        self.inner.poll()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_the_full_issue_grammar() {
+        let p = FaultPlan::parse(
+            "seed=7 drop=0.01 delay=0..5ms dup=0.005 corrupt=0.002 \
+             break=node1@frame200 kill=node2@frame500",
+        )
+        .unwrap();
+        assert_eq!(p.seed, 7);
+        assert_eq!(p.drop, 0.01);
+        assert_eq!(p.dup, 0.005);
+        assert_eq!(p.corrupt, 0.002);
+        assert_eq!((p.delay_min_us, p.delay_max_us), (0, 5000));
+        assert_eq!(p.break_at, Some((1, 200)));
+        assert_eq!(p.kill_at, Some((2, 500)));
+        assert!(p.is_active());
+    }
+
+    #[test]
+    fn parses_scalar_delay_and_us_suffix() {
+        let p = FaultPlan::parse("delay=3ms").unwrap();
+        assert_eq!((p.delay_min_us, p.delay_max_us), (3000, 3000));
+        let p = FaultPlan::parse("delay=10..250us").unwrap();
+        assert_eq!((p.delay_min_us, p.delay_max_us), (10, 250));
+    }
+
+    #[test]
+    fn rejects_malformed_plans() {
+        for bad in [
+            "drop",              // no value
+            "drop=1.5",          // probability out of range
+            "drop=x",            // not a number
+            "delay=5",           // missing unit
+            "delay=9..2ms",      // lo > hi
+            "break=1@200",       // missing node/frame prefixes
+            "kill=node2",        // missing @frame
+            "jitter=0.1",        // unknown key
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "accepted '{bad}'");
+        }
+    }
+
+    #[test]
+    fn empty_plan_is_inactive_and_display_round_trips() {
+        let p = FaultPlan::parse("").unwrap();
+        assert!(!p.is_active());
+        let p = FaultPlan::parse("seed=9 drop=0.25 delay=1..2ms break=node0@frame3").unwrap();
+        let q = FaultPlan::parse(&p.to_string()).unwrap();
+        assert_eq!(p, q);
+    }
+
+    #[test]
+    fn injector_streams_are_deterministic_per_link() {
+        let plan = FaultPlan::parse("seed=42 drop=0.3 dup=0.2 corrupt=0.1 delay=0..2ms").unwrap();
+        let sample = |peer: u64| {
+            let inj = FaultInjector::new(plan.clone(), NodeId(0));
+            let mut rng = inj.peer_rng(NodeId(peer));
+            (0..256).map(|_| inj.on_frame(&mut rng).fate).collect::<Vec<_>>()
+        };
+        assert_eq!(sample(1), sample(1), "same link, same stream");
+        assert_ne!(sample(1), sample(2), "links draw independent streams");
+        let fates = sample(1);
+        assert!(fates.iter().any(|f| *f == Fate::Drop));
+        assert!(fates.iter().any(|f| *f == Fate::Duplicate));
+        assert!(fates.iter().any(|f| *f == Fate::Deliver));
+    }
+
+    #[test]
+    fn break_trips_once_and_kill_latches() {
+        let plan = FaultPlan::parse("break=node3@frame2 kill=node3@frame4").unwrap();
+        let inj = FaultInjector::new(plan, NodeId(3));
+        let mut rng = inj.peer_rng(NodeId(0));
+        let breaks: Vec<bool> = (0..6).map(|_| inj.on_frame(&mut rng).break_now).collect();
+        assert_eq!(breaks, [false, true, false, false, false, false]);
+        assert!(inj.kill_requested());
+        // A different node never trips this plan's sites.
+        let other = FaultInjector::new(
+            FaultPlan::parse("break=node3@frame1 kill=node3@frame1").unwrap(),
+            NodeId(1),
+        );
+        let mut rng = other.peer_rng(NodeId(0));
+        for _ in 0..4 {
+            assert!(!other.on_frame(&mut rng).break_now);
+        }
+        assert!(!other.kill_requested());
+    }
+}

@@ -60,6 +60,17 @@ pub struct LaunchConfig {
     pub trace: Option<String>,
     /// Worker binary; defaults to the launcher's own executable.
     pub worker_exe: Option<PathBuf>,
+    /// Kill surviving workers once one worker fails (default on). Without
+    /// it the launcher waits for the survivors' own heartbeat detectors,
+    /// which may be configured slow — or off.
+    pub fail_fast: bool,
+    /// How long fail-fast lets survivors wind down on their own (their
+    /// heartbeat detectors produce better-attributed errors than SIGKILL)
+    /// before killing them.
+    pub fail_fast_grace_ms: u64,
+    /// Deterministic chaos plan forwarded to every worker verbatim
+    /// (`--fault-plan`); workers apply their own node-scoped sites.
+    pub fault_plan: Option<String>,
 }
 
 impl LaunchConfig {
@@ -71,9 +82,18 @@ impl LaunchConfig {
             heartbeat_timeout_ms: DEFAULT_HEARTBEAT_TIMEOUT_MS,
             trace: None,
             worker_exe: None,
+            fail_fast: true,
+            fail_fast_grace_ms: DEFAULT_FAIL_FAST_GRACE_MS,
+            fault_plan: None,
         }
     }
 }
+
+/// Default fail-fast grace window: long enough for survivors' heartbeat
+/// detectors (when configured tighter than this) to fire first and report
+/// an attributed peer-death error, short enough that no worker outlives a
+/// dead cluster by more than a few seconds.
+pub const DEFAULT_FAIL_FAST_GRACE_MS: u64 = 5_000;
 
 /// Default worker heartbeat timeout for launched clusters: generous enough
 /// for slow CI machines, small enough that a killed worker fails the run
@@ -116,9 +136,11 @@ pub fn allocate_ports(n: u64) -> std::io::Result<Vec<SocketAddr>> {
 
 /// Spawn the cluster, stream its output, and aggregate the outcome.
 ///
-/// Blocking: returns when every worker has exited. With heartbeats enabled
-/// (the default) a dead worker bounds the wait — its peers abort within the
-/// heartbeat timeout — so the launcher itself needs no watchdog.
+/// Blocking: returns when every worker has exited. Two mechanisms bound
+/// the wait when a worker dies: survivors' heartbeat detectors abort them
+/// with attributed errors within the heartbeat timeout, and the launcher's
+/// own fail-fast supervision ([`LaunchConfig::fail_fast`], default on)
+/// kills any survivor that outlives the grace window regardless.
 pub fn launch(cfg: &LaunchConfig) -> std::io::Result<LaunchReport> {
     assert!(cfg.nodes >= 1, "launch needs at least one node");
     let peers = allocate_ports(cfg.nodes)?
@@ -152,6 +174,9 @@ pub fn launch(cfg: &LaunchConfig) -> std::io::Result<LaunchReport> {
         }
         if let Some(base) = &cfg.trace {
             cmd.arg("--trace").arg(format!("{base}.node{i}.json"));
+        }
+        if let Some(plan) = &cfg.fault_plan {
+            cmd.arg("--fault-plan").arg(plan);
         }
         cmd.args(&cfg.app_args);
         let mut child = match cmd.spawn() {
@@ -190,16 +215,7 @@ pub fn launch(cfg: &LaunchConfig) -> std::io::Result<LaunchReport> {
         children.push(child);
     }
 
-    let mut exit_codes = Vec::new();
-    for (i, mut child) in children.into_iter().enumerate() {
-        match child.wait() {
-            Ok(status) => exit_codes.push(status.code()),
-            Err(e) => {
-                eprintln!("[launch] waiting on node {i}: {e}");
-                exit_codes.push(None);
-            }
-        }
-    }
+    let (exit_codes, fail_fast_killed, root_cause) = supervise(&mut children, cfg);
     for s in streamers {
         let _ = s.join();
     }
@@ -208,10 +224,24 @@ pub fn launch(cfg: &LaunchConfig) -> std::io::Result<LaunchReport> {
         .map(|m| m.into_inner().unwrap())
         .unwrap_or_else(|arc| arc.lock().unwrap().clone());
     let mut errors = Vec::new();
-    for (i, code) in exit_codes.iter().enumerate() {
-        match code {
+    // Report the root-cause node first: the worker that failed first
+    // explains every downstream abort and fail-fast kill.
+    let order: Vec<usize> = match root_cause {
+        Some(r) => std::iter::once(r)
+            .chain((0..exit_codes.len()).filter(|&i| i != r))
+            .collect(),
+        None => (0..exit_codes.len()).collect(),
+    };
+    for i in order {
+        match exit_codes[i] {
             Some(0) => {}
             Some(c) => errors.push(format!("node {i} exited with code {c}")),
+            None if fail_fast_killed[i] => errors.push(format!(
+                "node {i} terminated by fail-fast: node {} failed and node {i} \
+                 did not wind down within the {} ms grace window",
+                root_cause.unwrap_or(i),
+                cfg.fail_fast_grace_ms
+            )),
             None => errors.push(format!("node {i} was killed by a signal")),
         }
     }
@@ -232,6 +262,79 @@ pub fn launch(cfg: &LaunchConfig) -> std::io::Result<LaunchReport> {
         }
     }
     Ok(LaunchReport { exit_codes, digests, errors })
+}
+
+/// Reap workers without blocking on any single one. Returns per-node exit
+/// codes, which nodes the launcher itself killed, and the index of the
+/// first failing node (the root cause) if any.
+///
+/// With `fail_fast` (the default), the first nonzero/signal exit starts a
+/// grace window in which survivors may wind down on their own — their
+/// heartbeat detectors produce attributed errors SIGKILL cannot. Survivors
+/// that outlive the window are killed: no worker outlives a dead cluster
+/// indefinitely, even with heartbeats disabled.
+fn supervise(
+    children: &mut [Child],
+    cfg: &LaunchConfig,
+) -> (Vec<Option<i32>>, Vec<bool>, Option<usize>) {
+    use std::time::{Duration, Instant};
+    let n = children.len();
+    // Outer None = still running; inner None = killed by a signal.
+    let mut codes: Vec<Option<Option<i32>>> = vec![None; n];
+    let mut killed = vec![false; n];
+    let mut root_cause: Option<usize> = None;
+    let mut deadline: Option<Instant> = None;
+    loop {
+        let mut running = 0usize;
+        for (i, child) in children.iter_mut().enumerate() {
+            if codes[i].is_some() {
+                continue;
+            }
+            match child.try_wait() {
+                Ok(Some(status)) => {
+                    codes[i] = Some(status.code());
+                    if status.code() != Some(0) && root_cause.is_none() {
+                        root_cause = Some(i);
+                        if cfg.fail_fast {
+                            deadline = Some(
+                                Instant::now()
+                                    + Duration::from_millis(cfg.fail_fast_grace_ms),
+                            );
+                        }
+                    }
+                }
+                Ok(None) => running += 1,
+                Err(e) => {
+                    // Plain "launch:" prefix: "[launch]" is reserved for
+                    // the final error list, whose first line names the
+                    // root cause (tests and users key on that contract).
+                    eprintln!("launch: waiting on node {i}: {e}");
+                    codes[i] = Some(None);
+                    root_cause.get_or_insert(i);
+                }
+            }
+        }
+        if running == 0 {
+            break;
+        }
+        if let Some(d) = deadline {
+            if Instant::now() >= d {
+                for (i, child) in children.iter_mut().enumerate() {
+                    if codes[i].is_none() {
+                        eprintln!(
+                            "launch: fail-fast: killing node {i} (grace window expired)"
+                        );
+                        let _ = child.kill();
+                        killed[i] = true;
+                    }
+                }
+                // The kills are reaped by the next try_wait round.
+                deadline = None;
+            }
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    (codes.into_iter().map(|c| c.unwrap()).collect(), killed, root_cause)
 }
 
 #[cfg(test)]

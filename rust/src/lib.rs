@@ -56,8 +56,15 @@
 //! - [`comm`] — the p2p subsystem: the [`Communicator`](comm::Communicator)
 //!   trait, the in-process [`ChannelWorld`](comm::ChannelWorld), the
 //!   loopback/cross-process [`TcpWorld`](comm::TcpWorld) with its
-//!   length-prefixed [`wire`](comm::wire) format, and the
-//!   [`Transport`](comm::Transport) selector
+//!   CRC32-guarded, sequence-numbered [`wire`](comm::wire) format and
+//!   ack/retransmit recovery layer, and the [`Transport`](comm::Transport)
+//!   selector
+//! - [`fault`] — deterministic comm-fabric chaos: the seeded
+//!   [`FaultPlan`](fault::FaultPlan) grammar (`--fault-plan "seed=7
+//!   drop=0.01 …"`), the per-link [`FaultInjector`](fault::FaultInjector)
+//!   the TCP fabric consults below its recovery layer, and the
+//!   message-level [`FaultyCommunicator`](fault::FaultyCommunicator)
+//!   wrapper for the channel fabric
 //! - [`driver`] — the typed [`Queue`](driver::Queue), the in-process SPMD
 //!   cluster runner ([`run_cluster`](driver::run_cluster)) and the
 //!   per-process entry point ([`run_node`](driver::run_node)) used by
@@ -109,6 +116,7 @@ pub mod dag;
 pub mod driver;
 pub mod dtype;
 pub mod executor;
+pub mod fault;
 pub mod grid;
 pub mod instruction;
 pub mod launch;

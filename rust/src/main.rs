@@ -160,6 +160,32 @@ fn opt_num_arg(args: &[String], key: &str) -> Option<u64> {
     }))
 }
 
+/// `--fault-plan "seed=7 drop=0.01 ..."`, falling back to the
+/// `CELERITY_FAULT_PLAN` environment variable. Exits 2 on a malformed plan.
+fn fault_plan_arg(args: &[String]) -> Option<celerity::fault::FaultPlan> {
+    let raw = opt_arg(args, "--fault-plan")
+        .or_else(|| std::env::var("CELERITY_FAULT_PLAN").ok().filter(|s| !s.trim().is_empty()))?;
+    match celerity::fault::FaultPlan::parse(&raw) {
+        Ok(p) => Some(p),
+        Err(e) => {
+            eprintln!("celerity: invalid fault plan '{raw}': {e}");
+            std::process::exit(2);
+        }
+    }
+}
+
+/// Per-node one-line summary of repaired comm faults (noise-free even
+/// under heavy chaos plans; `--trace` has the full event list).
+fn report_faults(node: NodeId, faults: &[String]) {
+    if !faults.is_empty() {
+        eprintln!(
+            "node {node}: {} comm fault notice(s) absorbed by the fabric (first: {})",
+            faults.len(),
+            faults[0]
+        );
+    }
+}
+
 /// Drain the trace recorder, write the Chrome JSON (and optional Graphviz)
 /// artifacts, and print the derived scheduler-lag summary.
 fn export_trace(json_path: &str, dot_path: Option<&str>) {
@@ -269,6 +295,7 @@ fn main() {
                 collectives,
                 direct_comm,
                 heartbeat_timeout_ms: opt_num_arg(&args, "--heartbeat-timeout"),
+                fault_plan: fault_plan_arg(&args),
                 ..Default::default()
             };
             let digests: Arc<Mutex<Vec<(u64, u64)>>> = Arc::new(Mutex::new(Vec::new()));
@@ -292,6 +319,7 @@ fn main() {
                 for e in &r.errors {
                     eprintln!("node {} error: {e}", r.node);
                 }
+                report_faults(r.node, &r.faults);
             }
             let mut digests = digests.lock().unwrap().clone();
             digests.sort();
@@ -365,6 +393,15 @@ fn main() {
                     std::process::exit(3);
                 });
             }
+            let fault_plan = fault_plan_arg(&args);
+            let mut heartbeat_timeout_ms = opt_num_arg(&args, "--heartbeat-timeout");
+            if fault_plan.as_ref().map_or(false, |p| p.is_active())
+                && heartbeat_timeout_ms.is_none()
+            {
+                // Tail-loss recovery rides on heartbeat beacons (the
+                // ack-stall nudge): an active chaos plan forces liveness on.
+                heartbeat_timeout_ms = Some(launch::DEFAULT_HEARTBEAT_TIMEOUT_MS);
+            }
             let cfg = ClusterConfig {
                 num_nodes: peers.len() as u64,
                 num_devices: devices,
@@ -372,12 +409,32 @@ fn main() {
                 transport: Transport::Tcp,
                 collectives,
                 direct_comm,
-                heartbeat_timeout_ms: opt_num_arg(&args, "--heartbeat-timeout"),
+                heartbeat_timeout_ms,
                 ..Default::default()
             };
             let bind_addr = peers[node.0 as usize];
             let comm: CommRef = match TcpCommunicator::bind(node, peers) {
-                Ok(c) => Arc::new(c),
+                Ok(mut c) => {
+                    if let Some(plan) = &fault_plan {
+                        c.set_fault_plan(plan);
+                    }
+                    if let Some(inj) = c.fault_injector() {
+                        // `kill=nodeN@frameM`: hard-kill this process once
+                        // its outbound frame counter trips the site — the
+                        // unrecoverable-death case the launcher's fail-fast
+                        // and the peers' heartbeats must both handle.
+                        std::thread::spawn(move || loop {
+                            if inj.kill_requested() {
+                                eprintln!(
+                                    "celerity worker: fault plan kill site tripped on node {node}: exiting"
+                                );
+                                std::process::exit(3);
+                            }
+                            std::thread::sleep(std::time::Duration::from_millis(2));
+                        });
+                    }
+                    Arc::new(c)
+                }
                 Err(e) => {
                     // Environment/config problem, not an application error:
                     // exit 2 like the other CLI-usage failures.
@@ -394,6 +451,7 @@ fn main() {
             for e in &report.errors {
                 eprintln!("node {} error: {e}", report.node);
             }
+            report_faults(report.node, &report.faults);
             if let Some(p) = &trace_json {
                 export_trace(p, None);
             }
@@ -441,6 +499,21 @@ fn main() {
                 lcfg.heartbeat_timeout_ms = ms;
             }
             lcfg.trace = opt_arg(own, "--trace");
+            if own.iter().any(|a| a == "--no-fail-fast") {
+                lcfg.fail_fast = false;
+            }
+            if let Some(ms) = opt_num_arg(own, "--fail-fast-grace") {
+                lcfg.fail_fast_grace_ms = ms;
+            }
+            if let Some(raw) = opt_arg(own, "--fault-plan") {
+                // Validate here for a friendly error; workers re-parse the
+                // same string (it is forwarded verbatim).
+                if let Err(e) = celerity::fault::FaultPlan::parse(&raw) {
+                    eprintln!("celerity launch: invalid --fault-plan '{raw}': {e}");
+                    std::process::exit(2);
+                }
+                lcfg.fault_plan = Some(raw);
+            }
             let t0 = std::time::Instant::now();
             let report = match launch::launch(&lcfg) {
                 Ok(r) => r,
@@ -468,9 +541,10 @@ fn main() {
             println!("usage: celerity graph|sim|run|worker|launch --app nbody|rsim|wavesim [--nodes N] [--devices D] [--steps S]");
             println!("  graph:  --dump tdag,cdag,idag   (Graphviz dot on stdout)");
             println!("  sim:    [--baseline] [--no-lookahead] [--no-direct-comm]");
-            println!("  run:    [--transport channel|tcp] [--no-collectives] [--no-direct-comm] [--trace out.json] [--trace-dot out.dot] [--heartbeat-timeout MS]   (live in-process cluster)");
-            println!("  worker: --node I --peers a:p[,b:p,...] [--heartbeat-timeout MS] [--trace out.json] [--no-collectives] [--no-direct-comm]   (one node of a multi-process TCP cluster; a single address is a valid 1-node run)");
-            println!("  launch: -n N [--heartbeat-timeout MS] [--trace base] -- <app> [worker args...]   (spawn N worker processes, stream logs, cross-check digests)");
+            println!("  run:    [--transport channel|tcp] [--no-collectives] [--no-direct-comm] [--trace out.json] [--trace-dot out.dot] [--heartbeat-timeout MS] [--fault-plan \"seed=7 drop=0.01 ...\"]   (live in-process cluster)");
+            println!("  worker: --node I --peers a:p[,b:p,...] [--heartbeat-timeout MS] [--trace out.json] [--no-collectives] [--no-direct-comm] [--fault-plan PLAN]   (one node of a multi-process TCP cluster; a single address is a valid 1-node run)");
+            println!("  launch: -n N [--heartbeat-timeout MS] [--trace base] [--fault-plan PLAN] [--no-fail-fast] [--fail-fast-grace MS] -- <app> [worker args...]   (spawn N worker processes, stream logs, cross-check digests)");
+            println!("  fault plans: seed=N drop=P dup=P corrupt=P delay=LO..HIms break=nodeN@frameM kill=nodeN@frameM (CELERITY_FAULT_PLAN env fallback)");
         }
     }
 }

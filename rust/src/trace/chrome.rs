@@ -102,6 +102,12 @@ fn args_json(kind: &EventKind) -> String {
         EventKind::PilotIn { from } | EventKind::HeartbeatIn { from } => {
             format!("\"from\":{from}")
         }
+        EventKind::CommFault { from, what, fatal } => {
+            format!("\"from\":{from},\"what\":\"{}\",\"fatal\":{fatal}", escape(what))
+        }
+        EventKind::Reconnect { peer } | EventKind::Retransmit { peer } => {
+            format!("\"peer\":{peer}")
+        }
         EventKind::Alloc { bytes } => format!("\"bytes\":{bytes}"),
         EventKind::Span { .. } => String::new(),
     }

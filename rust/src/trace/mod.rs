@@ -128,6 +128,13 @@ pub enum EventKind {
     PilotIn { from: u64 },
     /// A liveness heartbeat arrived from a peer.
     HeartbeatIn { from: u64 },
+    /// A transport fault report surfaced to the executor (CRC reject,
+    /// sequence gap, oversized/truncated frame, or — `fatal` — peer loss).
+    CommFault { from: u64, what: &'static str, fatal: bool },
+    /// The transport re-established a broken stream to a peer.
+    Reconnect { peer: u64 },
+    /// The transport re-sent unacked frames to a peer.
+    Retransmit { peer: u64 },
     /// The arena backed an alloc instruction.
     Alloc { bytes: u64 },
     /// Free-form span (simulator timelines).
@@ -148,6 +155,9 @@ impl EventKind {
             EventKind::DataIn { .. } => "data in",
             EventKind::PilotIn { .. } => "pilot in",
             EventKind::HeartbeatIn { .. } => "heartbeat in",
+            EventKind::CommFault { .. } => "fault",
+            EventKind::Reconnect { .. } => "reconnect",
+            EventKind::Retransmit { .. } => "retransmit",
             EventKind::Alloc { .. } => "alloc",
             EventKind::Span { label } => label,
         }

@@ -1,0 +1,176 @@
+//! Chaos property tests for the comm fabric (ISSUE 7 tentpole criterion):
+//! under a deterministic seeded fault plan — drops, delays, duplicates and
+//! corruption at the wire level, plus a mid-run stream break — a TCP
+//! cluster must produce fence digests **byte-identical** to a fault-free
+//! single-node run. The CRC/seq/ack-retransmit layer repairs every
+//! injected fault transparently; anything less shows up here as a digest
+//! mismatch or an unexpected runtime error.
+//!
+//! The seed sweep is split across several `#[test]` functions so the
+//! harness runs the slices in parallel; together they cover 64 seeds
+//! alternating app (wavesim/nbody) and cluster size (2/4 nodes), with a
+//! `break=` site armed on every fourth seed.
+
+use celerity::apps;
+use celerity::comm::Transport;
+use celerity::driver::{try_run_cluster, ClusterConfig, Queue};
+use celerity::fault::FaultPlan;
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// FNV-1a — same digest the `celerity run`/`worker` CLIs print, so a
+/// failure here is directly comparable to a CLI reproduction.
+fn digest(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in bytes {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Submit one of the two benchmark apps (sized down for test latency) and
+/// fence its result buffer.
+fn app_bytes(q: &mut Queue, app: &str) -> Vec<u8> {
+    match app {
+        "wavesim" => {
+            let out = apps::wavesim::submit(q, 32, 32, 3).expect("submit wavesim");
+            q.fence_bytes(out.id()).expect("fence wavesim")
+        }
+        "nbody" => {
+            let (p, _v) = apps::nbody::submit(q, 128, 2).expect("submit nbody");
+            q.fence_bytes(p.id()).expect("fence nbody")
+        }
+        other => panic!("unknown test app {other}"),
+    }
+}
+
+/// Run `app` on `nodes` nodes and return every node's fence digest.
+/// Panics on any runtime error — under an *active* plan the fabric must
+/// repair faults without surfacing errors.
+fn run_digests(app: &'static str, nodes: u64, plan: Option<FaultPlan>) -> Vec<u64> {
+    let cfg = ClusterConfig {
+        num_nodes: nodes,
+        num_devices: 2,
+        registry: apps::reference_registry(),
+        transport: Transport::Tcp,
+        // Tight beacons (500 ms interval) keep tail-loss nudge-retransmit
+        // latency low; generous enough not to false-positive under load.
+        heartbeat_timeout_ms: Some(2_000),
+        fault_plan: plan,
+        ..Default::default()
+    };
+    let digests: Arc<Mutex<Vec<u64>>> = Arc::new(Mutex::new(Vec::new()));
+    let dc = digests.clone();
+    let reports = try_run_cluster(cfg, move |q| {
+        let bytes = app_bytes(q, app);
+        dc.lock().unwrap().push(digest(&bytes));
+    })
+    .expect("bind loopback TCP mesh");
+    for r in &reports {
+        assert!(
+            r.errors.is_empty(),
+            "node {} reported errors under app={app} nodes={nodes}: {:?}",
+            r.node,
+            r.errors
+        );
+    }
+    let got = digests.lock().unwrap().clone();
+    assert_eq!(got.len(), nodes as usize, "every node must fence");
+    got
+}
+
+/// Fault-free single-node reference digest per app, computed once.
+fn reference(app: &'static str) -> u64 {
+    static WAVESIM: OnceLock<u64> = OnceLock::new();
+    static NBODY: OnceLock<u64> = OnceLock::new();
+    let cell = match app {
+        "wavesim" => &WAVESIM,
+        "nbody" => &NBODY,
+        other => panic!("unknown test app {other}"),
+    };
+    *cell.get_or_init(|| {
+        let cfg = ClusterConfig {
+            num_nodes: 1,
+            num_devices: 2,
+            registry: apps::reference_registry(),
+            ..Default::default()
+        };
+        let out: Arc<Mutex<u64>> = Arc::new(Mutex::new(0));
+        let oc = out.clone();
+        try_run_cluster(cfg, move |q| {
+            *oc.lock().unwrap() = digest(&app_bytes(q, app));
+        })
+        .expect("single-node reference run");
+        let d = *out.lock().unwrap();
+        d
+    })
+}
+
+/// One seed of the sweep: app and node count alternate with the seed, a
+/// stream-break site arms on every fourth seed, and every digest must
+/// equal the fault-free reference.
+fn check_seed(seed: u64) {
+    let app = if seed % 2 == 0 { "wavesim" } else { "nbody" };
+    let nodes = if seed % 4 < 2 { 2 } else { 4 };
+    let mut spec = format!("seed={seed} drop=0.02 delay=0..1ms dup=0.01 corrupt=0.005");
+    if seed % 4 == 3 {
+        spec.push_str(" break=node1@frame7");
+    }
+    let plan = FaultPlan::parse(&spec).expect("valid plan spec");
+    let want = reference(app);
+    for (node, got) in run_digests(app, nodes, Some(plan)).into_iter().enumerate() {
+        assert_eq!(
+            got, want,
+            "seed {seed}: node {node} digest {got:016x} != fault-free reference \
+             {want:016x} (app={app} nodes={nodes} plan=\"{spec}\")"
+        );
+    }
+}
+
+fn check_seed_range(lo: u64, hi: u64) {
+    for seed in lo..hi {
+        check_seed(seed);
+    }
+}
+
+#[test]
+fn chaos_digests_match_reference_seeds_00_15() {
+    check_seed_range(0, 16);
+}
+
+#[test]
+fn chaos_digests_match_reference_seeds_16_31() {
+    check_seed_range(16, 32);
+}
+
+#[test]
+fn chaos_digests_match_reference_seeds_32_47() {
+    check_seed_range(32, 48);
+}
+
+#[test]
+fn chaos_digests_match_reference_seeds_48_63() {
+    check_seed_range(48, 64);
+}
+
+/// Same plan, same program, run twice: the injector is a pure function of
+/// (seed, node, peer, frame index), so both runs see identical faults and
+/// both match the reference. A nondeterministic injector would make chaos
+/// failures unreproducible.
+#[test]
+fn fault_injection_is_deterministic_across_runs() {
+    let plan = FaultPlan::parse("seed=99 drop=0.05 dup=0.02 corrupt=0.01").expect("plan");
+    let a = run_digests("wavesim", 2, Some(plan.clone()));
+    let b = run_digests("wavesim", 2, Some(plan));
+    assert_eq!(a, b, "same plan must reproduce the same outcome");
+    assert!(a.iter().all(|d| *d == reference("wavesim")));
+}
+
+/// An inactive plan (all probabilities zero, no sites) must not disturb a
+/// TCP run — the driver skips injector installation entirely.
+#[test]
+fn inactive_plan_is_transparent() {
+    let plan = FaultPlan::parse("seed=5").expect("plan");
+    let got = run_digests("nbody", 2, Some(plan));
+    assert!(got.iter().all(|d| *d == reference("nbody")), "{got:?}");
+}

@@ -78,10 +78,110 @@ fn launch_with_killed_worker_fails_attributed_and_bounded() {
         stderr.contains("node 1 exited with code 3"),
         "stderr must attribute the injected fault:\n{stderr}"
     );
-    // ...and the survivor reports the heartbeat-detected death, also
-    // naming node 1.
+    // ...and the survivor reports the death attributed to node 1 — via the
+    // heartbeat detector or, when its own sends hit the dead peer first,
+    // via the comm fabric's faster peer-lost escalation.
     assert!(
-        stderr.contains("heartbeat timeout") && stderr.contains("node 1"),
-        "survivor must report an attributed heartbeat failure:\n{stderr}"
+        (stderr.contains("heartbeat timeout") || stderr.contains("lost contact with node 1"))
+            && stderr.contains("node 1"),
+        "survivor must report an attributed peer death:\n{stderr}"
+    );
+}
+
+/// A `kill=` fault-plan site hard-kills one worker mid-run. With the
+/// survivors' heartbeat detectors deliberately configured far slower than
+/// the fail-fast grace window, the *launcher* must bound the run: kill the
+/// stragglers after the grace window, name the dead node first in the
+/// error list, and exit nonzero.
+#[test]
+fn launch_with_kill_plan_fails_fast_and_bounded() {
+    let t0 = Instant::now();
+    let out = Command::new(EXE)
+        .args([
+            "launch",
+            "-n",
+            "2",
+            // Sluggish heartbeats: fail-fast, not liveness detection, must
+            // be what bounds this run.
+            "--heartbeat-timeout",
+            "120000",
+            "--fail-fast-grace",
+            "1500",
+            "--fault-plan",
+            "seed=1 kill=node1@frame1",
+            "--",
+            "nbody",
+            "--steps",
+            "2000",
+        ])
+        .output()
+        .expect("spawn celerity launch");
+    let wall = t0.elapsed();
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(
+        !out.status.success(),
+        "a killed worker must fail the launch\nstdout:\n{stdout}\nstderr:\n{stderr}"
+    );
+    assert!(
+        wall < Duration::from_secs(60),
+        "fail-fast must bound the run despite the 120 s heartbeat timeout (took {wall:?})"
+    );
+    // The kill watcher exits 3 when the plan site trips, and the launcher
+    // reports that root cause as its FIRST error line — before whatever
+    // happened to the survivor downstream.
+    let first_error = stderr
+        .lines()
+        .find(|l| l.starts_with("[launch] "))
+        .unwrap_or_else(|| panic!("launcher must report errors:\n{stderr}"));
+    assert!(
+        first_error.contains("node 1 exited with code 3"),
+        "root-cause node must be reported first, got '{first_error}':\n{stderr}"
+    );
+    // The survivor must not outlive the cluster: either the launcher's
+    // grace window expired and killed it, or the comm fabric escalated the
+    // peer loss and the worker aborted attributed on its own (both are
+    // legitimate — which wins is a timing race by design).
+    assert!(
+        stderr.contains("terminated by fail-fast")
+            || stderr.contains("node 0 exited with code 1"),
+        "survivor must be reaped by fail-fast or abort attributed:\n{stderr}"
+    );
+}
+
+/// `--no-fail-fast` restores the old behavior: the launcher waits for the
+/// survivors' own heartbeat detectors (configured fast here, so the run
+/// stays bounded) instead of killing anything itself.
+#[test]
+fn launch_no_fail_fast_defers_to_heartbeats() {
+    let out = Command::new(EXE)
+        .args([
+            "launch",
+            "-n",
+            "2",
+            "--no-fail-fast",
+            "--heartbeat-timeout",
+            "1500",
+            "--fault-plan",
+            "seed=1 kill=node1@frame1",
+            "--",
+            "nbody",
+            "--steps",
+            "2000",
+        ])
+        .output()
+        .expect("spawn celerity launch");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(!out.status.success(), "stdout:\n{stdout}\nstderr:\n{stderr}");
+    assert!(
+        !stderr.contains("terminated by fail-fast"),
+        "--no-fail-fast must not kill survivors:\n{stderr}"
+    );
+    // The survivor winds down through its own (heartbeat or peer-lost)
+    // detector, attributing node 1.
+    assert!(
+        stderr.contains("node 1"),
+        "survivor must attribute the dead peer:\n{stderr}"
     );
 }

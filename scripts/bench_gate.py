@@ -18,7 +18,10 @@ Semantics:
     rows under "components" or "rows" (micro_scheduler and strong_scaling).
     strong_scaling keys are "app/transport/Nn"; ablation rows suffix the app
     name ("nbody-p2p" = collectives off, "wavesim-staged"/"nbody-p2p-staged"
-    = direct device transfers off), so every lowering is gated separately.
+    = direct device transfers off, "wavesim-faulty" = TCP rows under a
+    seeded fault plan pricing the CRC/retransmit recovery layer), so every
+    lowering is gated separately. Extra row fields ("fault" etc.) are
+    ignored by the key — only app/transport/nodes identify a row.
 
 Exit codes: 0 ok/skip, 1 regression, 2 usage or malformed input.
 """

@@ -17,6 +17,11 @@ Checks per document:
   - non-metadata events are monotonic in file order (the exporter sorts),
   - per pid, every retired instruction id was previously issued.
 
+Fault-injection runs additionally emit "fault" (args: from/what/fatal),
+"reconnect" and "retransmit" (args: peer) instants on the comm-in track;
+the checks above are event-name-agnostic, so these validate like any other
+instant — the self-test fixture includes them to pin the schema.
+
 Exit codes: 0 ok, 1 schema violation, 2 usage or unreadable input.
 """
 
@@ -124,6 +129,14 @@ def self_test():
          "args": {"instr": 7}},
         {"ph": "i", "s": "t", "name": "retire", "pid": 0, "tid": 1, "ts": 6.0,
          "args": {"instr": 7}},
+        # Fault-recovery instants (comm-in track): schema-pinned here so the
+        # exporter can't drift for chaos runs.
+        {"ph": "i", "s": "t", "name": "fault", "pid": 0, "tid": 1, "ts": 6.5,
+         "args": {"from": 1, "what": "corrupt", "fatal": False}},
+        {"ph": "i", "s": "t", "name": "reconnect", "pid": 0, "tid": 1, "ts": 6.6,
+         "args": {"peer": 1}},
+        {"ph": "i", "s": "t", "name": "retransmit", "pid": 0, "tid": 1, "ts": 6.7,
+         "args": {"peer": 1}},
     ]
     cases = [
         ("valid document accepted", {"traceEvents": good}, 0),

@@ -151,6 +151,50 @@ def main():
             0,
         ),
         (
+            "fault-ablation rows gate independently",
+            doc(
+                "abc",
+                True,
+                rows=[
+                    {"app": "wavesim", "transport": "tcp", "nodes": 2, "fault": False, "cells_per_s": 100.0},
+                    {"app": "wavesim-faulty", "transport": "tcp", "nodes": 2, "fault": True, "cells_per_s": 70.0},
+                ],
+            ),
+            doc(
+                "def",
+                True,
+                rows=[
+                    {"app": "wavesim", "transport": "tcp", "nodes": 2, "fault": False, "cells_per_s": 100.0},
+                    # The recovery layer got >25% slower under injected
+                    # faults: must fail even though the clean row is fine.
+                    {"app": "wavesim-faulty", "transport": "tcp", "nodes": 2, "fault": True, "cells_per_s": 40.0},
+                ],
+            ),
+            (),
+            1,
+        ),
+        (
+            "fault-ablation rows healthy pass",
+            doc(
+                "abc",
+                True,
+                rows=[
+                    {"app": "wavesim", "transport": "tcp", "nodes": 2, "fault": False, "cells_per_s": 100.0},
+                    {"app": "wavesim-faulty", "transport": "tcp", "nodes": 2, "fault": True, "cells_per_s": 70.0},
+                ],
+            ),
+            doc(
+                "def",
+                True,
+                rows=[
+                    {"app": "wavesim", "transport": "tcp", "nodes": 2, "fault": False, "cells_per_s": 98.0},
+                    {"app": "wavesim-faulty", "transport": "tcp", "nodes": 2, "fault": True, "cells_per_s": 66.0},
+                ],
+            ),
+            (),
+            0,
+        ),
+        (
             "strong_scaling rows schema",
             doc(
                 "abc",
