@@ -17,7 +17,13 @@
 //! stencil-exchange workload — additionally runs a fault-recovery
 //! ablation ("wavesim-faulty", TCP only): a fixed seeded fault plan
 //! (drops, dups, corruption) so the gate prices the CRC/retransmit
-//! machinery's overhead against the clean "wavesim" TCP rows.
+//! machinery's overhead against the clean "wavesim" TCP rows. A final
+//! multi-tenant section runs N concurrent jobs (nbody + wavesim) sharing
+//! one cluster per node: "multijob" rows report aggregate throughput,
+//! "multijob-jJ-<app>" rows the per-job p99 fence latency, and the
+//! "-fifo" variants re-run everything with fair-share dispatch off (the
+//! global-FIFO ablation where a heavy tenant head-of-line-blocks a light
+//! one).
 //!
 //!     cargo bench --bench strong_scaling            # full run
 //!     BENCH_QUICK=1 cargo bench --bench strong_scaling   # CI smoke: 1+2 nodes
@@ -32,7 +38,8 @@ mod support;
 
 use celerity::apps;
 use celerity::comm::Transport;
-use celerity::driver::{run_cluster, ClusterConfig, Queue};
+use celerity::driver::{run_cluster, run_cluster_jobs, ClusterConfig, JobProgram, Queue};
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 struct Row {
@@ -138,11 +145,22 @@ fn run_once(
     wall
 }
 
-fn write_json(rows: &[Row], quick: bool) {
+/// p99 over latency samples (milliseconds); sorts in place.
+fn p99_ms(samples: &mut [f64]) -> f64 {
+    assert!(!samples.is_empty(), "no latency samples collected");
+    samples.sort_by(|a, b| a.partial_cmp(b).expect("finite latencies"));
+    let idx = ((samples.len() as f64) * 0.99).ceil() as usize;
+    samples[idx.saturating_sub(1).min(samples.len() - 1)]
+}
+
+fn write_json(rows: &[Row], extra_rows: &[String], quick: bool) {
     let path = support::out_path("BENCH_STRONG_SCALING_JSON", "strong_scaling");
     let mut s = support::json_header("strong_scaling", quick);
     s.push_str("  \"rows\": [\n");
-    for (i, r) in rows.iter().enumerate() {
+    let total = rows.len() + extra_rows.len();
+    let mut emitted = 0usize;
+    for r in rows {
+        emitted += 1;
         s.push_str(&format!(
             "    {{\"app\": \"{}\", \"transport\": \"{}\", \"nodes\": {}, \"devices\": {}, \"collectives\": {}, \"direct\": {}, \"fault\": {}, \"wall_s\": {:.6}, \"cells\": {}, \"cells_per_s\": {:.1}, \"speedup_vs_1\": {:.3}}}{}\n",
             r.app,
@@ -156,8 +174,14 @@ fn write_json(rows: &[Row], quick: bool) {
             r.cells,
             r.cells_per_s,
             r.speedup_vs_1,
-            if i + 1 < rows.len() { "," } else { "" }
+            if emitted < total { "," } else { "" }
         ));
+    }
+    // Pre-formatted rows with a different shape (the multi-tenant per-job
+    // fence-latency rows: "p99_fence_ms" instead of a throughput field).
+    for e in extra_rows {
+        emitted += 1;
+        s.push_str(&format!("    {e}{}\n", if emitted < total { "," } else { "" }));
     }
     s.push_str("  ]\n}\n");
     match std::fs::write(&path, s) {
@@ -181,7 +205,9 @@ fn main() {
         "app", "transport", "nodes", "collectives", "direct", "wall (s)", "cells/s", "speedup"
     );
     let mut rows: Vec<Row> = Vec::new();
-    for w in &workloads(quick) {
+    let mut extra_rows: Vec<String> = Vec::new();
+    let ws = workloads(quick);
+    for w in &ws {
         if !filter.is_empty() && filter != w.app {
             continue;
         }
@@ -249,6 +275,124 @@ fn main() {
             }
         }
     }
-    println!("\n(live run with reference kernels: wall time includes scheduling, transfers and the transport; tiny problem sizes mean sub-linear speedup is expected — the claim is the *trend*, the channel-vs-tcp delta, nbody's collectives-vs-p2p delta, the direct-vs-staged delta on the p2p rows, and wavesim's faulty-vs-clean tcp delta pricing the recovery layer)");
-    write_json(&rows, quick);
+    // ---- multi-tenant: concurrent jobs sharing one cluster per node ----
+    //
+    // N app instances run as jobs of ONE cluster per node (shared scheduler
+    // thread, shared executor lanes/arenas), each fencing `iters` times.
+    // Rows:
+    //   - "multijob" / "multijob-fifo": aggregate throughput across all
+    //     jobs, fair-share weighted-round-robin dispatch vs the global-FIFO
+    //     ablation (head-of-line blocking between tenants);
+    //   - "multijob[-fifo]-jJ-<app>": per-job fence-latency percentiles
+    //     (p99), the tenant-visible cost of sharing — the fair-vs-fifo
+    //     delta on the light job is the starvation headroom.
+    if filter.is_empty() || filter == "multijob" {
+        let iters = if quick { 3usize } else { 6 };
+        // Indices into `ws`: nbody (heavy all-gather) + wavesim (light
+        // stencil), doubled up in the full matrix.
+        let picks: &[usize] = if quick { &[0, 1] } else { &[0, 1, 0, 1] };
+        let mj_nodes: &[u64] = if quick { &[1, 2] } else { &[1, 2, 4] };
+        println!(
+            "\n== strong_scaling: multi-tenant ({} concurrent jobs per cluster) ==",
+            picks.len()
+        );
+        println!(
+            "{:>16} {:>9} {:>6} {:>6} {:>10} {:>14} {:>9}",
+            "mode", "transport", "nodes", "jobs", "wall (s)", "cells/s", "speedup"
+        );
+        for &(suffix, fair) in &[("", true), ("-fifo", false)] {
+            for &transport in &[Transport::Channel, Transport::Tcp] {
+                let mut base = f64::NAN;
+                for &nodes in mj_nodes {
+                    let lats: Vec<Arc<Mutex<Vec<f64>>>> =
+                        picks.iter().map(|_| Arc::new(Mutex::new(Vec::new()))).collect();
+                    let programs: Vec<JobProgram> = picks
+                        .iter()
+                        .zip(&lats)
+                        .map(|(&k, lat)| {
+                            let submit = ws[k].submit.clone();
+                            let lat = lat.clone();
+                            Arc::new(move |q: &mut Queue| {
+                                for _ in 0..iters {
+                                    let t = Instant::now();
+                                    submit(q);
+                                    lat.lock().unwrap().push(t.elapsed().as_secs_f64() * 1e3);
+                                }
+                            }) as JobProgram
+                        })
+                        .collect();
+                    let cfg = ClusterConfig::builder()
+                        .num_nodes(nodes)
+                        .num_devices(devices)
+                        .registry(apps::reference_registry())
+                        .transport(transport)
+                        .fair_share(fair)
+                        .build();
+                    let t0 = Instant::now();
+                    let reports =
+                        run_cluster_jobs(cfg, programs).expect("bring up cluster transport");
+                    let wall = t0.elapsed().as_secs_f64();
+                    for r in &reports {
+                        for jr in &r.jobs {
+                            assert!(
+                                jr.errors.is_empty(),
+                                "node {} job {}: {:?}",
+                                r.node,
+                                jr.job,
+                                jr.errors
+                            );
+                        }
+                    }
+                    let cells: u64 = picks.iter().map(|&k| ws[k].cells * iters as u64).sum();
+                    if nodes == 1 {
+                        base = wall;
+                    }
+                    let row = Row {
+                        app: format!("multijob{suffix}"),
+                        transport,
+                        nodes,
+                        devices,
+                        collectives: true,
+                        direct: true,
+                        fault: false,
+                        wall_s: wall,
+                        cells,
+                        cells_per_s: cells as f64 / wall,
+                        speedup_vs_1: base / wall,
+                    };
+                    println!(
+                        "{:>16} {:>9} {:>6} {:>6} {:>10.4} {:>14.0} {:>9.2}",
+                        row.app,
+                        row.transport.name(),
+                        row.nodes,
+                        picks.len(),
+                        row.wall_s,
+                        row.cells_per_s,
+                        row.speedup_vs_1
+                    );
+                    rows.push(row);
+                    for (j, (&k, lat)) in picks.iter().zip(&lats).enumerate() {
+                        let mut samples = std::mem::take(&mut *lat.lock().unwrap());
+                        let p99 = p99_ms(&mut samples);
+                        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+                        println!(
+                            "                 job {j} ({}): {} fences, mean {:.2} ms, p99 {:.2} ms",
+                            ws[k].app,
+                            samples.len(),
+                            mean,
+                            p99
+                        );
+                        extra_rows.push(format!(
+                            "{{\"app\": \"multijob{suffix}-j{j}-{}\", \"transport\": \"{}\", \"nodes\": {nodes}, \"devices\": {devices}, \"job\": {j}, \"fair\": {fair}, \"fences\": {}, \"mean_fence_ms\": {mean:.3}, \"p99_fence_ms\": {p99:.3}}}",
+                            ws[k].app,
+                            transport.name(),
+                            samples.len(),
+                        ));
+                    }
+                }
+            }
+        }
+    }
+    println!("\n(live run with reference kernels: wall time includes scheduling, transfers and the transport; tiny problem sizes mean sub-linear speedup is expected — the claim is the *trend*, the channel-vs-tcp delta, nbody's collectives-vs-p2p delta, the direct-vs-staged delta on the p2p rows, wavesim's faulty-vs-clean tcp delta pricing the recovery layer, and the multijob fair-vs-fifo p99 delta pricing tenant isolation)");
+    write_json(&rows, &extra_rows, quick);
 }

@@ -117,6 +117,13 @@ impl BufferPool {
         Self::default()
     }
 
+    /// A pool whose buffer ids start at `base` (a job's `JobId::base()`), so
+    /// buffers of concurrent jobs never collide in any per-buffer tracking
+    /// structure across the scheduler and executor.
+    pub fn with_base(base: u64) -> Self {
+        BufferPool { infos: HashMap::new(), next: base }
+    }
+
     /// Register a new buffer and return its id.
     pub fn create(
         &mut self,

@@ -16,7 +16,7 @@ use crate::buffer::BufferPool;
 use crate::dag::{Dag, Dep, DepKind};
 use crate::grid::{GridBox, Region, RegionMap};
 use crate::task::{EpochAction, TaskKind, TaskRef};
-use crate::util::{BufferId, CommandId, NodeId, TaskId};
+use crate::util::{BufferId, CommandId, JobId, NodeId, TaskId};
 use std::collections::HashMap;
 use std::sync::Arc;
 
@@ -207,6 +207,18 @@ pub struct CdagGenerator {
 
 impl CdagGenerator {
     pub fn new(node: NodeId, num_nodes: u64, hint: SplitHint, buffers: BufferPool) -> Self {
+        Self::with_job(JobId(0), node, num_nodes, hint, buffers)
+    }
+
+    /// Generator whose command ids live in `job`'s namespace; all per-job
+    /// generators on one node share the CDAG layer without id collisions.
+    pub fn with_job(
+        job: JobId,
+        node: NodeId,
+        num_nodes: u64,
+        hint: SplitHint,
+        buffers: BufferPool,
+    ) -> Self {
         assert!(node.0 < num_nodes);
         CdagGenerator {
             node,
@@ -214,7 +226,7 @@ impl CdagGenerator {
             hint,
             buffers,
             states: HashMap::new(),
-            dag: Dag::new(),
+            dag: Dag::with_base(job.base()),
             outbox: Vec::new(),
             errors: Vec::new(),
             current_horizon: None,

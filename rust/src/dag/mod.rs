@@ -111,6 +111,15 @@ impl<N> Dag<N> {
         Self::default()
     }
 
+    /// A DAG whose node ids start at `base` instead of 0. Multi-tenant id
+    /// namespacing: each job's graphs use `base = JobId::base()`, so ids
+    /// stay monotonic within the namespace and every invariant (`front`,
+    /// `prune_before`, `check_acyclic`) holds unchanged — the tag rides
+    /// along in the high bits.
+    pub fn with_base(base: u64) -> Self {
+        Dag { next_id: base, ..Default::default() }
+    }
+
     /// Append a node with the given dependencies. Dependencies on unknown
     /// (already pruned or never existing) nodes are silently dropped — by
     /// the horizon invariant a pruned node has already completed, so the
@@ -380,6 +389,21 @@ mod tests {
             assert!(g.check_acyclic());
         }
         assert!(g.total_created() > 1500);
+    }
+
+    #[test]
+    fn with_base_namespaces_ids() {
+        let base = 7u64 << 48;
+        let mut g: Dag<&str> = Dag::with_base(base);
+        let a = g.push("a", []);
+        let b = g.push("b", [dep(a)]);
+        assert_eq!((a, b), (base, base + 1));
+        assert_eq!(g.total_created(), base + 2);
+        assert!(g.check_acyclic());
+        assert_eq!(g.front(), vec![b]);
+        // Pruning relative to an in-namespace horizon works as at base 0.
+        assert_eq!(g.prune_before(base + 1), 1);
+        assert_eq!(g.front(), vec![b]);
     }
 
     #[test]

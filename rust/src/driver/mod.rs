@@ -1,17 +1,29 @@
 //! The cluster driver: wires the full Fig-5 architecture together.
 //!
-//! [`run_cluster`] executes a user program SPMD-style — once per (simulated)
-//! cluster node, each node running in its own thread with the full
-//! three-thread architecture underneath:
+//! A [`Cluster`] owns one node's runtime stack — the scheduler thread, the
+//! executor thread and the comm fabric endpoint — and hands out any number
+//! of independent [`Queue`]s (`cluster.create_queue()`), one per *job*.
+//! Jobs are fully isolated tenants: each queue has its own TDAG/CDAG/IDAG
+//! id namespace (the job tag lives in the id high bits), its own buffer-id
+//! space, its own horizons, fences and §4.4 error stream — while the
+//! scheduler thread interleaves compilation across jobs and the executor
+//! arbitrates shared device lanes and memory arenas between them
+//! (weighted round-robin + optional admission limits).
 //!
 //! ```text
-//! node thread (main)  ──spsc──▶  scheduler thread  ──spsc──▶  executor thread
-//!   TaskManager                    CDAG+IDAG gen,                OoO engine,
-//!   (TDAG gen)                     lookahead queue               recv arbitration
-//!                                                                │ lanes (threads)
-//!                                                                ▼
-//!                                                       device/host/comm workers
+//! job threads (main)  ──mpsc──▶  scheduler thread  ──spsc──▶  executor thread
+//!   TaskManager per job            per-job CDAG+IDAG            OoO engine,
+//!   (TDAG gen)                     cores, lookahead             fair-share dispatch,
+//!                                                               recv arbitration
+//!                                                               │ lanes (threads)
+//!                                                               ▼
+//!                                                      device/host/comm workers
 //! ```
+//!
+//! [`run_cluster`] keeps the classic single-tenant surface: it executes a
+//! user program SPMD-style — once per (simulated) cluster node, each node
+//! running a one-job cluster. [`run_cluster_jobs`] runs several programs
+//! concurrently as jobs of one shared cluster on every node.
 //!
 //! The user program talks to a typed [`Queue`] (Listing 1): typed buffer
 //! creation, command-group submission (`q.submit(|cgh| ...)`), typed
@@ -26,13 +38,15 @@ use crate::buffer::Buffer;
 use crate::comm::{ChannelWorld, CommRef, NullCommunicator, TcpWorld, Transport};
 use crate::command::SplitHint;
 use crate::dtype::{self, Elem};
-use crate::executor::{ExecEvent, ExecutorConfig, ExecutorHandle, ExecutorStats, Registry};
+use crate::executor::{
+    EventHub, ExecEvent, ExecutorConfig, ExecutorHandle, ExecutorStats, Registry,
+};
 use crate::grid::Range;
 use crate::scheduler::{SchedulerConfig, SchedulerHandle, SchedulerMsg, SchedulerOut, UserInit};
 use crate::task::{CommandGroup, EpochAction, QueueError, RangeMapper, TaskDecl, TaskManager};
-use crate::util::{spsc, BufferId, NodeId, TaskId};
+use crate::util::{spsc, BufferId, JobId, NodeId, TaskId};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{mpsc, Arc, Mutex};
 
 /// Configuration of an in-process cluster run.
 #[derive(Clone)]
@@ -70,6 +84,16 @@ pub struct ClusterConfig {
     /// recovery — for testing detection, not transparency). `kill=` sites
     /// only apply to separate-process workers and are ignored in-process.
     pub fault_plan: Option<crate::fault::FaultPlan>,
+    /// Weighted round-robin dispatch between jobs sharing the executor
+    /// (default on). Off = a single global FIFO — the fairness ablation,
+    /// where a heavy job's backlog head-of-line-blocks light jobs.
+    pub fair_share: bool,
+    /// Per-job cap on dispatched-but-not-retired instructions in the
+    /// executor; 0 means unlimited.
+    pub admission_limit: usize,
+    /// Per-job fair-share weights, indexed by job id (creation order);
+    /// missing entries default to 1.
+    pub job_weights: Vec<u32>,
 }
 
 impl Default for ClusterConfig {
@@ -88,11 +112,122 @@ impl Default for ClusterConfig {
             direct_comm: true,
             heartbeat_timeout_ms: None,
             fault_plan: None,
+            fair_share: true,
+            admission_limit: 0,
+            job_weights: Vec::new(),
         }
     }
 }
 
-/// Per-node result of a cluster run.
+impl ClusterConfig {
+    /// Fluent construction with defaults for everything not set — the
+    /// single place new knobs land, so adding one does not ripple through
+    /// every struct-literal call site.
+    pub fn builder() -> ClusterConfigBuilder {
+        ClusterConfigBuilder { cfg: ClusterConfig::default() }
+    }
+}
+
+/// Builder for [`ClusterConfig`]; see [`ClusterConfig::builder`].
+#[derive(Clone)]
+pub struct ClusterConfigBuilder {
+    cfg: ClusterConfig,
+}
+
+macro_rules! builder_setters {
+    ($($(#[$doc:meta])* $name:ident: $ty:ty),* $(,)?) => {
+        $(
+            $(#[$doc])*
+            pub fn $name(mut self, v: $ty) -> Self {
+                self.cfg.$name = v;
+                self
+            }
+        )*
+    };
+}
+
+impl ClusterConfigBuilder {
+    builder_setters! {
+        num_nodes: u64,
+        num_devices: u64,
+        host_lanes: usize,
+        lookahead: bool,
+        d2d: bool,
+        node_hint: SplitHint,
+        device_hint: SplitHint,
+        registry: Registry,
+        transport: Transport,
+        collectives: bool,
+        direct_comm: bool,
+        heartbeat_timeout_ms: Option<u64>,
+        fault_plan: Option<crate::fault::FaultPlan>,
+        fair_share: bool,
+        admission_limit: usize,
+        job_weights: Vec<u32>,
+    }
+
+    pub fn build(self) -> ClusterConfig {
+        self.cfg
+    }
+}
+
+impl SchedulerConfig {
+    /// Derive one node's scheduler configuration from the cluster
+    /// configuration — the single derivation point, so per-job knobs do not
+    /// have to be threaded through every spawn site by hand. The `job`
+    /// field stays at the default; the scheduler thread stamps it per job
+    /// when it lazily creates each job's compiler core.
+    pub fn for_node(cfg: &ClusterConfig, node: NodeId) -> SchedulerConfig {
+        SchedulerConfig {
+            job: JobId(0),
+            node,
+            num_nodes: cfg.num_nodes,
+            num_devices: cfg.num_devices,
+            node_hint: cfg.node_hint,
+            device_hint: cfg.device_hint,
+            d2d: cfg.d2d,
+            lookahead: cfg.lookahead,
+            horizon_flush: 2,
+            collectives: cfg.collectives,
+            direct_comm: cfg.direct_comm,
+        }
+    }
+}
+
+impl ExecutorConfig {
+    /// Derive one node's executor configuration from the cluster
+    /// configuration (companion to [`SchedulerConfig::for_node`]).
+    pub fn for_node(cfg: &ClusterConfig, node: NodeId) -> ExecutorConfig {
+        ExecutorConfig {
+            node,
+            host_lanes: cfg.host_lanes,
+            registry: cfg.registry.clone(),
+            heartbeat: cfg
+                .heartbeat_timeout_ms
+                .map(crate::executor::HeartbeatConfig::from_timeout_ms),
+            fair_share: cfg.fair_share,
+            admission_limit: cfg.admission_limit,
+            job_weights: cfg.job_weights.clone(),
+        }
+    }
+}
+
+/// Per-job result of a cluster run: the job's §4.4 error stream and the
+/// fault notices it observed, fully attributed — one job's errors never
+/// appear in another job's report.
+#[derive(Debug, Clone)]
+pub struct JobReport {
+    pub job: JobId,
+    /// Runtime errors (§4.4) attributed to this job (plus cluster-wide
+    /// conditions, which every job observes).
+    pub errors: Vec<String>,
+    /// Non-fatal comm-fabric fault notices observed by this job.
+    pub faults: Vec<String>,
+}
+
+/// Per-node result of a cluster run. Executor and scheduler statistics are
+/// aggregated over all jobs that ran on the node; `jobs` carries the
+/// per-job breakdown of errors and faults.
 #[derive(Debug)]
 pub struct NodeReport {
     pub node: NodeId,
@@ -102,28 +237,36 @@ pub struct NodeReport {
     pub resizes_emitted: u64,
     pub bytes_allocated: u64,
     pub max_queue_len: usize,
-    /// Runtime errors (§4.4) observed on this node.
+    /// Runtime errors (§4.4) observed on this node (union over jobs).
     pub errors: Vec<String>,
     /// Non-fatal comm-fabric fault notices (corrupt frame rejected,
     /// reconnects, retransmissions). Repaired or contained by the fabric:
     /// reported for observability, never a failure by themselves.
     pub faults: Vec<String>,
+    /// Per-job reports, in job-creation order.
+    pub jobs: Vec<JobReport>,
 }
 
-/// The per-node user-facing queue, mirroring Listing 1's API surface:
+/// The per-job user-facing queue, mirroring Listing 1's API surface:
 /// typed buffer creation + command-group submission + synchronization.
+/// Obtained from [`Cluster::create_queue`]; any number of queues (jobs)
+/// can share one cluster, each with an isolated id namespace, its own
+/// horizons and fences, and an attributed error stream.
 ///
 /// Every fallible operation returns [`QueueError`] instead of panicking:
 /// shape/dtype mismatches are caught before any instruction is generated,
 /// and §4.4 runtime errors observed while waiting surface as
 /// [`QueueError::Runtime`] (they are additionally accumulated into
-/// [`NodeReport::errors`]).
+/// [`NodeReport::errors`]). Only this job's errors ever surface here: the
+/// executor routes every event to the job it is attributed to.
 pub struct Queue {
     pub node: NodeId,
     pub cfg: ClusterConfig,
+    job: JobId,
     tm: TaskManager,
-    sched: SchedulerHandle,
-    exec: ExecutorHandle,
+    sched: mpsc::Sender<(JobId, SchedulerMsg)>,
+    events: EventHub,
+    reports: Arc<Mutex<Vec<JobReport>>>,
     errors: Vec<String>,
     faults: Vec<String>,
     /// How many of `errors` have already been surfaced through a
@@ -132,20 +275,24 @@ pub struct Queue {
     fence_counter: Arc<AtomicU64>,
 }
 
-/// Former name of [`Queue`]; the untyped `create_buffer(name, range,
-/// elem_size, host_initialized)` / `init_buffer_f32` / `fence_f32` surface
-/// was replaced by the typed command-group API.
-#[deprecated(note = "renamed to `Queue`; use the typed command-group API")]
-pub type NodeQueue = Queue;
-
 impl Queue {
+    /// The job this queue belongs to.
+    pub fn job(&self) -> JobId {
+        self.job
+    }
+
+    fn send(&self, msg: SchedulerMsg) {
+        // A send can only fail after the cluster shut the scheduler thread
+        // down, at which point this job's outcome is already sealed.
+        let _ = self.sched.send((self.job, msg));
+    }
+
     /// Create a typed virtualized buffer, visible to subsequent tasks.
     /// Contents start *uninitialized*: reading them before a producer task
     /// or [`Queue::init`] is a §4.4 correctness error.
     pub fn create_buffer<T: Elem>(&mut self, name: impl Into<String>, range: Range) -> Buffer<T> {
         let buf = self.tm.create_buffer::<T>(name, range, false);
-        self.sched
-            .send(SchedulerMsg::Buffers(self.tm.buffers().clone()));
+        self.send(SchedulerMsg::Buffers(self.tm.buffers().clone()));
         buf
     }
 
@@ -177,9 +324,8 @@ impl Queue {
         // Re-announce the pool (host_initialized changed), then materialize
         // the user-memory (M0) allocation with the concrete bytes — ordered
         // through the scheduler pipeline ahead of any consuming task.
-        self.sched
-            .send(SchedulerMsg::Buffers(self.tm.buffers().clone()));
-        self.sched.send(SchedulerMsg::UserData(UserInit {
+        self.send(SchedulerMsg::Buffers(self.tm.buffers().clone()));
+        self.send(SchedulerMsg::UserData(UserInit {
             alloc: crate::instruction::user_alloc_id(buffer.id()),
             covers: crate::grid::GridBox::full(buffer.range()),
             elem_size: dtype::elem_size::<T>(),
@@ -212,7 +358,7 @@ impl Queue {
     pub fn wait(&mut self) -> Result<(), QueueError> {
         self.tm.barrier();
         self.forward_tasks();
-        let side = self.exec.wait_epoch(EpochAction::Barrier);
+        let side = self.events.wait_epoch(self.job, EpochAction::Barrier);
         self.collect_errors(side);
         if self.errors.len() > self.errors_reported {
             let fresh = self.errors[self.errors_reported..].to_vec();
@@ -298,10 +444,10 @@ impl Queue {
                 crate::trace::Track::Main,
                 crate::trace::EventKind::TaskSubmit { task: t.id.0 },
             );
-            self.sched.send(SchedulerMsg::Task(t));
+            self.send(SchedulerMsg::Task(t));
         }
-        // Drain pending error events without blocking.
-        while let Ok(ev) = self.exec.events.try_recv() {
+        // Drain pending error events for this job without blocking.
+        while let Some(ev) = self.events.try_recv(self.job) {
             match ev {
                 ExecEvent::Error(e) => self.errors.push(e),
                 ExecEvent::Fault(f) => self.faults.push(f),
@@ -320,87 +466,152 @@ impl Queue {
         }
     }
 
-    fn shutdown(mut self) -> NodeReport {
+    /// End this job: run its shutdown epoch, retire its scheduler core and
+    /// deposit its [`JobReport`] with the owning [`Cluster`]. Other jobs on
+    /// the cluster keep running. Returns the report (also available later
+    /// through [`NodeReport::jobs`]).
+    pub fn finish(mut self) -> JobReport {
         self.tm.shutdown();
         self.forward_tasks();
-        let side = self.exec.wait_epoch(EpochAction::Shutdown);
+        let side = self.events.wait_epoch(self.job, EpochAction::Shutdown);
         self.collect_errors(side);
-        let sched = self.sched.join();
-        let executor = self.exec.join();
-        // The node thread's own events (task submits) live in its
-        // thread-local buffer; publish them before the thread exits.
+        // Retire this job's compiler core; the scheduler thread keeps
+        // serving the remaining jobs.
+        self.send(SchedulerMsg::Shutdown);
+        // This thread's trace events (task submits) live in its
+        // thread-local buffer; publish them before the job thread exits.
         crate::trace::flush_thread();
-        NodeReport {
-            node: self.node,
-            executor,
-            instructions_generated: sched.instructions_generated,
-            commands_generated: sched.commands_generated,
-            resizes_emitted: sched.idag().resizes_emitted,
-            bytes_allocated: sched.idag().bytes_allocated,
-            max_queue_len: sched.max_queue_len,
-            errors: self.errors,
-            faults: self.faults,
-        }
+        let report = JobReport { job: self.job, errors: self.errors, faults: self.faults };
+        self.reports.lock().unwrap().push(report.clone());
+        report
     }
 }
 
-fn make_node(cfg: &ClusterConfig, node: NodeId, comm: CommRef) -> Queue {
-    let tm = TaskManager::new();
-    let (out_tx, out_rx) = spsc::channel::<SchedulerOut>(4096);
-    let sched = SchedulerHandle::spawn(
-        SchedulerConfig {
+/// One node's runtime stack — scheduler thread, executor thread, comm
+/// fabric endpoint — shared by any number of concurrently-running jobs.
+/// Hand out one [`Queue`] per job with [`Cluster::create_queue`]; when all
+/// jobs have [`Queue::finish`]ed, [`Cluster::shutdown`] tears the stack
+/// down and returns the aggregated [`NodeReport`].
+///
+/// SPMD determinism: create queues in the same order on every node, so a
+/// job gets the same [`JobId`] — and therefore the same id namespace and
+/// comm message tags — cluster-wide.
+pub struct Cluster {
+    node: NodeId,
+    cfg: ClusterConfig,
+    sched: SchedulerHandle,
+    exec: ExecutorHandle,
+    reports: Arc<Mutex<Vec<JobReport>>>,
+    next_job: u64,
+}
+
+impl Cluster {
+    /// Bring up one node's scheduler/executor threads on an
+    /// externally-built communicator.
+    pub fn new(cfg: &ClusterConfig, node: NodeId, comm: CommRef) -> Cluster {
+        let (out_tx, out_rx) = spsc::channel::<SchedulerOut>(4096);
+        let sched = SchedulerHandle::spawn(SchedulerConfig::for_node(cfg, node), out_tx);
+        let exec = ExecutorHandle::spawn(ExecutorConfig::for_node(cfg, node), comm, out_rx);
+        Cluster {
             node,
-            num_nodes: cfg.num_nodes,
-            num_devices: cfg.num_devices,
-            node_hint: cfg.node_hint,
-            device_hint: cfg.device_hint,
-            d2d: cfg.d2d,
-            lookahead: cfg.lookahead,
-            horizon_flush: 2,
-            collectives: cfg.collectives,
-            direct_comm: cfg.direct_comm,
-        },
-        tm.buffers().clone(),
-        out_tx,
-    );
-    let exec = ExecutorHandle::spawn(
-        ExecutorConfig {
-            node,
-            host_lanes: cfg.host_lanes,
-            registry: cfg.registry.clone(),
-            heartbeat: cfg
-                .heartbeat_timeout_ms
-                .map(crate::executor::HeartbeatConfig::from_timeout_ms),
-        },
-        comm,
-        out_rx,
-    );
-    Queue {
-        node,
-        cfg: cfg.clone(),
-        tm,
-        sched,
-        exec,
-        errors: Vec::new(),
-        faults: Vec::new(),
-        errors_reported: 0,
-        fence_counter: Arc::new(AtomicU64::new(0)),
+            cfg: cfg.clone(),
+            sched,
+            exec,
+            reports: Arc::new(Mutex::new(Vec::new())),
+            next_job: 0,
+        }
+    }
+
+    pub fn node(&self) -> NodeId {
+        self.node
+    }
+
+    /// Create the next job's queue. Jobs are numbered in creation order;
+    /// all nodes must create their queues in the same order (SPMD).
+    pub fn create_queue(&mut self) -> Queue {
+        let job = JobId(self.next_job);
+        assert!(job.0 <= JobId::MAX, "too many jobs on one cluster");
+        self.next_job += 1;
+        // Register before any work is submitted so cluster-wide broadcasts
+        // can never miss this job.
+        self.exec.events.register(job);
+        Queue {
+            node: self.node,
+            cfg: self.cfg.clone(),
+            job,
+            tm: TaskManager::with_job(job),
+            sched: self.sched.sender(),
+            events: self.exec.events.clone(),
+            reports: self.reports.clone(),
+            errors: Vec::new(),
+            faults: Vec::new(),
+            errors_reported: 0,
+            fence_counter: Arc::new(AtomicU64::new(0)),
+        }
+    }
+
+    /// Tear down the node's runtime stack after every queue has finished
+    /// and aggregate scheduler/executor statistics across jobs.
+    pub fn shutdown(self) -> NodeReport {
+        // Dropping the handle's sender ends the scheduler thread (flushing
+        // any job cores that never saw an explicit shutdown); the executor
+        // then sees its inbox close and exits once drained.
+        let cores = self.sched.join();
+        let executor = self.exec.join();
+        let mut jobs = std::mem::take(&mut *self.reports.lock().unwrap());
+        jobs.sort_by_key(|r| r.job);
+        // Late events (e.g. a fault notice raced with the last fence) are
+        // still in the hub; fold them into the owning job's report.
+        for r in &mut jobs {
+            while let Some(ev) = self.exec.events.try_recv(r.job) {
+                match ev {
+                    ExecEvent::Error(e) => r.errors.push(e),
+                    ExecEvent::Fault(f) => r.faults.push(f),
+                    ExecEvent::Epoch(..) => {}
+                }
+            }
+        }
+        crate::trace::flush_thread();
+        let mut report = NodeReport {
+            node: self.node,
+            executor,
+            instructions_generated: 0,
+            commands_generated: 0,
+            resizes_emitted: 0,
+            bytes_allocated: 0,
+            max_queue_len: 0,
+            errors: jobs.iter().flat_map(|j| j.errors.iter().cloned()).collect(),
+            faults: jobs.iter().flat_map(|j| j.faults.iter().cloned()).collect(),
+            jobs,
+        };
+        for (_, core) in &cores {
+            report.instructions_generated += core.instructions_generated;
+            report.commands_generated += core.commands_generated;
+            report.resizes_emitted += core.idag().resizes_emitted;
+            report.bytes_allocated += core.idag().bytes_allocated;
+            report.max_queue_len = report.max_queue_len.max(core.max_queue_len);
+        }
+        report
     }
 }
 
 /// Run one node of a cluster against an externally-built communicator and
-/// return its report. This is the per-process entry point of multi-process
-/// deployments (`celerity worker` builds a
+/// return its report: a one-job cluster wrapping the multi-tenant stack.
+/// This is the per-process entry point of multi-process deployments
+/// (`celerity worker` builds a
 /// [`TcpCommunicator`](crate::comm::TcpCommunicator) from its peer list and
 /// calls this); [`run_cluster`] uses it for every node thread.
 pub fn run_node<F>(cfg: &ClusterConfig, node: NodeId, comm: CommRef, program: F) -> NodeReport
 where
     F: Fn(&mut Queue),
 {
-    let mut q = make_node(cfg, node, comm);
+    let mut cluster = Cluster::new(cfg, node, comm);
+    let mut q = cluster.create_queue();
     program(&mut q);
-    q.shutdown()
+    q.finish();
+    cluster.shutdown()
 }
+
 
 /// Run `program` SPMD on an in-process cluster: one OS thread per node,
 /// each with its own scheduler/executor stack, connected by the fabric
@@ -423,10 +634,62 @@ pub fn try_run_cluster<F>(cfg: ClusterConfig, program: F) -> std::io::Result<Vec
 where
     F: Fn(&mut Queue) + Send + Sync + 'static,
 {
+    let program = Arc::new(program);
+    spawn_nodes(cfg, move |cfg, node, comm| {
+        let program = program.clone();
+        run_node(cfg, node, comm, move |q| program(q))
+    })
+}
+
+/// A job's user program in a multi-tenant run: executed SPMD like
+/// [`run_cluster`]'s, once per node, against that job's queue.
+pub type JobProgram = Arc<dyn Fn(&mut Queue) + Send + Sync>;
+
+/// Run several programs concurrently as jobs of one shared cluster: on
+/// every node, one [`Cluster`] is brought up, one [`Queue`] per program is
+/// created (in program order, so job ids agree cluster-wide), and each
+/// program runs on its own thread against its queue. Scheduler compilation
+/// interleaves across the jobs and the executor arbitrates shared lanes
+/// and memory between them; each job keeps its own id namespace, horizons,
+/// fences and attributed error stream.
+pub fn run_cluster_jobs(
+    cfg: ClusterConfig,
+    programs: Vec<JobProgram>,
+) -> std::io::Result<Vec<NodeReport>> {
+    spawn_nodes(cfg, move |cfg, node, comm| {
+        let mut cluster = Cluster::new(cfg, node, comm);
+        let queues: Vec<Queue> = programs.iter().map(|_| cluster.create_queue()).collect();
+        let joins: Vec<_> = queues
+            .into_iter()
+            .zip(programs.iter().cloned())
+            .map(|(mut q, p)| {
+                std::thread::Builder::new()
+                    .name(format!("celerity-job-{}-{}", node.0, q.job()))
+                    .spawn(move || {
+                        p(&mut q);
+                        q.finish();
+                    })
+                    .expect("spawn job thread")
+            })
+            .collect();
+        for j in joins {
+            j.join().expect("job thread panicked");
+        }
+        cluster.shutdown()
+    })
+}
+
+/// Shared SPMD bring-up: build the transport fabric, then run `node_main`
+/// once per node (on this thread for a single node, on one thread per node
+/// otherwise).
+fn spawn_nodes<F>(cfg: ClusterConfig, node_main: F) -> std::io::Result<Vec<NodeReport>>
+where
+    F: Fn(&ClusterConfig, NodeId, CommRef) -> NodeReport + Send + Sync + 'static,
+{
     assert!(cfg.num_nodes >= 1);
     if cfg.num_nodes == 1 {
         let comm: CommRef = Arc::new(NullCommunicator(NodeId(0)));
-        return Ok(vec![run_node(&cfg, NodeId(0), comm, program)]);
+        return Ok(vec![node_main(&cfg, NodeId(0), comm)]);
     }
     let mut cfg = cfg;
     if cfg.fault_plan.as_ref().map_or(false, |p| p.is_active())
@@ -465,15 +728,15 @@ where
             })
             .collect(),
     };
-    let program = Arc::new(program);
+    let node_main = Arc::new(node_main);
     let mut joins = Vec::new();
     for (i, comm) in comms.into_iter().enumerate() {
         let cfg = cfg.clone();
-        let program = program.clone();
+        let node_main = node_main.clone();
         joins.push(
             std::thread::Builder::new()
                 .name(format!("celerity-node-{i}"))
-                .spawn(move || run_node(&cfg, NodeId(i as u64), comm, |q| program(q)))
+                .spawn(move || node_main(&cfg, NodeId(i as u64), comm))
                 .expect("spawn node thread"),
         );
     }

@@ -1,0 +1,206 @@
+//! Per-job demultiplexing of the executor's event stream.
+//!
+//! A multi-tenant cluster runs one executor thread but hands out one
+//! [`crate::driver::Queue`] per job, and each queue's `wait()`/`fence()`
+//! must observe *its own* job's epochs and §4.4 errors — one job's
+//! out-of-bounds kernel must never fail another job's fence. The executor
+//! therefore tags every event with an [`EventRoute`] at the emission site
+//! (where attribution is still known), and the [`EventHub`] sorts the
+//! single mpsc stream into per-job queues on the consumer side.
+//!
+//! Cluster-routed events (peer death, unattributable engine anomalies) are
+//! broadcast: every registered job sees a clone, because every job's
+//! pending work is affected.
+
+use super::ExecEvent;
+use crate::task::EpochAction;
+use crate::util::JobId;
+use std::collections::{HashMap, VecDeque};
+use std::sync::{mpsc, Arc, Mutex};
+
+/// Where an executor event is delivered.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventRoute {
+    /// Attributed to one job: delivered only to that job's consumers.
+    Job(JobId),
+    /// Cluster-wide condition: broadcast to every registered job.
+    Cluster,
+}
+
+struct Slots {
+    queues: HashMap<u64, VecDeque<ExecEvent>>,
+    /// The executor thread exited and dropped its sender.
+    closed: bool,
+}
+
+struct HubInner {
+    rx: Mutex<mpsc::Receiver<(EventRoute, ExecEvent)>>,
+    slots: Mutex<Slots>,
+}
+
+/// Clonable consumer side of the executor event stream; each clone shares
+/// the underlying per-job queues.
+#[derive(Clone)]
+pub struct EventHub {
+    inner: Arc<HubInner>,
+}
+
+impl EventHub {
+    /// Wrap the executor's event receiver. Job 0 (the single-tenant
+    /// default) is pre-registered so cluster broadcasts always have at
+    /// least one destination.
+    pub fn new(rx: mpsc::Receiver<(EventRoute, ExecEvent)>) -> EventHub {
+        let hub = EventHub {
+            inner: Arc::new(HubInner {
+                rx: Mutex::new(rx),
+                slots: Mutex::new(Slots { queues: HashMap::new(), closed: false }),
+            }),
+        };
+        hub.register(JobId(0));
+        hub
+    }
+
+    /// Register a job as a broadcast destination. Must happen before the
+    /// job submits work, or a cluster-wide event raced in between would
+    /// miss it.
+    pub fn register(&self, job: JobId) {
+        self.inner.slots.lock().unwrap().queues.entry(job.0).or_default();
+    }
+
+    /// Drain whatever is currently in the shared receiver into the per-job
+    /// queues. Contention-tolerant: if another consumer holds the receiver
+    /// it is already pumping on our behalf.
+    fn pump(&self) {
+        let Ok(rx) = self.inner.rx.try_lock() else { return };
+        let mut slots = self.inner.slots.lock().unwrap();
+        loop {
+            match rx.try_recv() {
+                Ok((EventRoute::Job(job), ev)) => {
+                    slots.queues.entry(job.0).or_default().push_back(ev);
+                }
+                Ok((EventRoute::Cluster, ev)) => {
+                    for q in slots.queues.values_mut() {
+                        q.push_back(ev.clone());
+                    }
+                }
+                Err(mpsc::TryRecvError::Empty) => break,
+                Err(mpsc::TryRecvError::Disconnected) => {
+                    slots.closed = true;
+                    break;
+                }
+            }
+        }
+    }
+
+    /// Non-blocking receive of the next event routed to `job`.
+    pub fn try_recv(&self, job: JobId) -> Option<ExecEvent> {
+        self.pump();
+        self.inner.slots.lock().unwrap().queues.entry(job.0).or_default().pop_front()
+    }
+
+    /// Blocking receive; `None` once the executor has exited and `job`'s
+    /// queue is fully drained.
+    pub fn recv(&self, job: JobId) -> Option<ExecEvent> {
+        loop {
+            if let Some(ev) = self.try_recv(job) {
+                return Some(ev);
+            }
+            if self.inner.slots.lock().unwrap().closed {
+                // Re-check after observing closed: pump() may have landed a
+                // final event between our pop and the flag read.
+                return self.try_recv(job);
+            }
+            std::thread::sleep(std::time::Duration::from_micros(50));
+        }
+    }
+
+    /// Block until `job` reports an epoch of `action`; returns the side
+    /// events (errors, faults) seen on the way, which is also the
+    /// exhaustive list if the executor dies before the epoch arrives.
+    pub fn wait_epoch(&self, job: JobId, action: EpochAction) -> Vec<ExecEvent> {
+        let mut side = Vec::new();
+        loop {
+            match self.recv(job) {
+                Some(ExecEvent::Epoch(a, _)) if a == action => return side,
+                Some(ev) => side.push(ev),
+                None => return side,
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::InstructionId;
+
+    #[test]
+    fn job_events_are_isolated() {
+        let (tx, rx) = mpsc::channel();
+        let hub = EventHub::new(rx);
+        hub.register(JobId(1));
+        tx.send((EventRoute::Job(JobId(1)), ExecEvent::Error("job1 oob".into()))).unwrap();
+        tx.send((EventRoute::Job(JobId(0)), ExecEvent::Error("job0 oob".into()))).unwrap();
+        match hub.try_recv(JobId(0)) {
+            Some(ExecEvent::Error(m)) => assert_eq!(m, "job0 oob"),
+            other => panic!("{other:?}"),
+        }
+        match hub.try_recv(JobId(1)) {
+            Some(ExecEvent::Error(m)) => assert_eq!(m, "job1 oob"),
+            other => panic!("{other:?}"),
+        }
+        assert!(hub.try_recv(JobId(0)).is_none());
+        assert!(hub.try_recv(JobId(1)).is_none());
+    }
+
+    #[test]
+    fn cluster_events_broadcast_to_all_registered_jobs() {
+        let (tx, rx) = mpsc::channel();
+        let hub = EventHub::new(rx);
+        hub.register(JobId(1));
+        tx.send((EventRoute::Cluster, ExecEvent::Error("peer died".into()))).unwrap();
+        for job in [JobId(0), JobId(1)] {
+            match hub.try_recv(job) {
+                Some(ExecEvent::Error(m)) => assert!(m.contains("peer died")),
+                other => panic!("{job:?}: {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn wait_epoch_skips_other_jobs_and_collects_side_events() {
+        let (tx, rx) = mpsc::channel();
+        let hub = EventHub::new(rx);
+        hub.register(JobId(1));
+        let base = JobId(1).base();
+        tx.send((EventRoute::Job(JobId(1)), ExecEvent::Fault("retransmit".into()))).unwrap();
+        tx.send((
+            EventRoute::Job(JobId(0)),
+            ExecEvent::Epoch(EpochAction::Barrier, InstructionId(7)),
+        ))
+        .unwrap();
+        tx.send((
+            EventRoute::Job(JobId(1)),
+            ExecEvent::Epoch(EpochAction::Barrier, InstructionId(base + 7)),
+        ))
+        .unwrap();
+        let side = hub.wait_epoch(JobId(1), EpochAction::Barrier);
+        assert_eq!(side.len(), 1, "{side:?}");
+        assert!(matches!(&side[0], ExecEvent::Fault(_)));
+        // Job 0's own epoch is still waiting in its queue, untouched.
+        assert!(matches!(
+            hub.try_recv(JobId(0)),
+            Some(ExecEvent::Epoch(EpochAction::Barrier, _))
+        ));
+    }
+
+    #[test]
+    fn recv_returns_none_after_close_and_drain() {
+        let (tx, rx) = mpsc::channel();
+        let hub = EventHub::new(rx);
+        tx.send((EventRoute::Job(JobId(0)), ExecEvent::Error("last".into()))).unwrap();
+        drop(tx);
+        assert!(matches!(hub.recv(JobId(0)), Some(ExecEvent::Error(_))));
+        assert!(hub.recv(JobId(0)).is_none());
+    }
+}

@@ -1,0 +1,253 @@
+//! Fair-share dispatch arbitration across jobs (multi-tenant executor).
+//!
+//! When several jobs share one executor, the set of ready-to-issue
+//! instructions is partitioned per job and drained by weighted round-robin:
+//! each job gets a quantum of `weight` dispatches before the cursor moves
+//! on, and an optional admission limit caps how many of a job's
+//! instructions may be dispatched-but-not-retired at once. A job at its
+//! admission limit is skipped, not waited on, so a heavy job can never
+//! block a light one behind it (the starvation guarantee the multi-tenant
+//! tests assert).
+//!
+//! With `fair_share` off (the ablation mode) the set degrades to a single
+//! global FIFO in arrival order — admission limits still apply, but a
+//! capped job at the head blocks everyone behind it, which is exactly the
+//! head-of-line behaviour the ablation is meant to expose.
+
+use super::ooo::Lane;
+use crate::instruction::InstructionRef;
+use crate::util::{InstructionId, JobId};
+use std::collections::{HashMap, VecDeque};
+
+type Entry = (InstructionRef, Lane);
+
+enum Mode {
+    /// Ablation: one global queue, arrival order.
+    Fifo(VecDeque<Entry>),
+    /// Weighted round-robin over per-job queues. `ring` holds jobs in
+    /// first-seen order; `credit` is the remaining quantum of the job at
+    /// `cursor`.
+    Fair {
+        ring: Vec<u64>,
+        cursor: usize,
+        credit: u32,
+        queues: HashMap<u64, VecDeque<Entry>>,
+    },
+}
+
+/// The pool of issuable instructions awaiting dispatch, with per-job
+/// arbitration. Feed with [`ReadySet::push`], drain with [`ReadySet::next`],
+/// and report retirements back via [`ReadySet::on_retire`] so admission
+/// accounting stays balanced.
+pub struct ReadySet {
+    admission_limit: usize,
+    weights: Vec<u32>,
+    mode: Mode,
+    /// Per-job dispatched-but-not-retired counts (admission accounting).
+    in_flight: HashMap<u64, usize>,
+    len: usize,
+}
+
+impl ReadySet {
+    /// `admission_limit` of 0 means unlimited. `weights` is indexed by job
+    /// id; missing entries (and zeros) default to weight 1.
+    pub fn new(fair_share: bool, admission_limit: usize, weights: Vec<u32>) -> ReadySet {
+        ReadySet {
+            admission_limit,
+            weights,
+            mode: if fair_share {
+                Mode::Fair {
+                    ring: Vec::new(),
+                    cursor: 0,
+                    credit: 0,
+                    queues: HashMap::new(),
+                }
+            } else {
+                Mode::Fifo(VecDeque::new())
+            },
+            in_flight: HashMap::new(),
+            len: 0,
+        }
+    }
+
+    fn under_limit(limit: usize, in_flight: &HashMap<u64, usize>, job: u64) -> bool {
+        limit == 0 || in_flight.get(&job).copied().unwrap_or(0) < limit
+    }
+
+    /// Add a ready instruction; the owning job is read off the id's high
+    /// bits.
+    pub fn push(&mut self, instr: InstructionRef, lane: Lane) {
+        let job = JobId::of(instr.id.0).0;
+        self.len += 1;
+        match &mut self.mode {
+            Mode::Fifo(q) => q.push_back((instr, lane)),
+            Mode::Fair { ring, queues, .. } => {
+                if !queues.contains_key(&job) {
+                    ring.push(job);
+                }
+                queues.entry(job).or_default().push_back((instr, lane));
+            }
+        }
+    }
+
+    /// Pick the next instruction to dispatch, or `None` when every pending
+    /// entry belongs to a job at its admission limit (or the set is empty).
+    pub fn next(&mut self) -> Option<Entry> {
+        match &mut self.mode {
+            Mode::Fifo(q) => {
+                let job = JobId::of(q.front()?.0.id.0).0;
+                if !Self::under_limit(self.admission_limit, &self.in_flight, job) {
+                    // Deliberate head-of-line blocking in the ablation mode.
+                    return None;
+                }
+                let e = q.pop_front()?;
+                *self.in_flight.entry(job).or_insert(0) += 1;
+                self.len -= 1;
+                Some(e)
+            }
+            Mode::Fair { ring, cursor, credit, queues } => {
+                let n = ring.len();
+                for _ in 0..n {
+                    if *cursor >= ring.len() {
+                        *cursor = 0;
+                    }
+                    let job = ring[*cursor];
+                    if *credit == 0 {
+                        *credit = self.weights.get(job as usize).copied().unwrap_or(1).max(1);
+                    }
+                    let has_work = queues.get(&job).is_some_and(|q| !q.is_empty());
+                    if has_work && Self::under_limit(self.admission_limit, &self.in_flight, job) {
+                        *credit -= 1;
+                        let e = queues.get_mut(&job).unwrap().pop_front().unwrap();
+                        if *credit == 0 || queues[&job].is_empty() {
+                            *cursor = (*cursor + 1) % ring.len();
+                            *credit = 0;
+                        }
+                        *self.in_flight.entry(job).or_insert(0) += 1;
+                        self.len -= 1;
+                        return Some(e);
+                    }
+                    // Empty or admission-capped: skip without burning the
+                    // wall-clock on it.
+                    *cursor = (*cursor + 1) % ring.len();
+                    *credit = 0;
+                }
+                None
+            }
+        }
+    }
+
+    /// An instruction retired: release its job's admission slot.
+    pub fn on_retire(&mut self, id: InstructionId) {
+        let job = JobId::of(id.0).0;
+        if let Some(c) = self.in_flight.get_mut(&job) {
+            *c = c.saturating_sub(1);
+        }
+    }
+
+    /// Entries awaiting dispatch (admission-capped entries count).
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::instruction::{Instruction, InstructionKind};
+    use std::sync::Arc;
+
+    fn instr(id: u64) -> InstructionRef {
+        Arc::new(Instruction {
+            id: InstructionId(id),
+            kind: InstructionKind::Horizon,
+            deps: vec![],
+            task: None,
+        })
+    }
+
+    fn job_of(e: &Entry) -> u64 {
+        JobId::of(e.0.id.0).0
+    }
+
+    #[test]
+    fn weighted_round_robin_respects_weights() {
+        // Job 0 weight 2, job 1 weight 1 → drain order 0,0,1,0,0,1,1,1.
+        let mut r = ReadySet::new(true, 0, vec![2, 1]);
+        let base = JobId(1).base();
+        for k in 0..4 {
+            r.push(instr(k), Lane::Inline);
+            r.push(instr(base + k), Lane::Inline);
+        }
+        let order: Vec<u64> = std::iter::from_fn(|| r.next()).map(|e| job_of(&e)).collect();
+        assert_eq!(order, vec![0, 0, 1, 0, 0, 1, 1, 1]);
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn light_job_is_not_starved_by_heavy_backlog() {
+        // 100 ready instructions for job 0, then one for job 1: the fair
+        // ring must reach job 1 within one quantum of job 0.
+        let mut r = ReadySet::new(true, 0, vec![]);
+        for k in 0..100 {
+            r.push(instr(k), Lane::Inline);
+        }
+        r.push(instr(JobId(1).base()), Lane::Inline);
+        let first_two: Vec<u64> = (0..2).filter_map(|_| r.next()).map(|e| job_of(&e)).collect();
+        assert!(first_two.contains(&1), "job 1 must dispatch within the first quantum: {first_two:?}");
+    }
+
+    #[test]
+    fn admission_limit_caps_and_releases() {
+        let mut r = ReadySet::new(true, 1, vec![]);
+        for k in 0..3 {
+            r.push(instr(k), Lane::Inline);
+        }
+        let first = r.next().expect("first dispatch fits the limit");
+        assert!(r.next().is_none(), "job 0 is at its admission limit");
+        assert_eq!(r.len(), 2, "capped entries still count as pending");
+        r.on_retire(first.0.id);
+        assert!(r.next().is_some(), "retirement frees an admission slot");
+    }
+
+    #[test]
+    fn admission_limit_skips_capped_jobs_in_fair_mode() {
+        let mut r = ReadySet::new(true, 1, vec![]);
+        r.push(instr(0), Lane::Inline);
+        r.push(instr(1), Lane::Inline);
+        r.push(instr(JobId(1).base()), Lane::Inline);
+        assert_eq!(job_of(&r.next().unwrap()), 0);
+        // Job 0 capped → the ring skips to job 1 instead of stalling.
+        assert_eq!(job_of(&r.next().unwrap()), 1);
+        assert!(r.next().is_none());
+    }
+
+    #[test]
+    fn fifo_mode_preserves_arrival_order_across_jobs() {
+        let mut r = ReadySet::new(false, 0, vec![]);
+        let base = JobId(1).base();
+        r.push(instr(0), Lane::Inline);
+        r.push(instr(base), Lane::Inline);
+        r.push(instr(1), Lane::Inline);
+        let order: Vec<u64> = std::iter::from_fn(|| r.next()).map(|e| e.0.id.0).collect();
+        assert_eq!(order, vec![0, base, 1]);
+    }
+
+    #[test]
+    fn fifo_mode_head_of_line_blocks_at_limit() {
+        let mut r = ReadySet::new(false, 1, vec![]);
+        r.push(instr(0), Lane::Inline);
+        r.push(instr(1), Lane::Inline);
+        r.push(instr(JobId(1).base()), Lane::Inline);
+        let first = r.next().unwrap();
+        // Job 0 capped at the head blocks job 1 behind it — the ablation's
+        // whole point.
+        assert!(r.next().is_none());
+        r.on_retire(first.0.id);
+        assert_eq!(r.next().unwrap().0.id.0, 1);
+    }
+}

@@ -9,6 +9,8 @@
 pub mod arbitration;
 pub mod arena;
 pub mod collective;
+pub mod events;
+pub mod fair;
 pub mod heartbeat;
 pub mod lanes;
 pub mod ooo;
@@ -16,6 +18,8 @@ pub mod ooo;
 pub use arbitration::ReceiveArbiter;
 pub use arena::{copy_between, AllocBuf, Arena};
 pub use collective::CollectiveEngine;
+pub use events::{EventHub, EventRoute};
+pub use fair::ReadySet;
 pub use heartbeat::{HeartbeatConfig, HeartbeatMonitor};
 pub use ooo::{Lane, OooEngine};
 
@@ -26,9 +30,9 @@ use crate::instruction::{AccessBinding, InstructionKind, InstructionRef};
 use crate::scheduler::SchedulerOut;
 use crate::task::EpochAction;
 use crate::trace;
-use crate::util::{spsc, InstructionId, NodeId};
+use crate::util::{spsc, InstructionId, JobId, NodeId};
 use lanes::{Job, LanePool};
-use std::collections::{HashMap, VecDeque};
+use std::collections::HashMap;
 use std::sync::mpsc;
 use std::sync::Arc;
 
@@ -211,6 +215,15 @@ pub struct ExecutorConfig {
     /// it — the right default in-process, where a "dead peer" is a panic
     /// the driver already surfaces.
     pub heartbeat: Option<HeartbeatConfig>,
+    /// Weighted round-robin dispatch across jobs (multi-tenant clusters).
+    /// `false` degrades to a single global FIFO — the fairness ablation.
+    pub fair_share: bool,
+    /// Per-job cap on dispatched-but-not-retired instructions; 0 means
+    /// unlimited.
+    pub admission_limit: usize,
+    /// Per-job round-robin weights, indexed by job id; missing entries
+    /// default to 1.
+    pub job_weights: Vec<u32>,
 }
 
 impl Default for ExecutorConfig {
@@ -220,12 +233,18 @@ impl Default for ExecutorConfig {
             host_lanes: 4,
             registry: Registry::new(),
             heartbeat: None,
+            fair_share: true,
+            admission_limit: 0,
+            job_weights: Vec::new(),
         }
     }
 }
 
-/// Events surfaced to the main thread.
-#[derive(Debug)]
+/// Events surfaced to the main thread. Every event is emitted with an
+/// [`EventRoute`] naming the job it belongs to (or the whole cluster), and
+/// the [`EventHub`] delivers it only to that job's consumers — one job's
+/// error must never fail another job's fence.
+#[derive(Debug, Clone)]
 pub enum ExecEvent {
     /// An epoch instruction retired (barrier/shutdown reached).
     Epoch(EpochAction, InstructionId),
@@ -259,14 +278,17 @@ pub struct Executor {
     arena: Arena,
     lanes: LanePool,
     lane_completions: mpsc::Receiver<InstructionId>,
-    events: mpsc::Sender<ExecEvent>,
-    ready: VecDeque<(InstructionRef, Lane)>,
-    shutting_down: bool,
+    events: mpsc::Sender<(EventRoute, ExecEvent)>,
+    ready: ReadySet,
     monitor: Option<HeartbeatMonitor>,
 }
 
 impl Executor {
-    pub fn new(cfg: ExecutorConfig, comm: CommRef, events: mpsc::Sender<ExecEvent>) -> Executor {
+    pub fn new(
+        cfg: ExecutorConfig,
+        comm: CommRef,
+        events: mpsc::Sender<(EventRoute, ExecEvent)>,
+    ) -> Executor {
         let (ctx, crx) = mpsc::channel();
         let node = cfg.node.0;
         // Liveness monitoring only makes sense with actual peers.
@@ -281,18 +303,23 @@ impl Executor {
             arena: Arena::new(),
             lanes: LanePool::new(ctx, node),
             lane_completions: crx,
+            ready: ReadySet::new(cfg.fair_share, cfg.admission_limit, cfg.job_weights.clone()),
             cfg,
             comm,
             events,
-            ready: VecDeque::new(),
-            shutting_down: false,
             monitor,
         }
     }
 
+    fn emit(&self, route: EventRoute, ev: ExecEvent) {
+        let _ = self.events.send((route, ev));
+    }
+
     /// Main loop: poll inputs, retire completions, dispatch ready
-    /// instructions; returns when the shutdown epoch has retired and all
-    /// work is drained.
+    /// instructions; returns when the scheduler has hung up and all work is
+    /// drained. A job's shutdown epoch does *not* stop the loop — other
+    /// jobs sharing this executor may still be running; the scheduler
+    /// thread closing the inbox is the cluster-wide shutdown signal.
     pub fn run_to_shutdown(mut self, inbox: spsc::Receiver<SchedulerOut>) -> ExecutorStats {
         let mut idle_spins = 0u32;
         let mut inbox_open = true;
@@ -323,9 +350,10 @@ impl Executor {
                             progressed = true;
                             // §4.4 scheduler errors (e.g. overlapping
                             // writes) surface through the same event stream
-                            // as executor errors.
+                            // as executor errors, attributed to the job
+                            // whose compilation raised them.
                             for e in batch.errors {
-                                let _ = self.events.send(ExecEvent::Error(e));
+                                self.emit(EventRoute::Job(batch.job), ExecEvent::Error(e));
                             }
                             for init in batch.user_inits {
                                 self.arena.init_user(
@@ -339,8 +367,8 @@ impl Executor {
                                 self.comm.send_pilot(p);
                             }
                             for i in batch.instructions {
-                                if let Some(r) = self.ooo.admit(i) {
-                                    self.ready.push_back(r);
+                                if let Some((instr, lane)) = self.ooo.admit(i) {
+                                    self.ready.push(instr, lane);
                                 }
                             }
                         }
@@ -426,10 +454,11 @@ impl Executor {
                         // Non-fatal: the fabric repaired or contained it
                         // (CRC reject + retransmit, reconnect, dedup).
                         // Report for observability without failing the run.
-                        let _ = self.events.send(ExecEvent::Fault(format!(
-                            "[{}] {detail}",
-                            kind.name()
-                        )));
+                        // Link-level, so no single job owns it: broadcast.
+                        self.emit(
+                            EventRoute::Cluster,
+                            ExecEvent::Fault(format!("[{}] {detail}", kind.name())),
+                        );
                     }
                 }
             }
@@ -464,8 +493,11 @@ impl Executor {
                 self.finish(id);
             }
 
-            // 4. Dispatch everything issuable.
-            while let Some((instr, lane)) = self.ready.pop_front() {
+            // 4. Dispatch everything issuable, arbitrated per job
+            // (weighted round-robin + admission limits); entries held back
+            // by an admission cap stay queued and re-arm when their job's
+            // in-flight instructions retire.
+            while let Some((instr, lane)) = self.ready.next() {
                 progressed = true;
                 self.dispatch(instr, lane);
             }
@@ -475,12 +507,8 @@ impl Executor {
             // than killing the executor thread.
             self.drain_engine_errors();
 
-            if self.shutting_down && self.ooo.is_drained() {
-                break;
-            }
             if !inbox_open && self.ooo.is_drained() && self.ready.is_empty() {
-                // Scheduler gone and nothing pending: done (programs without
-                // an explicit shutdown epoch).
+                // Scheduler hung up and nothing pending: every job drained.
                 break;
             }
 
@@ -511,7 +539,7 @@ impl Executor {
                         self.arbiter.debug_state(),
                         self.collectives.debug_state()
                     );
-                    let _ = self.events.send(ExecEvent::Error(msg));
+                    self.emit(EventRoute::Cluster, ExecEvent::Error(msg));
                 }
                 // Polling loop etiquette: spin briefly, then yield, then
                 // sleep — idle executors must not starve worker lanes on
@@ -550,15 +578,23 @@ impl Executor {
 
     /// Retire `id` and queue newly-ready dependents. The single retirement
     /// point: every completion path (inline, lane, arbiter, collective)
-    /// funnels through here so the trace sees each retire exactly once.
+    /// funnels through here so the trace sees each retire exactly once and
+    /// admission accounting stays balanced (spurious completions, which the
+    /// engine rejects, must not release admission slots).
     fn finish(&mut self, id: InstructionId) {
         trace::instant(
             self.cfg.node.0,
             trace::Track::Executor,
             trace::EventKind::Retire { instr: id.0 },
         );
+        let retired_before = self.ooo.retired;
         let newly = self.ooo.retire(id);
-        self.ready.extend(newly);
+        if self.ooo.retired > retired_before {
+            self.ready.on_retire(id);
+        }
+        for (instr, lane) in newly {
+            self.ready.push(instr, lane);
+        }
     }
 
     /// Unrecoverable peer loss (heartbeat timeout or escalated comm
@@ -567,20 +603,23 @@ impl Executor {
     /// waits observe failures instead of hanging forever (graceful
     /// degradation, §ISSUE: "drain lanes and fail pending receives").
     fn abort_unreachable(&mut self, peer: NodeId, err: String) {
-        let _ = self.events.send(ExecEvent::Error(err));
+        // A dead peer dooms every job's pending receives: broadcast.
+        self.emit(EventRoute::Cluster, ExecEvent::Error(err));
         self.arbiter
             .fail_all(&format!("node {} is unreachable", peer.0));
         self.drain_engine_errors();
     }
 
     /// Forward tolerated engine anomalies (OoO spurious completions,
-    /// arbiter payloads for retired receives) to the event stream.
+    /// arbiter payloads for retired receives) to the event stream. These
+    /// indicate executor-level protocol confusion rather than one job's
+    /// misbehaviour, so they are broadcast cluster-wide.
     fn drain_engine_errors(&mut self) {
         for e in self.ooo.take_errors() {
-            let _ = self.events.send(ExecEvent::Error(e));
+            self.emit(EventRoute::Cluster, ExecEvent::Error(e));
         }
         for e in self.arbiter.take_errors() {
-            let _ = self.events.send(ExecEvent::Error(e));
+            self.emit(EventRoute::Cluster, ExecEvent::Error(e));
         }
     }
 
@@ -627,10 +666,10 @@ impl Executor {
                 self.ooo.compact_below(id);
             }
             InstructionKind::Epoch(action) => {
-                if *action == EpochAction::Shutdown {
-                    self.shutting_down = true;
-                }
-                let _ = self.events.send(ExecEvent::Epoch(*action, id));
+                // Routed to the owning job: a shutdown epoch ends *that
+                // job*, not the executor — the loop exits when the
+                // scheduler closes the inbox and all jobs are drained.
+                self.emit(EventRoute::Job(JobId::of(id.0)), ExecEvent::Epoch(*action, id));
                 self.finish(id);
             }
 
@@ -727,11 +766,15 @@ impl Executor {
         host: bool,
     ) {
         let mnemonic = if host { "host task" } else { "device kernel" };
+        let job = JobId::of(id.0);
         let Some(f) = self.cfg.registry.lookup(name, host) else {
-            let _ = self.events.send(ExecEvent::Error(format!(
-                "no {} registered under '{name}'; treating as no-op",
-                if host { "host task" } else { "kernel" }
-            )));
+            self.emit(
+                EventRoute::Job(job),
+                ExecEvent::Error(format!(
+                    "no {} registered under '{name}'; treating as no-op",
+                    if host { "host task" } else { "kernel" }
+                )),
+            );
             // Still execute as a no-op through the lane to preserve ordering.
             let job = traced_job(self.cfg.node.0, lane, mnemonic, id, Box::new(|| {}));
             self.lanes.submit(lane, job);
@@ -749,13 +792,16 @@ impl Executor {
                 let ctx = KernelCtx { chunk, views };
                 f(&ctx);
                 // §4.4 accessor bounds checking: report after the kernel
-                // exits.
+                // exits, attributed to the job the instruction belongs to.
                 for v in &ctx.views {
                     if let Some((lo, hi)) = v.oob.get() {
-                        let _ = events.send(ExecEvent::Error(format!(
-                            "kernel '{label}': out-of-bounds access on buffer {} within [{lo} - {hi}], permitted region {}",
-                            v.binding.buffer, v.binding.region
-                        )));
+                        let _ = events.send((
+                            EventRoute::Job(job),
+                            ExecEvent::Error(format!(
+                                "kernel '{label}': out-of-bounds access on buffer {} within [{lo} - {hi}], permitted region {}",
+                                v.binding.buffer, v.binding.region
+                            )),
+                        ));
                     }
                 }
             }),
@@ -818,8 +864,8 @@ fn traced_job(
 /// Handle to a running executor thread.
 pub struct ExecutorHandle {
     join: std::thread::JoinHandle<ExecutorStats>,
-    /// Event stream (epochs, errors).
-    pub events: mpsc::Receiver<ExecEvent>,
+    /// Demultiplexed event stream (epochs, errors): clone per job consumer.
+    pub events: EventHub,
 }
 
 impl ExecutorHandle {
@@ -834,19 +880,13 @@ impl ExecutorHandle {
             .name(format!("celerity-exec-{node}"))
             .spawn(move || Executor::new(cfg, comm, etx).run_to_shutdown(inbox))
             .expect("spawn executor thread");
-        ExecutorHandle { join, events: erx }
+        ExecutorHandle { join, events: EventHub::new(erx) }
     }
 
-    /// Block until an epoch of `action` is reported.
+    /// Block until job 0 (the single-tenant default) reports an epoch of
+    /// `action`. Multi-job consumers use [`EventHub::wait_epoch`] directly.
     pub fn wait_epoch(&self, action: EpochAction) -> Vec<ExecEvent> {
-        let mut side = Vec::new();
-        loop {
-            match self.events.recv() {
-                Ok(ExecEvent::Epoch(a, _)) if a == action => return side,
-                Ok(ev) => side.push(ev),
-                Err(_) => return side,
-            }
-        }
+        self.events.wait_epoch(JobId(0), action)
     }
 
     pub fn join(self) -> ExecutorStats {
@@ -941,10 +981,10 @@ mod tests {
         );
         for t in &tasks {
             let (instructions, pilots) = sched.process(t);
-            tx.send(SchedulerOut::batch(instructions, pilots)).unwrap();
+            tx.send(SchedulerOut::batch(JobId(0), instructions, pilots)).unwrap();
         }
         let (instructions, pilots) = sched.flush_now();
-        tx.send(SchedulerOut::batch(instructions, pilots)).unwrap();
+        tx.send(SchedulerOut::batch(JobId(0), instructions, pilots)).unwrap();
         drop(tx);
 
         let side = exec.wait_epoch(EpochAction::Shutdown);
@@ -993,10 +1033,10 @@ mod tests {
         );
         for t in &tasks {
             let (instructions, pilots) = sched.process(t);
-            tx.send(SchedulerOut::batch(instructions, pilots)).unwrap();
+            tx.send(SchedulerOut::batch(JobId(0), instructions, pilots)).unwrap();
         }
         let (instructions, pilots) = sched.flush_now();
-        tx.send(SchedulerOut::batch(instructions, pilots)).unwrap();
+        tx.send(SchedulerOut::batch(JobId(0), instructions, pilots)).unwrap();
         drop(tx);
         let side = exec.wait_epoch(EpochAction::Shutdown);
         exec.join();

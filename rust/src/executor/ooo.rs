@@ -9,7 +9,7 @@
 //! the same single in-order queue or host thread."
 
 use crate::instruction::{InstructionKind, InstructionRef};
-use crate::util::{DeviceId, InstructionId, MemoryId};
+use crate::util::{DeviceId, InstructionId, JobId, MemoryId};
 use std::collections::{HashMap, HashSet};
 
 /// The backend queue an instruction is issued to. Device queues and host
@@ -90,10 +90,14 @@ pub struct OooEngine {
     waiting: HashMap<u64, Waiting>,
     /// dep id → ids of waiting instructions blocked on it.
     waiters: HashMap<u64, Vec<u64>>,
-    /// Completed instruction ids ≥ watermark; everything below the
-    /// watermark is complete (horizon compaction).
+    /// Completed instruction ids ≥ their job's watermark; within a job's
+    /// id namespace everything below that job's watermark is complete
+    /// (horizon compaction). Watermarks are per job: instruction ids carry
+    /// the job tag in their high bits, and a horizon only fences the
+    /// execution front of the job that emitted it — a single global
+    /// watermark would falsely complete every lower-numbered job's ids.
     completed: HashSet<u64>,
-    watermark: u64,
+    watermarks: HashMap<u64, u64>,
     /// Lane an instruction is currently issued-but-not-retired on (the
     /// eager-assignment lookup).
     in_flight: HashMap<u64, Lane>,
@@ -115,7 +119,7 @@ impl OooEngine {
             waiting: HashMap::new(),
             waiters: HashMap::new(),
             completed: HashSet::new(),
-            watermark: 0,
+            watermarks: HashMap::new(),
             in_flight: HashMap::new(),
             issued_direct: 0,
             issued_eager: 0,
@@ -131,7 +135,8 @@ impl OooEngine {
     }
 
     fn is_complete(&self, id: u64) -> bool {
-        id < self.watermark || self.completed.contains(&id)
+        let watermark = self.watermarks.get(&JobId::of(id).0).copied().unwrap_or(0);
+        id < watermark || self.completed.contains(&id)
     }
 
     /// Feed a new instruction; returns it (with lane) if issuable now.
@@ -220,11 +225,15 @@ impl OooEngine {
     }
 
     /// Horizon-based compaction: when a horizon instruction retires, every
-    /// id below it is transitively complete (a horizon depends on the whole
-    /// execution front).
+    /// id below it *in the same job's namespace* is transitively complete
+    /// (a horizon depends on that job's whole execution front). Other jobs'
+    /// completion sets are untouched.
     pub fn compact_below(&mut self, horizon: InstructionId) {
-        self.watermark = self.watermark.max(horizon.0);
-        self.completed.retain(|id| *id >= self.watermark);
+        let job = JobId::of(horizon.0);
+        let wm = self.watermarks.entry(job.0).or_insert(0);
+        *wm = (*wm).max(horizon.0);
+        let wm = *wm;
+        self.completed.retain(|id| JobId::of(*id) != job || *id >= wm);
     }
 
     /// Number of instructions admitted but not yet issuable.
@@ -425,6 +434,40 @@ mod tests {
         // Later instructions with deps below the watermark admit directly.
         assert!(e.admit(kernel(11, 0, &[3, 7])).is_some());
         assert!(e.completed.len() <= 2);
+    }
+
+    /// A horizon from one job must not mark another job's in-flight or
+    /// future instructions complete: watermarks are per job-namespace.
+    #[test]
+    fn compaction_is_job_scoped() {
+        let mut e = OooEngine::new(2);
+        let base = JobId(1).base();
+        // Job 0 runs a few instructions and a horizon well above job-0 ids
+        // would sit *below* job-1's namespace start.
+        for i in 0..4 {
+            e.admit(kernel(i, 0, &[])).unwrap();
+            e.retire(InstructionId(i));
+        }
+        e.admit(horizon(4, &[3])).unwrap();
+        e.retire(InstructionId(4));
+        e.compact_below(InstructionId(4));
+        // Job 1's first instruction has an unmet dep inside job 1: it must
+        // NOT admit directly even though its dep id is far above job 0's
+        // watermark — and conversely job-1 compaction must not complete it.
+        assert!(e.admit(kernel(base + 1, 1, &[base])).is_none());
+        // Job 1 retires its dep, runs a horizon, compacts.
+        e.admit(kernel(base, 0, &[])).unwrap();
+        let ready = e.retire(InstructionId(base));
+        assert_eq!(ready.len(), 1);
+        e.retire(InstructionId(base + 1));
+        e.admit(horizon(base + 2, &[base + 1])).unwrap();
+        e.retire(InstructionId(base + 2));
+        e.compact_below(InstructionId(base + 2));
+        // Job 1 ids below its watermark are complete; job 0's namespace is
+        // untouched (id 5 was never run → still incomplete).
+        assert!(e.admit(kernel(base + 3, 0, &[base, base + 1])).is_some());
+        assert!(e.admit(kernel(6, 1, &[5])).is_none());
+        assert!(e.take_errors().is_empty());
     }
 
     /// Satellite regression: a double completion used to trip a debug

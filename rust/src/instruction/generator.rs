@@ -23,7 +23,7 @@ use crate::dag::{Dag, Dep, DepKind};
 use crate::grid::{GridBox, Region, RegionMap};
 use crate::task::{EpochAction, TaskKind, TaskRef};
 use crate::util::{
-    AllocationId, BufferId, DeviceId, InstructionId, MemoryId, MessageId, NodeId, TaskId,
+    AllocationId, BufferId, DeviceId, InstructionId, JobId, MemoryId, MessageId, NodeId, TaskId,
 };
 use std::collections::HashMap;
 
@@ -142,19 +142,29 @@ pub struct IdagGenerator {
 
 impl IdagGenerator {
     pub fn new(cfg: IdagConfig, buffers: BufferPool) -> Self {
+        Self::with_job(JobId(0), cfg, buffers)
+    }
+
+    /// Generator whose instruction, allocation and message ids live in
+    /// `job`'s namespace. Message-id tagging is what keeps p2p/collective
+    /// traffic of concurrent jobs from cross-matching during receive
+    /// arbitration: pilot frames carry the full tagged u64, so two jobs'
+    /// transfers of the same buffer region can never be confused.
+    pub fn with_job(job: JobId, cfg: IdagConfig, buffers: BufferPool) -> Self {
         // 2 host memories + devices must fit the 64-bit coherence MemMask.
         assert!(cfg.num_devices >= 1 && cfg.num_devices <= 62);
+        let base = job.base();
         IdagGenerator {
             cfg,
             buffers,
             states: HashMap::new(),
-            dag: Dag::new(),
+            dag: Dag::with_base(base),
             outbox: Vec::new(),
             pilots: Vec::new(),
             alloc_users: HashMap::new(),
             announced: HashMap::new(),
-            next_alloc: 1,
-            next_msg: 1,
+            next_alloc: base + 1,
+            next_msg: base + 1,
             current_horizon: None,
             last_epoch: None,
             errors: Vec::new(),

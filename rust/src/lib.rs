@@ -50,9 +50,13 @@
 //!   device-resident data in place, receives land in the consuming
 //!   device's allocation; the pinned-host M1 detour is the fallback and
 //!   the `--no-direct-comm` ablation)
-//! - [`scheduler`] — scheduler thread with lookahead / resize elision (§4.3)
+//! - [`scheduler`] — scheduler thread with lookahead / resize elision
+//!   (§4.3); one compiler core per tenant job, interleaved in bounded
+//!   batches so no job's compilation stream starves another's
 //! - [`executor`] — out-of-order engine, receive arbitration, collective
-//!   ring engine, baseline (§4.1–4.2)
+//!   ring engine, baseline (§4.1–4.2); multi-tenant dispatch arbitration
+//!   ([`executor::ReadySet`]: weighted round-robin + admission limits) and
+//!   per-job event routing ([`executor::EventHub`])
 //! - [`comm`] — the p2p subsystem: the [`Communicator`](comm::Communicator)
 //!   trait, the in-process [`ChannelWorld`](comm::ChannelWorld), the
 //!   loopback/cross-process [`TcpWorld`](comm::TcpWorld) with its
@@ -65,14 +69,18 @@
 //!   the TCP fabric consults below its recovery layer, and the
 //!   message-level [`FaultyCommunicator`](fault::FaultyCommunicator)
 //!   wrapper for the channel fabric
-//! - [`driver`] — the typed [`Queue`](driver::Queue), the in-process SPMD
-//!   cluster runner ([`run_cluster`](driver::run_cluster)) and the
+//! - [`driver`] — the multi-tenant [`Cluster`](driver::Cluster) handle
+//!   (one node's scheduler/executor stack, handing out one typed
+//!   [`Queue`](driver::Queue) per concurrent job), the in-process SPMD
+//!   cluster runners ([`run_cluster`](driver::run_cluster) single-tenant,
+//!   [`run_cluster_jobs`](driver::run_cluster_jobs) multi-tenant) and the
 //!   per-process entry point ([`run_node`](driver::run_node)) used by
 //!   `celerity worker` for multi-process TCP clusters
 //! - [`trace`] — low-overhead event timeline (thread-local buffers behind
 //!   one atomic gate) recording scheduler compile batches and per-lane
 //!   issue/exec/retire; exports Chrome-tracing JSON
-//!   ([`trace::chrome`]), a Graphviz DAG with critical-path annotation
+//!   ([`trace::chrome`], multi-tenant instructions annotated with their
+//!   job), a Graphviz DAG with critical-path annotation
 //!   ([`trace::dot`]), and the `scheduler_lag` concurrency metric
 //! - [`launch`] — multi-process orchestration behind `celerity launch`:
 //!   port allocation, worker spawning/rendezvous, prefixed log streaming,

@@ -3,7 +3,7 @@
 //! ```text
 //! celerity graph  --app nbody --nodes 2 --devices 2 --dump tdag,cdag,idag
 //! celerity sim    --app rsim  --nodes 8 --devices 4 [--baseline] [--no-lookahead]
-//! celerity run    --app wavesim --nodes 4 --transport tcp|channel [--trace out.json]
+//! celerity run    --app wavesim --nodes 4 --transport tcp|channel [--jobs 2] [--trace out.json]
 //! celerity worker --app wavesim --node 1 --peers 127.0.0.1:7700,127.0.0.1:7701
 //! celerity launch -n 4 -- nbody --steps 4
 //! ```
@@ -24,7 +24,7 @@
 use celerity::apps;
 use celerity::command::{CdagGenerator, SplitHint};
 use celerity::comm::{CommRef, TcpCommunicator, Transport};
-use celerity::driver::{run_node, try_run_cluster, ClusterConfig, Queue};
+use celerity::driver::{run_cluster_jobs, run_node, try_run_cluster, ClusterConfig, JobProgram, Queue};
 use celerity::grid::{GridBox, Range, Region};
 use celerity::instruction::{IdagConfig, IdagGenerator};
 use celerity::launch::{self, LaunchConfig};
@@ -282,32 +282,57 @@ fn main() {
                     eprintln!("unknown transport (expected channel|tcp)");
                     std::process::exit(2);
                 });
+            let jobs: u64 = num_arg(&args, "--jobs", "1");
+            if jobs == 0 {
+                eprintln!("celerity run: --jobs must be at least 1");
+                std::process::exit(2);
+            }
             let trace_json = opt_arg(&args, "--trace");
             let trace_dot = opt_arg(&args, "--trace-dot");
             if trace_json.is_some() || trace_dot.is_some() {
                 trace::enable();
             }
-            let cfg = ClusterConfig {
-                num_nodes: nodes,
-                num_devices: devices,
-                registry: apps::reference_registry(),
-                transport,
-                collectives,
-                direct_comm,
-                heartbeat_timeout_ms: opt_num_arg(&args, "--heartbeat-timeout"),
-                fault_plan: fault_plan_arg(&args),
-                ..Default::default()
-            };
-            let digests: Arc<Mutex<Vec<(u64, u64)>>> = Arc::new(Mutex::new(Vec::new()));
-            let dc = digests.clone();
-            let app_c = app.clone();
+            let cfg = ClusterConfig::builder()
+                .num_nodes(nodes)
+                .num_devices(devices)
+                .registry(apps::reference_registry())
+                .transport(transport)
+                .collectives(collectives)
+                .direct_comm(direct_comm)
+                .heartbeat_timeout_ms(opt_num_arg(&args, "--heartbeat-timeout"))
+                .fault_plan(fault_plan_arg(&args))
+                .fair_share(!args.iter().any(|a| a == "--no-fair-share"))
+                .admission_limit(num_arg(&args, "--admission-limit", "0") as usize)
+                .build();
+            // (job, node, digest): sorted at the end so per-job digest rows
+            // come out in a deterministic order regardless of thread timing.
+            let digests: Arc<Mutex<Vec<(u64, u64, u64)>>> = Arc::new(Mutex::new(Vec::new()));
             let t0 = std::time::Instant::now();
-            let reports = match try_run_cluster(cfg, move |q| {
-                match run_live_app(q, &app_c, steps) {
-                    Ok(bytes) => dc.lock().unwrap().push((q.node.0, digest(&bytes))),
+            let result = if jobs > 1 {
+                // Multi-tenant: `--jobs N` runs N concurrent instances of
+                // the app as jobs of one shared cluster per node.
+                let programs: Vec<JobProgram> = (0..jobs)
+                    .map(|_| {
+                        let dc = digests.clone();
+                        let app_c = app.clone();
+                        Arc::new(move |q: &mut Queue| match run_live_app(q, &app_c, steps) {
+                            Ok(bytes) => {
+                                dc.lock().unwrap().push((q.job().0, q.node.0, digest(&bytes)))
+                            }
+                            Err(e) => eprintln!("node {} job {} failed: {e}", q.node, q.job()),
+                        }) as JobProgram
+                    })
+                    .collect();
+                run_cluster_jobs(cfg, programs)
+            } else {
+                let dc = digests.clone();
+                let app_c = app.clone();
+                try_run_cluster(cfg, move |q| match run_live_app(q, &app_c, steps) {
+                    Ok(bytes) => dc.lock().unwrap().push((0, q.node.0, digest(&bytes))),
                     Err(e) => eprintln!("node {} failed: {e}", q.node),
-                }
-            }) {
+                })
+            };
+            let reports = match result {
                 Ok(r) => r,
                 Err(e) => {
                     eprintln!("celerity run: cannot bring up the {} transport: {e}", transport.name());
@@ -316,20 +341,37 @@ fn main() {
             };
             let wall = t0.elapsed().as_secs_f64();
             for r in &reports {
-                for e in &r.errors {
-                    eprintln!("node {} error: {e}", r.node);
+                for jr in &r.jobs {
+                    for e in &jr.errors {
+                        if jobs > 1 {
+                            eprintln!("node {} job {} error: {e}", r.node, jr.job);
+                        } else {
+                            eprintln!("node {} error: {e}", r.node);
+                        }
+                    }
                 }
                 report_faults(r.node, &r.faults);
             }
             let mut digests = digests.lock().unwrap().clone();
             digests.sort();
-            for (node, d) in &digests {
-                println!("{}", launch::digest_marker(NodeId(*node), *d));
+            for (job, node, d) in &digests {
+                if jobs > 1 {
+                    println!("job {job} {}", launch::digest_marker(NodeId(*node), *d));
+                } else {
+                    println!("{}", launch::digest_marker(NodeId(*node), *d));
+                }
             }
-            let complete = digests.len() as u64 == nodes;
-            let agree = complete && digests.windows(2).all(|w| w[0].1 == w[1].1);
+            let complete = digests.len() as u64 == nodes * jobs;
+            // Every job's digest must agree across all nodes (jobs may of
+            // course differ from each other).
+            let agree = complete
+                && (0..jobs).all(|j| {
+                    let mut per_job = digests.iter().filter(|(job, _, _)| *job == j);
+                    let first = per_job.next().map(|t| t.2);
+                    per_job.all(|t| Some(t.2) == first)
+                });
             println!(
-                "app={app} nodes={nodes} devices={devices} steps={steps} transport={} wall={wall:.3}s digests_agree={agree}",
+                "app={app} nodes={nodes} devices={devices} steps={steps} jobs={jobs} transport={} wall={wall:.3}s digests_agree={agree}",
                 transport.name()
             );
             if let Some(p) = &trace_json {
@@ -402,16 +444,15 @@ fn main() {
                 // ack-stall nudge): an active chaos plan forces liveness on.
                 heartbeat_timeout_ms = Some(launch::DEFAULT_HEARTBEAT_TIMEOUT_MS);
             }
-            let cfg = ClusterConfig {
-                num_nodes: peers.len() as u64,
-                num_devices: devices,
-                registry: apps::reference_registry(),
-                transport: Transport::Tcp,
-                collectives,
-                direct_comm,
-                heartbeat_timeout_ms,
-                ..Default::default()
-            };
+            let cfg = ClusterConfig::builder()
+                .num_nodes(peers.len() as u64)
+                .num_devices(devices)
+                .registry(apps::reference_registry())
+                .transport(Transport::Tcp)
+                .collectives(collectives)
+                .direct_comm(direct_comm)
+                .heartbeat_timeout_ms(heartbeat_timeout_ms)
+                .build();
             let bind_addr = peers[node.0 as usize];
             let comm: CommRef = match TcpCommunicator::bind(node, peers) {
                 Ok(mut c) => {
@@ -541,7 +582,7 @@ fn main() {
             println!("usage: celerity graph|sim|run|worker|launch --app nbody|rsim|wavesim [--nodes N] [--devices D] [--steps S]");
             println!("  graph:  --dump tdag,cdag,idag   (Graphviz dot on stdout)");
             println!("  sim:    [--baseline] [--no-lookahead] [--no-direct-comm]");
-            println!("  run:    [--transport channel|tcp] [--no-collectives] [--no-direct-comm] [--trace out.json] [--trace-dot out.dot] [--heartbeat-timeout MS] [--fault-plan \"seed=7 drop=0.01 ...\"]   (live in-process cluster)");
+            println!("  run:    [--transport channel|tcp] [--jobs N] [--no-fair-share] [--admission-limit N] [--no-collectives] [--no-direct-comm] [--trace out.json] [--trace-dot out.dot] [--heartbeat-timeout MS] [--fault-plan \"seed=7 drop=0.01 ...\"]   (live in-process cluster; --jobs N runs N concurrent tenant jobs)");
             println!("  worker: --node I --peers a:p[,b:p,...] [--heartbeat-timeout MS] [--trace out.json] [--no-collectives] [--no-direct-comm] [--fault-plan PLAN]   (one node of a multi-process TCP cluster; a single address is a valid 1-node run)");
             println!("  launch: -n N [--heartbeat-timeout MS] [--trace base] [--fault-plan PLAN] [--no-fail-fast] [--fail-fast-grace MS] -- <app> [worker args...]   (spawn N worker processes, stream logs, cross-check digests)");
             println!("  fault plans: seed=N drop=P dup=P corrupt=P delay=LO..HIms break=nodeN@frameM kill=nodeN@frameM (CELERITY_FAULT_PLAN env fallback)");

@@ -22,12 +22,17 @@ use crate::command::{CdagGenerator, CommandKind, CommandRef, SplitHint};
 use crate::grid::GridBox;
 use crate::instruction::{IdagConfig, IdagGenerator, InstructionRef, Pilot};
 use crate::task::TaskRef;
-use crate::util::{BufferId, MemoryId, NodeId};
+use crate::util::{BufferId, JobId, MemoryId, NodeId};
 use std::collections::{HashMap, VecDeque};
 
 /// Scheduler configuration.
 #[derive(Debug, Clone)]
 pub struct SchedulerConfig {
+    /// The job this scheduler core compiles for. Multi-tenant clusters run
+    /// one core per job inside the shared scheduler thread; the job id
+    /// namespaces every command/instruction/allocation/message id the core
+    /// emits. Job 0 is the single-tenant default.
+    pub job: JobId,
     pub node: NodeId,
     pub num_nodes: u64,
     pub num_devices: u64,
@@ -55,6 +60,7 @@ pub struct SchedulerConfig {
 impl Default for SchedulerConfig {
     fn default() -> Self {
         SchedulerConfig {
+            job: JobId(0),
             node: NodeId(0),
             num_nodes: 1,
             num_devices: 1,
@@ -97,9 +103,16 @@ pub struct Scheduler {
 
 impl Scheduler {
     pub fn new(cfg: SchedulerConfig, buffers: BufferPool) -> Self {
-        let mut cdag = CdagGenerator::new(cfg.node, cfg.num_nodes, cfg.node_hint, buffers.clone());
+        let mut cdag = CdagGenerator::with_job(
+            cfg.job,
+            cfg.node,
+            cfg.num_nodes,
+            cfg.node_hint,
+            buffers.clone(),
+        );
         cdag.set_collectives(cfg.collectives);
-        let idag = IdagGenerator::new(
+        let idag = IdagGenerator::with_job(
+            cfg.job,
             IdagConfig {
                 node: cfg.node,
                 num_nodes: cfg.num_nodes,
@@ -184,6 +197,11 @@ impl Scheduler {
 
     pub fn idag(&self) -> &IdagGenerator {
         &self.idag
+    }
+
+    /// The job this core compiles for.
+    pub fn job(&self) -> JobId {
+        self.cfg.job
     }
 
     pub fn cdag(&self) -> &CdagGenerator {

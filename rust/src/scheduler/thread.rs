@@ -1,11 +1,21 @@
-//! The dedicated scheduler thread (Fig 5).
+//! The dedicated scheduler thread (Fig 5), shared by all jobs of a cluster.
+//!
+//! Multi-tenant operation: the thread owns one [`Scheduler`] core *per job*
+//! and interleaves compilation across them. Messages arrive over a shared
+//! mpsc inbox tagged with the originating [`JobId`]; per-wakeup task batches
+//! are capped (and never span jobs), so a heavy job's compile backlog cannot
+//! monopolize the thread — other jobs' tasks are compiled within one batch
+//! window. Every [`SchedulerOut`] batch carries its job so the executor can
+//! attribute errors and epochs to the right fence.
 
 use super::{Scheduler, SchedulerConfig};
 use crate::buffer::BufferPool;
 use crate::grid::GridBox;
 use crate::instruction::{InstructionRef, Pilot};
 use crate::task::TaskRef;
-use crate::util::{spsc, AllocationId};
+use crate::util::{spsc, AllocationId, JobId};
+use std::collections::HashMap;
+use std::sync::mpsc;
 use std::thread::JoinHandle;
 
 /// Host-initialized buffer contents, materialized in the executor's arena
@@ -20,31 +30,41 @@ pub struct UserInit {
     pub bytes: Vec<u8>,
 }
 
-/// Messages from the main thread to the scheduler thread.
+/// Messages from the main thread(s) to the scheduler thread. Each message
+/// is sent as a `(JobId, SchedulerMsg)` pair; the per-job scheduler core is
+/// created lazily on the job's first message.
 pub enum SchedulerMsg {
-    /// A buffer was created; snapshot of the updated pool.
+    /// A buffer was created; snapshot of the job's updated pool.
     Buffers(BufferPool),
     /// Host-initialized buffer contents to forward to the executor.
     UserData(UserInit),
     /// A new task reference (user task, horizon or epoch).
     Task(TaskRef),
-    /// Drain everything and exit.
+    /// Drain this job's queue and retire its scheduler core. The thread
+    /// keeps running for other jobs; it exits when every sender is gone.
     Shutdown,
 }
 
 /// Output of the scheduler thread, consumed by the executor thread.
 pub struct SchedulerOut {
+    /// The job this batch belongs to. Instruction/pilot ids are tagged with
+    /// the same job in their high bits; the explicit field spares the
+    /// executor from deriving it and covers instruction-free batches
+    /// (user inits, pure error batches).
+    pub job: JobId,
     pub instructions: Vec<InstructionRef>,
     pub pilots: Vec<Pilot>,
     pub user_inits: Vec<UserInit>,
     /// §4.4 errors detected during command generation, forwarded through
-    /// the executor's event stream to the user-facing queue.
+    /// the executor's event stream to the owning job's queue — never to
+    /// another job's fence.
     pub errors: Vec<String>,
 }
 
 impl SchedulerOut {
-    pub fn batch(instructions: Vec<InstructionRef>, pilots: Vec<Pilot>) -> Self {
+    pub fn batch(job: JobId, instructions: Vec<InstructionRef>, pilots: Vec<Pilot>) -> Self {
         SchedulerOut {
+            job,
             instructions,
             pilots,
             user_inits: Vec::new(),
@@ -56,146 +76,199 @@ impl SchedulerOut {
 /// Upper bound on tasks compiled per wakeup. Draining amortizes channel
 /// traffic, but an unbounded batch would delay the first instruction of a
 /// large backlog behind the whole compile; the cap keeps time-to-first-
-/// instruction bounded while still coalescing bursts.
+/// instruction bounded while still coalescing bursts. Batches never span
+/// jobs, so the cap doubles as the scheduler-side fairness quantum.
 const MAX_WAKEUP_BATCH: usize = 64;
 
-/// Handle to a running scheduler thread.
+/// Handle to a running scheduler thread. Cloning the sender (one clone per
+/// job queue) is how multiple tenants feed one thread.
 pub struct SchedulerHandle {
-    pub tx: spsc::Sender<SchedulerMsg>,
-    join: JoinHandle<Scheduler>,
+    tx: mpsc::Sender<(JobId, SchedulerMsg)>,
+    join: JoinHandle<Vec<(JobId, Scheduler)>>,
 }
 
 impl SchedulerHandle {
     /// Spawn the scheduler thread. Emitted instruction batches flow into
-    /// `out` (the executor's inbox).
-    pub fn spawn(
-        cfg: SchedulerConfig,
-        buffers: BufferPool,
-        out: spsc::Sender<SchedulerOut>,
-    ) -> SchedulerHandle {
-        let (tx, rx) = spsc::channel::<SchedulerMsg>(1024);
+    /// `out` (the executor's inbox). `cfg.job` is ignored: per-job cores
+    /// derive their config from `cfg` with the job substituted.
+    pub fn spawn(cfg: SchedulerConfig, out: spsc::Sender<SchedulerOut>) -> SchedulerHandle {
+        let (tx, rx) = mpsc::channel::<(JobId, SchedulerMsg)>();
         let join = std::thread::Builder::new()
             .name(format!("celerity-sched-{}", cfg.node))
-            .spawn(move || {
-                let cfg_node = cfg.node;
-                let mut sched = Scheduler::new(cfg, buffers);
-                // Non-task message popped while draining a task run; handled
-                // on the next loop iteration to preserve message order.
-                let mut carry: Option<SchedulerMsg> = None;
-                loop {
-                    let msg = match carry.take() {
-                        Some(m) => Ok(m),
-                        None => rx.recv().map_err(|_| ()),
-                    };
-                    match msg {
-                        Ok(SchedulerMsg::Buffers(pool)) => sched.notify_buffers(pool),
-                        Ok(SchedulerMsg::UserData(init)) => {
-                            let _ = out.send(SchedulerOut {
-                                instructions: vec![],
-                                pilots: vec![],
-                                user_inits: vec![init],
-                                errors: vec![],
-                            });
-                        }
-                        Ok(SchedulerMsg::Task(task)) => {
-                            // Batched wakeup: drain the run of tasks already
-                            // queued behind this one and compile them in a
-                            // single pipeline pass; one SchedulerOut per
-                            // wakeup amortizes channel traffic and lets the
-                            // lookahead see the whole window at once (§4.3).
-                            let mut tasks = vec![task];
-                            while tasks.len() < MAX_WAKEUP_BATCH {
-                                match rx.try_recv() {
-                                    Ok(SchedulerMsg::Task(t)) => tasks.push(t),
-                                    Ok(other) => {
-                                        carry = Some(other);
-                                        break;
-                                    }
-                                    Err(_) => break,
-                                }
-                            }
-                            let trace = std::env::var_os("CELERITY_COMM_TRACE").is_some();
-                            if trace {
-                                eprintln!(
-                                    "[sched {}] processing batch of {} (first: {} '{}')",
-                                    cfg_node, tasks.len(), tasks[0].id, tasks[0].name
-                                );
-                            }
-                            let tracing = crate::trace::enabled();
-                            let t0 = if tracing { crate::trace::now_ns() } else { 0 };
-                            let flushes_before = sched.flushes;
-                            let (instructions, pilots) = sched.process_batch(&tasks);
-                            if tracing {
-                                record_batch_trace(
-                                    cfg_node.0,
-                                    t0,
-                                    tasks.len(),
-                                    &instructions,
-                                    sched.queue_len(),
-                                    sched.flushes - flushes_before,
-                                );
-                            }
-                            if trace {
-                                eprintln!(
-                                    "[sched {}] emitted {} instrs {} pilots (queue={})",
-                                    cfg_node, instructions.len(), pilots.len(), sched.queue_len()
-                                );
-                            }
-                            let mut errors: Vec<String> =
-                                sched.take_errors().iter().map(|e| e.to_string()).collect();
-                            errors.extend(sched.take_idag_errors());
-                            if !instructions.is_empty() || !pilots.is_empty() || !errors.is_empty()
-                            {
-                                let mut batch = SchedulerOut::batch(instructions, pilots);
-                                batch.errors = errors;
-                                let _ = out.send(batch);
-                            }
-                        }
-                        Ok(SchedulerMsg::Shutdown) | Err(()) => {
-                            let tracing = crate::trace::enabled();
-                            let t0 = if tracing { crate::trace::now_ns() } else { 0 };
-                            let flushes_before = sched.flushes;
-                            let (instructions, pilots) = sched.flush_now();
-                            if tracing {
-                                record_batch_trace(
-                                    cfg_node.0,
-                                    t0,
-                                    0,
-                                    &instructions,
-                                    sched.queue_len(),
-                                    sched.flushes - flushes_before,
-                                );
-                            }
-                            let mut errors: Vec<String> =
-                                sched.take_errors().iter().map(|e| e.to_string()).collect();
-                            errors.extend(sched.take_idag_errors());
-                            if !instructions.is_empty() || !pilots.is_empty() || !errors.is_empty()
-                            {
-                                let mut batch = SchedulerOut::batch(instructions, pilots);
-                                batch.errors = errors;
-                                let _ = out.send(batch);
-                            }
-                            break;
-                        }
-                    }
-                }
-                crate::trace::flush_thread();
-                sched
-            })
+            .spawn(move || run_scheduler_thread(cfg, rx, out))
             .expect("spawn scheduler thread");
         SchedulerHandle { tx, join }
     }
 
-    /// Send a message to the scheduler thread.
-    pub fn send(&self, msg: SchedulerMsg) {
-        self.tx.send(msg).expect("scheduler thread alive");
+    /// A sender clone for one job's queue.
+    pub fn sender(&self) -> mpsc::Sender<(JobId, SchedulerMsg)> {
+        self.tx.clone()
     }
 
-    /// Shut down and return the scheduler (for statistics).
-    pub fn join(self) -> Scheduler {
-        let _ = self.tx.send(SchedulerMsg::Shutdown);
+    /// Send a message on behalf of `job`.
+    pub fn send(&self, job: JobId, msg: SchedulerMsg) {
+        self.tx.send((job, msg)).expect("scheduler thread alive");
+    }
+
+    /// Drop the handle's sender and collect the retired per-job schedulers
+    /// (statistics). Blocks until every other sender clone is gone.
+    pub fn join(self) -> Vec<(JobId, Scheduler)> {
         drop(self.tx);
         self.join.join().expect("scheduler thread panicked")
+    }
+}
+
+fn run_scheduler_thread(
+    cfg: SchedulerConfig,
+    rx: mpsc::Receiver<(JobId, SchedulerMsg)>,
+    out: spsc::Sender<SchedulerOut>,
+) -> Vec<(JobId, Scheduler)> {
+    let cfg_node = cfg.node;
+    let mut cores: HashMap<JobId, Scheduler> = HashMap::new();
+    let mut retired: Vec<(JobId, Scheduler)> = Vec::new();
+    // Non-task message (or other-job task) popped while draining a task
+    // run; handled on the next loop iteration to preserve message order.
+    let mut carry: Option<(JobId, SchedulerMsg)> = None;
+    loop {
+        let msg = match carry.take() {
+            Some(m) => Ok(m),
+            None => rx.recv().map_err(|_| ()),
+        };
+        let (job, msg) = match msg {
+            Ok(m) => m,
+            Err(()) => break, // every sender gone: drain and exit
+        };
+        let core = cores.entry(job).or_insert_with(|| {
+            let mut c = cfg.clone();
+            c.job = job;
+            Scheduler::new(c, BufferPool::with_base(job.base()))
+        });
+        match msg {
+            SchedulerMsg::Buffers(pool) => core.notify_buffers(pool),
+            SchedulerMsg::UserData(init) => {
+                let _ = out.send(SchedulerOut {
+                    job,
+                    instructions: vec![],
+                    pilots: vec![],
+                    user_inits: vec![init],
+                    errors: vec![],
+                });
+            }
+            SchedulerMsg::Task(task) => {
+                // Batched wakeup: drain the run of *this job's* tasks already
+                // queued behind this one and compile them in a single
+                // pipeline pass; one SchedulerOut per wakeup amortizes
+                // channel traffic and lets the lookahead see the whole
+                // window at once (§4.3). A message for another job (or a
+                // non-task message) ends the batch and is carried over, so
+                // compilation interleaves across tenants.
+                let mut tasks = vec![task];
+                while tasks.len() < MAX_WAKEUP_BATCH {
+                    match rx.try_recv() {
+                        Ok((j, SchedulerMsg::Task(t))) if j == job => tasks.push(t),
+                        Ok(other) => {
+                            carry = Some(other);
+                            break;
+                        }
+                        Err(_) => break,
+                    }
+                }
+                compile_batch(cfg_node.0, job, core, &tasks, &out);
+            }
+            SchedulerMsg::Shutdown => {
+                let mut core = cores.remove(&job).expect("core exists");
+                flush_core(cfg_node.0, job, &mut core, &out);
+                retired.push((job, core));
+            }
+        }
+    }
+    // Channel disconnected with live cores (e.g. a queue dropped without
+    // shutdown): flush them so the executor still drains and exits.
+    let mut leftover: Vec<(JobId, Scheduler)> = cores.into_iter().collect();
+    leftover.sort_by_key(|(j, _)| *j);
+    for (job, mut core) in leftover {
+        flush_core(cfg_node.0, job, &mut core, &out);
+        retired.push((job, core));
+    }
+    crate::trace::flush_thread();
+    retired.sort_by_key(|(j, _)| *j);
+    retired
+}
+
+/// Compile one wakeup batch for `job` and ship the results.
+fn compile_batch(
+    node: u64,
+    job: JobId,
+    core: &mut Scheduler,
+    tasks: &[TaskRef],
+    out: &spsc::Sender<SchedulerOut>,
+) {
+    let trace = std::env::var_os("CELERITY_COMM_TRACE").is_some();
+    if trace {
+        eprintln!(
+            "[sched {node} {job}] processing batch of {} (first: {} '{}')",
+            tasks.len(),
+            tasks[0].id,
+            tasks[0].name
+        );
+    }
+    let tracing = crate::trace::enabled();
+    let t0 = if tracing { crate::trace::now_ns() } else { 0 };
+    let flushes_before = core.flushes;
+    let (instructions, pilots) = core.process_batch(tasks);
+    if tracing {
+        record_batch_trace(
+            node,
+            t0,
+            tasks.len(),
+            &instructions,
+            core.queue_len(),
+            core.flushes - flushes_before,
+        );
+    }
+    if trace {
+        eprintln!(
+            "[sched {node} {job}] emitted {} instrs {} pilots (queue={})",
+            instructions.len(),
+            pilots.len(),
+            core.queue_len()
+        );
+    }
+    ship(job, core, instructions, pilots, out);
+}
+
+/// Final flush of one job's core (job shutdown or thread exit).
+fn flush_core(node: u64, job: JobId, core: &mut Scheduler, out: &spsc::Sender<SchedulerOut>) {
+    let tracing = crate::trace::enabled();
+    let t0 = if tracing { crate::trace::now_ns() } else { 0 };
+    let flushes_before = core.flushes;
+    let (instructions, pilots) = core.flush_now();
+    if tracing {
+        record_batch_trace(
+            node,
+            t0,
+            0,
+            &instructions,
+            core.queue_len(),
+            core.flushes - flushes_before,
+        );
+    }
+    ship(job, core, instructions, pilots, out);
+}
+
+fn ship(
+    job: JobId,
+    core: &mut Scheduler,
+    instructions: Vec<InstructionRef>,
+    pilots: Vec<Pilot>,
+    out: &spsc::Sender<SchedulerOut>,
+) {
+    let mut errors: Vec<String> = core.take_errors().iter().map(|e| e.to_string()).collect();
+    errors.extend(core.take_idag_errors());
+    if !instructions.is_empty() || !pilots.is_empty() || !errors.is_empty() {
+        let mut batch = SchedulerOut::batch(job, instructions, pilots);
+        batch.errors = errors;
+        let _ = out.send(batch);
     }
 }
 
@@ -257,19 +330,21 @@ mod tests {
         let tasks = tm.take_new_tasks();
 
         let (out_tx, out_rx) = spsc::channel(1024);
-        let h = SchedulerHandle::spawn(
-            SchedulerConfig::default(),
-            tm.buffers().clone(),
-            out_tx,
-        );
+        let h = SchedulerHandle::spawn(SchedulerConfig::default(), out_tx);
+        h.send(JobId(0), SchedulerMsg::Buffers(tm.buffers().clone()));
         let n_tasks = tasks.len() as u64;
         for t in tasks {
-            h.send(SchedulerMsg::Task(t));
+            h.send(JobId(0), SchedulerMsg::Task(t));
         }
-        let sched = h.join();
+        h.send(JobId(0), SchedulerMsg::Shutdown);
+        let mut scheds = h.join();
+        assert_eq!(scheds.len(), 1);
+        let (job, sched) = scheds.pop().unwrap();
+        assert_eq!(job, JobId(0));
         let mut total = 0;
         let mut outs = 0u64;
         while let Ok(batch) = out_rx.recv() {
+            assert_eq!(batch.job, JobId(0));
             total += batch.instructions.len();
             outs += 1;
         }
@@ -280,5 +355,71 @@ mod tests {
         // and output batches never exceed wakeups + the shutdown flush.
         assert!(sched.batches >= 1 && sched.batches <= n_tasks, "batches={}", sched.batches);
         assert!(outs <= sched.batches + 1, "outs={outs} batches={}", sched.batches);
+    }
+
+    /// Two jobs interleaved through one thread: every output batch carries
+    /// its owning job, instruction ids live in the owning job's namespace,
+    /// and each job's compiled stream is identical to a solo run.
+    #[test]
+    fn two_jobs_interleave_without_cross_talk() {
+        let build = |job: JobId| {
+            let mut tm = TaskManager::with_job(job);
+            let n = Range::d1(128);
+            let a = tm.create_buffer::<f64>("A", n, true).id();
+            for _ in 0..6 {
+                tm.submit(TaskDecl::device("w", n).read_write(a, RangeMapper::OneToOne));
+            }
+            tm.shutdown();
+            (tm.buffers().clone(), tm.take_new_tasks())
+        };
+        let (pool1, tasks1) = build(JobId(1));
+        let (pool2, tasks2) = build(JobId(2));
+
+        let (out_tx, out_rx) = spsc::channel(1024);
+        let h = SchedulerHandle::spawn(SchedulerConfig::default(), out_tx);
+        h.send(JobId(1), SchedulerMsg::Buffers(pool1));
+        h.send(JobId(2), SchedulerMsg::Buffers(pool2));
+        // Interleave task submission across the two jobs.
+        let mut it1 = tasks1.into_iter();
+        let mut it2 = tasks2.into_iter();
+        loop {
+            let a = it1.next();
+            let b = it2.next();
+            if a.is_none() && b.is_none() {
+                break;
+            }
+            if let Some(t) = a {
+                h.send(JobId(1), SchedulerMsg::Task(t));
+            }
+            if let Some(t) = b {
+                h.send(JobId(2), SchedulerMsg::Task(t));
+            }
+        }
+        h.send(JobId(1), SchedulerMsg::Shutdown);
+        h.send(JobId(2), SchedulerMsg::Shutdown);
+        let scheds = h.join();
+        assert_eq!(scheds.len(), 2);
+
+        let mut per_job: HashMap<JobId, Vec<u64>> = HashMap::new();
+        while let Ok(batch) = out_rx.recv() {
+            for i in &batch.instructions {
+                assert_eq!(
+                    JobId::of(i.id.0),
+                    batch.job,
+                    "instruction {} in a batch of {}",
+                    i.id,
+                    batch.job
+                );
+                per_job.entry(batch.job).or_default().push(i.id.0);
+            }
+        }
+        assert_eq!(per_job.len(), 2);
+        // Same program → same per-job instruction stream, modulo the
+        // namespace tag: stripping the job bits yields identical sequences.
+        let strip = |ids: &[u64]| -> Vec<u64> {
+            ids.iter().map(|id| id & ((1u64 << JobId::SHIFT) - 1)).collect::<Vec<_>>()
+        };
+        assert_eq!(strip(&per_job[&JobId(1)]), strip(&per_job[&JobId(2)]));
+        assert!(!per_job[&JobId(1)].is_empty());
     }
 }

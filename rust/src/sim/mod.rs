@@ -23,7 +23,7 @@ use crate::grid::Region;
 use crate::instruction::{IdagConfig, IdagGenerator, InstructionKind, InstructionRef};
 use crate::scheduler::{Scheduler, SchedulerConfig};
 use crate::task::{TaskManager, TaskRef};
-use crate::util::{DeviceId, NodeId, TaskId};
+use crate::util::{DeviceId, JobId, NodeId, TaskId};
 use std::collections::HashMap;
 
 /// Calibrated cost model. Defaults approximate one Leonardo booster node
@@ -220,6 +220,7 @@ where
             ExecModel::Idag => {
                 let mut sched = Scheduler::new(
                     SchedulerConfig {
+                        job: JobId(0),
                         node: NodeId(nid),
                         num_nodes: cfg.num_nodes,
                         num_devices: cfg.num_devices,

@@ -5,7 +5,7 @@ use crate::buffer::{Buffer, BufferPool};
 use crate::dag::{Dag, Dep, DepKind};
 use crate::dtype::{DType, Elem};
 use crate::grid::{Region, RegionMap};
-use crate::util::{BufferId, TaskId};
+use crate::util::{BufferId, JobId, TaskId};
 use std::collections::HashMap;
 use std::sync::Arc;
 
@@ -65,9 +65,22 @@ impl TaskManager {
 
     /// Create a manager with a custom horizon step (tests, ablations).
     pub fn with_horizon_step(horizon_step: u64) -> Self {
+        Self::with_job_and_horizon_step(JobId(0), horizon_step)
+    }
+
+    /// Create a manager whose task and buffer ids live in `job`'s namespace
+    /// (high-bit tagged, see [`JobId::base`]). Job 0 is the single-tenant
+    /// default and yields numerically unchanged ids.
+    pub fn with_job(job: JobId) -> Self {
+        Self::with_job_and_horizon_step(job, DEFAULT_HORIZON_STEP)
+    }
+
+    /// Combined constructor underneath the convenience wrappers.
+    pub fn with_job_and_horizon_step(job: JobId, horizon_step: u64) -> Self {
+        let base = job.base();
         let mut tm = TaskManager {
-            dag: Dag::new(),
-            buffers: BufferPool::new(),
+            dag: Dag::with_base(base),
+            buffers: BufferPool::with_base(base),
             states: HashMap::new(),
             outbox: Vec::new(),
             debug_events: Vec::new(),
@@ -585,6 +598,22 @@ mod tests {
         let sdt = tasks.iter().find(|t| t.id == sd).unwrap();
         assert!(sdt.deps.iter().any(|(d, _)| *d == ta));
         assert!(sdt.deps.iter().any(|(d, _)| *d == tb));
+    }
+
+    #[test]
+    fn job_namespace_tags_every_task_and_buffer() {
+        let mut tm = TaskManager::with_job(JobId(5));
+        let n = Range::d1(16);
+        let b = tm.create_buffer::<f64>("B", n, true).id();
+        assert_eq!(JobId::of(b.0), JobId(5));
+        let t = tm.submit(TaskDecl::device("w", n).read_write(b, RangeMapper::OneToOne));
+        assert_eq!(JobId::of(t.0), JobId(5));
+        let e = tm.barrier();
+        let tasks = tm.take_new_tasks();
+        assert!(tasks.iter().all(|t| JobId::of(t.id.0) == JobId(5)));
+        // Epoch deps stay inside the namespace.
+        let et = tasks.iter().find(|t| t.id == e).unwrap();
+        assert!(et.deps.iter().all(|(d, _)| JobId::of(d.0) == JobId(5)));
     }
 
     #[test]

@@ -9,6 +9,7 @@
 //! and the CI schema self-test rely on that.
 
 use super::{Event, EventKind, Trace, Track};
+use crate::util::JobId;
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
 
@@ -94,10 +95,10 @@ fn args_json(kind: &EventKind) -> String {
         ),
         EventKind::LookaheadFlush => String::new(),
         EventKind::Compiled { instr, deps, .. } => {
-            format!("\"instr\":{instr},\"deps\":{}", deps.len())
+            format!("{},\"deps\":{}", instr_args(*instr), deps.len())
         }
-        EventKind::Issue { instr } | EventKind::Retire { instr } => format!("\"instr\":{instr}"),
-        EventKind::Exec { instr, .. } => format!("\"instr\":{instr}"),
+        EventKind::Issue { instr } | EventKind::Retire { instr } => instr_args(*instr),
+        EventKind::Exec { instr, .. } => instr_args(*instr),
         EventKind::DataIn { from, bytes } => format!("\"from\":{from},\"bytes\":{bytes}"),
         EventKind::PilotIn { from } | EventKind::HeartbeatIn { from } => {
             format!("\"from\":{from}")
@@ -110,6 +111,18 @@ fn args_json(kind: &EventKind) -> String {
         }
         EventKind::Alloc { bytes } => format!("\"bytes\":{bytes}"),
         EventKind::Span { .. } => String::new(),
+    }
+}
+
+/// Instruction-keyed args, annotated with the owning job (decoded from the
+/// id's high bits) on multi-tenant traces. Job 0 — the single-tenant
+/// default — is omitted so existing traces serialize unchanged.
+fn instr_args(instr: u64) -> String {
+    let job = JobId::of(instr).0;
+    if job == 0 {
+        format!("\"instr\":{instr}")
+    } else {
+        format!("\"instr\":{instr},\"job\":{job}")
     }
 }
 
@@ -177,6 +190,33 @@ mod tests {
         let open = json.matches('{').count();
         let close = json.matches('}').count();
         assert_eq!(open, close);
+    }
+
+    #[test]
+    fn annotates_multi_tenant_instructions_with_their_job() {
+        let base = JobId(3).base();
+        let t = Trace {
+            events: vec![
+                Event {
+                    node: 0,
+                    track: Track::Executor,
+                    start_ns: 0,
+                    end_ns: 0,
+                    kind: EventKind::Issue { instr: base + 7 },
+                },
+                Event {
+                    node: 0,
+                    track: Track::Executor,
+                    start_ns: 1,
+                    end_ns: 1,
+                    kind: EventKind::Issue { instr: 7 },
+                },
+            ],
+        };
+        let json = to_chrome_json(&t);
+        assert!(json.contains(&format!("\"instr\":{},\"job\":3", base + 7)), "{json}");
+        // Job 0 stays unannotated: single-tenant traces are unchanged.
+        assert!(json.contains("\"args\":{\"instr\":7}"), "{json}");
     }
 
     #[test]

@@ -86,6 +86,39 @@ id_type!(
     KernelId,
     "K"
 );
+id_type!(
+    /// A tenant job sharing one cluster. Each job gets its own TDAG/CDAG/
+    /// IDAG namespace, buffer-id space, horizons and fences; the job id is
+    /// packed into the high bits of every per-job id (see [`JobId::base`])
+    /// so concurrent jobs never collide in any tracking structure.
+    JobId,
+    "J"
+);
+
+impl JobId {
+    /// Bit position where the job tag starts inside a 64-bit id.
+    pub const SHIFT: u32 = 48;
+    /// Width of the job tag in bits.
+    pub const BITS: u32 = 12;
+    /// Maximum representable job id (4095 concurrent jobs per cluster).
+    pub const MAX: u64 = (1 << Self::BITS) - 1;
+
+    /// Numeric base of this job's id namespace: ids `base()..base()+2^48`
+    /// belong to this job. Bits 60..63 are left untouched so flag bits such
+    /// as the user-allocation marker (bit 62, `instruction::user_alloc_id`)
+    /// survive tagging and round-trip through [`JobId::of`].
+    pub fn base(self) -> u64 {
+        debug_assert!(self.0 <= Self::MAX, "job id out of range");
+        self.0 << Self::SHIFT
+    }
+
+    /// Recover the owning job from any tagged id. Only bits 48..60 are
+    /// inspected, so this works on plain ids and on flag-carrying ids
+    /// (user allocations) alike.
+    pub fn of(raw: u64) -> JobId {
+        JobId((raw >> Self::SHIFT) & Self::MAX)
+    }
+}
 
 impl MemoryId {
     /// User-controlled host memory.
@@ -122,6 +155,20 @@ mod tests {
         assert_eq!(NodeId(0).to_string(), "N0");
         assert_eq!(DeviceId(1).to_string(), "D1");
         assert_eq!(MemoryId(2).to_string(), "M2");
+    }
+
+    #[test]
+    fn job_tag_round_trips_and_preserves_flags() {
+        let j = JobId(3);
+        let tagged = j.base() + 41;
+        assert_eq!(JobId::of(tagged), j);
+        assert_eq!(tagged & ((1 << JobId::SHIFT) - 1), 41);
+        // The user-allocation flag (bit 62) survives tagging.
+        let user_alloc = (1u64 << 62) | j.base() | 7;
+        assert_eq!(JobId::of(user_alloc), j);
+        // Job 0 (single-tenant wrappers) leaves ids numerically unchanged.
+        assert_eq!(JobId(0).base(), 0);
+        assert_eq!(JobId::of(5), JobId(0));
     }
 
     #[test]

@@ -1,0 +1,229 @@
+//! Multi-tenant cluster tests: concurrent jobs sharing one cluster.
+//!
+//! Tenant isolation is a *correctness* property, not just a scheduling
+//! one: two jobs running concurrently on a shared cluster must produce
+//! fence results byte-identical to each job's solo run (same transports,
+//! same node counts), because job namespacing puts every task, command,
+//! instruction, buffer and comm tag in a disjoint id space — nothing about
+//! a co-tenant may leak into the numerics. On top of that, error
+//! attribution (§4.4 errors surface only on the job that caused them) and
+//! the fair-share starvation guarantee (a light job's fence completes
+//! while a heavy job streams) are asserted directly.
+
+use celerity::apps::{self, nbody, wavesim};
+use celerity::comm::Transport;
+use celerity::driver::{run_cluster, run_cluster_jobs, ClusterConfig, JobProgram, Queue};
+use celerity::grid::Range;
+use celerity::task::RangeMapper;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+const NB_N: u64 = 64;
+const NB_STEPS: usize = 2;
+const WS_ROWS: u64 = 16;
+const WS_COLS: u64 = 8;
+const WS_STEPS: usize = 2;
+
+fn cfg(transport: Transport, nodes: u64) -> ClusterConfig {
+    ClusterConfig::builder()
+        .num_nodes(nodes)
+        .num_devices(2)
+        .registry(apps::reference_registry())
+        .transport(transport)
+        .build()
+}
+
+fn nbody_bytes(q: &mut Queue) -> Vec<u8> {
+    let (p, _v) = nbody::submit(q, NB_N, NB_STEPS).expect("submit nbody");
+    q.fence_bytes(p.id()).expect("fence P")
+}
+
+fn wavesim_bytes(q: &mut Queue) -> Vec<u8> {
+    let out = wavesim::submit(q, WS_ROWS, WS_COLS, WS_STEPS).expect("submit wavesim");
+    q.fence_bytes(out.id()).expect("fence U")
+}
+
+/// Run one app solo (single-tenant cluster) and return the fence bytes;
+/// asserts all nodes agree among themselves first.
+fn solo(c: ClusterConfig, app: fn(&mut Queue) -> Vec<u8>) -> Vec<u8> {
+    let out: Arc<Mutex<Vec<(u64, Vec<u8>)>>> = Arc::default();
+    let oc = out.clone();
+    let reports = run_cluster(c, move |q| {
+        let b = app(q);
+        oc.lock().unwrap().push((q.node.0, b));
+    });
+    for r in &reports {
+        assert!(r.errors.is_empty(), "solo node {}: {:?}", r.node, r.errors);
+    }
+    let mut res = out.lock().unwrap().clone();
+    res.sort_by_key(|(n, _)| *n);
+    let first = res[0].1.clone();
+    for (n, b) in &res {
+        assert_eq!(b, &first, "solo node {n} fence differs from node 0");
+    }
+    first
+}
+
+/// Run the given apps concurrently as jobs of one shared cluster per node;
+/// returns fence bytes keyed by (job, node) and asserts no job errored.
+fn concurrent(
+    c: ClusterConfig,
+    apps: Vec<fn(&mut Queue) -> Vec<u8>>,
+) -> HashMap<(u64, u64), Vec<u8>> {
+    let out: Arc<Mutex<HashMap<(u64, u64), Vec<u8>>>> = Arc::default();
+    let programs: Vec<JobProgram> = apps
+        .into_iter()
+        .map(|app| {
+            let oc = out.clone();
+            Arc::new(move |q: &mut Queue| {
+                let b = app(q);
+                oc.lock().unwrap().insert((q.job().0, q.node.0), b);
+            }) as JobProgram
+        })
+        .collect();
+    let reports = run_cluster_jobs(c, programs).expect("bring up cluster transport");
+    for r in &reports {
+        for jr in &r.jobs {
+            assert!(jr.errors.is_empty(), "node {} job {}: {:?}", r.node, jr.job, jr.errors);
+        }
+    }
+    let res = out.lock().unwrap().clone();
+    res
+}
+
+/// The core isolation check: nbody (job 0) and wavesim (job 1) running
+/// concurrently must reproduce their solo fence bytes exactly, on every
+/// node.
+fn check_concurrent_matches_solo(transport: Transport, nodes: u64, fair: bool, limit: usize) {
+    let what = format!(
+        "{} nodes over {} (fair_share={fair}, admission_limit={limit})",
+        nodes,
+        transport.name()
+    );
+    let solo_nb = solo(cfg(transport, nodes), nbody_bytes);
+    let solo_ws = solo(cfg(transport, nodes), wavesim_bytes);
+    let c = ClusterConfig::builder()
+        .num_nodes(nodes)
+        .num_devices(2)
+        .registry(apps::reference_registry())
+        .transport(transport)
+        .fair_share(fair)
+        .admission_limit(limit)
+        .build();
+    let got = concurrent(c, vec![nbody_bytes, wavesim_bytes]);
+    assert_eq!(got.len(), 2 * nodes as usize, "{what}: missing fences");
+    for ((job, node), bytes) in &got {
+        let want = if *job == 0 { &solo_nb } else { &solo_ws };
+        assert_eq!(
+            bytes, want,
+            "{what}: job {job} on node {node} diverged from its solo run"
+        );
+    }
+}
+
+#[test]
+fn two_jobs_match_solo_channel() {
+    for nodes in [1, 2, 4] {
+        check_concurrent_matches_solo(Transport::Channel, nodes, true, 0);
+    }
+}
+
+#[test]
+fn two_jobs_match_solo_tcp() {
+    for nodes in [2, 4] {
+        check_concurrent_matches_solo(Transport::Tcp, nodes, true, 0);
+    }
+}
+
+/// Digest identity must survive the dispatch-policy knobs too: admission
+/// throttling, the FIFO ablation, and both combined only reorder execution
+/// within the dependency structure — never change results.
+#[test]
+fn throttled_and_fifo_modes_keep_digests() {
+    check_concurrent_matches_solo(Transport::Channel, 2, true, 2);
+    check_concurrent_matches_solo(Transport::Channel, 2, false, 0);
+    check_concurrent_matches_solo(Transport::Channel, 2, false, 2);
+}
+
+/// §4.4 error attribution: a job that launches an unregistered kernel gets
+/// the error on ITS `wait()` and in ITS `JobReport`; the co-tenant job's
+/// fence succeeds with clean results and a clean report.
+#[test]
+fn job_errors_are_attributed_to_their_job() {
+    let solo_ws = solo(cfg(Transport::Channel, 1), wavesim_bytes);
+    let bad: JobProgram = Arc::new(|q: &mut Queue| {
+        let b = q.create_buffer::<f32>("B", Range::d1(16));
+        q.submit(|cgh| {
+            cgh.write(b, RangeMapper::OneToOne);
+            cgh.parallel_for("no_such_kernel", Range::d1(16));
+        })
+        .expect("submission itself is well-formed");
+        let err = q.wait().expect_err("missing kernel must fail THIS job's wait");
+        assert!(
+            format!("{err}").contains("no_such_kernel"),
+            "error must name the unregistered kernel: {err}"
+        );
+    });
+    let ws_out: Arc<Mutex<Vec<u8>>> = Arc::default();
+    let oc = ws_out.clone();
+    let good: JobProgram = Arc::new(move |q: &mut Queue| {
+        // The co-tenant's failure must be invisible here.
+        *oc.lock().unwrap() = wavesim_bytes(q);
+    });
+    let reports =
+        run_cluster_jobs(cfg(Transport::Channel, 1), vec![bad, good]).expect("bring up cluster");
+    assert_eq!(reports.len(), 1);
+    let r = &reports[0];
+    assert_eq!(r.jobs.len(), 2, "one report per job: {:?}", r.jobs);
+    assert!(
+        r.jobs[0].errors.iter().any(|e| e.contains("no_such_kernel")),
+        "job 0's report must carry its kernel error: {:?}",
+        r.jobs[0].errors
+    );
+    assert!(
+        r.jobs[1].errors.is_empty(),
+        "job 1 must not inherit job 0's error: {:?}",
+        r.jobs[1].errors
+    );
+    assert_eq!(*ws_out.lock().unwrap(), solo_ws, "good job's fence must match its solo run");
+}
+
+/// Fair-share starvation guarantee: a light job's single fence completes
+/// while a heavy co-tenant is still streaming work — the weighted
+/// round-robin ring reaches the light job every quantum, and the admission
+/// limit keeps the heavy job from monopolizing the in-flight window.
+#[test]
+fn light_job_fence_is_not_starved_by_heavy_job() {
+    let t0 = Instant::now();
+    let done: Arc<Mutex<HashMap<&'static str, f64>>> = Arc::default();
+    let dh = done.clone();
+    let heavy: JobProgram = Arc::new(move |q: &mut Queue| {
+        let (p, _v) = nbody::submit(q, 256, 16).expect("submit heavy nbody");
+        q.fence_bytes(p.id()).expect("fence heavy");
+        dh.lock().unwrap().insert("heavy", t0.elapsed().as_secs_f64());
+    });
+    let dl = done.clone();
+    let light: JobProgram = Arc::new(move |q: &mut Queue| {
+        let out = wavesim::submit(q, 8, 8, 1).expect("submit light wavesim");
+        q.fence_bytes(out.id()).expect("fence light");
+        dl.lock().unwrap().insert("light", t0.elapsed().as_secs_f64());
+    });
+    let c = ClusterConfig::builder()
+        .num_devices(2)
+        .registry(apps::reference_registry())
+        .fair_share(true)
+        .admission_limit(4)
+        .build();
+    let reports = run_cluster_jobs(c, vec![heavy, light]).expect("bring up cluster");
+    for jr in &reports[0].jobs {
+        assert!(jr.errors.is_empty(), "job {}: {:?}", jr.job, jr.errors);
+    }
+    let done = done.lock().unwrap();
+    let (light_t, heavy_t) = (done["light"], done["heavy"]);
+    assert!(
+        light_t <= heavy_t,
+        "light job's fence ({light_t:.3}s) must complete while the heavy job streams \
+         (finished {heavy_t:.3}s) — fair-share dispatch failed to interleave it"
+    );
+}

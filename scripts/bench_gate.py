@@ -19,9 +19,16 @@ Semantics:
     strong_scaling keys are "app/transport/Nn"; ablation rows suffix the app
     name ("nbody-p2p" = collectives off, "wavesim-staged"/"nbody-p2p-staged"
     = direct device transfers off, "wavesim-faulty" = TCP rows under a
-    seeded fault plan pricing the CRC/retransmit recovery layer), so every
-    lowering is gated separately. Extra row fields ("fault" etc.) are
-    ignored by the key — only app/transport/nodes identify a row.
+    seeded fault plan pricing the CRC/retransmit recovery layer,
+    "multijob"/"multijob-fifo" = N concurrent tenant jobs with fair-share
+    dispatch on/off), so every lowering is gated separately. Extra row
+    fields ("fault" etc.) are ignored by the key — only app/transport/nodes
+    identify a row.
+  - Rows carrying "p99_fence_ms" (the multi-tenant per-job fence-latency
+    rows, keyed "app/transport/Nn/p99_ms") are latency metrics: LOWER is
+    better, so the gate fails when the fresh p99 exceeds baseline x
+    (1 + threshold). A row may contribute both a throughput and a latency
+    key; each is gated independently.
 
 Exit codes: 0 ok/skip, 1 regression, 2 usage or malformed input.
 """
@@ -42,7 +49,7 @@ def skip(reason, detail):
 
 
 def rows(doc):
-    """Normalize a bench document to {key: throughput}."""
+    """Normalize a bench document to {key: (value, higher_is_better)}."""
     out = {}
     for row in doc.get("components", []) + doc.get("rows", []):
         if "name" in row:
@@ -53,8 +60,17 @@ def rows(doc):
             )
         thr = row.get("ops_per_s", row.get("cells_per_s"))
         if thr is not None:
-            out[key] = float(thr)
+            out[key] = (float(thr), True)
+        p99 = row.get("p99_fence_ms")
+        if p99 is not None:
+            out[key + "/p99_ms"] = (float(p99), False)
     return out
+
+
+def fmt(v):
+    """Human-format a metric: integers for big throughputs, 3 decimals for
+    small latency values."""
+    return f"{v:.0f}" if v >= 100 else f"{v:.3f}"
 
 
 def main(argv):
@@ -115,18 +131,28 @@ def main(argv):
         f"(threshold: {threshold:.0%} drop) "
         f"[baseline {baseline.get('git_rev')} vs fresh {fresh.get('git_rev')}]"
     )
-    for key, base_thr in sorted(base_rows.items()):
-        got = fresh_rows.get(key)
-        if got is None:
+    for key, (base_val, higher_better) in sorted(base_rows.items()):
+        entry = fresh_rows.get(key)
+        if entry is None:
             failures.append(f"{key}: missing from fresh run")
             continue
-        ratio = got / base_thr if base_thr > 0 else float("inf")
-        status = "OK " if ratio >= 1.0 - threshold else "FAIL"
-        print(f"  {status} {key}: {base_thr:.0f} -> {got:.0f} ({ratio:.2f}x)")
-        if ratio < 1.0 - threshold:
-            failures.append(f"{key}: {base_thr:.0f} -> {got:.0f} ops/s ({ratio:.2f}x)")
+        got = entry[0]
+        if higher_better:
+            ratio = got / base_val if base_val > 0 else float("inf")
+            ok = ratio >= 1.0 - threshold
+            unit = "ops/s"
+        else:
+            # Latency: lower is better; a fresh p99 above baseline x
+            # (1 + threshold) is the regression.
+            ratio = got / base_val if base_val > 0 else float("inf")
+            ok = got <= base_val * (1.0 + threshold)
+            unit = "ms p99"
+        status = "OK " if ok else "FAIL"
+        print(f"  {status} {key}: {fmt(base_val)} -> {fmt(got)} ({ratio:.2f}x)")
+        if not ok:
+            failures.append(f"{key}: {fmt(base_val)} -> {fmt(got)} {unit} ({ratio:.2f}x)")
     for key in sorted(set(fresh_rows) - set(base_rows)):
-        print(f"  NEW {key}: {fresh_rows[key]:.0f} (no baseline)")
+        print(f"  NEW {key}: {fmt(fresh_rows[key][0])} (no baseline)")
 
     if failures:
         print("\nbench_gate: REGRESSION", file=sys.stderr)

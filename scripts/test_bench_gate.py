@@ -210,6 +210,63 @@ def main():
             1,
         ),
         (
+            "p99 latency rows: higher p99 beyond threshold fails",
+            doc(
+                "abc",
+                True,
+                rows=[
+                    {"app": "multijob", "transport": "channel", "nodes": 2, "cells_per_s": 100.0},
+                    {"app": "multijob-j1-wavesim", "transport": "channel", "nodes": 2, "job": 1, "fair": True, "p99_fence_ms": 10.0},
+                ],
+            ),
+            doc(
+                "def",
+                True,
+                rows=[
+                    {"app": "multijob", "transport": "channel", "nodes": 2, "cells_per_s": 100.0},
+                    # Latency is lower-better: a p99 that GREW >25% must
+                    # fail even though every throughput row is healthy.
+                    {"app": "multijob-j1-wavesim", "transport": "channel", "nodes": 2, "job": 1, "fair": True, "p99_fence_ms": 14.0},
+                ],
+            ),
+            (),
+            1,
+        ),
+        (
+            "p99 latency rows: lower p99 passes",
+            doc(
+                "abc",
+                True,
+                rows=[
+                    {"app": "multijob-j1-wavesim", "transport": "channel", "nodes": 2, "job": 1, "fair": True, "p99_fence_ms": 10.0},
+                ],
+            ),
+            doc(
+                "def",
+                True,
+                rows=[
+                    # A big latency IMPROVEMENT must not trip the
+                    # throughput-style "dropped below (1-threshold)x" check.
+                    {"app": "multijob-j1-wavesim", "transport": "channel", "nodes": 2, "job": 1, "fair": True, "p99_fence_ms": 2.0},
+                ],
+            ),
+            (),
+            0,
+        ),
+        (
+            "p99 latency rows: missing from fresh run fails",
+            doc(
+                "abc",
+                True,
+                rows=[
+                    {"app": "multijob-fifo-j0-nbody", "transport": "tcp", "nodes": 2, "job": 0, "fair": False, "p99_fence_ms": 10.0},
+                ],
+            ),
+            doc("def", True, rows=[]),
+            (),
+            1,
+        ),
+        (
             "empty measured baseline skips",
             doc("abc", True, components=[]),
             doc("def", True, components=[comp("a", 1)]),
