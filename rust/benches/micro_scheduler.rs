@@ -346,6 +346,39 @@ fn main() {
         n
     });
 
+    // 11. Static graph verification (--verify): the same RSim stream as
+    //     row 8 compiled with the in-core verifier enabled; ops = the
+    //     instructions the verifier priced, so the row tracks the analysis
+    //     cost per instruction (race/lifetime/coherence/pilot checks).
+    //     Rows 2 and 8 run with `verify: false` (the default), so the gate
+    //     also pins the off-path — one branch per scheduler batch.
+    bench(res, repeats, "verify (rsim stream, per instruction)", || {
+        let mut tm = TaskManager::new();
+        let (steps, width) = (64u64 / scale.min(4), 4096u64);
+        let r = tm.create_buffer::<f32>("R", Range::d2(steps, width), true);
+        let vis = tm.create_buffer::<f32>("VIS", Range::d2(width, 64), true);
+        for t in 1..steps {
+            let prev = Region::from(GridBox::d2((0, 0), (t, width)));
+            tm.submit_group(|cgh| {
+                cgh.read(r, RangeMapper::Fixed(prev));
+                cgh.read(vis, RangeMapper::All);
+                cgh.write(r, RangeMapper::RowSlice(t));
+                cgh.parallel_for("radiosity", Range::d1(width));
+            })
+            .expect("submit radiosity");
+        }
+        let tasks = tm.take_new_tasks();
+        let mut sched = Scheduler::new(
+            SchedulerConfig { num_devices: 4, verify: true, ..Default::default() },
+            tm.buffers().clone(),
+        );
+        let _ = sched.process_batch(&tasks);
+        let _ = sched.flush_now();
+        let violations = sched.take_verify_errors();
+        assert!(violations.is_empty(), "rsim stream must verify clean: {violations:?}");
+        sched.instructions_verified()
+    });
+
     // Sanity anchor: an IdagGenerator must stay usable for the suite.
     let _ = IdagGenerator::new(IdagConfig::default(), celerity::buffer::BufferPool::new());
     println!("\ntargets (DESIGN.md §7): ooo < 2 µs/instr; idag gen > 10k instr/s");

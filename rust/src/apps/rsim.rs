@@ -131,7 +131,7 @@ pub fn register_pjrt_kernels(registry: &Registry, rt: &Arc<RuntimeClient>) {
             let cols = ctx.chunk.min[0]..ctx.chunk.max[0];
             for j in cols {
                 let v = f32::from_ne_bytes(
-                    result[0][j as usize * 4..j as usize * 4 + 4].try_into().unwrap(),
+                    result[0][j as usize * 4..j as usize * 4 + 4].try_into().expect("4-byte slice"),
                 );
                 out.write_f32(Point::d2(t as u64, j), v);
             }

@@ -283,7 +283,8 @@ impl TcpCommunicator {
     /// means the peer is gone and the frame is dropped instead of retried.
     /// Tests exercising dead peers use this to keep detection fast.
     pub fn set_connect_grace(&mut self, grace: Duration) {
-        *self.fabric.connect_deadline.lock().unwrap() = Instant::now() + grace;
+        let mut deadline = self.fabric.connect_deadline.lock().expect("deadline lock poisoned");
+            *deadline = Instant::now() + grace;
     }
 
     /// Arm deterministic fault injection on every outbound link of this
@@ -296,7 +297,8 @@ impl TcpCommunicator {
         }
         let injector = Arc::new(FaultInjector::new(plan.clone(), self.fabric.node));
         for (i, slot) in self.fabric.outbound.iter().enumerate() {
-            slot.lock().unwrap().rng = Some(injector.peer_rng(NodeId(i as u64)));
+            let rng = injector.peer_rng(NodeId(i as u64));
+                slot.lock().expect("fault rng lock poisoned").rng = Some(rng);
         }
         let _ = self.fabric.injector.set(injector);
     }

@@ -74,6 +74,7 @@ const fn build_crc_table() -> [u32; 256] {
 }
 
 /// Incremental CRC-32 (start at [`Crc32::new`], feed bytes, [`Crc32::get`]).
+#[derive(Debug)]
 pub struct Crc32(u32);
 
 impl Crc32 {
@@ -242,8 +243,8 @@ pub fn read_frame(r: &mut impl Read) -> io::Result<Option<WireMsg>> {
     }
     let mut head = [0u8; 12]; // seq + crc
     r.read_exact(&mut head)?;
-    let seq = u64::from_le_bytes(head[..8].try_into().unwrap());
-    let want_crc = u32::from_le_bytes(head[8..].try_into().unwrap());
+    let seq = u64::from_le_bytes(head[..8].try_into().expect("8-byte slice"));
+    let want_crc = u32::from_le_bytes(head[8..].try_into().expect("4-byte slice"));
     let mut body = BodyReader { r, crc: Crc32::new() };
     body.crc.update(&tag);
     body.crc.update(&head[..8]);

@@ -419,7 +419,7 @@ impl CdagGenerator {
                 self.collectives_emitted += 1;
                 // Local tracking: the collective produces the inbound bytes
                 // (await-push role) and reads our owned slice (push role).
-                let st = self.states.get_mut(&buffer).unwrap();
+                let st = self.states.get_mut(&buffer).expect("buffer tracked since creation");
                 if !inbound.is_empty() {
                     st.last_writer_cmd.update_region(&inbound, Some(id));
                     st.readers_since.update_region(&inbound, Vec::new());
@@ -481,7 +481,7 @@ impl CdagGenerator {
             );
             await_cmds.insert(a.buffer, id);
             // The await-push becomes the local original producer (§3.3).
-            let st = self.states.get_mut(&a.buffer).unwrap();
+            let st = self.states.get_mut(&a.buffer).expect("buffer tracked since creation");
             st.last_writer_cmd.update_region(&missing, Some(id));
             st.readers_since.update_region(&missing, Vec::new());
         }
@@ -534,7 +534,7 @@ impl CdagGenerator {
                     deps,
                 );
                 // The push reads the region: record for anti-deps.
-                let st = self.states.get_mut(&a.buffer).unwrap();
+                let st = self.states.get_mut(&a.buffer).expect("buffer tracked since creation");
                 st.readers_since.apply_to_region(&to_send, |rs| {
                     let mut rs = rs.clone();
                     rs.push(id);
@@ -583,7 +583,7 @@ impl CdagGenerator {
             for a in &accesses {
                 let info = self.buffers.get(a.buffer).clone();
                 let region = a.mapper.apply(&my_chunk, range, info.range);
-                let st = self.states.get_mut(&a.buffer).unwrap();
+                let st = self.states.get_mut(&a.buffer).expect("buffer tracked since creation");
                 if a.mode.is_producer() {
                     st.last_writer_cmd.update_region(&region, Some(id));
                     st.readers_since.update_region(&region, Vec::new());
@@ -608,7 +608,7 @@ impl CdagGenerator {
                     if read.is_empty() {
                         continue;
                     }
-                    let st = self.states.get_mut(&a.buffer).unwrap();
+                    let st = self.states.get_mut(&a.buffer).expect("buffer tracked since creation");
                     st.replicated.apply_to_region(&read, |s| s.insert(reader));
                 }
             }
@@ -620,7 +620,7 @@ impl CdagGenerator {
                     if written.is_empty() {
                         continue;
                     }
-                    let st = self.states.get_mut(&a.buffer).unwrap();
+                    let st = self.states.get_mut(&a.buffer).expect("buffer tracked since creation");
                     st.owner.update_region(&written, writer);
                     st.replicated.update_region(&written, NodeSet::single(writer));
                 }

@@ -94,6 +94,12 @@ pub struct ClusterConfig {
     /// Per-job fair-share weights, indexed by job id (creation order);
     /// missing entries default to 1.
     pub job_weights: Vec<u32>,
+    /// Run the static instruction-graph verifier ([`crate::verify`]) inside
+    /// every scheduler core (`--verify`): race/lifetime/coherence/pilot
+    /// violations surface as §4.4 runtime errors naming the offending
+    /// instruction pair and region. Off by default; the verifier-off cost
+    /// is one branch per scheduler batch.
+    pub verify: bool,
 }
 
 impl Default for ClusterConfig {
@@ -115,6 +121,7 @@ impl Default for ClusterConfig {
             fair_share: true,
             admission_limit: 0,
             job_weights: Vec::new(),
+            verify: false,
         }
     }
 }
@@ -164,6 +171,7 @@ impl ClusterConfigBuilder {
         fair_share: bool,
         admission_limit: usize,
         job_weights: Vec<u32>,
+        verify: bool,
     }
 
     pub fn build(self) -> ClusterConfig {
@@ -190,6 +198,7 @@ impl SchedulerConfig {
             horizon_flush: 2,
             collectives: cfg.collectives,
             direct_comm: cfg.direct_comm,
+            verify: cfg.verify,
         }
     }
 }
@@ -396,12 +405,12 @@ impl Queue {
         self.cfg.registry.register_host_task(
             name.clone(),
             Arc::new(move |ctx| {
-                *sink_c.lock().unwrap() = ctx.view(0).read_region_bytes();
+                *sink_c.lock().expect("fence sink lock poisoned") = ctx.view(0).read_region_bytes();
             }),
         );
         self.submit_decl(TaskDecl::host(name, info.range).read(buffer, RangeMapper::All));
         self.wait()?;
-        let bytes = std::mem::take(&mut *sink.lock().unwrap());
+        let bytes = std::mem::take(&mut *sink.lock().expect("fence sink lock poisoned"));
         if bytes.len() as u64 != info.range.size() * info.elem_size as u64 {
             return Err(QueueError::ShapeMismatch {
                 buffer,
@@ -482,7 +491,7 @@ impl Queue {
         // thread-local buffer; publish them before the job thread exits.
         crate::trace::flush_thread();
         let report = JobReport { job: self.job, errors: self.errors, faults: self.faults };
-        self.reports.lock().unwrap().push(report.clone());
+        self.reports.lock().expect("report lock poisoned").push(report.clone());
         report
     }
 }
@@ -558,7 +567,7 @@ impl Cluster {
         // then sees its inbox close and exits once drained.
         let cores = self.sched.join();
         let executor = self.exec.join();
-        let mut jobs = std::mem::take(&mut *self.reports.lock().unwrap());
+        let mut jobs = std::mem::take(&mut *self.reports.lock().expect("report lock poisoned"));
         jobs.sort_by_key(|r| r.job);
         // Late events (e.g. a fault notice raced with the last fence) are
         // still in the hub; fold them into the owning job's report.

@@ -256,7 +256,7 @@ impl ReceiveArbiter {
         // awaits can be garbage collected. Collective entries stay until
         // their engine calls `finish_collective` — the ring may still need
         // to read `received_region` to schedule its remaining sends.
-        let ar = self.active.get(&id).unwrap();
+        let ar = self.active.get(&id).expect("arbiter tracks every active receive");
         if ar.remaining.is_empty()
             && ar.done
             && ar.mode != RecvMode::Collective

@@ -29,7 +29,13 @@ pub struct AllocBuf {
     data: UnsafeCell<Box<[u8]>>,
 }
 
+// SAFETY: an `AllocBuf` is plain memory; all aliasing discipline is
+// delegated to the caller of the unsafe accessors below, which the IDAG
+// dependency order provides (two instructions touching the same element are
+// never in flight concurrently unless both only read).
 unsafe impl Send for AllocBuf {}
+// SAFETY: see above — interior mutability is only reachable through
+// `unsafe fn`s whose contracts require element-exclusive access.
 unsafe impl Sync for AllocBuf {}
 
 impl AllocBuf {
@@ -65,8 +71,13 @@ impl AllocBuf {
         debug_assert!(self.covers.contains_point(p), "{p} outside {}", self.covers);
         debug_assert_eq!(self.elem_size, std::mem::size_of::<T>());
         let idx = self.index_of(p);
-        let ptr = (*self.data.get()).as_ptr() as *const T;
-        *ptr.add(idx)
+        // SAFETY: `idx` is inside the allocation (debug-asserted above, and
+        // the scheduler only binds in-bounds accessors); the caller contract
+        // rules out a concurrent writer of this element.
+        unsafe {
+            let ptr = (*self.data.get()).as_ptr() as *const T;
+            *ptr.add(idx)
+        }
     }
 
     /// Write a typed element at buffer-space point `p`.
@@ -78,8 +89,12 @@ impl AllocBuf {
         debug_assert!(self.covers.contains_point(p), "{p} outside {}", self.covers);
         debug_assert_eq!(self.elem_size, std::mem::size_of::<T>());
         let idx = self.index_of(p);
-        let ptr = (*self.data.get()).as_mut_ptr() as *mut T;
-        *ptr.add(idx) = v;
+        // SAFETY: `idx` is inside the allocation; the caller contract grants
+        // exclusive access to this element, so the raw write cannot race.
+        unsafe {
+            let ptr = (*self.data.get()).as_mut_ptr() as *mut T;
+            *ptr.add(idx) = v;
+        }
     }
 
     /// Read one f32 lane of a multi-lane element (e.g. the y component of
@@ -93,8 +108,10 @@ impl AllocBuf {
         debug_assert!(self.covers.contains_point(p));
         debug_assert!(lane * 4 < self.elem_size);
         let off = self.index_of(p) * self.elem_size + lane * 4;
-        let data = &*self.data.get();
-        f32::from_ne_bytes(data[off..off + 4].try_into().unwrap())
+        // SAFETY: in-bounds by the lane/point contract; no concurrent writer
+        // by the caller contract.
+        let data = unsafe { &*self.data.get() };
+        f32::from_ne_bytes(data[off..off + 4].try_into().expect("4-byte slice"))
     }
 
     /// Write one f32 lane of a multi-lane element.
@@ -106,7 +123,9 @@ impl AllocBuf {
         debug_assert!(self.covers.contains_point(p));
         debug_assert!(lane * 4 < self.elem_size);
         let off = self.index_of(p) * self.elem_size + lane * 4;
-        let data = &mut *self.data.get();
+        // SAFETY: in-bounds by the lane/point contract; exclusive access by
+        // the caller contract.
+        let data = unsafe { &mut *self.data.get() };
         data[off..off + 4].copy_from_slice(&v.to_ne_bytes());
     }
 

@@ -64,7 +64,7 @@ impl EventHub {
     /// job submits work, or a cluster-wide event raced in between would
     /// miss it.
     pub fn register(&self, job: JobId) {
-        self.inner.slots.lock().unwrap().queues.entry(job.0).or_default();
+        self.inner.slots.lock().expect("event hub lock poisoned").queues.entry(job.0).or_default();
     }
 
     /// Drain whatever is currently in the shared receiver into the per-job
@@ -72,7 +72,7 @@ impl EventHub {
     /// it is already pumping on our behalf.
     fn pump(&self) {
         let Ok(rx) = self.inner.rx.try_lock() else { return };
-        let mut slots = self.inner.slots.lock().unwrap();
+        let mut slots = self.inner.slots.lock().expect("event hub lock poisoned");
         loop {
             match rx.try_recv() {
                 Ok((EventRoute::Job(job), ev)) => {
@@ -95,7 +95,14 @@ impl EventHub {
     /// Non-blocking receive of the next event routed to `job`.
     pub fn try_recv(&self, job: JobId) -> Option<ExecEvent> {
         self.pump();
-        self.inner.slots.lock().unwrap().queues.entry(job.0).or_default().pop_front()
+        self.inner
+            .slots
+            .lock()
+            .expect("event hub lock poisoned")
+            .queues
+            .entry(job.0)
+            .or_default()
+            .pop_front()
     }
 
     /// Blocking receive; `None` once the executor has exited and `job`'s
@@ -105,7 +112,7 @@ impl EventHub {
             if let Some(ev) = self.try_recv(job) {
                 return Some(ev);
             }
-            if self.inner.slots.lock().unwrap().closed {
+            if self.inner.slots.lock().expect("event hub lock poisoned").closed {
                 // Re-check after observing closed: pump() may have landed a
                 // final event between our pop and the flag read.
                 return self.try_recv(job);

@@ -118,7 +118,8 @@ impl ReadySet {
                     let has_work = queues.get(&job).is_some_and(|q| !q.is_empty());
                     if has_work && Self::under_limit(self.admission_limit, &self.in_flight, job) {
                         *credit -= 1;
-                        let e = queues.get_mut(&job).unwrap().pop_front().unwrap();
+                        let q = queues.get_mut(&job).expect("picked job has a queue");
+        let e = q.pop_front().expect("picked queue is nonempty");
                         if *credit == 0 || queues[&job].is_empty() {
                             *cursor = (*cursor + 1) % ring.len();
                             *credit = 0;

@@ -185,17 +185,17 @@ impl Registry {
     }
 
     pub fn register_kernel(&self, name: impl Into<String>, f: KernelFn) -> &Self {
-        self.inner.write().unwrap().kernels.insert(name.into(), f);
+        self.inner.write().expect("registry lock poisoned").kernels.insert(name.into(), f);
         self
     }
 
     pub fn register_host_task(&self, name: impl Into<String>, f: KernelFn) -> &Self {
-        self.inner.write().unwrap().host_tasks.insert(name.into(), f);
+        self.inner.write().expect("registry lock poisoned").host_tasks.insert(name.into(), f);
         self
     }
 
     fn lookup(&self, name: &str, host: bool) -> Option<KernelFn> {
-        let t = self.inner.read().unwrap();
+        let t = self.inner.read().expect("registry lock poisoned");
         if host { t.host_tasks.get(name).cloned() } else { t.kernels.get(name).cloned() }
     }
 }
@@ -257,7 +257,7 @@ pub enum ExecEvent {
 }
 
 /// Final statistics returned by [`ExecutorHandle::join`].
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Default)]
 pub struct ExecutorStats {
     pub issued_direct: u64,
     pub issued_eager: u64,
@@ -890,7 +890,22 @@ impl ExecutorHandle {
     }
 
     pub fn join(self) -> ExecutorStats {
-        self.join.join().expect("executor thread panicked")
+        match self.join.join() {
+            Ok(stats) => stats,
+            Err(payload) => {
+                // A panicked executor must not take the driver thread down
+                // with it: report what we can and return empty stats so the
+                // caller's error stream (which already carries the real
+                // failure) decides the exit code.
+                let msg = payload
+                    .downcast_ref::<&str>()
+                    .map(|s| (*s).to_string())
+                    .or_else(|| payload.downcast_ref::<String>().cloned())
+                    .unwrap_or_else(|| "opaque panic payload".to_string());
+                eprintln!("[celerity] executor thread panicked: {msg}");
+                ExecutorStats::default()
+            }
+        }
     }
 }
 

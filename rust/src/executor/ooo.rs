@@ -210,7 +210,7 @@ impl OooEngine {
                                 .all(|d| self.in_flight.get(d) == Some(&w.lane)))
                 };
                 if ready {
-                    let w = self.waiting.remove(&bid).unwrap();
+                    let w = self.waiting.remove(&bid).expect("retiring instruction was waiting");
                     if w.missing.is_empty() {
                         self.issued_direct += 1;
                     } else {

@@ -114,14 +114,14 @@ impl<T: Clone + PartialEq> RegionMap<T> {
             self.max_span = self.max_span.max(b.max[0] - b.min[0]);
         }
         if frags.len() == 1 {
-            let (b, v) = frags.into_iter().next().unwrap();
+            let (b, v) = frags.into_iter().next().expect("len checked above");
             let pos = self.entries.partition_point(|(e, _)| e.min.0 < b.min.0);
             self.entries.insert(pos, (b, v));
             return;
         }
         frags.sort_unstable_by_key(|(b, _)| b.min.0);
-        let lo_key = frags.first().unwrap().0.min.0;
-        let hi_key = frags.last().unwrap().0.min.0;
+        let lo_key = frags.first().expect("nonempty: len checked above").0.min.0;
+        let hi_key = frags.last().expect("nonempty: len checked above").0.min.0;
         let r0 = self.entries.partition_point(|(e, _)| e.min.0 < lo_key);
         let r1 = self.entries.partition_point(|(e, _)| e.min.0 <= hi_key);
         let old: Vec<(GridBox, Arc<T>)> = self.entries.drain(r0..r1).collect();
@@ -132,13 +132,13 @@ impl<T: Clone + PartialEq> RegionMap<T> {
             match (a.peek(), b.peek()) {
                 (Some(x), Some(y)) => {
                     if x.0.min.0 <= y.0.min.0 {
-                        merged.push(a.next().unwrap());
+                        merged.push(a.next().expect("peeked Some"));
                     } else {
-                        merged.push(b.next().unwrap());
+                        merged.push(b.next().expect("peeked Some"));
                     }
                 }
-                (Some(_), None) => merged.push(a.next().unwrap()),
-                (None, Some(_)) => merged.push(b.next().unwrap()),
+                (Some(_), None) => merged.push(a.next().expect("peeked Some")),
+                (None, Some(_)) => merged.push(b.next().expect("peeked Some")),
                 (None, None) => break,
             }
         }

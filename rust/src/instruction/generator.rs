@@ -452,7 +452,7 @@ impl IdagGenerator {
                 InstructionKind::HostTask { chunk: dchunk, bindings: bindings.clone(), work_per_item }
             } else {
                 InstructionKind::DeviceKernel {
-                    device: mem.to_device().unwrap(),
+                    device: mem.to_device().expect("kernels launch only on device memories"),
                     chunk: dchunk,
                     bindings: bindings.clone(),
                     work_per_item,
@@ -464,7 +464,7 @@ impl IdagGenerator {
             // 4. Tracking updates.
             for b in &bindings {
                 self.alloc_users.entry(b.alloc).or_default().push(id);
-                let st = self.states.get_mut(&b.buffer).unwrap();
+                let st = self.states.get_mut(&b.buffer).expect("buffer tracked since creation");
                 if b.mode.is_producer() {
                     // Written region: this memory holds the only coherent
                     // copy; this kernel is the local original producer.
@@ -600,7 +600,7 @@ impl IdagGenerator {
                 self.alloc_users.entry(backing.alloc).or_default().push(id);
                 // The send reads the source memory: later writers of these
                 // bytes (in *that* memory) must wait for it.
-                let st = self.states.get_mut(&buffer).unwrap();
+                let st = self.states.get_mut(&buffer).expect("buffer tracked since creation");
                 st.per_mem[src_mem.0 as usize]
                     .readers_since
                     .apply_to_region(&Region::from(send_box), |rs| {
@@ -687,7 +687,7 @@ impl IdagGenerator {
                 Some(&cmd.task),
             );
             self.alloc_users.entry(backing.alloc).or_default().push(id);
-            let st = self.states.get_mut(&buffer).unwrap();
+            let st = self.states.get_mut(&buffer).expect("buffer tracked since creation");
             st.coherent.update_region(&region, MemMask::single(dst_mem));
             let dm = &mut st.per_mem[dst_mem.0 as usize];
             dm.last_writer.update_region(&region, Some(id));
@@ -727,7 +727,7 @@ impl IdagGenerator {
                     vec![(split_id, DepKind::Dataflow)],
                     Some(&cmd.task),
                 );
-                let st = self.states.get_mut(&buffer).unwrap();
+                let st = self.states.get_mut(&buffer).expect("buffer tracked since creation");
                 st.coherent.update_region(&sub, MemMask::single(MemoryId::HOST));
                 let hs = &mut st.per_mem[MemoryId::HOST.0 as usize];
                 hs.last_writer.update_region(&sub, Some(id));
@@ -828,7 +828,7 @@ impl IdagGenerator {
         // Tracking: the collective is the local original producer of the
         // inbound bytes (they exist only on the host after it), and a
         // reader of our own contribution.
-        let st = self.states.get_mut(&buffer).unwrap();
+        let st = self.states.get_mut(&buffer).expect("buffer tracked since creation");
         if !inbound.is_empty() {
             st.coherent.update_region(&inbound, MemMask::single(MemoryId::HOST));
             let hs = &mut st.per_mem[MemoryId::HOST.0 as usize];
@@ -1068,7 +1068,7 @@ impl IdagGenerator {
             self.alloc_users.entry(alloc).or_default().push(copy_id);
             // The resize copy is now the producer of those bytes in this
             // memory (they moved allocations).
-            let st = self.states.get_mut(&buffer).unwrap();
+            let st = self.states.get_mut(&buffer).expect("buffer tracked since creation");
             let ms = &mut st.per_mem[mem.0 as usize];
             ms.last_writer
                 .update_region(&Region::from(copy_box), Some(copy_id));
@@ -1088,7 +1088,7 @@ impl IdagGenerator {
             );
             self.states
                 .get_mut(&buffer)
-                .unwrap()
+                .expect("buffer tracked since creation")
                 .per_mem[mem.0 as usize]
                 .backings
                 .remove(bk.alloc);
@@ -1097,7 +1097,7 @@ impl IdagGenerator {
         let backing = Backing { alloc, covers: goal, alloc_instr };
         self.states
             .get_mut(&buffer)
-            .unwrap()
+            .expect("buffer tracked since creation")
             .per_mem[mem.0 as usize]
             .backings
             .insert(backing.clone());
@@ -1238,7 +1238,7 @@ impl IdagGenerator {
             src_reader_adds.push((frag, id));
         }
         if !copied_boxes.is_empty() {
-            let st = self.states.get_mut(&buffer).unwrap();
+            let st = self.states.get_mut(&buffer).expect("buffer tracked since creation");
             st.coherent.apply_to_region(
                 &Region::from_boxes(copied_boxes.iter().copied()),
                 |m| m.insert(dst),
@@ -1315,7 +1315,7 @@ impl IdagGenerator {
             );
             self.states
                 .get_mut(&buffer)
-                .unwrap()
+                .expect("buffer tracked since creation")
                 .per_mem[mem.0 as usize]
                 .backings
                 .remove(bk.alloc);

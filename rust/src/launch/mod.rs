@@ -47,6 +47,7 @@ pub fn parse_digest_marker(line: &str) -> Option<(u64, u64)> {
 
 /// Launcher configuration (the `celerity launch` CLI fills this in).
 #[derive(Clone)]
+#[derive(Debug)]
 pub struct LaunchConfig {
     pub nodes: u64,
     /// Application name, forwarded to every worker as `--app`.
@@ -199,7 +200,8 @@ pub fn launch(cfg: &LaunchConfig) -> std::io::Result<LaunchReport> {
             for line in BufReader::new(stdout).lines() {
                 let Ok(line) = line else { break };
                 if let Some((node, value)) = parse_digest_marker(&line) {
-                    if let Some(slot) = dg.lock().unwrap().get_mut(node as usize) {
+                    let mut dg = dg.lock().expect("digest lock poisoned");
+                    if let Some(slot) = dg.get_mut(node as usize) {
                         *slot = Some(value);
                     }
                 }
@@ -221,8 +223,8 @@ pub fn launch(cfg: &LaunchConfig) -> std::io::Result<LaunchReport> {
     }
 
     let digests = Arc::try_unwrap(digests)
-        .map(|m| m.into_inner().unwrap())
-        .unwrap_or_else(|arc| arc.lock().unwrap().clone());
+        .map(|m| m.into_inner().expect("digest lock poisoned"))
+        .unwrap_or_else(|arc| arc.lock().expect("digest lock poisoned").clone());
     let mut errors = Vec::new();
     // Report the root-cause node first: the worker that failed first
     // explains every downstream abort and fail-fast kill.
@@ -334,7 +336,11 @@ fn supervise(
         }
         std::thread::sleep(Duration::from_millis(20));
     }
-    (codes.into_iter().map(|c| c.unwrap()).collect(), killed, root_cause)
+    let codes = codes
+        .into_iter()
+        .map(|c| c.expect("supervise exits only once every child is reaped"))
+        .collect();
+    (codes, killed, root_cause)
 }
 
 #[cfg(test)]

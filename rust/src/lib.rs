@@ -87,6 +87,15 @@
 //!   fence-digest cross-checking and exit-code aggregation; worker
 //!   liveness is guarded by heartbeats over the comm fabric
 //!   ([`executor::heartbeat`])
+//! - [`verify`] — static instruction-graph verification (`--verify`): a
+//!   [`Verifier`](verify::Verifier) absorbs each scheduler batch and checks
+//!   race-freedom (every conflicting access pair ordered by a dependency
+//!   path), allocation lifetime, read coherence/initialization, pilot/
+//!   message-id matching and structural invariants — without executing
+//!   anything; [`verify_cluster`](verify::verify_cluster) additionally
+//!   matches sends/receives/collective geometry across the nodes' compiled
+//!   streams. Violations surface as §4.4 runtime errors naming the
+//!   offending instruction pair and region
 //! - `runtime` — PJRT wrapper executing AOT-compiled HLO kernels
 //!   (requires the `pjrt` feature and an XLA toolchain)
 //! - [`sim`] — discrete-event cluster simulator for the Fig 6 scaling study
@@ -116,6 +125,12 @@
 //! strong_scaling` measures the live cluster across node counts and
 //! transports (see the "Distributed execution" section).
 
+// Panic hygiene: library code must justify every panic path. `.unwrap()` is
+// banned outside tests (use `.expect("why this cannot fail")` or a real
+// error path); `scripts/lint_panics.py` additionally audits the remaining
+// expect/panic sites against an allowlist in CI.
+#![cfg_attr(not(test), warn(clippy::unwrap_used))]
+
 pub mod apps;
 pub mod buffer;
 pub mod comm;
@@ -135,3 +150,4 @@ pub mod sim;
 pub mod task;
 pub mod trace;
 pub mod util;
+pub mod verify;

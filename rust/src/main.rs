@@ -219,6 +219,7 @@ fn main() {
     let steps: u64 = num_arg(&args, "--steps", "2");
     let collectives = !args.iter().any(|a| a == "--no-collectives");
     let direct_comm = !args.iter().any(|a| a == "--no-direct-comm");
+    let verify = args.iter().any(|a| a == "--verify");
 
     match cmd {
         "graph" => {
@@ -264,6 +265,7 @@ fn main() {
                 },
                 lookahead: !args.iter().any(|a| a == "--no-lookahead"),
                 direct_comm,
+                verify,
                 ..Default::default()
             };
             let r = simulate(&cfg, |tm| build_app(tm, &app, steps));
@@ -275,6 +277,15 @@ fn main() {
                 "makespan {:.6} s | {} instructions | {} comm bytes | {} resizes | {} B allocated",
                 r.makespan, r.instructions, r.comm_bytes, r.resizes, r.allocated_bytes
             );
+            if verify {
+                for v in &r.violations {
+                    eprintln!("sim: {v}");
+                }
+                println!("verify: {} violation(s)", r.violations.len());
+                if !r.violations.is_empty() {
+                    std::process::exit(1);
+                }
+            }
         }
         "run" => {
             let transport = Transport::parse(&arg(&args, "--transport", "channel"))
@@ -303,6 +314,7 @@ fn main() {
                 .fault_plan(fault_plan_arg(&args))
                 .fair_share(!args.iter().any(|a| a == "--no-fair-share"))
                 .admission_limit(num_arg(&args, "--admission-limit", "0") as usize)
+                .verify(verify)
                 .build();
             // (job, node, digest): sorted at the end so per-job digest rows
             // come out in a deterministic order regardless of thread timing.
@@ -317,7 +329,9 @@ fn main() {
                         let app_c = app.clone();
                         Arc::new(move |q: &mut Queue| match run_live_app(q, &app_c, steps) {
                             Ok(bytes) => {
-                                dc.lock().unwrap().push((q.job().0, q.node.0, digest(&bytes)))
+                                dc.lock()
+                                    .expect("digest lock poisoned")
+                                    .push((q.job().0, q.node.0, digest(&bytes)))
                             }
                             Err(e) => eprintln!("node {} job {} failed: {e}", q.node, q.job()),
                         }) as JobProgram
@@ -328,7 +342,13 @@ fn main() {
                 let dc = digests.clone();
                 let app_c = app.clone();
                 try_run_cluster(cfg, move |q| match run_live_app(q, &app_c, steps) {
-                    Ok(bytes) => dc.lock().unwrap().push((0, q.node.0, digest(&bytes))),
+                    Ok(bytes) => {
+                        dc.lock().expect("digest lock poisoned").push((
+                            0,
+                            q.node.0,
+                            digest(&bytes),
+                        ))
+                    }
                     Err(e) => eprintln!("node {} failed: {e}", q.node),
                 })
             };
@@ -352,7 +372,7 @@ fn main() {
                 }
                 report_faults(r.node, &r.faults);
             }
-            let mut digests = digests.lock().unwrap().clone();
+            let mut digests = digests.lock().expect("digest lock poisoned").clone();
             digests.sort();
             for (job, node, d) in &digests {
                 if jobs > 1 {
@@ -452,6 +472,7 @@ fn main() {
                 .collectives(collectives)
                 .direct_comm(direct_comm)
                 .heartbeat_timeout_ms(heartbeat_timeout_ms)
+                .verify(verify)
                 .build();
             let bind_addr = peers[node.0 as usize];
             let comm: CommRef = match TcpCommunicator::bind(node, peers) {
@@ -487,7 +508,7 @@ fn main() {
             let out: Arc<Mutex<Result<Vec<u8>, QueueError>>> = Arc::new(Mutex::new(Ok(Vec::new())));
             let oc = out.clone();
             let report = run_node(&cfg, node, comm, move |q| {
-                *oc.lock().unwrap() = run_live_app(q, &app_c, steps);
+                *oc.lock().expect("output lock poisoned") = run_live_app(q, &app_c, steps);
             });
             for e in &report.errors {
                 eprintln!("node {} error: {e}", report.node);
@@ -496,7 +517,7 @@ fn main() {
             if let Some(p) = &trace_json {
                 export_trace(p, None);
             }
-            match &*out.lock().unwrap() {
+            match &*out.lock().expect("output lock poisoned") {
                 Ok(bytes) => {
                     // One atomic marker line (single write): the contract
                     // `celerity launch` and the tests parse. Interleaving
@@ -581,10 +602,11 @@ fn main() {
         _ => {
             println!("usage: celerity graph|sim|run|worker|launch --app nbody|rsim|wavesim [--nodes N] [--devices D] [--steps S]");
             println!("  graph:  --dump tdag,cdag,idag   (Graphviz dot on stdout)");
-            println!("  sim:    [--baseline] [--no-lookahead] [--no-direct-comm]");
-            println!("  run:    [--transport channel|tcp] [--jobs N] [--no-fair-share] [--admission-limit N] [--no-collectives] [--no-direct-comm] [--trace out.json] [--trace-dot out.dot] [--heartbeat-timeout MS] [--fault-plan \"seed=7 drop=0.01 ...\"]   (live in-process cluster; --jobs N runs N concurrent tenant jobs)");
-            println!("  worker: --node I --peers a:p[,b:p,...] [--heartbeat-timeout MS] [--trace out.json] [--no-collectives] [--no-direct-comm] [--fault-plan PLAN]   (one node of a multi-process TCP cluster; a single address is a valid 1-node run)");
+            println!("  sim:    [--baseline] [--no-lookahead] [--no-direct-comm] [--verify]");
+            println!("  run:    [--transport channel|tcp] [--jobs N] [--no-fair-share] [--admission-limit N] [--no-collectives] [--no-direct-comm] [--verify] [--trace out.json] [--trace-dot out.dot] [--heartbeat-timeout MS] [--fault-plan \"seed=7 drop=0.01 ...\"]   (live in-process cluster; --jobs N runs N concurrent tenant jobs)");
+            println!("  worker: --node I --peers a:p[,b:p,...] [--heartbeat-timeout MS] [--trace out.json] [--no-collectives] [--no-direct-comm] [--verify] [--fault-plan PLAN]   (one node of a multi-process TCP cluster; a single address is a valid 1-node run)");
             println!("  launch: -n N [--heartbeat-timeout MS] [--trace base] [--fault-plan PLAN] [--no-fail-fast] [--fail-fast-grace MS] -- <app> [worker args...]   (spawn N worker processes, stream logs, cross-check digests)");
+            println!("  --verify: static instruction-graph verification (races, lifetimes, coherence, comm matching) — violations surface as runtime errors and fail the run");
             println!("  fault plans: seed=N drop=P dup=P corrupt=P delay=LO..HIms break=nodeN@frameM kill=nodeN@frameM (CELERITY_FAULT_PLAN env fallback)");
         }
     }

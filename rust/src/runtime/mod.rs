@@ -91,7 +91,7 @@ impl PjrtKernel {
                         bail!("kernel '{}': arg too large ({n} > {})", self.name, vals.len());
                     }
                     for (i, c) in bytes.chunks_exact(4).enumerate() {
-                        vals[i] = f32::from_ne_bytes(c.try_into().unwrap());
+                        vals[i] = f32::from_ne_bytes(c.try_into().expect("4-byte chunk"));
                     }
                     let dims: Vec<i64> = spec.dims.iter().map(|d| *d as i64).collect();
                     xla::Literal::vec1(&vals).reshape(&dims)?
@@ -103,7 +103,7 @@ impl PjrtKernel {
                 (DType::I32, ArgBytes::Bytes(bytes)) => {
                     let mut vals = vec![0i32; spec.elements()];
                     for (i, c) in bytes.chunks_exact(4).enumerate() {
-                        vals[i] = i32::from_ne_bytes(c.try_into().unwrap());
+                        vals[i] = i32::from_ne_bytes(c.try_into().expect("4-byte chunk"));
                     }
                     let dims: Vec<i64> = spec.dims.iter().map(|d| *d as i64).collect();
                     xla::Literal::vec1(&vals).reshape(&dims)?

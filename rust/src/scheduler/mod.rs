@@ -55,6 +55,12 @@ pub struct SchedulerConfig {
     /// consumer geometry is known. On by default; off (`--no-direct-comm`)
     /// reproduces the fully staged lowering (ablation).
     pub direct_comm: bool,
+    /// Run the static instruction-graph verifier ([`crate::verify`]) over
+    /// every emitted batch: race-freedom, allocation lifetime, coherence,
+    /// pilot matching and structural invariants are checked as the graph is
+    /// compiled, and violations surface through the §4.4 error stream. Off
+    /// by default (`--verify`); when off the cost is one branch per batch.
+    pub verify: bool,
 }
 
 impl Default for SchedulerConfig {
@@ -71,6 +77,7 @@ impl Default for SchedulerConfig {
             horizon_flush: 2,
             collectives: true,
             direct_comm: true,
+            verify: false,
         }
     }
 }
@@ -81,6 +88,9 @@ pub struct Scheduler {
     cdag: CdagGenerator,
     idag: IdagGenerator,
     cfg: SchedulerConfig,
+    /// Present iff `cfg.verify`: absorbs every emitted batch and reports
+    /// ordering/lifetime/coherence violations as §4.4 errors.
+    verifier: Option<crate::verify::Verifier>,
     /// The command queue of Fig 5 (only fills while lookahead holds).
     queue: VecDeque<CommandRef>,
     /// Bounding cover of requirements queued per (buffer, memory): a queued
@@ -122,12 +132,16 @@ impl Scheduler {
                 d2d: cfg.d2d,
                 direct_comm: cfg.direct_comm,
             },
-            buffers,
+            buffers.clone(),
         );
+        let verifier = cfg
+            .verify
+            .then(|| crate::verify::Verifier::new(cfg.job, cfg.node, buffers));
         Scheduler {
             cdag,
             idag,
             cfg,
+            verifier,
             queue: VecDeque::new(),
             queued_cover: HashMap::new(),
             holding: false,
@@ -144,6 +158,9 @@ impl Scheduler {
     /// Register newly created buffers.
     pub fn notify_buffers(&mut self, pool: BufferPool) {
         self.cdag.notify_buffers(pool.clone());
+        if let Some(v) = &mut self.verifier {
+            v.notify_buffers(pool.clone());
+        }
         self.idag.notify_buffers(pool);
     }
 
@@ -172,7 +189,11 @@ impl Scheduler {
         }
         let instrs = self.idag.take_new_instructions();
         self.instructions_generated += instrs.len() as u64;
-        (instrs, self.idag.take_pilots())
+        let pilots = self.idag.take_pilots();
+        if let Some(v) = &mut self.verifier {
+            v.absorb_batch(&instrs, &pilots);
+        }
+        (instrs, pilots)
     }
 
     /// Force-flush the command queue (used on shutdown).
@@ -180,7 +201,11 @@ impl Scheduler {
         self.flush();
         let instrs = self.idag.take_new_instructions();
         self.instructions_generated += instrs.len() as u64;
-        (instrs, self.idag.take_pilots())
+        let pilots = self.idag.take_pilots();
+        if let Some(v) = &mut self.verifier {
+            v.absorb_batch(&instrs, &pilots);
+        }
+        (instrs, pilots)
     }
 
     /// Scheduler errors from command generation (§4.4).
@@ -193,6 +218,21 @@ impl Scheduler {
     /// thread, merged into `SchedulerOut.errors` alongside CDAG errors.
     pub fn take_idag_errors(&mut self) -> Vec<String> {
         self.idag.take_errors()
+    }
+
+    /// Violations found by the `--verify` static analysis since the last
+    /// drain, rendered for the §4.4 error stream. Empty when verification
+    /// is off.
+    pub fn take_verify_errors(&mut self) -> Vec<String> {
+        match &mut self.verifier {
+            Some(v) => v.take_violations().iter().map(|v| v.to_string()).collect(),
+            None => Vec::new(),
+        }
+    }
+
+    /// Instructions absorbed by the verifier so far (0 when off).
+    pub fn instructions_verified(&self) -> u64 {
+        self.verifier.as_ref().map_or(0, |v| v.instructions_verified)
     }
 
     pub fn idag(&self) -> &IdagGenerator {
@@ -321,6 +361,12 @@ mod tests {
         b
     }
 
+    /// Always-on verification in scheduler tests: every graph these tests
+    /// compile is additionally audited by the static verifier.
+    fn vcfg() -> SchedulerConfig {
+        SchedulerConfig { verify: true, ..Default::default() }
+    }
+
     fn run_scheduler(
         lookahead: bool,
         f: impl FnOnce(&mut TaskManager),
@@ -329,10 +375,8 @@ mod tests {
         f(&mut tm);
         tm.shutdown();
         let tasks = tm.take_new_tasks();
-        let mut sched = Scheduler::new(
-            SchedulerConfig { lookahead, ..Default::default() },
-            tm.buffers().clone(),
-        );
+        let cfg = SchedulerConfig { lookahead, ..vcfg() };
+        let mut sched = Scheduler::new(cfg, tm.buffers().clone());
         let mut all = Vec::new();
         for t in &tasks {
             let (instrs, _) = sched.process(t);
@@ -340,6 +384,9 @@ mod tests {
         }
         let (instrs, _) = sched.flush_now();
         all.extend(instrs);
+        let violations = sched.take_verify_errors();
+        assert!(violations.is_empty(), "verifier must pass clean: {violations:?}");
+        assert_eq!(sched.instructions_verified() as usize, all.len());
         (sched, all)
     }
 
@@ -368,7 +415,7 @@ mod tests {
         let mut tm = TaskManager::new();
         rsim_tasks(&mut tm, 32, 64);
         let tasks = tm.take_new_tasks();
-        let mut sched = Scheduler::new(SchedulerConfig::default(), tm.buffers().clone());
+        let mut sched = Scheduler::new(vcfg(), tm.buffers().clone());
         let mut emitted_before_end = 0;
         for t in &tasks {
             let (instrs, _) = sched.process(t);
@@ -403,7 +450,7 @@ mod tests {
             }
             tm.take_new_tasks()
         };
-        let mut sched = Scheduler::new(SchedulerConfig::default(), tm.buffers().clone());
+        let mut sched = Scheduler::new(vcfg(), tm.buffers().clone());
         let mut tail_latency = Vec::new();
         for t in &tasks {
             let (instrs, _) = sched.process(t);
@@ -437,7 +484,7 @@ mod tests {
         rsim_tasks(&mut tm, 8, 16);
         tm.barrier();
         let tasks = tm.take_new_tasks();
-        let mut sched = Scheduler::new(SchedulerConfig::default(), tm.buffers().clone());
+        let mut sched = Scheduler::new(vcfg(), tm.buffers().clone());
         let mut total = 0;
         for t in &tasks {
             let (instrs, _) = sched.process(t);
@@ -460,7 +507,7 @@ mod tests {
         build(&mut tm);
         let tasks = tm.take_new_tasks();
 
-        let mut seq = Scheduler::new(SchedulerConfig::default(), tm.buffers().clone());
+        let mut seq = Scheduler::new(vcfg(), tm.buffers().clone());
         let mut seq_instrs = Vec::new();
         for t in &tasks {
             let (i, _) = seq.process(t);
@@ -469,7 +516,7 @@ mod tests {
         let (i, _) = seq.flush_now();
         seq_instrs.extend(i);
 
-        let mut bat = Scheduler::new(SchedulerConfig::default(), tm.buffers().clone());
+        let mut bat = Scheduler::new(vcfg(), tm.buffers().clone());
         let (mut bat_instrs, _) = bat.process_batch(&tasks);
         let (i, _) = bat.flush_now();
         bat_instrs.extend(i);

@@ -22,6 +22,7 @@ use std::thread::JoinHandle;
 /// as the buffer's user-memory (M0) allocation. Travels through the
 /// scheduler pipeline so it is ordered before any instruction that reads
 /// it.
+#[derive(Debug)]
 pub struct UserInit {
     pub alloc: AllocationId,
     pub covers: GridBox,
@@ -105,16 +106,35 @@ impl SchedulerHandle {
         self.tx.clone()
     }
 
-    /// Send a message on behalf of `job`.
+    /// Send a message on behalf of `job`. A dead scheduler thread is
+    /// reported, not propagated: the executor side observes the closed
+    /// output channel and surfaces the failure through the §4.4 error
+    /// stream, so panicking the *user* thread here would only mask it.
     pub fn send(&self, job: JobId, msg: SchedulerMsg) {
-        self.tx.send((job, msg)).expect("scheduler thread alive");
+        if self.tx.send((job, msg)).is_err() {
+            eprintln!("[celerity] scheduler thread is gone; dropping a {job} message");
+        }
     }
 
     /// Drop the handle's sender and collect the retired per-job schedulers
-    /// (statistics). Blocks until every other sender clone is gone.
+    /// (statistics). Blocks until every other sender clone is gone. If the
+    /// scheduler thread panicked, the panic is reported and an empty
+    /// statistics list is returned — callers treat it like a thread that
+    /// retired no cores.
     pub fn join(self) -> Vec<(JobId, Scheduler)> {
         drop(self.tx);
-        self.join.join().expect("scheduler thread panicked")
+        match self.join.join() {
+            Ok(retired) => retired,
+            Err(panic) => {
+                let msg = panic
+                    .downcast_ref::<&str>()
+                    .map(|s| (*s).to_string())
+                    .or_else(|| panic.downcast_ref::<String>().cloned())
+                    .unwrap_or_else(|| "opaque panic payload".to_string());
+                eprintln!("[celerity] scheduler thread panicked: {msg}");
+                Vec::new()
+            }
+        }
     }
 }
 
@@ -176,9 +196,13 @@ fn run_scheduler_thread(
                 compile_batch(cfg_node.0, job, core, &tasks, &out);
             }
             SchedulerMsg::Shutdown => {
-                let mut core = cores.remove(&job).expect("core exists");
-                flush_core(cfg_node.0, job, &mut core, &out);
-                retired.push((job, core));
+                // The entry() above created the core if it did not exist,
+                // but stay defensive: a double shutdown must not kill the
+                // thread the *other* jobs are still compiling on.
+                if let Some(mut core) = cores.remove(&job) {
+                    flush_core(cfg_node.0, job, &mut core, &out);
+                    retired.push((job, core));
+                }
             }
         }
     }
@@ -265,6 +289,7 @@ fn ship(
 ) {
     let mut errors: Vec<String> = core.take_errors().iter().map(|e| e.to_string()).collect();
     errors.extend(core.take_idag_errors());
+    errors.extend(core.take_verify_errors());
     if !instructions.is_empty() || !pilots.is_empty() || !errors.is_empty() {
         let mut batch = SchedulerOut::batch(job, instructions, pilots);
         batch.errors = errors;

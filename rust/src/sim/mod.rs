@@ -110,6 +110,12 @@ pub struct SimConfig {
     pub cost: CostModel,
     /// Record a per-instruction timeline (Fig 7).
     pub record_trace: bool,
+    /// Run the static instruction-graph verifier over every node's compiled
+    /// stream plus the cluster-level communication matching (`sim --verify`).
+    /// Only meaningful for [`ExecModel::Idag`]: the §2.5 baseline sequences
+    /// instructions through simulator-side chains rather than graph edges,
+    /// so its streams are *expected* to be under-ordered.
+    pub verify: bool,
 }
 
 impl Default for SimConfig {
@@ -123,6 +129,7 @@ impl Default for SimConfig {
             hint: SplitHint::D1,
             cost: CostModel::default(),
             record_trace: false,
+            verify: false,
         }
     }
 }
@@ -148,6 +155,8 @@ pub struct SimResult {
     pub resizes: u64,
     pub allocated_bytes: u64,
     pub trace: Vec<TraceEvent>,
+    /// Rendered verifier violations (`--verify`; empty when off or clean).
+    pub violations: Vec<String>,
 }
 
 impl SimResult {
@@ -215,6 +224,8 @@ where
     let mut nodes: Vec<NodeSim> = Vec::new();
     let mut resizes = 0;
     let mut allocated = 0;
+    let mut violations: Vec<String> = Vec::new();
+    let mut verify_streams: Vec<crate::verify::NodeStream> = Vec::new();
     for nid in 0..cfg.num_nodes {
         let node = match cfg.exec {
             ExecModel::Idag => {
@@ -237,10 +248,16 @@ where
                         // bench ablation for the measured delta).
                         collectives: false,
                         direct_comm: cfg.direct_comm,
+                        // `sim --verify` checks post-hoc over the complete
+                        // streams (per-node + cluster matching) below;
+                        // running the incremental in-core verifier too would
+                        // double the work for identical verdicts.
+                        verify: false,
                     },
                     buffers.clone(),
                 );
                 let mut instrs = Vec::new();
+                let mut pilots = Vec::new();
                 let mut avail = HashMap::new();
                 let mut clock = 0.0;
                 for t in &tasks {
@@ -250,21 +267,41 @@ where
                     // per-wakeup overhead (the live thread drains runs via
                     // the same process_batch entry point).
                     clock += cfg.cost.sched_task_cost;
-                    let (batch, _) = sched.process_batch(std::slice::from_ref(t));
+                    let (batch, ps) = sched.process_batch(std::slice::from_ref(t));
                     clock += cfg.cost.sched_instr_cost * batch.len() as f64;
+                    pilots.extend(ps);
                     for i in batch {
                         avail.insert(i.id.0, clock);
                         instrs.push(i);
                     }
                 }
-                let (batch, _) = sched.flush_now();
+                let (batch, ps) = sched.flush_now();
                 clock += cfg.cost.sched_instr_cost * batch.len() as f64;
+                pilots.extend(ps);
                 for i in batch {
                     avail.insert(i.id.0, clock);
                     instrs.push(i);
                 }
                 resizes = resizes.max(sched.idag().resizes_emitted);
                 allocated = allocated.max(sched.idag().bytes_allocated);
+                if cfg.verify {
+                    violations.extend(
+                        crate::verify::verify_stream(
+                            JobId(0),
+                            NodeId(nid),
+                            buffers.clone(),
+                            &instrs,
+                            &pilots,
+                        )
+                        .iter()
+                        .map(|v| format!("node {nid}: {v}")),
+                    );
+                    verify_streams.push(crate::verify::NodeStream {
+                        node: NodeId(nid),
+                        instructions: instrs.clone(),
+                        pilots,
+                    });
+                }
                 NodeSim { instrs, avail, extra_deps: HashMap::new(), cmd_overhead: HashMap::new() }
             }
             ExecModel::Baseline => {
@@ -322,6 +359,11 @@ where
             }
         };
         nodes.push(node);
+    }
+    if cfg.verify && !verify_streams.is_empty() {
+        violations.extend(
+            crate::verify::verify_cluster(&verify_streams).iter().map(|v| v.to_string()),
+        );
     }
 
     // 3. Cross-node transfer matching (virtual receive arbitration): for
@@ -448,7 +490,7 @@ where
         fn cmp(&self, o: &Self) -> std::cmp::Ordering {
             self.0
                 .partial_cmp(&o.0)
-                .unwrap()
+                .expect("sim timestamps are never NaN")
                 .then(self.1.cmp(&o.1))
                 .then(self.2.cmp(&o.2))
         }
@@ -464,7 +506,7 @@ where
     }
 
     while let Some(Reverse(Ev(ready, n, id))) = heap.pop() {
-        let s = st.get_mut(&(n, id)).unwrap();
+        let s = st.get_mut(&(n, id)).expect("sim tracks every emitted instruction");
         if s.done {
             continue;
         }
@@ -594,7 +636,7 @@ where
         // Notify intra-node dependents.
         if let Some(deps) = dependents.get(&(n, id)).cloned() {
             for did in deps {
-                let ds = st.get_mut(&(n, did)).unwrap();
+                let ds = st.get_mut(&(n, did)).expect("sim tracks every emitted instruction");
                 ds.missing -= 1;
                 ds.ready_at = ds.ready_at.max(end);
                 if ds.missing == 0 && ds.msgs_missing == 0 && !ds.done {
@@ -606,7 +648,7 @@ where
         if let Some(waiters) = send_waiters.get(&(n, id)).cloned() {
             for (rn, rid, bytes) in waiters {
                 let arrival = end + cost.net_latency + bytes as f64 / cost.net_bw;
-                let rs = st.get_mut(&(rn, rid)).unwrap();
+                let rs = st.get_mut(&(rn, rid)).expect("sim tracks every emitted instruction");
                 rs.msgs_missing -= 1;
                 rs.msg_ready = rs.msg_ready.max(arrival);
                 if rs.missing == 0 && rs.msgs_missing == 0 && !rs.done {
@@ -623,6 +665,7 @@ where
         resizes,
         allocated_bytes: allocated,
         trace,
+        violations,
     }
 }
 
@@ -660,6 +703,23 @@ mod tests {
         assert!(r.makespan > 0.0);
         assert!(r.instructions > 20);
         assert!(r.comm_bytes > 0, "all-gather must communicate");
+    }
+
+    #[test]
+    fn simulated_graphs_verify_clean() {
+        // `sim --verify`: the per-node streams and their cross-node
+        // matching must pass the static verifier for every node count the
+        // Fig-6 study sweeps.
+        for nodes in [1, 2, 4] {
+            let cfg = SimConfig {
+                num_nodes: nodes,
+                num_devices: 2,
+                verify: true,
+                ..Default::default()
+            };
+            let r = simulate(&cfg, nbody_build(1 << 10, 3));
+            assert_eq!(r.violations, Vec::<String>::new(), "{nodes} nodes");
+        }
     }
 
     #[test]

@@ -296,12 +296,12 @@ impl TaskManager {
     }
 
     fn apply_access_updates(&mut self, tid: TaskId) {
-        let task = self.dag.get(tid.0).unwrap().payload.clone();
+        let task = self.dag.get(tid.0).expect("epoch task id resolves in the TDAG").payload.clone();
         let range = task.kind.execution_range().unwrap_or(crate::grid::Range::UNIT);
         for Access { buffer, mode, mapper } in task.kind.accesses() {
             let info = self.buffers.get(*buffer);
             let region = mapper.apply(&crate::grid::GridBox::full(range), range, info.range);
-            let st = self.states.get_mut(buffer).unwrap();
+            let st = self.states.get_mut(buffer).expect("buffer state tracked since create_buffer");
             if mode.is_producer() {
                 st.last_writers.update_region(&region, tid);
                 st.readers_since.update_region(&region, Vec::new());

@@ -266,7 +266,7 @@ pub fn flush_thread() {
     LOCAL.with(|b| {
         let mut b = b.borrow_mut();
         if !b.events.is_empty() {
-            SINK.lock().unwrap().append(&mut b.events);
+            SINK.lock().expect("trace sink lock poisoned").append(&mut b.events);
         }
     });
 }
@@ -277,7 +277,7 @@ pub fn flush_thread() {
 pub fn drain() -> Trace {
     disable();
     flush_thread();
-    let events = std::mem::take(&mut *SINK.lock().unwrap());
+    let events = std::mem::take(&mut *SINK.lock().expect("trace sink lock poisoned"));
     Trace { events }
 }
 

@@ -21,7 +21,17 @@ struct Ring<T> {
     closed: AtomicBool,
 }
 
+// SAFETY: the ring is only ever shared between exactly one producer
+// (`Sender`) and one consumer (`Receiver`), and every slot is accessed by at
+// most one side at a time: the producer writes only slots in
+// `[head, tail + 1)` it has claimed via the `tail` CAS-free protocol, the
+// consumer reads only slots in `[head, tail)`, and the Release store on
+// `tail` (resp. `head`) publishes the slot contents before the other side's
+// Acquire load can observe the index move. `T: Send` is required because
+// values physically move between the two threads.
 unsafe impl<T: Send> Send for Ring<T> {}
+// SAFETY: see above — all interior mutability is slot-exclusive under the
+// head/tail protocol; the atomics themselves are Sync.
 unsafe impl<T: Send> Sync for Ring<T> {}
 
 /// Sending half; owned by exactly one thread.
@@ -92,6 +102,10 @@ impl<T> Sender<T> {
         if ring.closed.load(Ordering::Acquire) {
             return Err(Disconnected);
         }
+        // SAFETY: `tail - head < capacity` (checked above), so slot
+        // `tail & (capacity-1)` is unoccupied: the consumer has already read
+        // past it (its Release store to `head` happened-before our Acquire
+        // load). We are the only producer, so nobody else writes it.
         unsafe {
             (*ring.buf[tail & (ring.capacity - 1)].get()).write(value);
         }
@@ -110,6 +124,9 @@ impl<T> Sender<T> {
         if tail.wrapping_sub(head) == ring.capacity {
             return Err(Ok(value));
         }
+        // SAFETY: same argument as `send` — the fullness check above proves
+        // the slot is past the consumer's head, and single-producer ownership
+        // makes the write exclusive.
         unsafe {
             (*ring.buf[tail & (ring.capacity - 1)].get()).write(value);
         }
@@ -149,6 +166,11 @@ impl<T> Receiver<T> {
                 return Err(None);
             }
         }
+        // SAFETY: `head != tail` here, so the producer's Release store to
+        // `tail` (observed by the Acquire load above) happened-after it
+        // initialized slot `head & (capacity-1)`. Reading by value and then
+        // bumping `head` transfers ownership exactly once — the producer will
+        // not overwrite the slot until it observes the new head.
         let value = unsafe { (*ring.buf[head & (ring.capacity - 1)].get()).assume_init_read() };
         ring.head.store(head.wrapping_add(1), Ordering::Release);
         Ok(value)

@@ -1,0 +1,1615 @@
+//! Static instruction-graph verification: race, lifetime, coherence and
+//! communication analysis over the compiled IDAG.
+//!
+//! The paper's central claim — that the instruction graph "preserves full
+//! concurrency between memory management, data transfers, MPI peer-to-peer
+//! communication and kernel invocation" — is only safe if every pair of
+//! conflicting accesses is provably ordered by a dependency path. The
+//! generators in [`crate::command`] and [`crate::instruction`] emit
+//! dependencies *by construction*; this module checks the result
+//! *by analysis*, without executing anything:
+//!
+//! 1. **Race-freedom** — every instruction pair touching overlapping
+//!    `(AllocationId, GridBox)` regions with at least one write is ordered
+//!    by a dependency path (reachability over the topological stream order,
+//!    with per-allocation [`RegionMap`] interval indexes so the check
+//!    scales past toy graphs).
+//! 2. **Allocation lifetime** — every access hits a live allocation whose
+//!    `alloc` happens-before the access and whose `free` happens-after
+//!    every recorded use.
+//! 3. **Coherence / initialization** — every read's bytes were produced by
+//!    an ordered writer (kernel, receive, copy, or the user-init epoch),
+//!    so no instruction reads uninitialized memory.
+//! 4. **Communication matching** — every `send` has an eagerly-announced
+//!    pilot with identical geometry, message ids are collision-free and
+//!    stay inside the job's id namespace; [`verify_cluster`] additionally
+//!    matches sends against the receives implied by the peers'
+//!    deterministically-replicated CDAG state, and cross-checks collective
+//!    ring geometry across nodes.
+//! 5. **Structural invariants** — no dangling or forward (cyclic)
+//!    dependency edges, no duplicate instruction ids, and every
+//!    horizon/epoch dominates the entire graph built before it (the §3.5
+//!    pruning soundness condition).
+//!
+//! ## How reachability scales
+//!
+//! Instruction ids are assigned monotonically and every dependency edge
+//! points backwards, so arrival order *is* a topological order. Each
+//! instruction gets a compressed ancestor set: a `floor` (every earlier
+//! instruction below it is an ancestor) plus a bitset covering
+//! `[floor, self)`. Horizons and epochs depend on the entire execution
+//! front, which makes them dominators: once verified complete, their
+//! ancestor set collapses to `floor == self` — so bitsets only ever span
+//! the instructions between two horizons, not the whole history, mirroring
+//! the §3.5 memory argument of the scheduler itself.
+//!
+//! ## Wiring
+//!
+//! - `celerity run/worker/sim --verify` — each scheduler core absorbs its
+//!   own output batch-by-batch; violations surface through the §4.4 error
+//!   stream ([`crate::task::QueueError::Runtime`]) naming the offending
+//!   instruction pair and region.
+//! - Scheduler unit tests run with `verify: true` unconditionally, so
+//!   every generator change is audited.
+//! - `rust/tests/verify_prop.rs` fuzzes randomized workloads (≥100 seeds,
+//!   collectives/direct-comm/lookahead on and off) through the full
+//!   pipeline and requires zero violations.
+//!
+//! With `--verify` off the runtime cost is a single branch per scheduler
+//! batch (`Option<Verifier>` check); the bench row `verify (rsim stream)`
+//! in `micro_scheduler` prices the analysis itself.
+
+use crate::buffer::BufferPool;
+use crate::grid::{GridBox, Region, RegionMap};
+use crate::instruction::{user_alloc_id, InstructionKind, InstructionRef, Pilot};
+use crate::util::{AllocationId, JobId, MemoryId, MessageId, NodeId, TaskId};
+use std::collections::HashMap;
+use std::fmt;
+
+/// Marker bit of [`user_alloc_id`]: the reserved id space of pre-existing
+/// user-memory (M0) backings, which have no `alloc`/`free` instructions and
+/// whose contents the init epoch produced.
+const USER_ALLOC_BIT: u64 = 1 << 62;
+
+fn is_user_alloc(a: AllocationId) -> bool {
+    a.0 & USER_ALLOC_BIT != 0
+}
+
+// ─────────────────────────────────────────────────────────────────────────
+// Violations
+// ─────────────────────────────────────────────────────────────────────────
+
+/// One verification failure. Every variant names the offending instruction
+/// (pair) by id and mnemonic plus the memory/allocation/box context needed
+/// to localize the bug in the generator.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Violation {
+    /// Two accesses to overlapping bytes, at least one a write, with no
+    /// dependency path ordering them.
+    Race {
+        earlier: u64,
+        earlier_what: &'static str,
+        later: u64,
+        later_what: &'static str,
+        memory: MemoryId,
+        alloc: AllocationId,
+        overlap: GridBox,
+        write_write: bool,
+    },
+    /// An access to an allocation that was already freed (or is unordered
+    /// with its free).
+    UseAfterFree {
+        free: u64,
+        access: u64,
+        access_what: &'static str,
+        memory: MemoryId,
+        alloc: AllocationId,
+        ordered: bool,
+    },
+    /// A free that is not ordered after one of the allocation's users.
+    FreeBeforeUse {
+        free: u64,
+        user: u64,
+        user_what: &'static str,
+        memory: MemoryId,
+        alloc: AllocationId,
+    },
+    /// An access to an allocation id no `alloc` instruction defined.
+    MissingAlloc { access: u64, access_what: &'static str, alloc: AllocationId },
+    /// An access that is not ordered after the allocation that backs it.
+    AccessBeforeAlloc { access: u64, access_what: &'static str, alloc: AllocationId },
+    /// An access outside the box its backing allocation covers.
+    OutOfBounds {
+        access: u64,
+        access_what: &'static str,
+        alloc: AllocationId,
+        covers: GridBox,
+        touched: GridBox,
+    },
+    /// A read of bytes no ordered producer ever wrote.
+    UninitRead {
+        access: u64,
+        access_what: &'static str,
+        memory: MemoryId,
+        alloc: AllocationId,
+        uninit: GridBox,
+    },
+    /// A dependency edge to an instruction id never seen in the stream.
+    DanglingDep { instr: u64, what: &'static str, dep: u64 },
+    /// A dependency edge pointing forward in id order (would be a cycle).
+    ForwardDep { instr: u64, what: &'static str, dep: u64 },
+    /// Two instructions carrying the same id.
+    DuplicateId { id: u64, what: &'static str },
+    /// Two `alloc` instructions defining the same allocation id.
+    DuplicateAlloc { instr: u64, alloc: AllocationId },
+    /// A horizon/epoch that does not dominate every older instruction —
+    /// §3.5 pruning would be unsound.
+    UnorderedBoundary { boundary: u64, what: &'static str, missed: u64, missed_what: &'static str },
+    /// A send without a matching eagerly-announced pilot, or a pilot whose
+    /// geometry disagrees with its send.
+    PilotMismatch { send: u64, msg: MessageId, detail: String },
+    /// A message id used twice, or one outside the job's id namespace.
+    MessageCollision { instr: u64, msg: MessageId, detail: String },
+    /// Cross-node communication that does not line up (orphan receive,
+    /// orphan send, or inconsistent collective geometry).
+    CommMismatch { node: NodeId, instr: u64, detail: String },
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Violation::Race {
+                earlier,
+                earlier_what,
+                later,
+                later_what,
+                memory,
+                alloc,
+                overlap,
+                write_write,
+            } => write!(
+                f,
+                "verify: race between I{earlier} ({earlier_what}) and I{later} ({later_what}): \
+                 {} of {overlap} in {alloc} on {memory} with no dependency path",
+                if *write_write { "conflicting writes" } else { "unordered read/write" }
+            ),
+            Violation::UseAfterFree { free, access, access_what, memory, alloc, ordered } => {
+                write!(
+                    f,
+                    "verify: I{access} ({access_what}) touches {alloc} on {memory} {} \
+                     its free I{free}",
+                    if *ordered { "after" } else { "unordered with" }
+                )
+            }
+            Violation::FreeBeforeUse { free, user, user_what, memory, alloc } => write!(
+                f,
+                "verify: free I{free} of {alloc} on {memory} is not ordered after its \
+                 user I{user} ({user_what})"
+            ),
+            Violation::MissingAlloc { access, access_what, alloc } => write!(
+                f,
+                "verify: I{access} ({access_what}) references {alloc} which no alloc \
+                 instruction defined"
+            ),
+            Violation::AccessBeforeAlloc { access, access_what, alloc } => write!(
+                f,
+                "verify: I{access} ({access_what}) is not ordered after the alloc of {alloc}"
+            ),
+            Violation::OutOfBounds { access, access_what, alloc, covers, touched } => write!(
+                f,
+                "verify: I{access} ({access_what}) touches {touched} outside {alloc} \
+                 which covers {covers}"
+            ),
+            Violation::UninitRead { access, access_what, memory, alloc, uninit } => write!(
+                f,
+                "verify: I{access} ({access_what}) reads {uninit} of {alloc} on {memory} \
+                 which no ordered producer ever wrote"
+            ),
+            Violation::DanglingDep { instr, what, dep } => write!(
+                f,
+                "verify: I{instr} ({what}) depends on I{dep} which never appeared in the stream"
+            ),
+            Violation::ForwardDep { instr, what, dep } => write!(
+                f,
+                "verify: I{instr} ({what}) depends forward on I{dep} (cycle in id order)"
+            ),
+            Violation::DuplicateId { id, what } => {
+                write!(f, "verify: instruction id I{id} ({what}) emitted twice")
+            }
+            Violation::DuplicateAlloc { instr, alloc } => {
+                write!(f, "verify: I{instr} re-allocates live allocation {alloc}")
+            }
+            Violation::UnorderedBoundary { boundary, what, missed, missed_what } => write!(
+                f,
+                "verify: {what} I{boundary} does not dominate I{missed} ({missed_what}); \
+                 §3.5 pruning would be unsound"
+            ),
+            Violation::PilotMismatch { send, msg, detail } => {
+                write!(f, "verify: send I{send} ({msg}): {detail}")
+            }
+            Violation::MessageCollision { instr, msg, detail } => {
+                write!(f, "verify: I{instr} ({msg}): {detail}")
+            }
+            Violation::CommMismatch { node, instr, detail } => {
+                write!(f, "verify: {node} I{instr}: {detail}")
+            }
+        }
+    }
+}
+
+// ─────────────────────────────────────────────────────────────────────────
+// Compressed reachability
+// ─────────────────────────────────────────────────────────────────────────
+
+/// Ancestor set of one instruction, in dense stream order: every index
+/// `< floor` is an ancestor; indexes in `[floor, self)` are ancestors iff
+/// their (absolute, word-aligned) bit is set.
+#[derive(Debug, Clone)]
+struct Reach {
+    floor: usize,
+    /// First stored word: `floor / 64`. Bit `i` lives in word `i / 64`.
+    base: usize,
+    bits: Vec<u64>,
+}
+
+impl Reach {
+    fn contains(&self, idx: usize) -> bool {
+        if idx < self.floor {
+            return true;
+        }
+        let word = idx / 64;
+        if word < self.base {
+            return false;
+        }
+        self.bits
+            .get(word - self.base)
+            .is_some_and(|w| w & (1u64 << (idx % 64)) != 0)
+    }
+
+    fn set(&mut self, idx: usize) {
+        let word = idx / 64;
+        debug_assert!(word >= self.base);
+        let at = word - self.base;
+        if at >= self.bits.len() {
+            self.bits.resize(at + 1, 0);
+        }
+        self.bits[at] |= 1u64 << (idx % 64);
+    }
+}
+
+// ─────────────────────────────────────────────────────────────────────────
+// Per-allocation access tracking
+// ─────────────────────────────────────────────────────────────────────────
+
+/// Interval-indexed access history of one allocation. Box coordinates are
+/// buffer coordinates (allocations cover buffer-space boxes), so the
+/// extents come straight from the buffer registry.
+#[derive(Debug)]
+struct AllocState {
+    memory: MemoryId,
+    covers: GridBox,
+    /// Dense index of the defining `alloc` instruction; `None` for the
+    /// pre-existing user (M0) backing.
+    alloc_idx: Option<usize>,
+    /// Dense index of the `free`, once seen.
+    freed: Option<usize>,
+    /// Every access recorded so far (for the free-ordering check).
+    users: Vec<usize>,
+    /// Last writer per box; `None` = never written.
+    writers: RegionMap<Option<usize>>,
+    /// Readers since the last write per box.
+    readers: RegionMap<Vec<usize>>,
+}
+
+/// One byte-level access an instruction performs.
+struct Access {
+    alloc: AllocationId,
+    region: Region,
+    write: bool,
+}
+
+impl Access {
+    fn read(alloc: AllocationId, region: Region) -> Access {
+        Access { alloc, region, write: false }
+    }
+    fn write(alloc: AllocationId, region: Region) -> Access {
+        Access { alloc, region, write: true }
+    }
+}
+
+// ─────────────────────────────────────────────────────────────────────────
+// The verifier
+// ─────────────────────────────────────────────────────────────────────────
+
+/// Incremental single-node, single-job IDAG verifier. Feed it every batch
+/// the scheduler emits (instructions *and* pilots, in stream order); drain
+/// violations with [`Verifier::take_violations`]. Unlike the generator it
+/// never prunes its own tracking state, so horizon-substituted
+/// dependencies are checked against the *original* producers.
+#[derive(Debug)]
+pub struct Verifier {
+    job: JobId,
+    node: NodeId,
+    buffers: BufferPool,
+    /// InstructionId → dense stream index.
+    index: HashMap<u64, usize>,
+    /// Per dense index: (raw id, mnemonic).
+    instrs: Vec<(u64, &'static str)>,
+    reach: Vec<Reach>,
+    allocs: HashMap<AllocationId, AllocState>,
+    /// Pilots announced so far, by message id.
+    pilots: HashMap<MessageId, Pilot>,
+    /// Message ids consumed by sends/collectives (dense index of consumer).
+    msgs_used: HashMap<MessageId, usize>,
+    violations: Vec<Violation>,
+    /// Instructions absorbed (monotonic; survives `take_violations`).
+    pub instructions_verified: u64,
+}
+
+impl Verifier {
+    pub fn new(job: JobId, node: NodeId, buffers: BufferPool) -> Self {
+        Verifier {
+            job,
+            node,
+            buffers,
+            index: HashMap::new(),
+            instrs: Vec::new(),
+            reach: Vec::new(),
+            allocs: HashMap::new(),
+            pilots: HashMap::new(),
+            msgs_used: HashMap::new(),
+            violations: Vec::new(),
+            instructions_verified: 0,
+        }
+    }
+
+    /// Register newly created buffers (mirrors
+    /// [`crate::scheduler::Scheduler::notify_buffers`]).
+    pub fn notify_buffers(&mut self, pool: BufferPool) {
+        self.buffers = pool;
+    }
+
+    /// Drain the violations found so far.
+    pub fn take_violations(&mut self) -> Vec<Violation> {
+        std::mem::take(&mut self.violations)
+    }
+
+    /// Absorb one scheduler output batch. Pilots are registered first: the
+    /// generator announces them eagerly in the same compile step as their
+    /// send, so within a batch the pilot always precedes its consumer.
+    pub fn absorb_batch(&mut self, instructions: &[InstructionRef], pilots: &[Pilot]) {
+        for p in pilots {
+            if let Some(prev) = self.pilots.insert(p.msg, p.clone()) {
+                self.violations.push(Violation::MessageCollision {
+                    instr: 0,
+                    msg: p.msg,
+                    detail: format!(
+                        "pilot for {} {} announced twice (first {})",
+                        p.buffer, p.send_box, prev.send_box
+                    ),
+                });
+            }
+        }
+        for i in instructions {
+            self.absorb_instruction(i);
+        }
+    }
+
+    fn absorb_instruction(&mut self, instr: &InstructionRef) {
+        self.instructions_verified += 1;
+        let what = instr.kind.mnemonic();
+        let raw = instr.id.0;
+        let cur = self.instrs.len();
+        if self.index.insert(raw, cur).is_some() {
+            self.violations.push(Violation::DuplicateId { id: raw, what });
+            // Keep going: later references resolve to this newest copy.
+        }
+        self.instrs.push((raw, what));
+
+        // Structural checks + dense dep resolution.
+        let mut dep_idxs: Vec<usize> = Vec::with_capacity(instr.deps.len());
+        for (dep, _) in &instr.deps {
+            match self.index.get(&dep.0) {
+                Some(&d) if d < cur => dep_idxs.push(d),
+                Some(_) => {
+                    self.violations.push(Violation::ForwardDep { instr: raw, what, dep: dep.0 })
+                }
+                None if dep.0 >= raw => {
+                    self.violations.push(Violation::ForwardDep { instr: raw, what, dep: dep.0 })
+                }
+                None => {
+                    self.violations.push(Violation::DanglingDep { instr: raw, what, dep: dep.0 })
+                }
+            }
+        }
+
+        // Ancestor set: floor = max dep floor, bits = union of dep bits.
+        let floor = dep_idxs.iter().map(|&d| self.reach[d].floor).max().unwrap_or(0);
+        let mut reach = Reach { floor, base: floor / 64, bits: Vec::new() };
+        for &d in &dep_idxs {
+            if d >= floor {
+                reach.set(d);
+            }
+            let dep_reach = &self.reach[d];
+            // Everything below the dep's floor is below our floor too or
+            // covered by its words; union the stored words at or above our
+            // base (`dep.base <= reach.base` always, since floors grow).
+            let from = reach.base.saturating_sub(dep_reach.base);
+            for (k, w) in dep_reach.bits.iter().enumerate().skip(from) {
+                let at = dep_reach.base + k - reach.base;
+                if at >= reach.bits.len() {
+                    reach.bits.resize(at + 1, 0);
+                }
+                reach.bits[at] |= w;
+            }
+        }
+
+        // Boundary domination + compression (§3.5): a horizon/epoch must
+        // have every older instruction as an ancestor; its set then
+        // collapses to `floor == self`, bounding all later bitsets.
+        if matches!(instr.kind, InstructionKind::Horizon | InstructionKind::Epoch(_)) {
+            match (reach.floor..cur).find(|&i| !reach.contains(i)) {
+                None => reach = Reach { floor: cur, base: cur / 64, bits: Vec::new() },
+                Some(missed) => {
+                    let (mid, mwhat) = self.instrs[missed];
+                    self.violations.push(Violation::UnorderedBoundary {
+                        boundary: raw,
+                        what,
+                        missed: mid,
+                        missed_what: mwhat,
+                    });
+                }
+            }
+        }
+        self.reach.push(reach);
+
+        // Kind-specific semantics.
+        match &instr.kind {
+            InstructionKind::Alloc { alloc, memory, buffer, covers, .. } => {
+                self.define_alloc(cur, raw, *alloc, *memory, *buffer, *covers);
+            }
+            InstructionKind::Free { alloc, .. } => self.free_alloc(cur, raw, *alloc),
+            InstructionKind::Send { send_box, src_alloc, target, msg, buffer, .. } => {
+                self.check_send(cur, raw, *msg, *buffer, *send_box, *target);
+                self.apply_accesses(
+                    cur,
+                    raw,
+                    what,
+                    &[Access::read(*src_alloc, Region::from(*send_box))],
+                );
+            }
+            InstructionKind::Receive { region, dst_alloc, .. }
+            | InstructionKind::SplitReceive { region, dst_alloc, .. } => {
+                self.apply_accesses(cur, raw, what, &[Access::write(*dst_alloc, region.clone())]);
+            }
+            // The await is an ordering proxy: the bytes were written by its
+            // split receive, which it depends on.
+            InstructionKind::AwaitReceive { .. } => {}
+            InstructionKind::Collective {
+                region, slices, dst_alloc, msgs, buffer, transfer, ..
+            } => {
+                self.check_collective(cur, raw, *buffer, *transfer, slices, msgs);
+                let own = slices
+                    .get(self.node.0 as usize)
+                    .map(|s| Region::from(*s))
+                    .unwrap_or_else(Region::empty);
+                let inbound = region.difference(&own);
+                let mut acc = Vec::new();
+                if !own.is_empty() {
+                    acc.push(Access::read(*dst_alloc, own));
+                }
+                if !inbound.is_empty() {
+                    acc.push(Access::write(*dst_alloc, inbound));
+                }
+                self.apply_accesses(cur, raw, what, &acc);
+            }
+            InstructionKind::Copy { copy_box, src_alloc, dst_alloc, .. } => {
+                self.apply_accesses(
+                    cur,
+                    raw,
+                    what,
+                    &[
+                        Access::read(*src_alloc, Region::from(*copy_box)),
+                        Access::write(*dst_alloc, Region::from(*copy_box)),
+                    ],
+                );
+            }
+            InstructionKind::DeviceKernel { bindings, .. }
+            | InstructionKind::HostTask { bindings, .. } => {
+                let mut acc = Vec::new();
+                for b in bindings {
+                    if b.region.is_empty() {
+                        continue;
+                    }
+                    if b.mode.is_consumer() {
+                        acc.push(Access::read(b.alloc, b.region.clone()));
+                    }
+                    if b.mode.is_producer() {
+                        acc.push(Access::write(b.alloc, b.region.clone()));
+                    }
+                }
+                self.apply_accesses(cur, raw, what, &acc);
+            }
+            InstructionKind::Horizon | InstructionKind::Epoch(_) => {}
+        }
+    }
+
+    fn define_alloc(
+        &mut self,
+        cur: usize,
+        raw: u64,
+        alloc: AllocationId,
+        memory: MemoryId,
+        buffer: Option<crate::util::BufferId>,
+        covers: GridBox,
+    ) {
+        if self.allocs.get(&alloc).is_some_and(|a| a.freed.is_none()) {
+            self.violations.push(Violation::DuplicateAlloc { instr: raw, alloc });
+            return;
+        }
+        let range = buffer
+            .and_then(|b| self.buffers.try_get(b).map(|info| info.range))
+            .unwrap_or_else(|| covers.range());
+        self.allocs.insert(
+            alloc,
+            AllocState {
+                memory,
+                covers,
+                alloc_idx: Some(cur),
+                freed: None,
+                users: Vec::new(),
+                writers: RegionMap::new(range, None),
+                readers: RegionMap::new(range, Vec::new()),
+            },
+        );
+    }
+
+    fn free_alloc(&mut self, cur: usize, raw: u64, alloc: AllocationId) {
+        let Some(st) = self.allocs.get_mut(&alloc) else {
+            self.violations.push(Violation::MissingAlloc {
+                access: raw,
+                access_what: "free",
+                alloc,
+            });
+            return;
+        };
+        if let Some(prev) = st.freed {
+            let (fid, _) = self.instrs[prev];
+            self.violations.push(Violation::UseAfterFree {
+                free: fid,
+                access: raw,
+                access_what: "free",
+                memory: st.memory,
+                alloc,
+                ordered: self.reach[cur].contains(prev),
+            });
+            return;
+        }
+        st.freed = Some(cur);
+        let users = st.users.clone();
+        let memory = st.memory;
+        for u in users {
+            if u != cur && !self.reach[cur].contains(u) {
+                let (uid, uwhat) = self.instrs[u];
+                self.violations.push(Violation::FreeBeforeUse {
+                    free: raw,
+                    user: uid,
+                    user_what: uwhat,
+                    memory,
+                    alloc,
+                });
+            }
+        }
+    }
+
+    /// Check and record the byte accesses of one instruction. Reads are
+    /// processed before writes so a read-write instruction does not race
+    /// with itself.
+    fn apply_accesses(&mut self, cur: usize, raw: u64, what: &'static str, accesses: &[Access]) {
+        for a in accesses.iter().filter(|a| !a.write) {
+            self.check_access(cur, raw, what, a);
+        }
+        for a in accesses.iter().filter(|a| a.write) {
+            self.check_access(cur, raw, what, a);
+        }
+        // Record after checking so overlapping accesses of the same
+        // instruction (read-write bindings) do not self-conflict.
+        for a in accesses {
+            let Some(st) = self.allocs.get_mut(&a.alloc) else { continue };
+            st.users.push(cur);
+            if a.write {
+                st.writers.update_region(&a.region, Some(cur));
+                st.readers.update_region(&a.region, Vec::new());
+            } else {
+                st.readers.apply_to_region(&a.region, |rs| {
+                    let mut rs = rs.clone();
+                    rs.push(cur);
+                    rs
+                });
+            }
+        }
+    }
+
+    fn check_access(&mut self, cur: usize, raw: u64, what: &'static str, a: &Access) {
+        let user_mem = is_user_alloc(a.alloc);
+        if user_mem && !self.allocs.contains_key(&a.alloc) {
+            // Pre-existing user (M0) backing: synthesize an always-live
+            // allocation whose contents the init epoch produced. Reads are
+            // exempt from the uninit check — the executor materializes the
+            // user bytes before the first instruction references them.
+            let buffer = crate::util::BufferId(a.alloc.0 & !USER_ALLOC_BIT);
+            let range = match self.buffers.try_get(buffer) {
+                Some(info) => info.range,
+                None => a.region.bounding_box().range(),
+            };
+            self.allocs.insert(
+                a.alloc,
+                AllocState {
+                    memory: MemoryId::USER,
+                    covers: GridBox::full(range),
+                    alloc_idx: None,
+                    freed: None,
+                    users: Vec::new(),
+                    writers: RegionMap::new(range, None),
+                    readers: RegionMap::new(range, Vec::new()),
+                },
+            );
+        }
+        let Some(st) = self.allocs.get(&a.alloc) else {
+            self.violations.push(Violation::MissingAlloc {
+                access: raw,
+                access_what: what,
+                alloc: a.alloc,
+            });
+            return;
+        };
+        let reach = &self.reach[cur];
+        let mut found: Vec<Violation> = Vec::new();
+
+        // Lifetime: alloc happens-before, free happens-after.
+        if let Some(ai) = st.alloc_idx {
+            if !reach.contains(ai) {
+                found.push(Violation::AccessBeforeAlloc {
+                    access: raw,
+                    access_what: what,
+                    alloc: a.alloc,
+                });
+            }
+        }
+        if let Some(fi) = st.freed {
+            let (fid, _) = self.instrs[fi];
+            found.push(Violation::UseAfterFree {
+                free: fid,
+                access: raw,
+                access_what: what,
+                memory: st.memory,
+                alloc: a.alloc,
+                ordered: reach.contains(fi),
+            });
+        }
+
+        for bx in a.region.boxes() {
+            if !st.covers.contains(bx) {
+                found.push(Violation::OutOfBounds {
+                    access: raw,
+                    access_what: what,
+                    alloc: a.alloc,
+                    covers: st.covers,
+                    touched: *bx,
+                });
+            }
+        }
+
+        // Races + initialization, per interval fragment.
+        st.writers.for_each_in_region(&a.region, |bx, w| match w {
+            Some(&wi) if wi != cur => {
+                if !reach.contains(wi) {
+                    let (wid, wwhat) = self.instrs[wi];
+                    found.push(Violation::Race {
+                        earlier: wid,
+                        earlier_what: wwhat,
+                        later: raw,
+                        later_what: what,
+                        memory: st.memory,
+                        alloc: a.alloc,
+                        overlap: bx,
+                        write_write: a.write,
+                    });
+                }
+            }
+            Some(_) => {}
+            None => {
+                if !a.write && !user_mem {
+                    found.push(Violation::UninitRead {
+                        access: raw,
+                        access_what: what,
+                        memory: st.memory,
+                        alloc: a.alloc,
+                        uninit: bx,
+                    });
+                }
+            }
+        });
+        if a.write {
+            st.readers.for_each_in_region(&a.region, |bx, rs| {
+                for &ri in rs {
+                    if ri != cur && !reach.contains(ri) {
+                        let (rid, rwhat) = self.instrs[ri];
+                        found.push(Violation::Race {
+                            earlier: rid,
+                            earlier_what: rwhat,
+                            later: raw,
+                            later_what: what,
+                            memory: st.memory,
+                            alloc: a.alloc,
+                            overlap: bx,
+                            write_write: false,
+                        });
+                    }
+                }
+            });
+        }
+        self.violations.extend(found);
+    }
+
+    fn check_send(
+        &mut self,
+        cur: usize,
+        raw: u64,
+        msg: MessageId,
+        buffer: crate::util::BufferId,
+        send_box: GridBox,
+        target: NodeId,
+    ) {
+        self.check_msg(cur, raw, msg);
+        if target == self.node {
+            self.violations.push(Violation::CommMismatch {
+                node: self.node,
+                instr: raw,
+                detail: "send targets its own node".into(),
+            });
+        }
+        match self.pilots.get(&msg) {
+            None => self.violations.push(Violation::PilotMismatch {
+                send: raw,
+                msg,
+                detail: "no pilot was announced for this message".into(),
+            }),
+            Some(p) => {
+                if p.send_box != send_box || p.to != target || p.buffer != buffer {
+                    self.violations.push(Violation::PilotMismatch {
+                        send: raw,
+                        msg,
+                        detail: format!(
+                            "pilot geometry {} {} →{} disagrees with send {} {} →{}",
+                            p.buffer, p.send_box, p.to, buffer, send_box, target
+                        ),
+                    });
+                }
+            }
+        }
+    }
+
+    fn check_collective(
+        &mut self,
+        cur: usize,
+        raw: u64,
+        buffer: crate::util::BufferId,
+        transfer: TaskId,
+        slices: &std::sync::Arc<Vec<GridBox>>,
+        msgs: &[MessageId],
+    ) {
+        let n = slices.len();
+        if msgs.len() + 1 != n {
+            self.violations.push(Violation::CommMismatch {
+                node: self.node,
+                instr: raw,
+                detail: format!("collective over {n} slices carries {} ring messages", msgs.len()),
+            });
+        }
+        let me = self.node.0 as usize;
+        let succ = NodeId(((me + 1) % n.max(1)) as u64);
+        for (r, &msg) in msgs.iter().enumerate() {
+            self.check_msg(cur, raw, msg);
+            // Round r forwards slice (me − r) mod n to the successor; a
+            // pilot must have been announced for every non-empty round.
+            let send_box = slices[(me + n - r) % n];
+            if send_box.is_empty() {
+                continue;
+            }
+            match self.pilots.get(&msg) {
+                None => self.violations.push(Violation::PilotMismatch {
+                    send: raw,
+                    msg,
+                    detail: format!("no pilot announced for collective ring round {r}"),
+                }),
+                Some(p) => {
+                    if p.send_box != send_box || p.to != succ || p.buffer != buffer
+                        || p.transfer != transfer
+                    {
+                        self.violations.push(Violation::PilotMismatch {
+                            send: raw,
+                            msg,
+                            detail: format!(
+                                "ring round {r} pilot {} {} →{} disagrees with expected \
+                                 {} {} →{}",
+                                p.buffer, p.send_box, p.to, buffer, send_box, succ
+                            ),
+                        });
+                    }
+                }
+            }
+        }
+    }
+
+    fn check_msg(&mut self, cur: usize, raw: u64, msg: MessageId) {
+        if JobId::of(msg.0) != self.job {
+            self.violations.push(Violation::MessageCollision {
+                instr: raw,
+                msg,
+                detail: format!(
+                    "message id escapes the {} namespace (tagged {})",
+                    self.job,
+                    JobId::of(msg.0)
+                ),
+            });
+        }
+        if let Some(&prev) = self.msgs_used.get(&msg) {
+            let (pid, _) = self.instrs[prev];
+            self.violations.push(Violation::MessageCollision {
+                instr: raw,
+                msg,
+                detail: format!("message id already used by I{pid}"),
+            });
+        } else {
+            self.msgs_used.insert(msg, cur);
+        }
+    }
+}
+
+/// One-shot verification of a complete single-node stream.
+pub fn verify_stream(
+    job: JobId,
+    node: NodeId,
+    buffers: BufferPool,
+    instructions: &[InstructionRef],
+    pilots: &[Pilot],
+) -> Vec<Violation> {
+    let mut v = Verifier::new(job, node, buffers);
+    v.absorb_batch(instructions, pilots);
+    v.take_violations()
+}
+
+// ─────────────────────────────────────────────────────────────────────────
+// Cluster-level communication matching
+// ─────────────────────────────────────────────────────────────────────────
+
+/// One node's complete compiled output, input to [`verify_cluster`].
+#[derive(Debug, Clone)]
+pub struct NodeStream {
+    pub node: NodeId,
+    pub instructions: Vec<InstructionRef>,
+    pub pilots: Vec<Pilot>,
+}
+
+/// Cross-node checks over all nodes of one job: every send lands inside a
+/// peer receive for the same `(buffer, transfer)`, every receive is fully
+/// covered by peer sends, collective geometry is replicated identically,
+/// and message ids are unique per sender link. Complements the per-node
+/// [`Verifier`], which cannot see the peers' graphs.
+pub fn verify_cluster(streams: &[NodeStream]) -> Vec<Violation> {
+    use crate::util::BufferId;
+    let mut violations = Vec::new();
+
+    type Key = (NodeId, BufferId, TaskId); // receiving node, buffer, transfer
+    let mut sends: HashMap<Key, Vec<(NodeId, u64, GridBox)>> = HashMap::new();
+    let mut recvs: HashMap<Key, Vec<(u64, Region)>> = HashMap::new();
+    // (buffer, transfer) → per-node collective geometry.
+    type CollKey = (BufferId, TaskId);
+    let mut colls: HashMap<CollKey, Vec<(NodeId, u64, Region, Vec<GridBox>, &'static str)>> =
+        HashMap::new();
+
+    for s in streams {
+        let mut seen_msgs: HashMap<MessageId, u64> = HashMap::new();
+        // Sends are grouped by the transfer (task) id their pilot announced,
+        // so they land in the same bucket as the peer's receives for that
+        // transfer.
+        let pilot_transfer: HashMap<MessageId, TaskId> =
+            s.pilots.iter().map(|p| (p.msg, p.transfer)).collect();
+        for i in &s.instructions {
+            match &i.kind {
+                InstructionKind::Send { buffer, send_box, target, msg, .. } => {
+                    if let Some(prev) = seen_msgs.insert(*msg, i.id.0) {
+                        violations.push(Violation::MessageCollision {
+                            instr: i.id.0,
+                            msg: *msg,
+                            detail: format!("message id already used by I{prev} on {}", s.node),
+                        });
+                    }
+                    let transfer = pilot_transfer
+                        .get(msg)
+                        .copied()
+                        .or_else(|| i.task.as_ref().map(|t| t.id))
+                        .unwrap_or(TaskId(0));
+                    sends.entry((*target, *buffer, transfer)).or_default().push((
+                        s.node,
+                        i.id.0,
+                        *send_box,
+                    ));
+                }
+                InstructionKind::Receive { buffer, region, transfer, .. }
+                | InstructionKind::SplitReceive { buffer, region, transfer, .. } => {
+                    recvs
+                        .entry((s.node, *buffer, *transfer))
+                        .or_default()
+                        .push((i.id.0, region.clone()));
+                }
+                InstructionKind::Collective { buffer, region, slices, transfer, msgs, kind } => {
+                    for m in msgs.iter() {
+                        if let Some(prev) = seen_msgs.insert(*m, i.id.0) {
+                            violations.push(Violation::MessageCollision {
+                                instr: i.id.0,
+                                msg: *m,
+                                detail: format!(
+                                    "message id already used by I{prev} on {}",
+                                    s.node
+                                ),
+                            });
+                        }
+                    }
+                    colls.entry((*buffer, *transfer)).or_default().push((
+                        s.node,
+                        i.id.0,
+                        region.clone(),
+                        slices.as_ref().clone(),
+                        kind.name(),
+                    ));
+                }
+                _ => {}
+            }
+        }
+    }
+
+    // p2p: every receive fully covered by sends targeting it; every send
+    // inside some receive region of the target.
+    for ((node, buffer, transfer), rs) in &recvs {
+        let sent: Region = sends
+            .get(&(*node, *buffer, *transfer))
+            .map(|v| Region::from_boxes(v.iter().map(|(_, _, b)| *b)))
+            .unwrap_or_else(Region::empty);
+        for (id, region) in rs {
+            let uncovered = region.difference(&sent);
+            if !uncovered.is_empty() {
+                violations.push(Violation::CommMismatch {
+                    node: *node,
+                    instr: *id,
+                    detail: format!(
+                        "receive of {buffer} {region} ({transfer}) is not covered by any \
+                         peer send: {uncovered} arrives from nowhere"
+                    ),
+                });
+            }
+        }
+    }
+    for ((target, buffer, transfer), ss) in &sends {
+        let expected: Region = recvs
+            .get(&(*target, *buffer, *transfer))
+            .map(|v| v.iter().fold(Region::empty(), |acc, (_, r)| acc.union(r)))
+            .unwrap_or_else(Region::empty);
+        for (from, id, send_box) in ss {
+            let stray = Region::from(*send_box).difference(&expected);
+            if !stray.is_empty() {
+                violations.push(Violation::CommMismatch {
+                    node: *from,
+                    instr: *id,
+                    detail: format!(
+                        "send of {buffer} {send_box} ({transfer}) to {target} has no \
+                         matching receive for {stray}"
+                    ),
+                });
+            }
+        }
+    }
+
+    // Collectives: deterministic replication means identical geometry on
+    // every node, and either all nodes lower the pattern or none do.
+    for ((buffer, transfer), entries) in &colls {
+        let (ref_node, ref_id, ref_region, ref_slices, ref_kind) = &entries[0];
+        if entries.len() != streams.len() {
+            let have: Vec<NodeId> = entries.iter().map(|e| e.0).collect();
+            violations.push(Violation::CommMismatch {
+                node: *ref_node,
+                instr: *ref_id,
+                detail: format!(
+                    "collective on {buffer} ({transfer}) lowered on {} of {} nodes ({have:?}): \
+                     detector verdict must replicate deterministically",
+                    entries.len(),
+                    streams.len()
+                ),
+            });
+        }
+        for (node, id, region, slices, kind) in &entries[1..] {
+            if region != ref_region || slices != ref_slices || kind != ref_kind {
+                violations.push(Violation::CommMismatch {
+                    node: *node,
+                    instr: *id,
+                    detail: format!(
+                        "collective on {buffer} ({transfer}) disagrees with {ref_node} \
+                         I{ref_id}: {kind} {region} vs {ref_kind} {ref_region}"
+                    ),
+                });
+            }
+        }
+        if let Some(sl) = entries.iter().find(|e| e.3.len() != streams.len()) {
+            violations.push(Violation::CommMismatch {
+                node: sl.0,
+                instr: sl.1,
+                detail: format!(
+                    "collective on {buffer} carries {} slices for a {}-node cluster",
+                    sl.3.len(),
+                    streams.len()
+                ),
+            });
+        }
+        // Mixed lowering: a node must not also p2p-push the same transfer.
+        for s in streams {
+            if sends.keys().any(|(_, b, t)| b == buffer && t == transfer)
+                && entries.iter().any(|e| e.0 == s.node)
+            {
+                let (_, id, ..) = entries[0];
+                violations.push(Violation::CommMismatch {
+                    node: s.node,
+                    instr: id,
+                    detail: format!(
+                        "transfer {transfer} of {buffer} lowered both as a collective and \
+                         as p2p sends"
+                    ),
+                });
+                break;
+            }
+        }
+    }
+
+    violations
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dag::DepKind;
+    use crate::grid::Range;
+    use crate::instruction::{AccessBinding, Instruction};
+    use crate::scheduler::{Scheduler, SchedulerConfig};
+    use crate::task::{AccessMode, RangeMapper, TaskDecl, TaskManager};
+    use crate::util::{BufferId, DeviceId, InstructionId};
+    use std::sync::Arc;
+
+    fn instr(
+        id: u64,
+        kind: InstructionKind,
+        deps: &[(u64, DepKind)],
+    ) -> InstructionRef {
+        Arc::new(Instruction {
+            id: InstructionId(id),
+            kind,
+            deps: deps.iter().map(|(d, k)| (InstructionId(*d), *k)).collect(),
+            task: None,
+        })
+    }
+
+    fn alloc(id: u64, a: u64, mem: MemoryId, covers: GridBox) -> InstructionRef {
+        instr(
+            id,
+            InstructionKind::Alloc {
+                alloc: AllocationId(a),
+                memory: mem,
+                buffer: None,
+                covers,
+                size_bytes: covers.area() * 8,
+            },
+            &[],
+        )
+    }
+
+    fn kernel(
+        id: u64,
+        a: u64,
+        mode: AccessMode,
+        region: GridBox,
+        deps: &[(u64, DepKind)],
+    ) -> InstructionRef {
+        instr(
+            id,
+            InstructionKind::DeviceKernel {
+                device: DeviceId(0),
+                chunk: region,
+                bindings: vec![AccessBinding {
+                    buffer: BufferId(0),
+                    mode,
+                    region: Region::from(region),
+                    alloc: AllocationId(a),
+                    alloc_box: region,
+                    dtype: crate::dtype::DType::F64,
+                    lanes: 1,
+                }],
+                work_per_item: 1,
+                kernel: None,
+            },
+            deps,
+        )
+    }
+
+    fn run(stream: &[InstructionRef]) -> Vec<Violation> {
+        verify_stream(JobId(0), NodeId(0), BufferPool::new(), stream, &[])
+    }
+
+    // ── hand-built negative cases: exact diagnostics ─────────────────────
+
+    #[test]
+    fn unordered_write_read_is_a_race_naming_pair_and_box() {
+        let bx = GridBox::d1(0, 64);
+        let stream = vec![
+            alloc(1, 7, MemoryId(2), bx),
+            kernel(2, 7, AccessMode::DiscardWrite, bx, &[(1, DepKind::Dataflow)]),
+            // Reader depends only on the alloc — the dataflow edge to the
+            // writer was "forgotten".
+            kernel(3, 7, AccessMode::Read, GridBox::d1(16, 48), &[(1, DepKind::Dataflow)]),
+        ];
+        let vs = run(&stream);
+        assert!(
+            vs.iter().any(|v| matches!(
+                v,
+                Violation::Race {
+                    earlier: 2,
+                    later: 3,
+                    memory: MemoryId(2),
+                    alloc: AllocationId(7),
+                    overlap,
+                    write_write: false,
+                    ..
+                } if *overlap == GridBox::d1(16, 48)
+            )),
+            "expected race naming I2/I3 over [16,48) on M2 A7, got {vs:?}"
+        );
+        let text = vs[0].to_string();
+        assert!(text.contains("I2") && text.contains("I3"), "{text}");
+        assert!(text.contains("A7") && text.contains("M2"), "{text}");
+    }
+
+    #[test]
+    fn ordered_write_read_is_clean() {
+        let bx = GridBox::d1(0, 64);
+        let stream = vec![
+            alloc(1, 7, MemoryId(2), bx),
+            kernel(2, 7, AccessMode::DiscardWrite, bx, &[(1, DepKind::Dataflow)]),
+            kernel(3, 7, AccessMode::Read, bx, &[(2, DepKind::Dataflow)]),
+        ];
+        assert_eq!(run(&stream), vec![]);
+    }
+
+    #[test]
+    fn write_write_race_detected_through_transitive_path_only_when_missing() {
+        let bx = GridBox::d1(0, 64);
+        // w1 → r → w2 is ordered through the transitive path even though w2
+        // has no direct edge to w1.
+        let ordered = vec![
+            alloc(1, 7, MemoryId(2), bx),
+            kernel(2, 7, AccessMode::DiscardWrite, bx, &[(1, DepKind::Dataflow)]),
+            kernel(3, 7, AccessMode::Read, bx, &[(2, DepKind::Dataflow)]),
+            kernel(4, 7, AccessMode::DiscardWrite, bx, &[(3, DepKind::Anti)]),
+        ];
+        assert_eq!(run(&ordered), vec![]);
+        // Dropping the anti edge leaves both the read and (transitively)
+        // the first write unordered against w2.
+        let racy = vec![
+            alloc(1, 7, MemoryId(2), bx),
+            kernel(2, 7, AccessMode::DiscardWrite, bx, &[(1, DepKind::Dataflow)]),
+            kernel(3, 7, AccessMode::Read, bx, &[(2, DepKind::Dataflow)]),
+            kernel(4, 7, AccessMode::DiscardWrite, bx, &[(1, DepKind::Dataflow)]),
+        ];
+        let vs = run(&racy);
+        assert!(
+            vs.iter().any(|v| matches!(v, Violation::Race { earlier: 3, later: 4, .. })),
+            "anti-dependency race (read vs second write) expected: {vs:?}"
+        );
+    }
+
+    #[test]
+    fn early_free_is_use_after_free_naming_free_and_access() {
+        let bx = GridBox::d1(0, 64);
+        let stream = vec![
+            alloc(1, 7, MemoryId(2), bx),
+            kernel(2, 7, AccessMode::DiscardWrite, bx, &[(1, DepKind::Dataflow)]),
+            instr(
+                3,
+                InstructionKind::Free {
+                    alloc: AllocationId(7),
+                    memory: MemoryId(2),
+                    size_bytes: 512,
+                },
+                &[(2, DepKind::Anti)],
+            ),
+            kernel(4, 7, AccessMode::Read, bx, &[(3, DepKind::Sync)]),
+        ];
+        let vs = run(&stream);
+        assert!(
+            vs.iter().any(|v| matches!(
+                v,
+                Violation::UseAfterFree {
+                    free: 3,
+                    access: 4,
+                    alloc: AllocationId(7),
+                    ordered: true,
+                    ..
+                }
+            )),
+            "expected use-after-free naming I3/I4: {vs:?}"
+        );
+    }
+
+    #[test]
+    fn free_unordered_with_user_is_flagged() {
+        let bx = GridBox::d1(0, 64);
+        let stream = vec![
+            alloc(1, 7, MemoryId(2), bx),
+            kernel(2, 7, AccessMode::DiscardWrite, bx, &[(1, DepKind::Dataflow)]),
+            // Free depends on the alloc only — racing the kernel.
+            instr(
+                3,
+                InstructionKind::Free {
+                    alloc: AllocationId(7),
+                    memory: MemoryId(2),
+                    size_bytes: 512,
+                },
+                &[(1, DepKind::Anti)],
+            ),
+        ];
+        let vs = run(&stream);
+        assert!(
+            vs.iter().any(|v| matches!(v, Violation::FreeBeforeUse { free: 3, user: 2, .. })),
+            "{vs:?}"
+        );
+    }
+
+    #[test]
+    fn uninit_read_and_missing_alloc_are_flagged() {
+        let bx = GridBox::d1(0, 64);
+        let vs = run(&[
+            alloc(1, 7, MemoryId(2), bx),
+            kernel(2, 7, AccessMode::Read, bx, &[(1, DepKind::Dataflow)]),
+        ]);
+        assert!(
+            vs.iter().any(|v| matches!(v, Violation::UninitRead { access: 2, .. })),
+            "{vs:?}"
+        );
+        let vs = run(&[kernel(1, 9, AccessMode::Read, bx, &[])]);
+        assert!(
+            vs.iter().any(
+                |v| matches!(v, Violation::MissingAlloc { access: 1, alloc: AllocationId(9), .. })
+            ),
+            "{vs:?}"
+        );
+    }
+
+    #[test]
+    fn structural_violations_dangling_forward_duplicate() {
+        let bx = GridBox::d1(0, 8);
+        let vs = run(&[
+            alloc(1, 7, MemoryId(2), bx),
+            kernel(2, 7, AccessMode::DiscardWrite, bx, &[(99, DepKind::Dataflow)]),
+        ]);
+        assert!(
+            vs.iter().any(|v| matches!(v, Violation::DanglingDep { instr: 2, dep: 99, .. })),
+            "{vs:?}"
+        );
+        let vs = run(&[
+            alloc(1, 7, MemoryId(2), bx),
+            kernel(2, 7, AccessMode::DiscardWrite, bx, &[(5, DepKind::Dataflow)]),
+        ]);
+        assert!(
+            vs.iter().any(|v| matches!(v, Violation::ForwardDep { instr: 2, dep: 5, .. })),
+            "{vs:?}"
+        );
+        let vs = run(&[
+            alloc(1, 7, MemoryId(2), bx),
+            alloc(1, 8, MemoryId(2), bx),
+        ]);
+        assert!(vs.iter().any(|v| matches!(v, Violation::DuplicateId { id: 1, .. })), "{vs:?}");
+    }
+
+    #[test]
+    fn incomplete_horizon_is_unordered_boundary() {
+        let bx = GridBox::d1(0, 8);
+        let stream = vec![
+            alloc(1, 7, MemoryId(2), bx),
+            kernel(2, 7, AccessMode::DiscardWrite, bx, &[(1, DepKind::Dataflow)]),
+            // Horizon "forgets" the kernel: only covers the alloc.
+            instr(3, InstructionKind::Horizon, &[(1, DepKind::Sync)]),
+        ];
+        let vs = run(&stream);
+        assert!(
+            vs.iter()
+                .any(|v| matches!(v, Violation::UnorderedBoundary { boundary: 3, missed: 2, .. })),
+            "{vs:?}"
+        );
+    }
+
+    #[test]
+    fn send_without_pilot_is_flagged_and_with_pilot_is_clean() {
+        let bx = GridBox::d1(0, 8);
+        let send = instr(
+            2,
+            InstructionKind::Send {
+                buffer: BufferId(0),
+                send_box: bx,
+                target: NodeId(1),
+                msg: MessageId(5),
+                src_memory: MemoryId(2),
+                src_alloc: AllocationId(7),
+                src_box: bx,
+            },
+            &[(1, DepKind::Dataflow)],
+        );
+        let stream = vec![
+            alloc(1, 7, MemoryId(2), bx),
+            kernel(3, 7, AccessMode::DiscardWrite, bx, &[(1, DepKind::Dataflow)]),
+        ];
+        // Writer first so the send's read is initialized and ordered.
+        let ordered_send = instr(
+            4,
+            InstructionKind::Send {
+                buffer: BufferId(0),
+                send_box: bx,
+                target: NodeId(1),
+                msg: MessageId(5),
+                src_memory: MemoryId(2),
+                src_alloc: AllocationId(7),
+                src_box: bx,
+            },
+            &[(3, DepKind::Dataflow)],
+        );
+        let mut with_pilot = stream.clone();
+        with_pilot.push(ordered_send);
+        let pilot = Pilot {
+            from: NodeId(0),
+            to: NodeId(1),
+            msg: MessageId(5),
+            buffer: BufferId(0),
+            send_box: bx,
+            transfer: TaskId(0),
+        };
+        let vs = verify_stream(JobId(0), NodeId(0), BufferPool::new(), &with_pilot, &[pilot]);
+        assert_eq!(vs, vec![], "pilot-matched send must be clean");
+
+        let mut without = stream;
+        without.insert(1, send);
+        let vs = verify_stream(JobId(0), NodeId(0), BufferPool::new(), &without, &[]);
+        assert!(
+            vs.iter()
+                .any(|v| matches!(v, Violation::PilotMismatch { send: 2, msg: MessageId(5), .. })),
+            "{vs:?}"
+        );
+    }
+
+    #[test]
+    fn message_namespace_violation_is_flagged() {
+        let bx = GridBox::d1(0, 8);
+        let job1 = JobId(1);
+        // A "job 1" verifier seeing a job-0 message id.
+        let stream = vec![
+            alloc(job1.base() + 1, 7, MemoryId(2), bx),
+            instr(
+                job1.base() + 2,
+                InstructionKind::Send {
+                    buffer: BufferId(0),
+                    send_box: bx,
+                    target: NodeId(1),
+                    msg: MessageId(5), // job-0 namespace
+                    src_memory: MemoryId(2),
+                    src_alloc: AllocationId(7),
+                    src_box: bx,
+                },
+                &[(job1.base() + 1, DepKind::Dataflow)],
+            ),
+        ];
+        let vs = verify_stream(job1, NodeId(0), BufferPool::new(), &stream, &[]);
+        assert!(
+            vs.iter().any(|v| matches!(v, Violation::MessageCollision { msg: MessageId(5), .. })),
+            "{vs:?}"
+        );
+    }
+
+    // ── orphan receive at cluster level ──────────────────────────────────
+
+    #[test]
+    fn orphan_receive_is_comm_mismatch() {
+        let bx = GridBox::d1(0, 8);
+        let recv = instr(
+            2,
+            InstructionKind::Receive {
+                buffer: BufferId(0),
+                region: Region::from(bx),
+                dst_memory: MemoryId::HOST,
+                dst_alloc: AllocationId(7),
+                dst_box: bx,
+                transfer: TaskId(3),
+            },
+            &[(1, DepKind::Dataflow)],
+        );
+        let streams = vec![
+            NodeStream { node: NodeId(0), instructions: vec![], pilots: vec![] },
+            NodeStream {
+                node: NodeId(1),
+                instructions: vec![alloc(1, 7, MemoryId::HOST, bx), recv],
+                pilots: vec![],
+            },
+        ];
+        let vs = verify_cluster(&streams);
+        assert!(
+            vs.iter().any(|v| matches!(
+                v,
+                Violation::CommMismatch { node: NodeId(1), instr: 2, detail }
+                    if detail.contains("arrives from nowhere")
+            )),
+            "{vs:?}"
+        );
+    }
+
+    // ── real pipeline: valid graphs are clean; mutations are caught ──────
+
+    fn compile_full(
+        nodes: u64,
+        devices: u64,
+        collectives: bool,
+        direct_comm: bool,
+        lookahead: bool,
+        f: impl Fn(&mut TaskManager),
+    ) -> (Vec<NodeStream>, BufferPool) {
+        let mut tm = TaskManager::new();
+        f(&mut tm);
+        tm.shutdown();
+        let tasks = tm.take_new_tasks();
+        let mut streams = Vec::new();
+        for node in 0..nodes {
+            let cfg = SchedulerConfig {
+                node: NodeId(node),
+                num_nodes: nodes,
+                num_devices: devices,
+                collectives,
+                direct_comm,
+                lookahead,
+                ..Default::default()
+            };
+            let mut sched = Scheduler::new(cfg, tm.buffers().clone());
+            let mut instructions = Vec::new();
+            let mut pilots = Vec::new();
+            for t in &tasks {
+                let (is, ps) = sched.process(t);
+                instructions.extend(is);
+                pilots.extend(ps);
+            }
+            let (is, ps) = sched.flush_now();
+            instructions.extend(is);
+            pilots.extend(ps);
+            assert!(sched.take_errors().is_empty());
+            assert!(sched.take_idag_errors().is_empty());
+            streams.push(NodeStream { node: NodeId(node), instructions, pilots });
+        }
+        (streams, tm.buffers().clone())
+    }
+
+    fn nbody(tm: &mut TaskManager) {
+        let r = Range::d1(256);
+        let p = tm.create_buffer::<[f64; 3]>("P", r, true).id();
+        let v = tm.create_buffer::<[f64; 3]>("V", r, true).id();
+        for _ in 0..3 {
+            tm.submit(
+                TaskDecl::device("timestep", r)
+                    .read(p, RangeMapper::All)
+                    .read_write(v, RangeMapper::OneToOne),
+            );
+            tm.submit(
+                TaskDecl::device("update", r)
+                    .read(v, RangeMapper::OneToOne)
+                    .read_write(p, RangeMapper::OneToOne),
+            );
+        }
+    }
+
+    #[test]
+    fn nbody_pipeline_is_clean_across_configs() {
+        for nodes in [1u64, 2, 4] {
+            for (coll, direct) in [(true, true), (false, true), (true, false), (false, false)] {
+                let (streams, buffers) = compile_full(nodes, 2, coll, direct, true, nbody);
+                for s in &streams {
+                    let vs = verify_stream(
+                        JobId(0),
+                        s.node,
+                        buffers.clone(),
+                        &s.instructions,
+                        &s.pilots,
+                    );
+                    assert_eq!(
+                        vs,
+                        vec![],
+                        "{nodes}n coll={coll} direct={direct} node {}",
+                        s.node
+                    );
+                }
+                let cl = verify_cluster(&streams);
+                assert_eq!(cl, vec![], "{nodes}n coll={coll} direct={direct}");
+            }
+        }
+    }
+
+    #[test]
+    fn dropping_a_dependency_edge_from_a_real_graph_is_caught() {
+        let (streams, buffers) = compile_full(1, 2, false, true, true, nbody);
+        let stream = &streams[0];
+        // Find a kernel with a dataflow edge to a non-alloc producer and
+        // drop exactly that edge.
+        let mut mutated: Option<(Vec<InstructionRef>, u64, u64)> = None;
+        let by_id: HashMap<u64, &InstructionRef> =
+            stream.instructions.iter().map(|i| (i.id.0, i)).collect();
+        'outer: for (pos, i) in stream.instructions.iter().enumerate() {
+            if !matches!(i.kind, InstructionKind::DeviceKernel { .. }) {
+                continue;
+            }
+            for (dep, kind) in &i.deps {
+                let producer = by_id.get(&dep.0);
+                let is_writer = producer.is_some_and(|p| {
+                    matches!(
+                        p.kind,
+                        InstructionKind::DeviceKernel { .. } | InstructionKind::Copy { .. }
+                    )
+                });
+                if *kind == DepKind::Dataflow && is_writer {
+                    let mut instrs = stream.instructions.clone();
+                    let pruned: Vec<_> =
+                        i.deps.iter().filter(|(d, _)| d.0 != dep.0).cloned().collect();
+                    instrs[pos] = Arc::new(Instruction {
+                        id: i.id,
+                        kind: i.kind.clone(),
+                        deps: pruned,
+                        task: i.task.clone(),
+                    });
+                    mutated = Some((instrs, dep.0, i.id.0));
+                    break 'outer;
+                }
+            }
+        }
+        let (instrs, dropped_dep, victim) =
+            mutated.expect("nbody graph must contain a kernel→writer dataflow edge");
+        let vs = verify_stream(JobId(0), NodeId(0), buffers, &instrs, &stream.pilots);
+        assert!(
+            vs.iter().any(|v| matches!(
+                v,
+                Violation::Race { earlier, later, .. }
+                    if *earlier == dropped_dep && *later == victim
+            )),
+            "dropping the I{dropped_dep}→I{victim} edge must race that exact pair: {vs:?}"
+        );
+    }
+
+    #[test]
+    fn incremental_absorb_equals_one_shot() {
+        let (streams, buffers) = compile_full(2, 2, true, true, true, nbody);
+        let s = &streams[0];
+        let mut inc = Verifier::new(JobId(0), NodeId(0), buffers.clone());
+        for chunk in s.instructions.chunks(3) {
+            inc.absorb_batch(chunk, &[]);
+        }
+        inc.absorb_batch(&[], &s.pilots); // late pilots don't matter for reads
+        let mut one = Verifier::new(JobId(0), NodeId(0), buffers.clone());
+        one.absorb_batch(&s.instructions, &s.pilots);
+        // Same non-pilot verdicts; the incremental run reported pilot
+        // mismatches (pilots arrived after their sends) which the one-shot
+        // run did not.
+        let strip = |vs: Vec<Violation>| {
+            vs.into_iter()
+                .filter(|v| !matches!(v, Violation::PilotMismatch { .. }))
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(strip(inc.take_violations()), strip(one.take_violations()));
+    }
+}

@@ -1,0 +1,185 @@
+//! Property suite for the static instruction-graph verifier.
+//!
+//! Randomized workloads (random buffer sizes, producer/consumer geometry,
+//! horizon placement) are compiled through the full TDAG → CDAG → IDAG
+//! pipeline on every node of a randomized cluster, under every combination
+//! of the scheduler's lowering knobs (collectives, direct-comm, lookahead,
+//! d2d). The graphs the generators emit are correct *by construction*; the
+//! verifier re-derives correctness *by analysis* — so any violation on any
+//! seed is a real bug in one of the two. The suite requires zero
+//! violations from both the in-core verifier (absorbing batch by batch,
+//! exactly as `--verify` runs it) and the post-hoc cluster-level
+//! send/receive/collective matching.
+
+use celerity::grid::{GridBox, Point, Range, Region};
+use celerity::scheduler::{Scheduler, SchedulerConfig};
+use celerity::task::{RangeMapper, TaskDecl, TaskManager};
+use celerity::util::{JobId, NodeId, XorShift64};
+use celerity::verify::{verify_cluster, verify_stream, NodeStream};
+
+/// Build a random program against one buffer. The only constraint imposed
+/// on the randomness is *user-level* correctness: the buffer is either
+/// host-initialized or fully written before anything reads it, because an
+/// uninitialized read is a genuine violation the verifier must flag.
+fn random_program(rng: &mut XorShift64, tm: &mut TaskManager) {
+    let len = rng.next_range(2, 8) * 4; // splittable across 1/2/4 nodes
+    let n = Range::d1(len);
+    let host_init = rng.chance(0.5);
+    let b = tm.create_buffer::<f64>("B", n, host_init).id();
+    if !host_init {
+        // First task must produce every byte a later consumer may read.
+        tm.submit(TaskDecl::device("init", n).write(b, RangeMapper::OneToOne));
+    }
+    for _ in 0..rng.next_range(1, 4) {
+        // Random producer: full read-modify-write or partial window write.
+        if rng.chance(0.7) {
+            tm.submit(TaskDecl::device("w", n).read_write(b, RangeMapper::OneToOne));
+        } else {
+            let sub = rng.next_range(1, len);
+            tm.submit(
+                TaskDecl::device("wp", Range::d1(sub))
+                    .write(b, RangeMapper::Shift(Point::d1(rng.next_below(len - sub + 1)))),
+            );
+        }
+        // Random consumer geometry (drives all-gather/broadcast/p2p/ring
+        // lowerings depending on the knobs).
+        let mapper = match rng.next_below(4) {
+            0 => RangeMapper::All,
+            1 => RangeMapper::OneToOne,
+            2 => {
+                let lo = rng.next_below(len);
+                let hi = rng.next_range(lo + 1, len);
+                RangeMapper::Fixed(Region::from(GridBox::d1(lo, hi)))
+            }
+            _ => RangeMapper::Neighborhood(Range::d1(rng.next_range(1, 3))),
+        };
+        tm.submit(TaskDecl::device("r", n).read(b, mapper));
+        if rng.chance(0.25) {
+            tm.barrier();
+        }
+    }
+}
+
+/// Compile the program on every node of `base.num_nodes` with the in-core
+/// verifier enabled, then run the post-hoc per-node and cluster-level
+/// passes. Panics (with `ctx`) on any violation.
+fn compile_and_verify(ctx: &str, tm: &mut TaskManager, base: SchedulerConfig) {
+    tm.shutdown();
+    let tasks = tm.take_new_tasks();
+    let mut streams = Vec::new();
+    for node in 0..base.num_nodes {
+        let cfg = SchedulerConfig { node: NodeId(node), verify: true, ..base.clone() };
+        let mut sched = Scheduler::new(cfg, tm.buffers().clone());
+        let mut instructions = Vec::new();
+        let mut pilots = Vec::new();
+        for t in &tasks {
+            let (is, ps) = sched.process(t);
+            instructions.extend(is);
+            pilots.extend(ps);
+        }
+        let (is, ps) = sched.flush_now();
+        instructions.extend(is);
+        pilots.extend(ps);
+        let cmd_errors = sched.take_errors();
+        assert!(cmd_errors.is_empty(), "{ctx} node {node}: {cmd_errors:?}");
+        let idag_errors = sched.take_idag_errors();
+        assert!(idag_errors.is_empty(), "{ctx} node {node}: {idag_errors:?}");
+        // In-core pass: ran batch-by-batch exactly as `--verify` does.
+        let violations = sched.take_verify_errors();
+        assert!(violations.is_empty(), "{ctx} node {node}: {violations:?}");
+        assert_eq!(
+            sched.instructions_verified() as usize,
+            instructions.len(),
+            "{ctx} node {node}: verifier must price every instruction"
+        );
+        // Post-hoc pass over the complete stream must agree.
+        let post =
+            verify_stream(JobId(0), NodeId(node), tm.buffers().clone(), &instructions, &pilots);
+        assert!(post.is_empty(), "{ctx} node {node} (post-hoc): {post:?}");
+        streams.push(NodeStream { node: NodeId(node), instructions, pilots });
+    }
+    let cluster = verify_cluster(&streams);
+    assert!(cluster.is_empty(), "{ctx} (cluster): {cluster:?}");
+}
+
+/// ≥100 random seeds × randomized cluster shape × randomized knobs.
+#[test]
+fn random_programs_verify_clean_under_all_knobs() {
+    for seed in 1..=120u64 {
+        let mut rng = XorShift64::new(seed);
+        let base = SchedulerConfig {
+            num_nodes: [1, 2, 4][rng.next_below(3) as usize],
+            num_devices: rng.next_range(1, 2),
+            collectives: rng.chance(0.5),
+            direct_comm: rng.chance(0.5),
+            lookahead: rng.chance(0.5),
+            d2d: rng.chance(0.5),
+            ..Default::default()
+        };
+        let ctx = format!(
+            "seed {seed}: nodes={} devices={} collectives={} direct_comm={} lookahead={} d2d={}",
+            base.num_nodes,
+            base.num_devices,
+            base.collectives,
+            base.direct_comm,
+            base.lookahead,
+            base.d2d
+        );
+        let mut tm = TaskManager::new();
+        random_program(&mut rng, &mut tm);
+        compile_and_verify(&ctx, &mut tm, base);
+    }
+}
+
+/// The knob matrix exhaustively, on a fixed representative program — so a
+/// knob-specific regression cannot hide behind the random knob coin.
+#[test]
+fn knob_matrix_verifies_clean_on_fixed_program() {
+    for nodes in [1u64, 2, 4] {
+        for collectives in [false, true] {
+            for direct_comm in [false, true] {
+                for lookahead in [false, true] {
+                    let mut tm = TaskManager::new();
+                    let n = Range::d1(64);
+                    let b = tm.create_buffer::<f64>("B", n, true).id();
+                    for _ in 0..3 {
+                        tm.submit(
+                            TaskDecl::device("step", n).read_write(b, RangeMapper::OneToOne),
+                        );
+                        tm.submit(TaskDecl::device("gather", n).read(b, RangeMapper::All));
+                    }
+                    let base = SchedulerConfig {
+                        num_nodes: nodes,
+                        num_devices: 2,
+                        collectives,
+                        direct_comm,
+                        lookahead,
+                        ..Default::default()
+                    };
+                    let ctx = format!(
+                        "fixed program: nodes={nodes} collectives={collectives} \
+                         direct_comm={direct_comm} lookahead={lookahead}"
+                    );
+                    compile_and_verify(&ctx, &mut tm, base);
+                }
+            }
+        }
+    }
+}
+
+/// Horizon pruning must stay sound under verification: a long chain with an
+/// aggressive horizon step exercises the boundary-domination check and the
+/// verifier's ancestor-set collapse.
+#[test]
+fn long_chain_with_tight_horizons_verifies_clean() {
+    for nodes in [1u64, 2] {
+        let mut tm = TaskManager::with_horizon_step(2);
+        let n = Range::d1(32);
+        let b = tm.create_buffer::<f64>("B", n, true).id();
+        for _ in 0..24 {
+            tm.submit(TaskDecl::device("step", n).read_write(b, RangeMapper::OneToOne));
+        }
+        let base = SchedulerConfig { num_nodes: nodes, num_devices: 2, ..Default::default() };
+        compile_and_verify(&format!("horizon chain: nodes={nodes}"), &mut tm, base);
+    }
+}

@@ -1,0 +1,183 @@
+#!/usr/bin/env python3
+"""Panic-path lint for the runtime library.
+
+Scheduler, executor and comm threads must not die on unstructured panics:
+§4.4 of the paper routes every user-facing failure through the error
+stream, and a panicking runtime thread turns an attributable error into a
+hang or an abort. This lint enforces the crate policy:
+
+  - `.unwrap()` is banned outside test code, full stop (the compiler also
+    warns via `clippy::unwrap_used`; this script is the no-toolchain
+    backstop and covers the bin crate too).
+  - `.expect(...)`, `panic!`, `unreachable!`, `todo!`, `unimplemented!`
+    are budgeted per file by the allowlist below. Every budget carries a
+    one-line justification; exceeding it fails CI, so a new panic path
+    needs a conscious allowlist edit in the same diff.
+
+Test code is exempt: everything from the first `#[cfg(test)]` line to end
+of file (the repo convention puts the test module last) and separate test
+targets under `rust/tests/`, `rust/benches/` are not scanned. Comment and
+doc-comment lines are ignored.
+
+Usage:
+    lint_panics.py [--root rust/src]
+    lint_panics.py --self-test
+
+Exit codes: 0 ok, 1 policy violation, 2 usage error.
+"""
+
+import os
+import re
+import sys
+
+# file (relative to the scan root) -> (budget, justification).
+# A budget covers expect/panic/unreachable/todo/unimplemented combined;
+# unwrap is never budgeted. Keep budgets tight: lowering one when sites are
+# removed is encouraged (the lint prints a ratchet hint), raising one needs
+# a justification that names why the new site cannot be an error path.
+ALLOWLIST = {
+    "apps/nbody.rs": (4, "example driver: submit/fence failures abort the demo by design"),
+    "apps/rsim.rs": (3, "example driver: submit/fence failures abort the demo by design"),
+    "apps/wavesim.rs": (2, "example driver: submit/fence failures abort the demo by design"),
+    "buffer/mod.rs": (1, "dtype registered at create_buffer; mismatch is a typed-handle forgery"),
+    "comm/channel.rs": (2, "lock poisoning + endpoint taken twice are wiring bugs at startup"),
+    "comm/tcp.rs": (2, "lock poisoning propagates a prior panic; not a data-path failure"),
+    "comm/wire.rs": (2, "fixed-size header slices; lengths are compile-time constants"),
+    "command/mod.rs": (6, "buffer states inserted at creation; absence is a CDAG-internal bug"),
+    "dag/mod.rs": (1, "node id handed out by this Dag; absence is memory corruption"),
+    "driver/mod.rs": (9, "startup wiring (thread spawn, endpoint take) + lock poisoning"),
+    "dtype/mod.rs": (2, "layout sizes are compile-time constants"),
+    "executor/arbitration.rs": (1, "arbiter invariant: active receive tracked until retired"),
+    "executor/arena.rs": (2, "allocation liveness is IDAG-ordered; a dead id is a scheduler bug"),
+    "executor/events.rs": (4, "event hub lock poisoning propagates a prior panic"),
+    "executor/fair.rs": (2, "ready-set pick() returns only nonempty queues"),
+    "executor/lanes.rs": (2, "lane thread spawn at startup; send to own lane cannot disconnect"),
+    "executor/mod.rs": (4, "registry lock poisoning + executor thread spawn at startup"),
+    "executor/ooo.rs": (1, "engine invariant: retiring instruction was dispatched"),
+    "grid/region_map.rs": (7, "iterator invariants proven by adjacent len checks (hot path)"),
+    "instruction/generator.rs": (12, "IDAG invariants: buffer states and backings tracked since creation"),
+    "launch/mod.rs": (6, "launcher process: spawn/lock failures abort the whole launch by design"),
+    "main.rs": (9, "CLI binary: argument/setup failures abort before any cluster state exists"),
+    "runtime/mod.rs": (2, "pjrt-gated; 4-byte chunks are exact by construction"),
+    "scheduler/thread.rs": (1, "scheduler thread spawn at startup"),
+    "sim/mod.rs": (4, "simulator-internal maps keyed by emitted instructions; times never NaN"),
+    "task/manager.rs": (2, "TDAG invariant: epoch ids and buffer states tracked since creation"),
+    "trace/mod.rs": (2, "trace sink lock poisoning propagates a prior panic"),
+}
+
+UNWRAP = re.compile(r"\.unwrap\(\)")
+BUDGETED = re.compile(r"\.expect\(|panic!\(|unreachable!\(|todo!\(|unimplemented!\(")
+
+
+def scan_file(path, text):
+    """Return (unwrap_sites, budgeted_sites) as lists of (lineno, line)."""
+    unwraps, budgeted = [], []
+    in_test = False
+    for i, line in enumerate(text.split("\n"), 1):
+        if "#[cfg(test)]" in line:
+            in_test = True
+        if in_test:
+            continue
+        stripped = line.strip()
+        if stripped.startswith(("//", "///", "//!")):
+            continue
+        if UNWRAP.search(line):
+            unwraps.append((i, stripped))
+        for _ in BUDGETED.findall(line):
+            budgeted.append((i, stripped))
+    return unwraps, budgeted
+
+
+def lint(root):
+    failures = []
+    hints = []
+    seen = set()
+    for dirpath, _, files in os.walk(root):
+        for f in sorted(files):
+            if not f.endswith(".rs"):
+                continue
+            path = os.path.join(dirpath, f)
+            rel = os.path.relpath(path, root)
+            with open(path, encoding="utf-8") as fh:
+                text = fh.read()
+            unwraps, budgeted = scan_file(path, text)
+            seen.add(rel)
+            for lineno, line in unwraps:
+                failures.append(
+                    f"{path}:{lineno}: banned .unwrap() outside tests "
+                    f"(use .expect(\"why this cannot fail\") or an error path): {line}"
+                )
+            budget, _ = ALLOWLIST.get(rel, (0, None))
+            if len(budgeted) > budget:
+                failures.append(
+                    f"{path}: {len(budgeted)} panic-capable site(s), allowlist budget is "
+                    f"{budget} — convert the new site(s) to reported errors or raise the "
+                    f"budget in scripts/lint_panics.py with a justification:"
+                )
+                for lineno, line in budgeted:
+                    failures.append(f"  {path}:{lineno}: {line}")
+            elif len(budgeted) < budget:
+                hints.append(
+                    f"{rel}: budget {budget} but only {len(budgeted)} site(s) — "
+                    f"ratchet the allowlist down"
+                )
+    for rel in sorted(set(ALLOWLIST) - seen):
+        failures.append(f"allowlist entry for missing file: {rel}")
+    return failures, hints
+
+
+def self_test():
+    import tempfile
+
+    cases = [
+        # (name, source, expect_unwraps, expect_budgeted)
+        ("plain unwrap is caught", "fn f() { x.unwrap(); }", 1, 0),
+        ("test-module unwrap is exempt", "fn f() {}\n#[cfg(test)]\nmod t { fn g() { x.unwrap(); } }", 0, 0),
+        ("doc-comment unwrap is ignored", "/// call `.unwrap()` here\nfn f() {}", 0, 0),
+        ("inner-doc unwrap is ignored", "//! `.unwrap()` in module docs\nfn f() {}", 0, 0),
+        ("expect is budgeted", 'fn f() { x.expect("y"); }', 0, 1),
+        ("panic is budgeted", 'fn f() { panic!("bad"); }', 0, 1),
+        ("unreachable is budgeted", "fn f() { unreachable!() }", 0, 1),
+        ("two on one line both count", 'fn f() { a.expect("x"); panic!("y"); }', 0, 2),
+        ("comment expect is ignored", '// a.expect("x")\nfn f() {}', 0, 0),
+    ]
+    for name, src, want_u, want_b in cases:
+        unwraps, budgeted = scan_file("<fixture>", src)
+        assert len(unwraps) == want_u, f"self-test failed: {name}: unwraps={unwraps}"
+        assert len(budgeted) == want_b, f"self-test failed: {name}: budgeted={budgeted}"
+
+    # End-to-end: a temp tree with one over-budget file fails, empty passes.
+    with tempfile.TemporaryDirectory() as d:
+        with open(os.path.join(d, "bad.rs"), "w", encoding="utf-8") as fh:
+            fh.write("fn f() { x.unwrap(); }\n")
+        failures, _ = lint(d)
+        assert any("banned .unwrap()" in f for f in failures), "self-test: lint missed unwrap"
+        # allowlist entries all refer to files outside this temp tree
+        assert any("allowlist entry for missing file" in f for f in failures)
+    print("lint_panics.py: self-test OK")
+    return 0
+
+
+def main(argv):
+    if "--self-test" in argv:
+        return self_test()
+    root = "rust/src"
+    if "--root" in argv:
+        root = argv[argv.index("--root") + 1]
+    if not os.path.isdir(root):
+        print(f"lint_panics.py: no such directory: {root}", file=sys.stderr)
+        return 2
+    failures, hints = lint(root)
+    for h in hints:
+        print(f"note: {h}")
+    if failures:
+        for f in failures:
+            print(f, file=sys.stderr)
+        print(f"\nlint_panics.py: {len(failures)} violation(s)", file=sys.stderr)
+        return 1
+    print("lint_panics.py: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
