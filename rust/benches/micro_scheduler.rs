@@ -27,7 +27,8 @@ use celerity::grid::{GridBox, Range, Region, RegionMap};
 use celerity::instruction::{IdagConfig, IdagGenerator};
 use celerity::scheduler::{Scheduler, SchedulerConfig};
 use celerity::task::{RangeMapper, TaskManager};
-use celerity::util::{spsc, NodeId};
+use celerity::util::{spsc, JobId, NodeId};
+use celerity::verify::Verifier;
 use std::time::Instant;
 
 struct BenchResult {
@@ -377,6 +378,74 @@ fn main() {
         let violations = sched.take_verify_errors();
         assert!(violations.is_empty(), "rsim stream must verify clean: {violations:?}");
         sched.instructions_verified()
+    });
+
+    // 12. Incremental vs from-scratch re-verification. When `--verify` is
+    //     on, every new scheduler batch triggers a re-check of the stream.
+    //     The incremental core substitutes its dense tracking state at
+    //     each verified horizon/epoch boundary, so a re-check costs work
+    //     proportional to the invalidated span; a from-scratch pass pays
+    //     the whole prefix every time. ops = re-check rounds, so ns/op is
+    //     the per-batch re-check latency — compare the two rows directly.
+    let reverify_stream = || {
+        // Tight horizons (step 4) so the incremental mode compacts many
+        // times over the stream — the shape the comparison exists for.
+        let mut tm = TaskManager::with_horizon_step(4);
+        let steps = 96u64 / scale.min(4);
+        let range = Range::d1(1 << 14);
+        let p = tm.create_buffer::<[f32; 3]>("P", range, true);
+        let v = tm.create_buffer::<[f32; 3]>("V", range, true);
+        for _ in 0..steps {
+            tm.submit_group(|cgh| {
+                cgh.read(p, RangeMapper::All);
+                cgh.read_write(v, RangeMapper::OneToOne);
+                cgh.parallel_for("timestep", range);
+            })
+            .expect("submit timestep");
+            tm.submit_group(|cgh| {
+                cgh.read(v, RangeMapper::OneToOne);
+                cgh.read_write(p, RangeMapper::OneToOne);
+                cgh.parallel_for("update", range);
+            })
+            .expect("submit update");
+        }
+        tm.shutdown();
+        let tasks = tm.take_new_tasks();
+        let mut sched = Scheduler::new(
+            SchedulerConfig { num_devices: 4, ..Default::default() },
+            tm.buffers().clone(),
+        );
+        let (mut instrs, _) = sched.process_batch(&tasks);
+        let (tail, _) = sched.flush_now();
+        instrs.extend(tail);
+        (instrs, tm.buffers().clone())
+    };
+    let (stream, stream_buffers) = reverify_stream();
+    let batch = 48usize;
+    bench(res, repeats, "verify incremental re-check (per batch)", || {
+        let mut v = Verifier::incremental(JobId(0), NodeId(0), stream_buffers.clone());
+        let mut rounds = 0u64;
+        for chunk in stream.chunks(batch) {
+            v.absorb_batch(chunk, &[]);
+            rounds += 1;
+        }
+        let violations = v.take_violations();
+        assert!(violations.is_empty(), "stream must verify clean: {violations:?}");
+        assert!(v.compacted_below() > 0, "incremental mode must have compacted");
+        rounds
+    });
+    bench(res, repeats, "verify from-scratch re-check (per batch)", || {
+        let mut rounds = 0u64;
+        let mut end = 0usize;
+        while end < stream.len() {
+            end = (end + batch).min(stream.len());
+            let mut v = Verifier::new(JobId(0), NodeId(0), stream_buffers.clone());
+            v.absorb_batch(&stream[..end], &[]);
+            let violations = v.take_violations();
+            assert!(violations.is_empty(), "prefix must verify clean: {violations:?}");
+            rounds += 1;
+        }
+        rounds
     });
 
     // Sanity anchor: an IdagGenerator must stay usable for the suite.

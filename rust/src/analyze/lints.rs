@@ -1,0 +1,214 @@
+//! The performance-lint registry: named lints at allow/warn/deny levels.
+//!
+//! Each lint names one scheduling anti-pattern the instruction graph makes
+//! statically visible. Levels follow the compiler-lint convention: `allow`
+//! suppresses the finding, `warn` reports it, `deny` reports it *and*
+//! makes `celerity analyze` exit non-zero — CI runs the shipped examples
+//! at deny level, so a lowering regression that reintroduces an
+//! anti-pattern fails the build instead of shipping as a silent slowdown.
+
+use std::collections::HashMap;
+use std::fmt;
+
+/// Severity of a lint (compiler-lint convention).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum LintLevel {
+    /// Suppressed: the detector still runs, the finding is dropped.
+    Allow,
+    /// Reported in the findings list.
+    Warn,
+    /// Reported, and the analyze verb exits non-zero.
+    Deny,
+}
+
+impl LintLevel {
+    pub fn name(self) -> &'static str {
+        match self {
+            LintLevel::Allow => "allow",
+            LintLevel::Warn => "warn",
+            LintLevel::Deny => "deny",
+        }
+    }
+
+    /// Parse a CLI level name.
+    pub fn parse(s: &str) -> Option<LintLevel> {
+        match s {
+            "allow" => Some(LintLevel::Allow),
+            "warn" => Some(LintLevel::Warn),
+            "deny" => Some(LintLevel::Deny),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for LintLevel {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// One registered lint.
+#[derive(Debug, Clone, Copy)]
+pub struct Lint {
+    pub name: &'static str,
+    /// One-line description of the anti-pattern it catches.
+    pub summary: &'static str,
+    pub default: LintLevel,
+}
+
+/// A dependency edge on the cost-weighted critical path that no data
+/// relationship implies — pure serialization lengthening the makespan.
+pub const FALSE_SERIALIZATION: &str = "false-serialization";
+/// A transfer staged through pinned host memory although the direct
+/// device path (§3.4) could have carried it.
+pub const STAGED_COPY: &str = "staged-copy-on-direct-path";
+/// All-gather-shaped p2p fan-in (sends to every peer + receives of the
+/// same transfer) that the CDAG collective pass did not fuse.
+pub const MISSED_COLLECTIVE: &str = "missed-collective";
+/// Repeated same-shape alloc/free of one buffer's backing across epochs —
+/// the resize chain the §4.3 lookahead exists to elide.
+pub const ALLOC_CHURN: &str = "alloc-churn";
+/// A backing allocation far larger than the union of boxes any
+/// instruction ever touches in it.
+pub const OVERSIZED_ALLOCATION: &str = "oversized-allocation";
+
+/// Every registered lint, in display order.
+pub const LINTS: &[Lint] = &[
+    Lint {
+        name: FALSE_SERIALIZATION,
+        summary: "critical-path edge not implied by any data dependency",
+        default: LintLevel::Warn,
+    },
+    Lint {
+        name: STAGED_COPY,
+        summary: "transfer staged through host memory on the direct device path",
+        default: LintLevel::Warn,
+    },
+    Lint {
+        name: MISSED_COLLECTIVE,
+        summary: "all-gather-shaped p2p fan-in the collective pass did not fuse",
+        default: LintLevel::Warn,
+    },
+    Lint {
+        name: ALLOC_CHURN,
+        summary: "repeated same-shape alloc/free the lookahead should elide",
+        default: LintLevel::Warn,
+    },
+    Lint {
+        name: OVERSIZED_ALLOCATION,
+        summary: "allocation far larger than the union of accessed boxes",
+        default: LintLevel::Warn,
+    },
+];
+
+/// Look up a lint by name.
+pub fn lint(name: &str) -> Option<&'static Lint> {
+    LINTS.iter().find(|l| l.name == name)
+}
+
+/// Per-run level overrides on top of the registry defaults.
+#[derive(Debug, Clone, Default)]
+pub struct LintConfig {
+    overrides: HashMap<&'static str, LintLevel>,
+}
+
+impl LintConfig {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Override one lint's level. `name` may be `all`. Unknown names are
+    /// an error (the CLI reports them instead of silently ignoring a
+    /// typo'd `--deny`).
+    pub fn set(&mut self, name: &str, level: LintLevel) -> Result<(), String> {
+        if name == "all" {
+            for l in LINTS {
+                self.overrides.insert(l.name, level);
+            }
+            return Ok(());
+        }
+        match lint(name) {
+            Some(l) => {
+                self.overrides.insert(l.name, level);
+                Ok(())
+            }
+            None => Err(format!(
+                "unknown lint '{name}' (known: {})",
+                LINTS.iter().map(|l| l.name).collect::<Vec<_>>().join(", ")
+            )),
+        }
+    }
+
+    /// The effective level of a lint (override, else registry default).
+    pub fn level_of(&self, name: &str) -> LintLevel {
+        self.overrides
+            .get(name)
+            .copied()
+            .or_else(|| lint(name).map(|l| l.default))
+            .unwrap_or(LintLevel::Allow)
+    }
+}
+
+/// One reported finding.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Finding {
+    /// Registry name of the lint that fired.
+    pub lint: &'static str,
+    /// Effective level it fired at (never [`LintLevel::Allow`]).
+    pub level: LintLevel,
+    /// Raw id of the instruction anchoring the finding, if one.
+    pub instr: Option<u64>,
+    pub message: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}[{}]: {}", self.level, self.lint, self.message)?;
+        if let Some(i) = self.instr {
+            write!(f, " (I{i})")?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_has_the_five_seed_lints() {
+        assert_eq!(LINTS.len(), 5);
+        for name in [
+            FALSE_SERIALIZATION,
+            STAGED_COPY,
+            MISSED_COLLECTIVE,
+            ALLOC_CHURN,
+            OVERSIZED_ALLOCATION,
+        ] {
+            assert!(lint(name).is_some(), "{name} must be registered");
+        }
+    }
+
+    #[test]
+    fn config_overrides_and_all() {
+        let mut cfg = LintConfig::new();
+        assert_eq!(cfg.level_of(ALLOC_CHURN), LintLevel::Warn);
+        cfg.set(ALLOC_CHURN, LintLevel::Deny).expect("known lint");
+        assert_eq!(cfg.level_of(ALLOC_CHURN), LintLevel::Deny);
+        cfg.set("all", LintLevel::Allow).expect("all is valid");
+        assert_eq!(cfg.level_of(ALLOC_CHURN), LintLevel::Allow);
+        assert_eq!(cfg.level_of(STAGED_COPY), LintLevel::Allow);
+        assert!(cfg.set("no-such-lint", LintLevel::Warn).is_err());
+    }
+
+    #[test]
+    fn finding_renders_level_lint_and_anchor() {
+        let f = Finding {
+            lint: ALLOC_CHURN,
+            level: LintLevel::Deny,
+            instr: Some(42),
+            message: "B0 on M2 resized 31 times".into(),
+        };
+        assert_eq!(f.to_string(), "deny[alloc-churn]: B0 on M2 resized 31 times (I42)");
+    }
+}

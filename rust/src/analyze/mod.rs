@@ -1,0 +1,1145 @@
+//! `celerity analyze`: cost-model-driven performance lints and resource
+//! bounds over the instruction graph, computed statically.
+//!
+//! The analyzer consumes exactly what the verifier ([`crate::verify`])
+//! consumes — one node's instruction stream in generation order — plus the
+//! calibrated [`CostModel`] the discrete-event simulator prices with, and
+//! produces a [`Report`]:
+//!
+//! - **Resource bounds** — a per-memory *peak allocation bound*: at every
+//!   allocation we sum the sizes of all allocations not provably freed
+//!   before it (free not an ancestor in the [`Reach`] relation), i.e. the
+//!   worst case over every execution order the dependency edges permit.
+//!   An out-of-order executor (§4.1) may realize any of those orders, so
+//!   the stream order's footprint alone would under-report.
+//! - **Concurrency diagnostics** — the cost-weighted critical path (one
+//!   exact chain, recovered by backtracking through the max-cost
+//!   dependency), total work, the even-split ideal `work / devices`, and a
+//!   `scheduler_bound` ratio saying how far dependency structure keeps the
+//!   stream from that ideal; plus a per-span width profile between
+//!   horizons (`span work / span critical path` ≈ average parallelism).
+//! - **Performance lints** ([`lints`]) — named anti-pattern detectors at
+//!   allow/warn/deny levels, covering the regressions each scheduler
+//!   feature exists to prevent: resize churn (lookahead, §4.3), staged
+//!   copies (direct device transfers, §3.4), p2p fan-outs (collective
+//!   lowering), oversized allocations, and false serialization on the
+//!   critical path.
+//!
+//! Everything here is static: no execution, no simulation, O(stream)
+//! memory. `celerity analyze` (see `main.rs`) runs it per node over the
+//! same offline compilation the `graph` verb performs.
+
+pub mod lints;
+
+pub use lints::{Finding, Lint, LintConfig, LintLevel, LINTS};
+
+use crate::buffer::BufferPool;
+use crate::dag::reach::Reach;
+use crate::grid::{GridBox, Region};
+use crate::instruction::{InstructionKind, InstructionRef};
+use crate::sim::CostModel;
+use crate::util::{AllocationId, BufferId, MemoryId, NodeId};
+use std::collections::{HashMap, HashSet};
+use std::fmt::Write as _;
+
+/// Configuration for one analysis pass.
+#[derive(Debug, Clone, Default)]
+pub struct AnalyzeConfig {
+    /// Pricing model (shared with the simulator).
+    pub cost: CostModel,
+    /// Lint levels (registry defaults unless overridden).
+    pub lints: LintConfig,
+    /// Devices assumed by the even-split ideal; inferred from the stream
+    /// (max kernel device + 1) when `None`.
+    pub num_devices: Option<u64>,
+}
+
+/// Peak-allocation bound for one memory.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MemoryBound {
+    pub memory: MemoryId,
+    /// Upper bound on bytes simultaneously allocated in this memory under
+    /// any dependency-respecting execution order.
+    pub peak_bytes: u64,
+    /// Allocations placed in this memory over the whole stream.
+    pub allocs: usize,
+    /// Raw id of the allocation instruction attaining the bound.
+    pub at_instr: u64,
+}
+
+/// Width profile of one inter-horizon span.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpanProfile {
+    /// Raw ids of the first/last instruction in the span.
+    pub start: u64,
+    pub end: u64,
+    pub instructions: usize,
+    /// Summed instruction cost in the span (s).
+    pub work: f64,
+    /// Critical path restricted to the span (s); dependencies leaving the
+    /// span contribute nothing.
+    pub critical: f64,
+    /// Average parallelism `work / critical` (0 for cost-free spans).
+    pub width: f64,
+}
+
+/// The full analysis result for one node's stream.
+#[derive(Debug, Clone)]
+pub struct Report {
+    pub node: NodeId,
+    pub instructions: usize,
+    /// Devices the even-split ideal divides over.
+    pub num_devices: u64,
+    /// Cost-weighted critical path through the stream (s).
+    pub critical_path: f64,
+    /// Summed cost of every instruction (s).
+    pub total_work: f64,
+    /// Even-split ideal makespan `total_work / num_devices` (s).
+    pub ideal: f64,
+    /// `critical_path / ideal`: 1.0 means the dependency structure admits
+    /// the even split; large values mean the schedule is serialized far
+    /// beyond what the work requires.
+    pub scheduler_bound: f64,
+    /// Raw ids along one exact critical chain, in stream order.
+    pub critical_instrs: Vec<u64>,
+    /// Peak-allocation bounds, one per touched memory (user memory M0 is
+    /// not allocated by the runtime and is excluded).
+    pub memory: Vec<MemoryBound>,
+    /// Width profile per inter-horizon span.
+    pub spans: Vec<SpanProfile>,
+    /// Lint findings at warn level or above, in (lint, instruction) order.
+    pub findings: Vec<Finding>,
+}
+
+/// Analyze one node's instruction stream. The stream must be in
+/// generation order (dependencies backwards), as produced by the
+/// scheduler; malformed streams should go through [`crate::verify`]
+/// first — the analyzer skips unresolvable dependency edges.
+pub fn analyze_stream(
+    node: NodeId,
+    buffers: &BufferPool,
+    instructions: &[InstructionRef],
+    cfg: &AnalyzeConfig,
+) -> Report {
+    let n = instructions.len();
+
+    // Dense dependency resolution + ancestor sets (shared with verify).
+    let mut index: HashMap<u64, usize> = HashMap::with_capacity(n);
+    let mut deps: Vec<Vec<usize>> = Vec::with_capacity(n);
+    let mut reach: Vec<Reach> = Vec::with_capacity(n);
+    for (cur, instr) in instructions.iter().enumerate() {
+        let dep_idxs: Vec<usize> = instr
+            .deps
+            .iter()
+            .filter_map(|(d, _)| index.get(&d.0).copied())
+            .filter(|&d| d < cur)
+            .collect();
+        let mut r = Reach::from_deps(&dep_idxs, &reach);
+        if matches!(instr.kind, InstructionKind::Horizon | InstructionKind::Epoch(_))
+            && r.first_unreached(cur).is_none()
+        {
+            r = Reach::collapsed(cur);
+        }
+        reach.push(r);
+        deps.push(dep_idxs);
+        index.insert(instr.id.0, cur);
+    }
+
+    // Cost-weighted critical path: forward DP, then recover one exact
+    // chain by backtracking through the max-cost dependency at each step
+    // (no float-equality comparisons against the makespan).
+    let dur: Vec<f64> = instructions.iter().map(|i| cfg.cost.price(&i.kind, buffers)).collect();
+    let mut cp = vec![0.0f64; n];
+    for i in 0..n {
+        let longest = deps[i].iter().map(|&d| cp[d]).fold(0.0f64, f64::max);
+        cp[i] = dur[i] + longest;
+    }
+    let critical_path = cp.iter().copied().fold(0.0f64, f64::max);
+    let mut chain: Vec<usize> = Vec::new();
+    if n > 0 {
+        let mut at = (0..n).fold(0, |best, i| if cp[i] > cp[best] { i } else { best });
+        loop {
+            chain.push(at);
+            let Some(&d) = deps[at].iter().max_by(|&&a, &&b| cp[a].total_cmp(&cp[b])) else {
+                break;
+            };
+            at = d;
+        }
+        chain.reverse();
+    }
+    let critical_instrs: Vec<u64> = chain.iter().map(|&i| instructions[i].id.0).collect();
+
+    let num_devices = cfg
+        .num_devices
+        .unwrap_or_else(|| {
+            instructions
+                .iter()
+                .filter_map(|i| match &i.kind {
+                    InstructionKind::DeviceKernel { device, .. } => Some(device.0 + 1),
+                    _ => None,
+                })
+                .max()
+                .unwrap_or(1)
+        })
+        .max(1);
+    let total_work: f64 = dur.iter().sum();
+    let ideal = total_work / num_devices as f64;
+    let scheduler_bound = if ideal > 0.0 { critical_path / ideal } else { 1.0 };
+
+    // Width profile between horizons/epochs.
+    let mut spans = Vec::new();
+    let mut span_start = 0usize;
+    for (i, instr) in instructions.iter().enumerate() {
+        let boundary = matches!(instr.kind, InstructionKind::Horizon | InstructionKind::Epoch(_));
+        let end = if boundary {
+            i
+        } else if i + 1 == n {
+            i + 1
+        } else {
+            continue;
+        };
+        if end > span_start {
+            spans.push(span_profile(instructions, &deps, &dur, span_start, end));
+        }
+        if boundary {
+            span_start = i + 1;
+        }
+    }
+
+    let memory = memory_bounds(instructions, &reach);
+    let findings = run_lints(node, instructions, &chain, cfg);
+
+    Report {
+        node,
+        instructions: n,
+        num_devices,
+        critical_path,
+        total_work,
+        ideal,
+        scheduler_bound,
+        critical_instrs,
+        memory,
+        spans,
+        findings,
+    }
+}
+
+fn span_profile(
+    instructions: &[InstructionRef],
+    deps: &[Vec<usize>],
+    dur: &[f64],
+    start: usize,
+    end: usize,
+) -> SpanProfile {
+    let mut scp = vec![0.0f64; end - start];
+    let mut work = 0.0;
+    for i in start..end {
+        let longest = deps[i]
+            .iter()
+            .filter(|&&d| d >= start)
+            .map(|&d| scp[d - start])
+            .fold(0.0f64, f64::max);
+        scp[i - start] = dur[i] + longest;
+        work += dur[i];
+    }
+    let critical = scp.iter().copied().fold(0.0f64, f64::max);
+    let width = if critical > 0.0 { work / critical } else { 0.0 };
+    SpanProfile {
+        start: instructions[start].id.0,
+        end: instructions[end - 1].id.0,
+        instructions: end - start,
+        work,
+        critical,
+        width,
+    }
+}
+
+// ─────────────────────────────────────────────────────────────────────────
+// Peak-memory bound
+// ─────────────────────────────────────────────────────────────────────────
+
+struct AllocRec {
+    idx: usize,
+    raw: u64,
+    memory: MemoryId,
+    size: u64,
+    freed: Option<usize>,
+}
+
+/// Antichain bound per memory: at each allocation, every earlier
+/// allocation whose free is not an *ancestor* may still be live in some
+/// permitted execution order, so its bytes count against this one.
+fn memory_bounds(instructions: &[InstructionRef], reach: &[Reach]) -> Vec<MemoryBound> {
+    let mut recs: Vec<AllocRec> = Vec::new();
+    let mut by_alloc: HashMap<AllocationId, usize> = HashMap::new();
+    for (i, instr) in instructions.iter().enumerate() {
+        match &instr.kind {
+            InstructionKind::Alloc { alloc, memory, size_bytes, .. }
+                if *memory != MemoryId::USER =>
+            {
+                by_alloc.insert(*alloc, recs.len());
+                recs.push(AllocRec {
+                    idx: i,
+                    raw: instr.id.0,
+                    memory: *memory,
+                    size: *size_bytes,
+                    freed: None,
+                });
+            }
+            InstructionKind::Free { alloc, .. } => {
+                if let Some(&r) = by_alloc.get(alloc) {
+                    recs[r].freed = Some(i);
+                }
+            }
+            _ => {}
+        }
+    }
+    let mut mems: Vec<MemoryId> = recs.iter().map(|r| r.memory).collect();
+    mems.sort_unstable_by_key(|m| m.0);
+    mems.dedup();
+    let mut bounds = Vec::with_capacity(mems.len());
+    for m in mems {
+        let of_m: Vec<&AllocRec> = recs.iter().filter(|r| r.memory == m).collect();
+        let mut peak = 0u64;
+        let mut at = of_m[0].raw;
+        for probe in &of_m {
+            let live: u64 = of_m
+                .iter()
+                .filter(|a| {
+                    a.idx <= probe.idx
+                        && !a.freed.is_some_and(|f| reach[probe.idx].contains(f))
+                })
+                .map(|a| a.size)
+                .sum();
+            if live > peak {
+                peak = live;
+                at = probe.raw;
+            }
+        }
+        bounds.push(MemoryBound { memory: m, peak_bytes: peak, allocs: of_m.len(), at_instr: at });
+    }
+    bounds
+}
+
+// ─────────────────────────────────────────────────────────────────────────
+// Lint detectors
+// ─────────────────────────────────────────────────────────────────────────
+
+/// One byte-level access (mirrors the verifier's dispatch exactly).
+struct Acc {
+    alloc: AllocationId,
+    region: Region,
+    write: bool,
+}
+
+fn accesses(node: NodeId, kind: &InstructionKind) -> Vec<Acc> {
+    match kind {
+        InstructionKind::Send { send_box, src_alloc, .. } => {
+            vec![Acc { alloc: *src_alloc, region: Region::from(*send_box), write: false }]
+        }
+        InstructionKind::Receive { region, dst_alloc, .. }
+        | InstructionKind::SplitReceive { region, dst_alloc, .. } => {
+            vec![Acc { alloc: *dst_alloc, region: region.clone(), write: true }]
+        }
+        InstructionKind::Collective { region, slices, dst_alloc, .. } => {
+            let own = slices
+                .get(node.0 as usize)
+                .map(|s| Region::from(*s))
+                .unwrap_or_else(Region::empty);
+            let inbound = region.difference(&own);
+            let mut acc = Vec::new();
+            if !own.is_empty() {
+                acc.push(Acc { alloc: *dst_alloc, region: own, write: false });
+            }
+            if !inbound.is_empty() {
+                acc.push(Acc { alloc: *dst_alloc, region: inbound, write: true });
+            }
+            acc
+        }
+        InstructionKind::Copy { copy_box, src_alloc, dst_alloc, .. } => vec![
+            Acc { alloc: *src_alloc, region: Region::from(*copy_box), write: false },
+            Acc { alloc: *dst_alloc, region: Region::from(*copy_box), write: true },
+        ],
+        InstructionKind::DeviceKernel { bindings, .. }
+        | InstructionKind::HostTask { bindings, .. } => {
+            let mut acc = Vec::new();
+            for b in bindings {
+                if b.region.is_empty() {
+                    continue;
+                }
+                if b.mode.is_consumer() {
+                    acc.push(Acc { alloc: b.alloc, region: b.region.clone(), write: false });
+                }
+                if b.mode.is_producer() {
+                    acc.push(Acc { alloc: b.alloc, region: b.region.clone(), write: true });
+                }
+            }
+            acc
+        }
+        _ => Vec::new(),
+    }
+}
+
+/// Is the critical-path edge `d → i` implied by a data relationship?
+fn edge_justified(node: NodeId, d: &InstructionRef, i: &InstructionRef) -> bool {
+    use InstructionKind as K;
+    let sync = |k: &K| matches!(k, K::Horizon | K::Epoch(_) | K::AwaitReceive { .. });
+    if sync(&d.kind) || sync(&i.kind) {
+        return true;
+    }
+    let da = accesses(node, &d.kind);
+    let ia = accesses(node, &i.kind);
+    // Lifetime edges: alloc before users/free, free after users, and the
+    // free → alloc ordering the generator emits for memory reuse.
+    match (&d.kind, &i.kind) {
+        (K::Alloc { alloc, .. }, K::Free { alloc: fa, .. }) if alloc == fa => return true,
+        (K::Free { .. }, K::Alloc { .. }) => return true,
+        (K::Alloc { alloc, .. }, _) if ia.iter().any(|a| a.alloc == *alloc) => return true,
+        (_, K::Free { alloc, .. }) if da.iter().any(|a| a.alloc == *alloc) => return true,
+        _ => {}
+    }
+    // Data edges: overlapping accesses to one allocation, ≥1 side writing.
+    da.iter().any(|x| {
+        ia.iter()
+            .any(|y| x.alloc == y.alloc && (x.write || y.write) && x.region.intersects(&y.region))
+    })
+}
+
+fn run_lints(
+    node: NodeId,
+    instructions: &[InstructionRef],
+    chain: &[usize],
+    cfg: &AnalyzeConfig,
+) -> Vec<Finding> {
+    let mut candidates: Vec<(&'static str, Option<u64>, String)> = Vec::new();
+
+    // alloc-churn: a new buffer-backing allocation covering a box this
+    // buffer previously had allocated *and freed* on the same memory — the
+    // resize chain the §4.3 lookahead exists to elide.
+    let mut freed_covers: HashMap<(BufferId, MemoryId), Vec<GridBox>> = HashMap::new();
+    let mut live_covers: HashMap<AllocationId, (BufferId, MemoryId, GridBox)> = HashMap::new();
+    let mut churn: HashMap<(BufferId, MemoryId), (u64, usize)> = HashMap::new();
+    for instr in instructions {
+        match &instr.kind {
+            InstructionKind::Alloc { alloc, memory, buffer: Some(b), covers, .. } => {
+                let key = (*b, *memory);
+                let regrow = freed_covers
+                    .get(&key)
+                    .is_some_and(|old| old.iter().any(|o| covers.contains(o)));
+                if regrow {
+                    churn.entry(key).or_insert((instr.id.0, 0)).1 += 1;
+                }
+                live_covers.insert(*alloc, (*b, *memory, *covers));
+            }
+            InstructionKind::Free { alloc, .. } => {
+                if let Some((b, m, covers)) = live_covers.remove(alloc) {
+                    freed_covers.entry((b, m)).or_default().push(covers);
+                }
+            }
+            _ => {}
+        }
+    }
+    for ((b, m), (anchor, count)) in churn {
+        candidates.push((
+            lints::ALLOC_CHURN,
+            Some(anchor),
+            format!(
+                "{b} on {m} re-allocated {count} time(s) over a previously freed box — \
+                 enable lookahead to batch the resizes"
+            ),
+        ));
+    }
+
+    // oversized-allocation: a buffer-backing allocation whose covered box
+    // is ≥4× larger than everything ever accessed in it.
+    let mut tracks: HashMap<AllocationId, (u64, BufferId, MemoryId, GridBox, Region)> =
+        HashMap::new();
+    for instr in instructions {
+        if let InstructionKind::Alloc { alloc, memory, buffer: Some(b), covers, .. } = &instr.kind
+        {
+            if *memory != MemoryId::USER {
+                tracks.insert(*alloc, (instr.id.0, *b, *memory, *covers, Region::empty()));
+            }
+            continue;
+        }
+        for a in accesses(node, &instr.kind) {
+            if let Some(t) = tracks.get_mut(&a.alloc) {
+                t.4 = t.4.union(&a.region);
+            }
+        }
+    }
+    for (anchor, b, m, covers, used) in tracks.into_values() {
+        let covered = covers.area();
+        if covered >= 1024 && used.area() * 4 < covered {
+            candidates.push((
+                lints::OVERSIZED_ALLOCATION,
+                Some(anchor),
+                format!(
+                    "allocation for {b} on {m} covers {covered} elements but only {} are \
+                     ever accessed",
+                    used.area()
+                ),
+            ));
+        }
+    }
+
+    // staged-copy-on-direct-path: payloads hopping through pinned host
+    // memory where §3.4 staging elision applies — a d2h copy feeding a
+    // host-sourced send, or a host-landed receive feeding an h2d copy.
+    // SplitReceive is exempt: the consumer split makes the M1 detour the
+    // correct lowering there.
+    let mut host_writes: HashMap<AllocationId, Vec<(Region, bool)>> = HashMap::new();
+    let mut staged: HashMap<BufferId, (u64, usize)> = HashMap::new();
+    for instr in instructions {
+        match &instr.kind {
+            InstructionKind::Copy {
+                buffer, copy_box, src_memory, dst_memory, src_alloc, dst_alloc, ..
+            } => {
+                if src_memory.is_device() && *dst_memory == MemoryId::HOST {
+                    host_writes
+                        .entry(*dst_alloc)
+                        .or_default()
+                        .push((Region::from(*copy_box), false));
+                }
+                if *src_memory == MemoryId::HOST && dst_memory.is_device() {
+                    let from_receive = host_writes.get(src_alloc).is_some_and(|ws| {
+                        ws.iter()
+                            .any(|(r, recv)| *recv && r.intersects(&Region::from(*copy_box)))
+                    });
+                    if from_receive {
+                        staged.entry(*buffer).or_insert((instr.id.0, 0)).1 += 1;
+                    }
+                }
+            }
+            InstructionKind::Receive { region, dst_memory, dst_alloc, .. } => {
+                if *dst_memory == MemoryId::HOST {
+                    host_writes.entry(*dst_alloc).or_default().push((region.clone(), true));
+                }
+            }
+            InstructionKind::Send { buffer, send_box, src_memory, src_alloc, .. } => {
+                if *src_memory == MemoryId::HOST {
+                    let from_device = host_writes.get(src_alloc).is_some_and(|ws| {
+                        ws.iter()
+                            .any(|(r, recv)| !*recv && r.intersects(&Region::from(*send_box)))
+                    });
+                    if from_device {
+                        staged.entry(*buffer).or_insert((instr.id.0, 0)).1 += 1;
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+    for (b, (anchor, count)) in staged {
+        candidates.push((
+            lints::STAGED_COPY,
+            Some(anchor),
+            format!(
+                "{count} transfer(s) of {b} staged through pinned host memory — enable \
+                 direct device transfers"
+            ),
+        ));
+    }
+
+    // missed-collective: sends of one buffer fanning out to ≥2 peers for
+    // one producing task, with matching receives and no collective — the
+    // all-gather shape the CDAG collective pass should have fused.
+    let mut fan_out: HashMap<(BufferId, Option<u64>), HashSet<u64>> = HashMap::new();
+    let mut fan_anchor: HashMap<BufferId, u64> = HashMap::new();
+    let mut received: HashSet<BufferId> = HashSet::new();
+    let mut collected: HashSet<BufferId> = HashSet::new();
+    for instr in instructions {
+        match &instr.kind {
+            InstructionKind::Send { buffer, target, .. } => {
+                let task = instr.task.as_ref().map(|t| t.id.0);
+                fan_out.entry((*buffer, task)).or_default().insert(target.0);
+                fan_anchor.entry(*buffer).or_insert(instr.id.0);
+            }
+            InstructionKind::Receive { buffer, .. }
+            | InstructionKind::SplitReceive { buffer, .. } => {
+                received.insert(*buffer);
+            }
+            InstructionKind::Collective { buffer, .. } => {
+                collected.insert(*buffer);
+            }
+            _ => {}
+        }
+    }
+    let mut gathers: HashMap<BufferId, usize> = HashMap::new();
+    for ((b, _), targets) in &fan_out {
+        if targets.len() >= 2 {
+            *gathers.entry(*b).or_insert(0) += 1;
+        }
+    }
+    for (b, groups) in gathers {
+        if received.contains(&b) && !collected.contains(&b) {
+            candidates.push((
+                lints::MISSED_COLLECTIVE,
+                fan_anchor.get(&b).copied(),
+                format!(
+                    "{groups} all-gather-shaped transfer(s) of {b} lowered as p2p fan-out — \
+                     enable collective lowering"
+                ),
+            ));
+        }
+    }
+
+    // false-serialization: every hop of the recovered critical chain is a
+    // real dependency edge; flag the ones no data relationship implies.
+    for w in chain.windows(2) {
+        let (d, i) = (&instructions[w[0]], &instructions[w[1]]);
+        if !edge_justified(node, d, i) {
+            candidates.push((
+                lints::FALSE_SERIALIZATION,
+                Some(i.id.0),
+                format!(
+                    "critical-path edge \"{}\" → \"{}\" is not implied by any data \
+                     relationship",
+                    d.label(),
+                    i.label()
+                ),
+            ));
+        }
+    }
+
+    candidates.sort_by(|a, b| (a.0, a.1, &a.2).cmp(&(b.0, b.1, &b.2)));
+    candidates
+        .into_iter()
+        .filter_map(|(lint, instr, message)| {
+            let level = cfg.lints.level_of(lint);
+            if level == LintLevel::Allow {
+                None
+            } else {
+                Some(Finding { lint, level, instr, message })
+            }
+        })
+        .collect()
+}
+
+// ─────────────────────────────────────────────────────────────────────────
+// Rendering
+// ─────────────────────────────────────────────────────────────────────────
+
+impl Report {
+    /// Findings at deny level (non-zero fails `celerity analyze`).
+    pub fn deny_count(&self) -> usize {
+        self.findings.iter().filter(|f| f.level == LintLevel::Deny).count()
+    }
+
+    /// Human-readable report (what the CLI prints by default).
+    pub fn render_human(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "node {}: {} instructions on {} device(s)",
+            self.node, self.instructions, self.num_devices
+        );
+        let _ = writeln!(
+            out,
+            "  critical path {} across {} instructions; total work {}; even-split ideal {}; \
+             scheduler-bound {:.2}x",
+            fmt_time(self.critical_path),
+            self.critical_instrs.len(),
+            fmt_time(self.total_work),
+            fmt_time(self.ideal),
+            self.scheduler_bound
+        );
+        for m in &self.memory {
+            let _ = writeln!(
+                out,
+                "  peak memory {}: {} over {} allocation(s), attained at I{}",
+                m.memory,
+                fmt_bytes(m.peak_bytes),
+                m.allocs,
+                m.at_instr
+            );
+        }
+        if !self.spans.is_empty() {
+            let mean = self.spans.iter().map(|s| s.width).sum::<f64>() / self.spans.len() as f64;
+            if let Some(s) = self.spans.iter().min_by(|a, b| a.width.total_cmp(&b.width)) {
+                let _ = writeln!(
+                    out,
+                    "  width profile: {} span(s), mean {:.2}, narrowest {:.2} (I{}..I{})",
+                    self.spans.len(),
+                    mean,
+                    s.width,
+                    s.start,
+                    s.end
+                );
+            }
+        }
+        if self.findings.is_empty() {
+            let _ = writeln!(out, "  findings: none");
+        } else {
+            let _ = writeln!(
+                out,
+                "  findings ({} deny / {} total):",
+                self.deny_count(),
+                self.findings.len()
+            );
+            for f in &self.findings {
+                let _ = writeln!(out, "    {f}");
+            }
+        }
+        out
+    }
+
+    /// Machine-readable report (one JSON object; `--json`).
+    pub fn render_json(&self) -> String {
+        let mut out = String::new();
+        let _ = write!(
+            out,
+            "{{\"node\":{},\"instructions\":{},\"num_devices\":{}",
+            self.node.0, self.instructions, self.num_devices
+        );
+        let _ = write!(
+            out,
+            ",\"critical_path\":{},\"total_work\":{},\"ideal\":{},\"scheduler_bound\":{}",
+            json_f64(self.critical_path),
+            json_f64(self.total_work),
+            json_f64(self.ideal),
+            json_f64(self.scheduler_bound)
+        );
+        let chain: Vec<String> = self.critical_instrs.iter().map(|i| i.to_string()).collect();
+        let _ = write!(out, ",\"critical_instrs\":[{}]", chain.join(","));
+        let mems: Vec<String> = self
+            .memory
+            .iter()
+            .map(|m| {
+                format!(
+                    "{{\"memory\":{},\"peak_bytes\":{},\"allocs\":{},\"at_instr\":{}}}",
+                    m.memory.0, m.peak_bytes, m.allocs, m.at_instr
+                )
+            })
+            .collect();
+        let _ = write!(out, ",\"memory\":[{}]", mems.join(","));
+        let spans: Vec<String> = self
+            .spans
+            .iter()
+            .map(|s| {
+                format!(
+                    "{{\"start\":{},\"end\":{},\"instructions\":{},\"work\":{},\
+                     \"critical\":{},\"width\":{}}}",
+                    s.start,
+                    s.end,
+                    s.instructions,
+                    json_f64(s.work),
+                    json_f64(s.critical),
+                    json_f64(s.width)
+                )
+            })
+            .collect();
+        let _ = write!(out, ",\"spans\":[{}]", spans.join(","));
+        let findings: Vec<String> = self
+            .findings
+            .iter()
+            .map(|f| {
+                let instr = f.instr.map(|i| i.to_string()).unwrap_or_else(|| "null".into());
+                format!(
+                    "{{\"lint\":\"{}\",\"level\":\"{}\",\"instr\":{},\"message\":\"{}\"}}",
+                    f.lint,
+                    f.level,
+                    instr,
+                    json_escape(&f.message)
+                )
+            })
+            .collect();
+        let _ = write!(out, ",\"findings\":[{}]}}", findings.join(","));
+        out
+    }
+}
+
+fn json_f64(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x}")
+    } else {
+        "null".into()
+    }
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn fmt_time(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3}s")
+    } else if s >= 1e-3 {
+        format!("{:.3}ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3}us", s * 1e6)
+    } else {
+        format!("{:.0}ns", s * 1e9)
+    }
+}
+
+fn fmt_bytes(b: u64) -> String {
+    const UNITS: [&str; 4] = ["B", "KiB", "MiB", "GiB"];
+    let mut v = b as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u + 1 < UNITS.len() {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{b}B")
+    } else {
+        format!("{v:.2}{}", UNITS[u])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dag::DepKind;
+    use crate::grid::Range;
+    use crate::instruction::{AccessBinding, Instruction};
+    use crate::scheduler::{Scheduler, SchedulerConfig};
+    use crate::task::{AccessMode, RangeMapper, TaskDecl, TaskManager};
+    use crate::util::{DeviceId, InstructionId, MessageId};
+    use std::sync::Arc;
+
+    fn instr(id: u64, kind: InstructionKind, deps: &[u64]) -> InstructionRef {
+        Arc::new(Instruction {
+            id: InstructionId(id),
+            kind,
+            deps: deps.iter().map(|&d| (InstructionId(d), DepKind::Dataflow)).collect(),
+            task: None,
+        })
+    }
+
+    fn alloc(
+        id: u64,
+        a: u64,
+        mem: MemoryId,
+        buffer: Option<BufferId>,
+        covers: GridBox,
+    ) -> InstructionRef {
+        alloc_after(id, a, mem, buffer, covers, &[])
+    }
+
+    fn alloc_after(
+        id: u64,
+        a: u64,
+        mem: MemoryId,
+        buffer: Option<BufferId>,
+        covers: GridBox,
+        deps: &[u64],
+    ) -> InstructionRef {
+        instr(
+            id,
+            InstructionKind::Alloc {
+                alloc: AllocationId(a),
+                memory: mem,
+                buffer,
+                covers,
+                size_bytes: covers.area() * 8,
+            },
+            deps,
+        )
+    }
+
+    fn free(id: u64, a: u64, mem: MemoryId, deps: &[u64]) -> InstructionRef {
+        instr(
+            id,
+            InstructionKind::Free { alloc: AllocationId(a), memory: mem, size_bytes: 0 },
+            deps,
+        )
+    }
+
+    fn kernel(id: u64, a: u64, mode: AccessMode, region: GridBox, deps: &[u64]) -> InstructionRef {
+        instr(
+            id,
+            InstructionKind::DeviceKernel {
+                device: DeviceId(0),
+                chunk: region,
+                bindings: vec![AccessBinding {
+                    buffer: BufferId(0),
+                    mode,
+                    region: Region::from(region),
+                    alloc: AllocationId(a),
+                    alloc_box: region,
+                    dtype: crate::dtype::DType::F64,
+                    lanes: 1,
+                }],
+                work_per_item: 1.0,
+                kernel: None,
+            },
+            deps,
+        )
+    }
+
+    fn run(stream: &[InstructionRef]) -> Report {
+        analyze_stream(NodeId(0), &BufferPool::new(), stream, &AnalyzeConfig::default())
+    }
+
+    #[test]
+    fn chain_serializes_critical_path_fan_out_does_not() {
+        let bx = GridBox::d1(0, 64);
+        let serial = run(&[
+            alloc(1, 7, MemoryId(2), None, bx),
+            kernel(2, 7, AccessMode::DiscardWrite, bx, &[1]),
+            kernel(3, 7, AccessMode::ReadWrite, bx, &[2]),
+        ]);
+        let wide = run(&[
+            alloc(1, 7, MemoryId(2), None, bx),
+            kernel(2, 7, AccessMode::DiscardWrite, GridBox::d1(0, 32), &[1]),
+            kernel(3, 7, AccessMode::DiscardWrite, GridBox::d1(32, 64), &[1]),
+        ]);
+        assert!(serial.critical_path > wide.critical_path);
+        assert_eq!(serial.critical_instrs, vec![1, 2, 3]);
+        assert!(serial.total_work > wide.total_work);
+        assert!(serial.scheduler_bound > wide.scheduler_bound);
+    }
+
+    #[test]
+    fn peak_memory_is_an_antichain_bound_not_stream_order() {
+        let bx = GridBox::d1(0, 64); // 512 B at 8 B/elem
+        // Free of A ordered before B's alloc: never concurrently live.
+        let ordered = run(&[
+            alloc(1, 7, MemoryId(2), None, bx),
+            free(2, 7, MemoryId(2), &[1]),
+            alloc_after(3, 8, MemoryId(2), None, bx, &[2]),
+        ]);
+        assert_eq!(ordered.memory.len(), 1);
+        assert_eq!(ordered.memory[0].peak_bytes, 512);
+        assert_eq!(ordered.memory[0].allocs, 2);
+        // Same stream order but no edge from the free to the second alloc:
+        // an out-of-order executor may hold both at once, so the bound
+        // must say 1024 even though the free precedes in stream order.
+        let unordered = run(&[
+            alloc(1, 7, MemoryId(2), None, bx),
+            free(2, 7, MemoryId(2), &[1]),
+            alloc(3, 8, MemoryId(2), None, bx),
+        ]);
+        assert_eq!(unordered.memory[0].peak_bytes, 1024);
+        assert_eq!(unordered.memory[0].at_instr, 3);
+    }
+
+    #[test]
+    fn alloc_churn_fires_once_with_count() {
+        let bx = GridBox::d1(0, 64);
+        let grown = GridBox::d1(0, 128);
+        let b = Some(BufferId(0));
+        let r = run(&[
+            alloc(1, 7, MemoryId(2), b, bx),
+            free(2, 7, MemoryId(2), &[1]),
+            alloc(3, 8, MemoryId(2), b, grown),
+            free(4, 8, MemoryId(2), &[3]),
+            alloc(5, 9, MemoryId(2), b, grown),
+        ]);
+        let churn: Vec<_> =
+            r.findings.iter().filter(|f| f.lint == lints::ALLOC_CHURN).collect();
+        assert_eq!(churn.len(), 1, "one aggregated finding: {:?}", r.findings);
+        assert_eq!(churn[0].instr, Some(3));
+        assert!(churn[0].message.contains("2 time(s)"), "{}", churn[0].message);
+    }
+
+    #[test]
+    fn oversized_allocation_fires_for_sparse_use_only() {
+        let big = GridBox::d1(0, 2048);
+        let sparse = run(&[
+            alloc(1, 7, MemoryId(2), Some(BufferId(0)), big),
+            kernel(2, 7, AccessMode::DiscardWrite, GridBox::d1(0, 64), &[1]),
+        ]);
+        let over: Vec<_> =
+            sparse.findings.iter().filter(|f| f.lint == lints::OVERSIZED_ALLOCATION).collect();
+        assert_eq!(over.len(), 1, "{:?}", sparse.findings);
+        assert_eq!(over[0].instr, Some(1));
+        let dense = run(&[
+            alloc(1, 7, MemoryId(2), Some(BufferId(0)), big),
+            kernel(2, 7, AccessMode::DiscardWrite, big, &[1]),
+        ]);
+        assert!(
+            dense.findings.iter().all(|f| f.lint != lints::OVERSIZED_ALLOCATION),
+            "{:?}",
+            dense.findings
+        );
+    }
+
+    #[test]
+    fn false_serialization_flags_only_data_free_critical_edges() {
+        let bx = GridBox::d1(0, 64);
+        // K3 writes a different allocation but carries an edge to K2.
+        let spurious = run(&[
+            alloc(1, 7, MemoryId(2), None, bx),
+            alloc(2, 8, MemoryId(2), None, bx),
+            kernel(3, 7, AccessMode::DiscardWrite, bx, &[1]),
+            kernel(4, 8, AccessMode::DiscardWrite, bx, &[2, 3]),
+        ]);
+        let fs: Vec<_> =
+            spurious.findings.iter().filter(|f| f.lint == lints::FALSE_SERIALIZATION).collect();
+        assert_eq!(fs.len(), 1, "{:?}", spurious.findings);
+        assert_eq!(fs[0].instr, Some(4));
+        // Same shape, but K4 actually reads what K3 wrote: justified.
+        let real = run(&[
+            alloc(1, 7, MemoryId(2), None, bx),
+            kernel(3, 7, AccessMode::DiscardWrite, bx, &[1]),
+            kernel(4, 7, AccessMode::Read, bx, &[3]),
+        ]);
+        assert!(
+            real.findings.iter().all(|f| f.lint != lints::FALSE_SERIALIZATION),
+            "{:?}",
+            real.findings
+        );
+    }
+
+    #[test]
+    fn staged_copy_fires_for_d2h_send_hop() {
+        let bx = GridBox::d1(0, 64);
+        let stream = vec![
+            alloc(1, 7, MemoryId(2), None, bx),
+            alloc(2, 8, MemoryId::HOST, None, bx),
+            kernel(3, 7, AccessMode::DiscardWrite, bx, &[1]),
+            instr(
+                4,
+                InstructionKind::Copy {
+                    buffer: BufferId(0),
+                    copy_box: bx,
+                    src_memory: MemoryId(2),
+                    dst_memory: MemoryId::HOST,
+                    src_alloc: AllocationId(7),
+                    src_box: bx,
+                    dst_alloc: AllocationId(8),
+                    dst_box: bx,
+                },
+                &[3, 2],
+            ),
+            instr(
+                5,
+                InstructionKind::Send {
+                    buffer: BufferId(0),
+                    send_box: bx,
+                    target: NodeId(1),
+                    msg: MessageId(0),
+                    src_memory: MemoryId::HOST,
+                    src_alloc: AllocationId(8),
+                    src_box: bx,
+                },
+                &[4],
+            ),
+        ];
+        let r = run(&stream);
+        let staged: Vec<_> =
+            r.findings.iter().filter(|f| f.lint == lints::STAGED_COPY).collect();
+        assert_eq!(staged.len(), 1, "{:?}", r.findings);
+        assert_eq!(staged[0].instr, Some(5));
+    }
+
+    #[test]
+    fn lint_levels_filter_and_deny_counts() {
+        let bx = GridBox::d1(0, 64);
+        let b = Some(BufferId(0));
+        let stream = vec![
+            alloc(1, 7, MemoryId(2), b, bx),
+            free(2, 7, MemoryId(2), &[1]),
+            alloc(3, 8, MemoryId(2), b, bx),
+        ];
+        let mut cfg = AnalyzeConfig::default();
+        cfg.lints.set("all", LintLevel::Allow).expect("all");
+        let silent = analyze_stream(NodeId(0), &BufferPool::new(), &stream, &cfg);
+        assert!(silent.findings.is_empty(), "{:?}", silent.findings);
+        cfg.lints.set(lints::ALLOC_CHURN, LintLevel::Deny).expect("known");
+        let deny = analyze_stream(NodeId(0), &BufferPool::new(), &stream, &cfg);
+        assert_eq!(deny.deny_count(), 1, "{:?}", deny.findings);
+    }
+
+    #[test]
+    fn report_renders_human_and_valid_shaped_json() {
+        let bx = GridBox::d1(0, 64);
+        let r = run(&[
+            alloc(1, 7, MemoryId(2), None, bx),
+            kernel(2, 7, AccessMode::DiscardWrite, bx, &[1]),
+            instr(3, InstructionKind::Horizon, &[2]),
+        ]);
+        let human = r.render_human();
+        assert!(human.contains("critical path"), "{human}");
+        assert!(human.contains("peak memory M2"), "{human}");
+        let json = r.render_json();
+        assert!(json.starts_with('{') && json.ends_with('}'), "{json}");
+        assert!(json.contains("\"critical_path\":"), "{json}");
+        assert!(json.contains("\"peak_bytes\":512"), "{json}");
+        assert!(!json.contains("NaN") && !json.contains("inf"), "{json}");
+    }
+
+    // ── compiled streams: the shipped pipeline is lint-clean ────────────
+
+    type Streams = Vec<(NodeId, Vec<InstructionRef>)>;
+
+    fn compile(nodes: u64, lookahead: bool, f: impl Fn(&mut TaskManager)) -> (Streams, BufferPool) {
+        let mut tm = TaskManager::new();
+        f(&mut tm);
+        tm.shutdown();
+        let tasks = tm.take_new_tasks();
+        let mut streams = Vec::new();
+        for node in 0..nodes {
+            let cfg = SchedulerConfig {
+                node: NodeId(node),
+                num_nodes: nodes,
+                num_devices: 2,
+                lookahead,
+                ..Default::default()
+            };
+            let mut sched = Scheduler::new(cfg, tm.buffers().clone());
+            let mut instructions = Vec::new();
+            for t in &tasks {
+                let (is, _) = sched.process(t);
+                instructions.extend(is);
+            }
+            let (is, _) = sched.flush_now();
+            instructions.extend(is);
+            assert!(sched.take_errors().is_empty());
+            streams.push((NodeId(node), instructions));
+        }
+        (streams, tm.buffers().clone())
+    }
+
+    fn nbody(tm: &mut TaskManager) {
+        let r = Range::d1(256);
+        let p = tm.create_buffer::<[f64; 3]>("P", r, true).id();
+        let v = tm.create_buffer::<[f64; 3]>("V", r, true).id();
+        for _ in 0..3 {
+            tm.submit(
+                TaskDecl::device("timestep", r)
+                    .read(p, RangeMapper::All)
+                    .read_write(v, RangeMapper::OneToOne),
+            );
+            tm.submit(
+                TaskDecl::device("update", r)
+                    .read(v, RangeMapper::OneToOne)
+                    .read_write(p, RangeMapper::OneToOne),
+            );
+        }
+    }
+
+    #[test]
+    fn compiled_nbody_is_lint_clean_and_reports_bounds() {
+        for nodes in [1u64, 2] {
+            let (streams, buffers) = compile(nodes, true, nbody);
+            for (node, instructions) in &streams {
+                let r = analyze_stream(*node, &buffers, instructions, &AnalyzeConfig::default());
+                assert_eq!(r.findings, vec![], "node {node} of {nodes}");
+                assert!(r.critical_path > 0.0);
+                assert!(r.total_work >= r.critical_path);
+                assert!(!r.memory.is_empty(), "device allocations must be bounded");
+                assert!(r.memory.iter().all(|m| m.peak_bytes > 0));
+                assert!(!r.critical_instrs.is_empty());
+                assert!(r.scheduler_bound > 0.0, "bound {}", r.scheduler_bound);
+            }
+        }
+    }
+}

@@ -16,6 +16,8 @@
 //!   (ubiquitous in data-parallel programs, where every chunk of a task
 //!   depends on the same producers) share one allocation.
 
+pub mod reach;
+
 use std::collections::{BTreeSet, HashMap, HashSet};
 use std::fmt;
 use std::sync::Arc;

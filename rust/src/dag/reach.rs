@@ -1,0 +1,177 @@
+//! Compressed ancestor sets over a topologically ordered instruction
+//! stream — the reachability core shared by the static verifier
+//! ([`crate::verify`]) and the performance analyzer ([`crate::analyze`]).
+//!
+//! Instruction ids are assigned monotonically and every dependency edge
+//! points backwards, so arrival order *is* a topological order. Each node
+//! gets a [`Reach`]: a `floor` (every dense index below it is an ancestor)
+//! plus a word-aligned bitset covering `[floor, self)`. Horizons and
+//! epochs depend on the entire execution front, which makes them
+//! dominators: once verified complete their set collapses to
+//! `floor == self` ([`Reach::collapsed`]), so bitsets only ever span the
+//! instructions between two boundaries, not the whole history — mirroring
+//! the §3.5 memory argument of the scheduler itself.
+
+/// Ancestor set of one instruction, in dense stream order: every index
+/// `< floor` is an ancestor; indexes in `[floor, self)` are ancestors iff
+/// their (absolute, word-aligned) bit is set.
+#[derive(Debug, Clone)]
+pub struct Reach {
+    floor: usize,
+    /// First stored word: `floor / 64`. Bit `i` lives in word `i / 64`.
+    base: usize,
+    bits: Vec<u64>,
+}
+
+impl Reach {
+    /// An empty set above `floor`: exactly the indices `< floor`.
+    pub fn with_floor(floor: usize) -> Reach {
+        Reach { floor, base: floor / 64, bits: Vec::new() }
+    }
+
+    /// The collapsed set of a verified dominator at dense index `at`:
+    /// every older index is an ancestor, nothing is stored.
+    pub fn collapsed(at: usize) -> Reach {
+        Reach::with_floor(at)
+    }
+
+    /// Every dense index below this is an ancestor.
+    pub fn floor(&self) -> usize {
+        self.floor
+    }
+
+    pub fn contains(&self, idx: usize) -> bool {
+        if idx < self.floor {
+            return true;
+        }
+        let word = idx / 64;
+        if word < self.base {
+            return false;
+        }
+        self.bits
+            .get(word - self.base)
+            .is_some_and(|w| w & (1u64 << (idx % 64)) != 0)
+    }
+
+    pub fn set(&mut self, idx: usize) {
+        let word = idx / 64;
+        debug_assert!(word >= self.base);
+        let at = word - self.base;
+        if at >= self.bits.len() {
+            self.bits.resize(at + 1, 0);
+        }
+        self.bits[at] |= 1u64 << (idx % 64);
+    }
+
+    /// Union another (ancestor's) set into this one. The other set's floor
+    /// must not exceed ours — callers build sets with
+    /// `floor = max(dep floors)`, which guarantees it.
+    pub fn absorb(&mut self, other: &Reach) {
+        debug_assert!(other.base <= self.base);
+        let from = self.base.saturating_sub(other.base);
+        for (k, w) in other.bits.iter().enumerate().skip(from) {
+            let at = other.base + k - self.base;
+            if at >= self.bits.len() {
+                self.bits.resize(at + 1, 0);
+            }
+            self.bits[at] |= w;
+        }
+    }
+
+    /// Build the ancestor set of a node from its (dense) dependency
+    /// indexes, given the sets of every earlier node: floor = max dep
+    /// floor, bits = deps themselves plus the union of their bits.
+    pub fn from_deps(dep_idxs: &[usize], prior: &[Reach]) -> Reach {
+        let floor = dep_idxs.iter().map(|&d| prior[d].floor).max().unwrap_or(0);
+        let mut reach = Reach::with_floor(floor);
+        for &d in dep_idxs {
+            if d >= floor {
+                reach.set(d);
+            }
+            // Everything below the dep's floor is below our floor too or
+            // covered by its words (`dep.base <= reach.base` always, since
+            // floors grow monotonically along dependency chains).
+            reach.absorb(&prior[d]);
+        }
+        reach
+    }
+
+    /// First dense index in `[floor, upto)` that is *not* an ancestor, if
+    /// any — the §3.5 boundary-domination check: a horizon/epoch at `upto`
+    /// must reach every older instruction before its set may collapse.
+    pub fn first_unreached(&self, upto: usize) -> Option<usize> {
+        (self.floor..upto).find(|&i| !self.contains(i))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn floor_and_bits_compose() {
+        let mut r = Reach::with_floor(100);
+        r.set(130);
+        assert!(r.contains(0) && r.contains(99));
+        assert!(!r.contains(100) && !r.contains(129));
+        assert!(r.contains(130));
+        assert!(!r.contains(131));
+    }
+
+    #[test]
+    fn collapsed_contains_exactly_below() {
+        let r = Reach::collapsed(64);
+        assert!(r.contains(63));
+        assert!(!r.contains(64));
+        assert_eq!(r.floor(), 64);
+    }
+
+    #[test]
+    fn from_deps_unions_floors_and_bits() {
+        // 0 ← 1, 0 ← 2, then 3 depends on {1, 2}.
+        let r0 = Reach::with_floor(0);
+        let mut r1 = Reach::with_floor(0);
+        r1.set(0);
+        let mut r2 = Reach::with_floor(0);
+        r2.set(0);
+        let prior = vec![r0, r1, r2];
+        let r3 = Reach::from_deps(&[1, 2], &prior);
+        assert!(r3.contains(0) && r3.contains(1) && r3.contains(2));
+        assert!(!r3.contains(3));
+        assert_eq!(r3.first_unreached(3), None);
+    }
+
+    #[test]
+    fn from_deps_through_collapsed_dominator() {
+        // A collapsed boundary at 70 gives its dependents floor 70, so
+        // word-misaligned older bits are still covered.
+        let prior = vec![Reach::collapsed(70); 71];
+        let r = Reach::from_deps(&[70], &prior);
+        assert_eq!(r.floor(), 70);
+        assert!(r.contains(69));
+        assert!(r.contains(70), "direct dep above the floor must be set");
+        assert!(!r.contains(71));
+    }
+
+    #[test]
+    fn first_unreached_finds_the_gap() {
+        let mut r = Reach::with_floor(10);
+        r.set(10);
+        r.set(12);
+        assert_eq!(r.first_unreached(13), Some(11));
+        assert_eq!(r.first_unreached(11), None);
+    }
+
+    #[test]
+    fn absorb_handles_word_offsets() {
+        let mut low = Reach::with_floor(0);
+        low.set(5);
+        low.set(200);
+        let mut high = Reach::with_floor(128);
+        high.absorb(&low);
+        // Below our floor is implicit; stored words at/above base survive.
+        assert!(high.contains(5), "below floor");
+        assert!(high.contains(200), "absorbed word");
+        assert!(!high.contains(199));
+    }
+}

@@ -100,6 +100,12 @@ pub struct ClusterConfig {
     /// instruction pair and region. Off by default; the verifier-off cost
     /// is one branch per scheduler batch.
     pub verify: bool,
+    /// Keep every compiled instruction and run the performance analyzer
+    /// ([`crate::analyze`]) over each job's stream at shutdown
+    /// (`--analyze`): per-memory peak-allocation bounds, the cost-weighted
+    /// critical path and the lint findings land in
+    /// [`NodeReport::analyze`]. Off by default.
+    pub analyze: bool,
 }
 
 impl Default for ClusterConfig {
@@ -122,6 +128,7 @@ impl Default for ClusterConfig {
             admission_limit: 0,
             job_weights: Vec::new(),
             verify: false,
+            analyze: false,
         }
     }
 }
@@ -172,6 +179,7 @@ impl ClusterConfigBuilder {
         admission_limit: usize,
         job_weights: Vec<u32>,
         verify: bool,
+        analyze: bool,
     }
 
     pub fn build(self) -> ClusterConfig {
@@ -199,6 +207,7 @@ impl SchedulerConfig {
             collectives: cfg.collectives,
             direct_comm: cfg.direct_comm,
             verify: cfg.verify,
+            analyze: cfg.analyze,
         }
     }
 }
@@ -254,6 +263,9 @@ pub struct NodeReport {
     pub faults: Vec<String>,
     /// Per-job reports, in job-creation order.
     pub jobs: Vec<JobReport>,
+    /// Performance-analysis reports, one per job core, in job order —
+    /// populated only on [`ClusterConfig::analyze`] runs.
+    pub analyze: Vec<crate::analyze::Report>,
 }
 
 /// The per-job user-facing queue, mirroring Listing 1's API surface:
@@ -592,6 +604,7 @@ impl Cluster {
             errors: jobs.iter().flat_map(|j| j.errors.iter().cloned()).collect(),
             faults: jobs.iter().flat_map(|j| j.faults.iter().cloned()).collect(),
             jobs,
+            analyze: Vec::new(),
         };
         for (_, core) in &cores {
             report.instructions_generated += core.instructions_generated;
@@ -599,6 +612,9 @@ impl Cluster {
             report.resizes_emitted += core.idag().resizes_emitted;
             report.bytes_allocated += core.idag().bytes_allocated;
             report.max_queue_len = report.max_queue_len.max(core.max_queue_len);
+            if self.cfg.analyze {
+                report.analyze.push(core.analyze(&crate::analyze::AnalyzeConfig::default()));
+            }
         }
         report
     }

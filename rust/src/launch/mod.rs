@@ -45,6 +45,29 @@ pub fn parse_digest_marker(line: &str) -> Option<(u64, u64)> {
     Some((node, value))
 }
 
+/// First token of the one-line analyzer summary a worker prints under
+/// `--analyze` (companion to [`DIGEST_MARKER`]; the launcher aggregates it
+/// into [`LaunchReport::analyze`] and fails the run on deny findings).
+pub const ANALYZE_MARKER: &str = "CELERITY-ANALYZE";
+
+/// Format the analyzer marker:
+/// `CELERITY-ANALYZE node=<i> deny=<d> findings=<f>`.
+pub fn analyze_marker(node: NodeId, deny: u64, findings: u64) -> String {
+    format!("{ANALYZE_MARKER} node={} deny={deny} findings={findings}", node.0)
+}
+
+/// Parse an analyzer marker back into `(node, deny, findings)`.
+pub fn parse_analyze_marker(line: &str) -> Option<(u64, u64, u64)> {
+    let mut words = line.split_whitespace();
+    if words.next()? != ANALYZE_MARKER {
+        return None;
+    }
+    let node = words.next()?.strip_prefix("node=")?.parse().ok()?;
+    let deny = words.next()?.strip_prefix("deny=")?.parse().ok()?;
+    let findings = words.next()?.strip_prefix("findings=")?.parse().ok()?;
+    Some((node, deny, findings))
+}
+
 /// Launcher configuration (the `celerity launch` CLI fills this in).
 #[derive(Clone)]
 #[derive(Debug)]
@@ -109,6 +132,10 @@ pub struct LaunchReport {
     /// Per-node fence digest parsed from the marker line (`None` = the
     /// worker never printed one, e.g. it died).
     pub digests: Vec<Option<u64>>,
+    /// Per-node `(deny, findings)` counts parsed from the worker's
+    /// [`ANALYZE_MARKER`] line; `None` unless the run passed `--analyze`
+    /// (and the worker survived to print it).
+    pub analyze: Vec<Option<(u64, u64)>>,
     /// Launcher-level failures, each attributed to a node where possible.
     pub errors: Vec<String>,
 }
@@ -156,6 +183,8 @@ pub fn launch(cfg: &LaunchConfig) -> std::io::Result<LaunchReport> {
 
     let digests: Arc<Mutex<Vec<Option<u64>>>> =
         Arc::new(Mutex::new(vec![None; cfg.nodes as usize]));
+    let analyzes: Arc<Mutex<Vec<Option<(u64, u64)>>>> =
+        Arc::new(Mutex::new(vec![None; cfg.nodes as usize]));
     let mut children: Vec<Child> = Vec::new();
     let mut streamers = Vec::new();
     for i in 0..cfg.nodes {
@@ -196,6 +225,7 @@ pub fn launch(cfg: &LaunchConfig) -> std::io::Result<LaunchReport> {
         let stdout = child.stdout.take().expect("stdout piped");
         let stderr = child.stderr.take().expect("stderr piped");
         let dg = digests.clone();
+        let an = analyzes.clone();
         streamers.push(std::thread::spawn(move || {
             for line in BufReader::new(stdout).lines() {
                 let Ok(line) = line else { break };
@@ -203,6 +233,11 @@ pub fn launch(cfg: &LaunchConfig) -> std::io::Result<LaunchReport> {
                     let mut dg = dg.lock().expect("digest lock poisoned");
                     if let Some(slot) = dg.get_mut(node as usize) {
                         *slot = Some(value);
+                    }
+                } else if let Some((node, deny, findings)) = parse_analyze_marker(&line) {
+                    let mut an = an.lock().expect("analyze lock poisoned");
+                    if let Some(slot) = an.get_mut(node as usize) {
+                        *slot = Some((deny, findings));
                     }
                 }
                 println!("[node {i}] {line}");
@@ -225,6 +260,9 @@ pub fn launch(cfg: &LaunchConfig) -> std::io::Result<LaunchReport> {
     let digests = Arc::try_unwrap(digests)
         .map(|m| m.into_inner().expect("digest lock poisoned"))
         .unwrap_or_else(|arc| arc.lock().expect("digest lock poisoned").clone());
+    let analyzes = Arc::try_unwrap(analyzes)
+        .map(|m| m.into_inner().expect("analyze lock poisoned"))
+        .unwrap_or_else(|arc| arc.lock().expect("analyze lock poisoned").clone());
     let mut errors = Vec::new();
     // Report the root-cause node first: the worker that failed first
     // explains every downstream abort and fail-fast kill.
@@ -263,7 +301,18 @@ pub fn launch(cfg: &LaunchConfig) -> std::io::Result<LaunchReport> {
             }
         }
     }
-    Ok(LaunchReport { exit_codes, digests, errors })
+    // Deny-level analyzer findings fail the launch like any other per-node
+    // failure (the worker reports them; warn-level findings are advisory).
+    for (i, a) in analyzes.iter().enumerate() {
+        if let Some((deny, findings)) = a {
+            if *deny > 0 {
+                errors.push(format!(
+                    "node {i}: analyzer reported {deny} deny finding(s) (of {findings} total)"
+                ));
+            }
+        }
+    }
+    Ok(LaunchReport { exit_codes, digests, analyze: analyzes, errors })
 }
 
 /// Reap workers without blocking on any single one. Returns per-node exit
@@ -359,6 +408,18 @@ mod tests {
     }
 
     #[test]
+    fn analyze_marker_round_trips() {
+        let line = analyze_marker(NodeId(2), 1, 4);
+        assert_eq!(line, "CELERITY-ANALYZE node=2 deny=1 findings=4");
+        assert_eq!(parse_analyze_marker(&line), Some((2, 1, 4)));
+        // The two marker grammars never cross-parse.
+        assert_eq!(parse_digest_marker(&line), None);
+        assert_eq!(parse_analyze_marker(&digest_marker(NodeId(2), 7)), None);
+        assert_eq!(parse_analyze_marker("CELERITY-ANALYZE node=2 deny=x findings=4"), None);
+        assert_eq!(parse_analyze_marker("CELERITY-ANALYZE node=2"), None);
+    }
+
+    #[test]
     fn allocated_ports_are_distinct_and_bindable() {
         let addrs = allocate_ports(4).expect("allocate");
         assert_eq!(addrs.len(), 4);
@@ -377,12 +438,14 @@ mod tests {
         let ok = LaunchReport {
             exit_codes: vec![Some(0), Some(0)],
             digests: vec![Some(7), Some(7)],
+            analyze: vec![None, None],
             errors: vec![],
         };
         assert!(ok.success());
         let bad = LaunchReport {
             exit_codes: vec![Some(0), Some(1)],
             digests: vec![Some(7), None],
+            analyze: vec![None, None],
             errors: vec!["node 1 exited with code 1".into()],
         };
         assert!(!bad.success());

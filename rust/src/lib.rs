@@ -96,6 +96,13 @@
 //!   matches sends/receives/collective geometry across the nodes' compiled
 //!   streams. Violations surface as §4.4 runtime errors naming the
 //!   offending instruction pair and region
+//! - [`analyze`] — `celerity analyze`: cost-model-driven performance lints
+//!   and resource bounds over the same streams the verifier consumes —
+//!   per-memory peak-allocation bounds (antichain reasoning over the
+//!   dependency order), the cost-weighted critical path with an even-split
+//!   ideal and `scheduler_bound` ratio, a per-horizon-span width profile,
+//!   and a registry of named anti-pattern lints
+//!   ([`analyze::lints`]) at allow/warn/deny levels
 //! - `runtime` — PJRT wrapper executing AOT-compiled HLO kernels
 //!   (requires the `pjrt` feature and an XLA toolchain)
 //! - [`sim`] — discrete-event cluster simulator for the Fig 6 scaling study
@@ -131,6 +138,7 @@
 // expect/panic sites against an allowlist in CI.
 #![cfg_attr(not(test), warn(clippy::unwrap_used))]
 
+pub mod analyze;
 pub mod apps;
 pub mod buffer;
 pub mod comm;

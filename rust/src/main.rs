@@ -21,6 +21,7 @@
 //! cross-checking and exit-code aggregation — with worker heartbeats on
 //! so a killed node fails the whole run instead of hanging it.
 
+use celerity::analyze::{analyze_stream, AnalyzeConfig, LintConfig, LintLevel};
 use celerity::apps;
 use celerity::command::{CdagGenerator, SplitHint};
 use celerity::comm::{CommRef, TcpCommunicator, Transport};
@@ -28,6 +29,7 @@ use celerity::driver::{run_cluster_jobs, run_node, try_run_cluster, ClusterConfi
 use celerity::grid::{GridBox, Range, Region};
 use celerity::instruction::{IdagConfig, IdagGenerator};
 use celerity::launch::{self, LaunchConfig};
+use celerity::scheduler::{Scheduler, SchedulerConfig};
 use celerity::sim::{simulate, ExecModel, SimConfig};
 use celerity::task::{QueueError, RangeMapper, TaskManager};
 use celerity::trace;
@@ -152,6 +154,16 @@ fn opt_arg(args: &[String], key: &str) -> Option<String> {
     args.iter().position(|a| a == key).and_then(|i| args.get(i + 1).cloned())
 }
 
+/// Every value of a repeatable flag, in order of appearance
+/// (`--deny alloc-churn --deny staged-copy-on-direct-path`).
+fn multi_arg(args: &[String], key: &str) -> Vec<String> {
+    args.iter()
+        .enumerate()
+        .filter(|(_, a)| *a == key)
+        .filter_map(|(i, _)| args.get(i + 1).cloned())
+        .collect()
+}
+
 fn opt_num_arg(args: &[String], key: &str) -> Option<u64> {
     let raw = opt_arg(args, key)?;
     Some(raw.parse().unwrap_or_else(|_| {
@@ -220,6 +232,7 @@ fn main() {
     let collectives = !args.iter().any(|a| a == "--no-collectives");
     let direct_comm = !args.iter().any(|a| a == "--no-direct-comm");
     let verify = args.iter().any(|a| a == "--verify");
+    let analyze_on = args.iter().any(|a| a == "--analyze");
 
     match cmd {
         "graph" => {
@@ -252,6 +265,79 @@ fn main() {
                     ig.compile(c);
                 }
                 println!("{}", ig.to_dot());
+            }
+        }
+        "analyze" => {
+            // Offline compilation, one scheduler per node — the same
+            // streams `--verify` audits and the live cluster executes —
+            // then the static analyzer over each: resource bounds,
+            // cost-weighted critical path and performance lints.
+            let lookahead = !args.iter().any(|a| a == "--no-lookahead");
+            let json = args.iter().any(|a| a == "--json");
+            let mut lint_cfg = LintConfig::new();
+            for (key, level) in [
+                ("--allow", LintLevel::Allow),
+                ("--warn", LintLevel::Warn),
+                ("--deny", LintLevel::Deny),
+            ] {
+                for name in multi_arg(&args, key) {
+                    if let Err(e) = lint_cfg.set(&name, level) {
+                        eprintln!("celerity analyze: {e}");
+                        std::process::exit(2);
+                    }
+                }
+            }
+            let mut tm = TaskManager::new();
+            build_app(&mut tm, &app, steps);
+            tm.shutdown();
+            let tasks = tm.take_new_tasks();
+            let acfg = AnalyzeConfig {
+                lints: lint_cfg,
+                num_devices: Some(devices),
+                ..Default::default()
+            };
+            let mut denied = false;
+            let mut rendered = Vec::new();
+            for node in 0..nodes {
+                let scfg = SchedulerConfig {
+                    node: NodeId(node),
+                    num_nodes: nodes,
+                    num_devices: devices,
+                    collectives,
+                    direct_comm,
+                    lookahead,
+                    ..Default::default()
+                };
+                let mut sched = Scheduler::new(scfg, tm.buffers().clone());
+                let mut instructions = Vec::new();
+                for t in &tasks {
+                    let (batch, _pilots) = sched.process(t);
+                    instructions.extend(batch);
+                }
+                let (batch, _pilots) = sched.flush_now();
+                instructions.extend(batch);
+                let mut compile_errors: Vec<String> =
+                    sched.take_errors().iter().map(|e| e.to_string()).collect();
+                compile_errors.extend(sched.take_idag_errors());
+                if !compile_errors.is_empty() {
+                    for e in &compile_errors {
+                        eprintln!("celerity analyze: node {node}: {e}");
+                    }
+                    std::process::exit(2);
+                }
+                let report = analyze_stream(NodeId(node), tm.buffers(), &instructions, &acfg);
+                denied |= report.deny_count() > 0;
+                rendered.push(if json { report.render_json() } else { report.render_human() });
+            }
+            if json {
+                println!("[{}]", rendered.join(","));
+            } else {
+                for r in &rendered {
+                    println!("{r}");
+                }
+            }
+            if denied {
+                std::process::exit(1);
             }
         }
         "sim" => {
@@ -315,6 +401,7 @@ fn main() {
                 .fair_share(!args.iter().any(|a| a == "--no-fair-share"))
                 .admission_limit(num_arg(&args, "--admission-limit", "0") as usize)
                 .verify(verify)
+                .analyze(analyze_on)
                 .build();
             // (job, node, digest): sorted at the end so per-job digest rows
             // come out in a deterministic order regardless of thread timing.
@@ -371,6 +458,9 @@ fn main() {
                     }
                 }
                 report_faults(r.node, &r.faults);
+                for rep in &r.analyze {
+                    println!("{}", rep.render_human());
+                }
             }
             let mut digests = digests.lock().expect("digest lock poisoned").clone();
             digests.sort();
@@ -473,6 +563,7 @@ fn main() {
                 .direct_comm(direct_comm)
                 .heartbeat_timeout_ms(heartbeat_timeout_ms)
                 .verify(verify)
+                .analyze(analyze_on)
                 .build();
             let bind_addr = peers[node.0 as usize];
             let comm: CommRef = match TcpCommunicator::bind(node, peers) {
@@ -514,6 +605,19 @@ fn main() {
                 eprintln!("node {} error: {e}", report.node);
             }
             report_faults(report.node, &report.faults);
+            for rep in &report.analyze {
+                println!("{}", rep.render_human());
+                // One atomic marker line per analyzed job core: the
+                // contract `celerity launch` aggregates into its report.
+                println!(
+                    "{}",
+                    launch::analyze_marker(
+                        node,
+                        rep.deny_count() as u64,
+                        rep.findings.len() as u64
+                    )
+                );
+            }
             if let Some(p) = &trace_json {
                 export_trace(p, None);
             }
@@ -600,13 +704,15 @@ fn main() {
             }
         }
         _ => {
-            println!("usage: celerity graph|sim|run|worker|launch --app nbody|rsim|wavesim [--nodes N] [--devices D] [--steps S]");
+            println!("usage: celerity graph|analyze|sim|run|worker|launch --app nbody|rsim|wavesim [--nodes N] [--devices D] [--steps S]");
             println!("  graph:  --dump tdag,cdag,idag   (Graphviz dot on stdout)");
+            println!("  analyze: [--no-lookahead] [--json] [--allow NAME] [--warn NAME] [--deny NAME]   (static per-node performance report: peak-memory bounds, cost-weighted critical path, width profile and lints; NAME is a lint or 'all', flags repeat; deny findings exit 1)");
             println!("  sim:    [--baseline] [--no-lookahead] [--no-direct-comm] [--verify]");
-            println!("  run:    [--transport channel|tcp] [--jobs N] [--no-fair-share] [--admission-limit N] [--no-collectives] [--no-direct-comm] [--verify] [--trace out.json] [--trace-dot out.dot] [--heartbeat-timeout MS] [--fault-plan \"seed=7 drop=0.01 ...\"]   (live in-process cluster; --jobs N runs N concurrent tenant jobs)");
-            println!("  worker: --node I --peers a:p[,b:p,...] [--heartbeat-timeout MS] [--trace out.json] [--no-collectives] [--no-direct-comm] [--verify] [--fault-plan PLAN]   (one node of a multi-process TCP cluster; a single address is a valid 1-node run)");
+            println!("  run:    [--transport channel|tcp] [--jobs N] [--no-fair-share] [--admission-limit N] [--no-collectives] [--no-direct-comm] [--verify] [--analyze] [--trace out.json] [--trace-dot out.dot] [--heartbeat-timeout MS] [--fault-plan \"seed=7 drop=0.01 ...\"]   (live in-process cluster; --jobs N runs N concurrent tenant jobs)");
+            println!("  worker: --node I --peers a:p[,b:p,...] [--heartbeat-timeout MS] [--trace out.json] [--no-collectives] [--no-direct-comm] [--verify] [--analyze] [--fault-plan PLAN]   (one node of a multi-process TCP cluster; a single address is a valid 1-node run)");
             println!("  launch: -n N [--heartbeat-timeout MS] [--trace base] [--fault-plan PLAN] [--no-fail-fast] [--fail-fast-grace MS] -- <app> [worker args...]   (spawn N worker processes, stream logs, cross-check digests)");
             println!("  --verify: static instruction-graph verification (races, lifetimes, coherence, comm matching) — violations surface as runtime errors and fail the run");
+            println!("  --analyze: post-run performance analysis of each compiled stream (run/worker; launch aggregates the workers' CELERITY-ANALYZE markers and fails on deny findings)");
             println!("  fault plans: seed=N drop=P dup=P corrupt=P delay=LO..HIms break=nodeN@frameM kill=nodeN@frameM (CELERITY_FAULT_PLAN env fallback)");
         }
     }

@@ -61,6 +61,11 @@ pub struct SchedulerConfig {
     /// compiled, and violations surface through the §4.4 error stream. Off
     /// by default (`--verify`); when off the cost is one branch per batch.
     pub verify: bool,
+    /// Keep a copy of every emitted instruction so the performance
+    /// analyzer ([`crate::analyze`]) can run over the full stream after
+    /// the run (`--analyze`). Off by default; the cost when on is one
+    /// `Arc` clone per instruction.
+    pub analyze: bool,
 }
 
 impl Default for SchedulerConfig {
@@ -78,6 +83,7 @@ impl Default for SchedulerConfig {
             collectives: true,
             direct_comm: true,
             verify: false,
+            analyze: false,
         }
     }
 }
@@ -91,6 +97,12 @@ pub struct Scheduler {
     /// Present iff `cfg.verify`: absorbs every emitted batch and reports
     /// ordering/lifetime/coherence violations as §4.4 errors.
     verifier: Option<crate::verify::Verifier>,
+    /// The buffer pool in its most recently announced state (the analyzer
+    /// prices transfers by element size).
+    buffers: BufferPool,
+    /// Every instruction emitted so far, in generation order — only kept
+    /// when `cfg.analyze` (the `--analyze` post-run report).
+    kept: Vec<InstructionRef>,
     /// The command queue of Fig 5 (only fills while lookahead holds).
     queue: VecDeque<CommandRef>,
     /// Bounding cover of requirements queued per (buffer, memory): a queued
@@ -134,14 +146,20 @@ impl Scheduler {
             },
             buffers.clone(),
         );
+        // The in-core path runs the *incremental* verifier: tracker state
+        // is compacted at verified boundaries, so per-batch re-check work
+        // is proportional to the span since the last applied horizon —
+        // cheap enough to leave `--verify` on under lookahead.
         let verifier = cfg
             .verify
-            .then(|| crate::verify::Verifier::new(cfg.job, cfg.node, buffers));
+            .then(|| crate::verify::Verifier::incremental(cfg.job, cfg.node, buffers.clone()));
         Scheduler {
             cdag,
             idag,
             cfg,
             verifier,
+            buffers,
+            kept: Vec::new(),
             queue: VecDeque::new(),
             queued_cover: HashMap::new(),
             holding: false,
@@ -161,6 +179,7 @@ impl Scheduler {
         if let Some(v) = &mut self.verifier {
             v.notify_buffers(pool.clone());
         }
+        self.buffers = pool.clone();
         self.idag.notify_buffers(pool);
     }
 
@@ -193,6 +212,9 @@ impl Scheduler {
         if let Some(v) = &mut self.verifier {
             v.absorb_batch(&instrs, &pilots);
         }
+        if self.cfg.analyze {
+            self.kept.extend(instrs.iter().cloned());
+        }
         (instrs, pilots)
     }
 
@@ -204,6 +226,9 @@ impl Scheduler {
         let pilots = self.idag.take_pilots();
         if let Some(v) = &mut self.verifier {
             v.absorb_batch(&instrs, &pilots);
+        }
+        if self.cfg.analyze {
+            self.kept.extend(instrs.iter().cloned());
         }
         (instrs, pilots)
     }
@@ -221,11 +246,17 @@ impl Scheduler {
     }
 
     /// Violations found by the `--verify` static analysis since the last
-    /// drain, rendered for the §4.4 error stream. Empty when verification
-    /// is off.
+    /// drain, rendered for the §4.4 error stream and attributed to the
+    /// owning job (multi-tenant clusters share one stream). Empty when
+    /// verification is off.
     pub fn take_verify_errors(&mut self) -> Vec<String> {
+        let job = self.cfg.job;
         match &mut self.verifier {
-            Some(v) => v.take_violations().iter().map(|v| v.to_string()).collect(),
+            Some(v) => v
+                .take_violations()
+                .iter()
+                .map(|v| crate::verify::attribute(job, v))
+                .collect(),
             None => Vec::new(),
         }
     }
@@ -233,6 +264,15 @@ impl Scheduler {
     /// Instructions absorbed by the verifier so far (0 when off).
     pub fn instructions_verified(&self) -> u64 {
         self.verifier.as_ref().map_or(0, |v| v.instructions_verified)
+    }
+
+    /// Run the performance analyzer ([`crate::analyze`]) over every
+    /// instruction this core has emitted. Meaningful only with
+    /// `cfg.analyze` (otherwise the kept stream is empty and the report is
+    /// trivially clean); the driver calls this at shutdown for `--analyze`
+    /// runs.
+    pub fn analyze(&self, cfg: &crate::analyze::AnalyzeConfig) -> crate::analyze::Report {
+        crate::analyze::analyze_stream(self.cfg.node, &self.buffers, &self.kept, cfg)
     }
 
     pub fn idag(&self) -> &IdagGenerator {

@@ -85,6 +85,66 @@ impl Default for CostModel {
     }
 }
 
+impl CostModel {
+    /// Price one instruction: the model duration (s) its execution
+    /// occupies its resource, exclusive of dispatch overhead. This is the
+    /// pricing *library* shared by the DES below and the static analyzer
+    /// ([`crate::analyze`]) — both must agree on what an instruction
+    /// costs, or the analyzer's critical path would diverge from the
+    /// simulated makespan. Buffers missing from the pool (hand-built test
+    /// streams) price at one byte per element.
+    pub fn price(&self, kind: &InstructionKind, buffers: &BufferPool) -> f64 {
+        let elem = |b: crate::util::BufferId| {
+            buffers.try_get(b).map(|info| info.elem_size as u64).unwrap_or(1)
+        };
+        match kind {
+            InstructionKind::Alloc { size_bytes, .. } => {
+                self.alloc_base + *size_bytes as f64 * self.alloc_per_byte
+            }
+            InstructionKind::Free { .. } => self.free_base,
+            InstructionKind::Copy { copy_box, src_memory, dst_memory, buffer, .. } => {
+                let bytes = (copy_box.area() * elem(*buffer)) as f64;
+                let bw = match (src_memory.to_device(), dst_memory.to_device()) {
+                    (Some(_), Some(_)) => self.d2d_bw,
+                    (None, Some(_)) => self.h2d_bw,
+                    (Some(_), None) => self.d2h_bw,
+                    (None, None) => self.h2h_bw,
+                };
+                self.copy_latency + bytes / bw
+            }
+            InstructionKind::DeviceKernel { chunk, work_per_item, .. } => {
+                self.kernel_launch + chunk.area() as f64 * work_per_item / self.device_flops
+            }
+            InstructionKind::HostTask { chunk, work_per_item, .. } => {
+                chunk.area() as f64 * work_per_item / self.host_flops
+            }
+            InstructionKind::Send { send_box, buffer, src_memory, .. } => {
+                let bytes = (send_box.area() * elem(*buffer)) as f64;
+                // A direct-from-device send streams over the device↔host
+                // link into the NIC (GPUDirect-style): the staged d2h copy
+                // hop is gone, but the effective bandwidth is the min of
+                // the two links. Host-sourced sends see the NIC alone.
+                let bw = if src_memory.is_device() {
+                    self.net_bw.min(self.d2h_bw)
+                } else {
+                    self.net_bw
+                };
+                bytes / bw
+            }
+            InstructionKind::Receive { .. }
+            | InstructionKind::SplitReceive { .. }
+            | InstructionKind::AwaitReceive { .. } => 0.0,
+            // Costed as n−1 serialized ring rounds.
+            InstructionKind::Collective { region, buffer, slices, .. } => {
+                let bytes = (region.area() * elem(*buffer)) as f64;
+                let rounds = slices.len().saturating_sub(1) as f64;
+                rounds * self.net_latency + bytes / self.net_bw
+            }
+            InstructionKind::Horizon | InstructionKind::Epoch(_) => 0.0,
+        }
+    }
+}
+
 /// Executor model under simulation.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ExecModel {
@@ -527,62 +587,35 @@ where
         let issue = dispatch_start + overhead;
         *dfree = issue;
 
-        // Execution resource + duration.
-        let (res, dur, label): (Option<Res>, f64, &str) = match &instr.kind {
-            InstructionKind::Alloc { size_bytes, .. } => (
-                None,
-                cost.alloc_base + *size_bytes as f64 * cost.alloc_per_byte,
-                "alloc",
-            ),
-            InstructionKind::Free { .. } => (None, cost.free_base, "free"),
-            InstructionKind::Copy { copy_box, src_memory, dst_memory, buffer, .. } => {
-                let bytes =
-                    (copy_box.area() * buffers.get(*buffer).elem_size as u64) as f64;
-                let (r, bw) = match (src_memory.to_device(), dst_memory.to_device()) {
-                    (Some(_), Some(d)) => (Res::CopyIn(d), cost.d2d_bw),
-                    (None, Some(d)) => (Res::CopyIn(d), cost.h2d_bw),
-                    (Some(d), None) => (Res::CopyOut(d), cost.d2h_bw),
-                    (None, None) => (Res::Host((id as usize) % host_lanes), cost.h2h_bw),
+        // Duration from the shared pricing library; resource placement is
+        // DES-specific (engines, host lanes, the NIC).
+        let dur = cost.price(&instr.kind, &buffers);
+        let (res, label): (Option<Res>, &str) = match &instr.kind {
+            InstructionKind::Alloc { .. } => (None, "alloc"),
+            InstructionKind::Free { .. } => (None, "free"),
+            InstructionKind::Copy { src_memory, dst_memory, .. } => {
+                let r = match (src_memory.to_device(), dst_memory.to_device()) {
+                    (Some(_), Some(d)) | (None, Some(d)) => Res::CopyIn(d),
+                    (Some(d), None) => Res::CopyOut(d),
+                    (None, None) => Res::Host((id as usize) % host_lanes),
                 };
-                (Some(r), cost.copy_latency + bytes / bw, "copy")
+                (Some(r), "copy")
             }
-            InstructionKind::DeviceKernel { device, chunk, work_per_item, .. } => (
-                Some(Res::Kernel(*device)),
-                cost.kernel_launch + chunk.area() as f64 * work_per_item / cost.device_flops,
-                "kernel",
-            ),
-            InstructionKind::HostTask { chunk, work_per_item, .. } => (
-                Some(Res::Host((id as usize) % host_lanes)),
-                chunk.area() as f64 * work_per_item / cost.host_flops,
-                "host",
-            ),
-            InstructionKind::Send { send_box, buffer, src_memory, .. } => {
-                let bytes =
-                    (send_box.area() * buffers.get(*buffer).elem_size as u64) as f64;
-                // A direct-from-device send streams over the device↔host
-                // link into the NIC (GPUDirect-style): the staged d2h copy
-                // hop is gone, but the effective bandwidth is the min of
-                // the two links. Host-sourced sends see the NIC alone.
-                let bw = if src_memory.is_device() {
-                    cost.net_bw.min(cost.d2h_bw)
-                } else {
-                    cost.net_bw
-                };
-                (Some(Res::Nic), bytes / bw, "send")
+            InstructionKind::DeviceKernel { device, .. } => {
+                (Some(Res::Kernel(*device)), "kernel")
             }
+            InstructionKind::HostTask { .. } => {
+                (Some(Res::Host((id as usize) % host_lanes)), "host")
+            }
+            InstructionKind::Send { .. } => (Some(Res::Nic), "send"),
             InstructionKind::Receive { .. }
             | InstructionKind::SplitReceive { .. }
-            | InstructionKind::AwaitReceive { .. } => (None, 0.0, "receive"),
+            | InstructionKind::AwaitReceive { .. } => (None, "receive"),
             // Not emitted by the sim's generators (collectives are disabled
-            // above); costed as n−1 serialized ring rounds for completeness.
-            InstructionKind::Collective { region, buffer, slices, .. } => {
-                let bytes =
-                    (region.area() * buffers.get(*buffer).elem_size as u64) as f64;
-                let rounds = slices.len().saturating_sub(1) as f64;
-                (Some(Res::Nic), rounds * cost.net_latency + bytes / cost.net_bw, "collective")
-            }
-            InstructionKind::Horizon => (None, 0.0, "horizon"),
-            InstructionKind::Epoch(_) => (None, 0.0, "epoch"),
+            // above); priced for completeness.
+            InstructionKind::Collective { .. } => (Some(Res::Nic), "collective"),
+            InstructionKind::Horizon => (None, "horizon"),
+            InstructionKind::Epoch(_) => (None, "epoch"),
         };
 
         let (start, end) = match res {

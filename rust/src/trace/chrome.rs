@@ -95,7 +95,11 @@ fn args_json(kind: &EventKind) -> String {
         ),
         EventKind::LookaheadFlush => String::new(),
         EventKind::Compiled { instr, deps, .. } => {
-            format!("{},\"deps\":{}", instr_args(*instr), deps.len())
+            // Full edge list, not just a count: `scripts/check_trace.py`
+            // cross-checks executor completion order against these static
+            // dependencies.
+            let deps: Vec<String> = deps.iter().map(u64::to_string).collect();
+            format!("{},\"deps\":[{}]", instr_args(*instr), deps.join(","))
         }
         EventKind::Issue { instr } | EventKind::Retire { instr } => instr_args(*instr),
         EventKind::Exec { instr, .. } => instr_args(*instr),

@@ -1,0 +1,355 @@
+//! Golden workloads for `celerity analyze`: each seeded anti-pattern must
+//! fire its lint exactly once, and the same workload compiled with the
+//! corresponding scheduler feature enabled must come back clean.
+//!
+//! The compiled cases drive the real pipeline (TaskManager → scheduler →
+//! instruction stream) with the one knob under test flipped off, so the
+//! lints double as regression tests for the features themselves: a
+//! lowering change that silently reintroduces resize churn, host staging
+//! or p2p fan-out turns a green assertion red here before it ships as a
+//! slowdown. The hand-built cases pin detector behavior on streams the
+//! shipped scheduler (correctly) refuses to produce.
+
+use celerity::analyze::{analyze_stream, lints, AnalyzeConfig, Finding, LintLevel, Report};
+use celerity::buffer::BufferPool;
+use celerity::dag::DepKind;
+use celerity::grid::{GridBox, Range, Region};
+use celerity::instruction::{AccessBinding, Instruction, InstructionKind, InstructionRef};
+use celerity::scheduler::{Scheduler, SchedulerConfig};
+use celerity::task::{AccessMode, RangeMapper, TaskDecl, TaskManager};
+use celerity::util::{AllocationId, BufferId, DeviceId, InstructionId, MemoryId, NodeId, TaskId};
+use std::sync::Arc;
+
+type Streams = Vec<(NodeId, Vec<InstructionRef>)>;
+
+/// Compile a program on every node of `base.num_nodes` (verifier on, so a
+/// malformed golden workload fails loudly instead of skewing the lints).
+fn compile(base: SchedulerConfig, f: impl Fn(&mut TaskManager)) -> (Streams, BufferPool) {
+    let mut tm = TaskManager::new();
+    f(&mut tm);
+    tm.shutdown();
+    let tasks = tm.take_new_tasks();
+    let mut streams = Vec::new();
+    for node in 0..base.num_nodes {
+        let cfg = SchedulerConfig { node: NodeId(node), verify: true, ..base.clone() };
+        let mut sched = Scheduler::new(cfg, tm.buffers().clone());
+        let mut instructions = Vec::new();
+        for t in &tasks {
+            let (is, _) = sched.process(t);
+            instructions.extend(is);
+        }
+        let (is, _) = sched.flush_now();
+        instructions.extend(is);
+        assert!(sched.take_errors().is_empty(), "node {node}: compile errors");
+        let violations = sched.take_verify_errors();
+        assert!(violations.is_empty(), "node {node}: {violations:?}");
+        streams.push((NodeId(node), instructions));
+    }
+    (streams, tm.buffers().clone())
+}
+
+fn findings_of<'a>(r: &'a Report, lint: &str) -> Vec<&'a Finding> {
+    r.findings.iter().filter(|f| f.lint == lint).collect()
+}
+
+/// RSim-like growing access pattern: step t writes row t of a (T × W)
+/// buffer and reads rows [0, t) — the §4.3 resize-chain workload.
+fn growing_rows(tm: &mut TaskManager) {
+    let (steps, width) = (16u64, 64u64);
+    let b = tm.create_buffer::<f64>("R", Range::d2(steps, width), false).id();
+    for t in 0..steps {
+        let row = Region::from(GridBox::d2((t, 0), (t + 1, width)));
+        let prev = Region::from(GridBox::d2((0, 0), (t.max(1), width)));
+        let mut decl =
+            TaskDecl::device("radiosity", Range::d1(width)).write(b, RangeMapper::Fixed(row));
+        if t > 0 {
+            decl = decl.read(b, RangeMapper::Fixed(prev));
+        }
+        tm.submit(decl);
+    }
+}
+
+/// One full all-gather: every node produces its slice, every node reads
+/// the whole buffer.
+fn all_gather(tm: &mut TaskManager) {
+    let n = Range::d1(256);
+    let b = tm.create_buffer::<f64>("B", n, true).id();
+    tm.submit(TaskDecl::device("w", n).write(b, RangeMapper::OneToOne));
+    tm.submit(TaskDecl::device("r", n).read(b, RangeMapper::All));
+}
+
+#[test]
+fn alloc_churn_fires_without_lookahead_and_not_with() {
+    let base = SchedulerConfig { num_devices: 1, lookahead: false, ..Default::default() };
+    let (streams, buffers) = compile(base, growing_rows);
+    let r = analyze_stream(streams[0].0, &buffers, &streams[0].1, &AnalyzeConfig::default());
+    let churn = findings_of(&r, lints::ALLOC_CHURN);
+    assert_eq!(churn.len(), 1, "exactly one aggregated finding: {:?}", r.findings);
+    assert!(churn[0].instr.is_some(), "must anchor the first regrown allocation");
+    assert!(churn[0].message.contains("lookahead"), "{}", churn[0].message);
+
+    let base = SchedulerConfig { num_devices: 1, lookahead: true, ..Default::default() };
+    let (streams, buffers) = compile(base, growing_rows);
+    let r = analyze_stream(streams[0].0, &buffers, &streams[0].1, &AnalyzeConfig::default());
+    assert_eq!(findings_of(&r, lints::ALLOC_CHURN).len(), 0, "{:?}", r.findings);
+}
+
+#[test]
+fn staged_copy_fires_without_direct_comm_and_not_with() {
+    // collectives off so the exchange lowers to p2p send/receive — the
+    // shape §3.4 staging elision applies to. With 2 nodes each node sends
+    // to exactly one peer, so missed-collective stays out of the picture.
+    let base = SchedulerConfig {
+        num_nodes: 2,
+        num_devices: 1,
+        collectives: false,
+        direct_comm: false,
+        ..Default::default()
+    };
+    let (streams, buffers) = compile(base, all_gather);
+    for (node, instructions) in &streams {
+        let r = analyze_stream(*node, &buffers, instructions, &AnalyzeConfig::default());
+        let staged = findings_of(&r, lints::STAGED_COPY);
+        assert_eq!(staged.len(), 1, "node {node}: one per-buffer finding: {:?}", r.findings);
+        assert!(staged[0].message.contains("direct"), "{}", staged[0].message);
+    }
+
+    let base = SchedulerConfig {
+        num_nodes: 2,
+        num_devices: 1,
+        collectives: false,
+        direct_comm: true,
+        ..Default::default()
+    };
+    let (streams, buffers) = compile(base, all_gather);
+    for (node, instructions) in &streams {
+        let r = analyze_stream(*node, &buffers, instructions, &AnalyzeConfig::default());
+        assert_eq!(findings_of(&r, lints::STAGED_COPY).len(), 0, "node {node}: {:?}", r.findings);
+    }
+}
+
+#[test]
+fn missed_collective_fires_without_collectives_and_not_with() {
+    let base = SchedulerConfig {
+        num_nodes: 4,
+        num_devices: 1,
+        collectives: false,
+        direct_comm: true,
+        ..Default::default()
+    };
+    let (streams, buffers) = compile(base, all_gather);
+    for (node, instructions) in &streams {
+        let r = analyze_stream(*node, &buffers, instructions, &AnalyzeConfig::default());
+        let missed = findings_of(&r, lints::MISSED_COLLECTIVE);
+        assert_eq!(missed.len(), 1, "node {node}: one per-buffer finding: {:?}", r.findings);
+        assert!(missed[0].message.contains("collective"), "{}", missed[0].message);
+    }
+
+    let base = SchedulerConfig {
+        num_nodes: 4,
+        num_devices: 1,
+        collectives: true,
+        direct_comm: true,
+        ..Default::default()
+    };
+    let (streams, buffers) = compile(base, all_gather);
+    for (node, instructions) in &streams {
+        let r = analyze_stream(*node, &buffers, instructions, &AnalyzeConfig::default());
+        assert_eq!(
+            findings_of(&r, lints::MISSED_COLLECTIVE).len(),
+            0,
+            "node {node}: {:?}",
+            r.findings
+        );
+    }
+}
+
+// ── Hand-built streams: patterns the shipped scheduler never emits ──────
+
+fn instr(id: u64, kind: InstructionKind, deps: &[u64]) -> InstructionRef {
+    Arc::new(Instruction {
+        id: InstructionId(id),
+        kind,
+        deps: deps.iter().map(|&d| (InstructionId(d), DepKind::Dataflow)).collect(),
+        task: None,
+    })
+}
+
+fn alloc(id: u64, a: u64, buffer: Option<BufferId>, covers: GridBox) -> InstructionRef {
+    instr(
+        id,
+        InstructionKind::Alloc {
+            alloc: AllocationId(a),
+            memory: MemoryId(2),
+            buffer,
+            covers,
+            size_bytes: covers.area() * 8,
+        },
+        &[],
+    )
+}
+
+fn kernel(id: u64, a: u64, mode: AccessMode, region: GridBox, deps: &[u64]) -> InstructionRef {
+    instr(
+        id,
+        InstructionKind::DeviceKernel {
+            device: DeviceId(0),
+            chunk: region,
+            bindings: vec![AccessBinding {
+                buffer: BufferId(0),
+                mode,
+                region: Region::from(region),
+                alloc: AllocationId(a),
+                alloc_box: region,
+                dtype: celerity::dtype::DType::F64,
+                lanes: 1,
+            }],
+            work_per_item: 1.0,
+            kernel: None,
+        },
+        deps,
+    )
+}
+
+#[test]
+fn false_serialization_fires_exactly_once_on_seeded_edge() {
+    let bx = GridBox::d1(0, 64);
+    // K4 writes allocation 8 but carries a gratuitous edge to K3 (which
+    // only ever touches allocation 7) — pure serialization on the
+    // critical path.
+    let stream = vec![
+        alloc(1, 7, None, bx),
+        alloc(2, 8, None, bx),
+        kernel(3, 7, AccessMode::DiscardWrite, bx, &[1]),
+        kernel(4, 8, AccessMode::DiscardWrite, bx, &[2, 3]),
+    ];
+    let r = analyze_stream(NodeId(0), &BufferPool::new(), &stream, &AnalyzeConfig::default());
+    let fs = findings_of(&r, lints::FALSE_SERIALIZATION);
+    assert_eq!(fs.len(), 1, "{:?}", r.findings);
+    assert_eq!(fs[0].instr, Some(4));
+}
+
+#[test]
+fn oversized_allocation_fires_exactly_once_on_sparse_use() {
+    let big = GridBox::d1(0, 2048);
+    let stream = vec![
+        alloc(1, 7, Some(BufferId(0)), big),
+        kernel(2, 7, AccessMode::DiscardWrite, GridBox::d1(0, 64), &[1]),
+    ];
+    let r = analyze_stream(NodeId(0), &BufferPool::new(), &stream, &AnalyzeConfig::default());
+    let over = findings_of(&r, lints::OVERSIZED_ALLOCATION);
+    assert_eq!(over.len(), 1, "{:?}", r.findings);
+    assert_eq!(over[0].instr, Some(1));
+}
+
+#[test]
+fn receive_staged_through_host_fires_on_receiver_side() {
+    // Hand-built receiver stream: network payload lands in pinned host
+    // memory, then hops to the device — the receive-side half of the
+    // staged-copy detector (the compiled test above covers the send side
+    // through the real lowering).
+    let bx = GridBox::d1(0, 64);
+    let stream = vec![
+        alloc(1, 7, None, bx),
+        instr(
+            2,
+            InstructionKind::Alloc {
+                alloc: AllocationId(8),
+                memory: MemoryId::HOST,
+                buffer: None,
+                covers: bx,
+                size_bytes: bx.area() * 8,
+            },
+            &[],
+        ),
+        instr(
+            3,
+            InstructionKind::Receive {
+                buffer: BufferId(0),
+                region: Region::from(bx),
+                dst_memory: MemoryId::HOST,
+                dst_alloc: AllocationId(8),
+                dst_box: bx,
+                transfer: TaskId(0),
+            },
+            &[2],
+        ),
+        instr(
+            4,
+            InstructionKind::Copy {
+                buffer: BufferId(0),
+                copy_box: bx,
+                src_memory: MemoryId::HOST,
+                dst_memory: MemoryId(2),
+                src_alloc: AllocationId(8),
+                src_box: bx,
+                dst_alloc: AllocationId(7),
+                dst_box: bx,
+            },
+            &[3, 1],
+        ),
+    ];
+    let r = analyze_stream(NodeId(0), &BufferPool::new(), &stream, &AnalyzeConfig::default());
+    let staged = findings_of(&r, lints::STAGED_COPY);
+    assert_eq!(staged.len(), 1, "{:?}", r.findings);
+    assert_eq!(staged[0].instr, Some(4));
+}
+
+// ── Shipped shapes stay deny-clean (what CI's analyze-smoke enforces) ───
+
+#[test]
+fn shipped_workload_shapes_are_deny_clean_under_default_knobs() {
+    let nbody = |tm: &mut TaskManager| {
+        let r = Range::d1(256);
+        let p = tm.create_buffer::<[f64; 3]>("P", r, true).id();
+        let v = tm.create_buffer::<[f64; 3]>("V", r, true).id();
+        for _ in 0..3 {
+            tm.submit(
+                TaskDecl::device("timestep", r)
+                    .read(p, RangeMapper::All)
+                    .read_write(v, RangeMapper::OneToOne),
+            );
+            tm.submit(
+                TaskDecl::device("update", r)
+                    .read(v, RangeMapper::OneToOne)
+                    .read_write(p, RangeMapper::OneToOne),
+            );
+        }
+    };
+    let wavesim = |tm: &mut TaskManager| {
+        let n = Range::d2(32, 32);
+        let a = tm.create_buffer::<f64>("A", n, true).id();
+        let b = tm.create_buffer::<f64>("B", n, true).id();
+        for _ in 0..4 {
+            tm.submit(
+                TaskDecl::device("s", n)
+                    .read(a, RangeMapper::Neighborhood(Range::d2(1, 1)))
+                    .write(b, RangeMapper::OneToOne),
+            );
+            tm.submit(
+                TaskDecl::device("s", n)
+                    .read(b, RangeMapper::Neighborhood(Range::d2(1, 1)))
+                    .write(a, RangeMapper::OneToOne),
+            );
+        }
+    };
+    let apps: [(&str, &dyn Fn(&mut TaskManager)); 2] = [("nbody", &nbody), ("wavesim", &wavesim)];
+    for (name, app) in apps {
+        for nodes in [1u64, 2] {
+            let base = SchedulerConfig { num_nodes: nodes, num_devices: 2, ..Default::default() };
+            let (streams, buffers) = compile(base, app);
+            let mut acfg = AnalyzeConfig::default();
+            acfg.lints.set("all", LintLevel::Deny).expect("all is valid");
+            for (node, instructions) in &streams {
+                let r = analyze_stream(*node, &buffers, instructions, &acfg);
+                assert_eq!(
+                    r.deny_count(),
+                    0,
+                    "{name} on {nodes} node(s), node {node}: {:?}",
+                    r.findings
+                );
+                assert!(r.critical_path > 0.0, "{name}: empty critical path");
+            }
+        }
+    }
+}

@@ -12,10 +12,11 @@
 //! send/receive/collective matching.
 
 use celerity::grid::{GridBox, Point, Range, Region};
+use celerity::instruction::InstructionKind;
 use celerity::scheduler::{Scheduler, SchedulerConfig};
 use celerity::task::{RangeMapper, TaskDecl, TaskManager};
 use celerity::util::{JobId, NodeId, XorShift64};
-use celerity::verify::{verify_cluster, verify_stream, NodeStream};
+use celerity::verify::{verify_cluster, verify_stream, NodeStream, Verifier};
 
 /// Build a random program against one buffer. The only constraint imposed
 /// on the randomness is *user-level* correctness: the buffer is either
@@ -96,6 +97,37 @@ fn compile_and_verify(ctx: &str, tm: &mut TaskManager, base: SchedulerConfig) {
         let post =
             verify_stream(JobId(0), NodeId(node), tm.buffers().clone(), &instructions, &pilots);
         assert!(post.is_empty(), "{ctx} node {node} (post-hoc): {post:?}");
+        // Incremental re-verification (tracking state compacted at verified
+        // boundaries) must reach exactly the same verdict as a from-scratch
+        // pass over the identical stream — here: none at all.
+        let mut inc = Verifier::incremental(JobId(0), NodeId(node), tm.buffers().clone());
+        inc.absorb_batch(&instructions, &pilots);
+        let inc_v: Vec<String> =
+            inc.take_violations().iter().map(|v| v.to_string()).collect();
+        let mut full = Verifier::new(JobId(0), NodeId(node), tm.buffers().clone());
+        full.absorb_batch(&instructions, &pilots);
+        let full_v: Vec<String> =
+            full.take_violations().iter().map(|v| v.to_string()).collect();
+        assert_eq!(
+            inc_v, full_v,
+            "{ctx} node {node}: incremental and from-scratch verdicts must match"
+        );
+        assert!(inc_v.is_empty(), "{ctx} node {node} (incremental): {inc_v:?}");
+        // Streams with a boundary past the start must actually have
+        // compacted — otherwise the incremental mode silently degraded to
+        // the from-scratch cost profile.
+        let boundary_past_start = instructions
+            .iter()
+            .enumerate()
+            .any(|(i, ins)| {
+                i > 0 && matches!(ins.kind, InstructionKind::Horizon | InstructionKind::Epoch(_))
+            });
+        if boundary_past_start {
+            assert!(
+                inc.compacted_below() > 0,
+                "{ctx} node {node}: incremental verifier never compacted"
+            );
+        }
         streams.push(NodeStream { node: NodeId(node), instructions, pilots });
     }
     let cluster = verify_cluster(&streams);

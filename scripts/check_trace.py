@@ -15,7 +15,11 @@ Checks per document:
   - every node (pid) has a process_name and every track a thread_name,
   - every event has ph/pid/tid; ts >= 0 and dur >= 0 where present,
   - non-metadata events are monotonic in file order (the exporter sorts),
-  - per pid, every retired instruction id was previously issued.
+  - per pid, every retired instruction id was previously issued,
+  - per pid, "compiled" events carry their dependency edges as a JSON list
+    and the executor's completion order respects them: an instruction must
+    never retire before a static dependency that also retires in the trace
+    (a completion-order inversion means the executor violated the IDAG).
 
 Fault-injection runs additionally emit "fault" (args: from/what/fatal),
 "reconnect" and "retransmit" (args: peer) instants on the comm-in track;
@@ -41,6 +45,8 @@ def check_doc(doc, path):
     seen_tids = set()
     issued = {}  # pid -> set of instruction ids
     retired = {}
+    compiled = {}  # pid -> {instr: [dep ids]}
+    retire_pos = {}  # pid -> {instr: file-order index of its retire event}
     last_ts = None
     for i, ev in enumerate(events):
         where = f"{path}: event {i}"
@@ -81,6 +87,13 @@ def check_doc(doc, path):
             issued.setdefault(pid, set()).add(instr)
         if name == "retire" and instr is not None:
             retired.setdefault(pid, set()).add(instr)
+            retire_pos.setdefault(pid, {}).setdefault(instr, i)
+        if name == "compiled" and instr is not None:
+            deps = (ev.get("args") or {}).get("deps")
+            if not isinstance(deps, list) or not all(isinstance(d, int) for d in deps):
+                errors.append(f"{where}: compiled event without a deps list: {ev}")
+            else:
+                compiled.setdefault(pid, {})[instr] = deps
 
     for pid in sorted(seen_pids):
         if pid not in named_pids:
@@ -95,6 +108,22 @@ def check_doc(doc, path):
                 f"{path}: pid {pid} retired {len(ghosts)} instruction(s) never issued, "
                 f"e.g. {sorted(ghosts)[:5]}"
             )
+    # Completion order must respect the static dependency edges: for every
+    # compiled edge dep -> instr where both retire in the trace, the dep's
+    # retire must come first. (Edges to instructions that never retire in
+    # the window — e.g. pruned before tracing started — are skipped.)
+    for pid, instrs in sorted(compiled.items()):
+        pos = retire_pos.get(pid, {})
+        for instr, deps in sorted(instrs.items()):
+            if instr not in pos:
+                continue
+            for dep in deps:
+                if dep in pos and pos[dep] > pos[instr]:
+                    errors.append(
+                        f"{path}: pid {pid}: completion order inverts a static "
+                        f"dependency: instruction {instr} retired before its "
+                        f"dependency {dep}"
+                    )
     return errors
 
 
@@ -123,6 +152,10 @@ def self_test():
         {"ph": "M", "name": "thread_name", "pid": 0, "tid": 1, "args": {"name": "executor"}},
     ]
     good = meta + [
+        {"ph": "i", "s": "t", "name": "compiled", "pid": 0, "tid": 1, "ts": 0.5,
+         "args": {"instr": 7, "deps": []}},
+        {"ph": "i", "s": "t", "name": "compiled", "pid": 0, "tid": 1, "ts": 0.6,
+         "args": {"instr": 8, "deps": [7]}},
         {"ph": "i", "s": "t", "name": "issue", "pid": 0, "tid": 1, "ts": 1.0,
          "args": {"instr": 7}},
         {"ph": "X", "name": "device kernel", "pid": 0, "tid": 1, "ts": 2.0, "dur": 3.5,
@@ -137,6 +170,28 @@ def self_test():
          "args": {"peer": 1}},
         {"ph": "i", "s": "t", "name": "retransmit", "pid": 0, "tid": 1, "ts": 6.7,
          "args": {"peer": 1}},
+        # Instruction 8 depends on 7 and retires after it: the completion
+        # order respects the compiled edge.
+        {"ph": "i", "s": "t", "name": "issue", "pid": 0, "tid": 1, "ts": 6.8,
+         "args": {"instr": 8}},
+        {"ph": "i", "s": "t", "name": "retire", "pid": 0, "tid": 1, "ts": 6.9,
+         "args": {"instr": 8}},
+    ]
+    # Same events, but instruction 8 (which depends on 7) retires first:
+    # a completion-order inversion the executor must never produce.
+    inverted = meta + [
+        {"ph": "i", "s": "t", "name": "compiled", "pid": 0, "tid": 1, "ts": 0.5,
+         "args": {"instr": 7, "deps": []}},
+        {"ph": "i", "s": "t", "name": "compiled", "pid": 0, "tid": 1, "ts": 0.6,
+         "args": {"instr": 8, "deps": [7]}},
+        {"ph": "i", "s": "t", "name": "issue", "pid": 0, "tid": 1, "ts": 1.0,
+         "args": {"instr": 7}},
+        {"ph": "i", "s": "t", "name": "issue", "pid": 0, "tid": 1, "ts": 1.1,
+         "args": {"instr": 8}},
+        {"ph": "i", "s": "t", "name": "retire", "pid": 0, "tid": 1, "ts": 2.0,
+         "args": {"instr": 8}},
+        {"ph": "i", "s": "t", "name": "retire", "pid": 0, "tid": 1, "ts": 3.0,
+         "args": {"instr": 7}},
     ]
     cases = [
         ("valid document accepted", {"traceEvents": good}, 0),
@@ -153,6 +208,10 @@ def self_test():
         ("retire without issue rejected",
          {"traceEvents": meta + [{"ph": "i", "s": "t", "name": "retire", "pid": 0, "tid": 1,
                                   "ts": 1.0, "args": {"instr": 3}}]}, 1),
+        ("completion-order inversion rejected", {"traceEvents": inverted}, 1),
+        ("compiled without a deps list rejected",
+         {"traceEvents": meta + [{"ph": "i", "s": "t", "name": "compiled", "pid": 0, "tid": 1,
+                                  "ts": 1.0, "args": {"instr": 3, "deps": 2}}]}, 1),
     ]
     ok = True
     for name, doc, want in cases:

@@ -56,7 +56,7 @@ ALLOWLIST = {
     "executor/ooo.rs": (1, "engine invariant: retiring instruction was dispatched"),
     "grid/region_map.rs": (7, "iterator invariants proven by adjacent len checks (hot path)"),
     "instruction/generator.rs": (12, "IDAG invariants: buffer states and backings tracked since creation"),
-    "launch/mod.rs": (6, "launcher process: spawn/lock failures abort the whole launch by design"),
+    "launch/mod.rs": (9, "launcher process: spawn/lock failures abort the whole launch by design"),
     "main.rs": (9, "CLI binary: argument/setup failures abort before any cluster state exists"),
     "runtime/mod.rs": (2, "pjrt-gated; 4-byte chunks are exact by construction"),
     "scheduler/thread.rs": (1, "scheduler thread spawn at startup"),
